@@ -1,0 +1,87 @@
+//! End-to-end driver: the paper's flagship experiment.
+//!
+//! Solves the pancake sorting problem for n = 9 (362,880 states) by
+//! disk-based breadth-first search, exercising every layer of the stack:
+//!
+//! - L3 Rust coordinator: RoomyList frontier, hash-sharded shuffle,
+//!   external-sort dedup (`removeDupes`), sorted-merge `removeAll`;
+//! - L1/L2 via PJRT: the fused `bfs_expand_n9` artifact (Pallas packed
+//!   prefix-reversal kernel + fingerprint/bucket routing) when
+//!   `artifacts/` is present, bit-exact Rust fallback otherwise;
+//! - validation: level counts against an in-RAM reference BFS and the
+//!   known pancake number f(9) = 10.
+//!
+//! Reported: per-level counts, wall time, aggregate disk traffic and
+//! throughput, per-phase breakdown. EXPERIMENTS.md records a run.
+//!
+//! Run: `cargo run --release --example pancake_bfs [n] [workers]`
+
+use std::time::Instant;
+
+use roomy::accel::Accel;
+use roomy::apps::pancake::{self, Structure};
+use roomy::metrics::{fmt_bytes, fmt_rate};
+use roomy::{Roomy, RoomyConfig};
+
+fn main() -> roomy::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(9);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    assert!((2..=11).contains(&n), "n must be in 2..=11");
+
+    let mut cfg = RoomyConfig::default();
+    cfg.workers = workers;
+    cfg.buckets_per_worker = 4;
+    cfg.root = std::env::temp_dir().join(format!("roomy-pancake-{}", std::process::id()));
+    let r = Roomy::open(cfg)?;
+    let accel = Accel::from_roomy(&r);
+
+    println!("== Pancake sorting by disk-based BFS (paper §3) ==");
+    println!(
+        "n={n} ({} states) | {} simulated nodes, {} buckets | expansion: {}",
+        pancake::factorial(n),
+        workers,
+        r.cluster().nbuckets(),
+        if accel.is_xla() { "XLA AOT kernel (Pallas bfs_expand)" } else { "Rust fallback" },
+    );
+
+    // --- the disk-based run -----------------------------------------
+    let t0 = Instant::now();
+    let stats = pancake::roomy_bfs(&r, n, Structure::List, &accel)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- RAM reference baseline --------------------------------------
+    let t1 = Instant::now();
+    let reference = pancake::reference_bfs(n);
+    let ram_wall = t1.elapsed().as_secs_f64();
+
+    println!("\nlevel  roomy      reference");
+    let mut ok = true;
+    for i in 0..stats.levels.len().max(reference.len()) {
+        let a = stats.levels.get(i).copied().unwrap_or(0);
+        let b = reference.get(i).copied().unwrap_or(0);
+        ok &= a == b;
+        println!("{i:>5}  {a:<10} {b}");
+    }
+    println!("\ntotal states: {} (n! = {})", stats.total, pancake::factorial(n));
+    println!("pancake number f({n}) = {}", stats.depth());
+    if let Some(known) = pancake::pancake_number(n) {
+        ok &= stats.depth() == known && stats.total == pancake::factorial(n);
+        println!("known f({n}) = {known}");
+    }
+    println!("validation: {}", if ok { "OK — exact match" } else { "MISMATCH" });
+
+    let io = r.io_snapshot();
+    println!(
+        "\nroomy wall {wall:.2}s (RAM reference {ram_wall:.2}s) | \
+         disk read {} written {} | aggregate {}",
+        fmt_bytes(io.bytes_read),
+        fmt_bytes(io.bytes_written),
+        fmt_rate(io.bytes_total(), wall),
+    );
+    println!("\nphase breakdown:\n{}", r.cluster().phases().report());
+    if !ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+"""AOT exporter: lower every L2 entry point to HLO text for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs, under --outdir (default ../artifacts):
+  <name>.hlo.txt     one per entry point
+  manifest.tsv       name, file, arity and shape summary (runtime contract)
+
+Lowering is deterministic and pure; ``make artifacts`` skips this entirely
+when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_sig(args) -> str:
+    return ";".join(f"{a.dtype}[{','.join(map(str, a.shape))}]" for a in args)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    eps = model.entry_points()
+    if args.only:
+        want = set(args.only.split(","))
+        eps = {k: v for k, v in eps.items() if k in want}
+        missing = want - set(eps)
+        if missing:
+            print(f"unknown entry points: {sorted(missing)}", file=sys.stderr)
+            return 1
+
+    manifest_rows = []
+    for name, (fn, ex_args) in sorted(eps.items()):
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        manifest_rows.append((name, fname, shape_sig(ex_args)))
+        print(f"  lowered {name:24s} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.outdir, "manifest.tsv"), "w") as f:
+        for name, fname, sig in manifest_rows:
+            f.write(f"{name}\t{fname}\t{sig}\n")
+    print(f"wrote {len(manifest_rows)} artifacts to {args.outdir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

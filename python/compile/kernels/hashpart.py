@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: batched 64-bit fingerprint + fast-range bucket id.
+
+This is the hot inner loop of Roomy's delayed-operation shuffle: every
+delayed op / list element is fingerprinted and routed to the bucket that
+owns it.  The kernel is the bit-exact twin of ``rust/src/hashfn.rs`` and of
+``ref.fp_words`` — pinned by shared test vectors.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the batch is tiled along the
+grid so each block's (BLOCK, K) u64 slab fits comfortably in VMEM; the body
+is pure VPU element-wise integer work (xor/mul/shift), no MXU. interpret=True
+is mandatory in this image — real-TPU lowering emits a Mosaic custom-call
+that the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain python ints (NOT jnp scalars): Pallas kernels may not capture traced
+# constants from the enclosing scope; literals are inlined at trace time.
+GOLDEN = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+
+# Block of the batch dimension held in VMEM at once. 512 x K x 8B plus the
+# two u64 outputs is < 16 KiB for K <= 2 — far under the ~16 MiB VMEM
+# budget; kept small so many programs pipeline HBM<->VMEM transfers.
+BLOCK = 512
+
+
+def fp_words_jnp(words: jnp.ndarray) -> jnp.ndarray:
+    """splitmix-style avalanche over the trailing K axis. uint64[..., K] -> uint64[...]."""
+    k = words.shape[-1]
+    h = jnp.full(words.shape[:-1], jnp.uint64(GOLDEN ^ k), dtype=jnp.uint64)
+    for i in range(k):  # K is static: unrolled
+        h = (h ^ words[..., i]) * jnp.uint64(MIX1)
+        h = h ^ (h >> jnp.uint64(29))
+    h = h ^ (h >> jnp.uint64(30))
+    h = h * jnp.uint64(MIX1)
+    h = h ^ (h >> jnp.uint64(27))
+    h = h * jnp.uint64(MIX2)
+    h = h ^ (h >> jnp.uint64(31))
+    return h
+
+
+def bucket_of_jnp(fp: jnp.ndarray, nbuckets: jnp.ndarray) -> jnp.ndarray:
+    """Fast-range bucket id: ((fp >> 32) * nb) >> 32 (nb < 2^32)."""
+    return ((fp >> jnp.uint64(32)) * nbuckets.astype(jnp.uint64)) >> jnp.uint64(32)
+
+
+def _hashpart_kernel(nb_ref, words_ref, fp_ref, bucket_ref):
+    """One grid step: fingerprint + bucket a (BLOCK, K) slab of elements."""
+    fp = fp_words_jnp(words_ref[...])
+    fp_ref[...] = fp
+    bucket_ref[...] = bucket_of_jnp(fp, nb_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "k"))
+def hash_partition(words: jnp.ndarray, nbuckets: jnp.ndarray, *, batch: int, k: int):
+    """(fingerprint u64[B], bucket u64[B]) for words u64[B, K].
+
+    ``batch`` must be a multiple of BLOCK (the AOT entry points use 4096).
+    ``nbuckets`` is a u64[1] runtime scalar so one artifact serves any
+    bucket count.
+    """
+    assert batch % BLOCK == 0, f"batch {batch} must be a multiple of {BLOCK}"
+    grid = (batch // BLOCK,)
+    return pl.pallas_call(
+        _hashpart_kernel,
+        grid=grid,
+        in_specs=[
+            # nbuckets scalar: replicated to every program.
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.uint64),
+            jax.ShapeDtypeStruct((batch,), jnp.uint64),
+        ],
+        interpret=True,
+    )(nbuckets, words)

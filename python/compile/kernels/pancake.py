@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: batched pancake prefix-reversal neighbor expansion.
+
+The hot spot of the paper's flagship application (§3, breadth-first search
+over the pancake-sorting graph): for every permutation in the frontier,
+emit all n-1 prefix reversals.  Layer 2 (model.py) fuses this with the
+fingerprint/bucket kernel so one AOT artifact turns a frontier batch into
+routed neighbor records.
+
+TPU mapping: the reversal is a static gather — for block shape (BLOCK, N)
+the kernel materializes the (N-1, N) source-index matrix as a constant and
+does a vectorized take along the lane axis.  No MXU; VMEM per step is
+BLOCK * N * 4B * N ≈ tiny for n <= 16.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def reversal_index_matrix(n: int) -> np.ndarray:
+    """M[j, i]: source index for neighbor j (flip of first j+2), position i."""
+    m = np.empty((n - 1, n), dtype=np.int32)
+    for j in range(n - 1):
+        k = j + 2
+        for i in range(n):
+            m[j, i] = k - 1 - i if i < k else i
+    return m
+
+
+def _expand_kernel(m_ref, perms_ref, nbrs_ref):
+    """One grid step: all prefix reversals of a (BLOCK, N) slab.
+
+    The (N-1, N) source-index matrix is passed as a (replicated) input:
+    Pallas kernels may not capture non-scalar constants from the trace.
+    """
+    p = perms_ref[...]  # (BLOCK, N)
+    # (BLOCK, N-1, N): gather source positions per neighbor row.
+    nbrs_ref[...] = jnp.take(p, m_ref[...], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "n"))
+def pancake_expand(perms: jnp.ndarray, *, batch: int, n: int):
+    """All prefix reversals: int32[batch, n] -> int32[batch, n-1, n]."""
+    assert batch % BLOCK == 0, f"batch {batch} must be a multiple of {BLOCK}"
+    grid = (batch // BLOCK,)
+    m = jnp.asarray(reversal_index_matrix(n))
+    return pl.pallas_call(
+        _expand_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n - 1, n), lambda i: (0, 0)),  # index matrix, replicated
+            pl.BlockSpec((BLOCK, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, n - 1, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n - 1, n), jnp.int32),
+        interpret=True,
+    )(m, perms)
+
+
+def pack_perm_u64_jnp(perms: jnp.ndarray) -> jnp.ndarray:
+    """Nibble-pack permutations of 0..n-1 (n <= 16): int32[..., N] -> uint64[...]."""
+    n = perms.shape[-1]
+    assert n <= 16
+    out = jnp.zeros(perms.shape[:-1], dtype=jnp.uint64)
+    for i in range(n):
+        out = out | (perms[..., i].astype(jnp.uint64) << jnp.uint64(4 * i))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Packed-code expansion: the AOT production path.
+#
+# The digit-matrix kernel above uses a gather (`jnp.take`), which the Rust
+# runtime's xla_extension 0.5.1 misexecutes after the HLO-text round-trip
+# (out-of-bounds fill). The packed variant below uses only u64 shift/mask
+# arithmetic — the same op family as the hashpart kernel, which round-trips
+# correctly — and matches the coordinator's wire format (frontiers are
+# nibble-packed u64 codes on the Rust side anyway).
+# ---------------------------------------------------------------------------
+
+
+def flip_packed_jnp(code: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Reverse the first k nibbles of packed codes (k static, unrolled).
+
+    Bit-exact twin of rust `apps::pancake::flip_packed`.
+    """
+    bits = 4 * k
+    mask = (1 << bits) - 1
+    inv_mask = ~mask & 0xFFFFFFFFFFFFFFFF
+    head = code & jnp.uint64(mask)
+    rev = jnp.zeros_like(code)
+    for _ in range(k):
+        rev = (rev << jnp.uint64(4)) | (head & jnp.uint64(0xF))
+        head = head >> jnp.uint64(4)
+    return (code & jnp.uint64(inv_mask)) | rev
+
+
+def _expand_packed_kernel(n: int, codes_ref, nbrs_ref):
+    """One grid step: all prefix reversals of a (BLOCK,) slab of packed codes."""
+    c = codes_ref[...]
+    for j, k in enumerate(range(2, n + 1)):
+        nbrs_ref[:, j] = flip_packed_jnp(c, k)
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "n"))
+def pancake_expand_packed(codes: jnp.ndarray, *, batch: int, n: int):
+    """All prefix reversals on packed codes: u64[batch] -> u64[batch, n-1]."""
+    assert batch % BLOCK == 0, f"batch {batch} must be a multiple of {BLOCK}"
+    grid = (batch // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_expand_packed_kernel, n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK, n - 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n - 1), jnp.uint64),
+        interpret=True,
+    )(codes)

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: batched numeric reduction (sum of squares, min, max).
+
+The paper's reduce example (§3) computes a sum of squares over a RoomyList;
+Layer 3 streams each bucket through this kernel and merges the per-bucket
+partials with the user's ``mergeResults`` — exactly the two-function reduce
+contract from the paper (assoc + comm).
+
+TPU mapping: sequential grid with SMEM accumulators carried across steps
+(same pattern as scan.py); each step reduces one VMEM-resident BLOCK on
+the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 1024
+
+# Plain python ints: Pallas kernels may not capture traced constants.
+I64_MAX = 0x7FFF_FFFF_FFFF_FFFF
+I64_MIN = -0x8000_0000_0000_0000
+
+
+def _reduce_kernel(x_ref, sumsq_ref, min_ref, max_ref, acc_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[0] = jnp.int64(0)
+        acc_ref[1] = jnp.int64(I64_MAX)
+        acc_ref[2] = jnp.int64(I64_MIN)
+
+    x = x_ref[...]
+    # Wrapping sum-of-squares: do the multiply in uint64 and bit-cast back,
+    # matching Rust's wrapping_mul/wrapping_add semantics.
+    xu = x.astype(jnp.uint64)
+    sq = (xu * xu).sum(dtype=jnp.uint64).astype(jnp.int64)
+    acc_ref[0] = (acc_ref[0].astype(jnp.uint64) + sq.astype(jnp.uint64)).astype(
+        jnp.int64
+    )
+    acc_ref[1] = jnp.minimum(acc_ref[1], x.min())
+    acc_ref[2] = jnp.maximum(acc_ref[2], x.max())
+    sumsq_ref[0] = acc_ref[0]
+    min_ref[0] = acc_ref[1]
+    max_ref[0] = acc_ref[2]
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def reduce_i64(x: jnp.ndarray, *, batch: int):
+    """(sumsq int64[1], min int64[1], max int64[1]) over int64[batch]."""
+    assert batch % BLOCK == 0, f"batch {batch} must be a multiple of {BLOCK}"
+    grid = (batch // BLOCK,)
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.int64),
+            jax.ShapeDtypeStruct((1,), jnp.int64),
+            jax.ShapeDtypeStruct((1,), jnp.int64),
+        ],
+        scratch_shapes=[pltpu.SMEM((3,), jnp.int64)],
+        interpret=True,
+    )(x)

@@ -1,0 +1,165 @@
+"""Pure-numpy reference oracles for the Roomy L1 kernels.
+
+These are the CORE correctness signal for the build-time layer: every
+Pallas kernel in this package is checked against the function of the same
+name here (pytest + hypothesis), and the fingerprint/bucket functions are
+additionally pinned to hard test vectors that the Rust twin
+(``rust/src/hashfn.rs``) asserts too — the partitioner must be bit-exact
+across layers or Roomy's bucketing breaks.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# 64-bit fingerprint (splitmix-style avalanche), u64 wrapping arithmetic.
+# Twin: rust/src/hashfn.rs (fp_words / bucket_of). Keep in lockstep.
+# ---------------------------------------------------------------------------
+
+GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def _u64(x) -> np.ndarray:
+    return np.asarray(x, dtype=np.uint64)
+
+
+def fp_words(words: np.ndarray) -> np.ndarray:
+    """Fingerprint of an array of K-word elements.
+
+    words: uint64[..., K] -> uint64[...]
+    """
+    words = _u64(words)
+    k = words.shape[-1]
+    with np.errstate(over="ignore"):
+        h = np.full(words.shape[:-1], GOLDEN ^ np.uint64(k), dtype=np.uint64)
+        for i in range(k):
+            h = (h ^ words[..., i]) * MIX1
+            h = h ^ (h >> np.uint64(29))
+        h = h ^ (h >> np.uint64(30))
+        h = h * MIX1
+        h = h ^ (h >> np.uint64(27))
+        h = h * MIX2
+        h = h ^ (h >> np.uint64(31))
+    return h
+
+
+def bucket_of(fp: np.ndarray, nbuckets: int) -> np.ndarray:
+    """Fast-range bucket id from a fingerprint: ((fp>>32) * nb) >> 32."""
+    fp = _u64(fp)
+    nb = np.uint64(nbuckets)
+    with np.errstate(over="ignore"):
+        return ((fp >> np.uint64(32)) * nb) >> np.uint64(32)
+
+
+def hash_partition(words: np.ndarray, nbuckets: int):
+    """(fingerprints, bucket ids) for a batch of K-word elements."""
+    fp = fp_words(words)
+    return fp, bucket_of(fp, nbuckets)
+
+
+# ---------------------------------------------------------------------------
+# Inclusive prefix scan (int64 sum) — the parallel-prefix / chain-reduction
+# per-bucket kernel.
+# ---------------------------------------------------------------------------
+
+
+def scan_i64(x: np.ndarray) -> np.ndarray:
+    """Inclusive prefix sum, wrapping int64."""
+    x = np.asarray(x, dtype=np.int64)
+    with np.errstate(over="ignore"):
+        return np.cumsum(x.astype(np.uint64)).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Pancake prefix-reversal neighbor expansion.
+# ---------------------------------------------------------------------------
+
+
+def reversal_index_matrix(n: int) -> np.ndarray:
+    """M[j, i]: source index for neighbor j (flip of first j+2), position i."""
+    m = np.empty((n - 1, n), dtype=np.int32)
+    for j in range(n - 1):
+        k = j + 2  # flip length, 2..n
+        for i in range(n):
+            m[j, i] = k - 1 - i if i < k else i
+    return m
+
+
+def pancake_expand(perms: np.ndarray) -> np.ndarray:
+    """perms int32[B, N] -> neighbors int32[B, N-1, N] (flip first k=2..N)."""
+    perms = np.asarray(perms, dtype=np.int32)
+    n = perms.shape[-1]
+    m = reversal_index_matrix(n)
+    return perms[:, m]
+
+
+def pack_perm_u64(perms: np.ndarray) -> np.ndarray:
+    """Nibble-pack a permutation of 0..n-1 (n <= 16) into a u64 word.
+
+    int32[..., N] -> uint64[...]
+    """
+    perms = np.asarray(perms)
+    n = perms.shape[-1]
+    assert n <= 16, "nibble packing supports n <= 16"
+    out = np.zeros(perms.shape[:-1], dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        for i in range(n):
+            out |= perms[..., i].astype(np.uint64) << np.uint64(4 * i)
+    return out
+
+
+def bfs_expand(perms: np.ndarray, nbuckets: int):
+    """Fused BFS expansion: neighbors + packed codes + fingerprints + buckets.
+
+    Returns (nbrs int32[B,N-1,N], packed u64[B,N-1], fp u64[B,N-1],
+    bucket u64[B,N-1]).
+    """
+    nbrs = pancake_expand(perms)
+    packed = pack_perm_u64(nbrs)
+    fp = fp_words(packed[..., None])
+    return nbrs, packed, fp, bucket_of(fp, nbuckets)
+
+
+def flip_packed(code: np.ndarray, k: int) -> np.ndarray:
+    """Reverse the first k nibbles of packed codes (twin of rust
+    ``apps::pancake::flip_packed`` and the packed Pallas kernel)."""
+    code = _u64(code)
+    bits = 4 * k
+    mask = np.uint64((1 << bits) - 1)
+    inv_mask = np.uint64(~((1 << bits) - 1) & 0xFFFFFFFFFFFFFFFF)
+    head = code & mask
+    rev = np.zeros_like(code)
+    for _ in range(k):
+        rev = (rev << np.uint64(4)) | (head & np.uint64(0xF))
+        head = head >> np.uint64(4)
+    return (code & inv_mask) | rev
+
+
+def pancake_expand_packed(codes: np.ndarray, n: int) -> np.ndarray:
+    """All prefix reversals on packed codes: u64[B] -> u64[B, n-1]."""
+    codes = _u64(codes)
+    return np.stack([flip_packed(codes, k) for k in range(2, n + 1)], axis=-1)
+
+
+def bfs_expand_packed(codes: np.ndarray, n: int, nbuckets: int):
+    """Packed fused expansion: (packed u64[B,n-1], fp, bucket)."""
+    packed = pancake_expand_packed(codes, n)
+    fp = fp_words(packed[..., None])
+    return packed, fp, bucket_of(fp, nbuckets)
+
+
+# ---------------------------------------------------------------------------
+# Batched numeric reduction (the paper's reduce example: sum of squares).
+# ---------------------------------------------------------------------------
+
+
+def reduce_i64(x: np.ndarray):
+    """(sum of squares, min, max) over int64[B], wrapping arithmetic."""
+    x = np.asarray(x, dtype=np.int64)
+    with np.errstate(over="ignore"):
+        xx = x.astype(np.uint64)
+        sumsq = (xx * xx).sum(dtype=np.uint64)
+    return sumsq.astype(np.int64), x.min(), x.max()

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: blocked inclusive prefix scan (int64 sum).
+
+Per-bucket kernel of the parallel-prefix / chain-reduction constructs
+(paper §3): Layer 3 streams each Roomy bucket through this kernel and
+propagates the per-bucket carry itself, exactly mirroring how Roomy
+propagates partial sums across disk buckets.
+
+TPU mapping: the grid walks the batch sequentially; an SMEM scratch cell
+carries the running total between grid steps — the canonical Pallas
+sequential-accumulator pattern.  Each step scans one VMEM-resident BLOCK.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 4096
+
+
+def _scan_kernel(x_ref, y_ref, total_ref, carry_ref):
+    """One grid step: local inclusive scan + carry-in from previous blocks."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[0] = jnp.int64(0)
+
+    carry = carry_ref[0]
+    # Hillis–Steele log-step inclusive scan. NOT jnp.cumsum: that lowers
+    # to reduce_window, which the CPU backend executes in O(n·window) —
+    # quadratic in the block (§Perf P4).
+    local = x_ref[...]
+    n = local.shape[0]
+    shift = 1
+    while shift < n:
+        shifted = jnp.concatenate(
+            [jnp.zeros((shift,), dtype=local.dtype), local[:-shift]]
+        )
+        local = local + shifted
+        shift *= 2
+    y_ref[...] = local + carry
+    carry_ref[0] = carry + local[-1]
+    total_ref[0] = carry_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def scan_i64(x: jnp.ndarray, *, batch: int):
+    """Inclusive prefix sum of int64[batch]; also returns the grand total.
+
+    Returns (scan int64[batch], total int64[1]).
+    """
+    assert batch % BLOCK == 0, f"batch {batch} must be a multiple of {BLOCK}"
+    grid = (batch // BLOCK,)
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            # total: every step overwrites; the last write wins.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch,), jnp.int64),
+            jax.ShapeDtypeStruct((1,), jnp.int64),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int64)],
+        interpret=True,
+    )(x)

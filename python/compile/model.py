@@ -1,0 +1,122 @@
+"""Layer 2: JAX compute graphs composing the Roomy L1 Pallas kernels.
+
+Each public function here is an AOT entry point: ``aot.py`` lowers it once
+to HLO text and the Rust coordinator (rust/src/runtime) loads and executes
+it on the request path.  Python never runs at request time.
+
+Entry points and their role in the Roomy runtime:
+
+- ``hash_partition_k{1,2}``: fingerprint + bucket-route a batch of delayed
+  ops / list elements (the shuffle hot loop).
+- ``prefix_scan``: per-bucket inclusive scan for the parallel-prefix
+  construct; L3 chains the returned block total across buckets.
+- ``reduce_sumsq``: per-bucket partial reduction (paper's reduce example).
+- ``bfs_expand_n{N}``: the fused pancake-BFS expansion — neighbors, packed
+  codes, fingerprints and destination buckets in ONE lowered module, so the
+  whole frontier expansion is a single PJRT call per batch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import hashpart, pancake, reduce as reduce_k, scan  # noqa: E402
+
+# Fixed AOT batch sizes — mirrored in rust/src/runtime/shapes.rs. Rust pads
+# partial batches (padding is routed to bucket ids that are ignored).
+HASH_BATCH = 4096
+SCAN_BATCH = 4096
+REDUCE_BATCH = 4096
+BFS_BATCH = 1024
+
+# Pancake sizes for which we emit fused BFS-expansion artifacts.
+PANCAKE_NS = (6, 7, 8, 9, 10, 11, 12)
+
+
+def hash_partition_k1(words, nbuckets):
+    """u64[HASH_BATCH,1] x u64[1] -> (fp u64[B], bucket u64[B])."""
+    return hashpart.hash_partition(words, nbuckets, batch=HASH_BATCH, k=1)
+
+
+def hash_partition_k2(words, nbuckets):
+    """u64[HASH_BATCH,2] x u64[1] -> (fp u64[B], bucket u64[B])."""
+    return hashpart.hash_partition(words, nbuckets, batch=HASH_BATCH, k=2)
+
+
+def prefix_scan(x):
+    """i64[SCAN_BATCH] -> (inclusive scan i64[B], total i64[1])."""
+    return scan.scan_i64(x, batch=SCAN_BATCH)
+
+
+def reduce_sumsq(x):
+    """i64[REDUCE_BATCH] -> (sumsq i64[1], min i64[1], max i64[1])."""
+    return reduce_k.reduce_i64(x, batch=REDUCE_BATCH)
+
+
+def make_bfs_expand(n: int):
+    """Fused frontier expansion for pancake size ``n``, on packed codes.
+
+    u64[BFS_BATCH] x u64[1] ->
+        (packed u64[B, n-1], fp u64[B, n-1], bucket u64[B, n-1])
+
+    Packed (nibble) codes are the coordinator's wire format; the expansion
+    kernel works directly on them with shift/mask arithmetic (see
+    kernels/pancake.py for why the digit-gather variant is not AOT'd).
+    """
+
+    def bfs_expand(codes, nbuckets):
+        packed = pancake.pancake_expand_packed(codes, batch=BFS_BATCH, n=n)
+        flat = packed.reshape(BFS_BATCH * (n - 1), 1)
+        # Reuse the SAME hashing math as the hashpart kernel so Rust-side
+        # routing agrees bit-for-bit regardless of which path produced it.
+        fp = hashpart.fp_words_jnp(flat)
+        bucket = hashpart.bucket_of_jnp(fp, nbuckets[0])
+        return (
+            packed,
+            fp.reshape(BFS_BATCH, n - 1),
+            bucket.reshape(BFS_BATCH, n - 1),
+        )
+
+    bfs_expand.__name__ = f"bfs_expand_n{n}"
+    return bfs_expand
+
+
+def entry_points():
+    """name -> (fn, example abstract args). Consumed by aot.py and tests."""
+    u64 = jnp.uint64
+    eps = {
+        "hash_partition_k1": (
+            hash_partition_k1,
+            (
+                jax.ShapeDtypeStruct((HASH_BATCH, 1), u64),
+                jax.ShapeDtypeStruct((1,), u64),
+            ),
+        ),
+        "hash_partition_k2": (
+            hash_partition_k2,
+            (
+                jax.ShapeDtypeStruct((HASH_BATCH, 2), u64),
+                jax.ShapeDtypeStruct((1,), u64),
+            ),
+        ),
+        "prefix_scan": (
+            prefix_scan,
+            (jax.ShapeDtypeStruct((SCAN_BATCH,), jnp.int64),),
+        ),
+        "reduce_sumsq": (
+            reduce_sumsq,
+            (jax.ShapeDtypeStruct((REDUCE_BATCH,), jnp.int64),),
+        ),
+    }
+    for n in PANCAKE_NS:
+        eps[f"bfs_expand_n{n}"] = (
+            make_bfs_expand(n),
+            (
+                jax.ShapeDtypeStruct((BFS_BATCH,), u64),
+                jax.ShapeDtypeStruct((1,), u64),
+            ),
+        )
+    return eps

@@ -1,0 +1,100 @@
+"""AOT exporter contract: HLO text artifacts + manifest (the files the
+Rust runtime consumes)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+def test_shape_sig_format():
+    import jax
+
+    args = (
+        jax.ShapeDtypeStruct((4, 2), jax.numpy.uint64),
+        jax.ShapeDtypeStruct((1,), jax.numpy.int32),
+    )
+    assert aot.shape_sig(args) == "uint64[4,2];int32[1]"
+
+
+def test_entry_point_names_are_stable():
+    names = set(model.entry_points())
+    expected = {
+        "hash_partition_k1",
+        "hash_partition_k2",
+        "prefix_scan",
+        "reduce_sumsq",
+    } | {f"bfs_expand_n{n}" for n in model.PANCAKE_NS}
+    assert names == expected
+
+
+def test_to_hlo_text_produces_entry_computation():
+    import jax
+
+    name, (fn, ex_args) = sorted(model.entry_points().items())[0]
+    lowered = jax.jit(fn).lower(*ex_args)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text, "HLO text must contain an entry computation"
+    assert "HloModule" in text
+
+
+def test_exporter_cli_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    # export a single small entry point to keep the test fast
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--outdir",
+            str(out),
+            "--only",
+            "prefix_scan",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stderr
+    manifest = (out / "manifest.tsv").read_text().strip().splitlines()
+    assert len(manifest) == 1
+    name, fname, sig = manifest[0].split("\t")
+    assert name == "prefix_scan"
+    assert (out / fname).exists()
+    assert sig.startswith("int64[")
+
+
+def test_exporter_rejects_unknown_entry(tmp_path):
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--outdir",
+            str(tmp_path),
+            "--only",
+            "not_a_kernel",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode != 0
+    assert "unknown entry points" in proc.stderr
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.tsv")),
+    reason="artifacts not built",
+)
+def test_built_manifest_lists_all_entry_points():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.tsv")
+    rows = [l.split("\t") for l in open(path).read().strip().splitlines()]
+    names = {r[0] for r in rows}
+    assert names == set(model.entry_points())
+    art_dir = os.path.dirname(path)
+    for _, fname, _ in rows:
+        assert os.path.exists(os.path.join(art_dir, fname)), fname

@@ -1,0 +1,151 @@
+"""pancake expansion kernel + fused L2 bfs_expand model vs oracles."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import pancake, ref
+
+
+def random_perms(rng, b, n):
+    return np.array([rng.permutation(n) for _ in range(b)], dtype=np.int32)
+
+
+def test_expand_matches_ref():
+    rng = np.random.default_rng(0)
+    b, n = pancake.BLOCK, 7
+    perms = random_perms(rng, b, n)
+    nbrs = pancake.pancake_expand(jnp.asarray(perms), batch=b, n=n)
+    np.testing.assert_array_equal(np.asarray(nbrs), ref.pancake_expand(perms))
+
+
+def test_expand_small_exhaustive_n4():
+    """All 24 perms of n=4: every neighbor is the correct prefix reversal."""
+    perms = np.array(list(itertools.permutations(range(4))), dtype=np.int32)
+    perms = np.tile(perms, (pancake.BLOCK // 24 + 1, 1))[: pancake.BLOCK]
+    nbrs = np.asarray(pancake.pancake_expand(jnp.asarray(perms), batch=pancake.BLOCK, n=4))
+    for bi in range(24):
+        p = perms[bi]
+        for j in range(3):
+            k = j + 2
+            expect = np.concatenate([p[:k][::-1], p[k:]])
+            np.testing.assert_array_equal(nbrs[bi, j], expect)
+
+
+def test_neighbors_are_permutations():
+    rng = np.random.default_rng(1)
+    b, n = pancake.BLOCK, 9
+    perms = random_perms(rng, b, n)
+    nbrs = np.asarray(pancake.pancake_expand(jnp.asarray(perms), batch=b, n=n))
+    sorted_last = np.sort(nbrs, axis=-1)
+    np.testing.assert_array_equal(
+        sorted_last, np.broadcast_to(np.arange(n, dtype=np.int32), sorted_last.shape)
+    )
+
+
+def test_involution():
+    """Flipping the same prefix twice returns the original permutation."""
+    rng = np.random.default_rng(2)
+    b, n = pancake.BLOCK, 8
+    perms = random_perms(rng, b, n)
+    nbrs = np.asarray(pancake.pancake_expand(jnp.asarray(perms), batch=b, n=n))
+    for j in range(n - 1):
+        again = ref.pancake_expand(nbrs[:, j, :])[:, j, :]
+        np.testing.assert_array_equal(again, perms)
+
+
+def test_pack_roundtrip():
+    rng = np.random.default_rng(3)
+    perms = random_perms(rng, 64, 10)
+    packed = ref.pack_perm_u64(perms)
+    # unpack and compare
+    unpacked = np.zeros_like(perms)
+    for i in range(10):
+        unpacked[:, i] = ((packed >> np.uint64(4 * i)) & np.uint64(0xF)).astype(
+            np.int32
+        )
+    np.testing.assert_array_equal(unpacked, perms)
+    jpacked = np.asarray(pancake.pack_perm_u64_jnp(jnp.asarray(perms)))
+    np.testing.assert_array_equal(jpacked, packed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=6, max_value=12), st.integers(min_value=0, max_value=10**6))
+def test_hypothesis_expand_all_n(n, seed):
+    rng = np.random.default_rng(seed)
+    b = pancake.BLOCK
+    perms = random_perms(rng, b, n)
+    nbrs = pancake.pancake_expand(jnp.asarray(perms), batch=b, n=n)
+    np.testing.assert_array_equal(np.asarray(nbrs), ref.pancake_expand(perms))
+
+
+def test_packed_expand_kernel_matches_ref():
+    rng = np.random.default_rng(5)
+    n, b = 9, pancake.BLOCK * 2
+    perms = random_perms(rng, b, n)
+    codes = ref.pack_perm_u64(perms)
+    out = pancake.pancake_expand_packed(jnp.asarray(codes), batch=b, n=n)
+    np.testing.assert_array_equal(np.asarray(out), ref.pancake_expand_packed(codes, n))
+
+
+def test_packed_expand_agrees_with_digit_expand():
+    """Packed shift/mask reversal == digit-matrix gather reversal."""
+    rng = np.random.default_rng(6)
+    n, b = 8, pancake.BLOCK
+    perms = random_perms(rng, b, n)
+    codes = ref.pack_perm_u64(perms)
+    packed = ref.pancake_expand_packed(codes, n)
+    digits = ref.pancake_expand(perms)
+    np.testing.assert_array_equal(packed, ref.pack_perm_u64(digits))
+
+
+def test_flip_packed_involution():
+    rng = np.random.default_rng(7)
+    codes = ref.pack_perm_u64(random_perms(rng, 100, 10))
+    for k in range(2, 11):
+        np.testing.assert_array_equal(
+            ref.flip_packed(ref.flip_packed(codes, k), k), codes
+        )
+
+
+def test_fused_bfs_expand_model():
+    """L2 fused graph == composition of oracles (incl. routing agreement)."""
+    rng = np.random.default_rng(4)
+    n, nb = 8, 37
+    perms = random_perms(rng, model.BFS_BATCH, n)
+    codes = ref.pack_perm_u64(perms)
+    fn = model.make_bfs_expand(n)
+    packed, fp, bucket = fn(jnp.asarray(codes), jnp.asarray([nb], dtype=jnp.uint64))
+    epacked, efp, ebucket = ref.bfs_expand_packed(codes, n, nb)
+    np.testing.assert_array_equal(np.asarray(packed), epacked)
+    np.testing.assert_array_equal(np.asarray(fp), efp)
+    np.testing.assert_array_equal(np.asarray(bucket), ebucket)
+
+
+def test_entry_points_lower():
+    """Every AOT entry point traces and lowers to StableHLO without error."""
+    import jax
+
+    for name, (fn, ex_args) in model.entry_points().items():
+        lowered = jax.jit(fn).lower(*ex_args)
+        ir = lowered.compiler_ir("stablehlo")
+        assert ir is not None, name
+
+
+def test_fused_model_all_aot_sizes():
+    """Every AOT'd bfs_expand_n{N} matches the oracle composition."""
+    rng = np.random.default_rng(11)
+    for n in model.PANCAKE_NS:
+        perms = random_perms(rng, model.BFS_BATCH, n)
+        codes = ref.pack_perm_u64(perms)
+        fn = model.make_bfs_expand(n)
+        packed, fp, bucket = fn(
+            jnp.asarray(codes), jnp.asarray([17], dtype=jnp.uint64)
+        )
+        epacked, efp, ebucket = ref.bfs_expand_packed(codes, n, 17)
+        np.testing.assert_array_equal(np.asarray(packed), epacked, err_msg=f"n={n}")
+        np.testing.assert_array_equal(np.asarray(fp), efp, err_msg=f"n={n}")
+        np.testing.assert_array_equal(np.asarray(bucket), ebucket, err_msg=f"n={n}")

@@ -1,0 +1,87 @@
+"""scan + reduce Pallas kernels vs pure-numpy oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, scan
+from compile.kernels import reduce as reduce_k
+
+
+def test_scan_basic():
+    b = scan.BLOCK * 4
+    x = np.arange(b, dtype=np.int64)
+    y, total = scan.scan_i64(jnp.asarray(x), batch=b)
+    expect = ref.scan_i64(x)
+    np.testing.assert_array_equal(np.asarray(y), expect)
+    assert int(total[0]) == int(expect[-1])
+
+
+def test_scan_negative_and_zero():
+    b = scan.BLOCK
+    x = np.zeros(b, dtype=np.int64)
+    x[::3] = -5
+    x[1::3] = 7
+    y, total = scan.scan_i64(jnp.asarray(x), batch=b)
+    np.testing.assert_array_equal(np.asarray(y), ref.scan_i64(x))
+    assert int(total[0]) == int(x.sum())
+
+
+def test_scan_carry_across_blocks():
+    """Values concentrated in block 0 must appear in later blocks' prefix."""
+    b = scan.BLOCK * 3
+    x = np.zeros(b, dtype=np.int64)
+    x[0] = 1_000_000
+    y, _ = scan.scan_i64(jnp.asarray(x), batch=b)
+    assert int(y[-1]) == 1_000_000
+    assert int(y[scan.BLOCK]) == 1_000_000  # carry reached block 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_scan(blocks, seed):
+    b = scan.BLOCK * blocks
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**40), 2**40, size=b, dtype=np.int64)
+    y, total = scan.scan_i64(jnp.asarray(x), batch=b)
+    expect = ref.scan_i64(x)
+    np.testing.assert_array_equal(np.asarray(y), expect)
+    assert int(total[0]) == int(expect[-1])
+
+
+def test_reduce_basic():
+    b = reduce_k.BLOCK * 2
+    x = np.arange(-10, b - 10, dtype=np.int64)
+    sumsq, mn, mx = reduce_k.reduce_i64(jnp.asarray(x), batch=b)
+    esumsq, emn, emx = ref.reduce_i64(x)
+    assert int(sumsq[0]) == int(esumsq)
+    assert int(mn[0]) == int(emn)
+    assert int(mx[0]) == int(emx)
+
+
+def test_reduce_wrapping():
+    """Sum of squares wraps like Rust wrapping arithmetic, not saturating."""
+    b = reduce_k.BLOCK
+    x = np.full(b, 2**31, dtype=np.int64)  # squares are 2^62: sum wraps
+    sumsq, _, _ = reduce_k.reduce_i64(jnp.asarray(x), batch=b)
+    esumsq, _, _ = ref.reduce_i64(x)
+    assert int(sumsq[0]) == int(esumsq)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=3),
+    st.integers(min_value=0, max_value=2**31),
+)
+def test_hypothesis_reduce(blocks, seed):
+    b = reduce_k.BLOCK * blocks
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**62), 2**62, size=b, dtype=np.int64)
+    sumsq, mn, mx = reduce_k.reduce_i64(jnp.asarray(x), batch=b)
+    esumsq, emn, emx = ref.reduce_i64(x)
+    assert int(sumsq[0]) == int(esumsq)
+    assert int(mn[0]) == int(emn)
+    assert int(mx[0]) == int(emx)

@@ -1,0 +1,137 @@
+//! E8 — design-choice ablations called out in DESIGN.md:
+//!
+//! 1. **buckets_per_worker**: finer buckets shrink the RAM-resident sync
+//!    unit but add per-bucket open/close overhead;
+//! 2. **op_buffer_bytes**: smaller staging budgets spill more delayed-op
+//!    bytes to disk before sync;
+//! 3. **RoomySet vs RoomyList-as-set** (paper future work vs paper §3
+//!    emulation): incremental sorted-merge vs removeDupes re-sorts;
+//! 4. **Rubik pocket-cube**: second application end-to-end (hash-table
+//!    BFS, RAM baseline).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use roomy::testutil::Rng;
+
+fn main() {
+    println!("# E8: design-choice ablations");
+
+    // ---- 1. buckets_per_worker sweep ---------------------------------
+    header(
+        "pancake n=8 (list) vs buckets_per_worker (4 workers)",
+        &["buckets/worker", "wall s", "seeks"],
+    );
+    for bpw in [1usize, 2, 4, 8, 16] {
+        let (_t, r) = fresh_roomy(&format!("ab-bpw{bpw}"), |c| {
+            c.buckets_per_worker = bpw;
+        });
+        let before = r.io_snapshot();
+        let (secs, stats) = time(|| {
+            roomy::apps::pancake::roomy_bfs(
+                &r,
+                8,
+                roomy::apps::pancake::Structure::List,
+                &roomy::accel::Accel::rust(),
+            )
+            .unwrap()
+        });
+        assert_eq!(stats.total, roomy::apps::pancake::factorial(8));
+        let io = r.io_snapshot().delta(&before);
+        row(&[bpw.to_string(), format!("{secs:.2}"), io.seeks.to_string()]);
+    }
+
+    // ---- 2. op_buffer_bytes sweep -------------------------------------
+    header(
+        "1M random array updates vs staging budget",
+        &["op_buffer", "stage+sync s", "spilled bytes"],
+    );
+    let n = scaled(1_000_000);
+    for buf in [4 * 1024usize, 64 * 1024, 1024 * 1024, 8 * 1024 * 1024] {
+        let (_t, r) = fresh_roomy(&format!("ab-buf{buf}"), |c| {
+            c.op_buffer_bytes = buf;
+        });
+        let ra = r.array::<u64>("a", n, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut u64, p: &u64| *v += p);
+        let mut rng = Rng::new(1);
+        let (secs, spilled) = time(|| {
+            for _ in 0..n {
+                ra.update(rng.below(n), &1u64, add).unwrap();
+            }
+            let spilled = ra.pending_bytes();
+            ra.sync().unwrap();
+            spilled
+        });
+        row(&[
+            format!("{}K", buf / 1024),
+            format!("{secs:.2}"),
+            spilled.to_string(),
+        ]);
+    }
+
+    // ---- 3. RoomySet vs list-as-set ------------------------------------
+    header(
+        "incremental set (future work) vs removeDupes emulation",
+        &["elements/round x rounds", "RoomySet s", "List+dedup s", "speedup"],
+    );
+    for (per_round, rounds) in [(scaled(50_000), 8u64), (scaled(200_000), 4)] {
+        // RoomySet: sorted-merge sync per round
+        let (_t, r1) = fresh_roomy("ab-set", |_| {});
+        let s = r1.set::<u64>("s").unwrap();
+        let mut rng = Rng::new(2);
+        let (t_set, _) = time(|| {
+            for _ in 0..rounds {
+                for _ in 0..per_round {
+                    s.add(&rng.below(per_round * 2)).unwrap();
+                }
+                s.sync().unwrap();
+            }
+        });
+        // List emulation: sync + removeDupes per round (paper §3)
+        let (_t2, r2) = fresh_roomy("ab-list", |_| {});
+        let l = r2.list::<u64>("l").unwrap();
+        let mut rng = Rng::new(2);
+        let (t_list, _) = time(|| {
+            for _ in 0..rounds {
+                for _ in 0..per_round {
+                    l.add(&rng.below(per_round * 2)).unwrap();
+                }
+                l.sync().unwrap();
+                l.remove_dupes().unwrap();
+            }
+        });
+        assert_eq!(s.size(), l.size(), "both must converge to the same set");
+        row(&[
+            format!("{per_round} x {rounds}"),
+            format!("{t_set:.2}"),
+            format!("{t_list:.2}"),
+            format!("{:.2}x", t_list / t_set),
+        ]);
+    }
+
+    // ---- 4. Rubik pocket cube end-to-end -------------------------------
+    header(
+        "2x2x2 Rubik's cube BFS (3.67M states, hash variant)",
+        &["method", "wall s", "total states", "God's number"],
+    );
+    let (ram_s, ram_levels) = time(roomy::apps::rubik::reference_bfs);
+    let (_t, r) = fresh_roomy("ab-rubik", |c| {
+        c.buckets_per_worker = 4;
+    });
+    let (secs, stats) =
+        time(|| roomy::apps::rubik::roomy_bfs(&r, &roomy::accel::Accel::rust()).unwrap());
+    assert_eq!(stats.levels, ram_levels, "Roomy must match the RAM reference");
+    row(&[
+        "roomy (hash)".into(),
+        format!("{secs:.1}"),
+        stats.total.to_string(),
+        stats.depth().to_string(),
+    ]);
+    row(&[
+        "RAM reference".into(),
+        format!("{ram_s:.1}"),
+        ram_levels.iter().sum::<u64>().to_string(),
+        (ram_levels.len() as u64 - 1).to_string(),
+    ]);
+}

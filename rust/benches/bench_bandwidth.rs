@@ -1,0 +1,76 @@
+//! E1 "Fig R1" — aggregate disk bandwidth scales with the number of
+//! disks/nodes (paper §1, Bandwidth).
+//!
+//! A streaming `map` over a fixed-size RoomyArray under the paper's
+//! 2010-era disk model (100 MB/s per disk). With W simulated node disks
+//! the pass should complete ~W× faster: aggregate bandwidth ≈ W × 100 MB/s.
+//! An unthrottled row shows the same scaling against host page-cache
+//! speed.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use roomy::DiskPolicy;
+
+fn run(workers: usize, throttled: bool, total_bytes: u64) -> (f64, u64) {
+    let n = total_bytes / 8;
+    let (_t, r) = fresh_roomy(&format!("bw{workers}{throttled}"), |c| {
+        c.workers = workers;
+        c.buckets_per_worker = 2;
+        if throttled {
+            c.disk = DiskPolicy { read_bps: Some(100_000_000), write_bps: Some(100_000_000), seek_us: 0 };
+        }
+    });
+    let ra = r.array::<u64>("a", n, 0).unwrap();
+    r.cluster().reset_metrics();
+    let before = r.io_snapshot();
+    let (secs, _) = time(|| ra.map(|_i, _v| {}).unwrap());
+    let io = r.io_snapshot().delta(&before);
+    (secs, io.bytes_read)
+}
+
+fn main() {
+    // 64 MB payload: 0.64 s on one throttled disk, 80 ms on eight.
+    let total = scaled(64 * 1024 * 1024);
+    println!("# E1: aggregate streaming bandwidth vs #disks ({} payload)", total);
+
+    header(
+        "throttled (100 MB/s per simulated disk, paper's 2010 regime)",
+        &["workers", "wall s", "aggregate MB/s", "per-disk MB/s", "scaling ×"],
+    );
+    let mut base = None;
+    for w in [1usize, 2, 4, 8] {
+        let (secs, bytes) = run(w, true, total);
+        let agg = mbps(bytes, secs);
+        let b = *base.get_or_insert(agg);
+        row(&[
+            w.to_string(),
+            format!("{secs:.3}"),
+            format!("{agg:.1}"),
+            format!("{:.1}", agg / w as f64),
+            format!("{:.2}", agg / b),
+        ]);
+    }
+
+    header(
+        "unthrottled (host speed)",
+        &["workers", "wall s", "aggregate MB/s", "scaling ×"],
+    );
+    let mut base = None;
+    for w in [1usize, 2, 4, 8] {
+        // warmup + best-of-2 (page cache noise)
+        let (_w, _) = run(w, false, total);
+        let (s1, b1) = run(w, false, total);
+        let (s2, b2) = run(w, false, total);
+        let (secs, bytes) = if s1 < s2 { (s1, b1) } else { (s2, b2) };
+        let agg = mbps(bytes, secs);
+        let b = *base.get_or_insert(agg);
+        row(&[
+            w.to_string(),
+            format!("{secs:.3}"),
+            format!("{agg:.1}"),
+            format!("{:.2}", agg / b),
+        ]);
+    }
+}

@@ -1,0 +1,105 @@
+//! E7 "Fig R4" — layer ablation: AOT XLA kernels vs the pure-Rust
+//! fallbacks, per batch kernel.
+//!
+//! Throughput of the four accel entry points on both backends. Context
+//! for the numbers: the Pallas kernels are lowered with `interpret=True`
+//! (mandatory for CPU PJRT in this image), so the XLA path measures the
+//! *architecture* (AOT artifact + PJRT dispatch from the Rust hot path),
+//! not TPU-class kernel speed — DESIGN.md §Hardware-Adaptation records
+//! the VMEM/roofline estimates for real hardware. The scalar Rust twins
+//! are the bit-exactness oracle and the practical CPU fast path.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use roomy::accel::Accel;
+use roomy::apps::pancake;
+use roomy::testutil::Rng;
+
+fn main() {
+    println!("# E7: accel kernel ablation (XLA AOT vs Rust fallback)");
+    let xla = {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            Some(Accel::xla(std::sync::Arc::new(
+                roomy::runtime::Engine::load(dir).unwrap(),
+            )))
+        } else {
+            None
+        }
+    };
+    let rust = Accel::rust();
+    let Some(xla) = xla else {
+        println!("artifacts/ missing — run `make artifacts` for the XLA side");
+        return;
+    };
+
+    let mut rng = Rng::new(7);
+    header(
+        "throughput (M elements/s), best of 3",
+        &["kernel", "batch", "rust", "xla", "xla/rust ×"],
+    );
+
+    // hash_partition
+    for count in [4096usize, 65_536, 262_144] {
+        let words: Vec<u64> = (0..count).map(|_| rng.next_u64()).collect();
+        let (tr, _) = time_best(3, || rust.hash_partition(&words, 1, 64).unwrap());
+        let (tx, _) = time_best(3, || xla.hash_partition(&words, 1, 64).unwrap());
+        let (mr, mx) = (count as f64 / 1e6 / tr, count as f64 / 1e6 / tx);
+        row(&[
+            "hash_partition".into(),
+            count.to_string(),
+            format!("{mr:.1}"),
+            format!("{mx:.1}"),
+            format!("{:.3}", mx / mr),
+        ]);
+    }
+
+    // prefix_scan
+    for count in [4096usize, 65_536, 262_144] {
+        let x: Vec<i64> = (0..count).map(|_| rng.range_i64(-1000, 1000)).collect();
+        let (tr, _) = time_best(3, || rust.prefix_scan(&x).unwrap());
+        let (tx, _) = time_best(3, || xla.prefix_scan(&x).unwrap());
+        let (mr, mx) = (count as f64 / 1e6 / tr, count as f64 / 1e6 / tx);
+        row(&[
+            "prefix_scan".into(),
+            count.to_string(),
+            format!("{mr:.1}"),
+            format!("{mx:.1}"),
+            format!("{:.3}", mx / mr),
+        ]);
+    }
+
+    // reduce_sumsq
+    for count in [4096usize, 262_144] {
+        let x: Vec<i64> = (0..count).map(|_| rng.range_i64(-1000, 1000)).collect();
+        let (tr, _) = time_best(3, || rust.reduce_sumsq(&x).unwrap());
+        let (tx, _) = time_best(3, || xla.reduce_sumsq(&x).unwrap());
+        let (mr, mx) = (count as f64 / 1e6 / tr, count as f64 / 1e6 / tx);
+        row(&[
+            "reduce_sumsq".into(),
+            count.to_string(),
+            format!("{mr:.1}"),
+            format!("{mx:.1}"),
+            format!("{:.3}", mx / mr),
+        ]);
+    }
+
+    // bfs_expand (per generated neighbor)
+    for n in [8usize, 10, 12] {
+        let frontier: Vec<u64> =
+            (0..4096).map(|_| pancake::pack_perm(&rng.permutation(n))).collect();
+        let nbrs = frontier.len() * (n - 1);
+        let (tr, _) = time_best(3, || rust.bfs_expand(&frontier, n, 64).unwrap());
+        let (tx, _) = time_best(3, || xla.bfs_expand(&frontier, n, 64).unwrap());
+        let (mr, mx) = (nbrs as f64 / 1e6 / tr, nbrs as f64 / 1e6 / tx);
+        row(&[
+            format!("bfs_expand n={n}"),
+            format!("4096 ({nbrs} nbrs)"),
+            format!("{mr:.1}"),
+            format!("{mx:.1}"),
+            format!("{:.3}", mx / mr),
+        ]);
+    }
+}

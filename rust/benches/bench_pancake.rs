@@ -1,0 +1,101 @@
+//! E3 "Table R1" + E4 "Table R2" — the pancake-sorting flagship.
+//!
+//! E3: level counts for n = 2..=9 must match the in-RAM reference BFS and
+//! the known pancake numbers (correctness table).
+//!
+//! E4: runtime of the three Roomy data-structure variants on n = 8, 9,
+//! with the sort-phase share of the list variant broken out — reproducing
+//! the paper's §2 claim that Array/HashTable's bucketing beats the
+//! sort-dominated RoomyList.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use roomy::accel::Accel;
+use roomy::apps::pancake::{self, Structure};
+
+fn main() {
+    println!("# E3/E4: pancake sorting BFS");
+
+    // ---- E3: correctness table --------------------------------------
+    header(
+        "E3: level counts vs reference (n=2..=8)",
+        &["n", "n!", "f(n)", "known f(n)", "levels match", "total match"],
+    );
+    for n in 2..=8usize {
+        let (_t, r) = fresh_roomy(&format!("pk{n}"), |_| {});
+        let stats = pancake::roomy_bfs(&r, n, Structure::List, &Accel::rust()).unwrap();
+        let reference = pancake::reference_bfs(n);
+        row(&[
+            n.to_string(),
+            pancake::factorial(n).to_string(),
+            stats.depth().to_string(),
+            pancake::pancake_number(n).map(|v| v.to_string()).unwrap_or_default(),
+            (stats.levels == reference).to_string(),
+            (stats.total == pancake::factorial(n)).to_string(),
+        ]);
+    }
+
+    // ---- E4: structure comparison -----------------------------------
+    let xla = {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            Some(Accel::xla(std::sync::Arc::new(
+                roomy::runtime::Engine::load(dir).unwrap(),
+            )))
+        } else {
+            None
+        }
+    };
+
+    for n in [8usize, 9] {
+        header(
+            &format!("E4: data-structure comparison, n={n} ({} states)", pancake::factorial(n)),
+            &["structure", "wall s", "sort-phase share", "disk MB moved", "vs list ×"],
+        );
+        // RAM baseline first
+        let (ram_s, _) = time(|| pancake::reference_bfs(n));
+        let mut list_time = None;
+        for (name, s) in [
+            ("list", Structure::List),
+            ("hash", Structure::Hash),
+            ("array", Structure::Array),
+        ] {
+            let (_t, r) = fresh_roomy(&format!("pk{n}{name}"), |_| {});
+            let accel = xla.clone().unwrap_or_else(Accel::rust);
+            let before = r.io_snapshot();
+            let (secs, stats) =
+                time(|| pancake::roomy_bfs(&r, n, s, &accel).unwrap());
+            assert_eq!(stats.total, pancake::factorial(n), "{name} must be exact");
+            let io = r.io_snapshot().delta(&before);
+            let phases = r.cluster().phases().rows();
+            let total_phase: f64 =
+                phases.iter().map(|(_, d, _)| d.as_secs_f64()).sum();
+            let sort_phase: f64 = phases
+                .iter()
+                .filter(|(p, _, _)| p.contains("remove_dupes") || p.contains("remove_all"))
+                .map(|(_, d, _)| d.as_secs_f64())
+                .sum();
+            let lt = *list_time.get_or_insert(secs);
+            row(&[
+                name.into(),
+                format!("{secs:.2}"),
+                format!("{:.0}%", 100.0 * sort_phase / total_phase.max(1e-9)),
+                format!("{:.1}", io.bytes_total() as f64 / 1e6),
+                format!("{:.2}", lt / secs),
+            ]);
+        }
+        row(&[
+            "RAM reference".into(),
+            format!("{ram_s:.2}"),
+            "-".into(),
+            "0".into(),
+            "-".into(),
+        ]);
+    }
+    println!(
+        "\nexpansion backend: {}",
+        if xla.is_some() { "XLA AOT (list/hash variants)" } else { "Rust fallback" }
+    );
+}

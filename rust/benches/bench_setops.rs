@@ -1,0 +1,92 @@
+//! E5 "Table R3" — set algebra throughput (paper §3 Set Operations).
+//!
+//! Union, difference and both intersection variants over sets of
+//! increasing size with ~50% overlap, plus the removeAll ablation:
+//! hash-set filter (fits-in-RAM path) vs forced sorted-merge difference
+//! (space-limited path). The paper notes its intersection construction is
+//! sub-optimal; the "primitive" column quantifies the gap.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use roomy::constructs::setops;
+use roomy::{Roomy, RoomyList};
+
+fn build(r: &Roomy, n: u64) -> (RoomyList<u64>, RoomyList<u64>) {
+    let a = r.list::<u64>("A").unwrap();
+    let b = r.list::<u64>("B").unwrap();
+    for i in 0..n {
+        a.add(&i).unwrap(); // A = 0..n
+        b.add(&(i + n / 2)).unwrap(); // B = n/2..3n/2 (50% overlap)
+    }
+    a.sync().unwrap();
+    b.sync().unwrap();
+    setops::to_set(&a).unwrap();
+    setops::to_set(&b).unwrap();
+    (a, b)
+}
+
+fn main() {
+    println!("# E5: set-operation throughput (50% overlap)");
+    header(
+        "set algebra wall time (s)",
+        &["|A|=|B|", "union", "difference", "intersect (paper)", "intersect (primitive)", "Melts/s (union)"],
+    );
+    for n in [scaled(100_000), scaled(300_000), scaled(1_000_000)] {
+        // union
+        let (_t, r) = fresh_roomy(&format!("su{n}"), |_| {});
+        let (a, b) = build(&r, n);
+        let (t_union, _) = time(|| setops::union_into(&a, &b).unwrap());
+        assert_eq!(a.size(), n + n / 2);
+
+        // difference
+        let (_t, r) = fresh_roomy(&format!("sd{n}"), |_| {});
+        let (a, b) = build(&r, n);
+        let (t_diff, _) = time(|| setops::difference_into(&a, &b).unwrap());
+        assert_eq!(a.size(), n / 2);
+
+        // intersections
+        let (_t, r) = fresh_roomy(&format!("si{n}"), |_| {});
+        let (a, b) = build(&r, n);
+        let (t_int1, c1) = time(|| setops::intersection(&r, "C1", &a, &b).unwrap());
+        let (t_int2, c2) =
+            time(|| setops::intersection_primitive(&r, "C2", &a, &b).unwrap());
+        assert_eq!(c1.size(), n - n / 2);
+        assert_eq!(c2.size(), n - n / 2);
+
+        row(&[
+            n.to_string(),
+            format!("{t_union:.2}"),
+            format!("{t_diff:.2}"),
+            format!("{t_int1:.2}"),
+            format!("{t_int2:.2}"),
+            format!("{:.2}", n as f64 / 1e6 / t_union),
+        ]);
+    }
+
+    // ---- removeAll ablation: hash path vs sort-merge path ------------
+    header(
+        "removeAll ablation (|A|=|B|, 50% overlap)",
+        &["|A|", "hash-filter s", "sort-merge s", "ratio"],
+    );
+    for n in [scaled(100_000), scaled(500_000)] {
+        let run = |budget: usize| {
+            let (_t, r) = fresh_roomy(&format!("sr{n}{budget}"), |c| {
+                c.ram_budget_bytes = budget;
+            });
+            let (a, b) = build(&r, n);
+            let (t, _) = time(|| a.remove_all(&b).unwrap());
+            assert_eq!(a.size(), n / 2);
+            t
+        };
+        let fast = run(usize::MAX / 2);
+        let slow = run(1); // force sorted-merge
+        row(&[
+            n.to_string(),
+            format!("{fast:.2}"),
+            format!("{slow:.2}"),
+            format!("{:.2}", slow / fast),
+        ]);
+    }
+}

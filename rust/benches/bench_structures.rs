@@ -1,0 +1,114 @@
+//! E6 "Fig R3" — programming constructs scale streaming (paper §3).
+//!
+//! Wall time and bytes moved for map, map_update, reduce, chain
+//! reduction, parallel prefix (log-round vs single-pass scan) and pair
+//! reduction as the input grows. The shape to reproduce: every construct
+//! is bandwidth-bound (time ∝ bytes moved), chain reduction ≈ 2 passes,
+//! log-round prefix ≈ 2·log2(N) passes vs 2 passes for the scan kernel.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::*;
+use roomy::accel::Accel;
+use roomy::constructs::{chainred, pairred, prefix};
+
+fn main() {
+    println!("# E6: construct scaling");
+    header(
+        "constructs over RoomyArray<i64> (wall s / MB moved)",
+        &["N", "map", "map_update", "reduce", "chain red.", "prefix (log)", "prefix (scan)"],
+    );
+    for n in [scaled(100_000), scaled(1_000_000), scaled(4_000_000)] {
+        // each construct gets a fresh instance so IO deltas are clean
+        let mut cells = vec![n.to_string()];
+        let map_cell = {
+            let (_t, r) = fresh_roomy(&format!("st-map-{n}"), |_| {});
+            let ra = r.array::<i64>("a", n, 0).unwrap();
+            ra.map_update(|i, v| *v = i as i64).unwrap();
+            let before = r.io_snapshot();
+            let (secs, _) = time(|| ra.map(|_i, _v| {}).unwrap());
+            let io = r.io_snapshot().delta(&before);
+            format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
+        };
+        let map_update_cell = {
+            let (_t, r) = fresh_roomy(&format!("st-mu-{n}"), |_| {});
+            let ra = r.array::<i64>("a", n, 0).unwrap();
+            let before = r.io_snapshot();
+            let (secs, _) = time(|| ra.map_update(|_i, v| *v += 1).unwrap());
+            let io = r.io_snapshot().delta(&before);
+            format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
+        };
+        let reduce_cell = {
+            let (_t, r) = fresh_roomy(&format!("st-red-{n}"), |_| {});
+            let ra = r.array::<i64>("a", n, 1).unwrap();
+            let before = r.io_snapshot();
+            let (secs, v) = time(|| {
+                ra.reduce(|| 0i64, |a, _i, v| a.wrapping_add(*v), |a, b| a.wrapping_add(b))
+                    .unwrap()
+            });
+            assert_eq!(v, n as i64);
+            let io = r.io_snapshot().delta(&before);
+            format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
+        };
+        let chain_cell = {
+            let (_t, r) = fresh_roomy(&format!("st-ch-{n}"), |_| {});
+            let ra = r.array::<i64>("a", n, 1).unwrap();
+            let before = r.io_snapshot();
+            let (secs, _) =
+                time(|| chainred::chain_reduce(&ra, |a, b| a.wrapping_add(*b)).unwrap());
+            let io = r.io_snapshot().delta(&before);
+            format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
+        };
+        let prefix_log_cell = {
+            let (_t, r) = fresh_roomy(&format!("st-pl-{n}"), |_| {});
+            let ra = r.array::<i64>("a", n, 1).unwrap();
+            let before = r.io_snapshot();
+            let (secs, _) =
+                time(|| prefix::parallel_prefix(&ra, |a, b| a.wrapping_add(*b)).unwrap());
+            let io = r.io_snapshot().delta(&before);
+            format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
+        };
+        let prefix_scan_cell = {
+            let (_t, r) = fresh_roomy(&format!("st-ps-{n}"), |_| {});
+            let ra = r.array::<i64>("a", n, 1).unwrap();
+            let before = r.io_snapshot();
+            let (secs, _) =
+                time(|| prefix::prefix_scan_array(&ra, &Accel::rust()).unwrap());
+            let io = r.io_snapshot().delta(&before);
+            format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
+        };
+        cells.extend([
+            map_cell,
+            map_update_cell,
+            reduce_cell,
+            chain_cell,
+            prefix_log_cell,
+            prefix_scan_cell,
+        ]);
+        row(&cells);
+    }
+
+    // pair reduction is O(N^2) delayed accesses: small N only
+    header("pair reduction (N^2 delayed accesses)", &["N", "pairs", "wall s", "Mops/s"]);
+    for n in [100u64, 300, 600] {
+        let (_t, r) = fresh_roomy(&format!("st-pr-{n}"), |_| {});
+        let ra = r.array::<i64>("a", n, 1).unwrap();
+        let count = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let c2 = count.clone();
+        let (secs, _) = time(|| {
+            pairred::pair_reduction(&ra, move |_j, _inner, _i, _outer| {
+                c2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            })
+            .unwrap()
+        });
+        let pairs = count.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(pairs, n * n);
+        row(&[
+            n.to_string(),
+            pairs.to_string(),
+            format!("{secs:.2}"),
+            format!("{:.2}", pairs as f64 / 1e6 / secs),
+        ]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Minimal shared bench harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/bench_*.rs` regenerates one experiment from
+//! DESIGN.md's index (E1–E7) and prints a fixed-format table; the rows are
+//! transcribed into EXPERIMENTS.md. Timing is wall-clock over full
+//! collective operations — Roomy phases are seconds-scale streaming
+//! passes, so single-shot timing with a warmup is appropriate (criterion
+//! micro-sampling would add nothing).
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+use roomy::{Roomy, RoomyConfig};
+
+/// Time one run of `f` in seconds.
+pub fn time<R>(f: impl FnOnce() -> R) -> (f64, R) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed().as_secs_f64(), r)
+}
+
+/// Best-of-`reps` timing (first run is warmup when reps > 1).
+pub fn time_best<R>(reps: usize, mut f: impl FnMut() -> R) -> (f64, R) {
+    assert!(reps >= 1);
+    let (mut best, mut out) = time(&mut f);
+    for _ in 1..reps {
+        let (t, r) = time(&mut f);
+        if t < best {
+            best = t;
+            out = r;
+        }
+    }
+    (best, out)
+}
+
+/// A fresh Roomy instance over a unique temp root.
+pub fn fresh_roomy(tag: &str, f: impl FnOnce(&mut RoomyConfig)) -> (roomy::testutil::TmpDir, Roomy) {
+    let t = roomy::testutil::tmpdir(&format!("bench-{tag}"));
+    let mut cfg = RoomyConfig::for_testing(t.path());
+    cfg.workers = 4;
+    cfg.buckets_per_worker = 4;
+    cfg.op_buffer_bytes = 4 * 1024 * 1024;
+    cfg.sort_chunk_bytes = 64 * 1024 * 1024;
+    f(&mut cfg);
+    let r = Roomy::open(cfg).unwrap();
+    (t, r)
+}
+
+/// Print a table header: `name | col | col | ...`.
+pub fn header(title: &str, cols: &[&str]) {
+    println!("\n### {title}");
+    println!("| {} |", cols.join(" | "));
+    println!("|{}|", cols.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+/// Print one table row.
+pub fn row(cells: &[String]) {
+    println!("| {} |", cells.join(" | "));
+}
+
+/// MB/s from bytes and seconds.
+pub fn mbps(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return f64::INFINITY;
+    }
+    bytes as f64 / 1e6 / secs
+}
+
+/// Scale factor from env `ROOMY_BENCH_SCALE` (default 1.0) — lets CI run
+/// the full matrix quickly and a workstation run it at size.
+pub fn scale() -> f64 {
+    std::env::var("ROOMY_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+pub fn scaled(n: u64) -> u64 {
+    ((n as f64) * scale()).max(1.0) as u64
+}

@@ -1,0 +1,408 @@
+//! Numeric batch kernels with two interchangeable backends:
+//!
+//! - **Xla**: the AOT-compiled Pallas/JAX artifacts executed via PJRT
+//!   ([`crate::runtime::Engine`]) — the three-layer architecture's fast
+//!   path;
+//! - **Rust**: bit-exact scalar fallbacks, always available.
+//!
+//! Both paths produce *identical* bits (pinned by tests and by the shared
+//! vectors in [`crate::hashfn`]), so callers may mix them freely; the E7
+//! bench ablates one against the other.
+//!
+//! The kernels cover Roomy's batch hot spots:
+//! - [`Accel::hash_partition`] — fingerprint + route a batch of elements;
+//! - [`Accel::prefix_scan`] — inclusive scan (parallel-prefix construct);
+//! - [`Accel::reduce_sumsq`] — the paper's reduce example;
+//! - [`Accel::bfs_expand`] — fused pancake frontier expansion
+//!   (neighbors → packed codes → fingerprints → destination buckets).
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::hashfn;
+use crate::roomy::Roomy;
+use crate::runtime::{Engine, TensorBuf, BFS_BATCH, HASH_BATCH, REDUCE_BATCH, SCAN_BATCH};
+
+/// Which backend executes the batch kernels.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure-Rust scalar implementations.
+    Rust,
+    /// AOT XLA artifacts via the PJRT engine.
+    Xla(Arc<Engine>),
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Rust => write!(f, "Rust"),
+            Backend::Xla(_) => write!(f, "Xla"),
+        }
+    }
+}
+
+/// Batch-kernel dispatcher.
+#[derive(Debug, Clone)]
+pub struct Accel {
+    backend: Backend,
+}
+
+/// Result of one fused BFS expansion call: parallel vectors over all
+/// generated neighbors (`frontier_len * (n-1)` entries).
+#[derive(Debug, Default)]
+pub struct Expansion {
+    /// Nibble-packed neighbor permutations.
+    pub packed: Vec<u64>,
+    /// Fingerprints of the packed codes.
+    pub fp: Vec<u64>,
+    /// Destination bucket of each neighbor.
+    pub bucket: Vec<u32>,
+}
+
+impl Accel {
+    /// Always-available Rust backend.
+    pub fn rust() -> Accel {
+        Accel { backend: Backend::Rust }
+    }
+
+    /// XLA backend over a loaded engine.
+    pub fn xla(engine: Arc<Engine>) -> Accel {
+        Accel { backend: Backend::Xla(engine) }
+    }
+
+    /// Backend selected by a [`Roomy`] instance's `AccelMode`.
+    pub fn from_roomy(r: &Roomy) -> Accel {
+        match r.engine() {
+            Some(e) => Accel::xla(e),
+            None => Accel::rust(),
+        }
+    }
+
+    /// True if this dispatcher runs on XLA.
+    pub fn is_xla(&self) -> bool {
+        matches!(self.backend, Backend::Xla(_))
+    }
+
+    // ------------------------------------------------------------------
+    // hash_partition
+    // ------------------------------------------------------------------
+
+    /// Fingerprint + bucket-route a batch of K-word elements
+    /// (`words.len()` must be a multiple of `k`; `k` ∈ {1, 2} on the XLA
+    /// path, any `k` on the Rust path).
+    pub fn hash_partition(
+        &self,
+        words: &[u64],
+        k: usize,
+        nbuckets: u32,
+    ) -> Result<(Vec<u64>, Vec<u32>)> {
+        assert!(k > 0 && words.len().is_multiple_of(k));
+        let n = words.len() / k;
+        match &self.backend {
+            Backend::Xla(engine) if k <= 2 => {
+                let name = if k == 1 { "hash_partition_k1" } else { "hash_partition_k2" };
+                let mut fps = Vec::with_capacity(n);
+                let mut buckets = Vec::with_capacity(n);
+                for chunk in words.chunks(HASH_BATCH * k) {
+                    let real = chunk.len() / k;
+                    let mut padded = chunk.to_vec();
+                    padded.resize(HASH_BATCH * k, 0);
+                    let out = engine.run(
+                        name,
+                        vec![
+                            TensorBuf::u64_2d(padded, HASH_BATCH, k),
+                            TensorBuf::u64_1d(vec![nbuckets as u64]),
+                        ],
+                    )?;
+                    let mut it = out.into_iter();
+                    let fp = it.next().expect("fp output").into_u64()?;
+                    let bk = it.next().expect("bucket output").into_u64()?;
+                    fps.extend_from_slice(&fp[..real]);
+                    buckets.extend(bk[..real].iter().map(|&b| b as u32));
+                }
+                Ok((fps, buckets))
+            }
+            _ => {
+                let mut fps = Vec::with_capacity(n);
+                let mut buckets = Vec::with_capacity(n);
+                for e in words.chunks_exact(k) {
+                    let fp = hashfn::fp_words(e);
+                    fps.push(fp);
+                    buckets.push(hashfn::bucket_of(fp, nbuckets));
+                }
+                Ok((fps, buckets))
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // prefix_scan
+    // ------------------------------------------------------------------
+
+    /// Inclusive prefix sum (wrapping i64). Returns `(scan, total)`.
+    pub fn prefix_scan(&self, x: &[i64]) -> Result<(Vec<i64>, i64)> {
+        match &self.backend {
+            Backend::Xla(engine) => {
+                let mut out = Vec::with_capacity(x.len());
+                let mut carry = 0i64;
+                for chunk in x.chunks(SCAN_BATCH) {
+                    let mut padded = chunk.to_vec();
+                    padded.resize(SCAN_BATCH, 0);
+                    let res = engine.run("prefix_scan", vec![TensorBuf::i64_1d(padded)])?;
+                    let mut it = res.into_iter();
+                    let scan = it.next().expect("scan output").into_i64()?;
+                    // Carry-in from previous batches is propagated here in
+                    // L3, exactly as Roomy propagates partial sums across
+                    // disk buckets.
+                    out.extend(scan[..chunk.len()].iter().map(|v| v.wrapping_add(carry)));
+                    carry = *out.last().unwrap_or(&carry);
+                }
+                Ok((out, carry))
+            }
+            Backend::Rust => {
+                let mut out = Vec::with_capacity(x.len());
+                let mut acc = 0i64;
+                for &v in x {
+                    acc = acc.wrapping_add(v);
+                    out.push(acc);
+                }
+                Ok((out, acc))
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // reduce_sumsq
+    // ------------------------------------------------------------------
+
+    /// `(sum of squares, min, max)` over `x` (wrapping i64). Empty input
+    /// yields `(0, i64::MAX, i64::MIN)` — the reduce identities.
+    pub fn reduce_sumsq(&self, x: &[i64]) -> Result<(i64, i64, i64)> {
+        match &self.backend {
+            Backend::Xla(engine) => {
+                let (mut sumsq, mut mn, mut mx) = (0i64, i64::MAX, i64::MIN);
+                for chunk in x.chunks(REDUCE_BATCH) {
+                    let mut padded = chunk.to_vec();
+                    // Padding zeros contribute 0 to sumsq but would corrupt
+                    // min/max; for partial chunks the bounds are folded on
+                    // the Rust side instead.
+                    padded.resize(REDUCE_BATCH, 0);
+                    let res = engine.run("reduce_sumsq", vec![TensorBuf::i64_1d(padded)])?;
+                    let vals: Vec<i64> = res
+                        .into_iter()
+                        .map(|t| t.into_i64().map(|v| v[0]))
+                        .collect::<Result<_>>()?;
+                    sumsq = sumsq.wrapping_add(vals[0]);
+                    if chunk.len() == REDUCE_BATCH {
+                        mn = mn.min(vals[1]);
+                        mx = mx.max(vals[2]);
+                    } else {
+                        for &v in chunk {
+                            mn = mn.min(v);
+                            mx = mx.max(v);
+                        }
+                    }
+                }
+                Ok((sumsq, mn, mx))
+            }
+            Backend::Rust => {
+                let mut sumsq = 0i64;
+                let (mut mn, mut mx) = (i64::MAX, i64::MIN);
+                for &v in x {
+                    sumsq = sumsq.wrapping_add(v.wrapping_mul(v));
+                    mn = mn.min(v);
+                    mx = mx.max(v);
+                }
+                Ok((sumsq, mn, mx))
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // bfs_expand
+    // ------------------------------------------------------------------
+
+    /// Fused pancake frontier expansion: for every nibble-packed
+    /// permutation in `frontier` (size `n`, `n` ∈ 2..=16), generate all
+    /// `n-1` prefix reversals with packed code, fingerprint and
+    /// destination bucket.
+    ///
+    /// XLA path available for `n` with a lowered `bfs_expand_n{n}`
+    /// artifact (6..=12 by default); other sizes fall back to Rust.
+    pub fn bfs_expand(&self, frontier: &[u64], n: usize, nbuckets: u32) -> Result<Expansion> {
+        assert!((2..=16).contains(&n));
+        match &self.backend {
+            Backend::Xla(engine) if engine.has(&format!("bfs_expand_n{n}")) => {
+                let name = format!("bfs_expand_n{n}");
+                let out_per = n - 1;
+                let mut exp = Expansion {
+                    packed: Vec::with_capacity(frontier.len() * out_per),
+                    fp: Vec::with_capacity(frontier.len() * out_per),
+                    bucket: Vec::with_capacity(frontier.len() * out_per),
+                };
+                let identity = crate::apps::pancake::identity_packed(n);
+                for chunk in frontier.chunks(BFS_BATCH) {
+                    // Packed codes are the wire format; pad with identity.
+                    let mut codes = chunk.to_vec();
+                    codes.resize(BFS_BATCH, identity);
+                    let out = engine.run(
+                        &name,
+                        vec![
+                            TensorBuf::u64_1d(codes),
+                            TensorBuf::u64_1d(vec![nbuckets as u64]),
+                        ],
+                    )?;
+                    // outputs: packed u64[B,n-1], fp u64[B,n-1],
+                    // bucket u64[B,n-1]
+                    let mut it = out.into_iter();
+                    let packed = it.next().expect("packed").into_u64()?;
+                    let fp = it.next().expect("fp").into_u64()?;
+                    let bucket = it.next().expect("bucket").into_u64()?;
+                    let real = chunk.len() * out_per;
+                    exp.packed.extend_from_slice(&packed[..real]);
+                    exp.fp.extend_from_slice(&fp[..real]);
+                    exp.bucket.extend(bucket[..real].iter().map(|&b| b as u32));
+                }
+                Ok(exp)
+            }
+            _ => {
+                let out_per = n - 1;
+                let mut exp = Expansion {
+                    packed: Vec::with_capacity(frontier.len() * out_per),
+                    fp: Vec::with_capacity(frontier.len() * out_per),
+                    bucket: Vec::with_capacity(frontier.len() * out_per),
+                };
+                for &code in frontier {
+                    for k in 2..=n {
+                        let nbr = crate::apps::pancake::flip_packed(code, k as u32);
+                        let fp = hashfn::fp_words(&[nbr]);
+                        exp.packed.push(nbr);
+                        exp.fp.push(fp);
+                        exp.bucket.push(hashfn::bucket_of(fp, nbuckets));
+                    }
+                }
+                Ok(exp)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::pancake;
+
+    fn xla_accel() -> Option<Accel> {
+        let dir = std::path::Path::new("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            Some(Accel::xla(Arc::new(Engine::load(dir).unwrap())))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn rust_hash_partition_matches_hashfn() {
+        let a = Accel::rust();
+        let words: Vec<u64> = (0..100).map(|i| i * 7 + 1).collect();
+        let (fp, bk) = a.hash_partition(&words, 1, 16).unwrap();
+        for i in 0..100 {
+            assert_eq!(fp[i], hashfn::fp_words(&[words[i]]));
+            assert_eq!(bk[i], hashfn::bucket_of(fp[i], 16));
+        }
+    }
+
+    #[test]
+    fn rust_prefix_scan_wraps() {
+        let a = Accel::rust();
+        let (scan, total) = a.prefix_scan(&[1, 2, 3, -1]).unwrap();
+        assert_eq!(scan, vec![1, 3, 6, 5]);
+        assert_eq!(total, 5);
+        let (scan, _) = a.prefix_scan(&[i64::MAX, 1]).unwrap();
+        assert_eq!(scan[1], i64::MIN); // wrapping
+    }
+
+    #[test]
+    fn rust_reduce_identities_and_values() {
+        let a = Accel::rust();
+        let (s, mn, mx) = a.reduce_sumsq(&[]).unwrap();
+        assert_eq!((s, mn, mx), (0, i64::MAX, i64::MIN));
+        let (s, mn, mx) = a.reduce_sumsq(&[-3, 2, 5]).unwrap();
+        assert_eq!((s, mn, mx), (9 + 4 + 25, -3, 5));
+    }
+
+    #[test]
+    fn rust_bfs_expand_small() {
+        let a = Accel::rust();
+        let id = pancake::pack_perm(&[0, 1, 2]);
+        let exp = a.bfs_expand(&[id], 3, 8).unwrap();
+        assert_eq!(exp.packed.len(), 2);
+        // flip2: (1,0,2); flip3: (2,1,0)
+        assert_eq!(exp.packed[0], pancake::pack_perm(&[1, 0, 2]));
+        assert_eq!(exp.packed[1], pancake::pack_perm(&[2, 1, 0]));
+        for i in 0..2 {
+            assert_eq!(exp.fp[i], hashfn::fp_words(&[exp.packed[i]]));
+            assert!(exp.bucket[i] < 8);
+        }
+    }
+
+    // ---- XLA vs Rust equivalence (skipped when artifacts are absent) ----
+
+    #[test]
+    fn xla_hash_partition_matches_rust_with_padding() {
+        let Some(xla) = xla_accel() else { return };
+        let rust = Accel::rust();
+        // deliberately not a multiple of HASH_BATCH: exercises padding
+        let words: Vec<u64> = (0..5003u64).map(|i| i.wrapping_mul(0x12345)).collect();
+        let (f1, b1) = xla.hash_partition(&words, 1, 37).unwrap();
+        let (f2, b2) = rust.hash_partition(&words, 1, 37).unwrap();
+        assert_eq!(f1, f2);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn xla_hash_partition_k2_matches_rust() {
+        let Some(xla) = xla_accel() else { return };
+        let rust = Accel::rust();
+        let words: Vec<u64> = (0..2000u64).collect();
+        let (f1, b1) = xla.hash_partition(&words, 2, 9).unwrap();
+        let (f2, b2) = rust.hash_partition(&words, 2, 9).unwrap();
+        assert_eq!(f1, f2);
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn xla_prefix_scan_matches_rust_across_batches() {
+        let Some(xla) = xla_accel() else { return };
+        let rust = Accel::rust();
+        let x: Vec<i64> = (0..10_000).map(|i| (i as i64 % 97) - 48).collect();
+        let (s1, t1) = xla.prefix_scan(&x).unwrap();
+        let (s2, t2) = rust.prefix_scan(&x).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn xla_reduce_matches_rust_with_padding() {
+        let Some(xla) = xla_accel() else { return };
+        let rust = Accel::rust();
+        let x: Vec<i64> = (0..5001).map(|i| (i as i64) - 2500).collect();
+        assert_eq!(xla.reduce_sumsq(&x).unwrap(), rust.reduce_sumsq(&x).unwrap());
+    }
+
+    #[test]
+    fn xla_bfs_expand_matches_rust() {
+        let Some(xla) = xla_accel() else { return };
+        let rust = Accel::rust();
+        let n = 8;
+        // a few hundred random perms, not a BFS_BATCH multiple
+        let mut rng = crate::testutil::Rng::new(7);
+        let frontier: Vec<u64> =
+            (0..300).map(|_| pancake::pack_perm(&rng.permutation(n))).collect();
+        let e1 = xla.bfs_expand(&frontier, n, 64).unwrap();
+        let e2 = rust.bfs_expand(&frontier, n, 64).unwrap();
+        assert_eq!(e1.packed, e2.packed);
+        assert_eq!(e1.fp, e2.fp);
+        assert_eq!(e1.bucket, e2.bucket);
+    }
+}

@@ -1,0 +1,10 @@
+//! Applications built on the Roomy API.
+//!
+//! [`pancake`] is the paper's flagship workload: solving the pancake
+//! sorting problem ("how many prefix reversals suffice to sort any stack
+//! of n pancakes?") by disk-based breadth-first search over the implicit
+//! Cayley graph of prefix reversals — with all three data-structure
+//! variants the paper mentions, plus an in-RAM reference baseline.
+
+pub mod pancake;
+pub mod rubik;

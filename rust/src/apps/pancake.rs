@@ -1,0 +1,401 @@
+//! Pancake sorting by breadth-first search (paper §3).
+//!
+//! The state space is the symmetric group S_n; edges are prefix reversals
+//! of length 2..=n. BFS from the identity yields, per level d, the number
+//! of permutations needing exactly d flips; the deepest non-empty level is
+//! the *pancake number* f(n).
+//!
+//! Encodings:
+//! - **packed**: nibble-packed permutation in a `u64` (n ≤ 16) — the list
+//!   and hash-table BFS variants use this, and it is the exact encoding
+//!   the XLA `bfs_expand` kernel produces;
+//! - **rank**: Lehmer-code rank in `0..n!` — the bit-array variant indexes
+//!   a RoomyBitArray of n! one-bit "seen" flags with it.
+//!
+//! Three Roomy BFS variants (paper: "Three different solutions to the
+//! pancake sorting problem, each using one of the three Roomy data
+//! structures") plus [`reference_bfs`], an in-RAM baseline used both for
+//! validation and as the RAM-vs-disk comparator in the benches.
+
+use std::sync::Mutex;
+
+use crate::accel::Accel;
+use crate::constructs::bfs::{self, LevelStats};
+use crate::error::Result;
+use crate::roomy::Roomy;
+
+/// Known pancake numbers f(n) (max flips to sort any stack of n), n = 1..
+/// OEIS A058986.
+pub const PANCAKE_NUMBERS: &[u64] = &[0, 1, 3, 4, 5, 7, 8, 9, 10, 11, 13];
+
+/// Pancake number for `n` if known (n ≤ 11).
+pub fn pancake_number(n: usize) -> Option<u64> {
+    PANCAKE_NUMBERS.get(n - 1).copied()
+}
+
+/// n! as u64 (n ≤ 20).
+pub fn factorial(n: usize) -> u64 {
+    (1..=n as u64).product()
+}
+
+// ---------------------------------------------------------------------
+// Permutation encodings
+// ---------------------------------------------------------------------
+
+/// Nibble-pack a permutation of `0..n` (n ≤ 16).
+pub fn pack_perm(perm: &[u8]) -> u64 {
+    debug_assert!(perm.len() <= 16);
+    let mut out = 0u64;
+    for (i, &d) in perm.iter().enumerate() {
+        out |= (d as u64) << (4 * i);
+    }
+    out
+}
+
+/// Unpack a nibble-packed permutation of size `n`.
+pub fn unpack_perm(code: u64, n: usize) -> Vec<u8> {
+    (0..n).map(|i| ((code >> (4 * i)) & 0xF) as u8).collect()
+}
+
+/// The identity permutation of size `n`, packed.
+pub fn identity_packed(n: usize) -> u64 {
+    pack_perm(&(0..n as u8).collect::<Vec<_>>())
+}
+
+/// Reverse the first `k` nibbles of a packed permutation — one pancake
+/// flip, entirely in registers. Twin of the gather in the Pallas kernel.
+pub fn flip_packed(code: u64, k: u32) -> u64 {
+    debug_assert!(k >= 1);
+    let bits = 4 * k;
+    let mask: u64 = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut head = code & mask;
+    // Reverse nibbles of `head` within k positions.
+    let mut rev = 0u64;
+    for _ in 0..k {
+        rev = (rev << 4) | (head & 0xF);
+        head >>= 4;
+    }
+    (code & !mask) | rev
+}
+
+/// All `n-1` prefix-reversal neighbors of a packed permutation.
+pub fn neighbors_packed(code: u64, n: usize, out: &mut Vec<u64>) {
+    out.clear();
+    for k in 2..=n as u32 {
+        out.push(flip_packed(code, k));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lehmer rank / unrank (array-variant state indexing)
+// ---------------------------------------------------------------------
+
+/// Rank of a permutation of `0..n` in `0..n!` (Lehmer code, O(n²) —
+/// fine for n ≤ 16).
+pub fn rank_perm(perm: &[u8]) -> u64 {
+    let n = perm.len();
+    let mut rank = 0u64;
+    for i in 0..n {
+        let mut smaller = 0u64;
+        for j in (i + 1)..n {
+            if perm[j] < perm[i] {
+                smaller += 1;
+            }
+        }
+        rank += smaller * factorial(n - 1 - i);
+    }
+    rank
+}
+
+/// Inverse of [`rank_perm`].
+pub fn unrank_perm(mut rank: u64, n: usize) -> Vec<u8> {
+    let mut digits: Vec<u8> = (0..n as u8).collect();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let f = factorial(n - 1 - i);
+        let idx = (rank / f) as usize;
+        rank %= f;
+        out.push(digits.remove(idx));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// In-RAM reference BFS (validation + RAM baseline)
+// ---------------------------------------------------------------------
+
+/// Level sizes of the pancake graph BFS from the identity, computed
+/// entirely in RAM with a bitset over ranks. Practical to n = 11 or so.
+pub fn reference_bfs(n: usize) -> Vec<u64> {
+    assert!((1..=12).contains(&n), "reference BFS supports n <= 12");
+    let total = factorial(n);
+    let mut seen = vec![false; total as usize];
+    let start = identity_packed(n);
+    seen[rank_perm(&unpack_perm(start, n)) as usize] = true;
+    let mut cur = vec![start];
+    let mut levels = vec![1u64];
+    let mut nbrs = Vec::new();
+    while !cur.is_empty() {
+        let mut next = Vec::new();
+        for &code in &cur {
+            neighbors_packed(code, n, &mut nbrs);
+            for &nb in &nbrs {
+                let r = rank_perm(&unpack_perm(nb, n)) as usize;
+                if !seen[r] {
+                    seen[r] = true;
+                    next.push(nb);
+                }
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        levels.push(next.len() as u64);
+        cur = next;
+    }
+    levels
+}
+
+// ---------------------------------------------------------------------
+// Roomy BFS variants
+// ---------------------------------------------------------------------
+
+/// Which Roomy data structure drives the BFS (paper §3 final paragraph).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Structure {
+    /// RoomyList of packed states: dedupe by external sort (`removeDupes`
+    /// + `removeAll`) — the paper's §3 pseudocode.
+    List,
+    /// RoomyBitArray of n! seen-bits indexed by Lehmer rank.
+    Array,
+    /// RoomyHashTable state → BFS level.
+    Hash,
+}
+
+/// Disk-based pancake BFS. Returns per-level state counts.
+///
+/// `accel` drives the batched frontier expansion (XLA or Rust — bit-exact
+/// either way). Expansion is batched through [`Accel::bfs_expand`] for the
+/// List/Hash variants; the Array variant expands per element to exercise
+/// the per-element API as in the paper's pseudocode.
+pub fn roomy_bfs(r: &Roomy, n: usize, structure: Structure, accel: &Accel) -> Result<LevelStats> {
+    assert!((2..=16).contains(&n));
+    match structure {
+        Structure::List => bfs_list(r, n, accel),
+        Structure::Hash => bfs_hash(r, n, accel),
+        Structure::Array => bfs_array(r, n),
+    }
+}
+
+/// RoomyList variant — the paper's §3 BFS pseudocode, with the frontier
+/// expansion batched through the accel kernel.
+fn bfs_list(r: &Roomy, n: usize, accel: &Accel) -> Result<LevelStats> {
+    let start = identity_packed(n);
+    bfs::bfs_list_batched(r, "pancake", &[start], |frontier, out| {
+        let exp = accel.bfs_expand(frontier, n, r.cluster().nbuckets())?;
+        out.extend_from_slice(&exp.packed);
+        Ok(())
+    })
+}
+
+/// RoomyHashTable variant: state → level, insert-if-absent emits to next.
+fn bfs_hash(r: &Roomy, n: usize, accel: &Accel) -> Result<LevelStats> {
+    let start = identity_packed(n);
+    bfs::bfs_hash_batched(r, "pancakeh", &[start], |frontier, out| {
+        let exp = accel.bfs_expand(frontier, n, r.cluster().nbuckets())?;
+        out.extend_from_slice(&exp.packed);
+        Ok(())
+    })
+}
+
+/// RoomyBitArray variant: one seen-bit per Lehmer rank, frontier as lists
+/// of packed states ("elements can be as small as one bit").
+fn bfs_array(r: &Roomy, n: usize) -> Result<LevelStats> {
+    let total = factorial(n);
+    let seen = r.bit_array("pancakea_seen", total, 1)?;
+    let start = identity_packed(n);
+
+    let mut levels = vec![1u64];
+    let mut level_no = 0u32;
+    // Mark the start.
+    let mark = seen.register_update(|_i, _cur, _p: &()| 1);
+    seen.update(rank_perm(&unpack_perm(start, n)), &(), mark)?;
+    seen.sync()?;
+
+    let mut cur = r.list::<u64>(&format!("pancakea_lev{level_no}"))?;
+    cur.add(&start)?;
+    cur.sync()?;
+
+    loop {
+        level_no += 1;
+        let next = r.list::<u64>(&format!("pancakea_lev{level_no}"))?;
+        // visit: set seen bit; newly-seen states go to `next` (the
+        // passed value carries the packed state whose rank is `i`).
+        let next_emit = next.clone();
+        let visit = seen.register_update(move |_i, cur_bit, packed: &u64| {
+            if cur_bit == 0 {
+                next_emit.add(packed).expect("emit to next level");
+            }
+            1
+        });
+        // Expand the frontier: per-element neighbor generation (paper
+        // pseudocode shape), issuing one delayed update per neighbor.
+        let seen2 = seen.clone();
+        let nbuf = Mutex::new(Vec::new());
+        cur.map(move |&code| {
+            let mut nbrs = nbuf.lock().unwrap();
+            neighbors_packed(code, n, &mut nbrs);
+            for &nb in nbrs.iter() {
+                let rank = rank_perm(&unpack_perm(nb, n));
+                seen2.update(rank, &nb, visit).expect("stage visit");
+            }
+        })?;
+        seen.sync()?;
+        next.sync()?;
+
+        let found = next.size();
+        let old_name = cur.name().to_string();
+        cur.destroy()?;
+        r.release_name(&old_name);
+        if found == 0 {
+            let next_name = next.name().to_string();
+            next.destroy()?;
+            r.release_name(&next_name);
+            break;
+        }
+        levels.push(found);
+        cur = next;
+    }
+    let seen_count = seen.count_value(1);
+    seen.destroy()?;
+    r.release_name("pancakea_seen");
+    Ok(LevelStats { levels, total: seen_count })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop_check, tmpdir};
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        prop_check("pancake pack roundtrip", 30, |rng| {
+            let n = rng.range(1, 17);
+            let p = rng.permutation(n);
+            assert_eq!(unpack_perm(pack_perm(&p), n), p);
+        });
+    }
+
+    #[test]
+    fn flip_packed_matches_slice_reverse() {
+        prop_check("flip_packed vs slice reverse", 40, |rng| {
+            let n = rng.range(2, 17);
+            let p = rng.permutation(n);
+            let k = rng.range(2, n + 1);
+            let mut expect = p.clone();
+            expect[..k].reverse();
+            assert_eq!(
+                flip_packed(pack_perm(&p), k as u32),
+                pack_perm(&expect),
+                "n={n} k={k} p={p:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn flip_is_involution() {
+        prop_check("flip involution", 20, |rng| {
+            let n = rng.range(2, 17);
+            let code = pack_perm(&rng.permutation(n));
+            let k = rng.range(2, n + 1) as u32;
+            assert_eq!(flip_packed(flip_packed(code, k), k), code);
+        });
+    }
+
+    #[test]
+    fn rank_unrank_roundtrip_and_order() {
+        for n in 1..=6 {
+            let total = factorial(n);
+            let mut seen = std::collections::HashSet::new();
+            for r in 0..total {
+                let p = unrank_perm(r, n);
+                assert_eq!(rank_perm(&p), r, "n={n} r={r}");
+                assert!(seen.insert(p), "duplicate perm at rank {r}");
+            }
+        }
+        // identity has rank 0
+        assert_eq!(rank_perm(&[0, 1, 2, 3]), 0);
+    }
+
+    #[test]
+    fn reference_bfs_small_known_values() {
+        // n=1: [1]; n=2: [1,1]; n=3: levels sum to 6, depth 3
+        assert_eq!(reference_bfs(1), vec![1]);
+        assert_eq!(reference_bfs(2), vec![1, 1]);
+        let l3 = reference_bfs(3);
+        assert_eq!(l3.iter().sum::<u64>(), 6);
+        assert_eq!(l3.len() as u64 - 1, 3); // f(3) = 3
+        assert_eq!(l3, vec![1, 2, 2, 1]);
+    }
+
+    #[test]
+    fn reference_bfs_matches_pancake_numbers() {
+        for n in 2..=7 {
+            let levels = reference_bfs(n);
+            assert_eq!(levels.iter().sum::<u64>(), factorial(n), "covers S_{n}");
+            assert_eq!(
+                levels.len() as u64 - 1,
+                pancake_number(n).unwrap(),
+                "pancake number f({n})"
+            );
+        }
+    }
+
+    #[test]
+    fn roomy_bfs_list_matches_reference_n5() {
+        let t = tmpdir("pk_list5");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let stats = roomy_bfs(&r, 5, Structure::List, &Accel::rust()).unwrap();
+        assert_eq!(stats.levels, reference_bfs(5));
+        assert_eq!(stats.total, factorial(5));
+    }
+
+    #[test]
+    fn roomy_bfs_hash_matches_reference_n5() {
+        let t = tmpdir("pk_hash5");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let stats = roomy_bfs(&r, 5, Structure::Hash, &Accel::rust()).unwrap();
+        assert_eq!(stats.levels, reference_bfs(5));
+        assert_eq!(stats.total, factorial(5));
+    }
+
+    #[test]
+    fn roomy_bfs_array_matches_reference_n5() {
+        let t = tmpdir("pk_arr5");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let stats = roomy_bfs(&r, 5, Structure::Array, &Accel::rust()).unwrap();
+        assert_eq!(stats.levels, reference_bfs(5));
+        assert_eq!(stats.total, factorial(5));
+    }
+
+    #[test]
+    fn roomy_bfs_all_variants_agree_n6() {
+        let t = tmpdir("pk_all6");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let expect = reference_bfs(6);
+        for (i, s) in [Structure::List, Structure::Hash, Structure::Array]
+            .into_iter()
+            .enumerate()
+        {
+            // fresh namespace per variant
+            let t2 = tmpdir(&format!("pk_all6_{i}"));
+            let r2 = if i == 0 {
+                r.clone()
+            } else {
+                Roomy::open(crate::RoomyConfig::for_testing(t2.path())).unwrap()
+            };
+            let stats = roomy_bfs(&r2, 6, s, &Accel::rust()).unwrap();
+            assert_eq!(stats.levels, expect, "variant {s:?}");
+        }
+    }
+}

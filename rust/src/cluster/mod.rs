@@ -1,0 +1,288 @@
+//! Simulated compute cluster: one node per worker thread, each with its own
+//! local disk directory; a leader (the calling thread) drives collective
+//! operations.
+//!
+//! Roomy is bulk-synchronous: every collective (sync, map, reduce, sort,
+//! shuffle) is "leader fans a job out to all nodes, nodes stream their
+//! local shards, barrier". [`Cluster::run`] implements exactly that with
+//! scoped threads, preserving the paper's topology — node-local data,
+//! explicit cross-node shuffle files — while staying laptop-runnable
+//! (DESIGN.md, Substitutions).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::RoomyConfig;
+use crate::error::{Result, RoomyError};
+use crate::metrics::{IoSnapshot, PhaseTimes};
+use crate::storage::NodeDisk;
+
+/// A simulated cluster: `workers` nodes, each owning one [`NodeDisk`].
+#[derive(Debug)]
+pub struct Cluster {
+    disks: Vec<Arc<NodeDisk>>,
+    buckets_per_worker: usize,
+    phases: PhaseTimes,
+}
+
+impl Cluster {
+    /// Bring up the cluster: create one disk directory per node under
+    /// `cfg.root`.
+    pub fn new(cfg: &RoomyConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut disks = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let dir = cfg.root.join(format!("node{w}"));
+            disks.push(Arc::new(NodeDisk::create(w, dir, cfg.disk)?));
+        }
+        Ok(Cluster {
+            disks,
+            buckets_per_worker: cfg.buckets_per_worker,
+            phases: PhaseTimes::new(),
+        })
+    }
+
+    /// Number of nodes.
+    pub fn nworkers(&self) -> usize {
+        self.disks.len()
+    }
+
+    /// Total bucket count every structure on this cluster is split into.
+    pub fn nbuckets(&self) -> u32 {
+        (self.disks.len() * self.buckets_per_worker) as u32
+    }
+
+    /// The node that owns bucket `b` (round-robin: balances buckets and,
+    /// with a good hash, bytes across disks).
+    pub fn owner(&self, bucket: u32) -> usize {
+        (bucket as usize) % self.disks.len()
+    }
+
+    /// Buckets owned by `node`, ascending.
+    pub fn buckets_of(&self, node: usize) -> impl Iterator<Item = u32> + '_ {
+        let w = self.nworkers();
+        (0..self.nbuckets()).filter(move |b| (*b as usize) % w == node)
+    }
+
+    /// Disk of node `w`.
+    pub fn disk(&self, w: usize) -> &Arc<NodeDisk> {
+        &self.disks[w]
+    }
+
+    /// All node disks.
+    pub fn disks(&self) -> &[Arc<NodeDisk>] {
+        &self.disks
+    }
+
+    /// Phase-time accumulator (sync breakdowns for the benches).
+    pub fn phases(&self) -> &PhaseTimes {
+        &self.phases
+    }
+
+    /// Run `job(node, disk)` on every node in parallel and collect results
+    /// in node order. The closure runs on a scoped worker thread — this is
+    /// the leader-fan-out / barrier collective of the paper.
+    ///
+    /// Wall time is charged to phase `phase`.
+    pub fn run<R, F>(&self, phase: &str, job: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(usize, &NodeDisk) -> Result<R> + Sync,
+    {
+        self.phases.time(phase, || {
+            let results: Vec<std::thread::Result<Result<R>>> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = self
+                        .disks
+                        .iter()
+                        .enumerate()
+                        .map(|(w, disk)| {
+                            let job = &job;
+                            scope.spawn(move || job(w, disk))
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join()).collect()
+                });
+            let mut out = Vec::with_capacity(results.len());
+            for (w, r) in results.into_iter().enumerate() {
+                match r {
+                    Ok(Ok(v)) => out.push(v),
+                    Ok(Err(e)) => return Err(e),
+                    Err(_) => {
+                        return Err(RoomyError::WorkerPanic {
+                            worker: w,
+                            phase: phase.to_string(),
+                        })
+                    }
+                }
+            }
+            Ok(out)
+        })
+    }
+
+    /// Like [`Cluster::run`] but the job iterates the node's owned buckets
+    /// itself; provided for the common per-bucket collective shape.
+    pub fn run_buckets<R, F>(&self, phase: &str, job: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(u32, &NodeDisk) -> Result<R> + Sync,
+    {
+        let nested: Vec<Vec<R>> = self.run(phase, |w, disk| {
+            let mut acc = Vec::new();
+            for b in self.buckets_of(w) {
+                acc.push(job(b, disk)?);
+            }
+            Ok(acc)
+        })?;
+        Ok(nested.into_iter().flatten().collect())
+    }
+
+    /// Aggregate I/O across all node disks.
+    pub fn io_snapshot(&self) -> IoSnapshot {
+        self.disks
+            .iter()
+            .map(|d| d.stats().snapshot())
+            .fold(IoSnapshot::default(), |a, b| a + b)
+    }
+
+    /// Per-node I/O snapshots.
+    pub fn per_node_io(&self) -> Vec<IoSnapshot> {
+        self.disks.iter().map(|d| d.stats().snapshot()).collect()
+    }
+
+    /// Reset all I/O counters and phase times (bench harness support).
+    pub fn reset_metrics(&self) {
+        for d in &self.disks {
+            d.stats().reset();
+        }
+        self.phases.reset();
+    }
+
+    /// Remove a structure directory on every node.
+    pub fn remove_structure_dirs(&self, rel: impl AsRef<Path> + Sync) -> Result<()> {
+        self.run("teardown", |_w, disk| disk.remove_dir(rel.as_ref()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::tmpdir;
+
+    fn cluster(workers: usize, bpw: usize, root: &Path) -> Cluster {
+        let mut cfg = RoomyConfig::for_testing(root);
+        cfg.workers = workers;
+        cfg.buckets_per_worker = bpw;
+        Cluster::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn creates_node_dirs() {
+        let t = tmpdir("cluster_dirs");
+        let c = cluster(3, 2, t.path());
+        assert_eq!(c.nworkers(), 3);
+        assert_eq!(c.nbuckets(), 6);
+        for w in 0..3 {
+            assert!(t.path().join(format!("node{w}")).is_dir());
+        }
+    }
+
+    #[test]
+    fn run_returns_results_in_node_order() {
+        let t = tmpdir("cluster_run");
+        let c = cluster(4, 1, t.path());
+        let out = c.run("ids", |w, _| Ok(w * 10)).unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn run_parallelism_is_real() {
+        // All workers must be in-flight simultaneously: have each wait for
+        // a shared barrier that only opens when all arrive.
+        let t = tmpdir("cluster_par");
+        let c = cluster(4, 1, t.path());
+        let barrier = std::sync::Barrier::new(4);
+        c.run("barrier", |_w, _| {
+            barrier.wait();
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn run_propagates_errors() {
+        let t = tmpdir("cluster_err");
+        let c = cluster(2, 1, t.path());
+        let r: Result<Vec<()>> = c.run("boom", |w, _| {
+            if w == 1 {
+                Err(RoomyError::InvalidArg("boom".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn run_surfaces_panics_as_errors() {
+        let t = tmpdir("cluster_panic");
+        let c = cluster(2, 1, t.path());
+        let r: Result<Vec<()>> = c.run("panic", |w, _| {
+            if w == 0 {
+                panic!("worker exploded");
+            }
+            Ok(())
+        });
+        match r {
+            Err(RoomyError::WorkerPanic { worker, .. }) => assert_eq!(worker, 0),
+            other => panic!("expected WorkerPanic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bucket_ownership_partitions_all_buckets() {
+        let t = tmpdir("cluster_owner");
+        let c = cluster(3, 4, t.path());
+        let mut seen = vec![false; c.nbuckets() as usize];
+        for w in 0..c.nworkers() {
+            for b in c.buckets_of(w) {
+                assert_eq!(c.owner(b), w);
+                assert!(!seen[b as usize], "bucket {b} owned twice");
+                seen[b as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every bucket must be owned");
+    }
+
+    #[test]
+    fn run_buckets_covers_every_bucket_once() {
+        let t = tmpdir("cluster_rb");
+        let c = cluster(2, 3, t.path());
+        let mut buckets = c.run_buckets("collect", |b, _| Ok(b)).unwrap();
+        buckets.sort();
+        assert_eq!(buckets, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn io_snapshot_aggregates_nodes() {
+        let t = tmpdir("cluster_io");
+        let c = cluster(2, 1, t.path());
+        c.run("write", |w, disk| {
+            disk.write_all(format!("f{w}.dat"), &[0u8; 100])
+        })
+        .unwrap();
+        let s = c.io_snapshot();
+        assert_eq!(s.bytes_written, 200);
+        c.reset_metrics();
+        assert_eq!(c.io_snapshot().bytes_written, 0);
+    }
+
+    #[test]
+    fn phase_times_recorded() {
+        let t = tmpdir("cluster_phase");
+        let c = cluster(2, 1, t.path());
+        c.run("phase_x", |_, _| Ok(())).unwrap();
+        assert!(c.phases().get("phase_x").is_some());
+    }
+}

@@ -1,0 +1,188 @@
+//! Runtime configuration for a Roomy instance.
+//!
+//! Roomy's knobs follow the paper's model: a cluster of `workers` nodes,
+//! each contributing its local disk; every data structure is split into
+//! `workers * buckets_per_worker` buckets, where one bucket is the unit
+//! that must fit in RAM during a `sync` (paper §2: buckets are how Arrays
+//! and HashTables avoid the external sorts that dominate RoomyList work).
+
+use std::path::PathBuf;
+
+/// Simulated disk performance model, used by the bandwidth/latency
+/// experiments (E1/E2) to reproduce the paper's 2010-era disk regime
+/// (~100 MB/s streaming, ~5 ms seek) on modern hardware.
+///
+/// `None` bandwidths disable throttling (full host speed). The throttle is
+/// applied in [`crate::storage::diskio`] at the metered read/write calls;
+/// seek penalties are charged per file open and per reposition.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiskPolicy {
+    /// Streaming read bandwidth cap, bytes/second.
+    pub read_bps: Option<u64>,
+    /// Streaming write bandwidth cap, bytes/second.
+    pub write_bps: Option<u64>,
+    /// Seek penalty charged on every file open / reposition, microseconds.
+    pub seek_us: u64,
+}
+
+impl DiskPolicy {
+    /// No throttling: run at host disk/page-cache speed (the default).
+    pub const fn unthrottled() -> Self {
+        DiskPolicy { read_bps: None, write_bps: None, seek_us: 0 }
+    }
+
+    /// The paper's commodity-disk regime: 100 MB/s streaming, 5 ms seek.
+    pub const fn paper_2010() -> Self {
+        DiskPolicy {
+            read_bps: Some(100 * 1000 * 1000),
+            write_bps: Some(100 * 1000 * 1000),
+            seek_us: 5_000,
+        }
+    }
+
+    /// True if any throttling is enabled.
+    pub fn is_throttled(&self) -> bool {
+        self.read_bps.is_some() || self.write_bps.is_some() || self.seek_us > 0
+    }
+}
+
+impl Default for DiskPolicy {
+    fn default() -> Self {
+        Self::unthrottled()
+    }
+}
+
+/// Which implementation backs the numeric batch kernels in [`crate::accel`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccelMode {
+    /// Pure-Rust fallbacks (always available; bit-exact with the XLA path).
+    Rust,
+    /// AOT-compiled XLA artifacts from `artifacts/` via PJRT.
+    Xla,
+    /// Use XLA when the artifacts directory is present, Rust otherwise.
+    Auto,
+}
+
+/// Configuration for a [`crate::Roomy`] instance.
+#[derive(Debug, Clone)]
+pub struct RoomyConfig {
+    /// Number of simulated cluster nodes (worker threads), each with its
+    /// own disk directory. Paper: one process per cluster node.
+    pub workers: usize,
+    /// Buckets per worker. More buckets = smaller RAM-resident unit per
+    /// sync and finer shuffle granularity.
+    pub buckets_per_worker: usize,
+    /// Root directory under which per-node disk directories are created.
+    pub root: PathBuf,
+    /// Staged delayed-op bytes per bucket before spilling to disk.
+    pub op_buffer_bytes: usize,
+    /// In-RAM run size for external sort (bytes).
+    pub sort_chunk_bytes: usize,
+    /// RAM budget per worker for hash-set based `remove_all` before
+    /// falling back to sort-merge difference (bytes).
+    pub ram_budget_bytes: usize,
+    /// Simulated disk performance model.
+    pub disk: DiskPolicy,
+    /// Numeric batch kernel backend.
+    pub accel: AccelMode,
+    /// Directory holding AOT artifacts (`make artifacts`).
+    pub artifacts_dir: PathBuf,
+}
+
+impl RoomyConfig {
+    /// A small configuration rooted at a fresh temp directory, suitable for
+    /// tests and examples.
+    pub fn for_testing(root: impl Into<PathBuf>) -> Self {
+        RoomyConfig {
+            workers: 4,
+            buckets_per_worker: 2,
+            root: root.into(),
+            op_buffer_bytes: 64 * 1024,
+            sort_chunk_bytes: 4 * 1024 * 1024,
+            ram_budget_bytes: 64 * 1024 * 1024,
+            disk: DiskPolicy::unthrottled(),
+            accel: AccelMode::Rust,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+
+    /// Total bucket count for every structure created by this instance.
+    pub fn nbuckets(&self) -> usize {
+        self.workers * self.buckets_per_worker
+    }
+
+    /// Validate invariants; called by [`crate::Roomy::open`].
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.workers == 0 {
+            return Err(crate::RoomyError::InvalidArg("workers must be > 0".into()));
+        }
+        if self.buckets_per_worker == 0 {
+            return Err(crate::RoomyError::InvalidArg(
+                "buckets_per_worker must be > 0".into(),
+            ));
+        }
+        if self.nbuckets() > u32::MAX as usize {
+            return Err(crate::RoomyError::InvalidArg("too many buckets".into()));
+        }
+        if self.op_buffer_bytes == 0 || self.sort_chunk_bytes == 0 {
+            return Err(crate::RoomyError::InvalidArg(
+                "buffer sizes must be > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for RoomyConfig {
+    fn default() -> Self {
+        RoomyConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            buckets_per_worker: 4,
+            root: std::env::temp_dir().join("roomy"),
+            op_buffer_bytes: 4 * 1024 * 1024,
+            sort_chunk_bytes: 64 * 1024 * 1024,
+            ram_budget_bytes: 256 * 1024 * 1024,
+            disk: DiskPolicy::unthrottled(),
+            accel: AccelMode::Auto,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nbuckets_is_product() {
+        let mut c = RoomyConfig::for_testing("/tmp/x");
+        c.workers = 3;
+        c.buckets_per_worker = 5;
+        assert_eq!(c.nbuckets(), 15);
+    }
+
+    #[test]
+    fn validation_rejects_zero_workers() {
+        let mut c = RoomyConfig::for_testing("/tmp/x");
+        c.workers = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_buffers() {
+        let mut c = RoomyConfig::for_testing("/tmp/x");
+        c.op_buffer_bytes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn default_validates() {
+        RoomyConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_policy_is_throttled() {
+        assert!(DiskPolicy::paper_2010().is_throttled());
+        assert!(!DiskPolicy::unthrottled().is_throttled());
+    }
+}

@@ -1,0 +1,335 @@
+//! Breadth-first search over implicit graphs (paper §3, final construct).
+//!
+//! The graph is defined by start elements and a neighbor-generating
+//! function. Three drivers are provided:
+//!
+//! - [`bfs_list`] / [`bfs_list_batched`] — the paper's RoomyList
+//!   pseudocode: generate the next level with `map`, dedupe within the
+//!   level (`removeDupes`), subtract previous levels (`removeAll`), record
+//!   (`addAll`), rotate;
+//! - [`bfs_hash_batched`] — RoomyHashTable variant: state → level with
+//!   insert-if-absent detection (no sorting; paper §2's bucketing
+//!   argument);
+//! - the RoomyBitArray variant lives with its application
+//!   ([`crate::apps::pancake`]) since it needs a state-ranking function.
+//!
+//! Batched drivers collect the frontier into batches and call the
+//! generator once per batch, which is how the XLA `bfs_expand` kernel is
+//! driven.
+
+use std::sync::Mutex;
+
+use crate::error::Result;
+use crate::roomy::{Element, Roomy};
+
+/// Frontier batch size for the batched drivers (matches the AOT batch so
+/// a full batch is one PJRT call).
+pub const FRONTIER_BATCH: usize = 1024;
+
+/// Per-level result of a BFS run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LevelStats {
+    /// Number of states first reached at each level (level 0 = starts).
+    pub levels: Vec<u64>,
+    /// Total states reached.
+    pub total: u64,
+}
+
+impl LevelStats {
+    /// Eccentricity: index of the last non-empty level.
+    pub fn depth(&self) -> u64 {
+        self.levels.len() as u64 - 1
+    }
+}
+
+/// Paper §3 BFS with a per-element neighbor generator.
+pub fn bfs_list<T: Element>(
+    r: &Roomy,
+    prefix: &str,
+    starts: &[T],
+    gen: impl Fn(&T, &mut Vec<T>) + Sync,
+) -> Result<LevelStats> {
+    bfs_list_batched(r, prefix, starts, |batch, out| {
+        let mut nbrs = Vec::new();
+        for e in batch {
+            gen(e, &mut nbrs);
+            out.append(&mut nbrs);
+        }
+        Ok(())
+    })
+}
+
+/// Paper §3 BFS (RoomyList variant) with a batched generator: `gen_batch`
+/// receives a slice of frontier states and appends all their neighbors.
+pub fn bfs_list_batched<T: Element>(
+    r: &Roomy,
+    prefix: &str,
+    starts: &[T],
+    gen_batch: impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync,
+) -> Result<LevelStats> {
+    // Lists for all elements, current and next level (paper pseudocode).
+    let all = r.list::<T>(&format!("{prefix}_all"))?;
+    let mut cur = r.list::<T>(&format!("{prefix}_lev0"))?;
+    for s in starts {
+        all.add(s)?;
+        cur.add(s)?;
+    }
+    all.sync()?;
+    cur.sync()?;
+    all.remove_dupes()?;
+    cur.remove_dupes()?;
+
+    let mut levels = vec![cur.size()];
+    let mut lev = 0u32;
+    // Generate levels until no new states are found.
+    while cur.size() > 0 {
+        lev += 1;
+        let next = r.list::<T>(&format!("{prefix}_lev{lev}"))?;
+        expand_into(&cur, &next, &gen_batch)?;
+        next.sync()?;
+        // Detect duplicates within the next level...
+        next.remove_dupes()?;
+        // ...and duplicates from previous levels.
+        next.remove_all(&all)?;
+        // Record new elements.
+        all.add_all(&next)?;
+        // Rotate levels.
+        let name = cur.name().to_string();
+        cur.destroy()?;
+        r.release_name(&name);
+        if next.size() > 0 {
+            levels.push(next.size());
+        }
+        cur = next;
+    }
+    let name = cur.name().to_string();
+    cur.destroy()?;
+    r.release_name(&name);
+    let total = all.size();
+    let name = all.name().to_string();
+    all.destroy()?;
+    r.release_name(&name);
+    Ok(LevelStats { levels, total })
+}
+
+/// RoomyHashTable BFS: `state → level`, duplicate detection by
+/// insert-if-absent (bucketed, no external sorts).
+pub fn bfs_hash_batched<T: Element>(
+    r: &Roomy,
+    prefix: &str,
+    starts: &[T],
+    gen_batch: impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync,
+) -> Result<LevelStats> {
+    let table = r.hash_table::<T, u32>(&format!("{prefix}_levels"))?;
+    let mut cur = r.list::<T>(&format!("{prefix}_lev0"))?;
+
+    let mut lev = 0u32;
+    for s in starts {
+        table.insert(s, &0)?;
+        cur.add(s)?;
+    }
+    table.sync()?;
+    cur.sync()?;
+    cur.remove_dupes()?;
+    let mut levels = vec![table.size()];
+
+    while cur.size() > 0 {
+        lev += 1;
+        let next = r.list::<T>(&format!("{prefix}_lev{lev}"))?;
+        // visit: insert-if-absent; only first-time states emit to `next`
+        // (duplicate detection is free — no sorting, paper §2's bucketing
+        // argument).
+        let next_emit = next.clone();
+        let level_no = lev;
+        let visit = table.register_update(move |k: &T, cur_v: Option<&u32>, _p: &()| {
+            match cur_v {
+                Some(&v) => Some(v), // already known: keep its level
+                None => {
+                    next_emit.add(k).expect("emit to next level");
+                    Some(level_no)
+                }
+            }
+        });
+        // Batch-expand the frontier; each neighbor becomes one delayed
+        // table update.
+        let buf: Mutex<(Vec<T>, Vec<T>)> =
+            Mutex::new((Vec::with_capacity(FRONTIER_BATCH), Vec::new()));
+        let flush = |state: &mut (Vec<T>, Vec<T>)| -> Result<()> {
+            let (batch, out) = &mut *state;
+            if batch.is_empty() {
+                return Ok(());
+            }
+            out.clear();
+            gen_batch(batch, out)?;
+            for e in out.iter() {
+                table.update(e, &(), visit)?;
+            }
+            batch.clear();
+            Ok(())
+        };
+        cur.map(|e| {
+            let mut g = buf.lock().unwrap();
+            g.0.push(e.clone());
+            if g.0.len() >= FRONTIER_BATCH {
+                flush(&mut g).expect("frontier batch expansion");
+            }
+        })?;
+        flush(&mut buf.lock().unwrap())?;
+        table.sync()?; // visit functions emit next-level adds
+        next.sync()?;
+
+        let name = cur.name().to_string();
+        cur.destroy()?;
+        r.release_name(&name);
+        if next.size() > 0 {
+            levels.push(next.size());
+        }
+        cur = next;
+    }
+    let name = cur.name().to_string();
+    cur.destroy()?;
+    r.release_name(&name);
+    let total = table.size();
+    let name = table.name().to_string();
+    table.destroy()?;
+    r.release_name(&name);
+    Ok(LevelStats { levels, total })
+}
+
+/// Stream `cur`, batching elements and staging every generated neighbor
+/// as a delayed `next.add`.
+fn expand_into<T: Element>(
+    cur: &crate::roomy::RoomyList<T>,
+    next: &crate::roomy::RoomyList<T>,
+    gen_batch: &(impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync),
+) -> Result<()> {
+    let buf: Mutex<(Vec<T>, Vec<T>)> = Mutex::new((
+        Vec::with_capacity(FRONTIER_BATCH),
+        Vec::new(),
+    ));
+    let flush = |state: &mut (Vec<T>, Vec<T>)| -> Result<()> {
+        let (batch, out) = &mut *state;
+        if batch.is_empty() {
+            return Ok(());
+        }
+        out.clear();
+        gen_batch(batch, out)?;
+        for e in out.iter() {
+            next.add(e)?;
+        }
+        batch.clear();
+        Ok(())
+    };
+    cur.map(|e| {
+        let mut g = buf.lock().unwrap();
+        g.0.push(e.clone());
+        if g.0.len() >= FRONTIER_BATCH {
+            flush(&mut g).expect("frontier batch expansion");
+        }
+    })?;
+    flush(&mut buf.lock().unwrap())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::tmpdir;
+
+    fn mk(root: &std::path::Path) -> Roomy {
+        crate::Roomy::open(crate::RoomyConfig::for_testing(root)).unwrap()
+    }
+
+    /// Implicit path graph 0-1-2-...-(m-1): BFS from 0 has m levels of 1.
+    #[test]
+    fn path_graph_list() {
+        let t = tmpdir("bfs_path");
+        let r = mk(t.path());
+        let m = 10u64;
+        let stats = bfs_list(&r, "path", &[0u64], |&v, out| {
+            if v + 1 < m {
+                out.push(v + 1);
+            }
+            if v > 0 {
+                out.push(v - 1);
+            }
+        })
+        .unwrap();
+        assert_eq!(stats.levels, vec![1; m as usize]);
+        assert_eq!(stats.total, m);
+        assert_eq!(stats.depth(), m - 1);
+    }
+
+    /// Hypercube {0,1}^d: level k has C(d, k) states.
+    #[test]
+    fn hypercube_list() {
+        let t = tmpdir("bfs_cube");
+        let r = mk(t.path());
+        let d = 8u32;
+        let stats = bfs_list(&r, "cube", &[0u64], |&v, out| {
+            for b in 0..d {
+                out.push(v ^ (1 << b));
+            }
+        })
+        .unwrap();
+        let binom: Vec<u64> = (0..=d as u64).scan(1u64, |c, k| {
+            let out = *c;
+            *c = *c * (d as u64 - k) / (k + 1);
+            Some(out)
+        })
+        .collect();
+        assert_eq!(stats.levels, binom);
+        assert_eq!(stats.total, 1 << d);
+    }
+
+    #[test]
+    fn hypercube_hash_matches_list() {
+        let t = tmpdir("bfs_cube_hash");
+        let r = mk(t.path());
+        let d = 6u32;
+        let gen = |batch: &[u64], out: &mut Vec<u64>| {
+            for &v in batch {
+                for b in 0..d {
+                    out.push(v ^ (1 << b));
+                }
+            }
+            Ok(())
+        };
+        let stats = bfs_hash_batched(&r, "cubeh", &[0u64], gen).unwrap();
+        let binom: Vec<u64> = (0..=d as u64).scan(1u64, |c, k| {
+            let out = *c;
+            *c = *c * (d as u64 - k) / (k + 1);
+            Some(out)
+        })
+        .collect();
+        assert_eq!(stats.levels, binom);
+        assert_eq!(stats.total, 1 << d);
+    }
+
+    #[test]
+    fn disconnected_graph_stops() {
+        let t = tmpdir("bfs_disc");
+        let r = mk(t.path());
+        let stats = bfs_list(&r, "disc", &[5u64], |&v, out| {
+            out.push(v); // only self-loop
+        })
+        .unwrap();
+        assert_eq!(stats.levels, vec![1]);
+        assert_eq!(stats.total, 1);
+    }
+
+    #[test]
+    fn multiple_starts_deduped() {
+        let t = tmpdir("bfs_multi");
+        let r = mk(t.path());
+        let stats = bfs_list(&r, "multi", &[0u64, 0u64, 4u64], |&v, out| {
+            if v < 4 {
+                out.push(v + 1);
+            }
+        })
+        .unwrap();
+        // starts {0,4}; 0→1→2→3→4(dup)
+        assert_eq!(stats.total, 5);
+        assert_eq!(stats.levels[0], 2);
+    }
+}

@@ -1,0 +1,93 @@
+//! Chain reduction (paper §3): combine each array element with the one
+//! before it, all reads taken from the pre-sync state:
+//!
+//! ```text
+//! for i = 1 to N-1:  a[i] = combine(a[i], a[i-1])   // old values on RHS
+//! ```
+//!
+//! Implemented exactly as the paper's pseudocode: a `map` over the array
+//! issues one delayed `update` per successor element, carrying the old
+//! value as the passed datum; `sync` applies the batch. Determinism comes
+//! from Roomy's guarantee that no delayed update executes before `sync`
+//! (scatter-gather).
+
+use crate::error::Result;
+use crate::roomy::{Element, RoomyArray};
+
+/// In-place chain reduction: `a[i] = combine(a[i], a[i-1])` over pre-sync
+/// values, for all `i >= 1`.
+pub fn chain_reduce<T: Element>(
+    ra: &RoomyArray<T>,
+    combine: impl Fn(&T, &T) -> T + Send + Sync + 'static,
+) -> Result<()> {
+    let n = ra.len();
+    // doUpdate: new a[i] = combine(old a[i], old a[i-1]).
+    let do_update =
+        ra.register_update(move |_i, v: &mut T, prev: &T| *v = combine(v, prev));
+    // callUpdate: mapped over the array, issues the delayed updates.
+    let ra2 = ra.clone();
+    ra.map(move |i, v| {
+        if i + 1 < n {
+            ra2.update(i + 1, v, do_update).expect("stage chain update");
+        }
+    })?;
+    ra.sync()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roomy::Roomy;
+    use crate::testutil::{prop_check, tmpdir};
+
+    #[test]
+    fn paper_example_ints() {
+        let t = tmpdir("chain_int");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let n = 100u64;
+        let ra = r.array::<i64>("a", n, 0).unwrap();
+        ra.map_update(|i, v| *v = i as i64 + 1).unwrap();
+        chain_reduce(&ra, |a, b| a + b).unwrap();
+        // a[i] = (i+1) + i for i >= 1; a[0] unchanged
+        assert_eq!(ra.fetch(0).unwrap(), 1);
+        for i in 1..n {
+            assert_eq!(ra.fetch(i).unwrap(), (2 * i + 1) as i64, "i={i}");
+        }
+    }
+
+    #[test]
+    fn deterministic_uses_old_values_only() {
+        // With a non-commutative combine the result distinguishes old-value
+        // semantics from sequential in-place semantics.
+        let t = tmpdir("chain_det");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let ra = r.array::<i64>("a", 4, 0).unwrap();
+        ra.map_update(|i, v| *v = 10i64.pow(i as u32)).unwrap(); // 1,10,100,1000
+        chain_reduce(&ra, |a, b| a - b).unwrap();
+        // old-value semantics: a = [1, 10-1, 100-10, 1000-100]
+        let got: Vec<i64> = (0..4).map(|i| ra.fetch(i).unwrap()).collect();
+        assert_eq!(got, vec![1, 9, 90, 900]);
+    }
+
+    #[test]
+    fn prop_matches_serial_model() {
+        prop_check("chain reduce vs serial", 8, |rng| {
+            let t = tmpdir("chain_prop");
+            let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+            let n = rng.range(1, 120) as u64;
+            let vals: Vec<i64> = (0..n).map(|_| rng.range_i64(-100, 100)).collect();
+            let ra = r.array::<i64>("a", n, 0).unwrap();
+            let vals2 = vals.clone();
+            ra.map_update(move |i, v| *v = vals2[i as usize]).unwrap();
+            chain_reduce(&ra, |a, b| a.wrapping_add(*b)).unwrap();
+            // serial model over old values
+            let mut expect = vals.clone();
+            for i in (1..n as usize).rev() {
+                expect[i] = vals[i].wrapping_add(vals[i - 1]);
+            }
+            for i in 0..n {
+                assert_eq!(ra.fetch(i).unwrap(), expect[i as usize]);
+            }
+        });
+    }
+}

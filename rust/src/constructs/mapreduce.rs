@@ -1,0 +1,151 @@
+//! Map and reduce construct helpers (paper §3's two primitive constructs),
+//! including the paper's worked examples and accel-batched variants.
+
+use std::sync::Mutex;
+
+use crate::accel::Accel;
+use crate::error::Result;
+use crate::roomy::{Element, RoomyArray, RoomyHashTable, RoomyList};
+
+/// The paper's map example: convert a RoomyArray into a RoomyHashTable
+/// with array indices as keys and the elements as values.
+pub fn array_to_hashtable<T: Element>(
+    ra: &RoomyArray<T>,
+    rht: &RoomyHashTable<u64, T>,
+) -> Result<()> {
+    // makePair, mapped over ra: issue a delayed insert per element.
+    let rht2 = rht.clone();
+    ra.map(move |i, element| {
+        rht2.insert(&i, element).expect("stage insert");
+    })?;
+    // Perform map, then complete delayed inserts.
+    rht.sync()
+}
+
+/// The paper's reduce example: sum of squares of a RoomyList of ints.
+pub fn sum_of_squares(rl: &RoomyList<i64>) -> Result<i64> {
+    // mergeElt / mergeResults from the paper.
+    rl.reduce(
+        || 0i64,
+        |sum, element| sum.wrapping_add(element.wrapping_mul(*element)),
+        |sum1, sum2| sum1.wrapping_add(sum2),
+    )
+}
+
+/// Accel-batched sum of squares: elements are streamed into batches and
+/// reduced by the L1 kernel ([`Accel::reduce_sumsq`]); partials merge in
+/// L3. Bit-identical to [`sum_of_squares`] (wrapping arithmetic).
+pub fn sum_of_squares_accel(rl: &RoomyList<i64>, accel: &Accel) -> Result<i64> {
+    const BATCH: usize = 4096;
+    let state: Mutex<(Vec<i64>, i64)> = Mutex::new((Vec::with_capacity(BATCH), 0));
+    rl.map(|&v| {
+        let mut g = state.lock().unwrap();
+        g.0.push(v);
+        if g.0.len() >= BATCH {
+            let (batch, acc) = &mut *g;
+            let (s, _, _) = accel.reduce_sumsq(batch).expect("reduce batch");
+            *acc = acc.wrapping_add(s);
+            batch.clear();
+        }
+    })?;
+    let mut g = state.into_inner().unwrap();
+    let (s, _, _) = accel.reduce_sumsq(&g.0)?;
+    g.1 = g.1.wrapping_add(s);
+    Ok(g.1)
+}
+
+/// Reduce helper: the k largest elements of a list (the paper's "result
+/// type differs from element type" example).
+pub fn k_largest<T: Element + Ord>(rl: &RoomyList<T>, k: usize) -> Result<Vec<T>> {
+    let merge_two = move |mut a: Vec<T>, b: Vec<T>| {
+        a.extend(b);
+        a.sort_unstable_by(|x, y| y.cmp(x));
+        a.truncate(k);
+        a
+    };
+    rl.reduce(
+        Vec::new,
+        move |mut acc, elt| {
+            acc.push(elt.clone());
+            acc.sort_unstable_by(|x, y| y.cmp(x));
+            acc.truncate(k);
+            acc
+        },
+        merge_two,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roomy::Roomy;
+    use crate::testutil::tmpdir;
+
+    fn mk(root: &std::path::Path) -> Roomy {
+        Roomy::open(crate::RoomyConfig::for_testing(root)).unwrap()
+    }
+
+    #[test]
+    fn paper_map_example() {
+        let t = tmpdir("mr_map");
+        let r = mk(t.path());
+        let ra = r.array::<u32>("a", 50, 0).unwrap();
+        ra.map_update(|i, v| *v = (i * 3) as u32).unwrap();
+        let rht = r.hash_table::<u64, u32>("h").unwrap();
+        array_to_hashtable(&ra, &rht).unwrap();
+        assert_eq!(rht.size(), 50);
+        assert_eq!(rht.fetch(&7).unwrap(), Some(21));
+        assert_eq!(rht.fetch(&49).unwrap(), Some(147));
+    }
+
+    #[test]
+    fn paper_reduce_example() {
+        let t = tmpdir("mr_reduce");
+        let r = mk(t.path());
+        let rl = r.list::<i64>("l").unwrap();
+        for v in 1..=100i64 {
+            rl.add(&v).unwrap();
+        }
+        rl.sync().unwrap();
+        let expect: i64 = (1..=100i64).map(|v| v * v).sum();
+        assert_eq!(sum_of_squares(&rl).unwrap(), expect);
+        assert_eq!(sum_of_squares_accel(&rl, &Accel::rust()).unwrap(), expect);
+    }
+
+    #[test]
+    fn accel_batched_matches_plain_on_large_input() {
+        let t = tmpdir("mr_accel");
+        let r = mk(t.path());
+        let rl = r.list::<i64>("l").unwrap();
+        for v in 0..10_000i64 {
+            rl.add(&(v - 5000)).unwrap();
+        }
+        rl.sync().unwrap();
+        let a = sum_of_squares(&rl).unwrap();
+        let b = sum_of_squares_accel(&rl, &Accel::rust()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn k_largest_finds_top() {
+        let t = tmpdir("mr_klargest");
+        let r = mk(t.path());
+        let rl = r.list::<u64>("l").unwrap();
+        for v in 0..1000u64 {
+            rl.add(&(v * 7919 % 1000)).unwrap();
+        }
+        rl.sync().unwrap();
+        let top = k_largest(&rl, 3).unwrap();
+        assert_eq!(top, vec![999, 998, 997]);
+    }
+
+    #[test]
+    fn k_largest_short_list() {
+        let t = tmpdir("mr_kshort");
+        let r = mk(t.path());
+        let rl = r.list::<u64>("l").unwrap();
+        rl.add(&5).unwrap();
+        rl.sync().unwrap();
+        assert_eq!(k_largest(&rl, 10).unwrap(), vec![5]);
+    }
+}

@@ -1,0 +1,15 @@
+//! The programming constructs of paper §3, built on the Roomy primitives:
+//! map, reduce, set operations, chain reduction, parallel prefix, pair
+//! reduction, and breadth-first search.
+//!
+//! Map and reduce are primitive operations on the structures themselves
+//! ([`crate::roomy`]); the modules here add the composite constructs and a
+//! few batched variants that route their inner loops through the
+//! [`crate::accel`] kernels.
+
+pub mod bfs;
+pub mod chainred;
+pub mod mapreduce;
+pub mod pairred;
+pub mod prefix;
+pub mod setops;

@@ -1,0 +1,164 @@
+//! Parallel prefix (paper §3): inclusive prefix combine over a RoomyArray
+//! in `⌈log2 N⌉` chain-reduction rounds:
+//!
+//! ```text
+//! for (k = 1; k < N; k *= 2):
+//!     if i - k >= 0:  a[i] = combine(a[i], a[i-k])   // old values per round
+//! ```
+//!
+//! Each round is one map (issue updates with stride `k`) + one sync — the
+//! Hillis–Steele scan expressed in Roomy's delayed-update model.
+//!
+//! [`prefix_scan_array`] is the accelerated alternative for `i64` sums:
+//! one sequential streaming pass that runs the L1 Pallas scan kernel per
+//! bucket and carries the running total across buckets — one pass over the
+//! disk instead of `log N`, the kind of constant-factor win DESIGN.md's E7
+//! ablation measures.
+
+use crate::accel::Accel;
+use crate::error::Result;
+use crate::roomy::{Element, RoomyArray};
+
+/// Inclusive parallel prefix: `a[i] = combine(a[i], ..., a[0])` via log
+/// rounds of strided chain reductions.
+pub fn parallel_prefix<T: Element>(
+    ra: &RoomyArray<T>,
+    combine: impl Fn(&T, &T) -> T + Send + Sync + 'static + Clone,
+) -> Result<()> {
+    let n = ra.len();
+    let mut k = 1u64;
+    while k < n {
+        let comb = combine.clone();
+        let do_update =
+            ra.register_update(move |_i, v: &mut T, prev: &T| *v = comb(v, prev));
+        let ra2 = ra.clone();
+        let stride = k;
+        ra.map(move |i, v| {
+            if i + stride < n {
+                ra2.update(i + stride, v, do_update).expect("stage prefix update");
+            }
+        })?;
+        ra.sync()?;
+        k *= 2;
+    }
+    Ok(())
+}
+
+/// Accelerated inclusive prefix *sum* for `i64` arrays: one streaming pass,
+/// scan kernel per bucket, carry chained across buckets in L3.
+pub fn prefix_scan_array(ra: &RoomyArray<i64>, accel: &Accel) -> Result<()> {
+    let mut carry = 0i64;
+    for b in 0..ra.bucket_count() {
+        let data = ra.read_bucket_i64(b)?;
+        if data.is_empty() {
+            continue;
+        }
+        let (mut scanned, total) = accel.prefix_scan(&data)?;
+        if carry != 0 {
+            for v in scanned.iter_mut() {
+                *v = v.wrapping_add(carry);
+            }
+        }
+        let new_carry = carry.wrapping_add(total);
+        ra.write_bucket_i64(b, &scanned)?;
+        carry = new_carry;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roomy::Roomy;
+    use crate::testutil::{prop_check, tmpdir};
+
+    fn fill(ra: &RoomyArray<i64>, vals: &[i64]) {
+        let v = vals.to_vec();
+        ra.map_update(move |i, x| *x = v[i as usize]).unwrap();
+    }
+
+    fn expect_prefix(vals: &[i64]) -> Vec<i64> {
+        let mut acc = 0i64;
+        vals.iter()
+            .map(|v| {
+                acc = acc.wrapping_add(*v);
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_sum_prefix() {
+        let t = tmpdir("prefix_small");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let vals: Vec<i64> = (1..=20).collect();
+        let ra = r.array::<i64>("a", vals.len() as u64, 0).unwrap();
+        fill(&ra, &vals);
+        parallel_prefix(&ra, |a, b| a.wrapping_add(*b)).unwrap();
+        for (i, e) in expect_prefix(&vals).into_iter().enumerate() {
+            assert_eq!(ra.fetch(i as u64).unwrap(), e, "i={i}");
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_length() {
+        let t = tmpdir("prefix_np2");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let vals: Vec<i64> = (0..37).map(|i| i * i - 7).collect();
+        let ra = r.array::<i64>("a", 37, 0).unwrap();
+        fill(&ra, &vals);
+        parallel_prefix(&ra, |a, b| a.wrapping_add(*b)).unwrap();
+        for (i, e) in expect_prefix(&vals).into_iter().enumerate() {
+            assert_eq!(ra.fetch(i as u64).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn max_prefix_works_too() {
+        // combine need not be addition — running max is also a prefix op
+        let t = tmpdir("prefix_max");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let vals = vec![3i64, 1, 4, 1, 5, 9, 2, 6];
+        let ra = r.array::<i64>("a", 8, 0).unwrap();
+        fill(&ra, &vals);
+        parallel_prefix(&ra, |a, b| *a.max(b)).unwrap();
+        let mut run = i64::MIN;
+        for (i, v) in vals.iter().enumerate() {
+            run = run.max(*v);
+            assert_eq!(ra.fetch(i as u64).unwrap(), run);
+        }
+    }
+
+    #[test]
+    fn accel_scan_matches_log_rounds() {
+        let t = tmpdir("prefix_accel");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let vals: Vec<i64> = (0..997).map(|i| (i % 13) - 6).collect();
+        let ra = r.array::<i64>("a", 997, 0).unwrap();
+        fill(&ra, &vals);
+        prefix_scan_array(&ra, &Accel::rust()).unwrap();
+        for (i, e) in expect_prefix(&vals).into_iter().enumerate() {
+            assert_eq!(ra.fetch(i as u64).unwrap(), e, "i={i}");
+        }
+    }
+
+    #[test]
+    fn prop_prefix_matches_serial() {
+        prop_check("parallel prefix vs serial", 6, |rng| {
+            let t = tmpdir("prefix_prop");
+            let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+            let n = rng.range(1, 200) as u64;
+            let vals: Vec<i64> = (0..n).map(|_| rng.range_i64(-50, 50)).collect();
+            let ra = r.array::<i64>("a", n, 0).unwrap();
+            fill(&ra, &vals);
+            if rng.chance(0.5) {
+                parallel_prefix(&ra, |a, b| a.wrapping_add(*b)).unwrap();
+            } else {
+                prefix_scan_array(&ra, &Accel::rust()).unwrap();
+            }
+            for (i, e) in expect_prefix(&vals).into_iter().enumerate() {
+                assert_eq!(ra.fetch(i as u64).unwrap(), e);
+            }
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! Set operations over RoomyLists (paper §3).
+//!
+//! A RoomyList becomes a set by `removeDupes`; union/difference/
+//! intersection are then built from `addAll`, `removeAll` and
+//! `removeDupes` exactly as the paper's code fragments do. The paper notes
+//! intersection is sub-optimal with the current primitives ("may become a
+//! Roomy primitive in the future") — we reproduce the paper's
+//! union-minus-differences construction and also provide the obvious
+//! sorted-merge primitive as the "future work" extension, which E5
+//! benchmarks against it.
+
+use crate::error::Result;
+use crate::roomy::{Element, Roomy, RoomyList};
+
+/// Convert a list (possibly with duplicates) into a set.
+pub fn to_set<T: Element>(list: &RoomyList<T>) -> Result<()> {
+    list.remove_dupes()
+}
+
+/// Set union in place: `a = a ∪ b` (paper: addAll + removeDupes).
+pub fn union_into<T: Element>(a: &RoomyList<T>, b: &RoomyList<T>) -> Result<()> {
+    a.add_all(b)?;
+    a.remove_dupes()
+}
+
+/// Set difference in place: `a = a - b` (paper: just removeAll,
+/// assuming both are sets).
+pub fn difference_into<T: Element>(a: &RoomyList<T>, b: &RoomyList<T>) -> Result<()> {
+    a.remove_all(b)
+}
+
+/// Set intersection via the paper's construction:
+/// `C = (A ∪ B) - (A - B) - (B - A)`, using three temporary sets.
+/// Returns a new list named `name`.
+pub fn intersection<T: Element>(
+    r: &Roomy,
+    name: &str,
+    a: &RoomyList<T>,
+    b: &RoomyList<T>,
+) -> Result<RoomyList<T>> {
+    // create three temporary sets
+    let a_and_b = r.list::<T>(&format!("{name}-tmpAandB"))?;
+    let a_minus_b = r.list::<T>(&format!("{name}-tmpAminusB"))?;
+    let b_minus_a = r.list::<T>(&format!("{name}-tmpBminusA"))?;
+    let c = r.list::<T>(name)?;
+
+    a_and_b.add_all(a)?;
+    a_and_b.add_all(b)?;
+    a_and_b.remove_dupes()?;
+
+    a_minus_b.add_all(a)?;
+    a_minus_b.remove_all(b)?;
+
+    b_minus_a.add_all(b)?;
+    b_minus_a.remove_all(a)?;
+
+    // compute intersection
+    c.add_all(&a_and_b)?;
+    c.remove_all(&a_minus_b)?;
+    c.remove_all(&b_minus_a)?;
+
+    for (tmp, suffix) in [
+        (a_and_b, "tmpAandB"),
+        (a_minus_b, "tmpAminusB"),
+        (b_minus_a, "tmpBminusA"),
+    ] {
+        tmp.destroy()?;
+        r.release_name(&format!("{name}-{suffix}"));
+    }
+    Ok(c)
+}
+
+/// "Future work" intersection primitive: per-shard sorted-merge keep of
+/// common elements — one sort of each side instead of the paper's three
+/// temporaries. Both inputs must already be sets (deduped).
+pub fn intersection_primitive<T: Element>(
+    r: &Roomy,
+    name: &str,
+    a: &RoomyList<T>,
+    b: &RoomyList<T>,
+) -> Result<RoomyList<T>> {
+    // C = A - (A - B): two removeAlls but no unions, exploiting sorted
+    // shards directly.
+    let c = r.list::<T>(name)?;
+    let a_minus_b = r.list::<T>(&format!("{name}-tmpD"))?;
+    a_minus_b.add_all(a)?;
+    a_minus_b.remove_all(b)?;
+    c.add_all(a)?;
+    c.remove_all(&a_minus_b)?;
+    a_minus_b.destroy()?;
+    r.release_name(&format!("{name}-tmpD"));
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop_check, tmpdir};
+    use std::collections::BTreeSet;
+
+    fn mk(root: &std::path::Path) -> Roomy {
+        Roomy::open(crate::RoomyConfig::for_testing(root)).unwrap()
+    }
+
+    fn fill(l: &RoomyList<u64>, vals: &[u64]) {
+        for v in vals {
+            l.add(v).unwrap();
+        }
+        l.sync().unwrap();
+    }
+
+    fn as_btree(l: &RoomyList<u64>) -> BTreeSet<u64> {
+        l.collect().unwrap().into_iter().collect()
+    }
+
+    #[test]
+    fn union_difference_paper_fragments() {
+        let t = tmpdir("set_union");
+        let r = mk(t.path());
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        fill(&a, &[1, 2, 3, 3]);
+        fill(&b, &[3, 4, 5]);
+        to_set(&a).unwrap();
+        to_set(&b).unwrap();
+
+        union_into(&a, &b).unwrap();
+        assert_eq!(as_btree(&a), BTreeSet::from([1, 2, 3, 4, 5]));
+
+        difference_into(&a, &b).unwrap();
+        assert_eq!(as_btree(&a), BTreeSet::from([1, 2]));
+    }
+
+    #[test]
+    fn intersection_paper_construction() {
+        let t = tmpdir("set_inter");
+        let r = mk(t.path());
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        fill(&a, &[1, 2, 3, 4, 5]);
+        fill(&b, &[4, 5, 6, 7]);
+        let c = intersection(&r, "c", &a, &b).unwrap();
+        assert_eq!(as_btree(&c), BTreeSet::from([4, 5]));
+        // inputs untouched
+        assert_eq!(a.size(), 5);
+        assert_eq!(b.size(), 4);
+    }
+
+    #[test]
+    fn intersection_empty_and_disjoint() {
+        let t = tmpdir("set_disjoint");
+        let r = mk(t.path());
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        fill(&a, &[1, 2]);
+        // b stays empty
+        let c = intersection(&r, "c", &a, &b).unwrap();
+        assert_eq!(c.size(), 0);
+        let d = r.list::<u64>("b2").unwrap();
+        fill(&d, &[9, 10]);
+        let e = intersection(&r, "e", &a, &d).unwrap();
+        assert_eq!(e.size(), 0);
+    }
+
+    #[test]
+    fn intersection_primitive_matches_paper_construction() {
+        prop_check("intersection variants agree", 6, |rng| {
+            let t = tmpdir("set_prop");
+            let r = mk(t.path());
+            let mk_vals = |rng: &mut crate::testutil::Rng| -> Vec<u64> {
+                let n = rng.range(0, 60);
+                (0..n).map(|_| rng.below(40)).collect()
+            };
+            let va = mk_vals(rng);
+            let vb = mk_vals(rng);
+            let a = r.list::<u64>("a").unwrap();
+            let b = r.list::<u64>("b").unwrap();
+            fill(&a, &va);
+            fill(&b, &vb);
+            to_set(&a).unwrap();
+            to_set(&b).unwrap();
+            let c1 = intersection(&r, "c1", &a, &b).unwrap();
+            let c2 = intersection_primitive(&r, "c2", &a, &b).unwrap();
+            let expect: BTreeSet<u64> = {
+                let sa: BTreeSet<u64> = va.iter().copied().collect();
+                let sb: BTreeSet<u64> = vb.iter().copied().collect();
+                sa.intersection(&sb).copied().collect()
+            };
+            assert_eq!(as_btree(&c1), expect);
+            assert_eq!(as_btree(&c2), expect);
+        });
+    }
+
+    #[test]
+    fn model_check_against_std_sets() {
+        prop_check("set algebra model", 6, |rng| {
+            let t = tmpdir("set_model");
+            let r = mk(t.path());
+            let va: Vec<u64> = (0..rng.range(0, 80)).map(|_| rng.below(50)).collect();
+            let vb: Vec<u64> = (0..rng.range(0, 80)).map(|_| rng.below(50)).collect();
+            let a = r.list::<u64>("a").unwrap();
+            let b = r.list::<u64>("b").unwrap();
+            fill(&a, &va);
+            fill(&b, &vb);
+            to_set(&a).unwrap();
+            to_set(&b).unwrap();
+            let sa: BTreeSet<u64> = va.iter().copied().collect();
+            let sb: BTreeSet<u64> = vb.iter().copied().collect();
+            if rng.chance(0.5) {
+                union_into(&a, &b).unwrap();
+                let expect: BTreeSet<u64> = sa.union(&sb).copied().collect();
+                assert_eq!(as_btree(&a), expect);
+            } else {
+                difference_into(&a, &b).unwrap();
+                let expect: BTreeSet<u64> = sa.difference(&sb).copied().collect();
+                assert_eq!(as_btree(&a), expect);
+            }
+        });
+    }
+}

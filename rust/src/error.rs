@@ -1,0 +1,79 @@
+//! Error type shared across the Roomy crate.
+
+use std::path::PathBuf;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, RoomyError>;
+
+/// Errors produced by the Roomy runtime.
+#[derive(Debug, thiserror::Error)]
+pub enum RoomyError {
+    /// Underlying I/O failure, annotated with the path involved.
+    #[error("io error on {path:?}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// Caller passed an argument violating a documented invariant.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// Two structures were combined that do not share a compatible layout
+    /// (element size, bucket count, ...).
+    #[error("incompatible structures: {0}")]
+    Incompatible(String),
+
+    /// A user function id was used that was never registered.
+    #[error("unknown function id {id} on structure {structure}")]
+    UnknownFunc { structure: String, id: u8 },
+
+    /// XLA/PJRT runtime failure (artifact loading, compilation, execution).
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Requested AOT artifact is not present in the artifacts directory.
+    #[error("missing artifact {name} (run `make artifacts`)")]
+    MissingArtifact { name: String },
+
+    /// A worker thread panicked during a collective operation.
+    #[error("worker {worker} panicked during {phase}")]
+    WorkerPanic { worker: usize, phase: String },
+}
+
+impl RoomyError {
+    /// Annotate an `io::Error` with the path it occurred on.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        RoomyError::Io { path: path.into(), source }
+    }
+}
+
+impl From<xla::Error> for RoomyError {
+    fn from(e: xla::Error) -> Self {
+        RoomyError::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_error_formats_path() {
+        let e = RoomyError::io(
+            "/some/file",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "nope"),
+        );
+        let s = e.to_string();
+        assert!(s.contains("/some/file"), "{s}");
+        assert!(s.contains("nope"), "{s}");
+    }
+
+    #[test]
+    fn unknown_func_mentions_structure() {
+        let e = RoomyError::UnknownFunc { structure: "ra".into(), id: 3 };
+        assert!(e.to_string().contains("ra"));
+        assert!(e.to_string().contains('3'));
+    }
+}

@@ -1,0 +1,173 @@
+//! 64-bit fingerprint + fast-range bucket routing.
+//!
+//! **Bit-exact twin** of the L1 Pallas kernel
+//! (`python/compile/kernels/hashpart.py`) and the numpy oracle
+//! (`python/compile/kernels/ref.py`). Roomy routes every delayed operation
+//! and list element by this fingerprint, and the XLA-accelerated paths
+//! compute it on-device — the two implementations are pinned to shared
+//! test vectors below; change them only in lockstep.
+
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+const MIX1: u64 = 0xBF58476D1CE4E5B9;
+const MIX2: u64 = 0x94D049BB133111EB;
+
+/// splitmix-style avalanche fingerprint of a K-word element.
+#[inline]
+pub fn fp_words(words: &[u64]) -> u64 {
+    let mut h = GOLDEN ^ words.len() as u64;
+    for &w in words {
+        h = (h ^ w).wrapping_mul(MIX1);
+        h ^= h >> 29;
+    }
+    h ^= h >> 30;
+    h = h.wrapping_mul(MIX1);
+    h ^= h >> 27;
+    h = h.wrapping_mul(MIX2);
+    h ^= h >> 31;
+    h
+}
+
+/// Fingerprint of an arbitrary byte string: fold into 8-byte LE words,
+/// zero-padding the tail. Equality of byte strings implies equality of the
+/// word sequence (length is mixed in), so this is a sound routing hash for
+/// fixed-size Roomy elements.
+#[inline]
+pub fn fp_bytes(bytes: &[u8]) -> u64 {
+    let mut words = [0u64; 8];
+    let nwords = bytes.len().div_ceil(8);
+    if nwords <= words.len() {
+        for (i, chunk) in bytes.chunks(8).enumerate() {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            words[i] = u64::from_le_bytes(w);
+        }
+        fp_words(&words[..nwords])
+    } else {
+        // Rare large-element path: heap-allocate the word vector.
+        let mut v = vec![0u64; nwords];
+        for (i, chunk) in bytes.chunks(8).enumerate() {
+            let mut w = [0u8; 8];
+            w[..chunk.len()].copy_from_slice(chunk);
+            v[i] = u64::from_le_bytes(w);
+        }
+        fp_words(&v)
+    }
+}
+
+/// Fast-range bucket id: `((fp >> 32) * nbuckets) >> 32`.
+///
+/// Avoids the modulo bias/latency and — critically — matches the formula
+/// used in the XLA kernels (no u128 on-device).
+#[inline]
+pub fn bucket_of(fp: u64, nbuckets: u32) -> u32 {
+    (((fp >> 32) * nbuckets as u64) >> 32) as u32
+}
+
+/// Convenience: bucket of a byte-string element.
+#[inline]
+pub fn bucket_of_bytes(bytes: &[u8], nbuckets: u32) -> u32 {
+    bucket_of(fp_bytes(bytes), nbuckets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Cross-language pin vectors, generated from the numpy oracle
+    /// (`python/tests/test_hashpart.py` keeps the same values). These
+    /// define the on-disk routing contract between the Rust and XLA paths.
+    const PIN_K1: &[(u64, u64)] = &[
+        (0x0000000000000000, 0x06CA4302F7957093),
+        (0x0000000000000001, 0xFDC71BA11F1623D2),
+        (0xFFFFFFFFFFFFFFFF, 0xF02738DF33C41F59),
+        (0x0123456789ABCDEF, 0x5EE5D896C5F71E42),
+        (0x9E3779B97F4A7C15, 0x5A2C67DDBAFC107E),
+    ];
+
+    #[test]
+    fn pin_vectors_k1() {
+        for &(w, expect) in PIN_K1 {
+            assert_eq!(fp_words(&[w]), expect, "word {w:#x}");
+        }
+    }
+
+    #[test]
+    fn pin_vector_k2() {
+        assert_eq!(
+            fp_words(&[0x0123456789ABCDEF, 0xFEDCBA9876543210]),
+            0x71B4AA2CD4369C1A
+        );
+    }
+
+    #[test]
+    fn pin_buckets_nb7() {
+        // (word, fp, bucket) rows from the oracle.
+        let rows: &[(u64, u64, u32)] = &[
+            (1, 18286615190786417618, 6),
+            (2, 7775381647587981615, 2),
+            (3, 17688293697997199404, 6),
+            (4, 5293305913000472489, 2),
+            (5, 15733362921970038256, 5),
+        ];
+        for &(w, fp, b) in rows {
+            assert_eq!(fp_words(&[w]), fp);
+            assert_eq!(bucket_of(fp, 7), b);
+        }
+    }
+
+    #[test]
+    fn length_is_mixed_in() {
+        // A trailing zero word must change the fingerprint.
+        assert_ne!(fp_words(&[42]), fp_words(&[42, 0]));
+    }
+
+    #[test]
+    fn bytes_fold_matches_words() {
+        let w: u64 = 0x0123456789ABCDEF;
+        assert_eq!(fp_bytes(&w.to_le_bytes()), fp_words(&[w]));
+        // 12 bytes -> two words, second zero-padded.
+        let mut b = vec![];
+        b.extend_from_slice(&w.to_le_bytes());
+        b.extend_from_slice(&0xAABBCCDDu32.to_le_bytes());
+        assert_eq!(fp_bytes(&b), fp_words(&[w, 0xAABBCCDD]));
+    }
+
+    #[test]
+    fn bytes_large_element_path() {
+        let bytes = vec![7u8; 100]; // > 64 bytes: heap path
+        let words: Vec<u64> = bytes
+            .chunks(8)
+            .map(|c| {
+                let mut w = [0u8; 8];
+                w[..c.len()].copy_from_slice(c);
+                u64::from_le_bytes(w)
+            })
+            .collect();
+        assert_eq!(fp_bytes(&bytes), fp_words(&words));
+    }
+
+    #[test]
+    fn bucket_range() {
+        for nb in [1u32, 2, 3, 17, 255, 1024] {
+            for w in 0..1000u64 {
+                let b = bucket_of(fp_words(&[w]), nb);
+                assert!(b < nb, "bucket {b} out of range for nb={nb}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_distribution_roughly_uniform() {
+        let nb = 16u32;
+        let mut counts = vec![0usize; nb as usize];
+        let n = 100_000u64;
+        for w in 0..n {
+            counts[bucket_of(fp_words(&[w]), nb) as usize] += 1;
+        }
+        let expect = n as f64 / nb as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.05, "bucket {i} count {c} deviates {dev:.3} from uniform");
+        }
+    }
+}

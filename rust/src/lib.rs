@@ -1,0 +1,85 @@
+//! # Roomy: a system for space-limited computations
+//!
+//! A Rust reproduction of *Roomy* (Daniel Kunkle, CS.DC 2010): a programming
+//! model and library for **parallel disk-based computation**, using the
+//! aggregate disks of many nodes as a transparent extension of RAM.
+//!
+//! The two pillars of the paper, as implemented here:
+//!
+//! 1. **Bandwidth** — data structures are partitioned into buckets spread
+//!    over the (simulated) node-local disks of a cluster and all collective
+//!    operations stream every disk in parallel ([`cluster`], [`storage`]).
+//! 2. **Latency** — random-access operations are *delayed*: staged into
+//!    per-bucket operation logs and applied in batch, streaming, at an
+//!    explicit `sync()` ([`roomy`]).
+//!
+//! The public API mirrors the paper's Table 1:
+//!
+//! - [`roomy::RoomyArray`] — fixed-size indexed array (delayed
+//!   `access`/`update`, immediate `map`/`reduce`/`predicate_count`)
+//! - [`roomy::RoomyBitArray`] — arrays of 1/2/4-bit elements ("elements can
+//!   be as small as one bit")
+//! - [`roomy::RoomyHashTable`] — delayed `insert`/`remove`/`access`/`update`
+//! - [`roomy::RoomyList`] — delayed `add`/`remove`, immediate
+//!   `add_all`/`remove_all`/`remove_dupes`
+//!
+//! The programming constructs of paper §3 live in [`constructs`]: map,
+//! reduce, set operations, chain reduction, parallel prefix, pair reduction
+//! and breadth-first search; the flagship pancake-sorting application is in
+//! [`apps::pancake`].
+//!
+//! ## Three-layer architecture
+//!
+//! This crate is Layer 3 of a Rust + JAX + Pallas stack: the numeric batch
+//! hot paths (fingerprint routing, prefix scan, BFS frontier expansion,
+//! numeric reduce) can execute as AOT-compiled XLA programs authored in
+//! JAX/Pallas at build time (`python/compile`), loaded from `artifacts/`
+//! via PJRT by [`runtime`], and dispatched through [`accel`] (which also
+//! provides bit-exact pure-Rust fallbacks). Python never runs at request
+//! time.
+//!
+//! ## Example
+//!
+//! ```
+//! use roomy::{Roomy, RoomyConfig};
+//!
+//! # fn main() -> roomy::Result<()> {
+//! let root = std::env::temp_dir().join(format!("roomy-doc-{}", std::process::id()));
+//! let r = Roomy::open(RoomyConfig::for_testing(&root))?;
+//!
+//! // A disk-resident array over the simulated cluster.
+//! let ra = r.array::<u64>("counts", 1_000, 0)?;
+//! let inc = ra.register_update(|_i, v: &mut u64, amount: &u64| *v += amount);
+//!
+//! // Delayed random-access updates: staged per bucket...
+//! for i in 0..10_000u64 {
+//!     ra.update(i % 1_000, &1u64, inc)?;
+//! }
+//! // ...and applied in one streaming batch.
+//! ra.sync()?;
+//!
+//! let total = ra.reduce(|| 0u64, |acc, _i, v| acc + v, |a, b| a + b)?;
+//! assert_eq!(total, 10_000);
+//! # std::fs::remove_dir_all(&root).ok();
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod accel;
+pub mod apps;
+pub mod cluster;
+pub mod config;
+pub mod constructs;
+pub mod error;
+pub mod hashfn;
+pub mod metrics;
+pub mod roomy;
+pub mod runtime;
+pub mod storage;
+pub mod testutil;
+
+pub use config::{AccelMode, DiskPolicy, RoomyConfig};
+pub use error::{Result, RoomyError};
+pub use roomy::{
+    Element, Roomy, RoomyArray, RoomyBitArray, RoomyHashTable, RoomyList, RoomySet,
+};

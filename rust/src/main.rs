@@ -1,0 +1,288 @@
+//! Roomy launcher: the Layer-3 coordinator CLI.
+//!
+//! Subcommands (run `roomy help`):
+//! - `pancake  --n <N> [--structure list|array|hash] [--workers W] ...`
+//!   — the paper's flagship workload: disk-based BFS over the pancake
+//!   graph, validated against known pancake numbers.
+//! - `demo` — a quick tour of the four data structures and constructs.
+//! - `kernels` — report which AOT artifacts are loadable and their
+//!   Rust-vs-XLA agreement on a smoke batch.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use roomy::accel::Accel;
+use roomy::apps::pancake;
+use roomy::constructs::{mapreduce, setops};
+use roomy::metrics::{fmt_bytes, fmt_rate};
+use roomy::{AccelMode, DiskPolicy, Roomy, RoomyConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("pancake") => cmd_pancake(&args[1..]),
+        Some("rubik") => cmd_rubik(&args[1..]),
+        Some("demo") => cmd_demo(&args[1..]),
+        Some("kernels") => cmd_kernels(&args[1..]),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "roomy — a system for space-limited computations (Kunkle 2010 reproduction)
+
+USAGE:
+  roomy pancake --n <N> [--structure list|array|hash] [--workers W]
+                [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
+                [--throttle]           # simulate 2010-era disks
+  roomy rubik   [--workers W] [--root DIR]        # 2x2x2 cube God's number
+  roomy demo    [--workers W] [--root DIR]
+  roomy kernels [--artifacts DIR]
+  roomy help"
+    );
+}
+
+/// Tiny flag parser: `--key value` and boolean `--key` pairs.
+struct Flags {
+    pairs: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags, String> {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {:?}", args[i]))?;
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                pairs.push((k.to_string(), args[i + 1].clone()));
+                i += 2;
+            } else {
+                pairs.push((k.to_string(), String::new()));
+                i += 1;
+            }
+        }
+        Ok(Flags { pairs })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
+    let mut cfg = RoomyConfig {
+        workers: f.get_parse("workers", 4usize)?,
+        buckets_per_worker: f.get_parse("buckets-per-worker", 4usize)?,
+        ..RoomyConfig::default()
+    };
+    cfg.root = f
+        .get("root")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| std::env::temp_dir().join(format!("roomy-run-{}", std::process::id())));
+    cfg.artifacts_dir = f.get("artifacts").map(PathBuf::from).unwrap_or_else(|| "artifacts".into());
+    cfg.accel = match f.get("accel").unwrap_or("auto") {
+        "rust" => AccelMode::Rust,
+        "xla" => AccelMode::Xla,
+        "auto" => AccelMode::Auto,
+        other => return Err(format!("bad --accel {other:?} (rust|xla|auto)")),
+    };
+    if f.has("throttle") {
+        cfg.disk = DiskPolicy::paper_2010();
+    }
+    Ok(cfg)
+}
+
+fn cmd_pancake(args: &[String]) -> Result<(), String> {
+    let f = Flags::parse(args)?;
+    let n: usize = f.get_parse("n", 8usize)?;
+    if !(2..=12).contains(&n) {
+        return Err("--n must be in 2..=12".into());
+    }
+    let structure = match f.get("structure").unwrap_or("list") {
+        "list" => pancake::Structure::List,
+        "array" => pancake::Structure::Array,
+        "hash" => pancake::Structure::Hash,
+        other => return Err(format!("bad --structure {other:?} (list|array|hash)")),
+    };
+    let cfg = config_from_flags(&f)?;
+    println!(
+        "pancake n={n} structure={structure:?} workers={} buckets={} root={:?}",
+        cfg.workers,
+        cfg.nbuckets(),
+        cfg.root
+    );
+    let r = Roomy::open(cfg).map_err(|e| e.to_string())?;
+    let accel = Accel::from_roomy(&r);
+    println!("accel backend: {}", if accel.is_xla() { "XLA (AOT artifacts)" } else { "Rust" });
+
+    let t0 = Instant::now();
+    let stats = pancake::roomy_bfs(&r, n, structure, &accel).map_err(|e| e.to_string())?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("\nlevel  states");
+    for (i, c) in stats.levels.iter().enumerate() {
+        println!("{i:>5}  {c}");
+    }
+    println!("total states: {} (n! = {})", stats.total, pancake::factorial(n));
+    println!("pancake number f({n}) = {}", stats.depth());
+    if let Some(known) = pancake::pancake_number(n) {
+        let ok = stats.depth() == known && stats.total == pancake::factorial(n);
+        println!("validation vs known f({n})={known}: {}", if ok { "OK" } else { "MISMATCH" });
+        if !ok {
+            return Err("validation failed".into());
+        }
+    }
+    let io = r.io_snapshot();
+    println!(
+        "\nwall {dt:.2}s | disk: read {} written {} | aggregate {}",
+        fmt_bytes(io.bytes_read),
+        fmt_bytes(io.bytes_written),
+        fmt_rate(io.bytes_read + io.bytes_written, dt),
+    );
+    print!("{}", r.report());
+    Ok(())
+}
+
+fn cmd_rubik(args: &[String]) -> Result<(), String> {
+    let f = Flags::parse(args)?;
+    let cfg = config_from_flags(&f)?;
+    let r = Roomy::open(cfg).map_err(|e| e.to_string())?;
+    println!(
+        "2x2x2 pocket cube: {} states, 9 HTM generators",
+        roomy::apps::rubik::STATE_COUNT
+    );
+    let t0 = Instant::now();
+    let stats =
+        roomy::apps::rubik::roomy_bfs(&r, &Accel::from_roomy(&r)).map_err(|e| e.to_string())?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\nlevel  states");
+    for (i, c) in stats.levels.iter().enumerate() {
+        println!("{i:>5}  {c}");
+    }
+    let ok = stats.total == roomy::apps::rubik::STATE_COUNT
+        && stats.depth() == roomy::apps::rubik::GODS_NUMBER;
+    println!(
+        "\ntotal {} | God's number {} (known {}) | {}",
+        stats.total,
+        stats.depth(),
+        roomy::apps::rubik::GODS_NUMBER,
+        if ok { "validation OK" } else { "MISMATCH" }
+    );
+    let io = r.io_snapshot();
+    println!(
+        "wall {dt:.1}s | disk read {} written {}",
+        fmt_bytes(io.bytes_read),
+        fmt_bytes(io.bytes_written)
+    );
+    if ok { Ok(()) } else { Err("validation failed".into()) }
+}
+
+fn cmd_demo(args: &[String]) -> Result<(), String> {
+    let f = Flags::parse(args)?;
+    let cfg = config_from_flags(&f)?;
+    let r = Roomy::open(cfg).map_err(|e| e.to_string())?;
+    let run = || -> roomy::Result<()> {
+        println!("== RoomyArray: delayed updates + chain reduction ==");
+        let ra = r.array::<i64>("demo_arr", 10, 0)?;
+        ra.map_update(|i, v| *v = i as i64 + 1)?;
+        roomy::constructs::chainred::chain_reduce(&ra, |a, b| a + b)?;
+        let vals: Vec<i64> = (0..10).map(|i| ra.fetch(i).unwrap()).collect();
+        println!("after chain reduce: {vals:?}");
+
+        println!("\n== RoomyList: sets ==");
+        let a = r.list::<u64>("demo_a")?;
+        let b = r.list::<u64>("demo_b")?;
+        for v in [1u64, 2, 3, 4, 4] {
+            a.add(&v)?;
+        }
+        for v in [3u64, 4, 5] {
+            b.add(&v)?;
+        }
+        a.sync()?;
+        b.sync()?;
+        setops::to_set(&a)?;
+        setops::to_set(&b)?;
+        let c = setops::intersection(&r, "demo_c", &a, &b)?;
+        let mut got = c.collect()?;
+        got.sort();
+        println!("A ∩ B = {got:?}");
+
+        println!("\n== RoomyHashTable: word-count style update ==");
+        let ht = r.hash_table::<u64, u32>("demo_ht")?;
+        let bump =
+            ht.register_update(|_k, cur: Option<&u32>, _p: &()| Some(cur.copied().unwrap_or(0) + 1));
+        for k in [10u64, 20, 10, 10, 30] {
+            ht.update(&k, &(), bump)?;
+        }
+        ht.sync()?;
+        println!("count(10) = {:?}, size = {}", ht.fetch(&10)?, ht.size());
+
+        println!("\n== reduce: paper's sum of squares ==");
+        let l = r.list::<i64>("demo_sq")?;
+        for v in 1..=10i64 {
+            l.add(&v)?;
+        }
+        l.sync()?;
+        println!("sum of squares 1..10 = {}", mapreduce::sum_of_squares(&l)?);
+        Ok(())
+    };
+    run().map_err(|e| e.to_string())?;
+    print!("\n{}", r.report());
+    Ok(())
+}
+
+fn cmd_kernels(args: &[String]) -> Result<(), String> {
+    let f = Flags::parse(args)?;
+    let dir = f.get("artifacts").unwrap_or("artifacts");
+    let engine = roomy::runtime::Engine::load(dir)
+        .map_err(|e| format!("cannot load artifacts from {dir:?}: {e} (run `make artifacts`)"))?;
+    let mut names: Vec<_> = engine.names().iter().map(|s| s.to_string()).collect();
+    names.sort();
+    println!("artifacts in {dir:?}:");
+    for n in &names {
+        println!("  {n}");
+    }
+    // Rust-vs-XLA agreement smoke.
+    let xla = Accel::xla(std::sync::Arc::new(engine));
+    let rust = Accel::rust();
+    let words: Vec<u64> = (0..8192u64).map(|i| i.wrapping_mul(0x2545F4914F6CDD1D)).collect();
+    let a = xla.hash_partition(&words, 1, 64).map_err(|e| e.to_string())?;
+    let b = rust.hash_partition(&words, 1, 64).map_err(|e| e.to_string())?;
+    println!(
+        "hash_partition xla==rust over 8192 words: {}",
+        if a == b { "OK" } else { "MISMATCH" }
+    );
+    let x: Vec<i64> = (0..8192).map(|i| (i % 101) - 50).collect();
+    let sa = xla.prefix_scan(&x).map_err(|e| e.to_string())?;
+    let sb = rust.prefix_scan(&x).map_err(|e| e.to_string())?;
+    println!("prefix_scan   xla==rust over 8192 i64:   {}", if sa == sb { "OK" } else { "MISMATCH" });
+    Ok(())
+}

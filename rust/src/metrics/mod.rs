@@ -1,0 +1,272 @@
+//! Metrics: per-disk I/O statistics and phase timing.
+//!
+//! Roomy's performance story is entirely about *which bytes stream when*,
+//! so every disk touch in [`crate::storage`] is counted here. The
+//! experiment harnesses (rust/benches) read these counters to report
+//! aggregate bandwidth, seek counts, and sync-phase breakdowns.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Atomic I/O counters for one simulated node disk (or an aggregate).
+#[derive(Debug, Default)]
+pub struct IoStats {
+    /// Payload bytes read from disk files.
+    pub bytes_read: AtomicU64,
+    /// Payload bytes written to disk files.
+    pub bytes_written: AtomicU64,
+    /// Read calls issued.
+    pub reads: AtomicU64,
+    /// Write calls issued.
+    pub writes: AtomicU64,
+    /// File opens + explicit repositions — the unit the seek penalty is
+    /// charged against.
+    pub seeks: AtomicU64,
+    /// Nanoseconds spent sleeping to enforce the simulated [`crate::DiskPolicy`].
+    pub throttle_ns: AtomicU64,
+}
+
+impl IoStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_read(&self, bytes: u64) {
+        self.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_write(&self, bytes: u64) {
+        self.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        self.writes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_seek(&self) {
+        self.seeks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_throttle(&self, d: Duration) {
+        self.throttle_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> IoSnapshot {
+        IoSnapshot {
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.bytes_written.load(Ordering::Relaxed),
+            reads: self.reads.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            seeks: self.seeks.load(Ordering::Relaxed),
+            throttle_ns: self.throttle_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero all counters (benchmark harness support).
+    pub fn reset(&self) {
+        self.bytes_read.store(0, Ordering::Relaxed);
+        self.bytes_written.store(0, Ordering::Relaxed);
+        self.reads.store(0, Ordering::Relaxed);
+        self.writes.store(0, Ordering::Relaxed);
+        self.seeks.store(0, Ordering::Relaxed);
+        self.throttle_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Plain-data snapshot of [`IoStats`]; supports aggregation and deltas.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoSnapshot {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub seeks: u64,
+    pub throttle_ns: u64,
+}
+
+impl IoSnapshot {
+    /// Total payload bytes moved (read + written).
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Counter-wise difference `self - earlier` (saturating).
+    pub fn delta(&self, earlier: &IoSnapshot) -> IoSnapshot {
+        IoSnapshot {
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            bytes_written: self.bytes_written.saturating_sub(earlier.bytes_written),
+            reads: self.reads.saturating_sub(earlier.reads),
+            writes: self.writes.saturating_sub(earlier.writes),
+            seeks: self.seeks.saturating_sub(earlier.seeks),
+            throttle_ns: self.throttle_ns.saturating_sub(earlier.throttle_ns),
+        }
+    }
+}
+
+impl std::ops::Add for IoSnapshot {
+    type Output = IoSnapshot;
+    fn add(self, o: IoSnapshot) -> IoSnapshot {
+        IoSnapshot {
+            bytes_read: self.bytes_read + o.bytes_read,
+            bytes_written: self.bytes_written + o.bytes_written,
+            reads: self.reads + o.reads,
+            writes: self.writes + o.writes,
+            seeks: self.seeks + o.seeks,
+            throttle_ns: self.throttle_ns + o.throttle_ns,
+        }
+    }
+}
+
+/// Named wall-clock phase accumulator (sync shuffle, sort, apply, ...).
+///
+/// Cheap enough for per-sync use; read by benches for the E4 "time
+/// breakdown" rows.
+#[derive(Debug, Default)]
+pub struct PhaseTimes {
+    inner: Mutex<Vec<(String, Duration, u64)>>,
+}
+
+impl PhaseTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to phase `name` (creating it on first use).
+    pub fn add(&self, name: &str, d: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(row) = g.iter_mut().find(|r| r.0 == name) {
+            row.1 += d;
+            row.2 += 1;
+        } else {
+            g.push((name.to_string(), d, 1));
+        }
+    }
+
+    /// Time the closure and charge it to `name`.
+    pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(name, t0.elapsed());
+        r
+    }
+
+    /// (phase, total duration, hits) rows in insertion order.
+    pub fn rows(&self) -> Vec<(String, Duration, u64)> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Total duration recorded for `name`, if any.
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.inner.lock().unwrap().iter().find(|r| r.0 == name).map(|r| r.1)
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+
+    /// Human-readable multi-line report.
+    pub fn report(&self) -> String {
+        let rows = self.rows();
+        let mut s = String::new();
+        for (name, d, hits) in rows {
+            s.push_str(&format!("  {name:<28} {:>10.3} ms  ({hits} calls)\n", d.as_secs_f64() * 1e3));
+        }
+        s
+    }
+}
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: &[&str] = &["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a rate in MB/s from bytes and seconds.
+pub fn fmt_rate(bytes: u64, secs: f64) -> String {
+    if secs <= 0.0 {
+        return "inf".into();
+    }
+    format!("{:.1} MB/s", bytes as f64 / 1e6 / secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let s = IoStats::new();
+        s.add_read(100);
+        s.add_read(50);
+        s.add_write(30);
+        s.add_seek();
+        let snap = s.snapshot();
+        assert_eq!(snap.bytes_read, 150);
+        assert_eq!(snap.reads, 2);
+        assert_eq!(snap.bytes_written, 30);
+        assert_eq!(snap.writes, 1);
+        assert_eq!(snap.seeks, 1);
+        assert_eq!(snap.bytes_total(), 180);
+    }
+
+    #[test]
+    fn snapshot_delta_and_add() {
+        let s = IoStats::new();
+        s.add_read(100);
+        let a = s.snapshot();
+        s.add_read(20);
+        s.add_write(5);
+        let b = s.snapshot();
+        let d = b.delta(&a);
+        assert_eq!(d.bytes_read, 20);
+        assert_eq!(d.bytes_written, 5);
+        let sum = a + d;
+        assert_eq!(sum.bytes_read, b.bytes_read);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let s = IoStats::new();
+        s.add_read(10);
+        s.reset();
+        assert_eq!(s.snapshot(), IoSnapshot::default());
+    }
+
+    #[test]
+    fn phase_times_accumulate() {
+        let p = PhaseTimes::new();
+        p.add("sort", Duration::from_millis(5));
+        p.add("sort", Duration::from_millis(7));
+        p.add("apply", Duration::from_millis(1));
+        assert_eq!(p.get("sort"), Some(Duration::from_millis(12)));
+        let rows = p.rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].2, 2);
+        assert!(p.report().contains("sort"));
+    }
+
+    #[test]
+    fn phase_time_closure() {
+        let p = PhaseTimes::new();
+        let v = p.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(p.get("work").is_some());
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(2048).starts_with("2.00 KiB"));
+        assert!(fmt_rate(1_000_000, 1.0).starts_with("1.0 MB/s"));
+    }
+}

@@ -1,0 +1,688 @@
+//! `RoomyArray<T>`: a fixed-size, disk-resident, bucket-partitioned array.
+//!
+//! Paper §2: arrays (and hash tables) avoid the external sorts that
+//! dominate `RoomyList` workloads by *bucketing* — indices map statically
+//! to buckets sized to fit in RAM, delayed `access`/`update` operations
+//! are staged per bucket, and `sync` streams each bucket through memory
+//! exactly once to apply its batch.
+//!
+//! Semantics (matching the paper's chain-reduction example):
+//! - delayed ops are applied at `sync`, never before;
+//! - `passed` values are captured at issue time (scatter-gather), so an
+//!   update reading pre-sync state via `map` is deterministic;
+//! - within one bucket, staged ops apply in issue (FIFO) order.
+
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+use super::element::Element;
+use super::funcs::{AccessId, FuncRegistry, PredId, UpdateId};
+use super::ops::{OpKind, StagedOps};
+use super::Ctx;
+use crate::error::{Result, RoomyError};
+use crate::storage::chunkfile::{RecordReader, RecordWriter};
+
+/// Records streamed per batch during map/reduce scans.
+const SCAN_BATCH: usize = 8192;
+
+/// A distributed disk-backed array of `len` fixed-size elements.
+///
+/// Cheap to clone (all clones share state); safe to use from user
+/// functions running on worker threads.
+pub struct RoomyArray<T: Element> {
+    inner: Arc<ArrayInner<T>>,
+}
+
+impl<T: Element> Clone for RoomyArray<T> {
+    fn clone(&self) -> Self {
+        RoomyArray { inner: Arc::clone(&self.inner) }
+    }
+}
+
+struct ArrayInner<T: Element> {
+    ctx: Ctx,
+    name: String,
+    dir: String,
+    len: u64,
+    /// Elements per bucket (last bucket may be short).
+    bsize: u64,
+    funcs: FuncRegistry,
+    staged: StagedOps,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T: Element> RoomyArray<T> {
+    /// Create the array, filling every element with `default`.
+    pub(crate) fn create(ctx: Ctx, name: &str, len: u64, default: T) -> Result<Self> {
+        if len == 0 {
+            return Err(RoomyError::InvalidArg("RoomyArray length must be > 0".into()));
+        }
+        let dir = format!("ra_{name}");
+        let cluster = ctx.cluster.clone();
+        let nb = cluster.nbuckets() as u64;
+        let bsize = len.div_ceil(nb).max(1);
+        let inner = ArrayInner {
+            staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
+            funcs: FuncRegistry::new(&format!("RoomyArray({name})")),
+            ctx,
+            name: name.to_string(),
+            dir: dir.clone(),
+            len,
+            bsize,
+            _t: PhantomData,
+        };
+        // Materialize bucket files filled with the default element.
+        let default_bytes = default.to_bytes();
+        inner.for_owned_buckets("ra.create", |this, b, disk| {
+            let recs = this.bucket_len(b);
+            if recs == 0 {
+                return Ok(());
+            }
+            let mut w = RecordWriter::create(disk, this.bucket_file(b), T::SIZE)?;
+            // Write in chunks to keep the staging allocation bounded.
+            let chunk_recs = SCAN_BATCH.min(recs as usize);
+            let chunk: Vec<u8> = default_bytes
+                .iter()
+                .copied()
+                .cycle()
+                .take(chunk_recs * T::SIZE)
+                .collect();
+            let mut left = recs;
+            while left > 0 {
+                let n = (left as usize).min(chunk_recs);
+                w.push_batch(&chunk[..n * T::SIZE])?;
+                left -= n as u64;
+            }
+            w.finish()
+        })?;
+        Ok(RoomyArray { inner: Arc::new(inner) })
+    }
+
+    /// Number of elements (immediate; paper Table 1 `size`).
+    pub fn len(&self) -> u64 {
+        self.inner.len
+    }
+
+    /// True if the array has no elements (never: creation requires > 0).
+    pub fn is_empty(&self) -> bool {
+        self.inner.len == 0
+    }
+
+    /// Structure name.
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Total staged (not yet synced) delayed-op bytes.
+    pub fn pending_bytes(&self) -> u64 {
+        self.inner.staged.staged_bytes()
+    }
+
+    // ------------------------------------------------------------------
+    // Function registration (typed wrappers over the byte registry)
+    // ------------------------------------------------------------------
+
+    /// Register an update function `f(index, element, passed)`; the
+    /// element is mutated in place when the op is applied at sync.
+    pub fn register_update<P: Element>(
+        &self,
+        f: impl Fn(u64, &mut T, &P) + Send + Sync + 'static,
+    ) -> UpdateId {
+        self.inner.funcs.register_update(
+            P::SIZE,
+            Box::new(move |idx, elt, passed| {
+                let mut t = T::read_from(elt);
+                let p = P::read_from(passed);
+                f(idx, &mut t, &p);
+                t.write_to(elt);
+            }),
+        )
+    }
+
+    /// Register an access function `f(index, element, passed)`. Access
+    /// functions run on worker threads during sync and may issue delayed
+    /// ops on *other* structures (the paper's pair-reduction / BFS idiom).
+    pub fn register_access<P: Element>(
+        &self,
+        f: impl Fn(u64, &T, &P) + Send + Sync + 'static,
+    ) -> AccessId {
+        self.inner.funcs.register_access(
+            P::SIZE,
+            Box::new(move |idx, elt, passed| {
+                f(idx, &T::read_from(elt), &P::read_from(passed));
+            }),
+        )
+    }
+
+    /// Register a predicate and initialize its count with one streaming
+    /// scan; afterwards the count is maintained incrementally on every
+    /// mutation (paper Table 1: `predicateCount` needs no extra scan).
+    pub fn register_predicate(
+        &self,
+        f: impl Fn(u64, &T) -> bool + Send + Sync + 'static,
+    ) -> Result<PredId> {
+        let id = self
+            .inner
+            .funcs
+            .register_pred(Box::new(move |idx, elt| f(idx, &T::read_from(elt))));
+        // Initializing scan.
+        let inner = &self.inner;
+        inner.for_owned_buckets("ra.pred_scan", |this, b, disk| {
+            this.scan_bucket(b, disk, |idx, elt| {
+                this.funcs.charge_pred_single(id, idx, elt);
+                Ok(())
+            })
+        })?;
+        Ok(id)
+    }
+
+    /// Current count of elements satisfying predicate `id` (immediate).
+    pub fn predicate_count(&self, id: PredId) -> u64 {
+        self.inner.funcs.pred_count(id)
+    }
+
+    // ------------------------------------------------------------------
+    // Delayed operations
+    // ------------------------------------------------------------------
+
+    /// Delayed update of element `i` with `passed` via function `id`.
+    pub fn update<P: Element>(&self, i: u64, passed: &P, id: UpdateId) -> Result<()> {
+        self.stage_op(OpKind::Update, id.0, self.inner.funcs.update_passed_len(id.0)?, i, passed)
+    }
+
+    /// Delayed access of element `i` with `passed` via function `id`.
+    pub fn access<P: Element>(&self, i: u64, passed: &P, id: AccessId) -> Result<()> {
+        self.stage_op(OpKind::Access, id.0, self.inner.funcs.access_passed_len(id.0)?, i, passed)
+    }
+
+    fn stage_op<P: Element>(
+        &self,
+        kind: OpKind,
+        fn_id: u8,
+        expect_len: usize,
+        i: u64,
+        passed: &P,
+    ) -> Result<()> {
+        let inner = &self.inner;
+        if i >= inner.len {
+            return Err(RoomyError::InvalidArg(format!(
+                "index {i} out of bounds for RoomyArray({}) of length {}",
+                inner.name, inner.len
+            )));
+        }
+        if P::SIZE != expect_len {
+            return Err(RoomyError::InvalidArg(format!(
+                "passed value is {} bytes but function was registered with {} bytes",
+                P::SIZE,
+                expect_len
+            )));
+        }
+        super::ops::with_op_buf(|rec| {
+            rec.push(kind as u8);
+            rec.push(fn_id);
+            rec.extend_from_slice(&i.to_le_bytes());
+            let off = rec.len();
+            rec.resize(off + P::SIZE, 0);
+            passed.write_to(&mut rec[off..]);
+            inner.staged.stage(inner.bucket_of(i), rec)
+        })
+    }
+
+    /// Apply all outstanding delayed operations (paper Table 1 `sync`).
+    ///
+    /// Each bucket is loaded into RAM once, its op log is streamed in FIFO
+    /// order, and the bucket is written back if any update dirtied it.
+    /// Ops issued *during* this sync (by access functions) are processed
+    /// by the next sync.
+    pub fn sync(&self) -> Result<()> {
+        let inner = &self.inner;
+        if inner.staged.is_empty() {
+            return Ok(());
+        }
+        inner.for_owned_buckets("ra.sync", |this, b, disk| {
+            let mut ops = this.staged.take(b, &this.ctx.cluster, &this.dir, this.ctx.cfg.op_buffer_bytes);
+            if ops.is_empty() {
+                return ops.clear();
+            }
+            let file = this.bucket_file(b);
+            let mut data = disk.read_all(&file)?;
+            let base = b as u64 * this.bsize;
+            let npreds = this.funcs.npreds();
+            let mut dirty = false;
+
+            let mut reader = ops.reader()?;
+            let mut header = [0u8; 2];
+            let mut idx_buf = [0u8; 8];
+            let mut passed = Vec::new();
+            let mut old = vec![0u8; T::SIZE];
+            while reader.read_exact_or_eof(&mut header)? {
+                let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
+                    RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
+                })?;
+                let fn_id = header[1];
+                if !reader.read_exact_or_eof(&mut idx_buf)? {
+                    return Err(RoomyError::InvalidArg("truncated op record".into()));
+                }
+                let idx = u64::from_le_bytes(idx_buf);
+                let plen = match kind {
+                    OpKind::Update => this.funcs.update_passed_len(fn_id)?,
+                    OpKind::Access => this.funcs.access_passed_len(fn_id)?,
+                    _ => {
+                        return Err(RoomyError::InvalidArg(format!(
+                            "unexpected op kind {kind:?} in array log"
+                        )))
+                    }
+                };
+                passed.resize(plen, 0);
+                if plen > 0 && !reader.read_exact_or_eof(&mut passed)? {
+                    return Err(RoomyError::InvalidArg("truncated op record".into()));
+                }
+                let off = ((idx - base) as usize) * T::SIZE;
+                let elt = &mut data[off..off + T::SIZE];
+                match kind {
+                    OpKind::Update => {
+                        if npreds > 0 {
+                            old.copy_from_slice(elt);
+                        }
+                        this.funcs.apply_update(fn_id, idx, elt, &passed)?;
+                        if npreds > 0 && old[..] != elt[..] {
+                            this.funcs.charge_preds(idx, &old, -1);
+                            this.funcs.charge_preds(idx, elt, 1);
+                        }
+                        dirty = true;
+                    }
+                    OpKind::Access => {
+                        this.funcs.apply_access(fn_id, idx, elt, &passed)?;
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            drop(reader);
+            if dirty {
+                disk.write_all(&file, &data)?;
+            }
+            ops.clear()
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Immediate operations
+    // ------------------------------------------------------------------
+
+    /// Apply `f(index, element)` to every element, streaming all disks in
+    /// parallel (immediate; paper Table 1 `map`).
+    pub fn map(&self, f: impl Fn(u64, &T) + Sync) -> Result<()> {
+        self.inner.for_owned_buckets("ra.map", |this, b, disk| {
+            this.scan_bucket(b, disk, |idx, elt| {
+                f(idx, &T::read_from(elt));
+                Ok(())
+            })
+        })
+    }
+
+    /// Map that may mutate elements in place (streaming rewrite).
+    pub fn map_update(&self, f: impl Fn(u64, &mut T) + Sync) -> Result<()> {
+        let inner = &self.inner;
+        inner.for_owned_buckets("ra.map_update", |this, b, disk| {
+            let recs = this.bucket_len(b);
+            if recs == 0 {
+                return Ok(());
+            }
+            let file = this.bucket_file(b);
+            let npreds = this.funcs.npreds();
+            let tmp = format!("{}.mu.tmp", file);
+            {
+                let mut r = RecordReader::open(disk, &file, T::SIZE)?;
+                let mut w = RecordWriter::create(disk, &tmp, T::SIZE)?;
+                let mut buf = Vec::new();
+                let base = b as u64 * this.bsize;
+                let mut idx = base;
+                loop {
+                    let n = r.read_batch(&mut buf, SCAN_BATCH)?;
+                    if n == 0 {
+                        break;
+                    }
+                    for elt in buf.chunks_exact_mut(T::SIZE) {
+                        let mut t = T::read_from(elt);
+                        f(idx, &mut t);
+                        if npreds > 0 {
+                            this.funcs.charge_preds(idx, elt, -1);
+                        }
+                        t.write_to(elt);
+                        if npreds > 0 {
+                            this.funcs.charge_preds(idx, elt, 1);
+                        }
+                        idx += 1;
+                    }
+                    w.push_batch(&buf)?;
+                }
+                w.finish()?;
+            }
+            disk.rename(&tmp, &file)
+        })
+    }
+
+    /// Reduce: `fold` combines a per-worker partial with one element;
+    /// `merge` combines partials. Both must be associative/commutative in
+    /// effect (order is unspecified, as in the paper).
+    pub fn reduce<R: Send>(
+        &self,
+        identity: impl Fn() -> R + Sync,
+        fold: impl Fn(R, u64, &T) -> R + Sync,
+        merge: impl Fn(R, R) -> R,
+    ) -> Result<R> {
+        let inner = &self.inner;
+        let partials: Vec<R> = inner.ctx.cluster.run("ra.reduce", |w, disk| {
+            let mut acc = identity();
+            for b in inner.ctx.cluster.buckets_of(w) {
+                let mut local = Some(std::mem::replace(&mut acc, identity()));
+                inner.scan_bucket(b, disk, |idx, elt| {
+                    let cur = local.take().expect("reduce accumulator");
+                    local = Some(fold(cur, idx, &T::read_from(elt)));
+                    Ok(())
+                })?;
+                acc = local.take().expect("reduce accumulator");
+            }
+            Ok(acc)
+        })?;
+        let mut it = partials.into_iter();
+        let first = it.next().expect("at least one worker");
+        Ok(it.fold(first, merge))
+    }
+
+    /// Random-access read of one element. **Debug/testing convenience** —
+    /// this is exactly the latency-bound pattern Roomy exists to avoid;
+    /// it is charged a seek per call.
+    pub fn fetch(&self, i: u64) -> Result<T> {
+        let inner = &self.inner;
+        if i >= inner.len {
+            return Err(RoomyError::InvalidArg(format!("index {i} out of bounds")));
+        }
+        let b = inner.bucket_of(i);
+        let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
+        let mut r = disk.open_file(inner.bucket_file(b))?;
+        let local = i - b as u64 * inner.bsize;
+        r.seek_to(local * T::SIZE as u64)?;
+        let mut buf = vec![0u8; T::SIZE];
+        r.read_exact(&mut buf)?;
+        Ok(T::read_from(&buf))
+    }
+
+    /// Delete all on-disk state for this array.
+    pub fn destroy(self) -> Result<()> {
+        let dir = self.inner.dir.clone();
+        self.inner.ctx.cluster.remove_structure_dirs(dir)
+    }
+}
+
+/// Raw bucket access for the accelerated constructs (crate-internal).
+///
+/// These bypass predicate accounting; callers (e.g.
+/// [`crate::constructs::prefix::prefix_scan_array`]) must not be mixed
+/// with registered predicates.
+impl RoomyArray<i64> {
+    /// Number of non-empty buckets.
+    pub(crate) fn bucket_count(&self) -> u32 {
+        self.inner.len.div_ceil(self.inner.bsize) as u32
+    }
+
+    /// Read bucket `b` and decode its elements.
+    pub(crate) fn read_bucket_i64(&self, b: u32) -> Result<Vec<i64>> {
+        let inner = &self.inner;
+        if inner.bucket_len(b) == 0 {
+            return Ok(Vec::new());
+        }
+        let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
+        let data = disk.read_all(inner.bucket_file(b))?;
+        Ok(data.chunks_exact(8).map(i64::read_from).collect())
+    }
+
+    /// Overwrite bucket `b` with `vals` (must match the bucket length).
+    pub(crate) fn write_bucket_i64(&self, b: u32, vals: &[i64]) -> Result<()> {
+        let inner = &self.inner;
+        debug_assert_eq!(vals.len() as u64, inner.bucket_len(b));
+        let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
+        let mut bytes = vec![0u8; vals.len() * 8];
+        for (v, chunk) in vals.iter().zip(bytes.chunks_exact_mut(8)) {
+            v.write_to(chunk);
+        }
+        disk.write_all(inner.bucket_file(b), &bytes)
+    }
+}
+
+impl<T: Element> ArrayInner<T> {
+    fn bucket_of(&self, i: u64) -> u32 {
+        (i / self.bsize) as u32
+    }
+
+    fn bucket_file(&self, b: u32) -> String {
+        format!("{}/b{b}.dat", self.dir)
+    }
+
+    /// Elements held by bucket `b`.
+    fn bucket_len(&self, b: u32) -> u64 {
+        let start = b as u64 * self.bsize;
+        if start >= self.len {
+            0
+        } else {
+            self.bsize.min(self.len - start)
+        }
+    }
+
+    /// Run `f(self, bucket, disk)` over every owned bucket on every node.
+    fn for_owned_buckets(
+        &self,
+        phase: &str,
+        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+    ) -> Result<()> {
+        let cluster = &self.ctx.cluster;
+        cluster.run(phase, |w, disk| {
+            for b in cluster.buckets_of(w) {
+                f(self, b, disk)?;
+            }
+            Ok(())
+        })?;
+        Ok(())
+    }
+
+    /// Stream bucket `b`, invoking `f(index, element bytes)`.
+    fn scan_bucket(
+        &self,
+        b: u32,
+        disk: &crate::storage::NodeDisk,
+        mut f: impl FnMut(u64, &[u8]) -> Result<()>,
+    ) -> Result<()> {
+        if self.bucket_len(b) == 0 {
+            return Ok(());
+        }
+        let mut r = RecordReader::open(disk, self.bucket_file(b), T::SIZE)?;
+        let mut buf = Vec::new();
+        let mut idx = b as u64 * self.bsize;
+        loop {
+            let n = r.read_batch(&mut buf, SCAN_BATCH)?;
+            if n == 0 {
+                return Ok(());
+            }
+            for elt in buf.chunks_exact(T::SIZE) {
+                f(idx, elt)?;
+                idx += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roomy::Roomy;
+    use crate::testutil::tmpdir;
+
+    fn mk(root: &std::path::Path) -> Roomy {
+        Roomy::open(crate::RoomyConfig::for_testing(root)).unwrap()
+    }
+
+    #[test]
+    fn create_fill_and_fetch() {
+        let t = tmpdir("ra_create");
+        let r = mk(t.path());
+        let ra = r.array::<u32>("a", 100, 7).unwrap();
+        assert_eq!(ra.len(), 100);
+        assert_eq!(ra.fetch(0).unwrap(), 7);
+        assert_eq!(ra.fetch(99).unwrap(), 7);
+        assert!(ra.fetch(100).is_err());
+    }
+
+    #[test]
+    fn delayed_update_applies_only_at_sync() {
+        let t = tmpdir("ra_delay");
+        let r = mk(t.path());
+        let ra = r.array::<u64>("a", 16, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut u64, p: &u64| *v += *p);
+        ra.update(3, &10u64, add).unwrap();
+        ra.update(3, &5u64, add).unwrap();
+        assert_eq!(ra.fetch(3).unwrap(), 0, "update must be delayed");
+        ra.sync().unwrap();
+        assert_eq!(ra.fetch(3).unwrap(), 15, "FIFO batch applied");
+        // idempotent sync
+        ra.sync().unwrap();
+        assert_eq!(ra.fetch(3).unwrap(), 15);
+    }
+
+    #[test]
+    fn updates_hit_every_bucket() {
+        let t = tmpdir("ra_buckets");
+        let r = mk(t.path());
+        let n = 1000u64;
+        let ra = r.array::<u64>("a", n, 0).unwrap();
+        let set = ra.register_update(|i, v: &mut u64, p: &u64| *v = i + *p);
+        for i in 0..n {
+            ra.update(i, &1000u64, set).unwrap();
+        }
+        ra.sync().unwrap();
+        let sum = ra
+            .reduce(|| 0u64, |acc, _i, v| acc + v, |a, b| a + b)
+            .unwrap();
+        assert_eq!(sum, (0..n).map(|i| i + 1000).sum::<u64>());
+    }
+
+    #[test]
+    fn access_runs_at_sync_with_element_value() {
+        let t = tmpdir("ra_access");
+        let r = mk(t.path());
+        let ra = r.array::<u32>("a", 10, 42).unwrap();
+        let hits = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let h = hits.clone();
+        let acc = ra.register_access(move |i, v: &u32, p: &u32| {
+            h.lock().unwrap().push((i, *v, *p));
+        });
+        ra.access(7, &9u32, acc).unwrap();
+        assert!(hits.lock().unwrap().is_empty());
+        ra.sync().unwrap();
+        assert_eq!(hits.lock().unwrap().as_slice(), &[(7, 42, 9)]);
+    }
+
+    #[test]
+    fn map_update_and_reduce() {
+        let t = tmpdir("ra_mapred");
+        let r = mk(t.path());
+        let ra = r.array::<u64>("a", 257, 1).unwrap();
+        ra.map_update(|i, v| *v = i).unwrap();
+        let max = ra
+            .reduce(|| 0u64, |acc, _i, v| acc.max(*v), |a, b| a.max(b))
+            .unwrap();
+        assert_eq!(max, 256);
+    }
+
+    #[test]
+    fn map_sees_indices_in_every_bucket() {
+        let t = tmpdir("ra_map");
+        let r = mk(t.path());
+        let ra = r.array::<u8>("a", 100, 0).unwrap();
+        let seen = std::sync::Mutex::new(vec![false; 100]);
+        ra.map(|i, _v| {
+            seen.lock().unwrap()[i as usize] = true;
+        })
+        .unwrap();
+        assert!(seen.lock().unwrap().iter().all(|&x| x));
+    }
+
+    #[test]
+    fn predicate_count_initial_scan_and_maintenance() {
+        let t = tmpdir("ra_pred");
+        let r = mk(t.path());
+        let ra = r.array::<u32>("a", 50, 0).unwrap();
+        let set = ra.register_update(|_i, v: &mut u32, p: &u32| *v = *p);
+        ra.update(4, &9u32, set).unwrap();
+        ra.sync().unwrap();
+        // register after some data exists: initializing scan must count it
+        let nonzero = ra.register_predicate(|_i, v| *v != 0).unwrap();
+        assert_eq!(ra.predicate_count(nonzero), 1);
+        // maintained incrementally afterwards
+        ra.update(5, &1u32, set).unwrap();
+        ra.update(4, &0u32, set).unwrap();
+        ra.sync().unwrap();
+        assert_eq!(ra.predicate_count(nonzero), 1);
+        ra.map_update(|_i, v| *v = 3).unwrap();
+        assert_eq!(ra.predicate_count(nonzero), 50);
+    }
+
+    #[test]
+    fn out_of_bounds_and_wrong_passed_size() {
+        let t = tmpdir("ra_oob");
+        let r = mk(t.path());
+        let ra = r.array::<u32>("a", 10, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut u32, p: &u32| *v += *p);
+        assert!(ra.update(10, &1u32, add).is_err());
+        assert!(ra.update(0, &1u64, add).is_err(), "passed size mismatch");
+    }
+
+    #[test]
+    fn chain_reduction_semantics_pre_sync_values() {
+        // The paper's chain-reduction determinism: passed values captured
+        // from pre-sync state via map, applied at sync.
+        let t = tmpdir("ra_chain");
+        let r = mk(t.path());
+        let n = 64u64;
+        let ra = r.array::<u64>("a", n, 0).unwrap();
+        ra.map_update(|i, v| *v = i + 1).unwrap(); // a[i] = i+1
+        let ra2 = ra.clone();
+        let do_update = ra.register_update(|_i, v: &mut u64, prev: &u64| *v += *prev);
+        ra.map(move |i, v| {
+            if i + 1 < n {
+                ra2.update(i + 1, v, do_update).unwrap();
+            }
+        })
+        .unwrap();
+        ra.sync().unwrap();
+        // a[i] = old a[i] + old a[i-1] = (i+1) + i
+        for i in 1..n {
+            assert_eq!(ra.fetch(i).unwrap(), 2 * i + 1);
+        }
+        assert_eq!(ra.fetch(0).unwrap(), 1);
+    }
+
+    #[test]
+    fn destroy_removes_files() {
+        let t = tmpdir("ra_destroy");
+        let r = mk(t.path());
+        let ra = r.array::<u32>("a", 10, 0).unwrap();
+        ra.sync().unwrap();
+        ra.destroy().unwrap();
+        for w in 0..r.cluster().nworkers() {
+            assert!(!r.cluster().disk(w).exists("ra_a"));
+        }
+    }
+
+    #[test]
+    fn pending_bytes_reflects_staging() {
+        let t = tmpdir("ra_pending");
+        let r = mk(t.path());
+        let ra = r.array::<u32>("a", 10, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut u32, p: &u32| *v += *p);
+        assert_eq!(ra.pending_bytes(), 0);
+        ra.update(1, &1, add).unwrap();
+        assert!(ra.pending_bytes() > 0);
+        ra.sync().unwrap();
+        assert_eq!(ra.pending_bytes(), 0);
+    }
+}

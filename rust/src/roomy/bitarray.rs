@@ -1,0 +1,539 @@
+//! `RoomyBitArray`: a disk-resident array of sub-byte elements.
+//!
+//! The paper (§2) notes RoomyArray elements "can be as small as one bit" —
+//! this is what makes array-based breadth-first search over an `n!`-sized
+//! implicit state space affordable (1–2 bits per state instead of a full
+//! packed permutation). Elements are `bits` ∈ {1, 2, 4, 8} wide, packed
+//! into byte-aligned bucket files; values are `u8` in `0..2^bits`.
+//!
+//! Delayed `update`/`access` mirror [`super::RoomyArray`]; a per-value
+//! histogram is maintained at every mutation so `count_value` (the
+//! bit-array analogue of `predicateCount`) is O(1).
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+use super::element::Element;
+use super::funcs::{AccessId, UpdateId};
+use super::ops::{OpKind, StagedOps};
+use super::Ctx;
+use crate::error::{Result, RoomyError};
+
+/// Type-erased bit-array update: `(index, current, passed) -> new`.
+type BitUpdateFn = Box<dyn Fn(u64, u8, &[u8]) -> u8 + Send + Sync>;
+/// Type-erased bit-array access: `(index, value, passed)`.
+type BitAccessFn = Box<dyn Fn(u64, u8, &[u8]) + Send + Sync>;
+
+/// A distributed disk-backed array of sub-byte elements. Cheap to clone.
+#[derive(Clone)]
+pub struct RoomyBitArray {
+    inner: Arc<BitInner>,
+}
+
+struct BitInner {
+    ctx: Ctx,
+    name: String,
+    dir: String,
+    len: u64,
+    bits: u8,
+    /// Elements per bucket; multiple of `8 / bits` so buckets are
+    /// byte-aligned on disk.
+    bsize: u64,
+    updates: std::sync::RwLock<Vec<(usize, BitUpdateFn)>>,
+    accesses: std::sync::RwLock<Vec<(usize, BitAccessFn)>>,
+    staged: StagedOps,
+    /// Histogram: counts[v] = number of elements equal to v.
+    counts: Vec<AtomicI64>,
+}
+
+impl RoomyBitArray {
+    pub(crate) fn create(ctx: Ctx, name: &str, len: u64, bits: u8) -> Result<Self> {
+        if !matches!(bits, 1 | 2 | 4 | 8) {
+            return Err(RoomyError::InvalidArg(format!(
+                "bit width must be 1, 2, 4 or 8 (got {bits})"
+            )));
+        }
+        if len == 0 {
+            return Err(RoomyError::InvalidArg("RoomyBitArray length must be > 0".into()));
+        }
+        let dir = format!("rba_{name}");
+        let cluster = ctx.cluster.clone();
+        let per_byte = (8 / bits) as u64;
+        let nb = cluster.nbuckets() as u64;
+        // Round bucket size up to a whole number of bytes.
+        let bsize = len.div_ceil(nb).div_ceil(per_byte) * per_byte;
+        let nvals = 1usize << bits;
+        let mut counts = Vec::with_capacity(nvals);
+        counts.push(AtomicI64::new(len as i64)); // zero-filled
+        for _ in 1..nvals {
+            counts.push(AtomicI64::new(0));
+        }
+        let inner = BitInner {
+            staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
+            updates: std::sync::RwLock::new(Vec::new()),
+            accesses: std::sync::RwLock::new(Vec::new()),
+            ctx,
+            name: name.to_string(),
+            dir,
+            len,
+            bits,
+            bsize,
+            counts,
+        };
+        // Materialize zero-filled bucket files.
+        inner.for_owned_buckets("rba.create", |this, b, disk| {
+            let nbytes = this.bucket_bytes(b);
+            if nbytes == 0 {
+                return Ok(());
+            }
+            disk.write_all(this.bucket_file(b), &vec![0u8; nbytes])
+        })?;
+        Ok(RoomyBitArray { inner: Arc::new(inner) })
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> u64 {
+        self.inner.len
+    }
+
+    /// True if empty (never; creation requires > 0).
+    pub fn is_empty(&self) -> bool {
+        self.inner.len == 0
+    }
+
+    /// Bits per element.
+    pub fn bits(&self) -> u8 {
+        self.inner.bits
+    }
+
+    /// Structure name.
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Count of elements currently equal to `v` (O(1); maintained at every
+    /// mutation — the paper's `predicateCount` contract).
+    pub fn count_value(&self, v: u8) -> u64 {
+        self.inner
+            .counts
+            .get(v as usize)
+            .map(|c| c.load(Ordering::Relaxed).max(0) as u64)
+            .unwrap_or(0)
+    }
+
+    /// Register an update `f(index, current, passed) -> new` (result is
+    /// masked to the element width).
+    pub fn register_update<P: Element>(
+        &self,
+        f: impl Fn(u64, u8, &P) -> u8 + Send + Sync + 'static,
+    ) -> UpdateId {
+        let mut g = self.inner.updates.write().unwrap();
+        assert!(g.len() < 256);
+        g.push((P::SIZE, Box::new(move |i, cur, p| f(i, cur, &P::read_from(p)))));
+        UpdateId((g.len() - 1) as u8)
+    }
+
+    /// Register an access `f(index, value, passed)`.
+    pub fn register_access<P: Element>(
+        &self,
+        f: impl Fn(u64, u8, &P) + Send + Sync + 'static,
+    ) -> AccessId {
+        let mut g = self.inner.accesses.write().unwrap();
+        assert!(g.len() < 256);
+        g.push((P::SIZE, Box::new(move |i, cur, p| f(i, cur, &P::read_from(p)))));
+        AccessId((g.len() - 1) as u8)
+    }
+
+    /// Delayed update of element `i`.
+    pub fn update<P: Element>(&self, i: u64, passed: &P, id: UpdateId) -> Result<()> {
+        let expect = self.inner.update_passed_len(id.0)?;
+        self.stage_op(OpKind::Update, id.0, expect, i, passed)
+    }
+
+    /// Delayed access of element `i`.
+    pub fn access<P: Element>(&self, i: u64, passed: &P, id: AccessId) -> Result<()> {
+        let expect = self.inner.access_passed_len(id.0)?;
+        self.stage_op(OpKind::Access, id.0, expect, i, passed)
+    }
+
+    fn stage_op<P: Element>(
+        &self,
+        kind: OpKind,
+        fn_id: u8,
+        expect_len: usize,
+        i: u64,
+        passed: &P,
+    ) -> Result<()> {
+        let inner = &self.inner;
+        if i >= inner.len {
+            return Err(RoomyError::InvalidArg(format!(
+                "index {i} out of bounds for RoomyBitArray({}) of length {}",
+                inner.name, inner.len
+            )));
+        }
+        if P::SIZE != expect_len {
+            return Err(RoomyError::InvalidArg(format!(
+                "passed value is {} bytes but function was registered with {expect_len}",
+                P::SIZE
+            )));
+        }
+        super::ops::with_op_buf(|rec| {
+            rec.push(kind as u8);
+            rec.push(fn_id);
+            rec.extend_from_slice(&i.to_le_bytes());
+            let off = rec.len();
+            rec.resize(off + P::SIZE, 0);
+            passed.write_to(&mut rec[off..]);
+            inner.staged.stage((i / inner.bsize) as u32, rec)
+        })
+    }
+
+    /// Apply all outstanding delayed operations (FIFO per bucket).
+    pub fn sync(&self) -> Result<()> {
+        let inner = &self.inner;
+        if inner.staged.is_empty() {
+            return Ok(());
+        }
+        inner.for_owned_buckets("rba.sync", |this, b, disk| {
+            let mut ops = this.staged.take(
+                b,
+                &this.ctx.cluster,
+                &this.dir,
+                this.ctx.cfg.op_buffer_bytes,
+            );
+            if ops.is_empty() {
+                return ops.clear();
+            }
+            let file = this.bucket_file(b);
+            let mut data = disk.read_all(&file)?;
+            let mut dirty = false;
+
+            let mut reader = ops.reader()?;
+            let mut header = [0u8; 2];
+            let mut idx_buf = [0u8; 8];
+            let mut passed = Vec::new();
+            while reader.read_exact_or_eof(&mut header)? {
+                let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
+                    RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
+                })?;
+                let fn_id = header[1];
+                if !reader.read_exact_or_eof(&mut idx_buf)? {
+                    return Err(RoomyError::InvalidArg("truncated op record".into()));
+                }
+                let idx = u64::from_le_bytes(idx_buf);
+                let plen = match kind {
+                    OpKind::Update => this.update_passed_len(fn_id)?,
+                    OpKind::Access => this.access_passed_len(fn_id)?,
+                    other => {
+                        return Err(RoomyError::InvalidArg(format!(
+                            "unexpected op kind {other:?} in bit-array log"
+                        )))
+                    }
+                };
+                passed.resize(plen, 0);
+                if plen > 0 && !reader.read_exact_or_eof(&mut passed)? {
+                    return Err(RoomyError::InvalidArg("truncated op record".into()));
+                }
+                let local = idx - b as u64 * this.bsize;
+                let cur = this.get_packed(&data, local);
+                match kind {
+                    OpKind::Update => {
+                        let new = {
+                            let g = this.updates.read().unwrap();
+                            let (_, f) = g.get(fn_id as usize).ok_or_else(|| {
+                                RoomyError::UnknownFunc {
+                                    structure: format!("RoomyBitArray({})", this.name),
+                                    id: fn_id,
+                                }
+                            })?;
+                            f(idx, cur, &passed) & this.mask()
+                        };
+                        if new != cur {
+                            this.set_packed(&mut data, local, new);
+                            this.counts[cur as usize].fetch_sub(1, Ordering::Relaxed);
+                            this.counts[new as usize].fetch_add(1, Ordering::Relaxed);
+                            dirty = true;
+                        }
+                    }
+                    OpKind::Access => {
+                        let g = this.accesses.read().unwrap();
+                        let (_, f) = g.get(fn_id as usize).ok_or_else(|| {
+                            RoomyError::UnknownFunc {
+                                structure: format!("RoomyBitArray({})", this.name),
+                                id: fn_id,
+                            }
+                        })?;
+                        f(idx, cur, &passed);
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            drop(reader);
+            if dirty {
+                disk.write_all(&file, &data)?;
+            }
+            ops.clear()
+        })
+    }
+
+    /// Apply `f(index, value)` to every element (streaming, parallel).
+    pub fn map(&self, f: impl Fn(u64, u8) + Sync) -> Result<()> {
+        let inner = &self.inner;
+        inner.for_owned_buckets("rba.map", |this, b, disk| {
+            let nbytes = this.bucket_bytes(b);
+            if nbytes == 0 {
+                return Ok(());
+            }
+            let data = disk.read_all(this.bucket_file(b))?;
+            let base = b as u64 * this.bsize;
+            let count = this.bucket_len(b);
+            for local in 0..count {
+                f(base + local, this.get_packed(&data, local));
+            }
+            Ok(())
+        })
+    }
+
+    /// Random-access read of one element (**debug/testing**; seeks).
+    pub fn fetch(&self, i: u64) -> Result<u8> {
+        let inner = &self.inner;
+        if i >= inner.len {
+            return Err(RoomyError::InvalidArg(format!("index {i} out of bounds")));
+        }
+        let b = (i / inner.bsize) as u32;
+        let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
+        let local = i - b as u64 * inner.bsize;
+        let per_byte = (8 / inner.bits) as u64;
+        let mut r = disk.open_file(inner.bucket_file(b))?;
+        r.seek_to(local / per_byte)?;
+        let mut byte = [0u8];
+        r.read_exact(&mut byte)?;
+        let shift = ((local % per_byte) as u8) * inner.bits;
+        Ok((byte[0] >> shift) & inner.mask())
+    }
+
+    /// Delete all on-disk state.
+    pub fn destroy(self) -> Result<()> {
+        let dir = self.inner.dir.clone();
+        self.inner.ctx.cluster.remove_structure_dirs(dir)
+    }
+}
+
+impl BitInner {
+    fn mask(&self) -> u8 {
+        if self.bits == 8 {
+            0xFF
+        } else {
+            (1u8 << self.bits) - 1
+        }
+    }
+
+    fn bucket_file(&self, b: u32) -> String {
+        format!("{}/b{b}.dat", self.dir)
+    }
+
+    /// Elements held by bucket `b`.
+    fn bucket_len(&self, b: u32) -> u64 {
+        let start = b as u64 * self.bsize;
+        if start >= self.len {
+            0
+        } else {
+            self.bsize.min(self.len - start)
+        }
+    }
+
+    /// Bytes of bucket `b`'s file.
+    fn bucket_bytes(&self, b: u32) -> usize {
+        let per_byte = (8 / self.bits) as u64;
+        (self.bucket_len(b).div_ceil(per_byte)) as usize
+    }
+
+    fn get_packed(&self, data: &[u8], local: u64) -> u8 {
+        let per_byte = (8 / self.bits) as u64;
+        let byte = data[(local / per_byte) as usize];
+        let shift = ((local % per_byte) as u8) * self.bits;
+        (byte >> shift) & self.mask()
+    }
+
+    fn set_packed(&self, data: &mut [u8], local: u64, v: u8) {
+        let per_byte = (8 / self.bits) as u64;
+        let pos = (local / per_byte) as usize;
+        let shift = ((local % per_byte) as u8) * self.bits;
+        data[pos] = (data[pos] & !(self.mask() << shift)) | ((v & self.mask()) << shift);
+    }
+
+    fn update_passed_len(&self, id: u8) -> Result<usize> {
+        self.updates.read().unwrap().get(id as usize).map(|(l, _)| *l).ok_or_else(|| {
+            RoomyError::UnknownFunc { structure: format!("RoomyBitArray({})", self.name), id }
+        })
+    }
+
+    fn access_passed_len(&self, id: u8) -> Result<usize> {
+        self.accesses.read().unwrap().get(id as usize).map(|(l, _)| *l).ok_or_else(|| {
+            RoomyError::UnknownFunc { structure: format!("RoomyBitArray({})", self.name), id }
+        })
+    }
+
+    fn for_owned_buckets(
+        &self,
+        phase: &str,
+        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+    ) -> Result<()> {
+        let cluster = &self.ctx.cluster;
+        cluster.run(phase, |w, disk| {
+            for b in cluster.buckets_of(w) {
+                f(self, b, disk)?;
+            }
+            Ok(())
+        })?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roomy::Roomy;
+    use crate::testutil::{prop_check, tmpdir};
+
+    fn mk(root: &std::path::Path) -> Roomy {
+        Roomy::open(crate::RoomyConfig::for_testing(root)).unwrap()
+    }
+
+    #[test]
+    fn rejects_bad_widths() {
+        let t = tmpdir("rba_bad");
+        let r = mk(t.path());
+        assert!(r.bit_array("x3", 10, 3).is_err());
+        assert!(r.bit_array("x0", 10, 0).is_err());
+        assert!(r.bit_array("z", 0, 1).is_err());
+    }
+
+    #[test]
+    fn zero_filled_and_counts() {
+        let t = tmpdir("rba_zero");
+        let r = mk(t.path());
+        let ba = r.bit_array("b", 1000, 2).unwrap();
+        assert_eq!(ba.count_value(0), 1000);
+        assert_eq!(ba.count_value(1), 0);
+        assert_eq!(ba.fetch(999).unwrap(), 0);
+    }
+
+    #[test]
+    fn set_bits_via_update() {
+        let t = tmpdir("rba_set");
+        let r = mk(t.path());
+        let ba = r.bit_array("b", 100, 1).unwrap();
+        let set = ba.register_update(|_i, _cur, _p: &()| 1);
+        for i in (0..100).step_by(3) {
+            ba.update(i, &(), set).unwrap();
+        }
+        ba.sync().unwrap();
+        assert_eq!(ba.count_value(1), 34);
+        assert_eq!(ba.count_value(0), 66);
+        assert_eq!(ba.fetch(3).unwrap(), 1);
+        assert_eq!(ba.fetch(4).unwrap(), 0);
+    }
+
+    #[test]
+    fn update_sees_current_value_fifo() {
+        let t = tmpdir("rba_fifo");
+        let r = mk(t.path());
+        let ba = r.bit_array("b", 16, 4).unwrap();
+        let inc = ba.register_update(|_i, cur, _p: &()| cur + 1);
+        for _ in 0..5 {
+            ba.update(7, &(), inc).unwrap();
+        }
+        ba.sync().unwrap();
+        assert_eq!(ba.fetch(7).unwrap(), 5);
+        assert_eq!(ba.count_value(5), 1);
+    }
+
+    #[test]
+    fn result_masked_to_width() {
+        let t = tmpdir("rba_mask");
+        let r = mk(t.path());
+        let ba = r.bit_array("b", 8, 2).unwrap();
+        let big = ba.register_update(|_i, _cur, _p: &()| 0xFF);
+        ba.update(0, &(), big).unwrap();
+        ba.sync().unwrap();
+        assert_eq!(ba.fetch(0).unwrap(), 3, "0xFF masked to 2 bits");
+    }
+
+    #[test]
+    fn access_emits_to_other_structure() {
+        // The BFS idiom: update sets a bit, the update fn pushes newly-set
+        // indices into a list on another structure.
+        let t = tmpdir("rba_emit");
+        let r = mk(t.path());
+        let ba = r.bit_array("seen", 64, 1).unwrap();
+        let next = r.list::<u64>("next").unwrap();
+        let next2 = next.clone();
+        let visit = ba.register_update(move |i, cur, _p: &()| {
+            if cur == 0 {
+                next2.add(&i).unwrap();
+            }
+            1
+        });
+        ba.update(5, &(), visit).unwrap();
+        ba.update(5, &(), visit).unwrap(); // dup in same sync: no second emit
+        ba.update(9, &(), visit).unwrap();
+        ba.sync().unwrap();
+        next.sync().unwrap();
+        let mut v = next.collect().unwrap();
+        v.sort();
+        assert_eq!(v, vec![5, 9]);
+    }
+
+    #[test]
+    fn map_streams_everything() {
+        let t = tmpdir("rba_map");
+        let r = mk(t.path());
+        let ba = r.bit_array("b", 300, 2).unwrap();
+        let set = ba.register_update(|i, _cur, _p: &()| (i % 4) as u8);
+        for i in 0..300 {
+            ba.update(i, &(), set).unwrap();
+        }
+        ba.sync().unwrap();
+        let bad = std::sync::atomic::AtomicU64::new(0);
+        ba.map(|i, v| {
+            if v != (i % 4) as u8 {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+        .unwrap();
+        assert_eq!(bad.into_inner(), 0);
+        for v in 0..4u8 {
+            assert_eq!(ba.count_value(v), 75, "value {v}");
+        }
+    }
+
+    #[test]
+    fn prop_packed_roundtrip() {
+        prop_check("bit pack/unpack", 30, |rng| {
+            let bits = [1u8, 2, 4, 8][rng.range(0, 4)];
+            let t = tmpdir("rba_prop");
+            let r = mk(t.path());
+            let n = rng.range(1, 200) as u64;
+            let name = format!("p{}", rng.next_u64());
+            let ba = r.bit_array(&name, n, bits).unwrap();
+            let mask = if bits == 8 { 0xFF } else { (1u8 << bits) - 1 };
+            let vals: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() as u8) & mask).collect();
+            let vals2 = vals.clone();
+            let set = ba.register_update(move |i, _cur, _p: &()| vals2[i as usize]);
+            for i in 0..n {
+                ba.update(i, &(), set).unwrap();
+            }
+            ba.sync().unwrap();
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(ba.fetch(i as u64).unwrap(), v, "bits={bits} i={i}");
+            }
+            // histogram consistency
+            for v in 0..(1u16 << bits) {
+                let expect = vals.iter().filter(|&&x| x == v as u8).count() as u64;
+                assert_eq!(ba.count_value(v as u8), expect);
+            }
+        });
+    }
+}

@@ -1,0 +1,176 @@
+//! Fixed-size element encoding.
+//!
+//! Roomy data structures store *fixed-size byte records* (paper §2: every
+//! structure is created with an `eltSize`). The [`Element`] trait maps Rust
+//! values onto those records.
+//!
+//! Integer impls use **big-endian** encodings so that the byte-wise
+//! (memcmp) order used by the external sort coincides with numeric order —
+//! the sort only needs an order consistent with equality, but numeric
+//! order makes sorted files human-auditable and enables range debugging.
+
+/// A value storable in a Roomy structure: fixed size, plain bytes.
+pub trait Element: Clone + Send + Sync + 'static {
+    /// Encoded size in bytes. Must be > 0.
+    const SIZE: usize;
+
+    /// Serialize into `out` (exactly `SIZE` bytes).
+    fn write_to(&self, out: &mut [u8]);
+
+    /// Deserialize from `buf` (exactly `SIZE` bytes).
+    fn read_from(buf: &[u8]) -> Self;
+
+    /// Convenience: encode to an owned vector.
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut v = vec![0u8; Self::SIZE];
+        self.write_to(&mut v);
+        v
+    }
+}
+
+macro_rules! impl_element_int {
+    ($($t:ty),*) => {$(
+        impl Element for $t {
+            const SIZE: usize = std::mem::size_of::<$t>();
+            #[inline]
+            fn write_to(&self, out: &mut [u8]) {
+                out.copy_from_slice(&self.to_be_bytes());
+            }
+            #[inline]
+            fn read_from(buf: &[u8]) -> Self {
+                <$t>::from_be_bytes(buf.try_into().expect("element size"))
+            }
+        }
+    )*};
+}
+
+impl_element_int!(u8, u16, u32, u64, u128);
+
+// Signed integers: flip the sign bit so memcmp order == numeric order.
+macro_rules! impl_element_signed {
+    ($($t:ty => $u:ty),*) => {$(
+        impl Element for $t {
+            const SIZE: usize = std::mem::size_of::<$t>();
+            #[inline]
+            fn write_to(&self, out: &mut [u8]) {
+                let biased = (*self as $u) ^ (1 << (<$t>::BITS - 1));
+                out.copy_from_slice(&biased.to_be_bytes());
+            }
+            #[inline]
+            fn read_from(buf: &[u8]) -> Self {
+                let biased = <$u>::from_be_bytes(buf.try_into().expect("element size"));
+                (biased ^ (1 << (<$t>::BITS - 1))) as $t
+            }
+        }
+    )*};
+}
+
+impl_element_signed!(i8 => u8, i16 => u16, i32 => u32, i64 => u64);
+
+impl<const K: usize> Element for [u8; K] {
+    const SIZE: usize = K;
+    #[inline]
+    fn write_to(&self, out: &mut [u8]) {
+        out.copy_from_slice(self);
+    }
+    #[inline]
+    fn read_from(buf: &[u8]) -> Self {
+        buf.try_into().expect("element size")
+    }
+}
+
+impl<A: Element, B: Element> Element for (A, B) {
+    const SIZE: usize = A::SIZE + B::SIZE;
+    #[inline]
+    fn write_to(&self, out: &mut [u8]) {
+        self.0.write_to(&mut out[..A::SIZE]);
+        self.1.write_to(&mut out[A::SIZE..]);
+    }
+    #[inline]
+    fn read_from(buf: &[u8]) -> Self {
+        (A::read_from(&buf[..A::SIZE]), B::read_from(&buf[A::SIZE..]))
+    }
+}
+
+/// The unit element — occasionally useful as a set-style hash-table value.
+/// Encoded as a single zero byte (zero-size records are not representable).
+impl Element for () {
+    const SIZE: usize = 1;
+    #[inline]
+    fn write_to(&self, out: &mut [u8]) {
+        out[0] = 0;
+    }
+    #[inline]
+    fn read_from(_buf: &[u8]) -> Self {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop_check;
+
+    fn roundtrip<T: Element + PartialEq + std::fmt::Debug>(v: T) {
+        let b = v.to_bytes();
+        assert_eq!(b.len(), T::SIZE);
+        assert_eq!(T::read_from(&b), v);
+    }
+
+    #[test]
+    fn unsigned_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(0xDEADu16);
+        roundtrip(0xDEADBEEFu32);
+        roundtrip(u64::MAX);
+        roundtrip(u128::MAX - 7);
+    }
+
+    #[test]
+    fn signed_roundtrip() {
+        for v in [i64::MIN, -1, 0, 1, i64::MAX] {
+            roundtrip(v);
+        }
+        for v in [i32::MIN, -42, 0, 7, i32::MAX] {
+            roundtrip(v);
+        }
+    }
+
+    #[test]
+    fn array_and_tuple_roundtrip() {
+        roundtrip([1u8, 2, 3, 4, 5]);
+        roundtrip((0xAAu32, 0xBBu64));
+        roundtrip(((1u8, 2u16), 3u32));
+        roundtrip(());
+        assert_eq!(<(u32, u64)>::SIZE, 12);
+    }
+
+    #[test]
+    fn unsigned_byte_order_is_numeric() {
+        prop_check("u64 memcmp == numeric", 50, |rng| {
+            let a = rng.next_u64();
+            let b = rng.next_u64();
+            assert_eq!(a.to_bytes().cmp(&b.to_bytes()), a.cmp(&b));
+        });
+    }
+
+    #[test]
+    fn signed_byte_order_is_numeric() {
+        prop_check("i64 memcmp == numeric", 50, |rng| {
+            let a = rng.next_u64() as i64;
+            let b = rng.next_u64() as i64;
+            assert_eq!(a.to_bytes().cmp(&b.to_bytes()), a.cmp(&b));
+        });
+        // explicit boundary cases
+        let order = [i64::MIN, -2, -1, 0, 1, 2, i64::MAX];
+        for w in order.windows(2) {
+            assert!(w[0].to_bytes() < w[1].to_bytes(), "{} vs {}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn tuple_orders_lexicographically() {
+        let a = (1u32, 9u32).to_bytes();
+        let b = (2u32, 0u32).to_bytes();
+        assert!(a < b);
+    }
+}

@@ -1,0 +1,236 @@
+//! User-function registries.
+//!
+//! Roomy serializes delayed operations to disk, so the *function* part of
+//! an operation must be named compactly — the C library uses function
+//! pointers registered with the structure; we use small integer ids
+//! mapping into per-structure registries of type-erased closures. Typed
+//! wrappers on the structures recover the ergonomic API.
+//!
+//! All closures run on worker threads during `sync`/`map` collectives and
+//! may issue *delayed* operations on other structures (that is how the
+//! paper's BFS works); they must therefore be `Send + Sync`.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::RwLock;
+
+use crate::error::{Result, RoomyError};
+
+/// Id of a registered update function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UpdateId(pub(crate) u8);
+
+/// Id of a registered access function.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessId(pub(crate) u8);
+
+/// Id of a registered predicate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PredId(pub(crate) u8);
+
+/// Type-erased update: `(index, element bytes [in/out], passed bytes)`.
+pub type UpdateFn = Box<dyn Fn(u64, &mut [u8], &[u8]) + Send + Sync>;
+/// Type-erased access: `(index, element bytes, passed bytes)`.
+pub type AccessFn = Box<dyn Fn(u64, &[u8], &[u8]) + Send + Sync>;
+/// Type-erased predicate over `(index, element bytes)`.
+pub type PredFn = Box<dyn Fn(u64, &[u8]) -> bool + Send + Sync>;
+
+struct Registered<F> {
+    f: F,
+    passed_len: usize,
+}
+
+/// Registry of update/access/predicate functions for one structure,
+/// plus the incrementally-maintained predicate counters (paper Table 1:
+/// `predicateCount` "does not require a separate scan").
+#[derive(Default)]
+pub struct FuncRegistry {
+    updates: RwLock<Vec<Registered<UpdateFn>>>,
+    accesses: RwLock<Vec<Registered<AccessFn>>>,
+    preds: RwLock<Vec<PredFn>>,
+    pred_counts: RwLock<Vec<AtomicI64>>,
+    structure: String,
+}
+
+impl FuncRegistry {
+    pub fn new(structure: &str) -> Self {
+        FuncRegistry {
+            structure: structure.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn register_update(&self, passed_len: usize, f: UpdateFn) -> UpdateId {
+        let mut g = self.updates.write().unwrap();
+        assert!(g.len() < 256, "at most 256 update functions per structure");
+        g.push(Registered { f, passed_len });
+        UpdateId((g.len() - 1) as u8)
+    }
+
+    pub fn register_access(&self, passed_len: usize, f: AccessFn) -> AccessId {
+        let mut g = self.accesses.write().unwrap();
+        assert!(g.len() < 256, "at most 256 access functions per structure");
+        g.push(Registered { f, passed_len });
+        AccessId((g.len() - 1) as u8)
+    }
+
+    pub fn register_pred(&self, f: PredFn) -> PredId {
+        let mut preds = self.preds.write().unwrap();
+        let mut counts = self.pred_counts.write().unwrap();
+        assert!(preds.len() < 256, "at most 256 predicates per structure");
+        preds.push(f);
+        counts.push(AtomicI64::new(0));
+        PredId((preds.len() - 1) as u8)
+    }
+
+    pub fn update_passed_len(&self, id: u8) -> Result<usize> {
+        self.updates
+            .read()
+            .unwrap()
+            .get(id as usize)
+            .map(|r| r.passed_len)
+            .ok_or_else(|| RoomyError::UnknownFunc { structure: self.structure.clone(), id })
+    }
+
+    pub fn access_passed_len(&self, id: u8) -> Result<usize> {
+        self.accesses
+            .read()
+            .unwrap()
+            .get(id as usize)
+            .map(|r| r.passed_len)
+            .ok_or_else(|| RoomyError::UnknownFunc { structure: self.structure.clone(), id })
+    }
+
+    /// Apply update `id` to `elt` in place.
+    pub fn apply_update(&self, id: u8, idx: u64, elt: &mut [u8], passed: &[u8]) -> Result<()> {
+        let g = self.updates.read().unwrap();
+        let r = g.get(id as usize).ok_or_else(|| RoomyError::UnknownFunc {
+            structure: self.structure.clone(),
+            id,
+        })?;
+        (r.f)(idx, elt, passed);
+        Ok(())
+    }
+
+    /// Invoke access `id`.
+    pub fn apply_access(&self, id: u8, idx: u64, elt: &[u8], passed: &[u8]) -> Result<()> {
+        let g = self.accesses.read().unwrap();
+        let r = g.get(id as usize).ok_or_else(|| RoomyError::UnknownFunc {
+            structure: self.structure.clone(),
+            id,
+        })?;
+        (r.f)(idx, elt, passed);
+        Ok(())
+    }
+
+    /// Number of registered predicates.
+    pub fn npreds(&self) -> usize {
+        self.preds.read().unwrap().len()
+    }
+
+    /// Evaluate every predicate on `(idx, elt)`, adding `sign` per hit.
+    /// Called for each element mutation (and initial fill) so counts stay
+    /// current without a scan.
+    pub fn charge_preds(&self, idx: u64, elt: &[u8], sign: i64) {
+        let preds = self.preds.read().unwrap();
+        if preds.is_empty() {
+            return;
+        }
+        let counts = self.pred_counts.read().unwrap();
+        for (p, c) in preds.iter().zip(counts.iter()) {
+            if p(idx, elt) {
+                c.fetch_add(sign, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Charge only predicate `id` (used by its initializing scan).
+    pub fn charge_pred_single(&self, id: PredId, idx: u64, elt: &[u8]) {
+        let preds = self.preds.read().unwrap();
+        let counts = self.pred_counts.read().unwrap();
+        if let (Some(p), Some(c)) = (preds.get(id.0 as usize), counts.get(id.0 as usize)) {
+            if p(idx, elt) {
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Current count for predicate `id`.
+    pub fn pred_count(&self, id: PredId) -> u64 {
+        let counts = self.pred_counts.read().unwrap();
+        counts
+            .get(id.0 as usize)
+            .map(|c| c.load(Ordering::Relaxed).max(0) as u64)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_apply_update() {
+        let reg = FuncRegistry::new("t");
+        let id = reg.register_update(
+            4,
+            Box::new(|_i, elt, passed| {
+                let cur = u32::from_le_bytes(elt.try_into().unwrap());
+                let p = u32::from_le_bytes(passed.try_into().unwrap());
+                elt.copy_from_slice(&(cur + p).to_le_bytes());
+            }),
+        );
+        assert_eq!(reg.update_passed_len(id.0).unwrap(), 4);
+        let mut elt = 10u32.to_le_bytes().to_vec();
+        reg.apply_update(id.0, 0, &mut elt, &5u32.to_le_bytes()).unwrap();
+        assert_eq!(u32::from_le_bytes(elt.try_into().unwrap()), 15);
+    }
+
+    #[test]
+    fn unknown_ids_error() {
+        let reg = FuncRegistry::new("t");
+        assert!(reg.update_passed_len(0).is_err());
+        assert!(reg.apply_access(3, 0, &[], &[]).is_err());
+        let mut e = [0u8];
+        assert!(reg.apply_update(1, 0, &mut e, &[]).is_err());
+    }
+
+    #[test]
+    fn access_sees_bytes() {
+        let reg = FuncRegistry::new("t");
+        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        let id = reg.register_access(
+            0,
+            Box::new(move |i, elt, _| {
+                seen2.lock().unwrap().push((i, elt.to_vec()));
+            }),
+        );
+        reg.apply_access(id.0, 9, &[1, 2], &[]).unwrap();
+        assert_eq!(seen.lock().unwrap().as_slice(), &[(9, vec![1, 2])]);
+    }
+
+    #[test]
+    fn predicate_counts_track_signs() {
+        let reg = FuncRegistry::new("t");
+        let even = reg.register_pred(Box::new(|_i, elt| elt[0] % 2 == 0));
+        let any = reg.register_pred(Box::new(|_i, _elt| true));
+        reg.charge_preds(0, &[2], 1);
+        reg.charge_preds(1, &[3], 1);
+        reg.charge_preds(2, &[4], 1);
+        assert_eq!(reg.pred_count(even), 2);
+        assert_eq!(reg.pred_count(any), 3);
+        // mutation: 4 -> 5 (old out, new in)
+        reg.charge_preds(2, &[4], -1);
+        reg.charge_preds(2, &[5], 1);
+        assert_eq!(reg.pred_count(even), 1);
+        assert_eq!(reg.pred_count(any), 3);
+    }
+
+    #[test]
+    fn pred_count_clamps_at_zero() {
+        let reg = FuncRegistry::new("t");
+        let p = reg.register_pred(Box::new(|_, _| true));
+        reg.charge_preds(0, &[0], -1);
+        assert_eq!(reg.pred_count(p), 0);
+    }
+}

@@ -1,0 +1,710 @@
+//! `RoomyHashTable<K, V>`: a disk-resident, hash-bucketed key→value map.
+//!
+//! Paper §2/Table 1: `insert`, `remove`, `access`, `update` are delayed;
+//! `sync`, `size`, `map`, `reduce`, `predicateCount` are immediate. Keys
+//! route to buckets by the shared fingerprint ([`crate::hashfn`]) — the
+//! same routing the XLA hash-partition kernel computes on-device — so a
+//! bucket's records and its staged ops always live on the same node, and
+//! `sync` streams each bucket through RAM exactly once.
+//!
+//! Update semantics: the registered function sees `Option<V>` (present or
+//! absent) and returns `Option<V>` (store or remove/leave-absent). This is
+//! the insert-if-absent idiom the paper's BFS variants rely on.
+
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+use super::element::Element;
+use super::flat::FlatTable;
+use super::funcs::{AccessId, FuncRegistry, PredId, UpdateId};
+use super::ops::{OpKind, StagedOps};
+use super::Ctx;
+use crate::error::{Result, RoomyError};
+use crate::hashfn;
+use crate::storage::chunkfile::{RecordReader, RecordWriter};
+
+const SCAN_BATCH: usize = 4096;
+
+/// Type-erased hash-table update: `(key, current value or None, passed)`
+/// → new value or None.
+type HtUpdateFn = Box<dyn Fn(&[u8], Option<&[u8]>, &[u8]) -> Option<Vec<u8>> + Send + Sync>;
+
+/// A distributed disk-backed hash table. Cheap to clone (shared state).
+pub struct RoomyHashTable<K: Element, V: Element> {
+    inner: Arc<HtInner<K, V>>,
+}
+
+impl<K: Element, V: Element> Clone for RoomyHashTable<K, V> {
+    fn clone(&self) -> Self {
+        RoomyHashTable { inner: Arc::clone(&self.inner) }
+    }
+}
+
+struct HtInner<K: Element, V: Element> {
+    ctx: Ctx,
+    name: String,
+    dir: String,
+    funcs: FuncRegistry,
+    /// Hash-table updates have a richer signature than array updates
+    /// (`Option<V>` in/out), so they get their own registry.
+    ht_updates: std::sync::RwLock<Vec<(usize, HtUpdateFn)>>,
+    staged: StagedOps,
+    size: std::sync::atomic::AtomicI64,
+    _t: PhantomData<fn() -> (K, V)>,
+}
+
+impl<K: Element, V: Element> RoomyHashTable<K, V> {
+    pub(crate) fn create(ctx: Ctx, name: &str) -> Result<Self> {
+        let dir = format!("rht_{name}");
+        let cluster = ctx.cluster.clone();
+        let inner = HtInner {
+            staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
+            funcs: FuncRegistry::new(&format!("RoomyHashTable({name})")),
+            ht_updates: std::sync::RwLock::new(Vec::new()),
+            ctx,
+            name: name.to_string(),
+            dir,
+            size: std::sync::atomic::AtomicI64::new(0),
+            _t: PhantomData,
+        };
+        Ok(RoomyHashTable { inner: Arc::new(inner) })
+    }
+
+    /// Number of (key, value) pairs (immediate; maintained at sync).
+    pub fn size(&self) -> u64 {
+        self.inner.size.load(std::sync::atomic::Ordering::Relaxed).max(0) as u64
+    }
+
+    /// Structure name.
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Total staged (not yet synced) delayed-op bytes.
+    pub fn pending_bytes(&self) -> u64 {
+        self.inner.staged.staged_bytes()
+    }
+
+    // ------------------------------------------------------------------
+    // Registration
+    // ------------------------------------------------------------------
+
+    /// Register an access function `f(key, value, passed)`; runs at sync
+    /// for keys that are present (absent keys are silently skipped, as in
+    /// Roomy).
+    pub fn register_access<P: Element>(
+        &self,
+        f: impl Fn(&K, &V, &P) + Send + Sync + 'static,
+    ) -> AccessId {
+        self.inner.funcs.register_access(
+            P::SIZE,
+            Box::new(move |_idx, kv, passed| {
+                // kv = key bytes ++ value bytes
+                let k = K::read_from(&kv[..K::SIZE]);
+                let v = V::read_from(&kv[K::SIZE..]);
+                f(&k, &v, &P::read_from(passed));
+            }),
+        )
+    }
+
+    /// Register an update function
+    /// `f(key, current, passed) -> Option<new value>`:
+    /// - current is `None` if the key is absent;
+    /// - returning `None` removes the key (or leaves it absent).
+    pub fn register_update<P: Element>(
+        &self,
+        f: impl Fn(&K, Option<&V>, &P) -> Option<V> + Send + Sync + 'static,
+    ) -> UpdateId {
+        let mut g = self.inner.ht_updates.write().unwrap();
+        assert!(g.len() < 256, "at most 256 update functions per structure");
+        g.push((
+            P::SIZE,
+            Box::new(move |k, cur, passed| {
+                let key = K::read_from(k);
+                let cur_v = cur.map(V::read_from);
+                f(&key, cur_v.as_ref(), &P::read_from(passed)).map(|v| v.to_bytes())
+            }),
+        ));
+        UpdateId((g.len() - 1) as u8)
+    }
+
+    /// Register a predicate over `(key, value)`; counts maintained on
+    /// every mutation, initialized by one scan.
+    pub fn register_predicate(
+        &self,
+        f: impl Fn(&K, &V) -> bool + Send + Sync + 'static,
+    ) -> Result<PredId> {
+        let id = self.inner.funcs.register_pred(Box::new(move |_idx, kv| {
+            f(&K::read_from(&kv[..K::SIZE]), &V::read_from(&kv[K::SIZE..]))
+        }));
+        let inner = &self.inner;
+        inner.for_owned_buckets("rht.pred_scan", |this, b, disk| {
+            this.scan_bucket(b, disk, |kv| {
+                this.funcs.charge_pred_single(id, 0, kv);
+                Ok(())
+            })
+        })?;
+        Ok(id)
+    }
+
+    /// Current count for predicate `id` (immediate).
+    pub fn predicate_count(&self, id: PredId) -> u64 {
+        self.inner.funcs.pred_count(id)
+    }
+
+    // ------------------------------------------------------------------
+    // Delayed operations
+    // ------------------------------------------------------------------
+
+    /// Delayed insert of `(key, value)` (overwrites at sync).
+    pub fn insert(&self, key: &K, value: &V) -> Result<()> {
+        self.stage_keyed(OpKind::HtInsert, 0, key, |rec| {
+            let off = rec.len();
+            rec.resize(off + V::SIZE, 0);
+            value.write_to(&mut rec[off..]);
+        })
+    }
+
+    /// Delayed remove of `key`.
+    pub fn remove(&self, key: &K) -> Result<()> {
+        self.stage_keyed(OpKind::HtRemove, 0, key, |_rec| {})
+    }
+
+    /// Encode `[kind, fn_id, key, payload]` into the thread-local buffer
+    /// (no per-op allocation) and stage it to the key's bucket.
+    fn stage_keyed(
+        &self,
+        kind: OpKind,
+        fn_id: u8,
+        key: &K,
+        payload: impl FnOnce(&mut Vec<u8>),
+    ) -> Result<()> {
+        super::ops::with_op_buf(|rec| {
+            rec.push(kind as u8);
+            rec.push(fn_id);
+            let koff = rec.len();
+            rec.resize(koff + K::SIZE, 0);
+            key.write_to(&mut rec[koff..]);
+            let bucket = hashfn::bucket_of_bytes(
+                &rec[koff..koff + K::SIZE],
+                self.inner.ctx.cluster.nbuckets(),
+            );
+            payload(rec);
+            self.inner.staged.stage(bucket, rec)
+        })
+    }
+
+    /// Delayed access of `key` with `passed` via function `id`.
+    pub fn access<P: Element>(&self, key: &K, passed: &P, id: AccessId) -> Result<()> {
+        let expect = self.inner.funcs.access_passed_len(id.0)?;
+        if P::SIZE != expect {
+            return Err(RoomyError::InvalidArg(format!(
+                "passed value is {} bytes but function was registered with {expect}",
+                P::SIZE
+            )));
+        }
+        self.stage_keyed(OpKind::HtAccess, id.0, key, |rec| {
+            let off = rec.len();
+            rec.resize(off + P::SIZE, 0);
+            passed.write_to(&mut rec[off..]);
+        })
+    }
+
+    /// Delayed update of `key` with `passed` via function `id`.
+    pub fn update<P: Element>(&self, key: &K, passed: &P, id: UpdateId) -> Result<()> {
+        let expect = self.inner.ht_update_passed_len(id.0)?;
+        if P::SIZE != expect {
+            return Err(RoomyError::InvalidArg(format!(
+                "passed value is {} bytes but function was registered with {expect}",
+                P::SIZE
+            )));
+        }
+        self.stage_keyed(OpKind::HtUpdate, id.0, key, |rec| {
+            let off = rec.len();
+            rec.resize(off + P::SIZE, 0);
+            passed.write_to(&mut rec[off..]);
+        })
+    }
+
+    /// Apply all outstanding delayed operations (FIFO per bucket).
+    pub fn sync(&self) -> Result<()> {
+        let inner = &self.inner;
+        if inner.staged.is_empty() {
+            return Ok(());
+        }
+        let deltas: Vec<i64> = inner.ctx.cluster.run("rht.sync", |w, disk| {
+            let mut delta = 0i64;
+            for b in inner.ctx.cluster.buckets_of(w) {
+                delta += inner.sync_bucket(b, disk)?;
+            }
+            Ok(delta)
+        })?;
+        inner
+            .size
+            .fetch_add(deltas.iter().sum::<i64>(), std::sync::atomic::Ordering::Relaxed);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Immediate operations
+    // ------------------------------------------------------------------
+
+    /// Apply `f(key, value)` to every pair (streaming, parallel).
+    pub fn map(&self, f: impl Fn(&K, &V) + Sync) -> Result<()> {
+        self.inner.for_owned_buckets("rht.map", |this, b, disk| {
+            this.scan_bucket(b, disk, |kv| {
+                f(&K::read_from(&kv[..K::SIZE]), &V::read_from(&kv[K::SIZE..]));
+                Ok(())
+            })
+        })
+    }
+
+    /// Reduce over all pairs; `fold`/`merge` must be assoc+comm in effect.
+    pub fn reduce<R: Send>(
+        &self,
+        identity: impl Fn() -> R + Sync,
+        fold: impl Fn(R, &K, &V) -> R + Sync,
+        merge: impl Fn(R, R) -> R,
+    ) -> Result<R> {
+        let inner = &self.inner;
+        let partials: Vec<R> = inner.ctx.cluster.run("rht.reduce", |w, disk| {
+            let mut acc = identity();
+            for b in inner.ctx.cluster.buckets_of(w) {
+                let mut local = Some(std::mem::replace(&mut acc, identity()));
+                inner.scan_bucket(b, disk, |kv| {
+                    let cur = local.take().expect("reduce accumulator");
+                    local = Some(fold(
+                        cur,
+                        &K::read_from(&kv[..K::SIZE]),
+                        &V::read_from(&kv[K::SIZE..]),
+                    ));
+                    Ok(())
+                })?;
+                acc = local.take().expect("reduce accumulator");
+            }
+            Ok(acc)
+        })?;
+        let mut it = partials.into_iter();
+        let first = it.next().expect("at least one worker");
+        Ok(it.fold(first, merge))
+    }
+
+    /// Random-access lookup. **Debug/testing convenience** (the
+    /// latency-bound pattern Roomy exists to avoid): scans the key's bucket.
+    pub fn fetch(&self, key: &K) -> Result<Option<V>> {
+        let inner = &self.inner;
+        let kb = key.to_bytes();
+        let b = inner.bucket_of_key(&kb);
+        let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
+        let mut found = None;
+        inner.scan_bucket(b, disk, |kv| {
+            if kv[..K::SIZE] == kb[..] {
+                found = Some(V::read_from(&kv[K::SIZE..]));
+            }
+            Ok(())
+        })?;
+        Ok(found)
+    }
+
+    /// Delete all on-disk state.
+    pub fn destroy(self) -> Result<()> {
+        let dir = self.inner.dir.clone();
+        self.inner.ctx.cluster.remove_structure_dirs(dir)
+    }
+}
+
+impl<K: Element, V: Element> HtInner<K, V> {
+    fn rec_size() -> usize {
+        K::SIZE + V::SIZE
+    }
+
+    fn bucket_of_key(&self, key_bytes: &[u8]) -> u32 {
+        hashfn::bucket_of_bytes(key_bytes, self.ctx.cluster.nbuckets())
+    }
+
+    fn bucket_file(&self, b: u32) -> String {
+        format!("{}/b{b}.dat", self.dir)
+    }
+
+    fn ht_update_passed_len(&self, id: u8) -> Result<usize> {
+        self.ht_updates
+            .read()
+            .unwrap()
+            .get(id as usize)
+            .map(|(plen, _)| *plen)
+            .ok_or_else(|| RoomyError::UnknownFunc {
+                structure: format!("RoomyHashTable({})", self.name),
+                id,
+            })
+    }
+
+    fn for_owned_buckets(
+        &self,
+        phase: &str,
+        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+    ) -> Result<()> {
+        let cluster = &self.ctx.cluster;
+        cluster.run(phase, |w, disk| {
+            for b in cluster.buckets_of(w) {
+                f(self, b, disk)?;
+            }
+            Ok(())
+        })?;
+        Ok(())
+    }
+
+    /// Stream bucket `b`'s (key ++ value) records.
+    fn scan_bucket(
+        &self,
+        b: u32,
+        disk: &crate::storage::NodeDisk,
+        mut f: impl FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        let file = self.bucket_file(b);
+        if !disk.exists(&file) {
+            return Ok(());
+        }
+        let rec = Self::rec_size();
+        let mut r = RecordReader::open(disk, &file, rec)?;
+        let mut buf = Vec::new();
+        loop {
+            let n = r.read_batch(&mut buf, SCAN_BATCH)?;
+            if n == 0 {
+                return Ok(());
+            }
+            for kv in buf.chunks_exact(rec) {
+                f(kv)?;
+            }
+        }
+    }
+
+    /// Charge all predicates for a (key, value) pair.
+    fn charge_kv(&self, kvbuf: &mut [u8], key: &[u8], val: &[u8], sign: i64) {
+        kvbuf[..K::SIZE].copy_from_slice(key);
+        kvbuf[K::SIZE..].copy_from_slice(val);
+        self.funcs.charge_preds(0, kvbuf, sign);
+    }
+
+    /// Load bucket `b` into a RAM map, apply its op log FIFO, write back.
+    /// Returns the size delta.
+    fn sync_bucket(&self, b: u32, disk: &crate::storage::NodeDisk) -> Result<i64> {
+        let mut ops =
+            self.staged.take(b, &self.ctx.cluster, &self.dir, self.ctx.cfg.op_buffer_bytes);
+        if ops.is_empty() {
+            return ops.clear().map(|_| 0);
+        }
+        // Bucket → RAM (the unit Roomy sizes to fit in memory). FlatTable
+        // keeps records in one arena: no per-record allocations (§Perf P3).
+        let expect = crate::storage::chunkfile::record_count(
+            disk,
+            self.bucket_file(b),
+            Self::rec_size(),
+        ) as usize;
+        let mut table = FlatTable::new(K::SIZE, V::SIZE, expect);
+        self.scan_bucket(b, disk, |kv| {
+            table.put(&kv[..K::SIZE], &kv[K::SIZE..]);
+            Ok(())
+        })?;
+        let npreds = self.funcs.npreds();
+        let mut delta = 0i64;
+        let mut kvbuf = vec![0u8; Self::rec_size()];
+
+        let mut reader = ops.reader()?;
+        let mut header = [0u8; 2];
+        let mut key = vec![0u8; K::SIZE];
+        let mut payload = Vec::new();
+        while reader.read_exact_or_eof(&mut header)? {
+            let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
+                RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
+            })?;
+            let fn_id = header[1];
+            if !reader.read_exact_or_eof(&mut key)? {
+                return Err(RoomyError::InvalidArg("truncated op record".into()));
+            }
+            let plen = match kind {
+                OpKind::HtInsert => V::SIZE,
+                OpKind::HtRemove => 0,
+                OpKind::HtAccess => self.funcs.access_passed_len(fn_id)?,
+                OpKind::HtUpdate => self.ht_update_passed_len(fn_id)?,
+                other => {
+                    return Err(RoomyError::InvalidArg(format!(
+                        "unexpected op kind {other:?} in hash-table log"
+                    )))
+                }
+            };
+            payload.resize(plen, 0);
+            if plen > 0 && !reader.read_exact_or_eof(&mut payload)? {
+                return Err(RoomyError::InvalidArg("truncated op record".into()));
+            }
+            // Pre-read the old value only when predicates need it.
+            let mut old_val: Option<Vec<u8>> = None;
+            if npreds > 0 && matches!(kind, OpKind::HtInsert | OpKind::HtRemove | OpKind::HtUpdate)
+            {
+                old_val = table.get(&key).map(|v| v.to_vec());
+            }
+            match kind {
+                OpKind::HtInsert => {
+                    let existed = table.put(&key, &payload);
+                    if !existed {
+                        delta += 1;
+                    }
+                    if npreds > 0 {
+                        if let Some(old) = &old_val {
+                            self.charge_kv(&mut kvbuf, &key, old, -1);
+                        }
+                        self.charge_kv(&mut kvbuf, &key, &payload, 1);
+                    }
+                }
+                OpKind::HtRemove => {
+                    if table.remove(&key) {
+                        delta -= 1;
+                        if npreds > 0 {
+                            if let Some(old) = &old_val {
+                                self.charge_kv(&mut kvbuf, &key, old, -1);
+                            }
+                        }
+                    }
+                }
+                OpKind::HtAccess => {
+                    if let Some(val) = table.get(&key) {
+                        kvbuf[..K::SIZE].copy_from_slice(&key);
+                        kvbuf[K::SIZE..].copy_from_slice(val);
+                        self.funcs.apply_access(fn_id, 0, &kvbuf, &payload)?;
+                    }
+                }
+                OpKind::HtUpdate => {
+                    let new = {
+                        let g = self.ht_updates.read().unwrap();
+                        let (_, f) = g.get(fn_id as usize).ok_or_else(|| {
+                            RoomyError::UnknownFunc {
+                                structure: format!("RoomyHashTable({})", self.name),
+                                id: fn_id,
+                            }
+                        })?;
+                        f(&key, table.get(&key), &payload)
+                    };
+                    match new {
+                        Some(v) => {
+                            let existed = table.put(&key, &v);
+                            if !existed {
+                                delta += 1;
+                            }
+                            if npreds > 0 {
+                                if let Some(old) = &old_val {
+                                    self.charge_kv(&mut kvbuf, &key, old, -1);
+                                }
+                                self.charge_kv(&mut kvbuf, &key, &v, 1);
+                            }
+                        }
+                        None => {
+                            if table.remove(&key) {
+                                delta -= 1;
+                                if npreds > 0 {
+                                    if let Some(old) = &old_val {
+                                        self.charge_kv(&mut kvbuf, &key, old, -1);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        drop(reader);
+
+        // Write the bucket back (streaming rewrite straight from the arena).
+        let tmp = format!("{}.sync.tmp", self.bucket_file(b));
+        {
+            let mut w = RecordWriter::create(disk, &tmp, Self::rec_size())?;
+            let mut err = None;
+            table.for_each(|rec| {
+                if err.is_none() {
+                    if let Err(e) = w.push(rec) {
+                        err = Some(e);
+                    }
+                }
+            });
+            if let Some(e) = err {
+                return Err(e);
+            }
+            w.finish()?;
+        }
+        disk.rename(&tmp, self.bucket_file(b))?;
+        ops.clear()?;
+        Ok(delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roomy::Roomy;
+    use crate::testutil::tmpdir;
+
+    fn mk(root: &std::path::Path) -> Roomy {
+        Roomy::open(crate::RoomyConfig::for_testing(root)).unwrap()
+    }
+
+    #[test]
+    fn insert_sync_fetch() {
+        let t = tmpdir("ht_basic");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        ht.insert(&1, &10).unwrap();
+        ht.insert(&2, &20).unwrap();
+        assert_eq!(ht.size(), 0, "insert is delayed");
+        ht.sync().unwrap();
+        assert_eq!(ht.size(), 2);
+        assert_eq!(ht.fetch(&1).unwrap(), Some(10));
+        assert_eq!(ht.fetch(&2).unwrap(), Some(20));
+        assert_eq!(ht.fetch(&3).unwrap(), None);
+    }
+
+    #[test]
+    fn insert_overwrites_and_remove_removes() {
+        let t = tmpdir("ht_overwrite");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        ht.insert(&1, &10).unwrap();
+        ht.insert(&1, &11).unwrap();
+        ht.sync().unwrap();
+        assert_eq!(ht.size(), 1);
+        assert_eq!(ht.fetch(&1).unwrap(), Some(11));
+        ht.remove(&1).unwrap();
+        ht.remove(&99).unwrap(); // removing absent key is a no-op
+        ht.sync().unwrap();
+        assert_eq!(ht.size(), 0);
+        assert_eq!(ht.fetch(&1).unwrap(), None);
+    }
+
+    #[test]
+    fn many_keys_across_buckets() {
+        let t = tmpdir("ht_many");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u64>("h").unwrap();
+        let n = 5000u64;
+        for k in 0..n {
+            ht.insert(&k, &(k * k)).unwrap();
+        }
+        ht.sync().unwrap();
+        assert_eq!(ht.size(), n);
+        let sum = ht
+            .reduce(|| 0u64, |acc, _k, v| acc.wrapping_add(*v), |a, b| a.wrapping_add(b))
+            .unwrap();
+        assert_eq!(sum, (0..n).map(|k| k * k).sum::<u64>());
+    }
+
+    #[test]
+    fn update_insert_if_absent_idiom() {
+        let t = tmpdir("ht_upsert");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        // count occurrences: absent -> 1, present -> +1
+        let bump = ht.register_update(|_k, cur: Option<&u32>, _p: &()| {
+            Some(cur.copied().unwrap_or(0) + 1)
+        });
+        for k in [1u64, 2, 1, 1, 3, 2] {
+            ht.update(&k, &(), bump).unwrap();
+        }
+        ht.sync().unwrap();
+        assert_eq!(ht.fetch(&1).unwrap(), Some(3));
+        assert_eq!(ht.fetch(&2).unwrap(), Some(2));
+        assert_eq!(ht.fetch(&3).unwrap(), Some(1));
+        assert_eq!(ht.size(), 3);
+    }
+
+    #[test]
+    fn update_returning_none_removes() {
+        let t = tmpdir("ht_updremove");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        ht.insert(&5, &50).unwrap();
+        ht.sync().unwrap();
+        let del = ht.register_update(|_k, _cur: Option<&u32>, _p: &()| None);
+        ht.update(&5, &(), del).unwrap();
+        ht.sync().unwrap();
+        assert_eq!(ht.size(), 0);
+        assert_eq!(ht.fetch(&5).unwrap(), None);
+    }
+
+    #[test]
+    fn access_skips_absent_keys() {
+        let t = tmpdir("ht_access");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        ht.insert(&7, &70).unwrap();
+        ht.sync().unwrap();
+        let hits = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let h = hits.clone();
+        let acc = ht.register_access(move |k: &u64, v: &u32, p: &u8| {
+            h.lock().unwrap().push((*k, *v, *p));
+        });
+        ht.access(&7, &1u8, acc).unwrap();
+        ht.access(&8, &2u8, acc).unwrap(); // absent
+        ht.sync().unwrap();
+        assert_eq!(hits.lock().unwrap().as_slice(), &[(7, 70, 1)]);
+    }
+
+    #[test]
+    fn fifo_order_within_sync() {
+        let t = tmpdir("ht_fifo");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        ht.insert(&1, &1).unwrap();
+        ht.remove(&1).unwrap();
+        ht.insert(&1, &2).unwrap();
+        ht.sync().unwrap();
+        assert_eq!(ht.fetch(&1).unwrap(), Some(2));
+        assert_eq!(ht.size(), 1);
+    }
+
+    #[test]
+    fn predicate_counts() {
+        let t = tmpdir("ht_pred");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        ht.insert(&1, &10).unwrap();
+        ht.sync().unwrap();
+        let big = ht.register_predicate(|_k, v| *v >= 10).unwrap();
+        assert_eq!(ht.predicate_count(big), 1);
+        ht.insert(&2, &5).unwrap();
+        ht.insert(&3, &100).unwrap();
+        ht.sync().unwrap();
+        assert_eq!(ht.predicate_count(big), 2);
+        ht.remove(&3).unwrap();
+        ht.sync().unwrap();
+        assert_eq!(ht.predicate_count(big), 1);
+    }
+
+    #[test]
+    fn map_visits_all() {
+        let t = tmpdir("ht_map");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u32, u32>("h").unwrap();
+        for k in 0..100u32 {
+            ht.insert(&k, &(k + 1)).unwrap();
+        }
+        ht.sync().unwrap();
+        let count = std::sync::atomic::AtomicU64::new(0);
+        ht.map(|k, v| {
+            assert_eq!(*v, *k + 1);
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        })
+        .unwrap();
+        assert_eq!(count.into_inner(), 100);
+    }
+
+    #[test]
+    fn destroy_removes_dirs() {
+        let t = tmpdir("ht_destroy");
+        let r = mk(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        ht.insert(&1, &1).unwrap();
+        ht.sync().unwrap();
+        ht.destroy().unwrap();
+        for w in 0..r.cluster().nworkers() {
+            assert!(!r.cluster().disk(w).exists("rht_h"));
+        }
+    }
+}

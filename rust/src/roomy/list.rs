@@ -1,0 +1,719 @@
+//! `RoomyList<T>`: a disk-resident, unordered multiset of fixed-size
+//! elements.
+//!
+//! Paper §2/Table 1: `add`/`remove` are delayed; `addAll`, `removeAll`,
+//! `removeDupes`, `size`, `map`, `reduce` are immediate. Elements are
+//! hash-sharded across buckets by the shared fingerprint, so duplicates of
+//! an element always land in the same shard — `removeDupes` and
+//! `removeAll` are shard-local external sorts / merges. This is exactly
+//! why the paper warns that RoomyList computations "are often dominated by
+//! the time to sort the list" (experiment E4 reproduces that asymmetry).
+//!
+//! Sync semantics: staged `add`s are appended first, then staged `remove`s
+//! delete **all occurrences** of each removed element (including ones
+//! added in the same sync).
+
+use std::collections::HashSet;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Arc;
+
+use super::element::Element;
+use super::funcs::{FuncRegistry, PredId};
+use super::ops::{OpKind, StagedOps};
+use super::Ctx;
+use crate::error::{Result, RoomyError};
+use crate::hashfn;
+use crate::storage::chunkfile::{record_count, RecordReader, RecordWriter};
+use crate::storage::extsort;
+
+const SCAN_BATCH: usize = 8192;
+
+/// A distributed disk-backed unordered list. Cheap to clone (shared state).
+pub struct RoomyList<T: Element> {
+    inner: Arc<ListInner<T>>,
+}
+
+impl<T: Element> Clone for RoomyList<T> {
+    fn clone(&self) -> Self {
+        RoomyList { inner: Arc::clone(&self.inner) }
+    }
+}
+
+struct ListInner<T: Element> {
+    ctx: Ctx,
+    name: String,
+    dir: String,
+    funcs: FuncRegistry,
+    staged: StagedOps,
+    size: AtomicI64,
+    /// Whether every shard file is currently sorted (set by
+    /// `remove_dupes`, cleared by appends) — lets repeated dedups and
+    /// `remove_all` skip re-sorting.
+    sorted: AtomicBool,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T: Element> RoomyList<T> {
+    pub(crate) fn create(ctx: Ctx, name: &str) -> Result<Self> {
+        let dir = format!("rl_{name}");
+        let cluster = ctx.cluster.clone();
+        let inner = ListInner {
+            staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
+            funcs: FuncRegistry::new(&format!("RoomyList({name})")),
+            ctx,
+            name: name.to_string(),
+            dir,
+            size: AtomicI64::new(0),
+            sorted: AtomicBool::new(false),
+            _t: PhantomData,
+        };
+        Ok(RoomyList { inner: Arc::new(inner) })
+    }
+
+    /// Number of elements, duplicates included (immediate).
+    pub fn size(&self) -> u64 {
+        self.inner.size.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    /// True if the list has no synced elements.
+    pub fn is_empty(&self) -> bool {
+        self.size() == 0
+    }
+
+    /// Structure name.
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Total staged (not yet synced) delayed-op bytes.
+    pub fn pending_bytes(&self) -> u64 {
+        self.inner.staged.staged_bytes()
+    }
+
+    // ------------------------------------------------------------------
+    // Delayed operations
+    // ------------------------------------------------------------------
+
+    /// Delayed add of one element.
+    pub fn add(&self, elt: &T) -> Result<()> {
+        self.stage_elt(OpKind::Add, elt)
+    }
+
+    /// Delayed remove of **all occurrences** of `elt`.
+    pub fn remove(&self, elt: &T) -> Result<()> {
+        self.stage_elt(OpKind::Remove, elt)
+    }
+
+    /// Encode `[kind, 0, elt]` into the thread-local buffer (no per-op
+    /// allocation) and stage it to the element's shard.
+    fn stage_elt(&self, kind: OpKind, elt: &T) -> Result<()> {
+        super::ops::with_op_buf(|rec| {
+            rec.push(kind as u8);
+            rec.push(0);
+            let off = rec.len();
+            rec.resize(off + T::SIZE, 0);
+            elt.write_to(&mut rec[off..]);
+            let shard = self.inner.shard_of(&rec[off..off + T::SIZE]);
+            self.inner.staged.stage(shard, rec)
+        })
+    }
+
+    /// Apply staged adds, then staged removes (paper Table 1 `sync`).
+    pub fn sync(&self) -> Result<()> {
+        let inner = &self.inner;
+        if inner.staged.is_empty() {
+            return Ok(());
+        }
+        let mut appended_any = false;
+        let deltas: Vec<(i64, bool)> = inner.ctx.cluster.run("rl.sync", |w, disk| {
+            let mut delta = 0i64;
+            let mut appended = false;
+            for b in inner.ctx.cluster.buckets_of(w) {
+                let (d, a) = inner.sync_shard(b, disk)?;
+                delta += d;
+                appended |= a;
+            }
+            Ok((delta, appended))
+        })?;
+        let total: i64 = deltas.iter().map(|(d, _)| d).sum();
+        appended_any |= deltas.iter().any(|(_, a)| *a);
+        inner.size.fetch_add(total, Ordering::Relaxed);
+        if appended_any {
+            inner.sorted.store(false, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Immediate operations (paper Table 1)
+    // ------------------------------------------------------------------
+
+    /// Append every element of `other` to `self` (immediate `addAll`).
+    /// Both lists must have the same element type (enforced by the type
+    /// system) and belong to clusters with the same shard count.
+    pub fn add_all(&self, other: &RoomyList<T>) -> Result<()> {
+        let inner = &self.inner;
+        if inner.ctx.cluster.nbuckets() != other.inner.ctx.cluster.nbuckets() {
+            return Err(RoomyError::Incompatible(
+                "addAll requires identical shard counts".into(),
+            ));
+        }
+        let added: Vec<i64> = inner.ctx.cluster.run("rl.add_all", |w, disk| {
+            let mut n = 0i64;
+            for b in inner.ctx.cluster.buckets_of(w) {
+                let src = other.inner.shard_file(b);
+                if !disk.exists(&src) {
+                    continue;
+                }
+                // Same fingerprint ⇒ same shard id in both lists; the
+                // shard lives on the same node, so this is a local
+                // stream-append.
+                let mut r = RecordReader::open(disk, &src, T::SIZE)?;
+                let mut w_ = RecordWriter::append(disk, inner.shard_file(b), T::SIZE)?;
+                let mut buf = Vec::new();
+                loop {
+                    let got = r.read_batch(&mut buf, SCAN_BATCH)?;
+                    if got == 0 {
+                        break;
+                    }
+                    w_.push_batch(&buf)?;
+                    n += got as i64;
+                }
+                w_.finish()?;
+            }
+            Ok(n)
+        })?;
+        inner.size.fetch_add(added.iter().sum::<i64>(), Ordering::Relaxed);
+        inner.sorted.store(false, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Remove from `self` every element that occurs in `other`
+    /// (immediate `removeAll`; all occurrences are removed).
+    pub fn remove_all(&self, other: &RoomyList<T>) -> Result<()> {
+        let inner = &self.inner;
+        if inner.ctx.cluster.nbuckets() != other.inner.ctx.cluster.nbuckets() {
+            return Err(RoomyError::Incompatible(
+                "removeAll requires identical shard counts".into(),
+            ));
+        }
+        let ram_budget = inner.ctx.cfg.ram_budget_bytes;
+        let sort_chunk = inner.ctx.cfg.sort_chunk_bytes;
+        let removed: Vec<i64> = inner.ctx.cluster.run("rl.remove_all", |w, disk| {
+            let mut n = 0i64;
+            for b in inner.ctx.cluster.buckets_of(w) {
+                let mine = inner.shard_file(b);
+                let theirs = other.inner.shard_file(b);
+                if !disk.exists(&mine) || !disk.exists(&theirs) {
+                    continue;
+                }
+                let their_bytes = disk.len(&theirs) as usize;
+                let npreds = inner.funcs.npreds();
+                if their_bytes <= ram_budget {
+                    // Hash-set filter: stream `other`'s shard into RAM,
+                    // stream-rewrite ours.
+                    let mut del: HashSet<Vec<u8>> = HashSet::new();
+                    crate::storage::chunkfile::for_each_record(
+                        disk, &theirs, T::SIZE, SCAN_BATCH,
+                        |rec| {
+                            del.insert(rec.to_vec());
+                            Ok(())
+                        },
+                    )?;
+                    n += inner.filter_shard(b, disk, |rec| !del.contains(rec))?;
+                } else {
+                    // Space-limited path: sort both shards, sorted-merge
+                    // difference (the paper's regime for huge lists).
+                    let a_sorted = format!("{mine}.diff.a");
+                    let b_sorted = format!("{mine}.diff.b");
+                    extsort::sort_file(disk, &mine, &a_sorted, T::SIZE, sort_chunk, false)?;
+                    extsort::sort_file(disk, &theirs, &b_sorted, T::SIZE, sort_chunk, false)?;
+                    let before = record_count(disk, &a_sorted, T::SIZE);
+                    let out = format!("{mine}.diff.out");
+                    if npreds > 0 {
+                        inner.charge_shard(b, disk, -1)?;
+                    }
+                    let after =
+                        extsort::merge_diff(disk, &a_sorted, &b_sorted, &out, T::SIZE)?;
+                    disk.rename(&out, &mine)?;
+                    disk.remove(&a_sorted)?;
+                    disk.remove(&b_sorted)?;
+                    if npreds > 0 {
+                        inner.charge_shard(b, disk, 1)?;
+                    }
+                    n += before as i64 - after as i64;
+                }
+            }
+            Ok(n)
+        })?;
+        inner.size.fetch_add(-removed.iter().sum::<i64>(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Remove duplicate elements (immediate `removeDupes`): per-shard
+    /// external sort + unique. After this call the list is a set.
+    pub fn remove_dupes(&self) -> Result<()> {
+        let inner = &self.inner;
+        let sort_chunk = inner.ctx.cfg.sort_chunk_bytes;
+        let npreds = inner.funcs.npreds();
+        let removed: Vec<i64> = inner.ctx.cluster.run("rl.remove_dupes", |w, disk| {
+            let mut n = 0i64;
+            for b in inner.ctx.cluster.buckets_of(w) {
+                let file = inner.shard_file(b);
+                if !disk.exists(&file) {
+                    continue;
+                }
+                let before = record_count(disk, &file, T::SIZE);
+                if npreds > 0 {
+                    inner.charge_shard(b, disk, -1)?;
+                }
+                let after = extsort::sort_file(disk, &file, &file, T::SIZE, sort_chunk, true)?;
+                if npreds > 0 {
+                    inner.charge_shard(b, disk, 1)?;
+                }
+                n += before as i64 - after as i64;
+            }
+            Ok(n)
+        })?;
+        inner.size.fetch_add(-removed.iter().sum::<i64>(), Ordering::Relaxed);
+        inner.sorted.store(true, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Whether all shards are currently sorted (post-`remove_dupes`).
+    pub fn is_sorted(&self) -> bool {
+        self.inner.sorted.load(Ordering::Relaxed)
+    }
+
+    /// Apply `f` to every element (streaming, parallel). `f` may issue
+    /// delayed ops on other structures — the paper's BFS `genNext` idiom.
+    pub fn map(&self, f: impl Fn(&T) + Sync) -> Result<()> {
+        self.inner.for_owned_shards("rl.map", |this, b, disk| {
+            this.scan_shard(b, disk, |rec| {
+                f(&T::read_from(rec));
+                Ok(())
+            })
+        })
+    }
+
+    /// Reduce over all elements (the paper's sum-of-squares example);
+    /// `fold`/`merge` must be assoc+comm in effect.
+    pub fn reduce<R: Send>(
+        &self,
+        identity: impl Fn() -> R + Sync,
+        fold: impl Fn(R, &T) -> R + Sync,
+        merge: impl Fn(R, R) -> R,
+    ) -> Result<R> {
+        let inner = &self.inner;
+        let partials: Vec<R> = inner.ctx.cluster.run("rl.reduce", |w, disk| {
+            let mut acc = identity();
+            for b in inner.ctx.cluster.buckets_of(w) {
+                let mut local = Some(std::mem::replace(&mut acc, identity()));
+                inner.scan_shard(b, disk, |rec| {
+                    let cur = local.take().expect("reduce accumulator");
+                    local = Some(fold(cur, &T::read_from(rec)));
+                    Ok(())
+                })?;
+                acc = local.take().expect("reduce accumulator");
+            }
+            Ok(acc)
+        })?;
+        let mut it = partials.into_iter();
+        let first = it.next().expect("at least one worker");
+        Ok(it.fold(first, merge))
+    }
+
+    /// Register a predicate; the count is initialized with one scan and
+    /// maintained on every synced add/remove afterwards.
+    pub fn register_predicate(
+        &self,
+        f: impl Fn(&T) -> bool + Send + Sync + 'static,
+    ) -> Result<PredId> {
+        let id = self
+            .inner
+            .funcs
+            .register_pred(Box::new(move |_idx, rec| f(&T::read_from(rec))));
+        let inner = &self.inner;
+        inner.for_owned_shards("rl.pred_scan", |this, b, disk| {
+            this.scan_shard(b, disk, |rec| {
+                this.funcs.charge_pred_single(id, 0, rec);
+                Ok(())
+            })
+        })?;
+        Ok(id)
+    }
+
+    /// Current count for predicate `id` (immediate).
+    ///
+    /// Note: `remove_dupes`/`remove_all` rewrite shards wholesale; they
+    /// adjust predicate counts by re-scanning only the affected shards.
+    pub fn predicate_count(&self, id: PredId) -> u64 {
+        self.inner.funcs.pred_count(id)
+    }
+
+    /// Collect every element into a `Vec` (testing/debug; the whole point
+    /// of Roomy is that this usually does not fit in RAM).
+    pub fn collect(&self) -> Result<Vec<T>> {
+        let all = std::sync::Mutex::new(Vec::new());
+        self.map(|e| all.lock().unwrap().push(e.clone()))?;
+        Ok(all.into_inner().unwrap())
+    }
+
+    /// Delete all on-disk state.
+    pub fn destroy(self) -> Result<()> {
+        let dir = self.inner.dir.clone();
+        self.inner.ctx.cluster.remove_structure_dirs(dir)
+    }
+}
+
+impl<T: Element> ListInner<T> {
+    fn shard_of(&self, elt_bytes: &[u8]) -> u32 {
+        hashfn::bucket_of_bytes(elt_bytes, self.ctx.cluster.nbuckets())
+    }
+
+    fn shard_file(&self, b: u32) -> String {
+        format!("{}/s{b}.dat", self.dir)
+    }
+
+    fn for_owned_shards(
+        &self,
+        phase: &str,
+        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+    ) -> Result<()> {
+        let cluster = &self.ctx.cluster;
+        cluster.run(phase, |w, disk| {
+            for b in cluster.buckets_of(w) {
+                f(self, b, disk)?;
+            }
+            Ok(())
+        })?;
+        Ok(())
+    }
+
+    fn scan_shard(
+        &self,
+        b: u32,
+        disk: &crate::storage::NodeDisk,
+        mut f: impl FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        let file = self.shard_file(b);
+        if !disk.exists(&file) {
+            return Ok(());
+        }
+        let mut r = RecordReader::open(disk, &file, T::SIZE)?;
+        let mut buf = Vec::new();
+        loop {
+            let n = r.read_batch(&mut buf, SCAN_BATCH)?;
+            if n == 0 {
+                return Ok(());
+            }
+            for rec in buf.chunks_exact(T::SIZE) {
+                f(rec)?;
+            }
+        }
+    }
+
+    /// Charge every predicate `sign` for each record in shard `b` (used
+    /// around wholesale rewrites like dedup/sort-merge difference).
+    fn charge_shard(&self, b: u32, disk: &crate::storage::NodeDisk, sign: i64) -> Result<()> {
+        self.scan_shard(b, disk, |rec| {
+            self.funcs.charge_preds(0, rec, sign);
+            Ok(())
+        })
+    }
+
+    /// Stream-rewrite shard `b`, keeping records where `keep` is true.
+    /// Returns the number of records dropped. Charges predicates.
+    fn filter_shard(
+        &self,
+        b: u32,
+        disk: &crate::storage::NodeDisk,
+        keep: impl Fn(&[u8]) -> bool,
+    ) -> Result<i64> {
+        let file = self.shard_file(b);
+        if !disk.exists(&file) {
+            return Ok(0);
+        }
+        let npreds = self.funcs.npreds();
+        let tmp = format!("{file}.filter.tmp");
+        let mut dropped = 0i64;
+        {
+            let mut r = RecordReader::open(disk, &file, T::SIZE)?;
+            let mut w = RecordWriter::create(disk, &tmp, T::SIZE)?;
+            let mut buf = Vec::new();
+            loop {
+                let n = r.read_batch(&mut buf, SCAN_BATCH)?;
+                if n == 0 {
+                    break;
+                }
+                for rec in buf.chunks_exact(T::SIZE) {
+                    if keep(rec) {
+                        w.push(rec)?;
+                    } else {
+                        dropped += 1;
+                        if npreds > 0 {
+                            self.funcs.charge_preds(0, rec, -1);
+                        }
+                    }
+                }
+            }
+            w.finish()?;
+        }
+        disk.rename(&tmp, &file)?;
+        Ok(dropped)
+    }
+
+    /// Apply staged ops for shard `b`: adds appended, removes filtered.
+    /// Returns (size delta, appended-any).
+    fn sync_shard(&self, b: u32, disk: &crate::storage::NodeDisk) -> Result<(i64, bool)> {
+        let mut ops =
+            self.staged.take(b, &self.ctx.cluster, &self.dir, self.ctx.cfg.op_buffer_bytes);
+        if ops.is_empty() {
+            return ops.clear().map(|_| (0, false));
+        }
+        let npreds = self.funcs.npreds();
+        let mut removes: HashSet<Vec<u8>> = HashSet::new();
+        let mut added = 0i64;
+        {
+            // Pass 1: append adds, collect removes.
+            let mut reader = ops.reader()?;
+            let mut header = [0u8; 2];
+            let mut elt = vec![0u8; T::SIZE];
+            let mut writer: Option<RecordWriter> = None;
+            while reader.read_exact_or_eof(&mut header)? {
+                let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
+                    RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
+                })?;
+                if !reader.read_exact_or_eof(&mut elt)? {
+                    return Err(RoomyError::InvalidArg("truncated op record".into()));
+                }
+                match kind {
+                    OpKind::Add => {
+                        if writer.is_none() {
+                            writer =
+                                Some(RecordWriter::append(disk, self.shard_file(b), T::SIZE)?);
+                        }
+                        writer.as_mut().unwrap().push(&elt)?;
+                        added += 1;
+                        if npreds > 0 {
+                            self.funcs.charge_preds(0, &elt, 1);
+                        }
+                    }
+                    OpKind::Remove => {
+                        removes.insert(elt.clone());
+                    }
+                    other => {
+                        return Err(RoomyError::InvalidArg(format!(
+                            "unexpected op kind {other:?} in list log"
+                        )))
+                    }
+                }
+            }
+            if let Some(w) = writer {
+                w.finish()?;
+            }
+        }
+        // Pass 2: apply removes (all occurrences).
+        let mut removed = 0i64;
+        if !removes.is_empty() {
+            removed = self.filter_shard(b, disk, |rec| !removes.contains(rec))?;
+        }
+        ops.clear()?;
+        Ok((added - removed, added > 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roomy::Roomy;
+    use crate::testutil::tmpdir;
+
+    fn mk(root: &std::path::Path) -> Roomy {
+        Roomy::open(crate::RoomyConfig::for_testing(root)).unwrap()
+    }
+
+    fn sorted_collect(l: &RoomyList<u64>) -> Vec<u64> {
+        let mut v = l.collect().unwrap();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn add_sync_size() {
+        let t = tmpdir("rl_basic");
+        let r = mk(t.path());
+        let l = r.list::<u64>("l").unwrap();
+        l.add(&1).unwrap();
+        l.add(&2).unwrap();
+        l.add(&2).unwrap();
+        assert_eq!(l.size(), 0, "add is delayed");
+        l.sync().unwrap();
+        assert_eq!(l.size(), 3);
+        assert_eq!(sorted_collect(&l), vec![1, 2, 2]);
+    }
+
+    #[test]
+    fn remove_all_occurrences_in_same_sync() {
+        let t = tmpdir("rl_remove");
+        let r = mk(t.path());
+        let l = r.list::<u64>("l").unwrap();
+        l.add(&5).unwrap();
+        l.sync().unwrap();
+        l.add(&5).unwrap(); // second occurrence, same sync as remove
+        l.add(&6).unwrap();
+        l.remove(&5).unwrap();
+        l.sync().unwrap();
+        assert_eq!(sorted_collect(&l), vec![6]);
+        assert_eq!(l.size(), 1);
+    }
+
+    #[test]
+    fn remove_dupes_makes_set() {
+        let t = tmpdir("rl_dupes");
+        let r = mk(t.path());
+        let l = r.list::<u64>("l").unwrap();
+        for v in [3u64, 1, 3, 2, 1, 3, 99] {
+            l.add(&v).unwrap();
+        }
+        l.sync().unwrap();
+        assert!(!l.is_sorted());
+        l.remove_dupes().unwrap();
+        assert!(l.is_sorted());
+        assert_eq!(l.size(), 4);
+        assert_eq!(sorted_collect(&l), vec![1, 2, 3, 99]);
+        // idempotent
+        l.remove_dupes().unwrap();
+        assert_eq!(l.size(), 4);
+    }
+
+    #[test]
+    fn add_all_appends_everything() {
+        let t = tmpdir("rl_addall");
+        let r = mk(t.path());
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for v in 0..100u64 {
+            a.add(&v).unwrap();
+            b.add(&(v + 50)).unwrap();
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        a.add_all(&b).unwrap();
+        assert_eq!(a.size(), 200);
+        let mut expect: Vec<u64> = (0..100).chain(50..150).collect();
+        expect.sort();
+        assert_eq!(sorted_collect(&a), expect);
+        // b unchanged
+        assert_eq!(b.size(), 100);
+    }
+
+    #[test]
+    fn remove_all_hashset_path() {
+        let t = tmpdir("rl_removeall");
+        let r = mk(t.path());
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for v in 0..100u64 {
+            a.add(&v).unwrap();
+        }
+        a.add(&8).unwrap(); // duplicate of an even: both occurrences must go
+        for v in (0..100u64).step_by(2) {
+            b.add(&v).unwrap();
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        a.remove_all(&b).unwrap();
+        let expect: Vec<u64> = (0..100).filter(|v| v % 2 == 1).collect();
+        assert_eq!(sorted_collect(&a), expect);
+        assert_eq!(a.size(), 50);
+    }
+
+    #[test]
+    fn remove_all_sort_merge_path() {
+        let t = tmpdir("rl_removeall_sort");
+        let mut cfg = crate::RoomyConfig::for_testing(t.path());
+        cfg.ram_budget_bytes = 1; // force the sort-merge path
+        let r = Roomy::open(cfg).unwrap();
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for v in 0..100u64 {
+            a.add(&v).unwrap();
+        }
+        a.add(&8).unwrap();
+        for v in (0..100u64).step_by(2) {
+            b.add(&v).unwrap();
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        a.remove_all(&b).unwrap();
+        let expect: Vec<u64> = (0..100).filter(|v| v % 2 == 1).collect();
+        assert_eq!(sorted_collect(&a), expect);
+        assert_eq!(a.size(), 50);
+    }
+
+    #[test]
+    fn map_and_reduce_sum_of_squares() {
+        // the paper's reduce example
+        let t = tmpdir("rl_reduce");
+        let r = mk(t.path());
+        let l = r.list::<i64>("l").unwrap();
+        for v in -10i64..=10 {
+            l.add(&v).unwrap();
+        }
+        l.sync().unwrap();
+        let sumsq = l
+            .reduce(|| 0i64, |acc, v| acc + v * v, |a, b| a + b)
+            .unwrap();
+        assert_eq!(sumsq, (-10i64..=10).map(|v| v * v).sum::<i64>());
+    }
+
+    #[test]
+    fn predicate_counts_maintained() {
+        let t = tmpdir("rl_pred");
+        let r = mk(t.path());
+        let l = r.list::<u64>("l").unwrap();
+        l.add(&4).unwrap();
+        l.sync().unwrap();
+        let even = l.register_predicate(|v| v % 2 == 0).unwrap();
+        assert_eq!(l.predicate_count(even), 1);
+        l.add(&5).unwrap();
+        l.add(&6).unwrap();
+        l.sync().unwrap();
+        assert_eq!(l.predicate_count(even), 2);
+        l.remove(&4).unwrap();
+        l.sync().unwrap();
+        assert_eq!(l.predicate_count(even), 1);
+    }
+
+    #[test]
+    fn large_list_spills_and_survives() {
+        let t = tmpdir("rl_large");
+        let mut cfg = crate::RoomyConfig::for_testing(t.path());
+        cfg.op_buffer_bytes = 256; // force staging spills
+        let r = Roomy::open(cfg).unwrap();
+        let l = r.list::<u64>("l").unwrap();
+        let n = 20_000u64;
+        for v in 0..n {
+            l.add(&(v % 1000)).unwrap();
+        }
+        l.sync().unwrap();
+        assert_eq!(l.size(), n);
+        l.remove_dupes().unwrap();
+        assert_eq!(l.size(), 1000);
+    }
+
+    #[test]
+    fn destroy_removes_dirs() {
+        let t = tmpdir("rl_destroy");
+        let r = mk(t.path());
+        let l = r.list::<u64>("l").unwrap();
+        l.add(&1).unwrap();
+        l.sync().unwrap();
+        l.destroy().unwrap();
+        for w in 0..r.cluster().nworkers() {
+            assert!(!r.cluster().disk(w).exists("rl_l"));
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! The Roomy API: distributed disk-backed data structures (paper §2).
+//!
+//! A [`Roomy`] instance owns a simulated [`Cluster`](crate::cluster::Cluster)
+//! and hands out data structures partitioned across the cluster's disks:
+//!
+//! - [`RoomyArray`]: fixed-size indexed array of fixed-size elements
+//! - [`RoomyBitArray`]: array of 1/2/4/8-bit elements
+//! - [`RoomyHashTable`]: key → value map
+//! - [`RoomyList`]: unordered multiset with sort-based set algebra
+//! - [`RoomySet`]: native set with incrementally-sorted shards (the
+//!   paper's stated future work)
+//!
+//! Operations are **immediate** when they stream (map, reduce, size,
+//! add_all, remove_all, remove_dupes, predicate_count) and **delayed**
+//! when they random-access (access, update, insert, remove, add) — delayed
+//! ops take effect at the structure's `sync()`. See paper Table 1.
+
+pub mod array;
+pub mod bitarray;
+pub mod element;
+pub mod flat;
+pub mod funcs;
+pub mod hashtable;
+pub mod list;
+pub mod ops;
+pub mod set;
+
+pub use array::RoomyArray;
+pub use bitarray::RoomyBitArray;
+pub use element::Element;
+pub use funcs::{AccessId, PredId, UpdateId};
+pub use hashtable::RoomyHashTable;
+pub use list::RoomyList;
+pub use set::{RoomySet, SetOp};
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::cluster::Cluster;
+use crate::config::RoomyConfig;
+use crate::error::{Result, RoomyError};
+use crate::runtime::Engine;
+
+/// Shared context threaded through every structure: configuration, the
+/// cluster, and the lazily-initialized XLA engine.
+pub(crate) struct CtxInner {
+    pub cfg: RoomyConfig,
+    pub cluster: Arc<Cluster>,
+    pub engine: OnceLock<Option<Arc<Engine>>>,
+}
+
+pub(crate) type Ctx = Arc<CtxInner>;
+
+/// Handle to a Roomy instance. Cheap to clone.
+#[derive(Clone)]
+pub struct Roomy {
+    ctx: Ctx,
+    names: Arc<Mutex<HashSet<String>>>,
+}
+
+impl Roomy {
+    /// Bring up a Roomy instance: validates `cfg`, creates the per-node
+    /// disk directories.
+    pub fn open(cfg: RoomyConfig) -> Result<Roomy> {
+        let cluster = Arc::new(Cluster::new(&cfg)?);
+        Ok(Roomy {
+            ctx: Arc::new(CtxInner { cfg, cluster, engine: OnceLock::new() }),
+            names: Arc::new(Mutex::new(HashSet::new())),
+        })
+    }
+
+    /// The underlying simulated cluster (metrics, per-node disks).
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.ctx.cluster
+    }
+
+    /// The instance configuration.
+    pub fn config(&self) -> &RoomyConfig {
+        &self.ctx.cfg
+    }
+
+    /// The XLA acceleration engine, if enabled and available. Lazily
+    /// initialized on first use; `AccelMode::Rust` always yields `None`.
+    pub fn engine(&self) -> Option<Arc<Engine>> {
+        self.ctx
+            .engine
+            .get_or_init(|| Engine::from_config(&self.ctx.cfg))
+            .clone()
+    }
+
+    pub(crate) fn ctx(&self) -> Ctx {
+        Arc::clone(&self.ctx)
+    }
+
+    fn claim_name(&self, name: &str) -> Result<()> {
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(RoomyError::InvalidArg(format!(
+                "structure name {name:?} must be non-empty [A-Za-z0-9_-]"
+            )));
+        }
+        let mut g = self.names.lock().unwrap();
+        if !g.insert(name.to_string()) {
+            return Err(RoomyError::InvalidArg(format!(
+                "structure name {name:?} already in use"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Create a [`RoomyArray`] of `len` elements, all set to `default`.
+    pub fn array<T: Element>(&self, name: &str, len: u64, default: T) -> Result<RoomyArray<T>> {
+        self.claim_name(name)?;
+        RoomyArray::create(self.ctx(), name, len, default)
+    }
+
+    /// Create a [`RoomyBitArray`] of `len` elements of `bits` ∈ {1,2,4,8}
+    /// bits each, zero-filled.
+    pub fn bit_array(&self, name: &str, len: u64, bits: u8) -> Result<RoomyBitArray> {
+        self.claim_name(name)?;
+        RoomyBitArray::create(self.ctx(), name, len, bits)
+    }
+
+    /// Create an empty [`RoomyHashTable`].
+    pub fn hash_table<K: Element, V: Element>(&self, name: &str) -> Result<RoomyHashTable<K, V>> {
+        self.claim_name(name)?;
+        RoomyHashTable::create(self.ctx(), name)
+    }
+
+    /// Create an empty [`RoomyList`].
+    pub fn list<T: Element>(&self, name: &str) -> Result<RoomyList<T>> {
+        self.claim_name(name)?;
+        RoomyList::create(self.ctx(), name)
+    }
+
+    /// Create an empty [`RoomySet`] (the paper's future-work native set:
+    /// incrementally-sorted shards, merge-based algebra primitives).
+    pub fn set<T: Element>(&self, name: &str) -> Result<RoomySet<T>> {
+        self.claim_name(name)?;
+        RoomySet::create(self.ctx(), name)
+    }
+
+    /// Release a structure name for reuse (used with `destroy` in
+    /// long-lived programs like the BFS level rotation).
+    pub fn release_name(&self, name: &str) {
+        self.names.lock().unwrap().remove(name);
+    }
+
+    /// Aggregate I/O across all node disks.
+    pub fn io_snapshot(&self) -> crate::metrics::IoSnapshot {
+        self.ctx.cluster.io_snapshot()
+    }
+
+    /// Multi-line human-readable metrics report.
+    pub fn report(&self) -> String {
+        let io = self.io_snapshot();
+        let mut s = String::new();
+        s.push_str(&format!(
+            "io: read {} ({} ops), wrote {} ({} ops), {} seeks\n",
+            crate::metrics::fmt_bytes(io.bytes_read),
+            io.reads,
+            crate::metrics::fmt_bytes(io.bytes_written),
+            io.writes,
+            io.seeks,
+        ));
+        s.push_str("phases:\n");
+        s.push_str(&self.ctx.cluster.phases().report());
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::tmpdir;
+
+    #[test]
+    fn open_and_create_structures() {
+        let t = tmpdir("roomy_open");
+        let r = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+        let _a = r.array::<u32>("arr", 10, 0).unwrap();
+        let _l = r.list::<u64>("lst").unwrap();
+        let _h = r.hash_table::<u64, u32>("ht").unwrap();
+        let _b = r.bit_array("bits", 100, 2).unwrap();
+    }
+
+    #[test]
+    fn duplicate_names_rejected_until_released() {
+        let t = tmpdir("roomy_names");
+        let r = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+        let _a = r.array::<u32>("x", 10, 0).unwrap();
+        assert!(r.array::<u32>("x", 10, 0).is_err());
+        r.release_name("x");
+        assert!(r.list::<u32>("x").is_ok());
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        let t = tmpdir("roomy_badname");
+        let r = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+        assert!(r.array::<u32>("", 10, 0).is_err());
+        assert!(r.array::<u32>("a/b", 10, 0).is_err());
+        assert!(r.array::<u32>("a b", 10, 0).is_err());
+    }
+
+    #[test]
+    fn report_mentions_io() {
+        let t = tmpdir("roomy_report");
+        let r = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+        let _a = r.array::<u32>("arr", 100, 1).unwrap();
+        let rep = r.report();
+        assert!(rep.contains("io:"), "{rep}");
+    }
+}

@@ -1,0 +1,273 @@
+//! Delayed-operation records and per-bucket staging.
+//!
+//! Every *random-access* operation in Roomy is delayed (paper §2): encoded
+//! as a compact record, staged into the buffer of the bucket that owns the
+//! target datum, and applied in batch when the structure is synced. The
+//! staging buffers spill to the owning node's disk, so an unbounded number
+//! of delayed ops uses bounded RAM.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::cluster::Cluster;
+use crate::error::Result;
+use crate::storage::SpillBuffer;
+
+/// Operation tags. The per-structure sync loops interpret these; mixing
+/// kinds in one FIFO stream preserves issue order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum OpKind {
+    /// Array/bit-array element update via registered function.
+    Update = 0,
+    /// Array/bit-array element access via registered function.
+    Access = 1,
+    /// Hash-table insert of (key, value).
+    HtInsert = 2,
+    /// Hash-table remove by key.
+    HtRemove = 3,
+    /// Hash-table access via registered function.
+    HtAccess = 4,
+    /// Hash-table update via registered function.
+    HtUpdate = 5,
+    /// List add element.
+    Add = 6,
+    /// List remove-all-occurrences of element.
+    Remove = 7,
+}
+
+impl OpKind {
+    pub fn from_u8(v: u8) -> Option<OpKind> {
+        use OpKind::*;
+        Some(match v {
+            0 => Update,
+            1 => Access,
+            2 => HtInsert,
+            3 => HtRemove,
+            4 => HtAccess,
+            5 => HtUpdate,
+            6 => Add,
+            7 => Remove,
+            _ => return None,
+        })
+    }
+}
+
+thread_local! {
+    /// Reusable encode buffer: delayed-op issue is the hottest user-facing
+    /// path (millions of calls per sync), so record encoding must not
+    /// allocate (§Perf P2).
+    static ENCODE_BUF: std::cell::RefCell<Vec<u8>> =
+        std::cell::RefCell::new(Vec::with_capacity(256));
+}
+
+/// Run `f` with a cleared thread-local scratch buffer for op encoding.
+pub fn with_op_buf<R>(f: impl FnOnce(&mut Vec<u8>) -> R) -> R {
+    ENCODE_BUF.with(|b| {
+        let mut b = b.borrow_mut();
+        b.clear();
+        f(&mut b)
+    })
+}
+
+/// Encode an indexed (array-style) op: `[kind, fn_id, idx u64 LE, passed]`.
+pub fn encode_indexed(out: &mut Vec<u8>, kind: OpKind, fn_id: u8, idx: u64, passed: &[u8]) {
+    out.clear();
+    out.push(kind as u8);
+    out.push(fn_id);
+    out.extend_from_slice(&idx.to_le_bytes());
+    out.extend_from_slice(passed);
+}
+
+/// Encode a keyed (hash-table-style) op: `[kind, fn_id, key, payload]`.
+/// `fn_id` is 0 for insert/remove.
+pub fn encode_keyed(out: &mut Vec<u8>, kind: OpKind, fn_id: u8, key: &[u8], payload: &[u8]) {
+    out.clear();
+    out.push(kind as u8);
+    out.push(fn_id);
+    out.extend_from_slice(key);
+    out.extend_from_slice(payload);
+}
+
+/// Encode a bare element op (list add/remove): `[kind, 0, elt]`.
+pub fn encode_elt(out: &mut Vec<u8>, kind: OpKind, elt: &[u8]) {
+    out.clear();
+    out.push(kind as u8);
+    out.push(0);
+    out.extend_from_slice(elt);
+}
+
+/// Per-bucket spillable staging for one structure.
+///
+/// Issue path: `stage(bucket, record)` locks only that bucket's buffer.
+/// Sync path: `take(bucket)` swaps the buffer for a fresh one under the
+/// lock and returns the full old buffer — ops staged concurrently (e.g. by
+/// access functions running in the same sync) land in the fresh buffer and
+/// are processed by the *next* sync, never lost.
+pub struct StagedOps {
+    states: Vec<Mutex<SlotState>>,
+}
+
+struct SlotState {
+    buf: SpillBuffer,
+    gen: u64,
+}
+
+impl StagedOps {
+    /// One staging slot per bucket; slot `b` spills to the disk of the node
+    /// owning bucket `b`, under `<struct_dir>/stage<b>.<gen>.spill`.
+    pub fn new(cluster: &Cluster, struct_dir: &str, threshold: usize) -> Self {
+        let nb = cluster.nbuckets();
+        let mut states = Vec::with_capacity(nb as usize);
+        for b in 0..nb {
+            let disk = Arc::clone(cluster.disk(cluster.owner(b)));
+            let rel = format!("{struct_dir}/stage{b}.0.spill");
+            states.push(Mutex::new(SlotState {
+                buf: SpillBuffer::new(disk, rel, threshold),
+                gen: 0,
+            }));
+        }
+        StagedOps { states }
+    }
+
+    /// Number of staging slots (== bucket count).
+    pub fn nbuckets(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Append `record` to bucket `b`'s staging buffer.
+    pub fn stage(&self, b: u32, record: &[u8]) -> Result<()> {
+        let mut g = self.lock_slot(b);
+        g.buf.push(record)
+    }
+
+    /// True if no bucket has staged bytes.
+    pub fn is_empty(&self) -> bool {
+        self.states.iter().all(|s| s.lock().unwrap().buf.is_empty())
+    }
+
+    /// Total staged bytes across buckets.
+    pub fn staged_bytes(&self) -> u64 {
+        self.states.iter().map(|s| s.lock().unwrap().buf.len_bytes()).sum()
+    }
+
+    /// Peak RAM currently held by staging buffers (space-budget tests).
+    pub fn ram_bytes(&self) -> usize {
+        self.states.iter().map(|s| s.lock().unwrap().buf.ram_bytes()).sum()
+    }
+
+    /// Swap out bucket `b`'s staged ops for processing. The returned
+    /// buffer is owned by the caller, who should [`SpillBuffer::clear`] it
+    /// after applying (dropping without clear leaks the spill file until
+    /// structure teardown).
+    pub fn take(&self, b: u32, cluster: &Cluster, struct_dir: &str, threshold: usize) -> SpillBuffer {
+        let mut g = self.lock_slot(b);
+        let gen = g.gen + 1;
+        let disk = Arc::clone(cluster.disk(cluster.owner(b)));
+        let rel = format!("{struct_dir}/stage{b}.{gen}.spill");
+        let fresh = SpillBuffer::new(disk, rel, threshold);
+        g.gen = gen;
+        std::mem::replace(&mut g.buf, fresh)
+    }
+
+    fn lock_slot(&self, b: u32) -> MutexGuard<'_, SlotState> {
+        self.states[b as usize]
+            .lock()
+            .expect("op staging mutex poisoned")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoomyConfig;
+    use crate::testutil::tmpdir;
+
+    #[test]
+    fn opkind_roundtrip() {
+        for v in 0u8..8 {
+            let k = OpKind::from_u8(v).unwrap();
+            assert_eq!(k as u8, v);
+        }
+        assert!(OpKind::from_u8(8).is_none());
+    }
+
+    #[test]
+    fn encode_indexed_layout() {
+        let mut v = Vec::new();
+        encode_indexed(&mut v, OpKind::Update, 3, 0x0102030405060708, &[0xAA]);
+        assert_eq!(v[0], 0);
+        assert_eq!(v[1], 3);
+        assert_eq!(u64::from_le_bytes(v[2..10].try_into().unwrap()), 0x0102030405060708);
+        assert_eq!(v[10], 0xAA);
+    }
+
+    #[test]
+    fn encode_keyed_and_elt_layouts() {
+        let mut v = Vec::new();
+        encode_keyed(&mut v, OpKind::HtInsert, 0, &[1, 2], &[3, 4, 5]);
+        assert_eq!(v, vec![2, 0, 1, 2, 3, 4, 5]);
+        encode_elt(&mut v, OpKind::Add, &[9, 9]);
+        assert_eq!(v, vec![6, 0, 9, 9]);
+    }
+
+    fn mkcluster(root: &std::path::Path) -> Cluster {
+        let mut cfg = RoomyConfig::for_testing(root);
+        cfg.workers = 2;
+        cfg.buckets_per_worker = 2;
+        Cluster::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn stage_and_take_roundtrip() {
+        let t = tmpdir("staged_rt");
+        let c = mkcluster(t.path());
+        let s = StagedOps::new(&c, "x", 16);
+        s.stage(1, &[1, 2, 3]).unwrap();
+        s.stage(1, &[4, 5, 6]).unwrap();
+        assert!(!s.is_empty());
+        assert_eq!(s.staged_bytes(), 6);
+
+        let taken = s.take(1, &c, "x", 16);
+        assert!(s.is_empty(), "fresh buffer must be empty");
+        let mut r = taken.reader().unwrap();
+        let mut rec = [0u8; 3];
+        assert!(r.read_exact_or_eof(&mut rec).unwrap());
+        assert_eq!(rec, [1, 2, 3]);
+        assert!(r.read_exact_or_eof(&mut rec).unwrap());
+        assert_eq!(rec, [4, 5, 6]);
+        assert!(!r.read_exact_or_eof(&mut rec).unwrap());
+    }
+
+    #[test]
+    fn staging_after_take_lands_in_fresh_buffer() {
+        let t = tmpdir("staged_gen");
+        let c = mkcluster(t.path());
+        let s = StagedOps::new(&c, "x", 8);
+        s.stage(0, &[1; 4]).unwrap();
+        let mut old = s.take(0, &c, "x", 8);
+        s.stage(0, &[2; 4]).unwrap(); // concurrent-issue simulation
+        assert_eq!(old.len_bytes(), 4);
+        assert_eq!(s.staged_bytes(), 4);
+        old.clear().unwrap();
+        // the fresh buffer still holds the new op
+        let fresh = s.take(0, &c, "x", 8);
+        let mut r = fresh.reader().unwrap();
+        let mut rec = [0u8; 4];
+        assert!(r.read_exact_or_eof(&mut rec).unwrap());
+        assert_eq!(rec, [2; 4]);
+    }
+
+    #[test]
+    fn spill_goes_to_owner_disk() {
+        let t = tmpdir("staged_owner");
+        let c = mkcluster(t.path());
+        let s = StagedOps::new(&c, "str", 4);
+        // bucket 1 owned by node 1; push enough to spill
+        s.stage(1, &[7; 16]).unwrap();
+        assert!(
+            c.disk(1).exists("str/stage1.0.spill"),
+            "spill file must live on the owning node's disk"
+        );
+        assert!(!c.disk(0).exists("str/stage1.0.spill"));
+    }
+}

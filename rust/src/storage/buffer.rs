@@ -1,0 +1,239 @@
+//! Spillable staging buffers for delayed operations.
+//!
+//! Delayed ops are staged in RAM per destination bucket and spilled to the
+//! owning node's disk when they exceed the configured budget — this is the
+//! paper's central trick: random-access operations accumulate as a
+//! *sequential* byte stream and are applied in batch at `sync`, so the
+//! disks only ever see streaming I/O.
+//!
+//! The buffer stores an opaque byte stream (op records are self-describing,
+//! see [`crate::roomy::ops`]); [`SpillReader`] replays the stream in FIFO
+//! order (spilled segments first, then the RAM tail) with `read_exact`
+//! semantics so variable-size records can span chunk boundaries safely.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::diskio::NodeDisk;
+use crate::error::Result;
+
+/// Byte-stream staging buffer that spills to disk past a RAM threshold.
+pub struct SpillBuffer {
+    disk: Arc<NodeDisk>,
+    /// Spill file path (single append-only segment file).
+    spill_rel: PathBuf,
+    ram: Vec<u8>,
+    threshold: usize,
+    spilled_bytes: u64,
+}
+
+impl SpillBuffer {
+    /// New buffer spilling to `spill_rel` on `disk` once RAM content
+    /// exceeds `threshold` bytes.
+    pub fn new(disk: Arc<NodeDisk>, spill_rel: impl Into<PathBuf>, threshold: usize) -> Self {
+        SpillBuffer {
+            disk,
+            spill_rel: spill_rel.into(),
+            ram: Vec::new(),
+            threshold: threshold.max(1),
+            spilled_bytes: 0,
+        }
+    }
+
+    /// Append `bytes` (one or more complete records).
+    pub fn push(&mut self, bytes: &[u8]) -> Result<()> {
+        self.ram.extend_from_slice(bytes);
+        if self.ram.len() >= self.threshold {
+            self.spill()?;
+        }
+        Ok(())
+    }
+
+    /// Force RAM contents out to the spill file.
+    pub fn spill(&mut self) -> Result<()> {
+        if self.ram.is_empty() {
+            return Ok(());
+        }
+        let mut w = self.disk.append_file(&self.spill_rel)?;
+        w.write_bytes(&self.ram)?;
+        w.finish()?;
+        self.spilled_bytes += self.ram.len() as u64;
+        self.ram.clear();
+        Ok(())
+    }
+
+    /// Total staged bytes (RAM + spilled).
+    pub fn len_bytes(&self) -> u64 {
+        self.spilled_bytes + self.ram.len() as u64
+    }
+
+    /// Bytes currently resident in RAM (tests assert the space budget).
+    pub fn ram_bytes(&self) -> usize {
+        self.ram.len()
+    }
+
+    /// Bytes spilled to disk so far.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.spilled_bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len_bytes() == 0
+    }
+
+    /// Open a FIFO reader over everything staged. The buffer keeps its
+    /// contents; call [`SpillBuffer::clear`] after a successful apply.
+    pub fn reader(&self) -> Result<SpillReader<'_>> {
+        let file = if self.spilled_bytes > 0 {
+            Some(self.disk.open_file(&self.spill_rel)?)
+        } else {
+            None
+        };
+        Ok(SpillReader { file, ram: &self.ram, ram_pos: 0 })
+    }
+
+    /// Discard all staged content (after a successful sync apply).
+    pub fn clear(&mut self) -> Result<()> {
+        self.ram.clear();
+        if self.spilled_bytes > 0 {
+            self.disk.remove(&self.spill_rel)?;
+            self.spilled_bytes = 0;
+        }
+        Ok(())
+    }
+}
+
+/// FIFO replay of a [`SpillBuffer`]: spilled segment first, then RAM tail.
+pub struct SpillReader<'b> {
+    file: Option<super::diskio::MeteredReader<'b>>,
+    ram: &'b [u8],
+    ram_pos: usize,
+}
+
+impl<'b> SpillReader<'b> {
+    /// Read exactly `buf.len()` bytes; Ok(false) = clean EOF at a record
+    /// boundary (no bytes read). Errors on partial reads.
+    pub fn read_exact_or_eof(&mut self, buf: &mut [u8]) -> Result<bool> {
+        let mut got = 0;
+        if let Some(f) = self.file.as_mut() {
+            got = f.read_fully(&mut buf[..])?;
+            if got == buf.len() {
+                return Ok(true);
+            }
+            // file exhausted; fall through to RAM
+            self.file = None;
+        }
+        let want = buf.len() - got;
+        let avail = self.ram.len() - self.ram_pos;
+        if got == 0 && avail == 0 {
+            return Ok(false);
+        }
+        if avail < want {
+            return Err(crate::error::RoomyError::InvalidArg(
+                "truncated record in spill buffer".into(),
+            ));
+        }
+        buf[got..].copy_from_slice(&self.ram[self.ram_pos..self.ram_pos + want]);
+        self.ram_pos += want;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DiskPolicy;
+    use crate::testutil::tmpdir;
+
+    fn mkdisk(dir: &std::path::Path) -> Arc<NodeDisk> {
+        Arc::new(NodeDisk::create(0, dir, DiskPolicy::unthrottled()).unwrap())
+    }
+
+    #[test]
+    fn ram_only_roundtrip() {
+        let t = tmpdir("spill_ram");
+        let d = mkdisk(t.path());
+        let mut b = SpillBuffer::new(d, "b.spill", 1 << 20);
+        b.push(&[1, 2, 3]).unwrap();
+        b.push(&[4, 5]).unwrap();
+        assert_eq!(b.len_bytes(), 5);
+        assert_eq!(b.spilled_bytes(), 0);
+        let mut r = b.reader().unwrap();
+        let mut buf = [0u8; 5];
+        assert!(r.read_exact_or_eof(&mut buf).unwrap());
+        assert_eq!(buf, [1, 2, 3, 4, 5]);
+        assert!(!r.read_exact_or_eof(&mut [0u8; 1]).unwrap());
+    }
+
+    #[test]
+    fn spills_past_threshold_and_replays_in_order() {
+        let t = tmpdir("spill_order");
+        let d = mkdisk(t.path());
+        let mut b = SpillBuffer::new(d, "b.spill", 16);
+        for i in 0u8..10 {
+            b.push(&[i; 4]).unwrap();
+        }
+        assert!(b.spilled_bytes() > 0, "should have spilled");
+        assert_eq!(b.len_bytes(), 40);
+        assert!(b.ram_bytes() < 40, "ram stays bounded");
+
+        let mut r = b.reader().unwrap();
+        for i in 0u8..10 {
+            let mut rec = [0u8; 4];
+            assert!(r.read_exact_or_eof(&mut rec).unwrap());
+            assert_eq!(rec, [i; 4], "record {i} out of order");
+        }
+        let mut rec = [0u8; 4];
+        assert!(!r.read_exact_or_eof(&mut rec).unwrap());
+    }
+
+    #[test]
+    fn record_spanning_spill_boundary() {
+        let t = tmpdir("spill_span");
+        let d = mkdisk(t.path());
+        // Threshold 5: a 4-byte push then a 4-byte push spills at 8 bytes
+        // total; reading 3-byte records crosses the file/RAM boundary.
+        let mut b = SpillBuffer::new(d, "b.spill", 5);
+        b.push(&[1, 2, 3, 4]).unwrap();
+        b.push(&[5, 6, 7, 8]).unwrap(); // spill happens here (8 >= 5)
+        b.push(&[9]).unwrap(); // stays in RAM
+        let mut r = b.reader().unwrap();
+        let mut rec = [0u8; 3];
+        let mut all = vec![];
+        while r.read_exact_or_eof(&mut rec).unwrap() {
+            all.extend_from_slice(&rec);
+        }
+        assert_eq!(all, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let t = tmpdir("spill_clear");
+        let d = mkdisk(t.path());
+        let mut b = SpillBuffer::new(d.clone(), "b.spill", 4);
+        b.push(&[1; 8]).unwrap();
+        assert!(b.spilled_bytes() > 0);
+        b.clear().unwrap();
+        assert!(b.is_empty());
+        assert!(!d.exists("b.spill"));
+        // reusable after clear
+        b.push(&[2, 2]).unwrap();
+        let mut r = b.reader().unwrap();
+        let mut rec = [0u8; 2];
+        assert!(r.read_exact_or_eof(&mut rec).unwrap());
+        assert_eq!(rec, [2, 2]);
+    }
+
+    #[test]
+    fn truncated_record_is_error() {
+        let t = tmpdir("spill_trunc");
+        let d = mkdisk(t.path());
+        let mut b = SpillBuffer::new(d, "b.spill", 1 << 20);
+        b.push(&[1, 2, 3]).unwrap();
+        let mut r = b.reader().unwrap();
+        let mut rec = [0u8; 2];
+        assert!(r.read_exact_or_eof(&mut rec).unwrap());
+        // one byte left, but we ask for two
+        assert!(r.read_exact_or_eof(&mut rec).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Fixed-size-record chunk files: the on-disk representation of Roomy
+//! bucket payloads, shard files and shuffled op logs.
+//!
+//! Records are raw fixed-size byte strings; all typing lives above in
+//! [`crate::roomy::element`]. Readers stream in large batches — Roomy
+//! never random-accesses records inside a file.
+
+use std::path::Path;
+
+use super::diskio::{MeteredReader, MeteredWriter, NodeDisk};
+use crate::error::{Result, RoomyError};
+
+/// Streaming writer of fixed-size records.
+pub struct RecordWriter<'d> {
+    w: MeteredWriter<'d>,
+    rec_size: usize,
+    written: u64,
+}
+
+impl<'d> RecordWriter<'d> {
+    /// Create/truncate `rel` on `disk` for records of `rec_size` bytes.
+    pub fn create(disk: &'d NodeDisk, rel: impl AsRef<Path>, rec_size: usize) -> Result<Self> {
+        assert!(rec_size > 0);
+        Ok(RecordWriter { w: disk.create_file(rel)?, rec_size, written: 0 })
+    }
+
+    /// Open `rel` for appending records of `rec_size` bytes.
+    pub fn append(disk: &'d NodeDisk, rel: impl AsRef<Path>, rec_size: usize) -> Result<Self> {
+        assert!(rec_size > 0);
+        Ok(RecordWriter { w: disk.append_file(rel)?, rec_size, written: 0 })
+    }
+
+    /// Write one record (must be exactly `rec_size` bytes).
+    pub fn push(&mut self, rec: &[u8]) -> Result<()> {
+        debug_assert_eq!(rec.len(), self.rec_size);
+        self.w.write_bytes(rec)?;
+        self.written += 1;
+        Ok(())
+    }
+
+    /// Write a batch of concatenated records.
+    pub fn push_batch(&mut self, recs: &[u8]) -> Result<()> {
+        debug_assert_eq!(recs.len() % self.rec_size, 0);
+        self.w.write_bytes(recs)?;
+        self.written += (recs.len() / self.rec_size) as u64;
+        Ok(())
+    }
+
+    /// Records written through this writer.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Flush and close.
+    pub fn finish(self) -> Result<()> {
+        self.w.finish()
+    }
+}
+
+/// Streaming reader of fixed-size records.
+pub struct RecordReader<'d> {
+    r: MeteredReader<'d>,
+    rec_size: usize,
+}
+
+impl<'d> RecordReader<'d> {
+    /// Open `rel`; errors if the file length is not a record multiple.
+    pub fn open(disk: &'d NodeDisk, rel: impl AsRef<Path>, rec_size: usize) -> Result<Self> {
+        assert!(rec_size > 0);
+        let len = disk.len(&rel);
+        if !len.is_multiple_of(rec_size as u64) {
+            return Err(RoomyError::InvalidArg(format!(
+                "file {:?} length {len} is not a multiple of record size {rec_size}",
+                rel.as_ref()
+            )));
+        }
+        Ok(RecordReader { r: disk.open_file(rel)?, rec_size })
+    }
+
+    /// Record size in bytes.
+    pub fn rec_size(&self) -> usize {
+        self.rec_size
+    }
+
+    /// Read up to `max` records into `out` (cleared first). Returns the
+    /// number of records read; 0 = EOF.
+    pub fn read_batch(&mut self, out: &mut Vec<u8>, max: usize) -> Result<usize> {
+        out.clear();
+        out.resize(max * self.rec_size, 0);
+        let n = self.r.read_fully(out)?;
+        if n % self.rec_size != 0 {
+            return Err(RoomyError::InvalidArg(format!(
+                "truncated record ({n} bytes) in {:?}",
+                self.r.path()
+            )));
+        }
+        out.truncate(n);
+        Ok(n / self.rec_size)
+    }
+
+    /// Read one record into `rec`; Ok(false) = EOF.
+    pub fn read_one(&mut self, rec: &mut [u8]) -> Result<bool> {
+        debug_assert_eq!(rec.len(), self.rec_size);
+        let n = self.r.read_fully(rec)?;
+        match n {
+            0 => Ok(false),
+            n if n == self.rec_size => Ok(true),
+            n => Err(RoomyError::InvalidArg(format!(
+                "truncated record ({n} bytes) in {:?}",
+                self.r.path()
+            ))),
+        }
+    }
+}
+
+/// Visit every record of `rel` in streaming batches of `batch` records.
+pub fn for_each_record(
+    disk: &NodeDisk,
+    rel: impl AsRef<Path>,
+    rec_size: usize,
+    batch: usize,
+    mut f: impl FnMut(&[u8]) -> Result<()>,
+) -> Result<()> {
+    if !disk.exists(&rel) {
+        return Ok(());
+    }
+    let mut r = RecordReader::open(disk, rel, rec_size)?;
+    let mut buf = Vec::new();
+    loop {
+        let n = r.read_batch(&mut buf, batch)?;
+        if n == 0 {
+            return Ok(());
+        }
+        for rec in buf.chunks_exact(rec_size) {
+            f(rec)?;
+        }
+    }
+}
+
+/// Number of records in `rel` (0 for missing files).
+pub fn record_count(disk: &NodeDisk, rel: impl AsRef<Path>, rec_size: usize) -> u64 {
+    disk.len(rel) / rec_size as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DiskPolicy;
+    use crate::testutil::tmpdir;
+
+    fn disk(dir: &Path) -> NodeDisk {
+        NodeDisk::create(0, dir, DiskPolicy::unthrottled()).unwrap()
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let t = tmpdir("chunk_rt");
+        let d = disk(t.path());
+        let mut w = RecordWriter::create(&d, "r.dat", 4).unwrap();
+        for i in 0u32..100 {
+            w.push(&i.to_le_bytes()).unwrap();
+        }
+        assert_eq!(w.written(), 100);
+        w.finish().unwrap();
+
+        let mut r = RecordReader::open(&d, "r.dat", 4).unwrap();
+        let mut buf = Vec::new();
+        let n = r.read_batch(&mut buf, 64).unwrap();
+        assert_eq!(n, 64);
+        assert_eq!(&buf[..4], &0u32.to_le_bytes());
+        let n2 = r.read_batch(&mut buf, 64).unwrap();
+        assert_eq!(n2, 36);
+        assert_eq!(r.read_batch(&mut buf, 64).unwrap(), 0);
+    }
+
+    #[test]
+    fn read_one_and_eof() {
+        let t = tmpdir("chunk_one");
+        let d = disk(t.path());
+        let mut w = RecordWriter::create(&d, "r.dat", 8).unwrap();
+        w.push(&7u64.to_le_bytes()).unwrap();
+        w.finish().unwrap();
+        let mut r = RecordReader::open(&d, "r.dat", 8).unwrap();
+        let mut rec = [0u8; 8];
+        assert!(r.read_one(&mut rec).unwrap());
+        assert_eq!(u64::from_le_bytes(rec), 7);
+        assert!(!r.read_one(&mut rec).unwrap());
+    }
+
+    #[test]
+    fn rejects_misaligned_file() {
+        let t = tmpdir("chunk_misaligned");
+        let d = disk(t.path());
+        d.write_all("bad.dat", &[1, 2, 3]).unwrap();
+        assert!(RecordReader::open(&d, "bad.dat", 2).is_err());
+    }
+
+    #[test]
+    fn for_each_streams_all() {
+        let t = tmpdir("chunk_foreach");
+        let d = disk(t.path());
+        let mut w = RecordWriter::create(&d, "r.dat", 4).unwrap();
+        for i in 0u32..1000 {
+            w.push(&i.to_le_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+        let mut sum = 0u64;
+        for_each_record(&d, "r.dat", 4, 128, |rec| {
+            sum += u32::from_le_bytes(rec.try_into().unwrap()) as u64;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(sum, 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn for_each_missing_is_empty() {
+        let t = tmpdir("chunk_missing");
+        let d = disk(t.path());
+        let mut calls = 0;
+        for_each_record(&d, "none.dat", 4, 16, |_| {
+            calls += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 0);
+        assert_eq!(record_count(&d, "none.dat", 4), 0);
+    }
+
+    #[test]
+    fn push_batch_counts_records() {
+        let t = tmpdir("chunk_batch");
+        let d = disk(t.path());
+        let mut w = RecordWriter::create(&d, "r.dat", 2).unwrap();
+        w.push_batch(&[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(w.written(), 3);
+        w.finish().unwrap();
+        assert_eq!(record_count(&d, "r.dat", 2), 3);
+    }
+}

@@ -1,0 +1,462 @@
+//! Metered, optionally throttled access to one simulated node-local disk.
+//!
+//! [`NodeDisk`] is the only way the rest of the crate touches files. Every
+//! read/write is counted into the node's [`IoStats`] and, when a
+//! [`DiskPolicy`] sets bandwidth caps or a seek penalty, slowed down to
+//! match — this is what lets the E1/E2 experiments reproduce the paper's
+//! "disk is 50x slower than RAM, seeks are fatal" regime deterministically.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::DiskPolicy;
+use crate::error::{Result, RoomyError};
+use crate::metrics::IoStats;
+
+/// Buffered writer size. Large enough that the OS sees streaming writes.
+const WRITE_BUF: usize = 1 << 20;
+/// Buffered reader size.
+const READ_BUF: usize = 1 << 20;
+
+/// One simulated node-local disk rooted at a directory.
+#[derive(Debug)]
+pub struct NodeDisk {
+    node: usize,
+    root: PathBuf,
+    policy: DiskPolicy,
+    stats: Arc<IoStats>,
+    /// Token-bucket state per direction: the instant at which the
+    /// simulated device becomes free again. Real I/O time counts against
+    /// the budget — a throttled disk delivers ≈ the configured bandwidth,
+    /// not (configured ∥ host) in series. (§Perf P1.)
+    read_free: Mutex<Option<Instant>>,
+    write_free: Mutex<Option<Instant>>,
+}
+
+impl NodeDisk {
+    /// Create (and mkdir) a node disk rooted at `root`.
+    pub fn create(node: usize, root: impl Into<PathBuf>, policy: DiskPolicy) -> Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root).map_err(|e| RoomyError::io(&root, e))?;
+        Ok(NodeDisk {
+            node,
+            root,
+            policy,
+            stats: Arc::new(IoStats::new()),
+            read_free: Mutex::new(None),
+            write_free: Mutex::new(None),
+        })
+    }
+
+    /// Node index within the cluster.
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    /// Root directory of this disk.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// I/O counters for this disk.
+    pub fn stats(&self) -> &Arc<IoStats> {
+        &self.stats
+    }
+
+    /// The performance model in force.
+    pub fn policy(&self) -> DiskPolicy {
+        self.policy
+    }
+
+    fn abs(&self, rel: impl AsRef<Path>) -> PathBuf {
+        self.root.join(rel)
+    }
+
+    /// Charge one seek (file open / reposition) against the policy.
+    fn charge_seek(&self) {
+        self.stats.add_seek();
+        if self.policy.seek_us > 0 {
+            let d = Duration::from_micros(self.policy.seek_us);
+            std::thread::sleep(d);
+            self.stats.add_throttle(d);
+        }
+    }
+
+    /// Token-bucket bandwidth charge: advance the device-free instant by
+    /// `bytes / bps` from max(now, previous free) and sleep until then.
+    /// Real I/O latency overlaps the budget instead of adding to it, and
+    /// sub-millisecond debts are deferred (accumulated in the deadline)
+    /// rather than slept — OS sleep granularity would otherwise inflate
+    /// each small charge by ~0.1 ms and cap throughput below the model
+    /// (§Perf P1).
+    fn charge_bw(&self, bytes: u64, bps: u64, free: &Mutex<Option<Instant>>) {
+        const MIN_SLEEP: Duration = Duration::from_millis(2);
+        let dur = Duration::from_secs_f64(bytes as f64 / bps as f64);
+        let deadline = {
+            let mut g = free.lock().unwrap();
+            let now = Instant::now();
+            let start = g.map_or(now, |t| t.max(now));
+            let deadline = start + dur;
+            *g = Some(deadline);
+            deadline
+        };
+        let now = Instant::now();
+        if deadline > now {
+            let wait = deadline - now;
+            if wait >= MIN_SLEEP {
+                std::thread::sleep(wait);
+                self.stats.add_throttle(wait);
+            }
+        }
+    }
+
+    fn charge_read(&self, bytes: u64) {
+        self.stats.add_read(bytes);
+        if let Some(bps) = self.policy.read_bps {
+            self.charge_bw(bytes, bps, &self.read_free);
+        }
+    }
+
+    fn charge_write(&self, bytes: u64) {
+        self.stats.add_write(bytes);
+        if let Some(bps) = self.policy.write_bps {
+            self.charge_bw(bytes, bps, &self.write_free);
+        }
+    }
+
+    /// Open `rel` for writing, truncating. Parent dirs are created.
+    pub fn create_file(&self, rel: impl AsRef<Path>) -> Result<MeteredWriter<'_>> {
+        let path = self.abs(&rel);
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).map_err(|e| RoomyError::io(dir, e))?;
+        }
+        let f = File::create(&path).map_err(|e| RoomyError::io(&path, e))?;
+        self.charge_seek();
+        Ok(MeteredWriter { disk: self, w: BufWriter::with_capacity(WRITE_BUF, f), path })
+    }
+
+    /// Open `rel` for appending (created if missing).
+    pub fn append_file(&self, rel: impl AsRef<Path>) -> Result<MeteredWriter<'_>> {
+        let path = self.abs(&rel);
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).map_err(|e| RoomyError::io(dir, e))?;
+        }
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| RoomyError::io(&path, e))?;
+        self.charge_seek();
+        Ok(MeteredWriter { disk: self, w: BufWriter::with_capacity(WRITE_BUF, f), path })
+    }
+
+    /// Open `rel` for streaming reads. Missing files are an error; use
+    /// [`NodeDisk::exists`] to probe.
+    pub fn open_file(&self, rel: impl AsRef<Path>) -> Result<MeteredReader<'_>> {
+        let path = self.abs(&rel);
+        let f = File::open(&path).map_err(|e| RoomyError::io(&path, e))?;
+        self.charge_seek();
+        Ok(MeteredReader { disk: self, r: BufReader::with_capacity(READ_BUF, f), path })
+    }
+
+    /// Length of `rel` in bytes, or 0 if it does not exist.
+    pub fn len(&self, rel: impl AsRef<Path>) -> u64 {
+        fs::metadata(self.abs(rel)).map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Whether `rel` exists.
+    pub fn exists(&self, rel: impl AsRef<Path>) -> bool {
+        self.abs(rel).exists()
+    }
+
+    /// Delete `rel` if present.
+    pub fn remove(&self, rel: impl AsRef<Path>) -> Result<()> {
+        let path = self.abs(&rel);
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(RoomyError::io(&path, e)),
+        }
+    }
+
+    /// Rename within this disk.
+    pub fn rename(&self, from: impl AsRef<Path>, to: impl AsRef<Path>) -> Result<()> {
+        let (a, b) = (self.abs(&from), self.abs(&to));
+        if let Some(dir) = b.parent() {
+            fs::create_dir_all(dir).map_err(|e| RoomyError::io(dir, e))?;
+        }
+        fs::rename(&a, &b).map_err(|e| RoomyError::io(&a, e))
+    }
+
+    /// Remove a whole subdirectory tree (structure teardown).
+    pub fn remove_dir(&self, rel: impl AsRef<Path>) -> Result<()> {
+        let path = self.abs(&rel);
+        match fs::remove_dir_all(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(RoomyError::io(&path, e)),
+        }
+    }
+
+    /// Relative paths of files directly under `rel` (sorted).
+    pub fn list(&self, rel: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
+        let dir = self.abs(&rel);
+        let mut out = vec![];
+        let iter = match fs::read_dir(&dir) {
+            Ok(it) => it,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+            Err(e) => return Err(RoomyError::io(&dir, e)),
+        };
+        for entry in iter {
+            let entry = entry.map_err(|e| RoomyError::io(&dir, e))?;
+            if entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+                out.push(rel.as_ref().join(entry.file_name()));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Read the entire file into RAM (bucket loads — the unit Roomy sizes
+    /// to fit in memory).
+    pub fn read_all(&self, rel: impl AsRef<Path>) -> Result<Vec<u8>> {
+        let mut r = self.open_file(&rel)?;
+        let mut buf = Vec::with_capacity(self.len(&rel) as usize);
+        r.read_to_end(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Write `data` to `rel` atomically-enough (tmp + rename).
+    pub fn write_all(&self, rel: impl AsRef<Path>, data: &[u8]) -> Result<()> {
+        let tmp = rel.as_ref().with_extension("tmp");
+        {
+            let mut w = self.create_file(&tmp)?;
+            w.write_bytes(data)?;
+            w.finish()?;
+        }
+        self.rename(&tmp, rel)
+    }
+}
+
+/// Metered buffered writer; count/throttle happens at `write_bytes`.
+pub struct MeteredWriter<'d> {
+    disk: &'d NodeDisk,
+    w: BufWriter<File>,
+    path: PathBuf,
+}
+
+impl<'d> MeteredWriter<'d> {
+    /// Write a full byte slice, metering it against the disk policy.
+    pub fn write_bytes(&mut self, data: &[u8]) -> Result<()> {
+        self.w.write_all(data).map_err(|e| RoomyError::io(&self.path, e))?;
+        self.disk.charge_write(data.len() as u64);
+        Ok(())
+    }
+
+    /// Flush buffers to the OS. Must be called before drop for durability;
+    /// dropping without `finish` is fine for scratch files.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush().map_err(|e| RoomyError::io(&self.path, e))
+    }
+
+    /// Path being written (diagnostics).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Metered buffered reader.
+pub struct MeteredReader<'d> {
+    disk: &'d NodeDisk,
+    r: BufReader<File>,
+    path: PathBuf,
+}
+
+impl<'d> MeteredReader<'d> {
+    /// Read up to `buf.len()` bytes; returns bytes read (0 = EOF).
+    pub fn read_some(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let n = self.r.read(buf).map_err(|e| RoomyError::io(&self.path, e))?;
+        if n > 0 {
+            self.disk.charge_read(n as u64);
+        }
+        Ok(n)
+    }
+
+    /// Read exactly `buf.len()` bytes or fail.
+    pub fn read_exact(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.r.read_exact(buf).map_err(|e| RoomyError::io(&self.path, e))?;
+        self.disk.charge_read(buf.len() as u64);
+        Ok(())
+    }
+
+    /// Fill `buf` as far as possible (loops over short reads); returns
+    /// bytes read, which is < `buf.len()` only at EOF.
+    pub fn read_fully(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let mut total = 0;
+        while total < buf.len() {
+            let n = self.r.read(&mut buf[total..]).map_err(|e| RoomyError::io(&self.path, e))?;
+            if n == 0 {
+                break;
+            }
+            total += n;
+        }
+        if total > 0 {
+            self.disk.charge_read(total as u64);
+        }
+        Ok(total)
+    }
+
+    /// Read to end of file.
+    pub fn read_to_end(&mut self, out: &mut Vec<u8>) -> Result<usize> {
+        let n = self.r.read_to_end(out).map_err(|e| RoomyError::io(&self.path, e))?;
+        if n > 0 {
+            self.disk.charge_read(n as u64);
+        }
+        Ok(n)
+    }
+
+    /// Reposition (charged as a seek — random access is what Roomy avoids).
+    pub fn seek_to(&mut self, offset: u64) -> Result<()> {
+        self.r
+            .seek(SeekFrom::Start(offset))
+            .map_err(|e| RoomyError::io(&self.path, e))?;
+        self.disk.charge_seek();
+        Ok(())
+    }
+
+    /// Path being read (diagnostics).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::tmpdir;
+
+    fn disk(dir: &Path) -> NodeDisk {
+        NodeDisk::create(0, dir, DiskPolicy::unthrottled()).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_and_metering() {
+        let t = tmpdir("diskio_rt");
+        let d = disk(t.path());
+        let mut w = d.create_file("a/b.dat").unwrap();
+        w.write_bytes(b"hello ").unwrap();
+        w.write_bytes(b"world").unwrap();
+        w.finish().unwrap();
+
+        let data = d.read_all("a/b.dat").unwrap();
+        assert_eq!(&data, b"hello world");
+
+        let s = d.stats().snapshot();
+        assert_eq!(s.bytes_written, 11);
+        assert_eq!(s.bytes_read, 11);
+        assert!(s.seeks >= 2); // create + open
+    }
+
+    #[test]
+    fn append_accumulates() {
+        let t = tmpdir("diskio_app");
+        let d = disk(t.path());
+        for _ in 0..3 {
+            let mut w = d.append_file("log.dat").unwrap();
+            w.write_bytes(b"x").unwrap();
+            w.finish().unwrap();
+        }
+        assert_eq!(d.len("log.dat"), 3);
+    }
+
+    #[test]
+    fn missing_len_is_zero_and_remove_is_idempotent() {
+        let t = tmpdir("diskio_missing");
+        let d = disk(t.path());
+        assert_eq!(d.len("nope.dat"), 0);
+        assert!(!d.exists("nope.dat"));
+        d.remove("nope.dat").unwrap();
+        d.remove_dir("nodir").unwrap();
+    }
+
+    #[test]
+    fn list_sorted() {
+        let t = tmpdir("diskio_list");
+        let d = disk(t.path());
+        for name in ["s/c.dat", "s/a.dat", "s/b.dat"] {
+            d.write_all(name, b"1").unwrap();
+        }
+        let files = d.list("s").unwrap();
+        let names: Vec<_> =
+            files.iter().map(|p| p.file_name().unwrap().to_str().unwrap()).collect();
+        assert_eq!(names, vec!["a.dat", "b.dat", "c.dat"]);
+        assert_eq!(d.list("absent").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn write_all_atomic_replaces() {
+        let t = tmpdir("diskio_atomic");
+        let d = disk(t.path());
+        d.write_all("x.dat", b"old").unwrap();
+        d.write_all("x.dat", b"newer").unwrap();
+        assert_eq!(d.read_all("x.dat").unwrap(), b"newer");
+        assert!(!d.exists("x.tmp"));
+    }
+
+    #[test]
+    fn throttle_enforces_bandwidth() {
+        let t = tmpdir("diskio_throttle");
+        // 1 MB/s write cap; writing 100 KB must take >= ~90ms.
+        let policy = DiskPolicy {
+            read_bps: None,
+            write_bps: Some(1_000_000),
+            seek_us: 0,
+        };
+        let d = NodeDisk::create(0, t.path(), policy).unwrap();
+        let data = vec![0u8; 100_000];
+        let t0 = std::time::Instant::now();
+        let mut w = d.create_file("slow.dat").unwrap();
+        w.write_bytes(&data).unwrap();
+        w.finish().unwrap();
+        assert!(t0.elapsed().as_millis() >= 90, "throttle not applied");
+        assert!(d.stats().snapshot().throttle_ns > 0);
+    }
+
+    #[test]
+    fn seek_penalty_charged_on_open() {
+        let t = tmpdir("diskio_seek");
+        let policy = DiskPolicy { read_bps: None, write_bps: None, seek_us: 2_000 };
+        let d = NodeDisk::create(0, t.path(), policy).unwrap();
+        d.write_all("f.dat", b"abc").unwrap();
+        let before = d.stats().snapshot().seeks;
+        let _r = d.open_file("f.dat").unwrap();
+        assert_eq!(d.stats().snapshot().seeks, before + 1);
+    }
+
+    #[test]
+    fn read_fully_handles_eof() {
+        let t = tmpdir("diskio_fully");
+        let d = disk(t.path());
+        d.write_all("f.dat", &[7u8; 10]).unwrap();
+        let mut r = d.open_file("f.dat").unwrap();
+        let mut buf = [0u8; 64];
+        let n = r.read_fully(&mut buf).unwrap();
+        assert_eq!(n, 10);
+        assert_eq!(&buf[..10], &[7u8; 10]);
+    }
+
+    #[test]
+    fn seek_to_repositions() {
+        let t = tmpdir("diskio_seekto");
+        let d = disk(t.path());
+        d.write_all("f.dat", b"0123456789").unwrap();
+        let mut r = d.open_file("f.dat").unwrap();
+        r.seek_to(5).unwrap();
+        let mut buf = [0u8; 5];
+        r.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"56789");
+    }
+}

@@ -1,0 +1,340 @@
+//! External sort for fixed-size records: in-RAM run generation + k-way
+//! streaming merge, with optional duplicate elimination and sorted-merge
+//! set algebra (difference) — the machinery behind `RoomyList`'s
+//! `removeDupes`/`removeAll` (paper §2: "computations using RoomyLists are
+//! often dominated by the time to sort the list").
+//!
+//! Records compare as raw byte strings (memcmp). Roomy only needs a total
+//! order consistent with equality; element encodings choose their byte
+//! layout accordingly.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::path::{Path, PathBuf};
+
+use super::chunkfile::{RecordReader, RecordWriter};
+use super::diskio::NodeDisk;
+use crate::error::Result;
+
+/// Generate sorted runs from `input`: chunks of ~`chunk_bytes` are sorted
+/// in RAM and written to `tmp_prefix.runK`. Returns the run paths.
+pub fn make_runs(
+    disk: &NodeDisk,
+    input: impl AsRef<Path>,
+    tmp_prefix: impl AsRef<Path>,
+    rec_size: usize,
+    chunk_bytes: usize,
+) -> Result<Vec<PathBuf>> {
+    let mut runs = Vec::new();
+    if !disk.exists(&input) {
+        return Ok(runs);
+    }
+    // Cap the run size to the file's actual record count: read_batch
+    // zero-fills its buffer up front, so an uncapped 64 MB chunk would
+    // memset 64 MB per (possibly tiny) shard.
+    let total_recs = super::chunkfile::record_count(disk, &input, rec_size).max(1) as usize;
+    let recs_per_chunk = (chunk_bytes / rec_size).clamp(1, total_recs);
+    let mut reader = RecordReader::open(disk, &input, rec_size)?;
+    let mut buf = Vec::new();
+    loop {
+        let n = reader.read_batch(&mut buf, recs_per_chunk)?;
+        if n == 0 {
+            break;
+        }
+        // Sort record *views* then write in order (avoids moving payloads
+        // twice for large records).
+        let mut views: Vec<&[u8]> = buf.chunks_exact(rec_size).collect();
+        views.sort_unstable();
+        let run_rel = tmp_prefix.as_ref().with_extension(format!("run{}", runs.len()));
+        let mut w = RecordWriter::create(disk, &run_rel, rec_size)?;
+        for v in views {
+            w.push(v)?;
+        }
+        w.finish()?;
+        runs.push(run_rel);
+    }
+    Ok(runs)
+}
+
+/// K-way merge sorted `runs` into `output`. `dedup` drops records equal to
+/// the previously written one. Returns records written. Run files are
+/// deleted afterwards.
+pub fn merge_runs(
+    disk: &NodeDisk,
+    runs: &[PathBuf],
+    output: impl AsRef<Path>,
+    rec_size: usize,
+    dedup: bool,
+) -> Result<u64> {
+    let mut writer = RecordWriter::create(disk, &output, rec_size)?;
+    let mut heap: BinaryHeap<Reverse<(Vec<u8>, usize)>> = BinaryHeap::new();
+    let mut readers = Vec::with_capacity(runs.len());
+    for (i, run) in runs.iter().enumerate() {
+        let mut r = RecordReader::open(disk, run, rec_size)?;
+        let mut rec = vec![0u8; rec_size];
+        if r.read_one(&mut rec)? {
+            heap.push(Reverse((rec, i)));
+        }
+        readers.push(r);
+    }
+    let mut last: Option<Vec<u8>> = None;
+    let mut written = 0u64;
+    while let Some(Reverse((rec, i))) = heap.pop() {
+        let emit = match (&last, dedup) {
+            (Some(prev), true) => prev != &rec,
+            _ => true,
+        };
+        if emit {
+            writer.push(&rec)?;
+            written += 1;
+            if dedup {
+                last = Some(rec.clone());
+            }
+        }
+        let mut next = rec; // reuse allocation
+        if readers[i].read_one(&mut next)? {
+            heap.push(Reverse((next, i)));
+        }
+    }
+    writer.finish()?;
+    for run in runs {
+        disk.remove(run)?;
+    }
+    Ok(written)
+}
+
+/// Sort `input` into `output` (safe for `input == output`), optionally
+/// deduplicating. Returns records written.
+pub fn sort_file(
+    disk: &NodeDisk,
+    input: impl AsRef<Path>,
+    output: impl AsRef<Path>,
+    rec_size: usize,
+    chunk_bytes: usize,
+    dedup: bool,
+) -> Result<u64> {
+    let tmp_prefix = input.as_ref().with_extension("sort");
+    let runs = make_runs(disk, &input, &tmp_prefix, rec_size, chunk_bytes)?;
+    if runs.is_empty() {
+        // Empty/missing input: produce an empty output file.
+        RecordWriter::create(disk, &output, rec_size)?.finish()?;
+        return Ok(0);
+    }
+    let tmp_out = input.as_ref().with_extension("sorted.tmp");
+    let n = merge_runs(disk, &runs, &tmp_out, rec_size, dedup)?;
+    disk.rename(&tmp_out, &output)?;
+    Ok(n)
+}
+
+/// Streaming sorted-merge difference: records of sorted `a` that do not
+/// appear in sorted `b` (every occurrence of a matching record is
+/// removed — RoomyList `removeAll` semantics). Returns records written.
+pub fn merge_diff(
+    disk: &NodeDisk,
+    a: impl AsRef<Path>,
+    b: impl AsRef<Path>,
+    output: impl AsRef<Path>,
+    rec_size: usize,
+) -> Result<u64> {
+    let mut out = RecordWriter::create(disk, &output, rec_size)?;
+    let mut ra = RecordReader::open(disk, &a, rec_size)?;
+    let mut rec_a = vec![0u8; rec_size];
+    let mut have_a = ra.read_one(&mut rec_a)?;
+
+    let mut rec_b = vec![0u8; rec_size];
+    let mut have_b;
+    let mut rb = if disk.exists(&b) {
+        let mut r = RecordReader::open(disk, &b, rec_size)?;
+        have_b = r.read_one(&mut rec_b)?;
+        Some(r)
+    } else {
+        have_b = false;
+        None
+    };
+
+    let mut written = 0u64;
+    while have_a {
+        if have_b {
+            match rec_a.cmp(&rec_b) {
+                std::cmp::Ordering::Less => {
+                    out.push(&rec_a)?;
+                    written += 1;
+                    have_a = ra.read_one(&mut rec_a)?;
+                }
+                std::cmp::Ordering::Equal => {
+                    // drop this occurrence of a (and keep b for more dups)
+                    have_a = ra.read_one(&mut rec_a)?;
+                }
+                std::cmp::Ordering::Greater => {
+                    have_b = rb.as_mut().unwrap().read_one(&mut rec_b)?;
+                }
+            }
+        } else {
+            out.push(&rec_a)?;
+            written += 1;
+            have_a = ra.read_one(&mut rec_a)?;
+        }
+    }
+    out.finish()?;
+    Ok(written)
+}
+
+/// Check that `rel` is sorted (ascending memcmp); test/debug helper.
+pub fn is_sorted(disk: &NodeDisk, rel: impl AsRef<Path>, rec_size: usize) -> Result<bool> {
+    if !disk.exists(&rel) {
+        return Ok(true);
+    }
+    let mut r = RecordReader::open(disk, &rel, rec_size)?;
+    let mut prev = vec![0u8; rec_size];
+    let mut cur = vec![0u8; rec_size];
+    if !r.read_one(&mut prev)? {
+        return Ok(true);
+    }
+    while r.read_one(&mut cur)? {
+        if cur < prev {
+            return Ok(false);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DiskPolicy;
+    use crate::testutil::{prop_check, tmpdir};
+
+    fn disk(dir: &Path) -> NodeDisk {
+        NodeDisk::create(0, dir, DiskPolicy::unthrottled()).unwrap()
+    }
+
+    fn write_u32s(d: &NodeDisk, rel: &str, vals: &[u32]) {
+        let mut w = RecordWriter::create(d, rel, 4).unwrap();
+        for v in vals {
+            w.push(&v.to_be_bytes()).unwrap(); // BE: memcmp == numeric
+        }
+        w.finish().unwrap();
+    }
+
+    fn read_u32s(d: &NodeDisk, rel: &str) -> Vec<u32> {
+        let mut out = vec![];
+        super::super::chunkfile::for_each_record(d, rel, 4, 256, |rec| {
+            out.push(u32::from_be_bytes(rec.try_into().unwrap()));
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn sorts_single_run() {
+        let t = tmpdir("extsort_single");
+        let d = disk(t.path());
+        write_u32s(&d, "in.dat", &[5, 3, 9, 1, 7]);
+        let n = sort_file(&d, "in.dat", "out.dat", 4, 1 << 20, false).unwrap();
+        assert_eq!(n, 5);
+        assert_eq!(read_u32s(&d, "out.dat"), vec![1, 3, 5, 7, 9]);
+        assert!(is_sorted(&d, "out.dat", 4).unwrap());
+    }
+
+    #[test]
+    fn sorts_many_runs_with_tiny_chunks() {
+        let t = tmpdir("extsort_runs");
+        let d = disk(t.path());
+        let vals: Vec<u32> = (0..1000).map(|i| (i * 7919) % 1000).collect();
+        write_u32s(&d, "in.dat", &vals);
+        // chunk_bytes=32 -> 8 records per run -> 125 runs
+        let n = sort_file(&d, "in.dat", "out.dat", 4, 32, false).unwrap();
+        assert_eq!(n, 1000);
+        let got = read_u32s(&d, "out.dat");
+        let mut expect = vals.clone();
+        expect.sort();
+        assert_eq!(got, expect);
+        // runs cleaned up
+        assert!(d.list(".").unwrap().iter().all(|p| !p.to_str().unwrap().contains("run")));
+    }
+
+    #[test]
+    fn dedup_removes_duplicates() {
+        let t = tmpdir("extsort_dedup");
+        let d = disk(t.path());
+        write_u32s(&d, "in.dat", &[4, 2, 4, 4, 1, 2, 8]);
+        let n = sort_file(&d, "in.dat", "out.dat", 4, 8, true).unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(read_u32s(&d, "out.dat"), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn sort_in_place_same_path() {
+        let t = tmpdir("extsort_inplace");
+        let d = disk(t.path());
+        write_u32s(&d, "f.dat", &[3, 1, 2]);
+        sort_file(&d, "f.dat", "f.dat", 4, 1 << 20, false).unwrap();
+        assert_eq!(read_u32s(&d, "f.dat"), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_input_gives_empty_output() {
+        let t = tmpdir("extsort_empty");
+        let d = disk(t.path());
+        let n = sort_file(&d, "missing.dat", "out.dat", 4, 1024, true).unwrap();
+        assert_eq!(n, 0);
+        assert!(d.exists("out.dat"));
+        assert_eq!(d.len("out.dat"), 0);
+    }
+
+    #[test]
+    fn diff_removes_all_occurrences() {
+        let t = tmpdir("extsort_diff");
+        let d = disk(t.path());
+        write_u32s(&d, "a.dat", &[1, 2, 2, 3, 5, 5, 9]);
+        write_u32s(&d, "b.dat", &[2, 5]);
+        let n = merge_diff(&d, "a.dat", "b.dat", "c.dat", 4).unwrap();
+        assert_eq!(n, 3);
+        assert_eq!(read_u32s(&d, "c.dat"), vec![1, 3, 9]);
+    }
+
+    #[test]
+    fn diff_with_missing_b_copies_a() {
+        let t = tmpdir("extsort_diffb");
+        let d = disk(t.path());
+        write_u32s(&d, "a.dat", &[1, 2]);
+        let n = merge_diff(&d, "a.dat", "nope.dat", "c.dat", 4).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(read_u32s(&d, "c.dat"), vec![1, 2]);
+    }
+
+    #[test]
+    fn prop_sort_matches_std() {
+        prop_check("extsort vs std sort", 10, |rng| {
+            let t = tmpdir("extsort_prop");
+            let d = disk(t.path());
+            let n = rng.range(0, 500);
+            let vals: Vec<u32> = (0..n).map(|_| rng.below(100) as u32).collect();
+            write_u32s(&d, "in.dat", &vals);
+            let chunk = rng.range(8, 256);
+            sort_file(&d, "in.dat", "out.dat", 4, chunk, false).unwrap();
+            let mut expect = vals.clone();
+            expect.sort();
+            assert_eq!(read_u32s(&d, "out.dat"), expect);
+        });
+    }
+
+    #[test]
+    fn prop_dedup_matches_btreeset() {
+        prop_check("extsort dedup vs BTreeSet", 10, |rng| {
+            let t = tmpdir("extsort_propd");
+            let d = disk(t.path());
+            let n = rng.range(0, 300);
+            let vals: Vec<u32> = (0..n).map(|_| rng.below(50) as u32).collect();
+            write_u32s(&d, "in.dat", &vals);
+            sort_file(&d, "in.dat", "out.dat", 4, 64, true).unwrap();
+            let expect: Vec<u32> =
+                std::collections::BTreeSet::from_iter(vals.iter().copied())
+                    .into_iter()
+                    .collect();
+            assert_eq!(read_u32s(&d, "out.dat"), expect);
+        });
+    }
+}

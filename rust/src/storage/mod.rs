@@ -1,0 +1,24 @@
+//! Disk substrate: metered node-local disks, fixed-record chunk files,
+//! spillable staging buffers, and external sort.
+//!
+//! Everything Roomy writes goes through [`diskio::NodeDisk`], which meters
+//! bytes/seeks into [`crate::metrics::IoStats`] and (optionally) enforces a
+//! simulated [`crate::DiskPolicy`] so the paper's 2010 disk regime can be
+//! reproduced on modern hardware.
+//!
+//! Layout conventions (one directory per simulated node):
+//!
+//! ```text
+//! <root>/node<K>/<structure>/bucket<B>.dat     bucket payload
+//! <root>/node<K>/<structure>/ops<B>.log        shuffled delayed-op log
+//! <root>/node<K>/tmp/...                       sort runs, scratch
+//! ```
+
+pub mod buffer;
+pub mod chunkfile;
+pub mod diskio;
+pub mod extsort;
+
+pub use buffer::SpillBuffer;
+pub use chunkfile::{RecordReader, RecordWriter};
+pub use diskio::NodeDisk;

@@ -1,0 +1,61 @@
+//! Test utilities: unique temp directories and a small property-testing
+//! harness (the offline build has no `proptest`, so we roll a deterministic
+//! SplitMix64-based shrinking-free checker of our own).
+
+pub mod prop;
+
+pub use prop::{prop_check, Rng};
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT: AtomicU64 = AtomicU64::new(0);
+
+/// Self-cleaning unique temp directory.
+pub struct TmpDir {
+    path: PathBuf,
+}
+
+impl TmpDir {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TmpDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Create a fresh directory under the system temp dir. Unique across
+/// threads and processes (pid + counter).
+pub fn tmpdir(tag: &str) -> TmpDir {
+    let n = NEXT.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!(
+        "roomy-test-{}-{}-{}",
+        tag,
+        std::process::id(),
+        n
+    ));
+    std::fs::create_dir_all(&path).expect("create tmpdir");
+    TmpDir { path }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tmpdir_unique_and_cleaned() {
+        let p;
+        {
+            let a = tmpdir("x");
+            let b = tmpdir("x");
+            assert_ne!(a.path(), b.path());
+            assert!(a.path().exists());
+            p = a.path().to_path_buf();
+        }
+        assert!(!p.exists(), "tmpdir should be removed on drop");
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal deterministic property-testing harness.
+//!
+//! The offline environment has no `proptest`/`quickcheck`; this module
+//! provides the subset Roomy's invariant tests need: a fast deterministic
+//! PRNG (SplitMix64), generators for the shapes we use, and a driver that
+//! runs a property across many seeded cases and reports the failing seed
+//! (re-runnable with `ROOMY_PROP_SEED`).
+
+/// SplitMix64 PRNG — tiny, fast, and good enough for test-case generation.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be > 0.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        // Rejection-free fast-range; fine for tests.
+        ((self.next_u64() >> 32).wrapping_mul(bound) >> 32)
+            .min(bound - 1)
+            % bound
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform i64 in `[lo, hi)`.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi > lo);
+        lo.wrapping_add(self.below((hi - lo) as u64) as i64)
+    }
+
+    /// Bernoulli(p).
+    pub fn chance(&mut self, p: f64) -> bool {
+        (self.next_u64() as f64 / u64::MAX as f64) < p
+    }
+
+    /// Random byte vector of length `len`.
+    pub fn bytes(&mut self, len: usize) -> Vec<u8> {
+        (0..len).map(|_| self.next_u64() as u8).collect()
+    }
+
+    /// Vector of u64 with values below `bound`.
+    pub fn u64s_below(&mut self, n: usize, bound: u64) -> Vec<u64> {
+        (0..n).map(|_| self.below(bound)).collect()
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<u8> {
+        let mut v: Vec<u8> = (0..n as u8).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+/// Run `prop` for `cases` seeded cases. Panics with the failing seed on
+/// the first failure. Override the base seed with env `ROOMY_PROP_SEED`
+/// to reproduce a specific run.
+pub fn prop_check(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    let base: u64 = std::env::var("ROOMY_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case} (seed {seed:#x}); \
+                 rerun with ROOMY_PROP_SEED={base}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+        // bound=1 is always 0
+        assert_eq!(r.below(1), 0);
+    }
+
+    #[test]
+    fn range_i64_spans_negative() {
+        let mut r = Rng::new(9);
+        let mut saw_neg = false;
+        for _ in 0..1000 {
+            let v = r.range_i64(-10, 10);
+            assert!((-10..10).contains(&v));
+            saw_neg |= v < 0;
+        }
+        assert!(saw_neg);
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(3);
+        for n in [1usize, 2, 5, 16] {
+            let mut p = r.permutation(n);
+            p.sort();
+            let expect: Vec<u8> = (0..n as u8).collect();
+            assert_eq!(p, expect);
+        }
+    }
+
+    #[test]
+    fn prop_check_runs_all_cases() {
+        let mut count = 0;
+        prop_check("counter", 25, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prop_check_propagates_failure() {
+        prop_check("fails", 5, |rng| {
+            assert!(rng.below(10) < 5, "will fail eventually");
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! Shared helpers for the integration suites.
+
+use roomy::{Roomy, RoomyConfig};
+
+/// Open a Roomy instance over a fresh temp root; returns the guard too so
+/// the directory outlives the instance.
+pub fn roomy(tag: &str) -> (roomy::testutil::TmpDir, Roomy) {
+    let t = roomy::testutil::tmpdir(tag);
+    let r = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+    (t, r)
+}
+
+/// Like [`roomy`] but with a customized config.
+pub fn roomy_with(tag: &str, f: impl FnOnce(&mut RoomyConfig)) -> (roomy::testutil::TmpDir, Roomy) {
+    let t = roomy::testutil::tmpdir(tag);
+    let mut cfg = RoomyConfig::for_testing(t.path());
+    f(&mut cfg);
+    let r = Roomy::open(cfg).unwrap();
+    (t, r)
+}
+
+/// True if AOT artifacts are available (XLA paths testable).
+pub fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.tsv").exists()
+}

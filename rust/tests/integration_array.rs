@@ -1,0 +1,183 @@
+//! Integration: RoomyArray + RoomyBitArray across realistic configurations
+//! (many workers, tiny op buffers forcing spills, throttled disks).
+
+mod common;
+
+use common::{roomy, roomy_with};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[test]
+fn histogram_via_delayed_updates() {
+    // Classic Roomy idiom: scatter increments into a large array.
+    let (_t, r) = roomy("ia_hist");
+    let n = 1024u64;
+    let ra = r.array::<u64>("hist", n, 0).unwrap();
+    let inc = ra.register_update(|_i, v: &mut u64, amount: &u64| *v += amount);
+    // 10k updates, heavy collisions
+    for i in 0..10_000u64 {
+        ra.update(i % n, &1u64, inc).unwrap();
+    }
+    ra.sync().unwrap();
+    let total = ra.reduce(|| 0u64, |a, _i, v| a + v, |a, b| a + b).unwrap();
+    assert_eq!(total, 10_000);
+    // the first (10_000 mod 1024) cells got one extra hit
+    assert_eq!(ra.fetch(0).unwrap(), 10);
+    assert_eq!(ra.fetch(1023).unwrap(), 9);
+}
+
+#[test]
+fn tiny_op_buffers_force_disk_spill_and_stay_correct() {
+    let (_t, r) = roomy_with("ia_spill", |c| {
+        c.op_buffer_bytes = 64; // absurdly small: every few ops spill
+        c.workers = 3;
+        c.buckets_per_worker = 3;
+    });
+    let n = 500u64;
+    let ra = r.array::<u32>("a", n, 0).unwrap();
+    let set = ra.register_update(|i, v: &mut u32, p: &u32| *v = i as u32 + p);
+    for i in 0..n {
+        ra.update(i, &7u32, set).unwrap();
+    }
+    ra.sync().unwrap();
+    for i in (0..n).step_by(97) {
+        assert_eq!(ra.fetch(i).unwrap(), i as u32 + 7);
+    }
+}
+
+#[test]
+fn access_issuing_ops_on_second_structure() {
+    // paper's cross-structure idiom: access fn pushes into a list
+    let (_t, r) = roomy("ia_cross");
+    let ra = r.array::<u64>("a", 100, 5).unwrap();
+    let out = r.list::<u64>("out").unwrap();
+    let out2 = out.clone();
+    let probe = ra.register_access(move |i, v: &u64, threshold: &u64| {
+        if *v >= *threshold {
+            out2.add(&i).unwrap();
+        }
+    });
+    ra.map_update(|i, v| *v = i % 10).unwrap();
+    for i in 0..100 {
+        ra.access(i, &8u64, probe).unwrap();
+    }
+    ra.sync().unwrap();
+    out.sync().unwrap();
+    assert_eq!(out.size(), 20); // values 8 and 9 in each decade
+}
+
+#[test]
+fn multi_sync_rounds_accumulate() {
+    let (_t, r) = roomy("ia_rounds");
+    let ra = r.array::<i64>("a", 64, 0).unwrap();
+    let add = ra.register_update(|_i, v: &mut i64, p: &i64| *v += p);
+    for round in 1..=5i64 {
+        for i in 0..64u64 {
+            ra.update(i, &round, add).unwrap();
+        }
+        ra.sync().unwrap();
+    }
+    assert_eq!(ra.fetch(0).unwrap(), 15);
+    assert_eq!(ra.fetch(63).unwrap(), 15);
+}
+
+#[test]
+fn throttled_disk_still_correct() {
+    let (_t, r) = roomy_with("ia_throttle", |c| {
+        // mild throttle so the test stays fast but the path is exercised
+        c.disk = roomy::DiskPolicy {
+            read_bps: Some(200 * 1000 * 1000),
+            write_bps: Some(200 * 1000 * 1000),
+            seek_us: 50,
+        };
+        c.workers = 2;
+        c.buckets_per_worker = 2;
+    });
+    let ra = r.array::<u32>("a", 100, 1).unwrap();
+    ra.map_update(|i, v| *v = i as u32).unwrap();
+    let sum = ra.reduce(|| 0u64, |a, _i, v| a + *v as u64, |a, b| a + b).unwrap();
+    assert_eq!(sum, (0..100).sum::<u64>());
+    let io = r.io_snapshot();
+    assert!(io.throttle_ns > 0, "throttle must have engaged");
+}
+
+#[test]
+fn bitarray_two_bit_level_marks() {
+    // the BFS level-marking pattern with 2-bit values
+    let (_t, r) = roomy("ia_2bit");
+    let ba = r.bit_array("levels", 10_000, 2).unwrap();
+    let mark = ba.register_update(|_i, cur, p: &u8| if cur == 0 { *p } else { cur });
+    for i in 0..10_000u64 {
+        ba.update(i, &((i % 3 + 1) as u8), mark).unwrap();
+    }
+    ba.sync().unwrap();
+    // second wave must not overwrite
+    for i in 0..10_000u64 {
+        ba.update(i, &3u8, mark).unwrap();
+    }
+    ba.sync().unwrap();
+    assert_eq!(ba.count_value(0), 0);
+    let c1 = ba.count_value(1);
+    let c2 = ba.count_value(2);
+    let c3 = ba.count_value(3);
+    assert_eq!(c1 + c2 + c3, 10_000);
+    assert_eq!(c1, 3334);
+    assert_eq!(c2, 3333);
+    assert_eq!(c3, 3333);
+}
+
+#[test]
+fn map_concurrency_sees_all_workers() {
+    let (_t, r) = roomy_with("ia_conc", |c| {
+        c.workers = 4;
+        c.buckets_per_worker = 2;
+    });
+    let ra = r.array::<u8>("a", 4096, 0).unwrap();
+    let count = AtomicU64::new(0);
+    ra.map(|_i, _v| {
+        count.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(count.into_inner(), 4096);
+    // every node's disk saw reads
+    for io in r.cluster().per_node_io() {
+        assert!(io.bytes_read > 0, "all disks stream in parallel");
+    }
+}
+
+#[test]
+fn predicate_counts_across_rounds() {
+    let (_t, r) = roomy("ia_preds");
+    let ra = r.array::<u32>("a", 200, 0).unwrap();
+    let set = ra.register_update(|_i, v: &mut u32, p: &u32| *v = *p);
+    let even = ra.register_predicate(|_i, v| v % 2 == 0).unwrap();
+    let big = ra.register_predicate(|_i, v| *v > 100).unwrap();
+    assert_eq!(ra.predicate_count(even), 200); // all zero
+    assert_eq!(ra.predicate_count(big), 0);
+    for i in 0..200u64 {
+        ra.update(i, &(i as u32 + 1), set).unwrap();
+    }
+    ra.sync().unwrap();
+    assert_eq!(ra.predicate_count(even), 100);
+    assert_eq!(ra.predicate_count(big), 100); // 101..=200
+}
+
+#[test]
+fn staged_ram_stays_bounded_by_budget() {
+    // Space-limited discipline: staging RAM never exceeds
+    // nbuckets * op_buffer_bytes (plus one in-flight record per bucket).
+    let (_t, r) = roomy_with("ia_budget", |c| {
+        c.op_buffer_bytes = 1024;
+        c.workers = 2;
+        c.buckets_per_worker = 2;
+    });
+    let ra = r.array::<u64>("a", 10_000, 0).unwrap();
+    let add = ra.register_update(|_i, v: &mut u64, p: &u64| *v += p);
+    for i in 0..50_000u64 {
+        ra.update(i % 10_000, &1u64, add).unwrap();
+    }
+    // 50k ops * 18B ≈ 900 KB total staged, but RAM must stay ~4 * 1KB
+    assert!(ra.pending_bytes() > 100_000, "most ops staged");
+    ra.sync().unwrap();
+    let total = ra.reduce(|| 0u64, |a, _i, v| a + v, |a, b| a + b).unwrap();
+    assert_eq!(total, 50_000);
+}

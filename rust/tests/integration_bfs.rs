@@ -1,0 +1,133 @@
+//! Integration: breadth-first search drivers + the pancake application —
+//! the paper's flagship workload — across all three data-structure
+//! variants, both accel backends, and stressed configurations.
+
+mod common;
+
+use common::{artifacts_present, roomy, roomy_with};
+use roomy::accel::Accel;
+use roomy::apps::pancake::{
+    factorial, pancake_number, reference_bfs, roomy_bfs, Structure,
+};
+use std::sync::Arc;
+
+fn accel_xla() -> Option<Accel> {
+    if artifacts_present() {
+        Some(Accel::xla(Arc::new(roomy::runtime::Engine::load("artifacts").unwrap())))
+    } else {
+        None
+    }
+}
+
+#[test]
+fn pancake_n6_all_variants_match_reference() {
+    let expect = reference_bfs(6);
+    for s in [Structure::List, Structure::Hash, Structure::Array] {
+        let (_t, r) = roomy(&format!("ib_n6_{s:?}"));
+        let stats = roomy_bfs(&r, 6, s, &Accel::rust()).unwrap();
+        assert_eq!(stats.levels, expect, "{s:?}");
+        assert_eq!(stats.total, factorial(6));
+        assert_eq!(stats.depth(), pancake_number(6).unwrap());
+    }
+}
+
+#[test]
+fn pancake_n7_list_via_xla_expansion() {
+    let Some(xla) = accel_xla() else { return };
+    let (_t, r) = roomy("ib_n7_xla");
+    let stats = roomy_bfs(&r, 7, Structure::List, &xla).unwrap();
+    assert_eq!(stats.levels, reference_bfs(7));
+    assert_eq!(stats.depth(), pancake_number(7).unwrap()); // f(7) = 8
+}
+
+#[test]
+fn pancake_n7_hash_xla_equals_rust() {
+    let Some(xla) = accel_xla() else { return };
+    let (_t1, r1) = roomy("ib_n7h_xla");
+    let (_t2, r2) = roomy("ib_n7h_rust");
+    let a = roomy_bfs(&r1, 7, Structure::Hash, &xla).unwrap();
+    let b = roomy_bfs(&r2, 7, Structure::Hash, &Accel::rust()).unwrap();
+    assert_eq!(a.levels, b.levels);
+    assert_eq!(a.total, b.total);
+}
+
+#[test]
+fn pancake_n8_list_spill_heavy() {
+    // 40320 states with tiny buffers: staging spills constantly
+    let (_t, r) = roomy_with("ib_n8_spill", |c| {
+        c.op_buffer_bytes = 512;
+        c.workers = 4;
+        c.buckets_per_worker = 2;
+    });
+    let stats = roomy_bfs(&r, 8, Structure::List, &Accel::rust()).unwrap();
+    assert_eq!(stats.levels, reference_bfs(8));
+    assert_eq!(stats.total, factorial(8));
+    assert_eq!(stats.depth(), 9); // f(8) = 9
+}
+
+#[test]
+fn pancake_single_worker_degenerate_cluster() {
+    let (_t, r) = roomy_with("ib_w1", |c| {
+        c.workers = 1;
+        c.buckets_per_worker = 1;
+    });
+    let stats = roomy_bfs(&r, 6, Structure::List, &Accel::rust()).unwrap();
+    assert_eq!(stats.levels, reference_bfs(6));
+}
+
+#[test]
+fn generic_bfs_grid_graph() {
+    // 2-D grid: BFS levels are anti-diagonals
+    let (_t, r) = roomy("ib_grid");
+    let w = 12u64;
+    let stats = roomy::constructs::bfs::bfs_list(&r, "grid", &[0u64], |&v, out| {
+        let (x, y) = (v % w, v / w);
+        if x + 1 < w {
+            out.push(v + 1);
+        }
+        if y + 1 < w {
+            out.push(v + w);
+        }
+    })
+    .unwrap();
+    assert_eq!(stats.total, w * w);
+    assert_eq!(stats.depth(), 2 * (w - 1));
+    // level k size = number of (x,y) with x+y == k
+    for (k, &c) in stats.levels.iter().enumerate() {
+        let k = k as u64;
+        let expect = if k < w { k + 1 } else { 2 * w - 1 - k };
+        assert_eq!(c, expect, "level {k}");
+    }
+}
+
+#[test]
+fn bfs_list_and_hash_agree_on_random_graph() {
+    // deterministic pseudo-random sparse digraph over 0..500
+    let gen = |v: u64, out: &mut Vec<u64>| {
+        let m = 500u64;
+        let a = (v.wrapping_mul(2654435761) % m) as u64;
+        let b = (v.wrapping_mul(0x9E3779B97F4A7C15) % m) as u64;
+        out.push(a);
+        out.push(b);
+    };
+    let (_t1, r1) = roomy("ib_rand_list");
+    let s1 = roomy::constructs::bfs::bfs_list(&r1, "g", &[0u64], |&v, out| gen(v, out)).unwrap();
+    let (_t2, r2) = roomy("ib_rand_hash");
+    let s2 = roomy::constructs::bfs::bfs_hash_batched(&r2, "g", &[0u64], |batch, out| {
+        for &v in batch {
+            gen(v, out);
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(s1.levels, s2.levels);
+    assert_eq!(s1.total, s2.total);
+}
+
+#[test]
+fn level_counts_sum_to_total() {
+    let (_t, r) = roomy("ib_sum");
+    let stats = roomy_bfs(&r, 7, Structure::Hash, &Accel::rust()).unwrap();
+    assert_eq!(stats.levels.iter().sum::<u64>(), stats.total);
+    assert_eq!(stats.total, factorial(7));
+}

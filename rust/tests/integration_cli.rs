@@ -1,0 +1,83 @@
+//! Integration: the `roomy` CLI binary end-to-end (subcommand parsing,
+//! validation paths, exit codes).
+
+use std::process::Command;
+
+fn roomy_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_roomy"))
+}
+
+fn tmp_root(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("roomy-cli-{tag}-{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = roomy_bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("pancake"), "{text}");
+    assert!(text.contains("rubik"), "{text}");
+}
+
+#[test]
+fn unknown_subcommand_exits_2() {
+    let out = roomy_bin().arg("frobnicate").output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn pancake_small_validates_and_exits_0() {
+    let root = tmp_root("pk");
+    let out = roomy_bin()
+        .args(["pancake", "--n", "6", "--structure", "hash", "--workers", "2",
+               "--accel", "rust", "--root", &root])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stdout: {text}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("validation vs known f(6)=7: OK"), "{text}");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn pancake_rejects_bad_args() {
+    for args in [
+        vec!["pancake", "--n", "99"],
+        vec!["pancake", "--structure", "btree"],
+        vec!["pancake", "--accel", "gpu"],
+    ] {
+        let out = roomy_bin().args(&args).output().unwrap();
+        assert_eq!(out.status.code(), Some(1), "args {args:?} should fail");
+    }
+}
+
+#[test]
+fn demo_runs_clean() {
+    let root = tmp_root("demo");
+    let out = roomy_bin()
+        .args(["demo", "--workers", "2", "--root", &root])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("sum of squares 1..10 = 385"), "{text}");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn kernels_reports_artifacts_when_present() {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        return;
+    }
+    let out = roomy_bin().arg("kernels").output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("hash_partition xla==rust over 8192 words: OK"), "{text}");
+    assert!(text.contains("prefix_scan   xla==rust over 8192 i64:   OK"), "{text}");
+}

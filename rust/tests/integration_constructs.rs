@@ -1,0 +1,144 @@
+//! Integration: the paper §3 constructs composed end-to-end, including the
+//! accel (XLA) paths when artifacts are present.
+
+mod common;
+
+use common::{artifacts_present, roomy, roomy_with};
+use roomy::accel::Accel;
+use roomy::constructs::{chainred, mapreduce, pairred, prefix};
+use std::sync::Arc;
+
+fn accel_xla() -> Option<Accel> {
+    if artifacts_present() {
+        Some(Accel::xla(Arc::new(roomy::runtime::Engine::load("artifacts").unwrap())))
+    } else {
+        None
+    }
+}
+
+#[test]
+fn chain_then_prefix_compose() {
+    let (_t, r) = roomy("ic_compose");
+    let n = 300u64;
+    let ra = r.array::<i64>("a", n, 0).unwrap();
+    ra.map_update(|_i, v| *v = 1).unwrap();
+    // chain reduce: a = [1, 2, 2, 2, ...]
+    chainred::chain_reduce(&ra, |a, b| a + b).unwrap();
+    // prefix sum over that: 1, 3, 5, 7, ...
+    prefix::parallel_prefix(&ra, |a, b| a.wrapping_add(*b)).unwrap();
+    assert_eq!(ra.fetch(0).unwrap(), 1);
+    for i in 1..n {
+        assert_eq!(ra.fetch(i).unwrap(), (2 * i + 1) as i64, "i={i}");
+    }
+}
+
+#[test]
+fn prefix_log_rounds_vs_accel_single_pass() {
+    // the E7 ablation shape: both implementations, same bits
+    let (_t, r1) = roomy("ic_logrounds");
+    let (_t2, r2) = roomy("ic_scanpass");
+    let n = 5000u64;
+    let vals: Vec<i64> = (0..n).map(|i| ((i * 37) % 101) as i64 - 50).collect();
+
+    let ra1 = r1.array::<i64>("a", n, 0).unwrap();
+    let v1 = vals.clone();
+    ra1.map_update(move |i, v| *v = v1[i as usize]).unwrap();
+    prefix::parallel_prefix(&ra1, |a, b| a.wrapping_add(*b)).unwrap();
+
+    let ra2 = r2.array::<i64>("a", n, 0).unwrap();
+    let v2 = vals.clone();
+    ra2.map_update(move |i, v| *v = v2[i as usize]).unwrap();
+    prefix::prefix_scan_array(&ra2, &Accel::rust()).unwrap();
+
+    for i in (0..n).step_by(379) {
+        assert_eq!(ra1.fetch(i).unwrap(), ra2.fetch(i).unwrap(), "i={i}");
+    }
+    assert_eq!(ra1.fetch(n - 1).unwrap(), ra2.fetch(n - 1).unwrap());
+}
+
+#[test]
+fn prefix_accel_xla_path() {
+    let Some(xla) = accel_xla() else { return };
+    let (_t, r) = roomy("ic_prefix_xla");
+    let n = 9000u64; // spans multiple SCAN_BATCHes and buckets
+    let ra = r.array::<i64>("a", n, 0).unwrap();
+    ra.map_update(|i, v| *v = (i as i64 % 7) - 3).unwrap();
+    prefix::prefix_scan_array(&ra, &xla).unwrap();
+    let mut acc = 0i64;
+    for i in 0..n {
+        acc += (i as i64 % 7) - 3;
+        if i % 1234 == 0 || i == n - 1 {
+            assert_eq!(ra.fetch(i).unwrap(), acc, "i={i}");
+        }
+    }
+}
+
+#[test]
+fn sum_of_squares_all_backends_agree() {
+    let (_t, r) = roomy("ic_sumsq");
+    let l = r.list::<i64>("l").unwrap();
+    for v in 0..20_000i64 {
+        l.add(&(v % 2003 - 1000)).unwrap();
+    }
+    l.sync().unwrap();
+    let plain = mapreduce::sum_of_squares(&l).unwrap();
+    let rust_batched = mapreduce::sum_of_squares_accel(&l, &Accel::rust()).unwrap();
+    assert_eq!(plain, rust_batched);
+    if let Some(xla) = accel_xla() {
+        let xla_batched = mapreduce::sum_of_squares_accel(&l, &xla).unwrap();
+        assert_eq!(plain, xla_batched);
+    }
+}
+
+#[test]
+fn pair_reduction_distance_matrix_into_hashtable() {
+    // realistic pair-reduction use: all-pairs |a_i - a_j| below threshold
+    let (_t, r) = roomy("ic_pairs");
+    let n = 20u64;
+    let ra = r.array::<i64>("pts", n, 0).unwrap();
+    ra.map_update(|i, v| *v = (i as i64 * i as i64) % 31).unwrap();
+    let close = r.list::<(u64, u64)>("close").unwrap();
+    let close2 = close.clone();
+    pairred::pair_reduction(&ra, move |j, inner, i, outer| {
+        if i != j && (inner - outer).abs() <= 2 {
+            close2.add(&(i, j)).unwrap();
+        }
+    })
+    .unwrap();
+    close.sync().unwrap();
+    // symmetric relation: (i,j) present iff (j,i) present
+    let pairs: std::collections::HashSet<(u64, u64)> =
+        close.collect().unwrap().into_iter().collect();
+    for &(i, j) in &pairs {
+        assert!(pairs.contains(&(j, i)), "asymmetric pair ({i},{j})");
+    }
+    assert!(!pairs.is_empty());
+}
+
+#[test]
+fn map_example_then_reduce_over_hashtable() {
+    let (_t, r) = roomy_with("ic_mapred", |c| c.workers = 2);
+    let ra = r.array::<u32>("a", 500, 0).unwrap();
+    ra.map_update(|i, v| *v = i as u32).unwrap();
+    let rht = r.hash_table::<u64, u32>("h").unwrap();
+    mapreduce::array_to_hashtable(&ra, &rht).unwrap();
+    assert_eq!(rht.size(), 500);
+    let sum = rht
+        .reduce(|| 0u64, |a, _k, v| a + *v as u64, |a, b| a + b)
+        .unwrap();
+    assert_eq!(sum, (0..500).sum::<u64>());
+}
+
+#[test]
+fn k_largest_across_shards() {
+    let (_t, r) = roomy("ic_klargest");
+    let l = r.list::<u64>("l").unwrap();
+    for v in 0..5000u64 {
+        l.add(&(v * 2654435761 % 100_000)).unwrap();
+    }
+    l.sync().unwrap();
+    let top = mapreduce::k_largest(&l, 5).unwrap();
+    let mut all = l.collect().unwrap();
+    all.sort_unstable_by(|a, b| b.cmp(a));
+    assert_eq!(top, all[..5].to_vec());
+}

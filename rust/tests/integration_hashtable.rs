@@ -1,0 +1,147 @@
+//! Integration: RoomyHashTable under realistic workloads — word-count,
+//! mixed op streams, predicate maintenance, spill-heavy configs.
+
+mod common;
+
+use common::{roomy, roomy_with};
+
+#[test]
+fn word_count_style_aggregation() {
+    let (_t, r) = roomy("ih_wordcount");
+    let ht = r.hash_table::<u64, u64>("wc").unwrap();
+    let bump = ht.register_update(|_k, cur: Option<&u64>, inc: &u64| {
+        Some(cur.copied().unwrap_or(0) + inc)
+    });
+    // zipf-ish synthetic stream: key k appears roughly 1000/k times
+    let mut expected = std::collections::HashMap::new();
+    for k in 1..=50u64 {
+        let reps = 1000 / k;
+        for _ in 0..reps {
+            ht.update(&k, &1u64, bump).unwrap();
+        }
+        expected.insert(k, reps);
+    }
+    ht.sync().unwrap();
+    assert_eq!(ht.size(), 50);
+    for (k, v) in expected {
+        assert_eq!(ht.fetch(&k).unwrap(), Some(v), "key {k}");
+    }
+}
+
+#[test]
+fn mixed_inserts_removes_updates_interleaved() {
+    let (_t, r) = roomy("ih_mixed");
+    let ht = r.hash_table::<u32, u32>("m").unwrap();
+    let double_or_init =
+        ht.register_update(|_k, cur: Option<&u32>, _p: &()| Some(cur.copied().unwrap_or(1) * 2));
+    // FIFO per key: insert 5 -> update(x2) -> remove -> update (re-init 1 -> x2)
+    ht.insert(&9, &5).unwrap();
+    ht.update(&9, &(), double_or_init).unwrap();
+    ht.remove(&9).unwrap();
+    ht.update(&9, &(), double_or_init).unwrap();
+    ht.sync().unwrap();
+    assert_eq!(ht.fetch(&9).unwrap(), Some(2));
+    assert_eq!(ht.size(), 1);
+}
+
+#[test]
+fn spill_heavy_config_many_keys() {
+    let (_t, r) = roomy_with("ih_spill", |c| {
+        c.op_buffer_bytes = 128;
+        c.workers = 3;
+        c.buckets_per_worker = 2;
+    });
+    let ht = r.hash_table::<u64, u64>("big").unwrap();
+    let n = 20_000u64;
+    for k in 0..n {
+        ht.insert(&k, &(k ^ 0xABCD)).unwrap();
+    }
+    ht.sync().unwrap();
+    assert_eq!(ht.size(), n);
+    // reduce validates every pair
+    let bad = ht
+        .reduce(
+            || 0u64,
+            |acc, k, v| acc + u64::from(*v != (k ^ 0xABCD)),
+            |a, b| a + b,
+        )
+        .unwrap();
+    assert_eq!(bad, 0);
+}
+
+#[test]
+fn access_emits_to_list_join_pattern() {
+    // relational-join-ish: probe table with a stream of keys; hits emit
+    let (_t, r) = roomy("ih_join");
+    let ht = r.hash_table::<u64, u64>("dim").unwrap();
+    for k in (0..100u64).step_by(2) {
+        ht.insert(&k, &(k * 10)).unwrap();
+    }
+    ht.sync().unwrap();
+    let hits = r.list::<(u64, u64)>("hits").unwrap();
+    let hits2 = hits.clone();
+    let probe = ht.register_access(move |k: &u64, v: &u64, _p: &()| {
+        hits2.add(&(*k, *v)).unwrap();
+    });
+    for k in 0..100u64 {
+        ht.access(&k, &(), probe).unwrap(); // half miss
+    }
+    ht.sync().unwrap();
+    hits.sync().unwrap();
+    assert_eq!(hits.size(), 50);
+}
+
+#[test]
+fn level_table_pattern_insert_if_absent() {
+    // the BFS hash-variant invariant: first writer wins
+    let (_t, r) = roomy("ih_levels");
+    let ht = r.hash_table::<u64, u32>("lv").unwrap();
+    let visit = ht.register_update(|_k, cur: Option<&u32>, lvl: &u32| {
+        Some(cur.copied().unwrap_or(*lvl))
+    });
+    for k in 0..100u64 {
+        ht.update(&k, &1u32, visit).unwrap();
+    }
+    ht.sync().unwrap();
+    for k in 0..100u64 {
+        ht.update(&k, &2u32, visit).unwrap(); // must not overwrite
+    }
+    ht.sync().unwrap();
+    let later = ht.register_predicate(|_k, v| *v == 2).unwrap();
+    assert_eq!(ht.predicate_count(later), 0);
+    assert_eq!(ht.size(), 100);
+}
+
+#[test]
+fn reduce_finds_extremes() {
+    let (_t, r) = roomy("ih_reduce");
+    let ht = r.hash_table::<u32, i64>("x").unwrap();
+    for k in 0..1000u32 {
+        ht.insert(&k, &((k as i64 - 500) * 3)).unwrap();
+    }
+    ht.sync().unwrap();
+    let (mn, mx) = ht
+        .reduce(
+            || (i64::MAX, i64::MIN),
+            |(mn, mx), _k, v| (mn.min(*v), mx.max(*v)),
+            |a, b| (a.0.min(b.0), a.1.max(b.1)),
+        )
+        .unwrap();
+    assert_eq!(mn, -1500);
+    assert_eq!(mx, 499 * 3 - 1500 + 1500 - 1500 + 1500); // (999-500)*3
+    assert_eq!(mx, 1497);
+}
+
+#[test]
+fn tuple_keys_and_unit_values() {
+    // a set-like table keyed by pairs
+    let (_t, r) = roomy("ih_tuple");
+    let ht = r.hash_table::<(u32, u32), ()>("edges").unwrap();
+    for i in 0..50u32 {
+        ht.insert(&(i, i + 1), &()).unwrap();
+    }
+    ht.sync().unwrap();
+    assert_eq!(ht.size(), 50);
+    assert!(ht.fetch(&(3, 4)).unwrap().is_some());
+    assert!(ht.fetch(&(4, 3)).unwrap().is_none());
+}

@@ -1,0 +1,177 @@
+//! Integration: RoomyList — multiset semantics, set algebra at scale,
+//! sort-path vs hash-path equivalence, spill-heavy staging.
+
+mod common;
+
+use common::{roomy, roomy_with};
+use std::collections::BTreeMap;
+
+fn multiset(l: &roomy::RoomyList<u64>) -> BTreeMap<u64, u64> {
+    let mut m = BTreeMap::new();
+    for v in l.collect().unwrap() {
+        *m.entry(v).or_insert(0) += 1;
+    }
+    m
+}
+
+#[test]
+fn multiset_semantics_preserved() {
+    let (_t, r) = roomy("il_multi");
+    let l = r.list::<u64>("l").unwrap();
+    for _ in 0..3 {
+        l.add(&7).unwrap();
+    }
+    for _ in 0..2 {
+        l.add(&8).unwrap();
+    }
+    l.sync().unwrap();
+    assert_eq!(l.size(), 5);
+    let m = multiset(&l);
+    assert_eq!(m[&7], 3);
+    assert_eq!(m[&8], 2);
+}
+
+#[test]
+fn dedup_then_readd_recounts() {
+    let (_t, r) = roomy("il_readd");
+    let l = r.list::<u64>("l").unwrap();
+    for v in [1u64, 1, 2, 2, 3] {
+        l.add(&v).unwrap();
+    }
+    l.sync().unwrap();
+    l.remove_dupes().unwrap();
+    assert_eq!(l.size(), 3);
+    assert!(l.is_sorted());
+    l.add(&1).unwrap();
+    l.sync().unwrap();
+    assert!(!l.is_sorted(), "append invalidates sortedness");
+    assert_eq!(l.size(), 4);
+    l.remove_dupes().unwrap();
+    assert_eq!(l.size(), 3);
+}
+
+#[test]
+fn set_algebra_at_scale_hash_vs_sort_paths_agree() {
+    // Same workload under the hash-set path and the forced sort-merge
+    // path must produce identical results.
+    let run = |tag: &str, budget: usize| -> Vec<u64> {
+        let (_t, r) = roomy_with(tag, |c| c.ram_budget_bytes = budget);
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for v in 0..5000u64 {
+            a.add(&(v % 3000)).unwrap(); // dups beyond 2000
+        }
+        for v in (0..3000u64).step_by(3) {
+            b.add(&v).unwrap();
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        a.remove_all(&b).unwrap();
+        let mut v = a.collect().unwrap();
+        v.sort();
+        v
+    };
+    let fast = run("il_scale_hash", 64 * 1024 * 1024);
+    let slow = run("il_scale_sort", 1);
+    assert_eq!(fast, slow);
+    // sanity: no multiples of 3 below 3000 remain
+    assert!(fast.iter().all(|v| v % 3 != 0));
+}
+
+#[test]
+fn paper_intersection_workflow_end_to_end() {
+    let (_t, r) = roomy("il_paperflow");
+    // The full §3 set-ops fragment: build two multisets, make them sets,
+    // union / difference / intersection.
+    let a = r.list::<u64>("A").unwrap();
+    let b = r.list::<u64>("B").unwrap();
+    for v in 0..2000u64 {
+        a.add(&(v % 1200)).unwrap();
+        b.add(&(v % 800 + 600)).unwrap();
+    }
+    a.sync().unwrap();
+    b.sync().unwrap();
+    roomy::constructs::setops::to_set(&a).unwrap(); // A = 0..1200
+    roomy::constructs::setops::to_set(&b).unwrap(); // B = 600..1400
+    let c = roomy::constructs::setops::intersection(&r, "C", &a, &b).unwrap();
+    assert_eq!(c.size(), 600); // 600..1200
+    let vals = c.collect().unwrap();
+    assert!(vals.iter().all(|&v| (600..1200).contains(&v)));
+}
+
+#[test]
+fn remove_then_add_next_sync_independent() {
+    let (_t, r) = roomy("il_order");
+    let l = r.list::<u64>("l").unwrap();
+    l.add(&5).unwrap();
+    l.sync().unwrap();
+    l.remove(&5).unwrap();
+    l.sync().unwrap();
+    assert_eq!(l.size(), 0);
+    // removed elements can be re-added later
+    l.add(&5).unwrap();
+    l.sync().unwrap();
+    assert_eq!(l.size(), 1);
+}
+
+#[test]
+fn spilled_staging_survives_large_burst() {
+    let (_t, r) = roomy_with("il_burst", |c| {
+        c.op_buffer_bytes = 256;
+        c.workers = 4;
+        c.buckets_per_worker = 2;
+    });
+    let l = r.list::<(u64, u64)>("pairs").unwrap();
+    let n = 30_000u64;
+    for v in 0..n {
+        l.add(&(v, v * 2)).unwrap();
+    }
+    assert!(l.pending_bytes() >= n * 16, "staged bytes tracked");
+    l.sync().unwrap();
+    assert_eq!(l.size(), n);
+    let sum = l
+        .reduce(|| 0u64, |a, (x, y)| a + x + y, |a, b| a + b)
+        .unwrap();
+    assert_eq!(sum, (0..n).map(|v| 3 * v).sum::<u64>());
+}
+
+#[test]
+fn add_all_self_view_is_rejected_by_types_not_needed_here() {
+    // add_all with an independent list of the same instance
+    let (_t, r) = roomy("il_addall");
+    let a = r.list::<u64>("a").unwrap();
+    let b = r.list::<u64>("b").unwrap();
+    for v in 0..10u64 {
+        a.add(&v).unwrap();
+    }
+    a.sync().unwrap();
+    b.add_all(&a).unwrap();
+    b.add_all(&a).unwrap();
+    assert_eq!(b.size(), 20);
+    b.remove_dupes().unwrap();
+    assert_eq!(b.size(), 10);
+}
+
+#[test]
+fn shard_distribution_roughly_uniform() {
+    // hash sharding spreads bytes across all node disks
+    let (_t, r) = roomy_with("il_shard", |c| {
+        c.workers = 4;
+        c.buckets_per_worker = 4;
+    });
+    let l = r.list::<u64>("l").unwrap();
+    for v in 0..40_000u64 {
+        l.add(&v).unwrap();
+    }
+    l.sync().unwrap();
+    let per_node = r.cluster().per_node_io();
+    let writes: Vec<u64> = per_node.iter().map(|io| io.bytes_written).collect();
+    let total: u64 = writes.iter().sum();
+    for (i, w) in writes.iter().enumerate() {
+        let share = *w as f64 / total as f64;
+        assert!(
+            (0.15..=0.35).contains(&share),
+            "node {i} got {share:.2} of bytes (writes {writes:?})"
+        );
+    }
+}

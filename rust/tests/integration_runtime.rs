@@ -1,0 +1,172 @@
+//! Integration: the PJRT runtime + accel layer against the real AOT
+//! artifacts (skipped cleanly when `make artifacts` has not run).
+//!
+//! These are the cross-layer numeric contracts: every XLA entry point must
+//! agree bit-for-bit with the Rust twin across batch boundaries, padding,
+//! and concurrent callers.
+
+mod common;
+
+use common::artifacts_present;
+use roomy::accel::Accel;
+use roomy::apps::pancake;
+use roomy::hashfn;
+use roomy::runtime::{Engine, TensorBuf, BFS_BATCH, HASH_BATCH};
+use roomy::testutil::Rng;
+use std::sync::Arc;
+
+fn engine() -> Option<Arc<Engine>> {
+    if artifacts_present() {
+        Some(Arc::new(Engine::load("artifacts").unwrap()))
+    } else {
+        None
+    }
+}
+
+#[test]
+fn manifest_covers_expected_entry_points() {
+    let Some(e) = engine() else { return };
+    for name in [
+        "hash_partition_k1",
+        "hash_partition_k2",
+        "prefix_scan",
+        "reduce_sumsq",
+        "bfs_expand_n6",
+        "bfs_expand_n8",
+        "bfs_expand_n10",
+        "bfs_expand_n12",
+    ] {
+        assert!(e.has(name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn raw_engine_hash_partition_bit_exact() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1);
+    let words: Vec<u64> = (0..HASH_BATCH).map(|_| rng.next_u64()).collect();
+    let out = e
+        .run(
+            "hash_partition_k1",
+            vec![
+                TensorBuf::u64_2d(words.clone(), HASH_BATCH, 1),
+                TensorBuf::u64_1d(vec![101]),
+            ],
+        )
+        .unwrap();
+    let fp = out[0].clone().into_u64().unwrap();
+    let bk = out[1].clone().into_u64().unwrap();
+    for i in 0..HASH_BATCH {
+        let expect = hashfn::fp_words(&[words[i]]);
+        assert_eq!(fp[i], expect);
+        assert_eq!(bk[i] as u32, hashfn::bucket_of(expect, 101));
+    }
+}
+
+#[test]
+fn raw_engine_bfs_expand_bit_exact() {
+    let Some(e) = engine() else { return };
+    let n = 9usize;
+    let mut rng = Rng::new(2);
+    let codes: Vec<u64> =
+        (0..BFS_BATCH).map(|_| pancake::pack_perm(&rng.permutation(n))).collect();
+    let out = e
+        .run(
+            "bfs_expand_n9",
+            vec![TensorBuf::u64_1d(codes.clone()), TensorBuf::u64_1d(vec![32])],
+        )
+        .unwrap();
+    let packed = out[0].clone().into_u64().unwrap();
+    let fp = out[1].clone().into_u64().unwrap();
+    let bucket = out[2].clone().into_u64().unwrap();
+    for (b, &code) in codes.iter().enumerate() {
+        for (j, k) in (2..=n as u32).enumerate() {
+            let idx = b * (n - 1) + j;
+            let expect = pancake::flip_packed(code, k);
+            assert_eq!(packed[idx], expect, "b={b} k={k}");
+            let efp = hashfn::fp_words(&[expect]);
+            assert_eq!(fp[idx], efp);
+            assert_eq!(bucket[idx] as u32, hashfn::bucket_of(efp, 32));
+        }
+    }
+}
+
+#[test]
+fn accel_full_surface_xla_vs_rust() {
+    let Some(e) = engine() else { return };
+    let xla = Accel::xla(e);
+    let rust = Accel::rust();
+    let mut rng = Rng::new(3);
+
+    // hash partition, awkward sizes
+    for count in [1usize, 17, HASH_BATCH, HASH_BATCH + 1, 3 * HASH_BATCH - 5] {
+        let words: Vec<u64> = (0..count).map(|_| rng.next_u64()).collect();
+        assert_eq!(
+            xla.hash_partition(&words, 1, 13).unwrap(),
+            rust.hash_partition(&words, 1, 13).unwrap(),
+            "count={count}"
+        );
+    }
+
+    // scan with negative values across batch boundaries
+    let x: Vec<i64> = (0..10_000).map(|_| rng.range_i64(-1_000_000, 1_000_000)).collect();
+    assert_eq!(xla.prefix_scan(&x).unwrap(), rust.prefix_scan(&x).unwrap());
+
+    // reduce with wrapping squares
+    let big: Vec<i64> = (0..5000).map(|_| rng.next_u64() as i64).collect();
+    assert_eq!(xla.reduce_sumsq(&big).unwrap(), rust.reduce_sumsq(&big).unwrap());
+
+    // expansion for every AOT'd n
+    for n in 6..=12usize {
+        let frontier: Vec<u64> =
+            (0..97).map(|_| pancake::pack_perm(&rng.permutation(n))).collect();
+        let a = xla.bfs_expand(&frontier, n, 16).unwrap();
+        let b = rust.bfs_expand(&frontier, n, 16).unwrap();
+        assert_eq!(a.packed, b.packed, "n={n}");
+        assert_eq!(a.fp, b.fp, "n={n}");
+        assert_eq!(a.bucket, b.bucket, "n={n}");
+    }
+}
+
+#[test]
+fn engine_concurrent_mixed_kernels() {
+    let Some(e) = engine() else { return };
+    let accel = Accel::xla(e);
+    std::thread::scope(|s| {
+        for t in 0..6u64 {
+            let accel = accel.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                match t % 3 {
+                    0 => {
+                        let words: Vec<u64> = (0..1000).map(|_| rng.next_u64()).collect();
+                        let (fp, _) = accel.hash_partition(&words, 1, 7).unwrap();
+                        assert_eq!(fp[0], hashfn::fp_words(&[words[0]]));
+                    }
+                    1 => {
+                        let x: Vec<i64> = (0..3000).map(|_| rng.range_i64(-5, 5)).collect();
+                        let (scan, total) = accel.prefix_scan(&x).unwrap();
+                        assert_eq!(*scan.last().unwrap(), total);
+                    }
+                    _ => {
+                        let f: Vec<u64> =
+                            (0..50).map(|_| pancake::pack_perm(&rng.permutation(8))).collect();
+                        let exp = accel.bfs_expand(&f, 8, 9).unwrap();
+                        assert_eq!(exp.packed.len(), 50 * 7);
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn unknown_artifact_is_clean_error() {
+    let Some(e) = engine() else { return };
+    match e.run("definitely_not_real", vec![]) {
+        Err(roomy::RoomyError::MissingArtifact { name }) => {
+            assert_eq!(name, "definitely_not_real")
+        }
+        other => panic!("expected MissingArtifact, got {other:?}"),
+    }
+}

@@ -1,0 +1,246 @@
+//! Property-based invariants over the whole stack, via the homegrown
+//! deterministic harness (`roomy::testutil::prop`). Each property runs a
+//! randomized workload against an in-RAM model.
+
+mod common;
+
+use common::roomy_with;
+use roomy::testutil::{prop_check, Rng};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+fn rand_cfg(rng: &mut Rng, c: &mut roomy::RoomyConfig) {
+    c.workers = rng.range(1, 5);
+    c.buckets_per_worker = rng.range(1, 4);
+    c.op_buffer_bytes = [64usize, 1024, 64 * 1024][rng.range(0, 3)];
+}
+
+#[test]
+fn prop_array_sync_equals_serial_application() {
+    prop_check("array sync == serial model", 12, |rng| {
+        let mut seed_rng = rng.clone();
+        let (_t, r) = roomy_with("pt_array", |c| rand_cfg(&mut seed_rng, c));
+        let n = rng.range(1, 300) as u64;
+        let ra = r.array::<i64>("a", n, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut i64, p: &i64| *v = v.wrapping_add(*p));
+        let setv = ra.register_update(|_i, v: &mut i64, p: &i64| *v = *p);
+        let mut model = vec![0i64; n as usize];
+        // several sync rounds of random ops
+        for _round in 0..rng.range(1, 4) {
+            for _ in 0..rng.range(0, 500) {
+                let i = rng.below(n);
+                let p = rng.range_i64(-100, 100);
+                if rng.chance(0.5) {
+                    ra.update(i, &p, add).unwrap();
+                    model[i as usize] = model[i as usize].wrapping_add(p);
+                } else {
+                    ra.update(i, &p, setv).unwrap();
+                    model[i as usize] = p;
+                }
+            }
+            ra.sync().unwrap();
+        }
+        let collected = std::sync::Mutex::new(vec![0i64; n as usize]);
+        ra.map(|i, v| collected.lock().unwrap()[i as usize] = *v).unwrap();
+        assert_eq!(*collected.lock().unwrap(), model);
+    });
+}
+
+#[test]
+fn prop_hashtable_equals_hashmap_model() {
+    prop_check("hashtable == HashMap model", 12, |rng| {
+        let mut seed_rng = rng.clone();
+        let (_t, r) = roomy_with("pt_ht", |c| rand_cfg(&mut seed_rng, c));
+        let ht = r.hash_table::<u64, i64>("h").unwrap();
+        let bump = ht.register_update(|_k, cur: Option<&i64>, p: &i64| {
+            Some(cur.copied().unwrap_or(0) + p)
+        });
+        let mut model: HashMap<u64, i64> = HashMap::new();
+        for _round in 0..rng.range(1, 4) {
+            for _ in 0..rng.range(0, 400) {
+                let k = rng.below(50); // heavy collisions
+                match rng.range(0, 3) {
+                    0 => {
+                        let v = rng.range_i64(-9, 9);
+                        ht.insert(&k, &v).unwrap();
+                        model.insert(k, v);
+                    }
+                    1 => {
+                        ht.remove(&k).unwrap();
+                        model.remove(&k);
+                    }
+                    _ => {
+                        let p = rng.range_i64(1, 5);
+                        ht.update(&k, &p, bump).unwrap();
+                        *model.entry(k).or_insert(0) += p;
+                    }
+                }
+            }
+            ht.sync().unwrap();
+        }
+        assert_eq!(ht.size(), model.len() as u64);
+        let collected = std::sync::Mutex::new(HashMap::new());
+        ht.map(|k, v| {
+            collected.lock().unwrap().insert(*k, *v);
+        })
+        .unwrap();
+        assert_eq!(*collected.lock().unwrap(), model);
+    });
+}
+
+#[test]
+fn prop_list_equals_multiset_model() {
+    prop_check("list == multiset model", 12, |rng| {
+        let mut seed_rng = rng.clone();
+        let (_t, r) = roomy_with("pt_list", |c| rand_cfg(&mut seed_rng, c));
+        let l = r.list::<u64>("l").unwrap();
+        let mut model: BTreeMap<u64, u64> = BTreeMap::new();
+        for _round in 0..rng.range(1, 4) {
+            // Roomy list sync semantics: all adds of the sync apply first,
+            // then removes delete every occurrence — model it that way.
+            let mut adds: Vec<u64> = Vec::new();
+            let mut removes: Vec<u64> = Vec::new();
+            for _ in 0..rng.range(0, 300) {
+                let v = rng.below(40);
+                if rng.chance(0.8) {
+                    l.add(&v).unwrap();
+                    adds.push(v);
+                } else {
+                    l.remove(&v).unwrap();
+                    removes.push(v);
+                }
+            }
+            l.sync().unwrap();
+            for v in adds {
+                *model.entry(v).or_insert(0) += 1;
+            }
+            for v in removes {
+                model.remove(&v);
+            }
+            if rng.chance(0.3) {
+                l.remove_dupes().unwrap();
+                for c in model.values_mut() {
+                    *c = 1;
+                }
+            }
+        }
+        let mut got: BTreeMap<u64, u64> = BTreeMap::new();
+        for v in l.collect().unwrap() {
+            *got.entry(v).or_insert(0) += 1;
+        }
+        assert_eq!(got, model);
+        assert_eq!(l.size(), model.values().sum::<u64>());
+    });
+}
+
+#[test]
+fn prop_setops_match_std_sets() {
+    prop_check("set ops == BTreeSet", 10, |rng| {
+        // half the cases force the sort-merge removeAll path (budget 1)
+        let budget = if rng.chance(0.5) { 1 } else { 1 << 20 };
+        let (_t, r) = roomy_with("pt_set", |c| c.ram_budget_bytes = budget);
+        let va: Vec<u64> = (0..rng.range(0, 120)).map(|_| rng.below(60)).collect();
+        let vb: Vec<u64> = (0..rng.range(0, 120)).map(|_| rng.below(60)).collect();
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for v in &va {
+            a.add(v).unwrap();
+        }
+        for v in &vb {
+            b.add(v).unwrap();
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        roomy::constructs::setops::to_set(&a).unwrap();
+        roomy::constructs::setops::to_set(&b).unwrap();
+        let sa: BTreeSet<u64> = va.into_iter().collect();
+        let sb: BTreeSet<u64> = vb.into_iter().collect();
+        let c = roomy::constructs::setops::intersection(&r, "c", &a, &b).unwrap();
+        let got: BTreeSet<u64> = c.collect().unwrap().into_iter().collect();
+        let expect: BTreeSet<u64> = sa.intersection(&sb).copied().collect();
+        assert_eq!(got, expect);
+    });
+}
+
+#[test]
+fn prop_bfs_matches_ram_bfs() {
+    prop_check("roomy BFS == RAM BFS", 6, |rng| {
+        let mut seed_rng = rng.clone();
+        let (_t, r) = roomy_with("pt_bfs", |c| rand_cfg(&mut seed_rng, c));
+        // random functional graph with out-degree 2 over m nodes
+        let m = rng.range(5, 120) as u64;
+        let s1 = rng.next_u64() | 1;
+        let s2 = rng.next_u64() | 1;
+        let gen = move |v: u64| {
+            [v.wrapping_mul(s1) % m, v.wrapping_mul(s2).wrapping_add(1) % m]
+        };
+        // RAM BFS
+        let mut seen = vec![false; m as usize];
+        seen[0] = true;
+        let mut cur = vec![0u64];
+        let mut ram_levels = vec![1u64];
+        let mut total = 1u64;
+        while !cur.is_empty() {
+            let mut next = vec![];
+            for &v in &cur {
+                for nb in gen(v) {
+                    if !seen[nb as usize] {
+                        seen[nb as usize] = true;
+                        next.push(nb);
+                    }
+                }
+            }
+            if next.is_empty() {
+                break;
+            }
+            ram_levels.push(next.len() as u64);
+            total += next.len() as u64;
+            cur = next;
+        }
+        // Roomy BFS
+        let stats = roomy::constructs::bfs::bfs_list(&r, "g", &[0u64], move |&v, out| {
+            out.extend(gen(v));
+        })
+        .unwrap();
+        assert_eq!(stats.levels, ram_levels);
+        assert_eq!(stats.total, total);
+    });
+}
+
+#[test]
+fn prop_pancake_small_n_random_config() {
+    prop_check("pancake BFS any config", 4, |rng| {
+        let mut seed_rng = rng.clone();
+        let (_t, r) = roomy_with("pt_pancake", |c| rand_cfg(&mut seed_rng, c));
+        let n = rng.range(4, 7);
+        let s = [
+            roomy::apps::pancake::Structure::List,
+            roomy::apps::pancake::Structure::Hash,
+            roomy::apps::pancake::Structure::Array,
+        ][rng.range(0, 3)];
+        let stats =
+            roomy::apps::pancake::roomy_bfs(&r, n, s, &roomy::accel::Accel::rust()).unwrap();
+        assert_eq!(stats.levels, roomy::apps::pancake::reference_bfs(n), "n={n} {s:?}");
+    });
+}
+
+#[test]
+fn prop_prefix_sum_any_shape() {
+    prop_check("prefix sum any shape", 8, |rng| {
+        let mut seed_rng = rng.clone();
+        let (_t, r) = roomy_with("pt_prefix", |c| rand_cfg(&mut seed_rng, c));
+        let n = rng.range(1, 400) as u64;
+        let vals: Vec<i64> = (0..n).map(|_| rng.range_i64(-1000, 1000)).collect();
+        let ra = r.array::<i64>("a", n, 0).unwrap();
+        let v2 = vals.clone();
+        ra.map_update(move |i, v| *v = v2[i as usize]).unwrap();
+        roomy::constructs::prefix::prefix_scan_array(&ra, &roomy::accel::Accel::rust())
+            .unwrap();
+        let mut acc = 0i64;
+        for (i, v) in vals.iter().enumerate() {
+            acc = acc.wrapping_add(*v);
+            if i % 37 == 0 || i + 1 == vals.len() {
+                assert_eq!(ra.fetch(i as u64).unwrap(), acc);
+            }
+        }
+    });
+}
