@@ -1,0 +1,71 @@
+"""Deterministic fallback for the `hypothesis` API subset these tests use.
+
+The offline test image has no `hypothesis` wheel; rather than skip the
+property tests we run them against seeded pseudo-random cases (no
+shrinking). Supports:
+
+- ``@settings(max_examples=N, deadline=None)``
+- ``@given(st.integers(...), st.lists(st.integers(...), ...))``
+
+Reproduce a failing run by exporting ``ROOMY_PROP_SEED``.
+"""
+
+
+import os
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+class strategies:  # noqa: N801 - mirrors `hypothesis.strategies` usage
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 20
+
+        def draw(rng):
+            k = rng.randint(min_size, hi)
+            return [elements._draw(rng) for _ in range(k)]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples=20, deadline=None, **_ignored):  # noqa: ARG001
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper():
+            max_examples = getattr(wrapper, "_fallback_max_examples", 20)
+            base = int(os.environ.get("ROOMY_PROP_SEED", "3407"))
+            for case in range(max_examples):
+                rng = random.Random(base + case * 9973)
+                drawn = [s._draw(rng) for s in strats]
+                try:
+                    fn(*drawn)
+                except Exception:
+                    print(
+                        f"property case {case} failed with seed {base} "
+                        f"(args {drawn!r}); rerun with ROOMY_PROP_SEED={base}"
+                    )
+                    raise
+
+        # Keep the collected test name, but do NOT expose the wrapped
+        # signature (pytest would mistake drawn params for fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -4,7 +4,10 @@ import itertools
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: deterministic seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile import model
 from compile.kernels import pancake, ref

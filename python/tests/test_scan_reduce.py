@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: deterministic seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile.kernels import ref, scan
 from compile.kernels import reduce as reduce_k

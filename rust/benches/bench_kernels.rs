@@ -17,21 +17,87 @@ use roomy::accel::Accel;
 use roomy::apps::pancake;
 use roomy::testutil::Rng;
 
+/// Pool scaling: structure map/reduce throughput at 1 vs N workers over
+/// the same on-disk data. The per-element work is deliberately non-trivial
+/// (fingerprint rounds) so the collective is CPU-bound, which is the
+/// regime intra-node parallelism targets; the acceptance bar is ≥ 2× at
+/// 4 workers.
+fn pool_scaling() {
+    header(
+        "pool scaling: RoomyArray map/reduce (M elements/s)",
+        &["collective", "elements", "1 worker", "4 workers", "speedup ×"],
+    );
+    let n = scaled(400_000);
+    let work = |i: u64, v: u64| -> u64 {
+        // ~8 fingerprint rounds per element: CPU-heavy map body
+        let mut h = i ^ v;
+        for _ in 0..8 {
+            h = roomy::hashfn::fp_words(&[h]);
+        }
+        h
+    };
+    let mut rates = Vec::new();
+    for nw in [1usize, 4] {
+        let (_t, r) = fresh_roomy(&format!("poolscale{nw}"), |c| c.num_workers = nw);
+        let ra = r.array::<u64>("a", n, 0).unwrap();
+        ra.map_update(|i, v| *v = i.wrapping_mul(0x9E3779B97F4A7C15)).unwrap();
+        let (tmap, _) = time_best(3, || {
+            let sink = std::sync::atomic::AtomicU64::new(0);
+            ra.map(|i, v| {
+                sink.fetch_add(work(i, *v), std::sync::atomic::Ordering::Relaxed);
+            })
+            .unwrap();
+            sink.into_inner()
+        });
+        let (tred, _) = time_best(3, || {
+            ra.reduce(
+                || 0u64,
+                |acc, i, v| acc.wrapping_add(work(i, *v)),
+                |a, b| a.wrapping_add(b),
+            )
+            .unwrap()
+        });
+        rates.push((nw, n as f64 / 1e6 / tmap, n as f64 / 1e6 / tred));
+    }
+    let (m1, r1) = (rates[0].1, rates[0].2);
+    let (m4, r4) = (rates[1].1, rates[1].2);
+    row(&[
+        "map".into(),
+        n.to_string(),
+        format!("{m1:.1}"),
+        format!("{m4:.1}"),
+        format!("{:.2}", m4 / m1),
+    ]);
+    row(&[
+        "reduce".into(),
+        n.to_string(),
+        format!("{r1:.1}"),
+        format!("{r4:.1}"),
+        format!("{:.2}", r4 / r1),
+    ]);
+}
+
 fn main() {
-    println!("# E7: accel kernel ablation (XLA AOT vs Rust fallback)");
+    println!("# E7: accel kernel ablation (XLA AOT vs Rust fallback) + pool scaling");
+    pool_scaling();
+
     let xla = {
         let dir = std::path::Path::new("artifacts");
         if dir.join("manifest.tsv").exists() {
-            Some(Accel::xla(std::sync::Arc::new(
-                roomy::runtime::Engine::load(dir).unwrap(),
-            )))
+            match roomy::runtime::Engine::load(dir) {
+                Ok(e) => Some(Accel::xla(std::sync::Arc::new(e))),
+                Err(e) => {
+                    println!("artifacts present but engine failed to load ({e})");
+                    None
+                }
+            }
         } else {
             None
         }
     };
     let rust = Accel::rust();
     let Some(xla) = xla else {
-        println!("artifacts/ missing — run `make artifacts` for the XLA side");
+        println!("\nartifacts/ missing or unloadable — skipping the XLA ablation side");
         return;
     };
 

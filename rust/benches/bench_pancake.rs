@@ -41,9 +41,9 @@ fn main() {
     let xla = {
         let dir = std::path::Path::new("artifacts");
         if dir.join("manifest.tsv").exists() {
-            Some(Accel::xla(std::sync::Arc::new(
-                roomy::runtime::Engine::load(dir).unwrap(),
-            )))
+            roomy::runtime::Engine::load(dir)
+                .ok()
+                .map(|e| Accel::xla(std::sync::Arc::new(e)))
         } else {
             None
         }

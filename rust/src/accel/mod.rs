@@ -295,7 +295,8 @@ mod tests {
     fn xla_accel() -> Option<Accel> {
         let dir = std::path::Path::new("artifacts");
         if dir.join("manifest.tsv").exists() {
-            Some(Accel::xla(Arc::new(Engine::load(dir).unwrap())))
+            // load fails on non-`xla` builds even with artifacts present
+            Engine::load(dir).ok().map(|e| Accel::xla(Arc::new(e)))
         } else {
             None
         }

@@ -1,13 +1,21 @@
-//! Simulated compute cluster: one node per worker thread, each with its own
-//! local disk directory; a leader (the calling thread) drives collective
+//! Simulated compute cluster: `workers` nodes, each with its own local
+//! disk directory; a leader (the calling thread) drives collective
 //! operations.
 //!
 //! Roomy is bulk-synchronous: every collective (sync, map, reduce, sort,
-//! shuffle) is "leader fans a job out to all nodes, nodes stream their
-//! local shards, barrier". [`Cluster::run`] implements exactly that with
-//! scoped threads, preserving the paper's topology — node-local data,
-//! explicit cross-node shuffle files — while staying laptop-runnable
-//! (DESIGN.md, Substitutions).
+//! shuffle) is "leader fans a job out, jobs stream their local shards,
+//! barrier". Two fan-out shapes exist:
+//!
+//! - [`Cluster::run`] — one job per **node**, one scoped thread each
+//!   (the paper's cluster topology; used where node-level concurrency is
+//!   the contract, e.g. teardown);
+//! - [`Cluster::run_buckets`] — one task per **bucket**, dispatched
+//!   through the shared [`WorkerPool`] of
+//!   [`RoomyConfig::num_workers`](crate::RoomyConfig::num_workers)
+//!   threads. This is the hot path every structure collective uses:
+//!   bucket tasks are independent, results come back in bucket order, and
+//!   delayed ops issued inside tasks are captured/replayed
+//!   deterministically (see [`crate::runtime::pool`]).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -15,14 +23,17 @@ use std::sync::Arc;
 use crate::config::RoomyConfig;
 use crate::error::{Result, RoomyError};
 use crate::metrics::{IoSnapshot, PhaseTimes};
+use crate::runtime::pool::WorkerPool;
 use crate::storage::NodeDisk;
 
-/// A simulated cluster: `workers` nodes, each owning one [`NodeDisk`].
+/// A simulated cluster: `workers` nodes, each owning one [`NodeDisk`],
+/// plus the collective execution pool shared by every structure on it.
 #[derive(Debug)]
 pub struct Cluster {
     disks: Vec<Arc<NodeDisk>>,
     buckets_per_worker: usize,
     phases: PhaseTimes,
+    pool: WorkerPool,
 }
 
 impl Cluster {
@@ -39,7 +50,13 @@ impl Cluster {
             disks,
             buckets_per_worker: cfg.buckets_per_worker,
             phases: PhaseTimes::new(),
+            pool: WorkerPool::new(cfg.num_workers),
         })
+    }
+
+    /// The collective execution pool (per-worker counters, width).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     /// Number of nodes.
@@ -120,21 +137,26 @@ impl Cluster {
         })
     }
 
-    /// Like [`Cluster::run`] but the job iterates the node's owned buckets
-    /// itself; provided for the common per-bucket collective shape.
+    /// Run `job(bucket, disk-of-owner)` for **every bucket**, dispatched
+    /// through the worker pool; results are returned in ascending bucket
+    /// order regardless of the schedule. This is the per-bucket collective
+    /// engine all structure sync/map/reduce paths use: bucket tasks touch
+    /// only their own bucket's files, so any `num_workers` produces
+    /// byte-identical on-disk state (see [`crate::runtime::pool`]).
+    ///
+    /// Wall time is charged to phase `phase`.
     pub fn run_buckets<R, F>(&self, phase: &str, job: F) -> Result<Vec<R>>
     where
         R: Send,
         F: Fn(u32, &NodeDisk) -> Result<R> + Sync,
     {
-        let nested: Vec<Vec<R>> = self.run(phase, |w, disk| {
-            let mut acc = Vec::new();
-            for b in self.buckets_of(w) {
-                acc.push(job(b, disk)?);
-            }
-            Ok(acc)
-        })?;
-        Ok(nested.into_iter().flatten().collect())
+        let nb = self.nbuckets() as usize;
+        self.phases.time(phase, || {
+            self.pool.run_tasks(phase, nb, |t| {
+                let b = t as u32;
+                job(b, self.disk(self.owner(b)))
+            })
+        })
     }
 
     /// Aggregate I/O across all node disks.
@@ -150,12 +172,14 @@ impl Cluster {
         self.disks.iter().map(|d| d.stats().snapshot()).collect()
     }
 
-    /// Reset all I/O counters and phase times (bench harness support).
+    /// Reset all I/O counters, phase times and pool counters (bench
+    /// harness support).
     pub fn reset_metrics(&self) {
         for d in &self.disks {
             d.stats().reset();
         }
         self.phases.reset();
+        self.pool.stats().reset();
     }
 
     /// Remove a structure directory on every node.
@@ -259,9 +283,28 @@ mod tests {
     fn run_buckets_covers_every_bucket_once() {
         let t = tmpdir("cluster_rb");
         let c = cluster(2, 3, t.path());
-        let mut buckets = c.run_buckets("collect", |b, _| Ok(b)).unwrap();
-        buckets.sort();
+        let buckets = c.run_buckets("collect", |b, _| Ok(b)).unwrap();
+        // pool dispatch returns results in ascending bucket order
         assert_eq!(buckets, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_buckets_hands_each_bucket_its_owner_disk() {
+        let t = tmpdir("cluster_rb_owner");
+        let c = cluster(3, 2, t.path());
+        let nodes = c.run_buckets("owners", |b, disk| Ok((b, disk.node()))).unwrap();
+        for (b, node) in nodes {
+            assert_eq!(node, c.owner(b), "bucket {b} ran against the wrong disk");
+        }
+    }
+
+    #[test]
+    fn run_buckets_counts_pool_tasks() {
+        let t = tmpdir("cluster_rb_stats");
+        let c = cluster(2, 2, t.path());
+        c.pool().stats().reset();
+        c.run_buckets("count", |_b, _| Ok(())).unwrap();
+        assert_eq!(c.pool().stats().total_tasks(), 4);
     }
 
     #[test]

@@ -66,12 +66,21 @@ pub enum AccelMode {
 /// Configuration for a [`crate::Roomy`] instance.
 #[derive(Debug, Clone)]
 pub struct RoomyConfig {
-    /// Number of simulated cluster nodes (worker threads), each with its
-    /// own disk directory. Paper: one process per cluster node.
+    /// Number of simulated cluster nodes (disk directories). Paper: one
+    /// process per cluster node. This is a *data layout* knob — it fixes
+    /// how many disks data is spread over, not how many threads run.
     pub workers: usize,
     /// Buckets per worker. More buckets = smaller RAM-resident unit per
     /// sync and finer shuffle granularity.
     pub buckets_per_worker: usize,
+    /// Worker threads in the collective execution pool
+    /// ([`crate::runtime::pool`]). Independent hash buckets are processed
+    /// concurrently by this many threads during every collective (sync,
+    /// map, reduce, sort, merge); results and delayed-op side effects are
+    /// merged deterministically, so any value produces byte-identical
+    /// on-disk state. Decoupled from `workers`: layout says *where* bytes
+    /// live, `num_workers` says how much CPU streams them.
+    pub num_workers: usize,
     /// Root directory under which per-node disk directories are created.
     pub root: PathBuf,
     /// Staged delayed-op bytes per bucket before spilling to disk.
@@ -96,6 +105,7 @@ impl RoomyConfig {
         RoomyConfig {
             workers: 4,
             buckets_per_worker: 2,
+            num_workers: env_num_workers().unwrap_or(2),
             root: root.into(),
             op_buffer_bytes: 64 * 1024,
             sort_chunk_bytes: 4 * 1024 * 1024,
@@ -124,6 +134,11 @@ impl RoomyConfig {
         if self.nbuckets() > u32::MAX as usize {
             return Err(crate::RoomyError::InvalidArg("too many buckets".into()));
         }
+        if self.num_workers == 0 {
+            return Err(crate::RoomyError::InvalidArg(
+                "num_workers must be > 0".into(),
+            ));
+        }
         if self.op_buffer_bytes == 0 || self.sort_chunk_bytes == 0 {
             return Err(crate::RoomyError::InvalidArg(
                 "buffer sizes must be > 0".into(),
@@ -133,11 +148,23 @@ impl RoomyConfig {
     }
 }
 
+/// Pool width override from the environment (`ROOMY_NUM_WORKERS`), used by
+/// CI to force a specific parallelism across the whole test suite.
+fn env_num_workers() -> Option<usize> {
+    std::env::var("ROOMY_NUM_WORKERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
 impl Default for RoomyConfig {
     fn default() -> Self {
         RoomyConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             buckets_per_worker: 4,
+            num_workers: env_num_workers().unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            }),
             root: std::env::temp_dir().join("roomy"),
             op_buffer_bytes: 4 * 1024 * 1024,
             sort_chunk_bytes: 64 * 1024 * 1024,
@@ -178,6 +205,13 @@ mod tests {
     #[test]
     fn default_validates() {
         RoomyConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_zero_pool_workers() {
+        let mut c = RoomyConfig::for_testing("/tmp/x");
+        c.num_workers = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

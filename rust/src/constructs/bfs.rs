@@ -16,6 +16,16 @@
 //! Batched drivers collect the frontier into batches and call the
 //! generator once per batch, which is how the XLA `bfs_expand` kernel is
 //! driven.
+//!
+//! Determinism note: the frontier batch accumulator is shared across the
+//! pool workers streaming `cur`, so batch *composition* depends on the
+//! schedule. Results (level sizes, reached-state sets, and — for the
+//! list driver, whose levels pass through `remove_dupes` — final on-disk
+//! bytes) are schedule-independent; the transient append order inside a
+//! level's staging is not. The unbatched per-element idiom (one delayed
+//! op per neighbor from inside `map`, as in the RoomyBitArray pancake
+//! variant) is byte-deterministic end to end via the pool's per-task op
+//! capture.
 
 use std::sync::Mutex;
 

@@ -10,9 +10,13 @@
 //! Hillis–Steele scan expressed in Roomy's delayed-update model.
 //!
 //! [`prefix_scan_array`] is the accelerated alternative for `i64` sums:
-//! one sequential streaming pass that runs the L1 Pallas scan kernel per
-//! bucket and carries the running total across buckets — one pass over the
-//! disk instead of `log N`, the kind of constant-factor win DESIGN.md's E7
+//! the textbook two-pass parallel scan over buckets, dispatched through
+//! the worker pool ([`crate::runtime::pool`]) — pass 1 scans every bucket
+//! locally (concurrent, one L1 scan-kernel call per bucket) and collects
+//! bucket totals, a cheap serial pass turns totals into per-bucket
+//! carries, and pass 2 adds each bucket's carry (concurrent). Two passes
+//! over the disk instead of `log N`, and both passes scale with
+//! `num_workers` — the kind of constant-factor win DESIGN.md's E7
 //! ablation measures.
 
 use crate::accel::Accel;
@@ -44,25 +48,46 @@ pub fn parallel_prefix<T: Element>(
     Ok(())
 }
 
-/// Accelerated inclusive prefix *sum* for `i64` arrays: one streaming pass,
-/// scan kernel per bucket, carry chained across buckets in L3.
+/// Accelerated inclusive prefix *sum* for `i64` arrays: two pooled
+/// per-bucket passes (local scan, then carry add) around one cheap serial
+/// carry computation. RAM use stays one bucket per pool worker.
 pub fn prefix_scan_array(ra: &RoomyArray<i64>, accel: &Accel) -> Result<()> {
-    let mut carry = 0i64;
-    for b in 0..ra.bucket_count() {
+    let nb = ra.bucket_count();
+    // Pass 1 (pooled): scan each bucket in place, return its total.
+    let totals: Vec<i64> = ra.cluster().run_buckets("prefix.scan", |b, _disk| {
+        if b >= nb {
+            return Ok(0i64);
+        }
         let data = ra.read_bucket_i64(b)?;
         if data.is_empty() {
-            continue;
+            return Ok(0i64);
         }
-        let (mut scanned, total) = accel.prefix_scan(&data)?;
-        if carry != 0 {
-            for v in scanned.iter_mut() {
-                *v = v.wrapping_add(carry);
-            }
-        }
-        let new_carry = carry.wrapping_add(total);
+        let (scanned, total) = accel.prefix_scan(&data)?;
         ra.write_bucket_i64(b, &scanned)?;
-        carry = new_carry;
+        Ok(total)
+    })?;
+    // Serial: exclusive prefix of bucket totals = per-bucket carries.
+    let mut carries = Vec::with_capacity(totals.len());
+    let mut carry = 0i64;
+    for t in &totals {
+        carries.push(carry);
+        carry = carry.wrapping_add(*t);
     }
+    // Pass 2 (pooled): add each bucket's carry.
+    ra.cluster().run_buckets("prefix.carry", |b, _disk| {
+        let c = carries.get(b as usize).copied().unwrap_or(0);
+        if b >= nb || c == 0 {
+            return Ok(());
+        }
+        let mut data = ra.read_bucket_i64(b)?;
+        if data.is_empty() {
+            return Ok(());
+        }
+        for v in data.iter_mut() {
+            *v = v.wrapping_add(c);
+        }
+        ra.write_bucket_i64(b, &data)
+    })?;
     Ok(())
 }
 

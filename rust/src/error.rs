@@ -1,4 +1,7 @@
 //! Error type shared across the Roomy crate.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the crate builds
+//! fully offline with zero dependencies.
 
 use std::path::PathBuf;
 
@@ -6,40 +9,63 @@ use std::path::PathBuf;
 pub type Result<T> = std::result::Result<T, RoomyError>;
 
 /// Errors produced by the Roomy runtime.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RoomyError {
     /// Underlying I/O failure, annotated with the path involved.
-    #[error("io error on {path:?}: {source}")]
     Io {
         path: PathBuf,
-        #[source]
         source: std::io::Error,
     },
 
     /// Caller passed an argument violating a documented invariant.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// Two structures were combined that do not share a compatible layout
     /// (element size, bucket count, ...).
-    #[error("incompatible structures: {0}")]
     Incompatible(String),
 
     /// A user function id was used that was never registered.
-    #[error("unknown function id {id} on structure {structure}")]
     UnknownFunc { structure: String, id: u8 },
 
     /// XLA/PJRT runtime failure (artifact loading, compilation, execution).
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Requested AOT artifact is not present in the artifacts directory.
-    #[error("missing artifact {name} (run `make artifacts`)")]
     MissingArtifact { name: String },
 
     /// A worker thread panicked during a collective operation.
-    #[error("worker {worker} panicked during {phase}")]
     WorkerPanic { worker: usize, phase: String },
+}
+
+impl std::fmt::Display for RoomyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RoomyError::Io { path, source } => {
+                write!(f, "io error on {path:?}: {source}")
+            }
+            RoomyError::InvalidArg(msg) => write!(f, "invalid argument: {msg}"),
+            RoomyError::Incompatible(msg) => write!(f, "incompatible structures: {msg}"),
+            RoomyError::UnknownFunc { structure, id } => {
+                write!(f, "unknown function id {id} on structure {structure}")
+            }
+            RoomyError::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            RoomyError::MissingArtifact { name } => {
+                write!(f, "missing artifact {name} (run `make artifacts`)")
+            }
+            RoomyError::WorkerPanic { worker, phase } => {
+                write!(f, "worker {worker} panicked during {phase}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RoomyError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RoomyError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl RoomyError {
@@ -49,6 +75,7 @@ impl RoomyError {
     }
 }
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for RoomyError {
     fn from(e: xla::Error) -> Self {
         RoomyError::Xla(e.to_string())
@@ -75,5 +102,16 @@ mod tests {
         let e = RoomyError::UnknownFunc { structure: "ra".into(), id: 3 };
         assert!(e.to_string().contains("ra"));
         assert!(e.to_string().contains('3'));
+    }
+
+    #[test]
+    fn io_error_exposes_source() {
+        use std::error::Error;
+        let e = RoomyError::io(
+            "/f",
+            std::io::Error::new(std::io::ErrorKind::Other, "inner"),
+        );
+        assert!(e.source().is_some());
+        assert!(RoomyError::InvalidArg("x".into()).source().is_none());
     }
 }

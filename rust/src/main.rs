@@ -48,6 +48,7 @@ fn print_help() {
 
 USAGE:
   roomy pancake --n <N> [--structure list|array|hash] [--workers W]
+                [--num-workers T]      # collective pool threads
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
   roomy rubik   [--workers W] [--root DIR]        # 2x2x2 cube God's number
@@ -98,9 +99,11 @@ impl Flags {
 }
 
 fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
+    let default_pool = RoomyConfig::default().num_workers;
     let mut cfg = RoomyConfig {
         workers: f.get_parse("workers", 4usize)?,
         buckets_per_worker: f.get_parse("buckets-per-worker", 4usize)?,
+        num_workers: f.get_parse("num-workers", default_pool)?,
         ..RoomyConfig::default()
     };
     cfg.root = f

@@ -175,6 +175,78 @@ impl PhaseTimes {
     }
 }
 
+/// Per-worker counters for the collective execution pool
+/// ([`crate::runtime::pool`]): how many bucket tasks each worker slot ran
+/// and how long it was busy. Worker slots are stable across collectives
+/// (slot `i` is always the `i`-th thread of a pool fan-out), so the rows
+/// expose load-balance skew directly.
+#[derive(Debug)]
+pub struct PoolStats {
+    tasks: Vec<AtomicU64>,
+    busy_ns: Vec<AtomicU64>,
+}
+
+impl PoolStats {
+    /// Counters for a pool of `workers` slots.
+    pub fn new(workers: usize) -> Self {
+        PoolStats {
+            tasks: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Number of worker slots.
+    pub fn workers(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Charge one completed task of duration `d` to worker slot `w`.
+    pub fn charge(&self, w: usize, d: Duration) {
+        if let (Some(t), Some(b)) = (self.tasks.get(w), self.busy_ns.get(w)) {
+            t.fetch_add(1, Ordering::Relaxed);
+            b.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// `(tasks run, busy time)` for each worker slot.
+    pub fn per_worker(&self) -> Vec<(u64, Duration)> {
+        self.tasks
+            .iter()
+            .zip(self.busy_ns.iter())
+            .map(|(t, b)| {
+                (t.load(Ordering::Relaxed), Duration::from_nanos(b.load(Ordering::Relaxed)))
+            })
+            .collect()
+    }
+
+    /// Total tasks run across all worker slots.
+    pub fn total_tasks(&self) -> u64 {
+        self.tasks.iter().map(|t| t.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Zero all counters (bench harness support).
+    pub fn reset(&self) {
+        for t in &self.tasks {
+            t.store(0, Ordering::Relaxed);
+        }
+        for b in &self.busy_ns {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Human-readable multi-line report (one row per worker slot).
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (w, (tasks, busy)) in self.per_worker().into_iter().enumerate() {
+            s.push_str(&format!(
+                "  worker {w:<3} {tasks:>8} tasks  {:>10.3} ms busy\n",
+                busy.as_secs_f64() * 1e3
+            ));
+        }
+        s
+    }
+}
+
 /// Format a byte count with binary units.
 pub fn fmt_bytes(b: u64) -> String {
     const UNITS: &[&str] = &["B", "KiB", "MiB", "GiB", "TiB"];
@@ -261,6 +333,23 @@ mod tests {
         let v = p.time("work", || 42);
         assert_eq!(v, 42);
         assert!(p.get("work").is_some());
+    }
+
+    #[test]
+    fn pool_stats_accumulate_and_reset() {
+        let p = PoolStats::new(2);
+        p.charge(0, Duration::from_millis(3));
+        p.charge(0, Duration::from_millis(2));
+        p.charge(1, Duration::from_millis(1));
+        p.charge(9, Duration::from_millis(1)); // out of range: ignored
+        assert_eq!(p.total_tasks(), 3);
+        let rows = p.per_worker();
+        assert_eq!(rows[0].0, 2);
+        assert_eq!(rows[1].0, 1);
+        assert!(rows[0].1 >= Duration::from_millis(5));
+        assert!(p.report().contains("worker 0"));
+        p.reset();
+        assert_eq!(p.total_tasks(), 0);
     }
 
     #[test]

@@ -47,7 +47,11 @@ struct ArrayInner<T: Element> {
     /// Elements per bucket (last bucket may be short).
     bsize: u64,
     funcs: FuncRegistry,
-    staged: StagedOps,
+    staged: Arc<StagedOps>,
+    /// Serializes collectives that rewrite bucket files (`sync`,
+    /// `map_update`): concurrent client threads would otherwise race
+    /// take-read-modify-write on the same bucket and lose updates.
+    write_lock: std::sync::Mutex<()>,
     _t: PhantomData<fn() -> T>,
 }
 
@@ -64,6 +68,7 @@ impl<T: Element> RoomyArray<T> {
         let inner = ArrayInner {
             staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
             funcs: FuncRegistry::new(&format!("RoomyArray({name})")),
+            write_lock: std::sync::Mutex::new(()),
             ctx,
             name: name.to_string(),
             dir: dir.clone(),
@@ -236,6 +241,7 @@ impl<T: Element> RoomyArray<T> {
     /// by the next sync.
     pub fn sync(&self) -> Result<()> {
         let inner = &self.inner;
+        let _write = inner.write_lock.lock().unwrap();
         if inner.staged.is_empty() {
             return Ok(());
         }
@@ -323,6 +329,7 @@ impl<T: Element> RoomyArray<T> {
     /// Map that may mutate elements in place (streaming rewrite).
     pub fn map_update(&self, f: impl Fn(u64, &mut T) + Sync) -> Result<()> {
         let inner = &self.inner;
+        let _write = inner.write_lock.lock().unwrap();
         inner.for_owned_buckets("ra.map_update", |this, b, disk| {
             let recs = this.bucket_len(b);
             if recs == 0 {
@@ -362,9 +369,12 @@ impl<T: Element> RoomyArray<T> {
         })
     }
 
-    /// Reduce: `fold` combines a per-worker partial with one element;
-    /// `merge` combines partials. Both must be associative/commutative in
-    /// effect (order is unspecified, as in the paper).
+    /// Reduce: `fold` combines a per-bucket partial with one element;
+    /// `merge` combines partials. Buckets reduce concurrently on the pool
+    /// and partials merge in ascending bucket order, so for a fixed input
+    /// the result is identical for every `num_workers` (the paper still
+    /// requires assoc+comm in effect, since bucket layout is an
+    /// implementation detail).
     pub fn reduce<R: Send>(
         &self,
         identity: impl Fn() -> R + Sync,
@@ -372,21 +382,17 @@ impl<T: Element> RoomyArray<T> {
         merge: impl Fn(R, R) -> R,
     ) -> Result<R> {
         let inner = &self.inner;
-        let partials: Vec<R> = inner.ctx.cluster.run("ra.reduce", |w, disk| {
-            let mut acc = identity();
-            for b in inner.ctx.cluster.buckets_of(w) {
-                let mut local = Some(std::mem::replace(&mut acc, identity()));
-                inner.scan_bucket(b, disk, |idx, elt| {
-                    let cur = local.take().expect("reduce accumulator");
-                    local = Some(fold(cur, idx, &T::read_from(elt)));
-                    Ok(())
-                })?;
-                acc = local.take().expect("reduce accumulator");
-            }
-            Ok(acc)
+        let partials: Vec<R> = inner.ctx.cluster.run_buckets("ra.reduce", |b, disk| {
+            let mut local = Some(identity());
+            inner.scan_bucket(b, disk, |idx, elt| {
+                let cur = local.take().expect("reduce accumulator");
+                local = Some(fold(cur, idx, &T::read_from(elt)));
+                Ok(())
+            })?;
+            Ok(local.take().expect("reduce accumulator"))
         })?;
         let mut it = partials.into_iter();
-        let first = it.next().expect("at least one worker");
+        let first = it.next().expect("at least one bucket");
         Ok(it.fold(first, merge))
     }
 
@@ -424,6 +430,12 @@ impl RoomyArray<i64> {
     /// Number of non-empty buckets.
     pub(crate) fn bucket_count(&self) -> u32 {
         self.inner.len.div_ceil(self.inner.bsize) as u32
+    }
+
+    /// The cluster this array lives on (pool dispatch for the
+    /// accelerated constructs).
+    pub(crate) fn cluster(&self) -> &Arc<crate::cluster::Cluster> {
+        &self.inner.ctx.cluster
     }
 
     /// Read bucket `b` and decode its elements.
@@ -469,19 +481,13 @@ impl<T: Element> ArrayInner<T> {
         }
     }
 
-    /// Run `f(self, bucket, disk)` over every owned bucket on every node.
+    /// Run `f(self, bucket, disk)` for every bucket on the worker pool.
     fn for_owned_buckets(
         &self,
         phase: &str,
         f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
     ) -> Result<()> {
-        let cluster = &self.ctx.cluster;
-        cluster.run(phase, |w, disk| {
-            for b in cluster.buckets_of(w) {
-                f(self, b, disk)?;
-            }
-            Ok(())
-        })?;
+        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())
     }
 

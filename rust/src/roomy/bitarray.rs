@@ -41,7 +41,10 @@ struct BitInner {
     bsize: u64,
     updates: std::sync::RwLock<Vec<(usize, BitUpdateFn)>>,
     accesses: std::sync::RwLock<Vec<(usize, BitAccessFn)>>,
-    staged: StagedOps,
+    staged: Arc<StagedOps>,
+    /// Serializes `sync` (bucket rewrite) against concurrent client
+    /// threads.
+    write_lock: std::sync::Mutex<()>,
     /// Histogram: counts[v] = number of elements equal to v.
     counts: Vec<AtomicI64>,
 }
@@ -72,6 +75,7 @@ impl RoomyBitArray {
             staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
             updates: std::sync::RwLock::new(Vec::new()),
             accesses: std::sync::RwLock::new(Vec::new()),
+            write_lock: std::sync::Mutex::new(()),
             ctx,
             name: name.to_string(),
             dir,
@@ -191,6 +195,7 @@ impl RoomyBitArray {
     /// Apply all outstanding delayed operations (FIFO per bucket).
     pub fn sync(&self) -> Result<()> {
         let inner = &self.inner;
+        let _write = inner.write_lock.lock().unwrap();
         if inner.staged.is_empty() {
             return Ok(());
         }
@@ -379,13 +384,7 @@ impl BitInner {
         phase: &str,
         f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
     ) -> Result<()> {
-        let cluster = &self.ctx.cluster;
-        cluster.run(phase, |w, disk| {
-            for b in cluster.buckets_of(w) {
-                f(self, b, disk)?;
-            }
-            Ok(())
-        })?;
+        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())
     }
 }

@@ -48,7 +48,10 @@ struct HtInner<K: Element, V: Element> {
     /// Hash-table updates have a richer signature than array updates
     /// (`Option<V>` in/out), so they get their own registry.
     ht_updates: std::sync::RwLock<Vec<(usize, HtUpdateFn)>>,
-    staged: StagedOps,
+    staged: Arc<StagedOps>,
+    /// Serializes `sync` (bucket rewrite) against concurrent client
+    /// threads.
+    write_lock: std::sync::Mutex<()>,
     size: std::sync::atomic::AtomicI64,
     _t: PhantomData<fn() -> (K, V)>,
 }
@@ -61,6 +64,7 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
             staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
             funcs: FuncRegistry::new(&format!("RoomyHashTable({name})")),
             ht_updates: std::sync::RwLock::new(Vec::new()),
+            write_lock: std::sync::Mutex::new(()),
             ctx,
             name: name.to_string(),
             dir,
@@ -229,16 +233,14 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
     /// Apply all outstanding delayed operations (FIFO per bucket).
     pub fn sync(&self) -> Result<()> {
         let inner = &self.inner;
+        let _write = inner.write_lock.lock().unwrap();
         if inner.staged.is_empty() {
             return Ok(());
         }
-        let deltas: Vec<i64> = inner.ctx.cluster.run("rht.sync", |w, disk| {
-            let mut delta = 0i64;
-            for b in inner.ctx.cluster.buckets_of(w) {
-                delta += inner.sync_bucket(b, disk)?;
-            }
-            Ok(delta)
-        })?;
+        let deltas: Vec<i64> = inner
+            .ctx
+            .cluster
+            .run_buckets("rht.sync", |b, disk| inner.sync_bucket(b, disk))?;
         inner
             .size
             .fetch_add(deltas.iter().sum::<i64>(), std::sync::atomic::Ordering::Relaxed);
@@ -260,6 +262,8 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
     }
 
     /// Reduce over all pairs; `fold`/`merge` must be assoc+comm in effect.
+    /// Buckets reduce concurrently on the pool; partials merge in bucket
+    /// order, so the result is independent of `num_workers`.
     pub fn reduce<R: Send>(
         &self,
         identity: impl Fn() -> R + Sync,
@@ -267,25 +271,21 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
         merge: impl Fn(R, R) -> R,
     ) -> Result<R> {
         let inner = &self.inner;
-        let partials: Vec<R> = inner.ctx.cluster.run("rht.reduce", |w, disk| {
-            let mut acc = identity();
-            for b in inner.ctx.cluster.buckets_of(w) {
-                let mut local = Some(std::mem::replace(&mut acc, identity()));
-                inner.scan_bucket(b, disk, |kv| {
-                    let cur = local.take().expect("reduce accumulator");
-                    local = Some(fold(
-                        cur,
-                        &K::read_from(&kv[..K::SIZE]),
-                        &V::read_from(&kv[K::SIZE..]),
-                    ));
-                    Ok(())
-                })?;
-                acc = local.take().expect("reduce accumulator");
-            }
-            Ok(acc)
+        let partials: Vec<R> = inner.ctx.cluster.run_buckets("rht.reduce", |b, disk| {
+            let mut local = Some(identity());
+            inner.scan_bucket(b, disk, |kv| {
+                let cur = local.take().expect("reduce accumulator");
+                local = Some(fold(
+                    cur,
+                    &K::read_from(&kv[..K::SIZE]),
+                    &V::read_from(&kv[K::SIZE..]),
+                ));
+                Ok(())
+            })?;
+            Ok(local.take().expect("reduce accumulator"))
         })?;
         let mut it = partials.into_iter();
-        let first = it.next().expect("at least one worker");
+        let first = it.next().expect("at least one bucket");
         Ok(it.fold(first, merge))
     }
 
@@ -343,13 +343,7 @@ impl<K: Element, V: Element> HtInner<K, V> {
         phase: &str,
         f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
     ) -> Result<()> {
-        let cluster = &self.ctx.cluster;
-        cluster.run(phase, |w, disk| {
-            for b in cluster.buckets_of(w) {
-                f(self, b, disk)?;
-            }
-            Ok(())
-        })?;
+        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())
     }
 

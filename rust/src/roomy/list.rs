@@ -45,7 +45,14 @@ struct ListInner<T: Element> {
     name: String,
     dir: String,
     funcs: FuncRegistry,
-    staged: StagedOps,
+    staged: Arc<StagedOps>,
+    /// Guards shard files against torn concurrent access: rewriting
+    /// collectives (`sync`, `add_all`, `remove_all`, `remove_dupes`) take
+    /// the write side; streaming reads (`map`, `reduce`, predicate scans)
+    /// take the read side. Lists need this — unlike the tmp+rename
+    /// structures — because `sync` *appends in place*, so a concurrent
+    /// reader could otherwise see a partial record at EOF.
+    write_lock: std::sync::RwLock<()>,
     size: AtomicI64,
     /// Whether every shard file is currently sorted (set by
     /// `remove_dupes`, cleared by appends) — lets repeated dedups and
@@ -61,6 +68,7 @@ impl<T: Element> RoomyList<T> {
         let inner = ListInner {
             staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
             funcs: FuncRegistry::new(&format!("RoomyList({name})")),
+            write_lock: std::sync::RwLock::new(()),
             ctx,
             name: name.to_string(),
             dir,
@@ -122,22 +130,16 @@ impl<T: Element> RoomyList<T> {
     /// Apply staged adds, then staged removes (paper Table 1 `sync`).
     pub fn sync(&self) -> Result<()> {
         let inner = &self.inner;
+        let _write = inner.write_lock.write().unwrap();
         if inner.staged.is_empty() {
             return Ok(());
         }
-        let mut appended_any = false;
-        let deltas: Vec<(i64, bool)> = inner.ctx.cluster.run("rl.sync", |w, disk| {
-            let mut delta = 0i64;
-            let mut appended = false;
-            for b in inner.ctx.cluster.buckets_of(w) {
-                let (d, a) = inner.sync_shard(b, disk)?;
-                delta += d;
-                appended |= a;
-            }
-            Ok((delta, appended))
-        })?;
+        let deltas: Vec<(i64, bool)> = inner
+            .ctx
+            .cluster
+            .run_buckets("rl.sync", |b, disk| inner.sync_shard(b, disk))?;
         let total: i64 = deltas.iter().map(|(d, _)| d).sum();
-        appended_any |= deltas.iter().any(|(_, a)| *a);
+        let appended_any = deltas.iter().any(|(_, a)| *a);
         inner.size.fetch_add(total, Ordering::Relaxed);
         if appended_any {
             inner.sorted.store(false, Ordering::Relaxed);
@@ -159,29 +161,27 @@ impl<T: Element> RoomyList<T> {
                 "addAll requires identical shard counts".into(),
             ));
         }
-        let added: Vec<i64> = inner.ctx.cluster.run("rl.add_all", |w, disk| {
-            let mut n = 0i64;
-            for b in inner.ctx.cluster.buckets_of(w) {
-                let src = other.inner.shard_file(b);
-                if !disk.exists(&src) {
-                    continue;
-                }
-                // Same fingerprint ⇒ same shard id in both lists; the
-                // shard lives on the same node, so this is a local
-                // stream-append.
-                let mut r = RecordReader::open(disk, &src, T::SIZE)?;
-                let mut w_ = RecordWriter::append(disk, inner.shard_file(b), T::SIZE)?;
-                let mut buf = Vec::new();
-                loop {
-                    let got = r.read_batch(&mut buf, SCAN_BATCH)?;
-                    if got == 0 {
-                        break;
-                    }
-                    w_.push_batch(&buf)?;
-                    n += got as i64;
-                }
-                w_.finish()?;
+        let _write = inner.write_lock.write().unwrap();
+        let added: Vec<i64> = inner.ctx.cluster.run_buckets("rl.add_all", |b, disk| {
+            let src = other.inner.shard_file(b);
+            if !disk.exists(&src) {
+                return Ok(0i64);
             }
+            // Same fingerprint ⇒ same shard id in both lists; the shard
+            // lives on the same node, so this is a local stream-append.
+            let mut n = 0i64;
+            let mut r = RecordReader::open(disk, &src, T::SIZE)?;
+            let mut w_ = RecordWriter::append(disk, inner.shard_file(b), T::SIZE)?;
+            let mut buf = Vec::new();
+            loop {
+                let got = r.read_batch(&mut buf, SCAN_BATCH)?;
+                if got == 0 {
+                    break;
+                }
+                w_.push_batch(&buf)?;
+                n += got as i64;
+            }
+            w_.finish()?;
             Ok(n)
         })?;
         inner.size.fetch_add(added.iter().sum::<i64>(), Ordering::Relaxed);
@@ -198,54 +198,50 @@ impl<T: Element> RoomyList<T> {
                 "removeAll requires identical shard counts".into(),
             ));
         }
+        let _write = inner.write_lock.write().unwrap();
         let ram_budget = inner.ctx.cfg.ram_budget_bytes;
         let sort_chunk = inner.ctx.cfg.sort_chunk_bytes;
-        let removed: Vec<i64> = inner.ctx.cluster.run("rl.remove_all", |w, disk| {
-            let mut n = 0i64;
-            for b in inner.ctx.cluster.buckets_of(w) {
-                let mine = inner.shard_file(b);
-                let theirs = other.inner.shard_file(b);
-                if !disk.exists(&mine) || !disk.exists(&theirs) {
-                    continue;
-                }
-                let their_bytes = disk.len(&theirs) as usize;
-                let npreds = inner.funcs.npreds();
-                if their_bytes <= ram_budget {
-                    // Hash-set filter: stream `other`'s shard into RAM,
-                    // stream-rewrite ours.
-                    let mut del: HashSet<Vec<u8>> = HashSet::new();
-                    crate::storage::chunkfile::for_each_record(
-                        disk, &theirs, T::SIZE, SCAN_BATCH,
-                        |rec| {
-                            del.insert(rec.to_vec());
-                            Ok(())
-                        },
-                    )?;
-                    n += inner.filter_shard(b, disk, |rec| !del.contains(rec))?;
-                } else {
-                    // Space-limited path: sort both shards, sorted-merge
-                    // difference (the paper's regime for huge lists).
-                    let a_sorted = format!("{mine}.diff.a");
-                    let b_sorted = format!("{mine}.diff.b");
-                    extsort::sort_file(disk, &mine, &a_sorted, T::SIZE, sort_chunk, false)?;
-                    extsort::sort_file(disk, &theirs, &b_sorted, T::SIZE, sort_chunk, false)?;
-                    let before = record_count(disk, &a_sorted, T::SIZE);
-                    let out = format!("{mine}.diff.out");
-                    if npreds > 0 {
-                        inner.charge_shard(b, disk, -1)?;
-                    }
-                    let after =
-                        extsort::merge_diff(disk, &a_sorted, &b_sorted, &out, T::SIZE)?;
-                    disk.rename(&out, &mine)?;
-                    disk.remove(&a_sorted)?;
-                    disk.remove(&b_sorted)?;
-                    if npreds > 0 {
-                        inner.charge_shard(b, disk, 1)?;
-                    }
-                    n += before as i64 - after as i64;
-                }
+        let removed: Vec<i64> = inner.ctx.cluster.run_buckets("rl.remove_all", |b, disk| {
+            let mine = inner.shard_file(b);
+            let theirs = other.inner.shard_file(b);
+            if !disk.exists(&mine) || !disk.exists(&theirs) {
+                return Ok(0i64);
             }
-            Ok(n)
+            let their_bytes = disk.len(&theirs) as usize;
+            let npreds = inner.funcs.npreds();
+            if their_bytes <= ram_budget {
+                // Hash-set filter: stream `other`'s shard into RAM,
+                // stream-rewrite ours.
+                let mut del: HashSet<Vec<u8>> = HashSet::new();
+                crate::storage::chunkfile::for_each_record(
+                    disk, &theirs, T::SIZE, SCAN_BATCH,
+                    |rec| {
+                        del.insert(rec.to_vec());
+                        Ok(())
+                    },
+                )?;
+                inner.filter_shard(b, disk, |rec| !del.contains(rec))
+            } else {
+                // Space-limited path: sort both shards, sorted-merge
+                // difference (the paper's regime for huge lists).
+                let a_sorted = format!("{mine}.diff.a");
+                let b_sorted = format!("{mine}.diff.b");
+                extsort::sort_file(disk, &mine, &a_sorted, T::SIZE, sort_chunk, false)?;
+                extsort::sort_file(disk, &theirs, &b_sorted, T::SIZE, sort_chunk, false)?;
+                let before = record_count(disk, &a_sorted, T::SIZE);
+                let out = format!("{mine}.diff.out");
+                if npreds > 0 {
+                    inner.charge_shard(b, disk, -1)?;
+                }
+                let after = extsort::merge_diff(disk, &a_sorted, &b_sorted, &out, T::SIZE)?;
+                disk.rename(&out, &mine)?;
+                disk.remove(&a_sorted)?;
+                disk.remove(&b_sorted)?;
+                if npreds > 0 {
+                    inner.charge_shard(b, disk, 1)?;
+                }
+                Ok(before as i64 - after as i64)
+            }
         })?;
         inner.size.fetch_add(-removed.iter().sum::<i64>(), Ordering::Relaxed);
         Ok(())
@@ -255,26 +251,23 @@ impl<T: Element> RoomyList<T> {
     /// external sort + unique. After this call the list is a set.
     pub fn remove_dupes(&self) -> Result<()> {
         let inner = &self.inner;
+        let _write = inner.write_lock.write().unwrap();
         let sort_chunk = inner.ctx.cfg.sort_chunk_bytes;
         let npreds = inner.funcs.npreds();
-        let removed: Vec<i64> = inner.ctx.cluster.run("rl.remove_dupes", |w, disk| {
-            let mut n = 0i64;
-            for b in inner.ctx.cluster.buckets_of(w) {
-                let file = inner.shard_file(b);
-                if !disk.exists(&file) {
-                    continue;
-                }
-                let before = record_count(disk, &file, T::SIZE);
-                if npreds > 0 {
-                    inner.charge_shard(b, disk, -1)?;
-                }
-                let after = extsort::sort_file(disk, &file, &file, T::SIZE, sort_chunk, true)?;
-                if npreds > 0 {
-                    inner.charge_shard(b, disk, 1)?;
-                }
-                n += before as i64 - after as i64;
+        let removed: Vec<i64> = inner.ctx.cluster.run_buckets("rl.remove_dupes", |b, disk| {
+            let file = inner.shard_file(b);
+            if !disk.exists(&file) {
+                return Ok(0i64);
             }
-            Ok(n)
+            let before = record_count(disk, &file, T::SIZE);
+            if npreds > 0 {
+                inner.charge_shard(b, disk, -1)?;
+            }
+            let after = extsort::sort_file(disk, &file, &file, T::SIZE, sort_chunk, true)?;
+            if npreds > 0 {
+                inner.charge_shard(b, disk, 1)?;
+            }
+            Ok(before as i64 - after as i64)
         })?;
         inner.size.fetch_add(-removed.iter().sum::<i64>(), Ordering::Relaxed);
         inner.sorted.store(true, Ordering::Relaxed);
@@ -298,7 +291,9 @@ impl<T: Element> RoomyList<T> {
     }
 
     /// Reduce over all elements (the paper's sum-of-squares example);
-    /// `fold`/`merge` must be assoc+comm in effect.
+    /// `fold`/`merge` must be assoc+comm in effect. Shards reduce
+    /// concurrently on the pool; partials merge in shard order, so the
+    /// result is independent of `num_workers`.
     pub fn reduce<R: Send>(
         &self,
         identity: impl Fn() -> R + Sync,
@@ -306,21 +301,18 @@ impl<T: Element> RoomyList<T> {
         merge: impl Fn(R, R) -> R,
     ) -> Result<R> {
         let inner = &self.inner;
-        let partials: Vec<R> = inner.ctx.cluster.run("rl.reduce", |w, disk| {
-            let mut acc = identity();
-            for b in inner.ctx.cluster.buckets_of(w) {
-                let mut local = Some(std::mem::replace(&mut acc, identity()));
-                inner.scan_shard(b, disk, |rec| {
-                    let cur = local.take().expect("reduce accumulator");
-                    local = Some(fold(cur, &T::read_from(rec)));
-                    Ok(())
-                })?;
-                acc = local.take().expect("reduce accumulator");
-            }
-            Ok(acc)
+        let _read = inner.write_lock.read().unwrap();
+        let partials: Vec<R> = inner.ctx.cluster.run_buckets("rl.reduce", |b, disk| {
+            let mut local = Some(identity());
+            inner.scan_shard(b, disk, |rec| {
+                let cur = local.take().expect("reduce accumulator");
+                local = Some(fold(cur, &T::read_from(rec)));
+                Ok(())
+            })?;
+            Ok(local.take().expect("reduce accumulator"))
         })?;
         let mut it = partials.into_iter();
-        let first = it.next().expect("at least one worker");
+        let first = it.next().expect("at least one shard");
         Ok(it.fold(first, merge))
     }
 
@@ -381,13 +373,8 @@ impl<T: Element> ListInner<T> {
         phase: &str,
         f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
     ) -> Result<()> {
-        let cluster = &self.ctx.cluster;
-        cluster.run(phase, |w, disk| {
-            for b in cluster.buckets_of(w) {
-                f(self, b, disk)?;
-            }
-            Ok(())
-        })?;
+        let _read = self.write_lock.read().unwrap();
+        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())
     }
 

@@ -166,6 +166,11 @@ impl Roomy {
         ));
         s.push_str("phases:\n");
         s.push_str(&self.ctx.cluster.phases().report());
+        s.push_str(&format!(
+            "pool ({} workers):\n",
+            self.ctx.cluster.pool().num_workers()
+        ));
+        s.push_str(&self.ctx.cluster.pool().stats().report());
         s
     }
 }

@@ -6,7 +6,7 @@
 //! staging buffers spill to the owning node's disk, so an unbounded number
 //! of delayed ops uses bounded RAM.
 
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
 
 use crate::cluster::Cluster;
 use crate::error::Result;
@@ -55,7 +55,10 @@ impl OpKind {
 thread_local! {
     /// Reusable encode buffer: delayed-op issue is the hottest user-facing
     /// path (millions of calls per sync), so record encoding must not
-    /// allocate (§Perf P2).
+    /// allocate (§Perf P2). This is *per-worker* scratch under the pool
+    /// execution model: [`crate::runtime::pool`] workers are distinct
+    /// scoped threads, so each owns a private instance for the duration of
+    /// a collective — no sharing, no contention.
     static ENCODE_BUF: std::cell::RefCell<Vec<u8>> =
         std::cell::RefCell::new(Vec::with_capacity(256));
 }
@@ -98,13 +101,21 @@ pub fn encode_elt(out: &mut Vec<u8>, kind: OpKind, elt: &[u8]) {
 
 /// Per-bucket spillable staging for one structure.
 ///
-/// Issue path: `stage(bucket, record)` locks only that bucket's buffer.
+/// Issue path: `stage(bucket, record)` locks only that bucket's buffer —
+/// unless the calling thread is inside a [`crate::runtime::pool`] task,
+/// in which case the record is diverted into that task's capture log and
+/// replayed (via [`StagedOps::stage_direct`]) in deterministic (task,
+/// issue) order after the collective's barrier.
+///
 /// Sync path: `take(bucket)` swaps the buffer for a fresh one under the
-/// lock and returns the full old buffer — ops staged concurrently (e.g. by
-/// access functions running in the same sync) land in the fresh buffer and
-/// are processed by the *next* sync, never lost.
+/// lock and returns the full old buffer — ops staged during the same sync
+/// (e.g. by access functions) are replayed post-barrier into the fresh
+/// buffer and processed by the *next* sync, never lost.
 pub struct StagedOps {
     states: Vec<Mutex<SlotState>>,
+    /// Self-reference handed to the pool's capture log, which must hold
+    /// the staging alive until replay.
+    weak_self: Weak<StagedOps>,
 }
 
 struct SlotState {
@@ -115,7 +126,7 @@ struct SlotState {
 impl StagedOps {
     /// One staging slot per bucket; slot `b` spills to the disk of the node
     /// owning bucket `b`, under `<struct_dir>/stage<b>.<gen>.spill`.
-    pub fn new(cluster: &Cluster, struct_dir: &str, threshold: usize) -> Self {
+    pub fn new(cluster: &Cluster, struct_dir: &str, threshold: usize) -> Arc<Self> {
         let nb = cluster.nbuckets();
         let mut states = Vec::with_capacity(nb as usize);
         for b in 0..nb {
@@ -126,7 +137,7 @@ impl StagedOps {
                 gen: 0,
             }));
         }
-        StagedOps { states }
+        Arc::new_cyclic(|weak_self| StagedOps { states, weak_self: weak_self.clone() })
     }
 
     /// Number of staging slots (== bucket count).
@@ -134,8 +145,23 @@ impl StagedOps {
         self.states.len()
     }
 
-    /// Append `record` to bucket `b`'s staging buffer.
+    /// Append `record` to bucket `b`'s staging buffer — or, inside a pool
+    /// task, to the task's capture log for deterministic post-barrier
+    /// replay.
     pub fn stage(&self, b: u32, record: &[u8]) -> Result<()> {
+        if crate::runtime::pool::capture_active() {
+            if let Some(me) = self.weak_self.upgrade() {
+                if crate::runtime::pool::try_capture(&me, b, record) {
+                    return Ok(());
+                }
+            }
+        }
+        self.stage_direct(b, record)
+    }
+
+    /// Append `record` to bucket `b`'s staging buffer unconditionally
+    /// (bypasses capture; used by the pool's replay).
+    pub(crate) fn stage_direct(&self, b: u32, record: &[u8]) -> Result<()> {
         let mut g = self.lock_slot(b);
         g.buf.push(record)
     }

@@ -43,7 +43,10 @@ struct SetInner<T: Element> {
     ctx: Ctx,
     name: String,
     dir: String,
-    staged: StagedOps,
+    staged: Arc<StagedOps>,
+    /// Serializes shard-rewriting collectives (`sync`, `merge_with`)
+    /// against concurrent client threads.
+    write_lock: std::sync::Mutex<()>,
     size: AtomicI64,
     _t: PhantomData<fn() -> T>,
 }
@@ -55,6 +58,7 @@ impl<T: Element> RoomySet<T> {
         Ok(RoomySet {
             inner: Arc::new(SetInner {
                 staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
+                write_lock: std::sync::Mutex::new(()),
                 ctx,
                 name: name.to_string(),
                 dir,
@@ -109,16 +113,14 @@ impl<T: Element> RoomySet<T> {
     /// Remove wins over add for the same element in the same sync.
     pub fn sync(&self) -> Result<()> {
         let inner = &self.inner;
+        let _write = inner.write_lock.lock().unwrap();
         if inner.staged.is_empty() {
             return Ok(());
         }
-        let deltas: Vec<i64> = inner.ctx.cluster.run("rset.sync", |w, disk| {
-            let mut delta = 0i64;
-            for b in inner.ctx.cluster.buckets_of(w) {
-                delta += inner.sync_shard(b, disk)?;
-            }
-            Ok(delta)
-        })?;
+        let deltas: Vec<i64> = inner
+            .ctx
+            .cluster
+            .run_buckets("rset.sync", |b, disk| inner.sync_shard(b, disk))?;
         inner.size.fetch_add(deltas.iter().sum::<i64>(), Ordering::Relaxed);
         Ok(())
     }
@@ -150,7 +152,9 @@ impl<T: Element> RoomySet<T> {
         })
     }
 
-    /// Reduce over all elements (assoc + comm).
+    /// Reduce over all elements (assoc + comm). Shards reduce concurrently
+    /// on the pool; partials merge in shard order, independent of
+    /// `num_workers`.
     pub fn reduce<R: Send>(
         &self,
         identity: impl Fn() -> R + Sync,
@@ -158,21 +162,17 @@ impl<T: Element> RoomySet<T> {
         merge: impl Fn(R, R) -> R,
     ) -> Result<R> {
         let inner = &self.inner;
-        let partials: Vec<R> = inner.ctx.cluster.run("rset.reduce", |w, disk| {
-            let mut acc = identity();
-            for b in inner.ctx.cluster.buckets_of(w) {
-                let mut local = Some(std::mem::replace(&mut acc, identity()));
-                inner.scan_shard(b, disk, |rec| {
-                    let cur = local.take().expect("reduce accumulator");
-                    local = Some(fold(cur, &T::read_from(rec)));
-                    Ok(())
-                })?;
-                acc = local.take().expect("reduce accumulator");
-            }
-            Ok(acc)
+        let partials: Vec<R> = inner.ctx.cluster.run_buckets("rset.reduce", |b, disk| {
+            let mut local = Some(identity());
+            inner.scan_shard(b, disk, |rec| {
+                let cur = local.take().expect("reduce accumulator");
+                local = Some(fold(cur, &T::read_from(rec)));
+                Ok(())
+            })?;
+            Ok(local.take().expect("reduce accumulator"))
         })?;
         let mut it = partials.into_iter();
-        let first = it.next().expect("at least one worker");
+        let first = it.next().expect("at least one shard");
         Ok(it.fold(first, merge))
     }
 
@@ -186,12 +186,9 @@ impl<T: Element> RoomySet<T> {
                 "set algebra requires identical shard counts".into(),
             ));
         }
-        let deltas: Vec<i64> = inner.ctx.cluster.run("rset.merge", |w, disk| {
-            let mut delta = 0i64;
-            for b in inner.ctx.cluster.buckets_of(w) {
-                delta += inner.merge_shard(b, disk, &other.inner.shard_file(b), op)?;
-            }
-            Ok(delta)
+        let _write = inner.write_lock.lock().unwrap();
+        let deltas: Vec<i64> = inner.ctx.cluster.run_buckets("rset.merge", |b, disk| {
+            inner.merge_shard(b, disk, &other.inner.shard_file(b), op)
         })?;
         inner.size.fetch_add(deltas.iter().sum::<i64>(), Ordering::Relaxed);
         Ok(())
@@ -244,13 +241,7 @@ impl<T: Element> SetInner<T> {
         phase: &str,
         f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
     ) -> Result<()> {
-        let cluster = &self.ctx.cluster;
-        cluster.run(phase, |w, disk| {
-            for b in cluster.buckets_of(w) {
-                f(self, b, disk)?;
-            }
-            Ok(())
-        })?;
+        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())
     }
 

@@ -1,0 +1,80 @@
+//! Offline [`Engine`] stub: the build has no PJRT client (`xla` feature
+//! disabled), so artifact execution is unavailable and every accel caller
+//! falls back to the bit-exact Rust kernels in [`crate::accel`].
+//!
+//! [`Engine::load`] still validates `manifest.tsv` so configuration errors
+//! (missing directory, malformed manifest) surface identically to the real
+//! engine — but it never returns an instance, so the methods below exist
+//! only to satisfy the [`crate::accel`] call sites at compile time.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::TensorBuf;
+use crate::config::{AccelMode, RoomyConfig};
+use crate::error::{Result, RoomyError};
+
+/// PJRT engine handle (stub: can never be constructed).
+#[derive(Debug)]
+pub struct Engine {
+    _unconstructible: (),
+}
+
+impl Engine {
+    /// Validate the manifest, then fail: executing artifacts requires the
+    /// `xla` feature.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| RoomyError::io(&manifest, e))?;
+        let mut entries = 0usize;
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let (name, file) =
+                (cols.next().unwrap_or_default(), cols.next().unwrap_or_default());
+            if name.is_empty() || file.is_empty() {
+                return Err(RoomyError::InvalidArg(format!(
+                    "malformed manifest line: {line:?}"
+                )));
+            }
+            entries += 1;
+        }
+        Err(RoomyError::Xla(format!(
+            "{entries} artifacts found in {dir:?}, but this build has no PJRT client \
+             (enable the `xla` cargo feature); using Rust kernels"
+        )))
+    }
+
+    /// Resolve the engine implied by `cfg.accel`. Without the `xla`
+    /// feature this is always `None`; `AccelMode::Xla` warns.
+    pub fn from_config(cfg: &RoomyConfig) -> Option<Arc<Engine>> {
+        if cfg.accel == AccelMode::Xla {
+            eprintln!(
+                "roomy: warning: AccelMode::Xla requested but this build has no PJRT \
+                 client (enable the `xla` cargo feature); using Rust kernels"
+            );
+        }
+        None
+    }
+
+    /// Names of all known entry points (stub: unreachable).
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Whether entry point `name` is available (stub: unreachable).
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    /// Execute entry point `name` (stub: unreachable).
+    pub fn run(&self, name: &str, _inputs: Vec<TensorBuf>) -> Result<Vec<TensorBuf>> {
+        Err(RoomyError::Xla(format!(
+            "cannot execute {name:?}: built without the `xla` feature"
+        )))
+    }
+}

@@ -1,0 +1,321 @@
+//! The real PJRT [`Engine`] (feature `xla`): loads HLO-text artifacts and
+//! executes them on a dedicated device service thread. See the module docs
+//! in [`super`] for the threading model. Requires the vendored `xla`
+//! crate.
+//!
+//! (HLO *text*, not a serialized `HloModuleProto`, because jax ≥ 0.5 emits
+//! 64-bit instruction ids that the bundled xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids.)
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::{ArtifactInfo, TensorBuf};
+use crate::config::{AccelMode, RoomyConfig};
+use crate::error::{Result, RoomyError};
+
+impl TensorBuf {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            TensorBuf::U64 { data, dims } => xla::Literal::vec1(data).reshape(dims)?,
+            TensorBuf::I64 { data, dims } => xla::Literal::vec1(data).reshape(dims)?,
+            TensorBuf::U32 { data, dims } => xla::Literal::vec1(data).reshape(dims)?,
+            TensorBuf::I32 { data, dims } => xla::Literal::vec1(data).reshape(dims)?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<TensorBuf> {
+        let shape = lit.array_shape()?;
+        let dims = shape.dims().to_vec();
+        Ok(match shape.ty() {
+            xla::ElementType::U64 => TensorBuf::U64 { data: lit.to_vec()?, dims },
+            xla::ElementType::S64 => TensorBuf::I64 { data: lit.to_vec()?, dims },
+            xla::ElementType::U32 => TensorBuf::U32 { data: lit.to_vec()?, dims },
+            xla::ElementType::S32 => TensorBuf::I32 { data: lit.to_vec()?, dims },
+            other => {
+                return Err(RoomyError::Xla(format!(
+                    "unsupported output element type {other:?}"
+                )))
+            }
+        })
+    }
+}
+
+enum Request {
+    Run {
+        name: String,
+        inputs: Vec<TensorBuf>,
+        reply: mpsc::Sender<Result<Vec<TensorBuf>>>,
+    },
+    Shutdown,
+}
+
+/// PJRT engine handle: thread-safe, cheap to clone behind an `Arc`.
+pub struct Engine {
+    tx: mpsc::Sender<Request>,
+    artifacts: HashMap<String, ArtifactInfo>,
+    service: Option<std::thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("artifacts", &self.artifacts.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Load the manifest from `artifacts_dir` and start the device service
+    /// thread (which brings up the PJRT CPU client).
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| RoomyError::io(&manifest, e))?;
+        let mut artifacts = HashMap::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut cols = line.split('\t');
+            let (name, file, sig) = (
+                cols.next().unwrap_or_default(),
+                cols.next().unwrap_or_default(),
+                cols.next().unwrap_or_default(),
+            );
+            if name.is_empty() || file.is_empty() {
+                return Err(RoomyError::InvalidArg(format!(
+                    "malformed manifest line: {line:?}"
+                )));
+            }
+            artifacts.insert(
+                name.to_string(),
+                ArtifactInfo {
+                    name: name.to_string(),
+                    path: dir.join(file),
+                    signature: sig.to_string(),
+                },
+            );
+        }
+
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread_artifacts = artifacts.clone();
+        let service = std::thread::Builder::new()
+            .name("roomy-pjrt".into())
+            .spawn(move || service_loop(thread_artifacts, rx, ready_tx))
+            .map_err(|e| RoomyError::Xla(format!("failed to spawn pjrt thread: {e}")))?;
+        // Wait for the client to come up so load() fails fast.
+        ready_rx
+            .recv()
+            .map_err(|_| RoomyError::Xla("pjrt service thread died on startup".into()))??;
+        Ok(Engine { tx, artifacts, service: Some(service) })
+    }
+
+    /// Resolve the engine implied by `cfg.accel`:
+    /// `Rust` → `None`; `Auto` → engine iff the manifest exists; `Xla` →
+    /// engine, logging a warning (and returning `None`) if unavailable.
+    pub fn from_config(cfg: &RoomyConfig) -> Option<Arc<Engine>> {
+        match cfg.accel {
+            AccelMode::Rust => None,
+            AccelMode::Xla | AccelMode::Auto => {
+                let manifest = cfg.artifacts_dir.join("manifest.tsv");
+                if !manifest.exists() {
+                    if cfg.accel == AccelMode::Xla {
+                        eprintln!(
+                            "roomy: warning: AccelMode::Xla requested but {manifest:?} is \
+                             missing; falling back to Rust kernels (run `make artifacts`)"
+                        );
+                    }
+                    return None;
+                }
+                match Engine::load(&cfg.artifacts_dir) {
+                    Ok(e) => Some(Arc::new(e)),
+                    Err(e) => {
+                        eprintln!(
+                            "roomy: warning: failed to load XLA engine: {e}; using Rust kernels"
+                        );
+                        None
+                    }
+                }
+            }
+        }
+    }
+
+    /// Names of all known entry points.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Whether entry point `name` is available.
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    /// Execute entry point `name` with `inputs`; returns the decomposed
+    /// output tuple (aot.py lowers with `return_tuple=True`). Thread-safe.
+    pub fn run(&self, name: &str, inputs: Vec<TensorBuf>) -> Result<Vec<TensorBuf>> {
+        if !self.has(name) {
+            return Err(RoomyError::MissingArtifact { name: name.to_string() });
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Run { name: name.to_string(), inputs, reply })
+            .map_err(|_| RoomyError::Xla("pjrt service thread is gone".into()))?;
+        rx.recv()
+            .map_err(|_| RoomyError::Xla("pjrt service dropped the reply".into()))?
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.service.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Device service: owns the (non-Send) PJRT client and compile cache.
+fn service_loop(
+    artifacts: HashMap<String, ArtifactInfo>,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.into()));
+            return;
+        }
+    };
+    let mut exes: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Run { name, inputs, reply } => {
+                let result = run_one(&client, &artifacts, &mut exes, &name, inputs);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    artifacts: &HashMap<String, ArtifactInfo>,
+    exes: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    inputs: Vec<TensorBuf>,
+) -> Result<Vec<TensorBuf>> {
+    if !exes.contains_key(name) {
+        let info = artifacts.get(name).ok_or_else(|| RoomyError::MissingArtifact {
+            name: name.to_string(),
+        })?;
+        let path_str = info.path.to_str().ok_or_else(|| {
+            RoomyError::InvalidArg(format!("non-utf8 artifact path {:?}", info.path))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        exes.insert(name.to_string(), client.compile(&comp)?);
+    }
+    let exe = exes.get(name).expect("just inserted");
+    let literals: Vec<xla::Literal> =
+        inputs.iter().map(|b| b.to_literal()).collect::<Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?;
+    let out = result
+        .first()
+        .and_then(|r| r.first())
+        .ok_or_else(|| RoomyError::Xla("empty execution result".into()))?
+        .to_literal_sync()?;
+    out.to_tuple()?.iter().map(TensorBuf::from_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HASH_BATCH;
+
+    /// Engine against the real artifacts dir, if built (unit-level smoke;
+    /// full numeric checks live in rust/tests/integration_runtime.rs).
+    fn real_engine() -> Option<Engine> {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            Some(Engine::load(dir).expect("engine load"))
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_and_unknown_name_errors() {
+        let Some(e) = real_engine() else { return };
+        assert!(e.has("hash_partition_k1"), "manifest should list hashpart");
+        assert!(e.has("prefix_scan"));
+        assert!(matches!(
+            e.run("not_a_kernel", vec![]),
+            Err(RoomyError::MissingArtifact { .. })
+        ));
+    }
+
+    #[test]
+    fn hash_partition_executes_and_matches_rust_twin() {
+        let Some(e) = real_engine() else { return };
+        let mut words = vec![0u64; HASH_BATCH];
+        for (i, w) in words.iter_mut().enumerate() {
+            *w = (i as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ 0xABCD;
+        }
+        let nb = 37u64;
+        let out = e
+            .run(
+                "hash_partition_k1",
+                vec![
+                    TensorBuf::u64_2d(words.clone(), HASH_BATCH, 1),
+                    TensorBuf::u64_1d(vec![nb]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let mut it = out.into_iter();
+        let fp = it.next().unwrap().into_u64().unwrap();
+        let bucket = it.next().unwrap().into_u64().unwrap();
+        for i in 0..HASH_BATCH {
+            let expect_fp = crate::hashfn::fp_words(&[words[i]]);
+            assert_eq!(fp[i], expect_fp, "fp mismatch at {i}");
+            assert_eq!(bucket[i], crate::hashfn::bucket_of(expect_fp, nb as u32) as u64);
+        }
+    }
+
+    #[test]
+    fn engine_usable_from_many_threads() {
+        let Some(e) = real_engine() else { return };
+        let e = std::sync::Arc::new(e);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let e = e.clone();
+                s.spawn(move || {
+                    let words = vec![t as u64; HASH_BATCH];
+                    let out = e
+                        .run(
+                            "hash_partition_k1",
+                            vec![
+                                TensorBuf::u64_2d(words, HASH_BATCH, 1),
+                                TensorBuf::u64_1d(vec![8]),
+                            ],
+                        )
+                        .unwrap();
+                    let fp = out.into_iter().next().unwrap().into_u64().unwrap();
+                    assert_eq!(fp[0], crate::hashfn::fp_words(&[t as u64]));
+                });
+            }
+        });
+    }
+}

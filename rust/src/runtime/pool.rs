@@ -1,0 +1,434 @@
+//! Worker-pool execution engine for Roomy collectives.
+//!
+//! A [`WorkerPool`] fans a set of **independent bucket tasks** out to
+//! `num_workers` scoped worker threads. Workers claim tasks dynamically
+//! (an atomic cursor — cheap work stealing, so a skewed bucket does not
+//! stall the others), and three mechanisms keep the result *observably
+//! identical* to a serial run regardless of worker count or schedule:
+//!
+//! 1. results are returned **indexed by task** (ascending bucket order),
+//!    never in completion order;
+//! 2. delayed operations issued by user functions *during* a task are
+//!    **captured** into a per-task write buffer and replayed into the
+//!    destination [`StagedOps`] only after the barrier, in (task index,
+//!    issue order) — exactly the byte order a serial run produces;
+//! 3. errors and panics are reported for the **lowest-index** failing
+//!    task, not whichever thread lost the race.
+//!
+//! The pool uses `std::thread::scope`, so task closures may borrow from
+//! the caller; worker threads live for one collective. Thread-locals
+//! (e.g. the op-encode scratch in [`crate::roomy::ops`]) are therefore
+//! genuinely *per-worker* scratch — every worker thread owns a private
+//! instance for the duration of the collective.
+//!
+//! Nested collectives are not supported from inside task closures: a task
+//! may *stage* delayed ops on any structure, but must not invoke another
+//! structure's `sync`/`map`/`reduce` (the inner barrier would replay its
+//! captured ops out of order with respect to the outer collective).
+//!
+//! Space note: captured ops live in RAM until the barrier (the
+//! destination `SpillBuffer`s only see them at replay), so a collective
+//! that issues O(per-task ops) holds that many encoded records in memory
+//! per in-flight task. Direct (outside-collective) staging keeps the
+//! seed's spill-at-threshold bound. Spilling capture arenas per task is
+//! recorded as an open item in ROADMAP.md.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{Result, RoomyError};
+use crate::metrics::PoolStats;
+use crate::roomy::ops::StagedOps;
+
+/// Per-task log of delayed ops issued while the task ran. Records are
+/// appended to one arena (`bytes`) in issue order; `entries` names the
+/// destination of each record.
+#[derive(Default)]
+pub(crate) struct OpCapture {
+    /// `(destination staging, destination bucket, record length)` per op.
+    entries: Vec<(Arc<StagedOps>, u32, u32)>,
+    /// Concatenated record bytes, aligned with `entries`.
+    bytes: Vec<u8>,
+}
+
+impl OpCapture {
+    fn push(&mut self, sink: Arc<StagedOps>, bucket: u32, rec: &[u8]) {
+        self.entries.push((sink, bucket, rec.len() as u32));
+        self.bytes.extend_from_slice(rec);
+    }
+
+    /// Apply every captured op to its destination, in issue order.
+    fn replay(&self) -> Result<()> {
+        let mut off = 0usize;
+        for (sink, bucket, len) in &self.entries {
+            let end = off + *len as usize;
+            sink.stage_direct(*bucket, &self.bytes[off..end])?;
+            off = end;
+        }
+        Ok(())
+    }
+}
+
+/// Per-thread task context, present only while a pool worker is inside a
+/// task closure.
+struct TaskCtx {
+    worker: usize,
+    capture: OpCapture,
+}
+
+thread_local! {
+    static TASK: RefCell<Option<TaskCtx>> = const { RefCell::new(None) };
+}
+
+/// Cheap probe: is the calling thread inside a pool task (capture armed)?
+pub(crate) fn capture_active() -> bool {
+    TASK.with(|t| t.borrow().is_some())
+}
+
+/// Capture `rec` into the current task's op log, if the calling thread is
+/// inside a pool task. Returns `false` when no task is active (the caller
+/// should stage directly).
+pub(crate) fn try_capture(sink: &Arc<StagedOps>, bucket: u32, rec: &[u8]) -> bool {
+    TASK.with(|t| match t.borrow_mut().as_mut() {
+        Some(ctx) => {
+            ctx.capture.push(Arc::clone(sink), bucket, rec);
+            true
+        }
+        None => false,
+    })
+}
+
+/// Pool worker slot of the calling thread, if it is currently executing a
+/// pool task (per-worker scratch, diagnostics).
+pub fn current_worker() -> Option<usize> {
+    TASK.with(|t| t.borrow().as_ref().map(|c| c.worker))
+}
+
+/// One finished task, tagged with its index for deterministic merging.
+struct Done<R> {
+    task: usize,
+    result: Result<R>,
+    capture: OpCapture,
+}
+
+/// Fixed-width worker pool executing per-bucket collective tasks. One
+/// pool lives in each [`crate::cluster::Cluster`]; worker threads are
+/// scoped per collective (no idle threads between collectives).
+#[derive(Debug)]
+pub struct WorkerPool {
+    workers: usize,
+    stats: PoolStats,
+}
+
+impl WorkerPool {
+    /// Pool of `workers` threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        WorkerPool { workers, stats: PoolStats::new(workers) }
+    }
+
+    /// Configured worker count.
+    pub fn num_workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Per-worker execution counters.
+    pub fn stats(&self) -> &PoolStats {
+        &self.stats
+    }
+
+    /// Run `job(task)` for every `task` in `0..ntasks` across the pool and
+    /// return the results **in task order**. Delayed ops issued inside
+    /// `job` are captured per task and replayed in (task, issue) order
+    /// after all tasks complete — see the module docs for why this makes
+    /// the schedule invisible.
+    ///
+    /// On failure the error of the lowest-index failing task is returned
+    /// (a panic in task `t` beats an `Err` from any task after `t`);
+    /// captured ops are *not* replayed, matching the undefined partial
+    /// state any failed collective leaves on disk.
+    pub fn run_tasks<R, F>(&self, phase: &str, ntasks: usize, job: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(usize) -> Result<R> + Sync,
+    {
+        if ntasks == 0 {
+            return Ok(Vec::new());
+        }
+        let nthreads = self.workers.min(ntasks);
+        let cursor = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+
+        let outs: Vec<(Vec<Done<R>>, Option<(usize, usize)>)> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..nthreads)
+                    .map(|wid| {
+                        let (cursor, abort, job, stats) =
+                            (&cursor, &abort, &job, &self.stats);
+                        scope.spawn(move || {
+                            let mut done: Vec<Done<R>> = Vec::new();
+                            let mut panicked: Option<(usize, usize)> = None;
+                            while !abort.load(Ordering::Relaxed) {
+                                let t = cursor.fetch_add(1, Ordering::Relaxed);
+                                if t >= ntasks {
+                                    break;
+                                }
+                                let t0 = Instant::now();
+                                TASK.with(|c| {
+                                    *c.borrow_mut() = Some(TaskCtx {
+                                        worker: wid,
+                                        capture: OpCapture::default(),
+                                    })
+                                });
+                                let r = catch_unwind(AssertUnwindSafe(|| job(t)));
+                                let ctx = TASK
+                                    .with(|c| c.borrow_mut().take())
+                                    .expect("pool task context vanished");
+                                stats.charge(wid, t0.elapsed());
+                                match r {
+                                    Ok(result) => {
+                                        if result.is_err() {
+                                            abort.store(true, Ordering::Relaxed);
+                                        }
+                                        done.push(Done {
+                                            task: t,
+                                            result,
+                                            capture: ctx.capture,
+                                        });
+                                    }
+                                    Err(_) => {
+                                        panicked = Some((t, wid));
+                                        abort.store(true, Ordering::Relaxed);
+                                        break;
+                                    }
+                                }
+                            }
+                            (done, panicked)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("pool worker thread died outside a task"))
+                    .collect()
+            });
+
+        // Deterministic merge: order everything by task index, then report
+        // the lowest-index failure (panic wins ties with itself only).
+        let mut all: Vec<Done<R>> = Vec::with_capacity(ntasks);
+        let mut panic_at: Option<(usize, usize)> = None;
+        for (done, p) in outs {
+            all.extend(done);
+            if let Some((t, w)) = p {
+                panic_at = Some(match panic_at {
+                    Some((pt, pw)) if pt <= t => (pt, pw),
+                    _ => (t, w),
+                });
+            }
+        }
+        all.sort_by_key(|d| d.task);
+
+        let first_err_task = all.iter().find(|d| d.result.is_err()).map(|d| d.task);
+        if let Some((pt, pw)) = panic_at {
+            if first_err_task.is_none_or(|et| pt < et) {
+                return Err(RoomyError::WorkerPanic {
+                    worker: pw,
+                    phase: phase.to_string(),
+                });
+            }
+        }
+
+        let mut results = Vec::with_capacity(ntasks);
+        let mut captures = Vec::with_capacity(ntasks);
+        for d in all {
+            match d.result {
+                Ok(r) => {
+                    results.push(r);
+                    captures.push(d.capture);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        debug_assert_eq!(results.len(), ntasks, "abort never set ⇒ all tasks ran");
+
+        // Post-barrier replay: (task index, issue order) == serial order.
+        for cap in &captures {
+            cap.replay()?;
+        }
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::RoomyConfig;
+    use crate::testutil::tmpdir;
+
+    fn pool(n: usize) -> WorkerPool {
+        WorkerPool::new(n)
+    }
+
+    #[test]
+    fn results_come_back_in_task_order() {
+        for workers in [1, 2, 4, 7] {
+            let p = pool(workers);
+            let out = p
+                .run_tasks("t", 33, |t| {
+                    // stagger completion to scramble the schedule
+                    if t % 3 == 0 {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                    Ok(t * 10)
+                })
+                .unwrap();
+            assert_eq!(out, (0..33).map(|t| t * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_empty() {
+        let p = pool(4);
+        let out: Vec<u32> = p.run_tasks("t", 0, |_| Ok(1)).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn workers_clamped_to_one() {
+        let p = pool(0);
+        assert_eq!(p.num_workers(), 1);
+        let out = p.run_tasks("t", 3, Ok).unwrap();
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn parallelism_is_real() {
+        // With 4 workers and 4 tasks, all tasks must be in flight at once.
+        let p = pool(4);
+        let barrier = std::sync::Barrier::new(4);
+        p.run_tasks("t", 4, |_t| {
+            barrier.wait();
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        let p = pool(4);
+        let r: Result<Vec<()>> = p.run_tasks("t", 16, |t| {
+            if t >= 3 {
+                Err(RoomyError::InvalidArg(format!("task {t}")))
+            } else {
+                Ok(())
+            }
+        });
+        match r {
+            Err(RoomyError::InvalidArg(msg)) => assert_eq!(msg, "task 3"),
+            other => panic!("expected InvalidArg, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn panic_becomes_worker_panic() {
+        let p = pool(2);
+        let r: Result<Vec<()>> = p.run_tasks("boom-phase", 8, |t| {
+            if t == 1 {
+                panic!("task exploded");
+            }
+            Ok(())
+        });
+        match r {
+            Err(RoomyError::WorkerPanic { phase, .. }) => assert_eq!(phase, "boom-phase"),
+            other => panic!("expected WorkerPanic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn current_worker_visible_inside_tasks_only() {
+        assert_eq!(current_worker(), None);
+        let p = pool(3);
+        p.run_tasks("t", 9, |_t| {
+            let w = current_worker().expect("inside a task");
+            assert!(w < 3);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(current_worker(), None);
+    }
+
+    #[test]
+    fn stats_count_every_task() {
+        let p = pool(2);
+        p.run_tasks("t", 10, |_| Ok(())).unwrap();
+        assert_eq!(p.stats().total_tasks(), 10);
+        p.stats().reset();
+        assert_eq!(p.stats().total_tasks(), 0);
+    }
+
+    /// Captured ops must replay in (task, issue) order — the serial byte
+    /// order — no matter how many workers race.
+    #[test]
+    fn capture_replays_in_serial_order() {
+        let t = tmpdir("pool_capture");
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 2;
+        cfg.buckets_per_worker = 1;
+        let cluster = Cluster::new(&cfg).unwrap();
+        let staged = StagedOps::new(&cluster, "cap", 1 << 20);
+
+        let mut reference: Option<Vec<u8>> = None;
+        for workers in [1usize, 2, 4] {
+            let p = pool(workers);
+            p.run_tasks("t", 8, |task| {
+                // jitter the schedule
+                if task % 2 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(150));
+                }
+                for k in 0..3u8 {
+                    staged.stage(0, &[task as u8, k])?;
+                }
+                Ok(())
+            })
+            .unwrap();
+
+            let buf = staged.take(0, &cluster, "cap", 1 << 20);
+            let mut r = buf.reader().unwrap();
+            let mut got = Vec::new();
+            let mut rec = [0u8; 2];
+            while r.read_exact_or_eof(&mut rec).unwrap() {
+                got.extend_from_slice(&rec);
+            }
+            match &reference {
+                None => {
+                    // serial (1 worker) defines the canonical order:
+                    // task-major, issue-minor
+                    let expect: Vec<u8> = (0..8u8)
+                        .flat_map(|t| (0..3u8).map(move |k| [t, k]))
+                        .flatten()
+                        .collect();
+                    assert_eq!(got, expect);
+                    reference = Some(got);
+                }
+                Some(r0) => assert_eq!(&got, r0, "workers={workers} diverged"),
+            }
+        }
+    }
+
+    /// Ops staged outside any pool task go straight to the buffer.
+    #[test]
+    fn direct_staging_outside_pool() {
+        let t = tmpdir("pool_direct");
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 1;
+        cfg.buckets_per_worker = 1;
+        let cluster = Cluster::new(&cfg).unwrap();
+        let staged = StagedOps::new(&cluster, "d", 64);
+        staged.stage(0, &[1, 2, 3]).unwrap();
+        assert_eq!(staged.staged_bytes(), 3);
+    }
+}

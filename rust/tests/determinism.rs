@@ -1,0 +1,286 @@
+//! Parallel == serial, byte for byte.
+//!
+//! Every collective runs its buckets on the worker pool
+//! (`roomy::runtime::pool`); these tests prove the pool's three
+//! determinism rules (bucket isolation, merge-by-bucket-index, per-task
+//! delayed-op capture) by running identical randomized workloads with
+//! `num_workers` ∈ {1, 2, 4} and demanding **identical on-disk bytes**
+//! (full recursive digest of the instance root) and identical
+//! order-sensitive reduce results.
+
+use std::path::Path;
+
+use roomy::constructs::bfs;
+use roomy::testutil::{tmpdir, Rng};
+use roomy::{Roomy, RoomyConfig};
+
+/// FNV-1a over every file under `root`: (sorted relative path, contents).
+fn dir_digest(root: &Path) -> u64 {
+    fn collect(base: &Path, dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                collect(base, &p, out);
+            } else {
+                out.push(p.strip_prefix(base).unwrap().to_path_buf());
+            }
+        }
+    }
+    let mut files = Vec::new();
+    collect(root, root, &mut files);
+    files.sort();
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for rel in files {
+        eat(rel.to_string_lossy().as_bytes());
+        eat(&[0]);
+        eat(&std::fs::read(root.join(&rel)).unwrap());
+        eat(&[0xFF]);
+    }
+    h
+}
+
+/// Run `workload` once per worker count; the workload returns an optional
+/// order-sensitive value that must also match. Asserts equal digests.
+fn assert_deterministic(tag: &str, workload: impl Fn(&Roomy, &mut Rng) -> u64) {
+    let mut outcomes = Vec::new();
+    for &nw in &[1usize, 2, 4] {
+        let t = tmpdir(&format!("det_{tag}_{nw}"));
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 3; // uneven bucket→node split
+        cfg.buckets_per_worker = 2;
+        cfg.num_workers = nw;
+        cfg.op_buffer_bytes = 256; // force staging spills
+        let r = Roomy::open(cfg).unwrap();
+        let mut rng = Rng::new(0xD15EA5E); // identical input per worker count
+        let value = workload(&r, &mut rng);
+        let digest = dir_digest(t.path());
+        outcomes.push((nw, value, digest));
+    }
+    let (_, v0, d0) = outcomes[0];
+    for (nw, v, d) in &outcomes[1..] {
+        assert_eq!(*v, v0, "{tag}: value diverged at num_workers={nw}");
+        assert_eq!(*d, d0, "{tag}: on-disk bytes diverged at num_workers={nw}");
+    }
+}
+
+/// Order-sensitive fold (neither associative nor commutative): any change
+/// in merge order changes the result.
+fn order_hash(acc: u64, v: u64) -> u64 {
+    acc.wrapping_mul(0x9E3779B97F4A7C15) ^ v
+}
+
+#[test]
+fn det_array_map_update_sync_reduce() {
+    assert_deterministic("array", |r, rng| {
+        let n = 997u64;
+        let ra = r.array::<u64>("a", n, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut u64, p: &u64| *v = v.wrapping_add(*p));
+        let set = ra.register_update(|i, v: &mut u64, p: &u64| *v = *p ^ i);
+        for _round in 0..3 {
+            for _ in 0..800 {
+                let i = rng.below(n);
+                let p = rng.next_u64() >> 32;
+                if rng.chance(0.7) {
+                    ra.update(i, &p, add).unwrap();
+                } else {
+                    ra.update(i, &p, set).unwrap();
+                }
+            }
+            ra.sync().unwrap();
+        }
+        // map that issues delayed ops on another structure from inside the
+        // collective (the capture path)
+        let rl = r.list::<u64>("spill").unwrap();
+        let rl2 = rl.clone();
+        ra.map(move |i, v| {
+            if v % 3 == 0 {
+                rl2.add(&(i ^ v)).unwrap();
+            }
+        })
+        .unwrap();
+        rl.sync().unwrap();
+        // order-sensitive reduce over both
+        let h1 = ra
+            .reduce(|| 0u64, |acc, i, v| order_hash(acc, i ^ *v), order_hash)
+            .unwrap();
+        let h2 = rl.reduce(|| h1, |acc, v| order_hash(acc, *v), order_hash).unwrap();
+        h2
+    });
+}
+
+#[test]
+fn det_list_dupelim_and_set_algebra() {
+    assert_deterministic("listset", |r, rng| {
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for _ in 0..2_000 {
+            a.add(&rng.below(500)).unwrap();
+            if rng.chance(0.6) {
+                b.add(&rng.below(500)).unwrap();
+            }
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        // dup elimination (per-shard external sort on the pool)
+        a.remove_dupes().unwrap();
+        b.remove_dupes().unwrap();
+        // union then difference via the paper's constructions
+        roomy::constructs::setops::union_into(&a, &b).unwrap();
+        roomy::constructs::setops::difference_into(&a, &b).unwrap();
+        let c = roomy::constructs::setops::intersection(&r, "c", &a, &b).unwrap();
+        let h = a
+            .reduce(|| 0u64, |acc, v| order_hash(acc, *v), order_hash)
+            .unwrap();
+        c.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap()
+    });
+}
+
+#[test]
+fn det_native_set_union_intersect_difference() {
+    assert_deterministic("rset", |r, rng| {
+        let a = r.set::<u64>("a").unwrap();
+        let b = r.set::<u64>("b").unwrap();
+        for _ in 0..1_500 {
+            let v = rng.below(400);
+            if rng.chance(0.8) {
+                a.add(&v).unwrap();
+            } else {
+                a.remove(&v).unwrap();
+            }
+            if rng.chance(0.5) {
+                b.add(&rng.below(400)).unwrap();
+            }
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        let u = r.set::<u64>("u").unwrap();
+        u.union_with(&a).unwrap();
+        u.union_with(&b).unwrap();
+        let i = r.set::<u64>("i").unwrap();
+        i.union_with(&a).unwrap();
+        i.intersect_with(&b).unwrap();
+        a.difference_with(&b).unwrap();
+        let h = u
+            .reduce(|| 0u64, |acc, v| order_hash(acc, *v), order_hash)
+            .unwrap();
+        i.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap()
+    });
+}
+
+#[test]
+fn det_hashtable_upserts() {
+    assert_deterministic("ht", |r, rng| {
+        let ht = r.hash_table::<u64, u64>("h").unwrap();
+        let bump = ht.register_update(|k, cur: Option<&u64>, p: &u64| {
+            Some(cur.copied().unwrap_or(*k).wrapping_add(*p))
+        });
+        for _round in 0..3 {
+            for _ in 0..700 {
+                let k = rng.below(300);
+                match rng.range(0, 4) {
+                    0 => ht.insert(&k, &rng.next_u64()).unwrap(),
+                    1 => ht.remove(&k).unwrap(),
+                    _ => ht.update(&k, &(rng.next_u64() >> 40), bump).unwrap(),
+                }
+            }
+            ht.sync().unwrap();
+        }
+        ht.reduce(|| 0u64, |acc, k, v| order_hash(acc, k ^ v), order_hash).unwrap()
+    });
+}
+
+#[test]
+fn det_bitarray_updates() {
+    assert_deterministic("bits", |r, rng| {
+        let ba = r.bit_array("b", 4_096, 2).unwrap();
+        let bump = ba.register_update(|_i, cur, p: &u8| cur.wrapping_add(*p) & 3);
+        for _round in 0..2 {
+            for _ in 0..1_500 {
+                ba.update(rng.below(4_096), &((rng.below(3) + 1) as u8), bump).unwrap();
+            }
+            ba.sync().unwrap();
+        }
+        (0..4u8).fold(0u64, |acc, v| order_hash(acc, ba.count_value(v)))
+    });
+}
+
+/// One BFS level expansion through the hash-table driver: the visit
+/// function emits next-level states from *inside* `table.sync` — the
+/// canonical delayed-op capture scenario.
+#[test]
+fn det_bfs_level_expansion() {
+    assert_deterministic("bfs_level", |r, rng| {
+        let table = r.hash_table::<u64, u32>("levels").unwrap();
+        let cur = r.list::<u64>("cur").unwrap();
+        let next = r.list::<u64>("next").unwrap();
+        let frontier: Vec<u64> = (0..64).map(|_| rng.below(1 << 14)).collect();
+        for s in &frontier {
+            table.insert(s, &0).unwrap();
+            cur.add(s).unwrap();
+        }
+        table.sync().unwrap();
+        cur.sync().unwrap();
+        cur.remove_dupes().unwrap();
+
+        let next_emit = next.clone();
+        let visit = table.register_update(move |k: &u64, cur_v: Option<&u32>, _p: &()| {
+            match cur_v {
+                Some(&v) => Some(v),
+                None => {
+                    next_emit.add(k).expect("emit");
+                    Some(1)
+                }
+            }
+        });
+        let table2 = table.clone();
+        cur.map(move |&v| {
+            for bit in 0..14u32 {
+                table2.update(&(v ^ (1 << bit)), &(), visit).unwrap();
+            }
+        })
+        .unwrap();
+        table.sync().unwrap();
+        next.sync().unwrap();
+        next.remove_dupes().unwrap();
+        let h = table
+            .reduce(|| 0u64, |acc, k, v| order_hash(acc, k ^ *v as u64), order_hash)
+            .unwrap();
+        next.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap()
+    });
+}
+
+/// Full BFS drivers agree (level profile and totals) across worker counts.
+#[test]
+fn det_full_bfs_levels() {
+    let mut profiles = Vec::new();
+    for &nw in &[1usize, 2, 4] {
+        let t = tmpdir(&format!("det_bfs_{nw}"));
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.num_workers = nw;
+        let r = Roomy::open(cfg).unwrap();
+        let d = 7u32;
+        let stats = bfs::bfs_hash_batched(&r, "cube", &[0u64], |batch, out| {
+            for &v in batch {
+                for b in 0..d {
+                    out.push(v ^ (1 << b));
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        profiles.push((nw, stats));
+    }
+    for (nw, s) in &profiles[1..] {
+        assert_eq!(
+            s, &profiles[0].1,
+            "BFS level profile diverged at num_workers={nw}"
+        );
+    }
+}

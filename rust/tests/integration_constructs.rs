@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 fn accel_xla() -> Option<Accel> {
     if artifacts_present() {
-        Some(Accel::xla(Arc::new(roomy::runtime::Engine::load("artifacts").unwrap())))
+        roomy::runtime::Engine::load("artifacts").ok().map(|e| Accel::xla(Arc::new(e)))
     } else {
         None
     }

@@ -1,0 +1,147 @@
+//! End-to-end exercise of the worker-pool execution engine: the paper's
+//! flagship pancake-sort BFS at n = 7 on a 4-wide pool, and a concurrency
+//! stress test hammering one Roomy instance (and therefore one pool and
+//! one PJRT-style shared engine path) from many client threads at once.
+
+mod common;
+
+use common::roomy_with;
+use roomy::accel::Accel;
+use roomy::apps::pancake::{self, Structure};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Pancake BFS for n = 7 must reproduce the known level profile (it sums
+/// to 7! = 5040 and its depth is the pancake number f(7) = 8) with the
+/// pool at full width.
+#[test]
+fn pancake_n7_level_profile_under_pool() {
+    let (_t, r) = roomy_with("pool_pancake7", |c| {
+        c.num_workers = 4;
+        c.buckets_per_worker = 2;
+    });
+    let stats = pancake::roomy_bfs(&r, 7, Structure::Hash, &Accel::rust()).unwrap();
+    let expect = pancake::reference_bfs(7);
+    assert_eq!(stats.levels, expect, "level profile");
+    assert_eq!(stats.total, pancake::factorial(7));
+    assert_eq!(stats.depth(), pancake::pancake_number(7).unwrap());
+    // the pool actually ran bucket tasks
+    assert!(r.cluster().pool().stats().total_tasks() > 0);
+    // per-worker counters add up and the report mentions the pool
+    let per: u64 = r
+        .cluster()
+        .pool()
+        .stats()
+        .per_worker()
+        .iter()
+        .map(|(t, _)| t)
+        .sum();
+    assert_eq!(per, r.cluster().pool().stats().total_tasks());
+    assert!(r.report().contains("pool (4 workers)"), "{}", r.report());
+}
+
+/// The list variant agrees with the hash variant at n = 6 under the pool
+/// (cross-driver agreement exercises sort-based and bucket-based dedup).
+#[test]
+fn pancake_variants_agree_under_pool() {
+    for structure in [Structure::List, Structure::Array] {
+        let (_t, r) = roomy_with("pool_pancake6", |c| c.num_workers = 4);
+        let stats = pancake::roomy_bfs(&r, 6, structure, &Accel::rust()).unwrap();
+        assert_eq!(stats.levels, pancake::reference_bfs(6), "{structure:?}");
+    }
+}
+
+/// Many client threads hammer one instance concurrently: delayed ops are
+/// issued from all of them, several threads call collectives (sync / map /
+/// reduce) at the same time, and the final state must account for every
+/// single op.
+#[test]
+fn concurrent_clients_one_pool_stress() {
+    let (_t, r) = roomy_with("pool_stress", |c| {
+        c.num_workers = 4;
+        c.workers = 2;
+        c.buckets_per_worker = 2;
+        c.op_buffer_bytes = 512; // force spill churn under contention
+    });
+    let n = 512u64;
+    let ra = r.array::<u64>("shared", n, 0).unwrap();
+    let add = ra.register_update(|_i, v: &mut u64, p: &u64| *v = v.wrapping_add(*p));
+    let rl = r.list::<u64>("events").unwrap();
+
+    let issued_sum = AtomicU64::new(0);
+    let issued_adds = AtomicU64::new(0);
+    let nthreads = 8usize;
+    let per_thread = 2_000u64;
+
+    std::thread::scope(|s| {
+        for tid in 0..nthreads {
+            let (ra, rl) = (ra.clone(), rl.clone());
+            let (issued_sum, issued_adds) = (&issued_sum, &issued_adds);
+            s.spawn(move || {
+                let mut rng = roomy::testutil::Rng::new(tid as u64 + 1);
+                for k in 0..per_thread {
+                    let i = rng.below(n);
+                    let p = rng.below(1_000) + 1;
+                    ra.update(i, &p, add).unwrap();
+                    issued_sum.fetch_add(p, Ordering::Relaxed);
+                    rl.add(&(tid as u64 * per_thread + k)).unwrap();
+                    issued_adds.fetch_add(1, Ordering::Relaxed);
+                    // a few threads run collectives mid-stream
+                    if k % 701 == 0 && tid % 3 == 0 {
+                        ra.sync().unwrap();
+                    }
+                    if k % 907 == 0 && tid % 3 == 1 {
+                        rl.sync().unwrap();
+                        let _ = rl.size();
+                    }
+                    if k % 1301 == 0 && tid % 3 == 2 {
+                        // read-only collective racing the writers
+                        let _ = ra
+                            .reduce(|| 0u64, |a, _i, v| a.wrapping_add(*v), |a, b| {
+                                a.wrapping_add(b)
+                            })
+                            .unwrap();
+                    }
+                }
+            });
+        }
+    });
+
+    // Drain everything that is still staged.
+    ra.sync().unwrap();
+    rl.sync().unwrap();
+
+    let total = ra
+        .reduce(|| 0u64, |a, _i, v| a.wrapping_add(*v), |a, b| a.wrapping_add(b))
+        .unwrap();
+    assert_eq!(total, issued_sum.load(Ordering::Relaxed), "no update lost or doubled");
+    assert_eq!(rl.size(), issued_adds.load(Ordering::Relaxed), "no add lost");
+    // every event id exactly once
+    rl.remove_dupes().unwrap();
+    assert_eq!(rl.size(), (nthreads as u64) * per_thread);
+}
+
+/// Collectives from multiple threads at once on the same structure.
+#[test]
+fn concurrent_collectives_do_not_interleave_state() {
+    let (_t, r) = roomy_with("pool_concurrent_maps", |c| c.num_workers = 4);
+    let ra = r.array::<u64>("a", 1_000, 1).unwrap();
+    std::thread::scope(|s| {
+        for _ in 0..6 {
+            let ra = ra.clone();
+            s.spawn(move || {
+                for _ in 0..5 {
+                    let sum = ra
+                        .reduce(|| 0u64, |a, _i, v| a + v, |a, b| a + b)
+                        .unwrap();
+                    assert_eq!(sum, 1_000);
+                    let count = std::sync::atomic::AtomicU64::new(0);
+                    ra.map(|_i, _v| {
+                        count.fetch_add(1, Ordering::Relaxed);
+                    })
+                    .unwrap();
+                    assert_eq!(count.into_inner(), 1_000);
+                }
+            });
+        }
+    });
+}

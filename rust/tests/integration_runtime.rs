@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 fn engine() -> Option<Arc<Engine>> {
     if artifacts_present() {
-        Some(Arc::new(Engine::load("artifacts").unwrap()))
+        Engine::load("artifacts").ok().map(Arc::new)
     } else {
         None
     }

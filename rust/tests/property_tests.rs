@@ -223,6 +223,188 @@ fn prop_pancake_small_n_random_config() {
     });
 }
 
+// ---------------------------------------------------------------------
+// storage/extsort.rs invariants: sortedness, no element loss or
+// duplication across chunk/run boundaries, determinism, dedup = unique.
+// ---------------------------------------------------------------------
+
+fn extsort_disk(dir: &std::path::Path) -> roomy::storage::NodeDisk {
+    roomy::storage::NodeDisk::create(0, dir, roomy::DiskPolicy::unthrottled()).unwrap()
+}
+
+fn write_records(d: &roomy::storage::NodeDisk, rel: &str, recs: &[Vec<u8>], rec_size: usize) {
+    let mut w = roomy::storage::RecordWriter::create(d, rel, rec_size).unwrap();
+    for r in recs {
+        w.push(r).unwrap();
+    }
+    w.finish().unwrap();
+}
+
+fn read_records(d: &roomy::storage::NodeDisk, rel: &str, rec_size: usize) -> Vec<Vec<u8>> {
+    let mut out = vec![];
+    roomy::storage::chunkfile::for_each_record(d, rel, rec_size, 128, |rec| {
+        out.push(rec.to_vec());
+        Ok(())
+    })
+    .unwrap();
+    out
+}
+
+#[test]
+fn prop_extsort_sorted_and_lossless_across_chunk_boundaries() {
+    prop_check("extsort sorted + lossless", 15, |rng| {
+        let t = roomy::testutil::tmpdir("pt_extsort");
+        let d = extsort_disk(t.path());
+        // variable record size stresses batch/boundary arithmetic
+        let rec_size = [2usize, 4, 7, 16][rng.range(0, 4)];
+        let n = rng.range(0, 600);
+        let recs: Vec<Vec<u8>> = (0..n).map(|_| rng.bytes(rec_size)).collect();
+        write_records(&d, "in.dat", &recs, rec_size);
+        // tiny chunks force many runs; every boundary is exercised
+        let chunk = rng.range(rec_size, rec_size * 9);
+        let written = roomy::storage::extsort::sort_file(
+            &d, "in.dat", "out.dat", rec_size, chunk, false,
+        )
+        .unwrap();
+        assert_eq!(written as usize, n, "no element lost or duplicated");
+        assert!(roomy::storage::extsort::is_sorted(&d, "out.dat", rec_size).unwrap());
+        // multiset preservation: sorted input == sorted output
+        let mut expect = recs.clone();
+        expect.sort();
+        assert_eq!(read_records(&d, "out.dat", rec_size), expect);
+        // determinism/idempotence: sorting the sorted file is the identity
+        roomy::storage::extsort::sort_file(&d, "out.dat", "out2.dat", rec_size, chunk, false)
+            .unwrap();
+        assert_eq!(read_records(&d, "out2.dat", rec_size), expect);
+    });
+}
+
+#[test]
+fn prop_extsort_dedup_is_sorted_unique() {
+    prop_check("extsort dedup == sorted unique", 12, |rng| {
+        let t = roomy::testutil::tmpdir("pt_extsort_dd");
+        let d = extsort_disk(t.path());
+        let n = rng.range(0, 500);
+        // small value domain for heavy duplication
+        let recs: Vec<Vec<u8>> = (0..n)
+            .map(|_| (rng.below(40) as u32).to_be_bytes().to_vec())
+            .collect();
+        write_records(&d, "in.dat", &recs, 4);
+        let chunk = rng.range(4, 64);
+        let written =
+            roomy::storage::extsort::sort_file(&d, "in.dat", "out.dat", 4, chunk, true)
+                .unwrap();
+        let expect: Vec<Vec<u8>> = recs
+            .iter()
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .cloned()
+            .collect();
+        assert_eq!(written as usize, expect.len());
+        assert_eq!(read_records(&d, "out.dat", 4), expect);
+    });
+}
+
+#[test]
+fn prop_merge_diff_removes_every_occurrence() {
+    prop_check("merge_diff == multiset minus set", 12, |rng| {
+        let t = roomy::testutil::tmpdir("pt_diff");
+        let d = extsort_disk(t.path());
+        let mut a: Vec<Vec<u8>> = (0..rng.range(0, 300))
+            .map(|_| (rng.below(50) as u32).to_be_bytes().to_vec())
+            .collect();
+        let mut b: Vec<Vec<u8>> = (0..rng.range(0, 100))
+            .map(|_| (rng.below(50) as u32).to_be_bytes().to_vec())
+            .collect();
+        a.sort();
+        b.sort();
+        write_records(&d, "a.dat", &a, 4);
+        write_records(&d, "b.dat", &b, 4);
+        let n = roomy::storage::extsort::merge_diff(&d, "a.dat", "b.dat", "c.dat", 4).unwrap();
+        let bset: BTreeSet<&Vec<u8>> = b.iter().collect();
+        let expect: Vec<Vec<u8>> =
+            a.iter().filter(|r| !bset.contains(r)).cloned().collect();
+        assert_eq!(n as usize, expect.len());
+        assert_eq!(read_records(&d, "c.dat", 4), expect);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Hash-bucket partitioning: every element lands in exactly one bucket,
+// deterministically, and all routing paths agree.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_hash_partitioning_total_and_deterministic() {
+    prop_check("bucket routing total function", 20, |rng| {
+        let nbuckets = rng.range(1, 100) as u32;
+        for _ in 0..50 {
+            let elt = rng.bytes(rng.range(1, 24));
+            let b = roomy::hashfn::bucket_of_bytes(&elt, nbuckets);
+            // in range...
+            assert!(b < nbuckets, "bucket {b} out of range {nbuckets}");
+            // ...exactly one bucket: repeated routing never disagrees
+            assert_eq!(b, roomy::hashfn::bucket_of_bytes(&elt, nbuckets));
+            // ...and the two-step fingerprint path agrees with the fused one
+            assert_eq!(
+                b,
+                roomy::hashfn::bucket_of(roomy::hashfn::fp_bytes(&elt), nbuckets)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_partitioning_covers_and_preserves_all_elements() {
+    prop_check("partition = disjoint cover", 10, |rng| {
+        let nbuckets = rng.range(1, 16) as u32;
+        let n = rng.range(1, 400);
+        let elts: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        // partition into per-bucket piles
+        let mut piles: Vec<Vec<u64>> = vec![Vec::new(); nbuckets as usize];
+        for &e in &elts {
+            let b = roomy::hashfn::bucket_of_bytes(&e.to_le_bytes(), nbuckets);
+            piles[b as usize].push(e);
+        }
+        // disjoint cover: recomposition is the original multiset
+        let total: usize = piles.iter().map(|p| p.len()).sum();
+        assert_eq!(total, n, "every element in exactly one bucket");
+        let mut recomposed: Vec<u64> = piles.into_iter().flatten().collect();
+        recomposed.sort_unstable();
+        let mut expect = elts.clone();
+        expect.sort_unstable();
+        assert_eq!(recomposed, expect);
+    });
+}
+
+#[test]
+fn prop_list_shard_files_partition_the_list() {
+    prop_check("list shards partition elements", 6, |rng| {
+        let mut seed_rng = rng.clone();
+        let (_t, r) = roomy_with("pt_shards", |c| rand_cfg(&mut seed_rng, c));
+        let l = r.list::<u64>("l").unwrap();
+        let n = rng.range(1, 500) as u64;
+        for _ in 0..n {
+            l.add(&rng.next_u64()).unwrap();
+        }
+        l.sync().unwrap();
+        // sum of per-shard record counts == list size: nothing dropped,
+        // nothing double-routed
+        let nb = r.cluster().nbuckets();
+        let mut per_shard_total = 0u64;
+        for b in 0..nb {
+            let disk = r.cluster().disk(r.cluster().owner(b));
+            per_shard_total += roomy::storage::chunkfile::record_count(
+                disk,
+                format!("rl_l/s{b}.dat"),
+                8,
+            );
+        }
+        assert_eq!(per_shard_total, n);
+        assert_eq!(l.size(), n);
+    });
+}
+
 #[test]
 fn prop_prefix_sum_any_shape() {
     prop_check("prefix sum any shape", 8, |rng| {
