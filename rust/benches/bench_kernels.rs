@@ -77,9 +77,57 @@ fn pool_scaling() {
     ]);
 }
 
+/// Space-bound tax: a capture-heavy map/reduce (every element issues
+/// delayed adds on another structure from inside the collective) with
+/// RAM-resident capture (threshold far above the op volume) vs
+/// spill-backed capture (tiny threshold forces scratch-file churn). Rows
+/// track the throughput cost of the strict space bound.
+fn capture_spill_overhead() {
+    header(
+        "op capture: RAM-resident vs spill-backed (M ops/s)",
+        &["capture mode", "ops issued", "map M ops/s", "spilled", "scratch files"],
+    );
+    let n = scaled(200_000);
+    for (label, threshold) in
+        [("ram (64 MiB threshold)", 64usize << 20), ("spill (4 KiB threshold)", 4 << 10)]
+    {
+        let (_t, r) = fresh_roomy(&format!("capspill{threshold}"), |c| {
+            c.num_workers = 4;
+            c.capture_spill_threshold = threshold;
+        });
+        let src = r.list::<u64>("src").unwrap();
+        for v in 0..n {
+            src.add(&v).unwrap();
+        }
+        src.sync().unwrap();
+        let dst = r.list::<u64>("dst").unwrap();
+        let ops = 2 * n;
+        let (tmap, _) = time_best(2, || {
+            // counters reflect one rep (same volume every rep), not the
+            // accumulation over warmup + measured runs
+            r.cluster().pool().stats().reset();
+            src.map(|&v| {
+                dst.add(&(v ^ 0x5555)).unwrap();
+                dst.add(&v.wrapping_mul(3)).unwrap();
+            })
+            .unwrap();
+            dst.sync().unwrap();
+        });
+        let stats = r.cluster().pool().stats();
+        row(&[
+            label.into(),
+            ops.to_string(),
+            format!("{:.2}", ops as f64 / 1e6 / tmap),
+            roomy::metrics::fmt_bytes(stats.capture_spilled_bytes()),
+            stats.capture_scratch_files().to_string(),
+        ]);
+    }
+}
+
 fn main() {
     println!("# E7: accel kernel ablation (XLA AOT vs Rust fallback) + pool scaling");
     pool_scaling();
+    capture_spill_overhead();
 
     let xla = {
         let dir = std::path::Path::new("artifacts");

@@ -38,19 +38,32 @@ pub struct Cluster {
 
 impl Cluster {
     /// Bring up the cluster: create one disk directory per node under
-    /// `cfg.root`.
+    /// `cfg.root`. The collective pool's op capture spills to per-task
+    /// scratch directories under each node's `tmp/capture/` (allocated
+    /// lazily on first spill, removed after replay), so in-collective op
+    /// issue stays inside `cfg.capture_spill_threshold` bytes of RAM per
+    /// task **per destination structure** — O(threshold), not O(ops),
+    /// however many ops a collective issues.
     pub fn new(cfg: &RoomyConfig) -> Result<Self> {
         cfg.validate()?;
         let mut disks = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let dir = cfg.root.join(format!("node{w}"));
-            disks.push(Arc::new(NodeDisk::create(w, dir, cfg.disk)?));
+            let disk = NodeDisk::create(w, dir, cfg.disk)?;
+            // Capture scratch is strictly ephemeral. A crashed process can
+            // leave logs behind (Drop never ran), and scratch names restart
+            // at r0t0 per process — purge so a rerun over the same root
+            // cannot append to (and later replay) a dead run's ops.
+            disk.remove_dir("tmp/capture")?;
+            disks.push(Arc::new(disk));
         }
+        let mut pool = WorkerPool::new(cfg.num_workers);
+        pool.set_capture_spill(disks.clone(), cfg.capture_spill_threshold);
         Ok(Cluster {
             disks,
             buckets_per_worker: cfg.buckets_per_worker,
             phases: PhaseTimes::new(),
-            pool: WorkerPool::new(cfg.num_workers),
+            pool,
         })
     }
 
@@ -210,6 +223,18 @@ mod tests {
         for w in 0..3 {
             assert!(t.path().join(format!("node{w}")).is_dir());
         }
+    }
+
+    #[test]
+    fn stale_capture_scratch_purged_on_bringup() {
+        let t = tmpdir("cluster_stale_scratch");
+        drop(cluster(2, 1, t.path()));
+        // simulate a crashed process leaving capture scratch behind
+        let stale = t.path().join("node0/tmp/capture/r0t0/d0.capture");
+        std::fs::create_dir_all(stale.parent().unwrap()).unwrap();
+        std::fs::write(&stale, b"dead run").unwrap();
+        let _c = cluster(2, 1, t.path());
+        assert!(!stale.exists(), "stale scratch must not survive bring-up");
     }
 
     #[test]

@@ -85,6 +85,14 @@ pub struct RoomyConfig {
     pub root: PathBuf,
     /// Staged delayed-op bytes per bucket before spilling to disk.
     pub op_buffer_bytes: usize,
+    /// In-collective op-capture bytes per pool task (per destination
+    /// structure) before the capture log spills to a scratch file under
+    /// `tmp/capture/` on the task's node disk — keeps capture-heavy
+    /// collectives (e.g. BFS frontier expansion) inside the strict space
+    /// bound. Independent knob whose default *value* matches
+    /// `op_buffer_bytes`'s default (changing one does not move the
+    /// other); env `ROOMY_CAPTURE_SPILL` overrides, CLI `--capture-spill`.
+    pub capture_spill_threshold: usize,
     /// In-RAM run size for external sort (bytes).
     pub sort_chunk_bytes: usize,
     /// RAM budget per worker for hash-set based `remove_all` before
@@ -108,6 +116,7 @@ impl RoomyConfig {
             num_workers: env_num_workers().unwrap_or(2),
             root: root.into(),
             op_buffer_bytes: 64 * 1024,
+            capture_spill_threshold: env_capture_spill().unwrap_or(64 * 1024),
             sort_chunk_bytes: 4 * 1024 * 1024,
             ram_budget_bytes: 64 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -139,7 +148,10 @@ impl RoomyConfig {
                 "num_workers must be > 0".into(),
             ));
         }
-        if self.op_buffer_bytes == 0 || self.sort_chunk_bytes == 0 {
+        if self.op_buffer_bytes == 0
+            || self.sort_chunk_bytes == 0
+            || self.capture_spill_threshold == 0
+        {
             return Err(crate::RoomyError::InvalidArg(
                 "buffer sizes must be > 0".into(),
             ));
@@ -157,6 +169,16 @@ fn env_num_workers() -> Option<usize> {
         .filter(|&n| n > 0)
 }
 
+/// Capture-spill threshold override (`ROOMY_CAPTURE_SPILL`, bytes), used
+/// by CI to force the in-collective spill path on every test regardless
+/// of data volume.
+fn env_capture_spill() -> Option<usize> {
+    std::env::var("ROOMY_CAPTURE_SPILL")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
 impl Default for RoomyConfig {
     fn default() -> Self {
         RoomyConfig {
@@ -167,6 +189,7 @@ impl Default for RoomyConfig {
             }),
             root: std::env::temp_dir().join("roomy"),
             op_buffer_bytes: 4 * 1024 * 1024,
+            capture_spill_threshold: env_capture_spill().unwrap_or(4 * 1024 * 1024),
             sort_chunk_bytes: 64 * 1024 * 1024,
             ram_budget_bytes: 256 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -199,6 +222,13 @@ mod tests {
     fn validation_rejects_zero_buffers() {
         let mut c = RoomyConfig::for_testing("/tmp/x");
         c.op_buffer_bytes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_capture_threshold() {
+        let mut c = RoomyConfig::for_testing("/tmp/x");
+        c.capture_spill_threshold = 0;
         assert!(c.validate().is_err());
     }
 

@@ -17,17 +17,14 @@
 //! generator once per batch, which is how the XLA `bfs_expand` kernel is
 //! driven.
 //!
-//! Determinism note: the frontier batch accumulator is shared across the
-//! pool workers streaming `cur`, so batch *composition* depends on the
-//! schedule. Results (level sizes, reached-state sets, and — for the
-//! list driver, whose levels pass through `remove_dupes` — final on-disk
-//! bytes) are schedule-independent; the transient append order inside a
-//! level's staging is not. The unbatched per-element idiom (one delayed
-//! op per neighbor from inside `map`, as in the RoomyBitArray pancake
-//! variant) is byte-deterministic end to end via the pool's per-task op
-//! capture.
-
-use std::sync::Mutex;
+//! Determinism note: frontier batches are accumulated **per pool task**
+//! ([`crate::roomy::RoomyList::map_batched`] builds them shard-locally),
+//! so batch composition depends only on the frontier's on-disk shard
+//! contents — never on `num_workers` or the schedule. Combined with the
+//! pool's per-task delayed-op capture, both batched drivers stage their
+//! neighbor ops in byte-identical order at any worker count, matching
+//! the unbatched per-element idiom (one delayed op per neighbor from
+//! inside `map`, as in the RoomyBitArray pancake variant).
 
 use crate::error::Result;
 use crate::roomy::{Element, Roomy};
@@ -160,31 +157,17 @@ pub fn bfs_hash_batched<T: Element>(
                 }
             }
         });
-        // Batch-expand the frontier; each neighbor becomes one delayed
+        // Batch-expand the frontier (per-task batches, so staging order
+        // is schedule-independent); each neighbor becomes one delayed
         // table update.
-        let buf: Mutex<(Vec<T>, Vec<T>)> =
-            Mutex::new((Vec::with_capacity(FRONTIER_BATCH), Vec::new()));
-        let flush = |state: &mut (Vec<T>, Vec<T>)| -> Result<()> {
-            let (batch, out) = &mut *state;
-            if batch.is_empty() {
-                return Ok(());
-            }
-            out.clear();
-            gen_batch(batch, out)?;
-            for e in out.iter() {
+        cur.map_batched(FRONTIER_BATCH, |batch| {
+            let mut out = Vec::with_capacity(batch.len());
+            gen_batch(batch, &mut out)?;
+            for e in &out {
                 table.update(e, &(), visit)?;
             }
-            batch.clear();
             Ok(())
-        };
-        cur.map(|e| {
-            let mut g = buf.lock().unwrap();
-            g.0.push(e.clone());
-            if g.0.len() >= FRONTIER_BATCH {
-                flush(&mut g).expect("frontier batch expansion");
-            }
         })?;
-        flush(&mut buf.lock().unwrap())?;
         table.sync()?; // visit functions emit next-level adds
         next.sync()?;
 
@@ -206,39 +189,22 @@ pub fn bfs_hash_batched<T: Element>(
     Ok(LevelStats { levels, total })
 }
 
-/// Stream `cur`, batching elements and staging every generated neighbor
-/// as a delayed `next.add`.
+/// Stream `cur` in per-task batches and stage every generated neighbor as
+/// a delayed `next.add` (byte-deterministic: batch composition is
+/// shard-local and the staged adds ride the pool's per-task op capture).
 fn expand_into<T: Element>(
     cur: &crate::roomy::RoomyList<T>,
     next: &crate::roomy::RoomyList<T>,
     gen_batch: &(impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync),
 ) -> Result<()> {
-    let buf: Mutex<(Vec<T>, Vec<T>)> = Mutex::new((
-        Vec::with_capacity(FRONTIER_BATCH),
-        Vec::new(),
-    ));
-    let flush = |state: &mut (Vec<T>, Vec<T>)| -> Result<()> {
-        let (batch, out) = &mut *state;
-        if batch.is_empty() {
-            return Ok(());
-        }
-        out.clear();
-        gen_batch(batch, out)?;
-        for e in out.iter() {
+    cur.map_batched(FRONTIER_BATCH, |batch| {
+        let mut out = Vec::with_capacity(batch.len());
+        gen_batch(batch, &mut out)?;
+        for e in &out {
             next.add(e)?;
         }
-        batch.clear();
         Ok(())
-    };
-    cur.map(|e| {
-        let mut g = buf.lock().unwrap();
-        g.0.push(e.clone());
-        if g.0.len() >= FRONTIER_BATCH {
-            flush(&mut g).expect("frontier batch expansion");
-        }
-    })?;
-    flush(&mut buf.lock().unwrap())?;
-    Ok(())
+    })
 }
 
 #[cfg(test)]

@@ -49,6 +49,9 @@ fn print_help() {
 USAGE:
   roomy pancake --n <N> [--structure list|array|hash] [--workers W]
                 [--num-workers T]      # collective pool threads
+                [--capture-spill B]    # in-collective op-capture RAM per
+                                       # task before spilling (bytes; env
+                                       # ROOMY_CAPTURE_SPILL)
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
   roomy rubik   [--workers W] [--root DIR]        # 2x2x2 cube God's number
@@ -99,12 +102,14 @@ impl Flags {
 }
 
 fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
-    let default_pool = RoomyConfig::default().num_workers;
+    let defaults = RoomyConfig::default();
     let mut cfg = RoomyConfig {
         workers: f.get_parse("workers", 4usize)?,
         buckets_per_worker: f.get_parse("buckets-per-worker", 4usize)?,
-        num_workers: f.get_parse("num-workers", default_pool)?,
-        ..RoomyConfig::default()
+        num_workers: f.get_parse("num-workers", defaults.num_workers)?,
+        capture_spill_threshold: f
+            .get_parse("capture-spill", defaults.capture_spill_threshold)?,
+        ..defaults
     };
     cfg.root = f
         .get("root")

@@ -184,6 +184,18 @@ impl PhaseTimes {
 pub struct PoolStats {
     tasks: Vec<AtomicU64>,
     busy_ns: Vec<AtomicU64>,
+    /// In-collective op-capture volume: total record bytes captured
+    /// (headers included).
+    cap_bytes: AtomicU64,
+    /// Capture bytes that overflowed to scratch files (the spill-backed
+    /// space bound at work; 0 means every capture fit in its threshold).
+    cap_spilled: AtomicU64,
+    /// Capture scratch files created (per task × destination that
+    /// spilled). Files are deleted after replay — this counts creations.
+    cap_files: AtomicU64,
+    /// Largest capture RAM any single task reached, transient append peak
+    /// included — the observable form of the per-task space bound.
+    cap_peak_task_ram: AtomicU64,
 }
 
 impl PoolStats {
@@ -192,6 +204,10 @@ impl PoolStats {
         PoolStats {
             tasks: (0..workers).map(|_| AtomicU64::new(0)).collect(),
             busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            cap_bytes: AtomicU64::new(0),
+            cap_spilled: AtomicU64::new(0),
+            cap_files: AtomicU64::new(0),
+            cap_peak_task_ram: AtomicU64::new(0),
         }
     }
 
@@ -224,6 +240,39 @@ impl PoolStats {
         self.tasks.iter().map(|t| t.load(Ordering::Relaxed)).sum()
     }
 
+    /// Charge one finished task's op-capture footprint: bytes captured,
+    /// bytes spilled to scratch, scratch files created, and the task's
+    /// peak capture RAM (folded into the pool-wide high-water mark).
+    pub fn charge_capture(&self, bytes: u64, spilled: u64, files: u64, peak_ram: u64) {
+        self.cap_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.cap_spilled.fetch_add(spilled, Ordering::Relaxed);
+        self.cap_files.fetch_add(files, Ordering::Relaxed);
+        self.cap_peak_task_ram.fetch_max(peak_ram, Ordering::Relaxed);
+    }
+
+    /// Total op-capture record bytes (headers included).
+    pub fn capture_bytes(&self) -> u64 {
+        self.cap_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Capture bytes that overflowed to scratch files.
+    pub fn capture_spilled_bytes(&self) -> u64 {
+        self.cap_spilled.load(Ordering::Relaxed)
+    }
+
+    /// Capture scratch files created (deleted again after replay).
+    pub fn capture_scratch_files(&self) -> u64 {
+        self.cap_files.load(Ordering::Relaxed)
+    }
+
+    /// Peak capture RAM any single task reached (bytes) — the per-task
+    /// space bound made observable; tests assert it stays within
+    /// `capture_spill_threshold` + one record per destination structure
+    /// staged into.
+    pub fn capture_peak_task_ram(&self) -> u64 {
+        self.cap_peak_task_ram.load(Ordering::Relaxed)
+    }
+
     /// Zero all counters (bench harness support).
     pub fn reset(&self) {
         for t in &self.tasks {
@@ -232,6 +281,10 @@ impl PoolStats {
         for b in &self.busy_ns {
             b.store(0, Ordering::Relaxed);
         }
+        self.cap_bytes.store(0, Ordering::Relaxed);
+        self.cap_spilled.store(0, Ordering::Relaxed);
+        self.cap_files.store(0, Ordering::Relaxed);
+        self.cap_peak_task_ram.store(0, Ordering::Relaxed);
     }
 
     /// Human-readable multi-line report (one row per worker slot).
@@ -243,6 +296,13 @@ impl PoolStats {
                 busy.as_secs_f64() * 1e3
             ));
         }
+        s.push_str(&format!(
+            "  capture: {} captured, {} spilled, {} scratch files, peak task ram {}\n",
+            fmt_bytes(self.capture_bytes()),
+            fmt_bytes(self.capture_spilled_bytes()),
+            self.capture_scratch_files(),
+            fmt_bytes(self.capture_peak_task_ram()),
+        ));
         s
     }
 }
@@ -350,6 +410,21 @@ mod tests {
         assert!(p.report().contains("worker 0"));
         p.reset();
         assert_eq!(p.total_tasks(), 0);
+    }
+
+    #[test]
+    fn pool_capture_counters() {
+        let p = PoolStats::new(1);
+        p.charge_capture(100, 60, 1, 48);
+        p.charge_capture(50, 0, 0, 32); // smaller peak must not lower the max
+        assert_eq!(p.capture_bytes(), 150);
+        assert_eq!(p.capture_spilled_bytes(), 60);
+        assert_eq!(p.capture_scratch_files(), 1);
+        assert_eq!(p.capture_peak_task_ram(), 48);
+        assert!(p.report().contains("capture:"), "{}", p.report());
+        p.reset();
+        assert_eq!(p.capture_bytes(), 0);
+        assert_eq!(p.capture_peak_task_ram(), 0);
     }
 
     #[test]

@@ -290,6 +290,36 @@ impl<T: Element> RoomyList<T> {
         })
     }
 
+    /// Apply `f` to batches of at most `batch` elements (streaming,
+    /// parallel). Batches are accumulated **per shard task**, never
+    /// across shards: the batch composition — and therefore the byte
+    /// order of any delayed ops `f` issues — depends only on the on-disk
+    /// shard contents, not on `num_workers` or the pool schedule. The
+    /// batched BFS drivers rely on this for byte-determinism; a shard's
+    /// final batch may be short.
+    pub fn map_batched(
+        &self,
+        batch: usize,
+        f: impl Fn(&[T]) -> Result<()> + Sync,
+    ) -> Result<()> {
+        let batch = batch.max(1);
+        self.inner.for_owned_shards("rl.map_batched", |this, b, disk| {
+            let mut acc: Vec<T> = Vec::with_capacity(batch);
+            this.scan_shard(b, disk, |rec| {
+                acc.push(T::read_from(rec));
+                if acc.len() >= batch {
+                    f(&acc)?;
+                    acc.clear();
+                }
+                Ok(())
+            })?;
+            if !acc.is_empty() {
+                f(&acc)?;
+            }
+            Ok(())
+        })
+    }
+
     /// Reduce over all elements (the paper's sum-of-squares example);
     /// `fold`/`merge` must be assoc+comm in effect. Shards reduce
     /// concurrently on the pool; partials merge in shard order, so the
@@ -638,6 +668,32 @@ mod tests {
         let expect: Vec<u64> = (0..100).filter(|v| v % 2 == 1).collect();
         assert_eq!(sorted_collect(&a), expect);
         assert_eq!(a.size(), 50);
+    }
+
+    #[test]
+    fn map_batched_sees_every_element_once_in_shard_batches() {
+        let t = tmpdir("rl_map_batched");
+        let r = mk(t.path());
+        let l = r.list::<u64>("l").unwrap();
+        let n = 1000u64;
+        for v in 0..n {
+            l.add(&v).unwrap();
+        }
+        l.sync().unwrap();
+        let seen = std::sync::Mutex::new(Vec::new());
+        let batches = std::sync::atomic::AtomicU64::new(0);
+        l.map_batched(37, |batch| {
+            assert!(!batch.is_empty() && batch.len() <= 37);
+            batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            seen.lock().unwrap().extend_from_slice(batch);
+            Ok(())
+        })
+        .unwrap();
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+        // enough elements that batching actually kicked in
+        assert!(batches.into_inner() >= (n / 37), "batches too coarse");
     }
 
     #[test]

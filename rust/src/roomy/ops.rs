@@ -103,9 +103,11 @@ pub fn encode_elt(out: &mut Vec<u8>, kind: OpKind, elt: &[u8]) {
 ///
 /// Issue path: `stage(bucket, record)` locks only that bucket's buffer —
 /// unless the calling thread is inside a [`crate::runtime::pool`] task,
-/// in which case the record is diverted into that task's capture log and
-/// replayed (via [`StagedOps::stage_direct`]) in deterministic (task,
-/// issue) order after the collective's barrier.
+/// in which case the record is diverted into that task's capture log
+/// (itself spill-at-threshold, so in-collective issue is space-bounded
+/// too) and replayed (via [`StagedOps::stage_direct`]) after the
+/// collective's barrier in deterministic (task, destination, issue)
+/// order — each destination's buffers see exactly the serial byte order.
 ///
 /// Sync path: `take(bucket)` swaps the buffer for a fresh one under the
 /// lock and returns the full old buffer — ops staged during the same sync
@@ -151,7 +153,7 @@ impl StagedOps {
     pub fn stage(&self, b: u32, record: &[u8]) -> Result<()> {
         if crate::runtime::pool::capture_active() {
             if let Some(me) = self.weak_self.upgrade() {
-                if crate::runtime::pool::try_capture(&me, b, record) {
+                if crate::runtime::pool::try_capture(&me, b, record)? {
                     return Ok(());
                 }
             }

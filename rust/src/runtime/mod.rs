@@ -24,11 +24,17 @@
 //!    bucket order regardless of completion order.
 //! 3. *Delayed-op capture* — user functions running inside a collective
 //!    (access/update callbacks, BFS `genNext`) may issue delayed ops on
-//!    other structures. Those ops are captured into **per-task write
-//!    buffers** and replayed into the destination staging buffers after
-//!    the collective's barrier, ordered by (bucket index, issue order) —
-//!    the exact order a serial run would have produced. See
-//!    [`crate::roomy::ops::StagedOps`].
+//!    other structures. Those ops are captured into **per-task,
+//!    per-destination spill-at-threshold logs** (scratch files under the
+//!    node disks' `tmp/capture/`, so capture RAM per task is bounded by
+//!    [`RoomyConfig::capture_spill_threshold`](crate::RoomyConfig::capture_spill_threshold)
+//!    per destination structure the task stages into)
+//!    and replayed into the destination staging buffers after the
+//!    collective's barrier, ordered by (bucket index, destination, issue
+//!    order) — every destination buffer receives the exact byte sequence
+//!    a serial run would have produced. See
+//!    [`crate::roomy::ops::StagedOps`] and the capture machinery in
+//!    [`pool`].
 //!
 //! The pool is the seam all later scaling work hangs off: async I/O slots
 //! under a task, multi-node sharding replaces the task queue with a

@@ -9,9 +9,12 @@
 //! 1. results are returned **indexed by task** (ascending bucket order),
 //!    never in completion order;
 //! 2. delayed operations issued by user functions *during* a task are
-//!    **captured** into a per-task write buffer and replayed into the
-//!    destination [`StagedOps`] only after the barrier, in (task index,
-//!    issue order) — exactly the byte order a serial run produces;
+//!    **captured** into per-task, per-destination logs and replayed into
+//!    the destination [`StagedOps`] only after the barrier, ordered by
+//!    (task index, destination, issue order) — each destination's staging
+//!    receives exactly the byte sequence a serial run produces (only the
+//!    interleaving *across* destinations differs, which no buffer
+//!    observes);
 //! 3. errors and panics are reported for the **lowest-index** failing
 //!    task, not whichever thread lost the race.
 //!
@@ -26,49 +29,174 @@
 //! structure's `sync`/`map`/`reduce` (the inner barrier would replay its
 //! captured ops out of order with respect to the outer collective).
 //!
-//! Space note: captured ops live in RAM until the barrier (the
-//! destination `SpillBuffer`s only see them at replay), so a collective
-//! that issues O(per-task ops) holds that many encoded records in memory
-//! per in-flight task. Direct (outside-collective) staging keeps the
-//! seed's spill-at-threshold bound. Spilling capture arenas per task is
-//! recorded as an open item in ROADMAP.md.
+//! Space note: op capture is **spill-backed**, so the strict space bound
+//! holds inside collectives too. Each task's [`OpCapture`] keeps one
+//! [`SpillBuffer`] per destination structure that overflows to a private
+//! scratch file (`tmp/capture/r<run>t<task>/d<K>.capture` on a node disk,
+//! created lazily) once it exceeds
+//! [`RoomyConfig::capture_spill_threshold`](crate::RoomyConfig::capture_spill_threshold)
+//! bytes — per-task capture RAM is O(threshold × destination structures
+//! staged into), not O(ops issued).
+//! Post-barrier replay streams each log back in (task, destination,
+//! issue) order — per-destination byte order identical to serial — and
+//! deletes the scratch files; failed or panicking tasks delete theirs on
+//! drop, so `tmp/capture/` never leaks. Direct (outside-collective)
+//! staging keeps the seed's spill-at-threshold bound as before. Capture
+//! volume is observable via the capture counters in
+//! [`crate::metrics::PoolStats`].
 
 use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::error::{Result, RoomyError};
 use crate::metrics::PoolStats;
 use crate::roomy::ops::StagedOps;
+use crate::storage::{NodeDisk, SpillBuffer};
 
-/// Per-task log of delayed ops issued while the task ran. Records are
-/// appended to one arena (`bytes`) in issue order; `entries` names the
-/// destination of each record.
-#[derive(Default)]
+/// Capture log record header: `[bucket u32 LE, payload len u32 LE]`.
+const CAPTURE_HDR: usize = 8;
+
+/// Where one task's capture logs overflow to: a private scratch directory
+/// on one node disk, created lazily on first spill and removed when the
+/// capture is replayed or discarded.
+pub(crate) struct CaptureBacking {
+    disk: Arc<NodeDisk>,
+    dir_rel: String,
+    threshold: usize,
+}
+
+/// One destination structure's capture log within a task.
+struct DestLog {
+    sink: Arc<StagedOps>,
+    buf: SpillBuffer,
+}
+
+/// Per-task log of delayed ops issued while the task ran. One
+/// spill-at-threshold [`SpillBuffer`] per destination structure holds
+/// `[bucket, len, payload]` records in issue order, so capture RAM per
+/// task stays O(threshold × destinations) however many ops a collective
+/// issues. Without backing (a bare pool outside any cluster) logs are
+/// RAM-only, preserving the old unbounded behavior.
 pub(crate) struct OpCapture {
-    /// `(destination staging, destination bucket, record length)` per op.
-    entries: Vec<(Arc<StagedOps>, u32, u32)>,
-    /// Concatenated record bytes, aligned with `entries`.
-    bytes: Vec<u8>,
+    backing: Option<CaptureBacking>,
+    logs: Vec<DestLog>,
+    /// Record bytes captured (headers included).
+    bytes: u64,
+    /// High-water mark of capture RAM across this task's logs, including
+    /// the transient peak just before a push triggers a spill.
+    peak_ram: usize,
+    /// Sum of `ram_bytes()` across logs, maintained incrementally so the
+    /// per-op path never scans the log list.
+    ram_total: usize,
+    /// Log index the previous op hit — consecutive ops overwhelmingly
+    /// target the same destination, so this usually skips the lookup.
+    last_idx: usize,
 }
 
 impl OpCapture {
-    fn push(&mut self, sink: Arc<StagedOps>, bucket: u32, rec: &[u8]) {
-        self.entries.push((sink, bucket, rec.len() as u32));
-        self.bytes.extend_from_slice(rec);
+    fn new(backing: Option<CaptureBacking>) -> Self {
+        OpCapture {
+            backing,
+            logs: Vec::new(),
+            bytes: 0,
+            peak_ram: 0,
+            ram_total: 0,
+            last_idx: 0,
+        }
     }
 
-    /// Apply every captured op to its destination, in issue order.
-    fn replay(&self) -> Result<()> {
-        let mut off = 0usize;
-        for (sink, bucket, len) in &self.entries {
-            let end = off + *len as usize;
-            sink.stage_direct(*bucket, &self.bytes[off..end])?;
-            off = end;
+    fn push(&mut self, sink: Arc<StagedOps>, bucket: u32, rec: &[u8]) -> Result<()> {
+        // The transient maximum inside this push: current RAM across all
+        // logs plus the record about to be appended (a spill, if one
+        // fires, happens after the append).
+        self.peak_ram = self.peak_ram.max(self.ram_total + CAPTURE_HDR + rec.len());
+
+        let idx = if self
+            .logs
+            .get(self.last_idx)
+            .is_some_and(|l| Arc::ptr_eq(&l.sink, &sink))
+        {
+            self.last_idx
+        } else {
+            match self.logs.iter().position(|l| Arc::ptr_eq(&l.sink, &sink)) {
+                Some(i) => i,
+                None => {
+                    let buf = match &self.backing {
+                        Some(b) => SpillBuffer::new(
+                            Arc::clone(&b.disk),
+                            format!("{}/d{}.capture", b.dir_rel, self.logs.len()),
+                            b.threshold,
+                        ),
+                        None => SpillBuffer::ram_only(),
+                    };
+                    self.logs.push(DestLog { sink, buf });
+                    self.logs.len() - 1
+                }
+            }
+        };
+        self.last_idx = idx;
+        let buf = &mut self.logs[idx].buf;
+        let before = buf.ram_bytes();
+        let mut hdr = [0u8; CAPTURE_HDR];
+        hdr[..4].copy_from_slice(&bucket.to_le_bytes());
+        hdr[4..].copy_from_slice(&(rec.len() as u32).to_le_bytes());
+        buf.push(&hdr)?;
+        buf.push(rec)?;
+        self.ram_total = self.ram_total - before + buf.ram_bytes();
+        self.bytes += (CAPTURE_HDR + rec.len()) as u64;
+        Ok(())
+    }
+
+    /// Stream every captured op back to its destination, per destination
+    /// in issue order (destinations in first-op order). Consumes the logs;
+    /// each scratch file is deleted as its drain is dropped, even if a
+    /// downstream stage fails mid-replay.
+    fn replay(&mut self) -> Result<()> {
+        let logs = std::mem::take(&mut self.logs);
+        let mut payload = Vec::new();
+        for log in logs {
+            let mut drain = log.buf.into_drain()?;
+            let mut hdr = [0u8; CAPTURE_HDR];
+            while drain.read_exact_or_eof(&mut hdr)? {
+                let bucket = u32::from_le_bytes(hdr[..4].try_into().unwrap());
+                let len = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
+                payload.resize(len, 0);
+                if !drain.read_exact_or_eof(&mut payload)? {
+                    return Err(RoomyError::InvalidArg(
+                        "truncated record in capture log".into(),
+                    ));
+                }
+                log.sink.stage_direct(bucket, &payload)?;
+            }
         }
         Ok(())
+    }
+
+    /// Bytes spilled to scratch files across this task's logs.
+    fn spilled_bytes(&self) -> u64 {
+        self.logs.iter().map(|l| l.buf.spilled_bytes()).sum()
+    }
+
+    /// Scratch files created (logs that overflowed to disk).
+    fn scratch_files(&self) -> u64 {
+        self.logs.iter().filter(|l| l.buf.spilled_bytes() > 0).count() as u64
+    }
+}
+
+impl Drop for OpCapture {
+    /// Leak-free teardown on every path: un-replayed logs (task error,
+    /// worker panic, a failure elsewhere in the collective) drop their
+    /// spill files, and the task's scratch directory goes with them.
+    fn drop(&mut self) {
+        for log in &mut self.logs {
+            let _ = log.buf.clear();
+        }
+        if let Some(b) = &self.backing {
+            let _ = b.disk.remove_dir(&b.dir_rel);
+        }
     }
 }
 
@@ -89,15 +217,15 @@ pub(crate) fn capture_active() -> bool {
 }
 
 /// Capture `rec` into the current task's op log, if the calling thread is
-/// inside a pool task. Returns `false` when no task is active (the caller
-/// should stage directly).
-pub(crate) fn try_capture(sink: &Arc<StagedOps>, bucket: u32, rec: &[u8]) -> bool {
+/// inside a pool task. Returns `Ok(false)` when no task is active (the
+/// caller should stage directly); errors are spill-file I/O failures.
+pub(crate) fn try_capture(sink: &Arc<StagedOps>, bucket: u32, rec: &[u8]) -> Result<bool> {
     TASK.with(|t| match t.borrow_mut().as_mut() {
         Some(ctx) => {
-            ctx.capture.push(Arc::clone(sink), bucket, rec);
-            true
+            ctx.capture.push(Arc::clone(sink), bucket, rec)?;
+            Ok(true)
         }
-        None => false,
+        None => Ok(false),
     })
 }
 
@@ -114,6 +242,16 @@ struct Done<R> {
     capture: OpCapture,
 }
 
+/// Spill backing shared by every capture the pool arms: the cluster's
+/// node disks, the capture threshold, and a run counter that keeps the
+/// scratch directories of concurrent collectives on one pool disjoint.
+#[derive(Debug)]
+struct CaptureSpillCfg {
+    disks: Vec<Arc<NodeDisk>>,
+    threshold: usize,
+    runs: AtomicU64,
+}
+
 /// Fixed-width worker pool executing per-bucket collective tasks. One
 /// pool lives in each [`crate::cluster::Cluster`]; worker threads are
 /// scoped per collective (no idle threads between collectives).
@@ -121,13 +259,26 @@ struct Done<R> {
 pub struct WorkerPool {
     workers: usize,
     stats: PoolStats,
+    capture: Option<CaptureSpillCfg>,
 }
 
 impl WorkerPool {
-    /// Pool of `workers` threads (clamped to ≥ 1).
+    /// Pool of `workers` threads (clamped to ≥ 1). Until
+    /// [`WorkerPool::set_capture_spill`] is called, op capture is RAM-only
+    /// (no disks to spill to).
     pub fn new(workers: usize) -> WorkerPool {
         let workers = workers.max(1);
-        WorkerPool { workers, stats: PoolStats::new(workers) }
+        WorkerPool { workers, stats: PoolStats::new(workers), capture: None }
+    }
+
+    /// Back op capture with spill-at-threshold scratch files on `disks`
+    /// (task `t` scratches on `disks[t % disks.len()]` — the owner of
+    /// bucket `t` under the cluster's round-robin layout). Called by
+    /// [`crate::cluster::Cluster::new`] with
+    /// [`RoomyConfig::capture_spill_threshold`](crate::RoomyConfig::capture_spill_threshold).
+    pub(crate) fn set_capture_spill(&mut self, disks: Vec<Arc<NodeDisk>>, threshold: usize) {
+        debug_assert!(!disks.is_empty() && threshold > 0);
+        self.capture = Some(CaptureSpillCfg { disks, threshold, runs: AtomicU64::new(0) });
     }
 
     /// Configured worker count.
@@ -140,16 +291,28 @@ impl WorkerPool {
         &self.stats
     }
 
+    /// Spill backing for task `t` of run `run`, if the pool has disks.
+    fn capture_backing(&self, run: u64, t: usize) -> Option<CaptureBacking> {
+        self.capture.as_ref().map(|c| CaptureBacking {
+            disk: Arc::clone(&c.disks[t % c.disks.len()]),
+            dir_rel: format!("tmp/capture/r{run}t{t}"),
+            threshold: c.threshold,
+        })
+    }
+
     /// Run `job(task)` for every `task` in `0..ntasks` across the pool and
     /// return the results **in task order**. Delayed ops issued inside
-    /// `job` are captured per task and replayed in (task, issue) order
-    /// after all tasks complete — see the module docs for why this makes
-    /// the schedule invisible.
+    /// `job` are captured per task and replayed in (task, destination,
+    /// issue) order after all tasks complete — per destination buffer
+    /// that is the serial byte order; see the module docs for why this
+    /// makes the schedule invisible.
     ///
     /// On failure the error of the lowest-index failing task is returned
     /// (a panic in task `t` beats an `Err` from any task after `t`);
     /// captured ops are *not* replayed, matching the undefined partial
-    /// state any failed collective leaves on disk.
+    /// state any failed collective leaves on disk — but every task's
+    /// capture scratch files are removed, so failure never leaks disk
+    /// space under `tmp/capture/`.
     pub fn run_tasks<R, F>(&self, phase: &str, ntasks: usize, job: F) -> Result<Vec<R>>
     where
         R: Send,
@@ -161,6 +324,11 @@ impl WorkerPool {
         let nthreads = self.workers.min(ntasks);
         let cursor = AtomicUsize::new(0);
         let abort = AtomicBool::new(false);
+        let run = self
+            .capture
+            .as_ref()
+            .map(|c| c.runs.fetch_add(1, Ordering::Relaxed))
+            .unwrap_or(0);
 
         let outs: Vec<(Vec<Done<R>>, Option<(usize, usize)>)> =
             std::thread::scope(|scope| {
@@ -180,7 +348,9 @@ impl WorkerPool {
                                 TASK.with(|c| {
                                     *c.borrow_mut() = Some(TaskCtx {
                                         worker: wid,
-                                        capture: OpCapture::default(),
+                                        capture: OpCapture::new(
+                                            self.capture_backing(run, t),
+                                        ),
                                     })
                                 });
                                 let r = catch_unwind(AssertUnwindSafe(|| job(t)));
@@ -188,6 +358,12 @@ impl WorkerPool {
                                     .with(|c| c.borrow_mut().take())
                                     .expect("pool task context vanished");
                                 stats.charge(wid, t0.elapsed());
+                                stats.charge_capture(
+                                    ctx.capture.bytes,
+                                    ctx.capture.spilled_bytes(),
+                                    ctx.capture.scratch_files(),
+                                    ctx.capture.peak_ram as u64,
+                                );
                                 match r {
                                     Ok(result) => {
                                         if result.is_err() {
@@ -255,7 +431,10 @@ impl WorkerPool {
         debug_assert_eq!(results.len(), ntasks, "abort never set ⇒ all tasks ran");
 
         // Post-barrier replay: (task index, issue order) == serial order.
-        for cap in &captures {
+        // Each capture is dropped as soon as it has replayed, deleting its
+        // scratch directory; on error the remaining captures drop too, so
+        // no scratch state survives a failed collective.
+        for mut cap in captures {
             cap.replay()?;
         }
         Ok(results)
@@ -417,6 +596,106 @@ mod tests {
                 Some(r0) => assert_eq!(&got, r0, "workers={workers} diverged"),
             }
         }
+    }
+
+    use crate::testutil::files_under;
+
+    /// With spill backing and a tiny threshold, capture overflows to
+    /// scratch files, replays in serial order, keeps per-task RAM bounded,
+    /// and removes every scratch file afterwards.
+    #[test]
+    fn spill_backed_capture_replays_and_cleans_up() {
+        let t = tmpdir("pool_capture_spill");
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 2;
+        cfg.buckets_per_worker = 1;
+        let cluster = Cluster::new(&cfg).unwrap();
+        let staged = StagedOps::new(&cluster, "cap", 1 << 20);
+
+        let threshold = 16usize;
+        let rec_len = 2usize;
+        let mut reference: Option<Vec<u8>> = None;
+        for workers in [1usize, 2, 4] {
+            let mut p = pool(workers);
+            p.set_capture_spill(cluster.disks().to_vec(), threshold);
+            p.run_tasks("t", 6, |task| {
+                if task % 2 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(150));
+                }
+                // ~10x threshold bytes of ops per task
+                for k in 0..16u8 {
+                    staged.stage(0, &[task as u8, k])?;
+                }
+                Ok(())
+            })
+            .unwrap();
+
+            assert!(p.stats().capture_spilled_bytes() > 0, "must have spilled");
+            assert!(p.stats().capture_scratch_files() > 0);
+            assert!(
+                p.stats().capture_peak_task_ram() as usize
+                    <= threshold + super::CAPTURE_HDR + rec_len,
+                "peak capture RAM {} exceeds threshold {} + record",
+                p.stats().capture_peak_task_ram(),
+                threshold,
+            );
+            // scratch fully cleaned after the barrier
+            for w in 0..cluster.nworkers() {
+                let scratch = cluster.disk(w).root().join("tmp/capture");
+                assert_eq!(files_under(&scratch), 0, "scratch leak on node {w}");
+            }
+
+            let buf = staged.take(0, &cluster, "cap", 1 << 20);
+            let mut r = buf.reader().unwrap();
+            let mut got = Vec::new();
+            let mut rec = [0u8; 2];
+            while r.read_exact_or_eof(&mut rec).unwrap() {
+                got.extend_from_slice(&rec);
+            }
+            match &reference {
+                None => {
+                    let expect: Vec<u8> = (0..6u8)
+                        .flat_map(|t| (0..16u8).map(move |k| [t, k]))
+                        .flatten()
+                        .collect();
+                    assert_eq!(got, expect);
+                    reference = Some(got);
+                }
+                Some(r0) => assert_eq!(&got, r0, "workers={workers} diverged"),
+            }
+        }
+    }
+
+    /// A panicking task must not leave capture scratch files behind, and
+    /// neither must the already-completed tasks whose captures are thrown
+    /// away with the failed collective.
+    #[test]
+    fn failed_collective_leaves_no_capture_scratch() {
+        let t = tmpdir("pool_capture_panic");
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 2;
+        cfg.buckets_per_worker = 1;
+        let cluster = Cluster::new(&cfg).unwrap();
+        let staged = StagedOps::new(&cluster, "cap", 1 << 20);
+
+        let mut p = pool(4);
+        p.set_capture_spill(cluster.disks().to_vec(), 8);
+        let r: Result<Vec<()>> = p.run_tasks("boom", 8, |task| {
+            for k in 0..32u8 {
+                staged.stage(0, &[task as u8, k])?; // forces spills
+            }
+            if task == 5 {
+                panic!("mid-collective failure");
+            }
+            Ok(())
+        });
+        assert!(matches!(r, Err(RoomyError::WorkerPanic { .. })));
+        for w in 0..cluster.nworkers() {
+            let scratch = cluster.disk(w).root().join("tmp/capture");
+            assert_eq!(files_under(&scratch), 0, "scratch leak on node {w}");
+        }
+        // nothing was replayed either
+        assert_eq!(staged.staged_bytes(), 0);
     }
 
     /// Ops staged outside any pool task go straight to the buffer.

@@ -19,7 +19,9 @@ use crate::error::Result;
 
 /// Byte-stream staging buffer that spills to disk past a RAM threshold.
 pub struct SpillBuffer {
-    disk: Arc<NodeDisk>,
+    /// `None` in RAM-only mode ([`SpillBuffer::ram_only`]): content grows
+    /// unbounded in RAM and never touches a file.
+    disk: Option<Arc<NodeDisk>>,
     /// Spill file path (single append-only segment file).
     spill_rel: PathBuf,
     ram: Vec<u8>,
@@ -32,10 +34,24 @@ impl SpillBuffer {
     /// exceeds `threshold` bytes.
     pub fn new(disk: Arc<NodeDisk>, spill_rel: impl Into<PathBuf>, threshold: usize) -> Self {
         SpillBuffer {
-            disk,
+            disk: Some(disk),
             spill_rel: spill_rel.into(),
             ram: Vec::new(),
             threshold: threshold.max(1),
+            spilled_bytes: 0,
+        }
+    }
+
+    /// A buffer with no disk backing: content accumulates in RAM without
+    /// bound. Used where no node disk exists to spill to (e.g. a bare
+    /// [`crate::runtime::pool::WorkerPool`] outside any cluster); every
+    /// production buffer should prefer [`SpillBuffer::new`].
+    pub fn ram_only() -> Self {
+        SpillBuffer {
+            disk: None,
+            spill_rel: PathBuf::new(),
+            ram: Vec::new(),
+            threshold: usize::MAX,
             spilled_bytes: 0,
         }
     }
@@ -49,12 +65,13 @@ impl SpillBuffer {
         Ok(())
     }
 
-    /// Force RAM contents out to the spill file.
+    /// Force RAM contents out to the spill file (no-op when RAM-only).
     pub fn spill(&mut self) -> Result<()> {
+        let Some(disk) = &self.disk else { return Ok(()) };
         if self.ram.is_empty() {
             return Ok(());
         }
-        let mut w = self.disk.append_file(&self.spill_rel)?;
+        let mut w = disk.append_file(&self.spill_rel)?;
         w.write_bytes(&self.ram)?;
         w.finish()?;
         self.spilled_bytes += self.ram.len() as u64;
@@ -85,18 +102,42 @@ impl SpillBuffer {
     /// contents; call [`SpillBuffer::clear`] after a successful apply.
     pub fn reader(&self) -> Result<SpillReader<'_>> {
         let file = if self.spilled_bytes > 0 {
-            Some(self.disk.open_file(&self.spill_rel)?)
+            let disk = self.disk.as_ref().expect("spilled bytes imply a disk");
+            Some(disk.open_file(&self.spill_rel)?)
         } else {
             None
         };
         Ok(SpillReader { file, ram: &self.ram, ram_pos: 0 })
     }
 
+    /// Consume the buffer into an owned streaming drain: a one-shot FIFO
+    /// reader over everything staged that removes the spill file when
+    /// dropped (read fully or not). This is the leak-free way to replay a
+    /// buffer whose content is no longer needed afterwards — the pool's
+    /// capture replay and error paths both rely on the drop-side cleanup.
+    pub fn into_drain(self) -> Result<SpillDrain> {
+        let file = if self.spilled_bytes > 0 {
+            let disk = self.disk.as_ref().expect("spilled bytes imply a disk");
+            Some(disk.open_file_shared(&self.spill_rel)?)
+        } else {
+            None
+        };
+        Ok(SpillDrain {
+            remove_on_drop: self.spilled_bytes > 0,
+            disk: self.disk,
+            spill_rel: self.spill_rel,
+            file,
+            ram: self.ram,
+            ram_pos: 0,
+        })
+    }
+
     /// Discard all staged content (after a successful sync apply).
     pub fn clear(&mut self) -> Result<()> {
         self.ram.clear();
         if self.spilled_bytes > 0 {
-            self.disk.remove(&self.spill_rel)?;
+            let disk = self.disk.as_ref().expect("spilled bytes imply a disk");
+            disk.remove(&self.spill_rel)?;
             self.spilled_bytes = 0;
         }
         Ok(())
@@ -136,6 +177,58 @@ impl<'b> SpillReader<'b> {
         buf[got..].copy_from_slice(&self.ram[self.ram_pos..self.ram_pos + want]);
         self.ram_pos += want;
         Ok(true)
+    }
+}
+
+/// Owned FIFO drain of a [`SpillBuffer`] (see [`SpillBuffer::into_drain`]):
+/// spilled segment first, then the RAM tail. Removes the spill file on
+/// drop.
+pub struct SpillDrain {
+    disk: Option<Arc<NodeDisk>>,
+    spill_rel: PathBuf,
+    file: Option<super::diskio::SharedMeteredReader>,
+    ram: Vec<u8>,
+    ram_pos: usize,
+    remove_on_drop: bool,
+}
+
+impl SpillDrain {
+    /// Read exactly `buf.len()` bytes; Ok(false) = clean EOF at a record
+    /// boundary (no bytes read). Errors on partial reads.
+    pub fn read_exact_or_eof(&mut self, buf: &mut [u8]) -> Result<bool> {
+        let mut got = 0;
+        if let Some(f) = self.file.as_mut() {
+            got = f.read_fully(&mut buf[..])?;
+            if got == buf.len() {
+                return Ok(true);
+            }
+            // file exhausted; fall through to RAM
+            self.file = None;
+        }
+        let want = buf.len() - got;
+        let avail = self.ram.len() - self.ram_pos;
+        if got == 0 && avail == 0 {
+            return Ok(false);
+        }
+        if avail < want {
+            return Err(crate::error::RoomyError::InvalidArg(
+                "truncated record in spill buffer".into(),
+            ));
+        }
+        buf[got..].copy_from_slice(&self.ram[self.ram_pos..self.ram_pos + want]);
+        self.ram_pos += want;
+        Ok(true)
+    }
+}
+
+impl Drop for SpillDrain {
+    fn drop(&mut self) {
+        self.file = None; // close before removing (Windows-friendly habit)
+        if self.remove_on_drop {
+            if let Some(disk) = &self.disk {
+                let _ = disk.remove(&self.spill_rel);
+            }
+        }
     }
 }
 
@@ -222,6 +315,61 @@ mod tests {
         let mut rec = [0u8; 2];
         assert!(r.read_exact_or_eof(&mut rec).unwrap());
         assert_eq!(rec, [2, 2]);
+    }
+
+    #[test]
+    fn drain_replays_in_order_and_removes_spill_file() {
+        let t = tmpdir("spill_drain");
+        let d = mkdisk(t.path());
+        let mut b = SpillBuffer::new(d.clone(), "b.spill", 16);
+        for i in 0u8..10 {
+            b.push(&[i; 4]).unwrap();
+        }
+        assert!(b.spilled_bytes() > 0);
+        let mut drain = b.into_drain().unwrap();
+        for i in 0u8..10 {
+            let mut rec = [0u8; 4];
+            assert!(drain.read_exact_or_eof(&mut rec).unwrap());
+            assert_eq!(rec, [i; 4], "record {i} out of order");
+        }
+        assert!(!drain.read_exact_or_eof(&mut [0u8; 4]).unwrap());
+        assert!(d.exists("b.spill"), "file lives while the drain does");
+        drop(drain);
+        assert!(!d.exists("b.spill"), "drop must remove the spill file");
+    }
+
+    #[test]
+    fn abandoned_drain_still_removes_spill_file() {
+        let t = tmpdir("spill_drain_abandon");
+        let d = mkdisk(t.path());
+        let mut b = SpillBuffer::new(d.clone(), "b.spill", 4);
+        b.push(&[1; 8]).unwrap();
+        let drain = b.into_drain().unwrap();
+        drop(drain); // nothing read
+        assert!(!d.exists("b.spill"));
+    }
+
+    #[test]
+    fn ram_only_never_touches_disk() {
+        let mut b = SpillBuffer::ram_only();
+        for i in 0u8..100 {
+            b.push(&[i; 8]).unwrap();
+        }
+        assert_eq!(b.spilled_bytes(), 0);
+        assert_eq!(b.ram_bytes(), 800);
+        b.spill().unwrap(); // no-op, not an error
+        assert_eq!(b.spilled_bytes(), 0);
+        let mut r = b.reader().unwrap();
+        let mut rec = [0u8; 8];
+        assert!(r.read_exact_or_eof(&mut rec).unwrap());
+        assert_eq!(rec, [0; 8]);
+        drop(r);
+        let mut drain = b.into_drain().unwrap();
+        let mut n = 0;
+        while drain.read_exact_or_eof(&mut rec).unwrap() {
+            n += 1;
+        }
+        assert_eq!(n, 100);
     }
 
     #[test]

@@ -162,6 +162,21 @@ impl NodeDisk {
         Ok(MeteredReader { disk: self, r: BufReader::with_capacity(READ_BUF, f), path })
     }
 
+    /// Like [`NodeDisk::open_file`] but the returned reader co-owns the
+    /// disk, so it can outlive the borrow that created it (streaming-drain
+    /// readers that move across ownership boundaries, e.g.
+    /// [`crate::storage::buffer::SpillDrain`]).
+    pub fn open_file_shared(self: &Arc<Self>, rel: impl AsRef<Path>) -> Result<SharedMeteredReader> {
+        let path = self.abs(&rel);
+        let f = File::open(&path).map_err(|e| RoomyError::io(&path, e))?;
+        self.charge_seek();
+        Ok(SharedMeteredReader {
+            disk: Arc::clone(self),
+            r: BufReader::with_capacity(READ_BUF, f),
+            path,
+        })
+    }
+
     /// Length of `rel` in bytes, or 0 if it does not exist.
     pub fn len(&self, rel: impl AsRef<Path>) -> u64 {
         fs::metadata(self.abs(rel)).map(|m| m.len()).unwrap_or(0)
@@ -333,6 +348,39 @@ impl<'d> MeteredReader<'d> {
     }
 }
 
+/// Metered buffered reader that co-owns its [`NodeDisk`] (see
+/// [`NodeDisk::open_file_shared`]). Only the streaming entry point is
+/// provided — owned readers exist for FIFO drains, not random access.
+pub struct SharedMeteredReader {
+    disk: Arc<NodeDisk>,
+    r: BufReader<File>,
+    path: PathBuf,
+}
+
+impl SharedMeteredReader {
+    /// Fill `buf` as far as possible (loops over short reads); returns
+    /// bytes read, which is < `buf.len()` only at EOF.
+    pub fn read_fully(&mut self, buf: &mut [u8]) -> Result<usize> {
+        let mut total = 0;
+        while total < buf.len() {
+            let n = self.r.read(&mut buf[total..]).map_err(|e| RoomyError::io(&self.path, e))?;
+            if n == 0 {
+                break;
+            }
+            total += n;
+        }
+        if total > 0 {
+            self.disk.charge_read(total as u64);
+        }
+        Ok(total)
+    }
+
+    /// Path being read (diagnostics).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -434,6 +482,22 @@ mod tests {
         let before = d.stats().snapshot().seeks;
         let _r = d.open_file("f.dat").unwrap();
         assert_eq!(d.stats().snapshot().seeks, before + 1);
+    }
+
+    #[test]
+    fn shared_reader_outlives_borrow_and_meters() {
+        let t = tmpdir("diskio_shared");
+        let d = Arc::new(disk(t.path()));
+        d.write_all("f.dat", &[3u8; 6]).unwrap();
+        let mut r = {
+            // the reader must survive this scope: it co-owns the disk
+            let handle = Arc::clone(&d);
+            handle.open_file_shared("f.dat").unwrap()
+        };
+        let mut buf = [0u8; 8];
+        assert_eq!(r.read_fully(&mut buf).unwrap(), 6);
+        assert_eq!(&buf[..6], &[3u8; 6]);
+        assert_eq!(d.stats().snapshot().bytes_read, 6);
     }
 
     #[test]

@@ -19,6 +19,6 @@ pub mod chunkfile;
 pub mod diskio;
 pub mod extsort;
 
-pub use buffer::SpillBuffer;
+pub use buffer::{SpillBuffer, SpillDrain};
 pub use chunkfile::{RecordReader, RecordWriter};
 pub use diskio::NodeDisk;

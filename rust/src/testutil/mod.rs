@@ -42,6 +42,22 @@ pub fn tmpdir(tag: &str) -> TmpDir {
     TmpDir { path }
 }
 
+/// Recursive count of plain files under `dir` (0 if it does not exist).
+/// Scratch-leak assertions in the unit and integration suites share this.
+pub fn files_under(dir: &Path) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    let mut n = 0;
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            n += files_under(&p);
+        } else {
+            n += 1;
+        }
+    }
+    n
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

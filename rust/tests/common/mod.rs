@@ -1,5 +1,10 @@
 //! Shared helpers for the integration suites.
 
+// Each integration crate includes this module and uses a subset of it.
+#![allow(dead_code)]
+
+use std::path::Path;
+
 use roomy::{Roomy, RoomyConfig};
 
 /// Open a Roomy instance over a fresh temp root; returns the guard too so
@@ -23,3 +28,38 @@ pub fn roomy_with(tag: &str, f: impl FnOnce(&mut RoomyConfig)) -> (roomy::testut
 pub fn artifacts_present() -> bool {
     std::path::Path::new("artifacts/manifest.tsv").exists()
 }
+
+/// FNV-1a over every file under `root`: (sorted relative path, contents).
+/// Two instance roots with equal digests hold byte-identical on-disk
+/// state — the currency of the determinism suites.
+pub fn dir_digest(root: &Path) -> u64 {
+    fn collect(base: &Path, dir: &Path, out: &mut Vec<std::path::PathBuf>) {
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                collect(base, &p, out);
+            } else {
+                out.push(p.strip_prefix(base).unwrap().to_path_buf());
+            }
+        }
+    }
+    let mut files = Vec::new();
+    collect(root, root, &mut files);
+    files.sort();
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for rel in files {
+        eat(rel.to_string_lossy().as_bytes());
+        eat(&[0]);
+        eat(&std::fs::read(root.join(&rel)).unwrap());
+        eat(&[0xFF]);
+    }
+    h
+}
+

@@ -8,43 +8,12 @@
 //! (full recursive digest of the instance root) and identical
 //! order-sensitive reduce results.
 
-use std::path::Path;
+mod common;
 
+use common::dir_digest;
 use roomy::constructs::bfs;
 use roomy::testutil::{tmpdir, Rng};
 use roomy::{Roomy, RoomyConfig};
-
-/// FNV-1a over every file under `root`: (sorted relative path, contents).
-fn dir_digest(root: &Path) -> u64 {
-    fn collect(base: &Path, dir: &Path, out: &mut Vec<std::path::PathBuf>) {
-        let Ok(entries) = std::fs::read_dir(dir) else { return };
-        for e in entries.flatten() {
-            let p = e.path();
-            if p.is_dir() {
-                collect(base, &p, out);
-            } else {
-                out.push(p.strip_prefix(base).unwrap().to_path_buf());
-            }
-        }
-    }
-    let mut files = Vec::new();
-    collect(root, root, &mut files);
-    files.sort();
-    let mut h = 0xcbf29ce484222325u64;
-    let mut eat = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-    };
-    for rel in files {
-        eat(rel.to_string_lossy().as_bytes());
-        eat(&[0]);
-        eat(&std::fs::read(root.join(&rel)).unwrap());
-        eat(&[0xFF]);
-    }
-    h
-}
 
 /// Run `workload` once per worker count; the workload returns an optional
 /// order-sensitive value that must also match. Asserts equal digests.
@@ -57,6 +26,7 @@ fn assert_deterministic(tag: &str, workload: impl Fn(&Roomy, &mut Rng) -> u64) {
         cfg.buckets_per_worker = 2;
         cfg.num_workers = nw;
         cfg.op_buffer_bytes = 256; // force staging spills
+        cfg.capture_spill_threshold = 96; // force in-collective capture spills
         let r = Roomy::open(cfg).unwrap();
         let mut rng = Rng::new(0xD15EA5E); // identical input per worker count
         let value = workload(&r, &mut rng);
@@ -256,31 +226,87 @@ fn det_bfs_level_expansion() {
     });
 }
 
-/// Full BFS drivers agree (level profile and totals) across worker counts.
+/// One **batched** BFS level expansion, staged exactly the way
+/// `bfs_list_batched` / `bfs_hash_batched` stage it (per-task frontier
+/// batches via `map_batched`, delayed adds on the next level, delayed
+/// insert-if-absent updates on the level table). The digest check pins
+/// the *byte order* of the batched staging path across worker counts —
+/// this was only result-deterministic before the per-task batch
+/// accumulators.
 #[test]
-fn det_full_bfs_levels() {
-    let mut profiles = Vec::new();
-    for &nw in &[1usize, 2, 4] {
-        let t = tmpdir(&format!("det_bfs_{nw}"));
-        let mut cfg = RoomyConfig::for_testing(t.path());
-        cfg.num_workers = nw;
-        let r = Roomy::open(cfg).unwrap();
-        let d = 7u32;
-        let stats = bfs::bfs_hash_batched(&r, "cube", &[0u64], |batch, out| {
+fn det_bfs_batched_staging() {
+    assert_deterministic("bfs_batched", |r, rng| {
+        let cur = r.list::<u64>("cur").unwrap();
+        for _ in 0..1_200 {
+            cur.add(&rng.below(1 << 12)).unwrap();
+        }
+        cur.sync().unwrap();
+        cur.remove_dupes().unwrap();
+
+        let next = r.list::<u64>("next").unwrap();
+        let table = r.hash_table::<u64, u32>("levels").unwrap();
+        let next_emit = next.clone();
+        let visit = table.register_update(move |k: &u64, cur_v: Option<&u32>, _p: &()| {
+            match cur_v {
+                Some(&v) => Some(v),
+                None => {
+                    next_emit.add(k).expect("emit");
+                    Some(1)
+                }
+            }
+        });
+        // odd batch size so shards end in ragged tail batches
+        cur.map_batched(37, |batch| {
             for &v in batch {
-                for b in 0..d {
-                    out.push(v ^ (1 << b));
+                for bit in 0..6u32 {
+                    let nb = v ^ (1 << bit);
+                    next.add(&nb)?;
+                    table.update(&nb, &(), visit)?;
                 }
             }
             Ok(())
         })
         .unwrap();
-        profiles.push((nw, stats));
+        table.sync().unwrap();
+        next.sync().unwrap();
+        let h = table
+            .reduce(|| 0u64, |acc, k, v| order_hash(acc, k ^ *v as u64), order_hash)
+            .unwrap();
+        next.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap()
+    });
+}
+
+/// Full **batched** BFS drivers agree (level profile and totals) across
+/// worker counts — both the list and the hash-table variant.
+#[test]
+fn det_full_bfs_levels() {
+    fn gen(batch: &[u64], out: &mut Vec<u64>) -> roomy::Result<()> {
+        for &v in batch {
+            for b in 0..7u32 {
+                out.push(v ^ (1 << b));
+            }
+        }
+        Ok(())
     }
-    for (nw, s) in &profiles[1..] {
-        assert_eq!(
-            s, &profiles[0].1,
-            "BFS level profile diverged at num_workers={nw}"
-        );
+    for driver in ["hash", "list"] {
+        let mut profiles = Vec::new();
+        for &nw in &[1usize, 2, 4] {
+            let t = tmpdir(&format!("det_bfs_{driver}_{nw}"));
+            let mut cfg = RoomyConfig::for_testing(t.path());
+            cfg.num_workers = nw;
+            cfg.capture_spill_threshold = 128; // exercise capture spills
+            let r = Roomy::open(cfg).unwrap();
+            let stats = match driver {
+                "hash" => bfs::bfs_hash_batched(&r, "cube", &[0u64], gen).unwrap(),
+                _ => bfs::bfs_list_batched(&r, "cube", &[0u64], gen).unwrap(),
+            };
+            profiles.push((nw, stats));
+        }
+        for (nw, s) in &profiles[1..] {
+            assert_eq!(
+                s, &profiles[0].1,
+                "{driver} BFS level profile diverged at num_workers={nw}"
+            );
+        }
     }
 }

@@ -5,7 +5,8 @@
 
 mod common;
 
-use common::roomy_with;
+use common::{dir_digest, roomy_with};
+use roomy::testutil::files_under;
 use roomy::accel::Accel;
 use roomy::apps::pancake::{self, Structure};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -118,6 +119,110 @@ fn concurrent_clients_one_pool_stress() {
     // every event id exactly once
     rl.remove_dupes().unwrap();
     assert_eq!(rl.size(), (nthreads as u64) * per_thread);
+}
+
+/// The strict space bound inside collectives: a capture-heavy map (each
+/// element issues several delayed adds, ~10× the capture threshold per
+/// task in total) must keep per-task capture RAM within threshold + one
+/// record, spill the rest to scratch files, clean the scratch up, and
+/// still produce on-disk bytes identical to the serial (1-worker) run.
+#[test]
+fn capture_heavy_map_is_space_bounded_and_deterministic() {
+    const THRESHOLD: usize = 256;
+    // list<u64> op record = 2-byte header + 8-byte element, + 8-byte
+    // capture log header
+    const RECORD: usize = 2 + 8 + 8;
+
+    let run = |nw: usize| {
+        let (t, r) = roomy_with(&format!("pool_capture_bound_{nw}"), |c| {
+            c.num_workers = nw;
+            c.workers = 3;
+            c.buckets_per_worker = 2;
+            c.capture_spill_threshold = THRESHOLD;
+        });
+        let src = r.list::<u64>("src").unwrap();
+        let n = 3_000u64;
+        for v in 0..n {
+            src.add(&v).unwrap();
+        }
+        src.sync().unwrap();
+        let dst = r.list::<u64>("dst").unwrap();
+        let dst2 = dst.clone();
+        // ~500 elements per task × 4 adds × 10 bytes ≈ 20 KiB per task:
+        // two orders of magnitude over the 256-byte threshold.
+        src.map(move |&v| {
+            for k in 0..4u64 {
+                dst2.add(&(v * 4 + k)).unwrap();
+            }
+        })
+        .unwrap();
+
+        let stats = r.cluster().pool().stats();
+        assert!(
+            stats.capture_peak_task_ram() as usize <= THRESHOLD + RECORD,
+            "peak per-task capture RAM {} exceeds threshold {} + record",
+            stats.capture_peak_task_ram(),
+            THRESHOLD,
+        );
+        assert!(stats.capture_spilled_bytes() > 0, "spill path never ran");
+        assert!(stats.capture_scratch_files() > 0);
+        // scratch is gone after the barrier
+        for w in 0..r.cluster().nworkers() {
+            let scratch = r.cluster().disk(w).root().join("tmp/capture");
+            assert_eq!(files_under(&scratch), 0, "scratch leak on node {w}");
+        }
+
+        dst.sync().unwrap();
+        assert_eq!(dst.size(), n * 4);
+        drop(r);
+        dir_digest(t.path())
+    };
+
+    let serial = run(1);
+    for nw in [2usize, 4] {
+        assert_eq!(run(nw), serial, "on-disk bytes diverged at num_workers={nw}");
+    }
+}
+
+/// A map that panics mid-collective must leave zero capture scratch files
+/// behind — including those of tasks that had already spilled.
+#[test]
+fn panicking_map_leaves_no_capture_scratch() {
+    let (_t, r) = roomy_with("pool_capture_panic_leak", |c| {
+        c.num_workers = 4;
+        c.capture_spill_threshold = 64; // every task spills quickly
+    });
+    let src = r.list::<u64>("src").unwrap();
+    for v in 0..2_000u64 {
+        src.add(&v).unwrap();
+    }
+    src.sync().unwrap();
+    let dst = r.list::<u64>("dst").unwrap();
+    let dst2 = dst.clone();
+    let res = src.map(move |&v| {
+        for k in 0..4u64 {
+            dst2.add(&(v ^ k)).unwrap();
+        }
+        // all shards stage plenty before any task trips the panic
+        assert!(v != 1_777, "boom");
+    });
+    match res {
+        Err(roomy::RoomyError::WorkerPanic { .. }) => {}
+        other => panic!("expected WorkerPanic, got {other:?}"),
+    }
+    // scratch files were really created (the leak check is not vacuous)...
+    assert!(r.cluster().pool().stats().capture_spilled_bytes() > 0);
+    // ...and none survive the failed collective.
+    for w in 0..r.cluster().nworkers() {
+        let scratch = r.cluster().disk(w).root().join("tmp/capture");
+        assert_eq!(files_under(&scratch), 0, "scratch leak on node {w}");
+    }
+    // nothing captured in the failed collective was replayed
+    assert_eq!(dst.pending_bytes(), 0);
+    // the structure stays usable afterwards
+    dst.add(&1).unwrap();
+    dst.sync().unwrap();
+    assert_eq!(dst.size(), 1);
 }
 
 /// Collectives from multiple threads at once on the same structure.
