@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use crate::config::RoomyConfig;
 use crate::error::{Result, RoomyError};
-use crate::metrics::{IoSnapshot, PhaseTimes};
+use crate::metrics::{IoSnapshot, PhaseTimes, PipelineSnapshot};
 use crate::runtime::pool::WorkerPool;
 use crate::storage::NodeDisk;
 
@@ -38,23 +38,27 @@ pub struct Cluster {
 
 impl Cluster {
     /// Bring up the cluster: create one disk directory per node under
-    /// `cfg.root`. The collective pool's op capture spills to per-task
-    /// scratch directories under each node's `tmp/capture/` (allocated
-    /// lazily on first spill, removed after replay), so in-collective op
-    /// issue stays inside `cfg.capture_spill_threshold` bytes of RAM per
-    /// task **per destination structure** — O(threshold), not O(ops),
+    /// `cfg.root` (each with an I/O service when
+    /// `cfg.io_pipeline_depth > 0`). The collective pool's op capture
+    /// spills to per-task scratch directories under each node's
+    /// `tmp/capture/` (allocated lazily on first spill, removed after
+    /// replay), so in-collective op issue stays inside one **flat**
+    /// `cfg.capture_spill_threshold`-byte budget of RAM per task —
+    /// O(threshold), not O(ops) and not O(destination structures),
     /// however many ops a collective issues.
     pub fn new(cfg: &RoomyConfig) -> Result<Self> {
         cfg.validate()?;
         let mut disks = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let dir = cfg.root.join(format!("node{w}"));
-            let disk = NodeDisk::create(w, dir, cfg.disk)?;
-            // Capture scratch is strictly ephemeral. A crashed process can
-            // leave logs behind (Drop never ran), and scratch names restart
-            // at r0t0 per process — purge so a rerun over the same root
-            // cannot append to (and later replay) a dead run's ops.
-            disk.remove_dir("tmp/capture")?;
+            let disk = NodeDisk::create_with_depth(w, dir, cfg.disk, cfg.io_pipeline_depth)?;
+            // Everything under tmp/ is strictly ephemeral scratch
+            // (capture logs, sort runs, pipeline staging). A crashed
+            // process can leave it behind (Drop never ran), and scratch
+            // names restart per process — purge so a rerun over the same
+            // root can neither replay a dead run's ops nor trip over its
+            // staging files.
+            disk.remove_dir("tmp")?;
             disks.push(Arc::new(disk));
         }
         let mut pool = WorkerPool::new(cfg.num_workers);
@@ -117,7 +121,7 @@ impl Cluster {
     pub fn run<R, F>(&self, phase: &str, job: F) -> Result<Vec<R>>
     where
         R: Send,
-        F: Fn(usize, &NodeDisk) -> Result<R> + Sync,
+        F: Fn(usize, &Arc<NodeDisk>) -> Result<R> + Sync,
     {
         self.phases.time(phase, || {
             let results: Vec<std::thread::Result<Result<R>>> =
@@ -161,7 +165,7 @@ impl Cluster {
     pub fn run_buckets<R, F>(&self, phase: &str, job: F) -> Result<Vec<R>>
     where
         R: Send,
-        F: Fn(u32, &NodeDisk) -> Result<R> + Sync,
+        F: Fn(u32, &Arc<NodeDisk>) -> Result<R> + Sync,
     {
         let nb = self.nbuckets() as usize;
         self.phases.time(phase, || {
@@ -185,11 +189,32 @@ impl Cluster {
         self.disks.iter().map(|d| d.stats().snapshot()).collect()
     }
 
+    /// Aggregate read-ahead / write-behind counters across all nodes
+    /// (peak stream buffer RAM is a max, the rest sum).
+    pub fn pipeline_snapshot(&self) -> PipelineSnapshot {
+        self.disks
+            .iter()
+            .map(|d| d.pipe_stats().snapshot())
+            .fold(PipelineSnapshot::default(), |a, b| a + b)
+    }
+
+    /// Liveness flags of every node's I/O service lane threads (empty at
+    /// depth 0). The lifecycle tests hold these across teardown to prove
+    /// no service thread survives the instance.
+    pub fn io_alive_flags(&self) -> Vec<Arc<std::sync::atomic::AtomicBool>> {
+        self.disks
+            .iter()
+            .filter_map(|d| d.io_service().map(|s| s.alive_flags()))
+            .flatten()
+            .collect()
+    }
+
     /// Reset all I/O counters, phase times and pool counters (bench
     /// harness support).
     pub fn reset_metrics(&self) {
         for d in &self.disks {
             d.stats().reset();
+            d.pipe_stats().reset();
         }
         self.phases.reset();
         self.pool.stats().reset();
@@ -226,15 +251,24 @@ mod tests {
     }
 
     #[test]
-    fn stale_capture_scratch_purged_on_bringup() {
+    fn stale_tmp_scratch_purged_on_bringup() {
         let t = tmpdir("cluster_stale_scratch");
         drop(cluster(2, 1, t.path()));
-        // simulate a crashed process leaving capture scratch behind
-        let stale = t.path().join("node0/tmp/capture/r0t0/d0.capture");
-        std::fs::create_dir_all(stale.parent().unwrap()).unwrap();
-        std::fs::write(&stale, b"dead run").unwrap();
+        // simulate a crashed process leaving every flavor of tmp scratch
+        // behind: capture logs, sort runs, pipeline staging
+        let stale = [
+            t.path().join("node0/tmp/capture/r0t0/d0.capture"),
+            t.path().join("node0/tmp/sort/rl_a_s0.dat.run3"),
+            t.path().join("node1/tmp/pipeline/n1-17.pstage"),
+        ];
+        for p in &stale {
+            std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+            std::fs::write(p, b"dead run").unwrap();
+        }
         let _c = cluster(2, 1, t.path());
-        assert!(!stale.exists(), "stale scratch must not survive bring-up");
+        for p in &stale {
+            assert!(!p.exists(), "stale scratch {p:?} must not survive bring-up");
+        }
     }
 
     #[test]

@@ -85,14 +85,26 @@ pub struct RoomyConfig {
     pub root: PathBuf,
     /// Staged delayed-op bytes per bucket before spilling to disk.
     pub op_buffer_bytes: usize,
-    /// In-collective op-capture bytes per pool task (per destination
-    /// structure) before the capture log spills to a scratch file under
-    /// `tmp/capture/` on the task's node disk — keeps capture-heavy
+    /// In-collective op-capture bytes per pool task — one **flat budget
+    /// shared across all of the task's destination structures** — before
+    /// the largest capture log spills to a scratch file under
+    /// `tmp/capture/` on the task's node disk. Keeps capture-heavy
     /// collectives (e.g. BFS frontier expansion) inside the strict space
-    /// bound. Independent knob whose default *value* matches
-    /// `op_buffer_bytes`'s default (changing one does not move the
-    /// other); env `ROOMY_CAPTURE_SPILL` overrides, CLI `--capture-spill`.
+    /// bound: per-task capture RAM is O(threshold), however many
+    /// structures the task stages into. Independent knob whose default
+    /// *value* matches `op_buffer_bytes`'s default (changing one does not
+    /// move the other); env `ROOMY_CAPTURE_SPILL` overrides, CLI
+    /// `--capture-spill`.
     pub capture_spill_threshold: usize,
+    /// Chunk buffers per pipelined bucket stream
+    /// ([`crate::storage::pipeline`]): 0 keeps every read/write
+    /// synchronous (the seed behavior); depth d ≥ 1 runs a per-node I/O
+    /// service and lets a pool task compute on one chunk while the
+    /// service reads the next ahead and flushes the previous behind.
+    /// On-disk bytes are identical at every depth; peak pipeline RAM per
+    /// stream is depth × [`crate::storage::PIPE_CHUNK`]. Env
+    /// `ROOMY_IO_DEPTH` overrides, CLI `--io-depth`.
+    pub io_pipeline_depth: usize,
     /// In-RAM run size for external sort (bytes).
     pub sort_chunk_bytes: usize,
     /// RAM budget per worker for hash-set based `remove_all` before
@@ -117,6 +129,7 @@ impl RoomyConfig {
             root: root.into(),
             op_buffer_bytes: 64 * 1024,
             capture_spill_threshold: env_capture_spill().unwrap_or(64 * 1024),
+            io_pipeline_depth: env_io_depth().unwrap_or(0),
             sort_chunk_bytes: 4 * 1024 * 1024,
             ram_budget_bytes: 64 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -179,6 +192,15 @@ fn env_capture_spill() -> Option<usize> {
         .filter(|&n| n > 0)
 }
 
+/// Pipeline-depth override (`ROOMY_IO_DEPTH`, chunk buffers per stream;
+/// 0 = synchronous), used by CI to run the whole suite with overlapped
+/// bucket I/O.
+fn env_io_depth() -> Option<usize> {
+    std::env::var("ROOMY_IO_DEPTH")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+}
+
 impl Default for RoomyConfig {
     fn default() -> Self {
         RoomyConfig {
@@ -190,6 +212,7 @@ impl Default for RoomyConfig {
             root: std::env::temp_dir().join("roomy"),
             op_buffer_bytes: 4 * 1024 * 1024,
             capture_spill_threshold: env_capture_spill().unwrap_or(4 * 1024 * 1024),
+            io_pipeline_depth: env_io_depth().unwrap_or(2),
             sort_chunk_bytes: 64 * 1024 * 1024,
             ram_budget_bytes: 256 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -242,6 +265,15 @@ mod tests {
         let mut c = RoomyConfig::for_testing("/tmp/x");
         c.num_workers = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn any_pipeline_depth_validates() {
+        let mut c = RoomyConfig::for_testing("/tmp/x");
+        for depth in [0usize, 1, 4, 1024] {
+            c.io_pipeline_depth = depth;
+            c.validate().unwrap();
+        }
     }
 
     #[test]

@@ -35,6 +35,11 @@ pub enum RoomyError {
 
     /// A worker thread panicked during a collective operation.
     WorkerPanic { worker: usize, phase: String },
+
+    /// The overlapped-I/O pipeline failed outside an ordinary file
+    /// operation (service thread gone, stalled drain, stream poisoned by
+    /// an earlier error whose value was already consumed).
+    Pipeline(String),
 }
 
 impl std::fmt::Display for RoomyError {
@@ -55,6 +60,7 @@ impl std::fmt::Display for RoomyError {
             RoomyError::WorkerPanic { worker, phase } => {
                 write!(f, "worker {worker} panicked during {phase}")
             }
+            RoomyError::Pipeline(msg) => write!(f, "io pipeline error: {msg}"),
         }
     }
 }

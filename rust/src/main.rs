@@ -49,9 +49,14 @@ fn print_help() {
 USAGE:
   roomy pancake --n <N> [--structure list|array|hash] [--workers W]
                 [--num-workers T]      # collective pool threads
-                [--capture-spill B]    # in-collective op-capture RAM per
-                                       # task before spilling (bytes; env
-                                       # ROOMY_CAPTURE_SPILL)
+                [--capture-spill B]    # flat in-collective op-capture RAM
+                                       # budget per task before spilling
+                                       # (bytes; env ROOMY_CAPTURE_SPILL)
+                [--io-depth D]         # chunk buffers per bucket stream:
+                                       # 0 = synchronous I/O, D >= 1 reads
+                                       # ahead / writes behind through the
+                                       # per-node io service (env
+                                       # ROOMY_IO_DEPTH)
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
   roomy rubik   [--workers W] [--root DIR]        # 2x2x2 cube God's number
@@ -109,6 +114,7 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
         num_workers: f.get_parse("num-workers", defaults.num_workers)?,
         capture_spill_threshold: f
             .get_parse("capture-spill", defaults.capture_spill_threshold)?,
+        io_pipeline_depth: f.get_parse("io-depth", defaults.io_pipeline_depth)?,
         ..defaults
     };
     cfg.root = f

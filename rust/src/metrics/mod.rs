@@ -175,6 +175,122 @@ impl PhaseTimes {
     }
 }
 
+/// Counters for one node's overlapped-I/O pipeline
+/// ([`crate::storage::pipeline`]): read-ahead / write-behind volume, how
+/// long consumers stalled waiting on the service lanes, and the largest
+/// buffer RAM any single stream allocated (the observable form of the
+/// pipeline's `depth × chunk` space bound).
+#[derive(Debug, Default)]
+pub struct PipelineStats {
+    /// Streams opened in overlapped mode (depth > 0).
+    streams: AtomicU64,
+    /// Chunks delivered ahead of the consumer by the read lane.
+    chunks_ahead: AtomicU64,
+    /// Bytes read ahead by the read lane.
+    bytes_ahead: AtomicU64,
+    /// Chunks flushed behind the producer by the write lane.
+    chunks_behind: AtomicU64,
+    /// Bytes written behind by the write lane.
+    bytes_behind: AtomicU64,
+    /// Nanoseconds consumers spent blocked waiting for a prefetched chunk
+    /// (read-ahead misses; 0 = the pipeline always stayed ahead).
+    reader_wait_ns: AtomicU64,
+    /// Nanoseconds producers spent blocked waiting for a free buffer
+    /// (write-behind backpressure).
+    writer_wait_ns: AtomicU64,
+    /// Largest buffer RAM a single stream ever allocated — must stay
+    /// ≤ depth × chunk (tests assert this).
+    peak_stream_buf: AtomicU64,
+}
+
+impl PipelineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_stream(&self) {
+        self.streams.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_read_ahead(&self, bytes: u64) {
+        self.chunks_ahead.fetch_add(1, Ordering::Relaxed);
+        self.bytes_ahead.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_write_behind(&self, bytes: u64) {
+        self.chunks_behind.fetch_add(1, Ordering::Relaxed);
+        self.bytes_behind.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_reader_wait(&self, d: Duration) {
+        self.reader_wait_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_writer_wait(&self, d: Duration) {
+        self.writer_wait_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Fold one stream's current buffer allocation into the high-water
+    /// mark.
+    pub fn note_stream_buf(&self, bytes: u64) {
+        self.peak_stream_buf.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> PipelineSnapshot {
+        PipelineSnapshot {
+            streams: self.streams.load(Ordering::Relaxed),
+            chunks_ahead: self.chunks_ahead.load(Ordering::Relaxed),
+            bytes_ahead: self.bytes_ahead.load(Ordering::Relaxed),
+            chunks_behind: self.chunks_behind.load(Ordering::Relaxed),
+            bytes_behind: self.bytes_behind.load(Ordering::Relaxed),
+            reader_wait_ns: self.reader_wait_ns.load(Ordering::Relaxed),
+            writer_wait_ns: self.writer_wait_ns.load(Ordering::Relaxed),
+            peak_stream_buf: self.peak_stream_buf.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.streams.store(0, Ordering::Relaxed);
+        self.chunks_ahead.store(0, Ordering::Relaxed);
+        self.bytes_ahead.store(0, Ordering::Relaxed);
+        self.chunks_behind.store(0, Ordering::Relaxed);
+        self.bytes_behind.store(0, Ordering::Relaxed);
+        self.reader_wait_ns.store(0, Ordering::Relaxed);
+        self.writer_wait_ns.store(0, Ordering::Relaxed);
+        self.peak_stream_buf.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Plain-data snapshot of [`PipelineStats`]; `+` aggregates nodes
+/// (peak is a max, everything else sums).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PipelineSnapshot {
+    pub streams: u64,
+    pub chunks_ahead: u64,
+    pub bytes_ahead: u64,
+    pub chunks_behind: u64,
+    pub bytes_behind: u64,
+    pub reader_wait_ns: u64,
+    pub writer_wait_ns: u64,
+    pub peak_stream_buf: u64,
+}
+
+impl std::ops::Add for PipelineSnapshot {
+    type Output = PipelineSnapshot;
+    fn add(self, o: PipelineSnapshot) -> PipelineSnapshot {
+        PipelineSnapshot {
+            streams: self.streams + o.streams,
+            chunks_ahead: self.chunks_ahead + o.chunks_ahead,
+            bytes_ahead: self.bytes_ahead + o.bytes_ahead,
+            chunks_behind: self.chunks_behind + o.chunks_behind,
+            bytes_behind: self.bytes_behind + o.bytes_behind,
+            reader_wait_ns: self.reader_wait_ns + o.reader_wait_ns,
+            writer_wait_ns: self.writer_wait_ns + o.writer_wait_ns,
+            peak_stream_buf: self.peak_stream_buf.max(o.peak_stream_buf),
+        }
+    }
+}
+
 /// Per-worker counters for the collective execution pool
 /// ([`crate::runtime::pool`]): how many bucket tasks each worker slot ran
 /// and how long it was busy. Worker slots are stable across collectives
@@ -196,6 +312,10 @@ pub struct PoolStats {
     /// Largest capture RAM any single task reached, transient append peak
     /// included — the observable form of the per-task space bound.
     cap_peak_task_ram: AtomicU64,
+    /// Spills forced by the **flat per-task budget**: a push on one
+    /// destination log pushed the task's total capture RAM over
+    /// `capture_spill_threshold`, flushing the largest log to scratch.
+    cap_budget_spills: AtomicU64,
 }
 
 impl PoolStats {
@@ -208,6 +328,7 @@ impl PoolStats {
             cap_spilled: AtomicU64::new(0),
             cap_files: AtomicU64::new(0),
             cap_peak_task_ram: AtomicU64::new(0),
+            cap_budget_spills: AtomicU64::new(0),
         }
     }
 
@@ -241,13 +362,22 @@ impl PoolStats {
     }
 
     /// Charge one finished task's op-capture footprint: bytes captured,
-    /// bytes spilled to scratch, scratch files created, and the task's
-    /// peak capture RAM (folded into the pool-wide high-water mark).
-    pub fn charge_capture(&self, bytes: u64, spilled: u64, files: u64, peak_ram: u64) {
+    /// bytes spilled to scratch, scratch files created, the task's peak
+    /// capture RAM (folded into the pool-wide high-water mark), and how
+    /// many spills the flat per-task budget forced.
+    pub fn charge_capture(
+        &self,
+        bytes: u64,
+        spilled: u64,
+        files: u64,
+        peak_ram: u64,
+        budget_spills: u64,
+    ) {
         self.cap_bytes.fetch_add(bytes, Ordering::Relaxed);
         self.cap_spilled.fetch_add(spilled, Ordering::Relaxed);
         self.cap_files.fetch_add(files, Ordering::Relaxed);
         self.cap_peak_task_ram.fetch_max(peak_ram, Ordering::Relaxed);
+        self.cap_budget_spills.fetch_add(budget_spills, Ordering::Relaxed);
     }
 
     /// Total op-capture record bytes (headers included).
@@ -266,11 +396,17 @@ impl PoolStats {
     }
 
     /// Peak capture RAM any single task reached (bytes) — the per-task
-    /// space bound made observable; tests assert it stays within
-    /// `capture_spill_threshold` + one record per destination structure
-    /// staged into.
+    /// space bound made observable; tests assert it stays within the flat
+    /// per-task `capture_spill_threshold` + one record, however many
+    /// destination structures the task staged into.
     pub fn capture_peak_task_ram(&self) -> u64 {
         self.cap_peak_task_ram.load(Ordering::Relaxed)
+    }
+
+    /// Spills forced by the flat per-task capture budget (0 = every
+    /// task's combined capture always fit in the threshold).
+    pub fn capture_budget_spills(&self) -> u64 {
+        self.cap_budget_spills.load(Ordering::Relaxed)
     }
 
     /// Zero all counters (bench harness support).
@@ -285,6 +421,7 @@ impl PoolStats {
         self.cap_spilled.store(0, Ordering::Relaxed);
         self.cap_files.store(0, Ordering::Relaxed);
         self.cap_peak_task_ram.store(0, Ordering::Relaxed);
+        self.cap_budget_spills.store(0, Ordering::Relaxed);
     }
 
     /// Human-readable multi-line report (one row per worker slot).
@@ -297,11 +434,12 @@ impl PoolStats {
             ));
         }
         s.push_str(&format!(
-            "  capture: {} captured, {} spilled, {} scratch files, peak task ram {}\n",
+            "  capture: {} captured, {} spilled, {} scratch files, peak task ram {}, {} budget-forced spills\n",
             fmt_bytes(self.capture_bytes()),
             fmt_bytes(self.capture_spilled_bytes()),
             self.capture_scratch_files(),
             fmt_bytes(self.capture_peak_task_ram()),
+            self.capture_budget_spills(),
         ));
         s
     }
@@ -415,16 +553,47 @@ mod tests {
     #[test]
     fn pool_capture_counters() {
         let p = PoolStats::new(1);
-        p.charge_capture(100, 60, 1, 48);
-        p.charge_capture(50, 0, 0, 32); // smaller peak must not lower the max
+        p.charge_capture(100, 60, 1, 48, 2);
+        p.charge_capture(50, 0, 0, 32, 0); // smaller peak must not lower the max
         assert_eq!(p.capture_bytes(), 150);
         assert_eq!(p.capture_spilled_bytes(), 60);
         assert_eq!(p.capture_scratch_files(), 1);
         assert_eq!(p.capture_peak_task_ram(), 48);
+        assert_eq!(p.capture_budget_spills(), 2);
         assert!(p.report().contains("capture:"), "{}", p.report());
         p.reset();
         assert_eq!(p.capture_bytes(), 0);
         assert_eq!(p.capture_peak_task_ram(), 0);
+        assert_eq!(p.capture_budget_spills(), 0);
+    }
+
+    #[test]
+    fn pipeline_stats_accumulate_and_aggregate() {
+        let s = PipelineStats::new();
+        s.add_stream();
+        s.add_read_ahead(100);
+        s.add_read_ahead(28);
+        s.add_write_behind(64);
+        s.add_reader_wait(Duration::from_micros(5));
+        s.add_writer_wait(Duration::from_micros(7));
+        s.note_stream_buf(512);
+        s.note_stream_buf(256); // smaller must not lower the peak
+        let a = s.snapshot();
+        assert_eq!(a.streams, 1);
+        assert_eq!(a.chunks_ahead, 2);
+        assert_eq!(a.bytes_ahead, 128);
+        assert_eq!(a.chunks_behind, 1);
+        assert_eq!(a.bytes_behind, 64);
+        assert!(a.reader_wait_ns >= 5_000 && a.writer_wait_ns >= 7_000);
+        assert_eq!(a.peak_stream_buf, 512);
+
+        let b = PipelineSnapshot { peak_stream_buf: 1024, streams: 2, ..Default::default() };
+        let sum = a + b;
+        assert_eq!(sum.streams, 3);
+        assert_eq!(sum.peak_stream_buf, 1024, "aggregate peak is a max");
+
+        s.reset();
+        assert_eq!(s.snapshot(), PipelineSnapshot::default());
     }
 
     #[test]

@@ -20,7 +20,8 @@ use super::funcs::{AccessId, FuncRegistry, PredId, UpdateId};
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
-use crate::storage::chunkfile::{RecordReader, RecordWriter};
+use crate::storage::chunkfile::RecordWriter;
+use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
 
 /// Records streamed per batch during map/reduce scans.
 const SCAN_BATCH: usize = 8192;
@@ -256,7 +257,9 @@ impl<T: Element> RoomyArray<T> {
             let npreds = this.funcs.npreds();
             let mut dirty = false;
 
-            let mut reader = ops.reader()?;
+            // Op-log replay streams through the read-ahead lane; the
+            // drain removes the log's spill file when it drops.
+            let mut reader = ops.into_drain()?;
             let mut header = [0u8; 2];
             let mut idx_buf = [0u8; 8];
             let mut passed = Vec::new();
@@ -307,7 +310,7 @@ impl<T: Element> RoomyArray<T> {
             if dirty {
                 disk.write_all(&file, &data)?;
             }
-            ops.clear()
+            Ok(())
         })
     }
 
@@ -339,8 +342,9 @@ impl<T: Element> RoomyArray<T> {
             let npreds = this.funcs.npreds();
             let tmp = format!("{}.mu.tmp", file);
             {
-                let mut r = RecordReader::open(disk, &file, T::SIZE)?;
-                let mut w = RecordWriter::create(disk, &tmp, T::SIZE)?;
+                // read-ahead the scan, write-behind the rewrite
+                let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
+                let mut w = WriteBehindWriter::create(disk, &tmp, T::SIZE)?;
                 let mut buf = Vec::new();
                 let base = b as u64 * this.bsize;
                 let mut idx = base;
@@ -485,7 +489,7 @@ impl<T: Element> ArrayInner<T> {
     fn for_owned_buckets(
         &self,
         phase: &str,
-        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+        f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
         self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())
@@ -495,13 +499,13 @@ impl<T: Element> ArrayInner<T> {
     fn scan_bucket(
         &self,
         b: u32,
-        disk: &crate::storage::NodeDisk,
+        disk: &Arc<NodeDisk>,
         mut f: impl FnMut(u64, &[u8]) -> Result<()>,
     ) -> Result<()> {
         if self.bucket_len(b) == 0 {
             return Ok(());
         }
-        let mut r = RecordReader::open(disk, self.bucket_file(b), T::SIZE)?;
+        let mut r = PrefetchReader::open(disk, self.bucket_file(b), T::SIZE)?;
         let mut buf = Vec::new();
         let mut idx = b as u64 * self.bsize;
         loop {

@@ -213,7 +213,9 @@ impl RoomyBitArray {
             let mut data = disk.read_all(&file)?;
             let mut dirty = false;
 
-            let mut reader = ops.reader()?;
+            // Op-log replay streams through the read-ahead lane; the
+            // drain removes the log's spill file when it drops.
+            let mut reader = ops.into_drain()?;
             let mut header = [0u8; 2];
             let mut idx_buf = [0u8; 8];
             let mut passed = Vec::new();
@@ -277,7 +279,7 @@ impl RoomyBitArray {
             if dirty {
                 disk.write_all(&file, &data)?;
             }
-            ops.clear()
+            Ok(())
         })
     }
 
@@ -382,7 +384,7 @@ impl BitInner {
     fn for_owned_buckets(
         &self,
         phase: &str,
-        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+        f: impl Fn(&Self, u32, &std::sync::Arc<crate::storage::NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
         self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())

@@ -21,7 +21,7 @@ use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
 use crate::hashfn;
-use crate::storage::chunkfile::{RecordReader, RecordWriter};
+use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
 
 const SCAN_BATCH: usize = 4096;
 
@@ -341,17 +341,18 @@ impl<K: Element, V: Element> HtInner<K, V> {
     fn for_owned_buckets(
         &self,
         phase: &str,
-        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+        f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
         self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())
     }
 
-    /// Stream bucket `b`'s (key ++ value) records.
+    /// Stream bucket `b`'s (key ++ value) records (read-ahead on a
+    /// pipelined disk).
     fn scan_bucket(
         &self,
         b: u32,
-        disk: &crate::storage::NodeDisk,
+        disk: &Arc<NodeDisk>,
         mut f: impl FnMut(&[u8]) -> Result<()>,
     ) -> Result<()> {
         let file = self.bucket_file(b);
@@ -359,7 +360,7 @@ impl<K: Element, V: Element> HtInner<K, V> {
             return Ok(());
         }
         let rec = Self::rec_size();
-        let mut r = RecordReader::open(disk, &file, rec)?;
+        let mut r = PrefetchReader::open(disk, &file, rec)?;
         let mut buf = Vec::new();
         loop {
             let n = r.read_batch(&mut buf, SCAN_BATCH)?;
@@ -381,7 +382,7 @@ impl<K: Element, V: Element> HtInner<K, V> {
 
     /// Load bucket `b` into a RAM map, apply its op log FIFO, write back.
     /// Returns the size delta.
-    fn sync_bucket(&self, b: u32, disk: &crate::storage::NodeDisk) -> Result<i64> {
+    fn sync_bucket(&self, b: u32, disk: &Arc<NodeDisk>) -> Result<i64> {
         let mut ops =
             self.staged.take(b, &self.ctx.cluster, &self.dir, self.ctx.cfg.op_buffer_bytes);
         if ops.is_empty() {
@@ -403,7 +404,9 @@ impl<K: Element, V: Element> HtInner<K, V> {
         let mut delta = 0i64;
         let mut kvbuf = vec![0u8; Self::rec_size()];
 
-        let mut reader = ops.reader()?;
+        // Op-log replay streams through the read-ahead lane; the drain
+        // removes the log's spill file when it drops.
+        let mut reader = ops.into_drain()?;
         let mut header = [0u8; 2];
         let mut key = vec![0u8; K::SIZE];
         let mut payload = Vec::new();
@@ -507,10 +510,11 @@ impl<K: Element, V: Element> HtInner<K, V> {
         }
         drop(reader);
 
-        // Write the bucket back (streaming rewrite straight from the arena).
+        // Write the bucket back (streaming rewrite straight from the
+        // arena, flushed through the write-behind lane).
         let tmp = format!("{}.sync.tmp", self.bucket_file(b));
         {
-            let mut w = RecordWriter::create(disk, &tmp, Self::rec_size())?;
+            let mut w = WriteBehindWriter::create(disk, &tmp, Self::rec_size())?;
             let mut err = None;
             table.for_each(|rec| {
                 if err.is_none() {
@@ -525,7 +529,6 @@ impl<K: Element, V: Element> HtInner<K, V> {
             w.finish()?;
         }
         disk.rename(&tmp, self.bucket_file(b))?;
-        ops.clear()?;
         Ok(delta)
     }
 }

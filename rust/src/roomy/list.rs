@@ -24,8 +24,9 @@ use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
 use crate::hashfn;
-use crate::storage::chunkfile::{record_count, RecordReader, RecordWriter};
+use crate::storage::chunkfile::record_count;
 use crate::storage::extsort;
+use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
 
 const SCAN_BATCH: usize = 8192;
 
@@ -168,10 +169,11 @@ impl<T: Element> RoomyList<T> {
                 return Ok(0i64);
             }
             // Same fingerprint ⇒ same shard id in both lists; the shard
-            // lives on the same node, so this is a local stream-append.
+            // lives on the same node, so this is a local stream-append
+            // (read-ahead on the source, write-behind on the target).
             let mut n = 0i64;
-            let mut r = RecordReader::open(disk, &src, T::SIZE)?;
-            let mut w_ = RecordWriter::append(disk, inner.shard_file(b), T::SIZE)?;
+            let mut r = PrefetchReader::open(disk, &src, T::SIZE)?;
+            let mut w_ = WriteBehindWriter::append(disk, inner.shard_file(b), T::SIZE)?;
             let mut buf = Vec::new();
             loop {
                 let got = r.read_batch(&mut buf, SCAN_BATCH)?;
@@ -401,7 +403,7 @@ impl<T: Element> ListInner<T> {
     fn for_owned_shards(
         &self,
         phase: &str,
-        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+        f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
         let _read = self.write_lock.read().unwrap();
         self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
@@ -411,14 +413,14 @@ impl<T: Element> ListInner<T> {
     fn scan_shard(
         &self,
         b: u32,
-        disk: &crate::storage::NodeDisk,
+        disk: &Arc<NodeDisk>,
         mut f: impl FnMut(&[u8]) -> Result<()>,
     ) -> Result<()> {
         let file = self.shard_file(b);
         if !disk.exists(&file) {
             return Ok(());
         }
-        let mut r = RecordReader::open(disk, &file, T::SIZE)?;
+        let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
         let mut buf = Vec::new();
         loop {
             let n = r.read_batch(&mut buf, SCAN_BATCH)?;
@@ -433,7 +435,7 @@ impl<T: Element> ListInner<T> {
 
     /// Charge every predicate `sign` for each record in shard `b` (used
     /// around wholesale rewrites like dedup/sort-merge difference).
-    fn charge_shard(&self, b: u32, disk: &crate::storage::NodeDisk, sign: i64) -> Result<()> {
+    fn charge_shard(&self, b: u32, disk: &Arc<NodeDisk>, sign: i64) -> Result<()> {
         self.scan_shard(b, disk, |rec| {
             self.funcs.charge_preds(0, rec, sign);
             Ok(())
@@ -442,10 +444,12 @@ impl<T: Element> ListInner<T> {
 
     /// Stream-rewrite shard `b`, keeping records where `keep` is true.
     /// Returns the number of records dropped. Charges predicates.
+    /// Read-ahead and write-behind overlap here, so a pipelined filter
+    /// keeps both disk directions busy at once.
     fn filter_shard(
         &self,
         b: u32,
-        disk: &crate::storage::NodeDisk,
+        disk: &Arc<NodeDisk>,
         keep: impl Fn(&[u8]) -> bool,
     ) -> Result<i64> {
         let file = self.shard_file(b);
@@ -456,8 +460,8 @@ impl<T: Element> ListInner<T> {
         let tmp = format!("{file}.filter.tmp");
         let mut dropped = 0i64;
         {
-            let mut r = RecordReader::open(disk, &file, T::SIZE)?;
-            let mut w = RecordWriter::create(disk, &tmp, T::SIZE)?;
+            let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
+            let mut w = WriteBehindWriter::create(disk, &tmp, T::SIZE)?;
             let mut buf = Vec::new();
             loop {
                 let n = r.read_batch(&mut buf, SCAN_BATCH)?;
@@ -483,7 +487,7 @@ impl<T: Element> ListInner<T> {
 
     /// Apply staged ops for shard `b`: adds appended, removes filtered.
     /// Returns (size delta, appended-any).
-    fn sync_shard(&self, b: u32, disk: &crate::storage::NodeDisk) -> Result<(i64, bool)> {
+    fn sync_shard(&self, b: u32, disk: &Arc<NodeDisk>) -> Result<(i64, bool)> {
         let mut ops =
             self.staged.take(b, &self.ctx.cluster, &self.dir, self.ctx.cfg.op_buffer_bytes);
         if ops.is_empty() {
@@ -493,11 +497,14 @@ impl<T: Element> ListInner<T> {
         let mut removes: HashSet<Vec<u8>> = HashSet::new();
         let mut added = 0i64;
         {
-            // Pass 1: append adds, collect removes.
-            let mut reader = ops.reader()?;
+            // Pass 1: append adds, collect removes. The op log streams
+            // back through the read-ahead lane (into_drain), appended
+            // elements flush through the write-behind lane; the drain
+            // deletes the log's spill file when it drops, error or not.
+            let mut reader = ops.into_drain()?;
             let mut header = [0u8; 2];
             let mut elt = vec![0u8; T::SIZE];
-            let mut writer: Option<RecordWriter> = None;
+            let mut writer: Option<WriteBehindWriter> = None;
             while reader.read_exact_or_eof(&mut header)? {
                 let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
                     RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
@@ -508,8 +515,11 @@ impl<T: Element> ListInner<T> {
                 match kind {
                     OpKind::Add => {
                         if writer.is_none() {
-                            writer =
-                                Some(RecordWriter::append(disk, self.shard_file(b), T::SIZE)?);
+                            writer = Some(WriteBehindWriter::append(
+                                disk,
+                                self.shard_file(b),
+                                T::SIZE,
+                            )?);
                         }
                         writer.as_mut().unwrap().push(&elt)?;
                         added += 1;
@@ -536,7 +546,6 @@ impl<T: Element> ListInner<T> {
         if !removes.is_empty() {
             removed = self.filter_shard(b, disk, |rec| !removes.contains(rec))?;
         }
-        ops.clear()?;
         Ok((added - removed, added > 0))
     }
 }

@@ -164,6 +164,19 @@ impl Roomy {
             io.writes,
             io.seeks,
         ));
+        let pipe = self.ctx.cluster.pipeline_snapshot();
+        s.push_str(&format!(
+            "pipeline (depth {}): {} streams, read-ahead {} ({} chunks), write-behind {} ({} chunks), peak stream buf {}, stalls r {:.1} ms / w {:.1} ms\n",
+            self.ctx.cfg.io_pipeline_depth,
+            pipe.streams,
+            crate::metrics::fmt_bytes(pipe.bytes_ahead),
+            pipe.chunks_ahead,
+            crate::metrics::fmt_bytes(pipe.bytes_behind),
+            pipe.chunks_behind,
+            crate::metrics::fmt_bytes(pipe.peak_stream_buf),
+            pipe.reader_wait_ns as f64 / 1e6,
+            pipe.writer_wait_ns as f64 / 1e6,
+        ));
         s.push_str("phases:\n");
         s.push_str(&self.ctx.cluster.phases().report());
         s.push_str(&format!(

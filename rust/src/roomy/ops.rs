@@ -104,10 +104,11 @@ pub fn encode_elt(out: &mut Vec<u8>, kind: OpKind, elt: &[u8]) {
 /// Issue path: `stage(bucket, record)` locks only that bucket's buffer —
 /// unless the calling thread is inside a [`crate::runtime::pool`] task,
 /// in which case the record is diverted into that task's capture log
-/// (itself spill-at-threshold, so in-collective issue is space-bounded
-/// too) and replayed (via [`StagedOps::stage_direct`]) after the
-/// collective's barrier in deterministic (task, destination, issue)
-/// order — each destination's buffers see exactly the serial byte order.
+/// (spill-backed under a flat per-task budget, so in-collective issue is
+/// space-bounded too) and replayed (via [`StagedOps::stage_direct`])
+/// after the collective's barrier in deterministic (task, destination,
+/// issue) order — each destination's buffers see exactly the serial byte
+/// order.
 ///
 /// Sync path: `take(bucket)` swaps the buffer for a fresh one under the
 /// lock and returns the full old buffer — ops staged during the same sync

@@ -23,7 +23,8 @@ use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
 use crate::hashfn;
-use crate::storage::chunkfile::{record_count, RecordReader, RecordWriter};
+use crate::storage::chunkfile::record_count;
+use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
 
 const SCAN_BATCH: usize = 8192;
 
@@ -239,7 +240,7 @@ impl<T: Element> SetInner<T> {
     fn for_owned_shards(
         &self,
         phase: &str,
-        f: impl Fn(&Self, u32, &crate::storage::NodeDisk) -> Result<()> + Sync,
+        f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
         self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
         Ok(())
@@ -248,14 +249,14 @@ impl<T: Element> SetInner<T> {
     fn scan_shard(
         &self,
         b: u32,
-        disk: &crate::storage::NodeDisk,
+        disk: &Arc<NodeDisk>,
         mut f: impl FnMut(&[u8]) -> Result<()>,
     ) -> Result<()> {
         let file = self.shard_file(b);
         if !disk.exists(&file) {
             return Ok(());
         }
-        let mut r = RecordReader::open(disk, &file, T::SIZE)?;
+        let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
         let mut buf = Vec::new();
         loop {
             let n = r.read_batch(&mut buf, SCAN_BATCH)?;
@@ -269,7 +270,7 @@ impl<T: Element> SetInner<T> {
     }
 
     /// One streaming merge of (sorted shard) with (sorted staged deltas).
-    fn sync_shard(&self, b: u32, disk: &crate::storage::NodeDisk) -> Result<i64> {
+    fn sync_shard(&self, b: u32, disk: &Arc<NodeDisk>) -> Result<i64> {
         let mut ops =
             self.staged.take(b, &self.ctx.cluster, &self.dir, self.ctx.cfg.op_buffer_bytes);
         if ops.is_empty() {
@@ -280,7 +281,9 @@ impl<T: Element> SetInner<T> {
         // spilled segments stream back through the reader.)
         let mut staged: Vec<(Vec<u8>, bool)> = Vec::new(); // (elt, is_add)
         {
-            let mut reader = ops.reader()?;
+            // Op-log replay streams through the read-ahead lane; the
+            // drain removes the log's spill file when it drops.
+            let mut reader = ops.into_drain()?;
             let mut header = [0u8; 2];
             let mut elt = vec![0u8; T::SIZE];
             while reader.read_exact_or_eof(&mut header)? {
@@ -308,9 +311,9 @@ impl<T: Element> SetInner<T> {
         let tmp = format!("{file}.sync.tmp");
         let mut delta = 0i64;
         {
-            let mut w = RecordWriter::create(disk, &tmp, T::SIZE)?;
+            let mut w = WriteBehindWriter::create(disk, &tmp, T::SIZE)?;
             let mut vi = 0usize;
-            let emit_pending = |w: &mut RecordWriter,
+            let emit_pending = |w: &mut WriteBehindWriter,
                                     vi: &mut usize,
                                     upto: Option<&[u8]>,
                                     delta: &mut i64|
@@ -327,7 +330,7 @@ impl<T: Element> SetInner<T> {
                 Ok(())
             };
             if disk.exists(&file) {
-                let mut r = RecordReader::open(disk, &file, T::SIZE)?;
+                let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
                 let mut rec = vec![0u8; T::SIZE];
                 while r.read_one(&mut rec)? {
                     emit_pending(&mut w, &mut vi, Some(&rec), &mut delta)?;
@@ -349,15 +352,16 @@ impl<T: Element> SetInner<T> {
             w.finish()?;
         }
         disk.rename(&tmp, &file)?;
-        ops.clear()?;
         Ok(delta)
     }
 
     /// Sorted-merge `self ∘ other` for one shard. Returns the size delta.
+    /// Both inputs read ahead (half a chunk each) and the merged output
+    /// flushes behind on a pipelined disk.
     fn merge_shard(
         &self,
         b: u32,
-        disk: &crate::storage::NodeDisk,
+        disk: &Arc<NodeDisk>,
         other_file: &str,
         op: SetOp,
     ) -> Result<i64> {
@@ -366,16 +370,16 @@ impl<T: Element> SetInner<T> {
         let tmp = format!("{mine}.merge.tmp");
         let mut written = 0i64;
         {
-            let mut w = RecordWriter::create(disk, &tmp, T::SIZE)?;
+            let mut w = WriteBehindWriter::create(disk, &tmp, T::SIZE)?;
             let mut a_rec = vec![0u8; T::SIZE];
             let mut b_rec = vec![0u8; T::SIZE];
             let mut ra = if disk.exists(&mine) {
-                Some(RecordReader::open(disk, &mine, T::SIZE)?)
+                Some(PrefetchReader::open_with_chunk(disk, &mine, T::SIZE, PIPE_CHUNK / 2)?)
             } else {
                 None
             };
             let mut rb = if disk.exists(other_file) {
-                Some(RecordReader::open(disk, other_file, T::SIZE)?)
+                Some(PrefetchReader::open_with_chunk(disk, other_file, T::SIZE, PIPE_CHUNK / 2)?)
             } else {
                 None
             };

@@ -31,12 +31,16 @@
 //!
 //! Space note: op capture is **spill-backed**, so the strict space bound
 //! holds inside collectives too. Each task's [`OpCapture`] keeps one
-//! [`SpillBuffer`] per destination structure that overflows to a private
-//! scratch file (`tmp/capture/r<run>t<task>/d<K>.capture` on a node disk,
-//! created lazily) once it exceeds
+//! [`SpillBuffer`] per destination structure, and all of a task's logs
+//! share one **flat**
 //! [`RoomyConfig::capture_spill_threshold`](crate::RoomyConfig::capture_spill_threshold)
-//! bytes — per-task capture RAM is O(threshold × destination structures
-//! staged into), not O(ops issued).
+//! budget: when a push takes the task's total capture RAM over the
+//! budget, the largest log flushes to its private scratch file
+//! (`tmp/capture/r<run>t<task>/d<K>.capture` on a node disk, created
+//! lazily) until the task is back under. Per-task capture RAM is
+//! O(threshold), not O(ops issued) and not O(destination structures).
+//! Budget-forced flushes are counted in
+//! [`PoolStats::capture_budget_spills`](crate::metrics::PoolStats::capture_budget_spills).
 //! Post-barrier replay streams each log back in (task, destination,
 //! issue) order — per-destination byte order identical to serial — and
 //! deletes the scratch files; failed or panicking tasks delete theirs on
@@ -61,7 +65,8 @@ const CAPTURE_HDR: usize = 8;
 
 /// Where one task's capture logs overflow to: a private scratch directory
 /// on one node disk, created lazily on first spill and removed when the
-/// capture is replayed or discarded.
+/// capture is replayed or discarded. `threshold` is the task's **flat**
+/// capture-RAM budget, shared across all destination logs.
 pub(crate) struct CaptureBacking {
     disk: Arc<NodeDisk>,
     dir_rel: String,
@@ -75,10 +80,13 @@ struct DestLog {
 }
 
 /// Per-task log of delayed ops issued while the task ran. One
-/// spill-at-threshold [`SpillBuffer`] per destination structure holds
-/// `[bucket, len, payload]` records in issue order, so capture RAM per
-/// task stays O(threshold × destinations) however many ops a collective
-/// issues. Without backing (a bare pool outside any cluster) logs are
+/// [`SpillBuffer`] per destination structure holds `[bucket, len,
+/// payload]` records in issue order; all of a task's logs share one flat
+/// `capture_spill_threshold` budget — when a push takes the task's total
+/// capture RAM over it, the largest log flushes to scratch (ties go to
+/// the oldest log), so capture RAM per task stays O(threshold) however
+/// many ops a collective issues and however many structures it stages
+/// into. Without backing (a bare pool outside any cluster) logs are
 /// RAM-only, preserving the old unbounded behavior.
 pub(crate) struct OpCapture {
     backing: Option<CaptureBacking>,
@@ -91,6 +99,8 @@ pub(crate) struct OpCapture {
     /// Sum of `ram_bytes()` across logs, maintained incrementally so the
     /// per-op path never scans the log list.
     ram_total: usize,
+    /// Spills forced by the shared budget (reported to `PoolStats`).
+    budget_spills: u64,
     /// Log index the previous op hit — consecutive ops overwhelmingly
     /// target the same destination, so this usually skips the lookup.
     last_idx: usize,
@@ -104,14 +114,15 @@ impl OpCapture {
             bytes: 0,
             peak_ram: 0,
             ram_total: 0,
+            budget_spills: 0,
             last_idx: 0,
         }
     }
 
     fn push(&mut self, sink: Arc<StagedOps>, bucket: u32, rec: &[u8]) -> Result<()> {
         // The transient maximum inside this push: current RAM across all
-        // logs plus the record about to be appended (a spill, if one
-        // fires, happens after the append).
+        // logs plus the record about to be appended (the budget check
+        // runs after the append).
         self.peak_ram = self.peak_ram.max(self.ram_total + CAPTURE_HDR + rec.len());
 
         let idx = if self
@@ -124,11 +135,14 @@ impl OpCapture {
             match self.logs.iter().position(|l| Arc::ptr_eq(&l.sink, &sink)) {
                 Some(i) => i,
                 None => {
+                    // Spill timing is driven by the shared budget below,
+                    // so the buffer's own threshold is disarmed (it only
+                    // spills when this capture tells it to).
                     let buf = match &self.backing {
                         Some(b) => SpillBuffer::new(
                             Arc::clone(&b.disk),
                             format!("{}/d{}.capture", b.dir_rel, self.logs.len()),
-                            b.threshold,
+                            usize::MAX,
                         ),
                         None => SpillBuffer::ram_only(),
                     };
@@ -139,14 +153,33 @@ impl OpCapture {
         };
         self.last_idx = idx;
         let buf = &mut self.logs[idx].buf;
-        let before = buf.ram_bytes();
         let mut hdr = [0u8; CAPTURE_HDR];
         hdr[..4].copy_from_slice(&bucket.to_le_bytes());
         hdr[4..].copy_from_slice(&(rec.len() as u32).to_le_bytes());
         buf.push(&hdr)?;
         buf.push(rec)?;
-        self.ram_total = self.ram_total - before + buf.ram_bytes();
+        self.ram_total += CAPTURE_HDR + rec.len();
         self.bytes += (CAPTURE_HDR + rec.len()) as u64;
+
+        // Flat per-task budget: flush the largest log until back under.
+        if let Some(b) = &self.backing {
+            while self.ram_total > b.threshold {
+                let victim = self
+                    .logs
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|&(i, l)| (l.buf.ram_bytes(), std::cmp::Reverse(i)))
+                    .map(|(i, l)| (i, l.buf.ram_bytes()))
+                    .expect("over-budget capture has at least one log");
+                let (vi, vram) = victim;
+                if vram == 0 {
+                    break; // nothing left to flush (tiny budget, all spilled)
+                }
+                self.logs[vi].buf.spill()?;
+                self.ram_total -= vram;
+                self.budget_spills += 1;
+            }
+        }
         Ok(())
     }
 
@@ -271,9 +304,10 @@ impl WorkerPool {
         WorkerPool { workers, stats: PoolStats::new(workers), capture: None }
     }
 
-    /// Back op capture with spill-at-threshold scratch files on `disks`
-    /// (task `t` scratches on `disks[t % disks.len()]` — the owner of
-    /// bucket `t` under the cluster's round-robin layout). Called by
+    /// Back op capture with scratch files on `disks` (task `t` scratches
+    /// on `disks[t % disks.len()]` — the owner of bucket `t` under the
+    /// cluster's round-robin layout). `threshold` is each task's **flat**
+    /// capture-RAM budget across all of its destination logs. Called by
     /// [`crate::cluster::Cluster::new`] with
     /// [`RoomyConfig::capture_spill_threshold`](crate::RoomyConfig::capture_spill_threshold).
     pub(crate) fn set_capture_spill(&mut self, disks: Vec<Arc<NodeDisk>>, threshold: usize) {
@@ -363,6 +397,7 @@ impl WorkerPool {
                                     ctx.capture.spilled_bytes(),
                                     ctx.capture.scratch_files(),
                                     ctx.capture.peak_ram as u64,
+                                    ctx.capture.budget_spills,
                                 );
                                 match r {
                                     Ok(result) => {
@@ -663,6 +698,70 @@ mod tests {
                 }
                 Some(r0) => assert_eq!(&got, r0, "workers={workers} diverged"),
             }
+        }
+    }
+
+    /// The capture budget is **flat per task**: staging into several
+    /// destination structures shares one threshold, so peak capture RAM
+    /// stays ≤ threshold + one record however many destinations a task
+    /// touches — and the forced flushes are counted.
+    #[test]
+    fn flat_budget_shared_across_destinations() {
+        let t = tmpdir("pool_capture_flat");
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 2;
+        cfg.buckets_per_worker = 1;
+        let cluster = Cluster::new(&cfg).unwrap();
+        let dst_a = StagedOps::new(&cluster, "fa", 1 << 20);
+        let dst_b = StagedOps::new(&cluster, "fb", 1 << 20);
+
+        let threshold = 64usize;
+        let rec_len = 2usize;
+        let mut p = pool(2);
+        p.set_capture_spill(cluster.disks().to_vec(), threshold);
+        p.run_tasks("t", 4, |task| {
+            // alternate destinations; per-destination volume stays under
+            // the threshold, but the task total (~320 bytes) exceeds it —
+            // only the shared budget can force spills here
+            for k in 0..16u8 {
+                let rec = [task as u8, k];
+                if k % 2 == 0 {
+                    dst_a.stage(0, &rec)?;
+                } else {
+                    dst_b.stage(0, &rec)?;
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+
+        assert!(p.stats().capture_budget_spills() > 0, "budget never forced a spill");
+        assert!(
+            p.stats().capture_peak_task_ram() as usize
+                <= threshold + super::CAPTURE_HDR + rec_len,
+            "flat budget violated: peak {} > {} + record",
+            p.stats().capture_peak_task_ram(),
+            threshold,
+        );
+        // both destinations replayed in serial order
+        for (staged, parity) in [(&dst_a, 0u8), (&dst_b, 1u8)] {
+            let buf = staged.take(0, &cluster, "f", 1 << 20);
+            let mut r = buf.reader().unwrap();
+            let mut got = Vec::new();
+            let mut rec = [0u8; 2];
+            while r.read_exact_or_eof(&mut rec).unwrap() {
+                got.extend_from_slice(&rec);
+            }
+            let expect: Vec<u8> = (0..4u8)
+                .flat_map(|t| (0..16u8).filter(move |k| k % 2 == parity).map(move |k| [t, k]))
+                .flatten()
+                .collect();
+            assert_eq!(got, expect, "destination parity {parity} diverged");
+        }
+        // scratch fully cleaned after the barrier
+        for w in 0..cluster.nworkers() {
+            let scratch = cluster.disk(w).root().join("tmp/capture");
+            assert_eq!(files_under(&scratch), 0, "scratch leak on node {w}");
         }
     }
 

@@ -114,11 +114,15 @@ impl SpillBuffer {
     /// reader over everything staged that removes the spill file when
     /// dropped (read fully or not). This is the leak-free way to replay a
     /// buffer whose content is no longer needed afterwards — the pool's
-    /// capture replay and error paths both rely on the drop-side cleanup.
+    /// capture replay, the structure sync loops and the error paths all
+    /// rely on the drop-side cleanup. On a pipelined disk the spilled
+    /// segment streams back through the node's read-ahead lane
+    /// ([`crate::storage::pipeline::ByteReader`]), overlapping op-log
+    /// replay with the apply work it feeds.
     pub fn into_drain(self) -> Result<SpillDrain> {
         let file = if self.spilled_bytes > 0 {
             let disk = self.disk.as_ref().expect("spilled bytes imply a disk");
-            Some(disk.open_file_shared(&self.spill_rel)?)
+            Some(super::pipeline::ByteReader::open(disk, &self.spill_rel)?)
         } else {
             None
         };
@@ -181,12 +185,12 @@ impl<'b> SpillReader<'b> {
 }
 
 /// Owned FIFO drain of a [`SpillBuffer`] (see [`SpillBuffer::into_drain`]):
-/// spilled segment first, then the RAM tail. Removes the spill file on
-/// drop.
+/// spilled segment first (prefetched on pipelined disks), then the RAM
+/// tail. Removes the spill file on drop.
 pub struct SpillDrain {
     disk: Option<Arc<NodeDisk>>,
     spill_rel: PathBuf,
-    file: Option<super::diskio::SharedMeteredReader>,
+    file: Option<super::pipeline::ByteReader>,
     ram: Vec<u8>,
     ram_pos: usize,
     remove_on_drop: bool,

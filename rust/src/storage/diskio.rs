@@ -12,9 +12,10 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::pipeline::IoService;
 use crate::config::DiskPolicy;
 use crate::error::{Result, RoomyError};
-use crate::metrics::IoStats;
+use crate::metrics::{IoStats, PipelineStats};
 
 /// Buffered writer size. Large enough that the OS sees streaming writes.
 const WRITE_BUF: usize = 1 << 20;
@@ -34,13 +35,34 @@ pub struct NodeDisk {
     /// not (configured ∥ host) in series. (§Perf P1.)
     read_free: Mutex<Option<Instant>>,
     write_free: Mutex<Option<Instant>>,
+    /// Overlapped-I/O pipeline: buffer count per stream (0 = synchronous)
+    /// and, when depth > 0, this node's I/O service lanes
+    /// ([`crate::storage::pipeline`]).
+    pipeline_depth: usize,
+    io: Option<IoService>,
+    pipe_stats: Arc<PipelineStats>,
 }
 
 impl NodeDisk {
-    /// Create (and mkdir) a node disk rooted at `root`.
+    /// Create (and mkdir) a node disk rooted at `root`, with no I/O
+    /// pipeline (all reads/writes synchronous).
     pub fn create(node: usize, root: impl Into<PathBuf>, policy: DiskPolicy) -> Result<Self> {
+        Self::create_with_depth(node, root, policy, 0)
+    }
+
+    /// Create a node disk whose streams may overlap I/O with computation:
+    /// `depth` chunk buffers per stream circulate through a per-node I/O
+    /// service (spawned here when `depth > 0`, joined when the disk
+    /// drops). Depth 0 is exactly [`NodeDisk::create`].
+    pub fn create_with_depth(
+        node: usize,
+        root: impl Into<PathBuf>,
+        policy: DiskPolicy,
+        depth: usize,
+    ) -> Result<Self> {
         let root = root.into();
         fs::create_dir_all(&root).map_err(|e| RoomyError::io(&root, e))?;
+        let io = if depth > 0 { Some(IoService::spawn(node)?) } else { None };
         Ok(NodeDisk {
             node,
             root,
@@ -48,7 +70,25 @@ impl NodeDisk {
             stats: Arc::new(IoStats::new()),
             read_free: Mutex::new(None),
             write_free: Mutex::new(None),
+            pipeline_depth: depth,
+            io,
+            pipe_stats: Arc::new(PipelineStats::new()),
         })
+    }
+
+    /// Chunk buffers per pipelined stream (0 = synchronous I/O).
+    pub fn pipeline_depth(&self) -> usize {
+        self.pipeline_depth
+    }
+
+    /// This node's I/O service lanes, if the pipeline is enabled.
+    pub fn io_service(&self) -> Option<&IoService> {
+        self.io.as_ref()
+    }
+
+    /// Read-ahead / write-behind counters for this disk.
+    pub fn pipe_stats(&self) -> &Arc<PipelineStats> {
+        &self.pipe_stats
     }
 
     /// Node index within the cluster.
@@ -177,6 +217,43 @@ impl NodeDisk {
         })
     }
 
+    /// Like [`NodeDisk::create_file`] but the returned writer co-owns the
+    /// disk, so it can move to the pipeline's write lane
+    /// ([`crate::storage::pipeline`]).
+    pub fn create_file_shared(self: &Arc<Self>, rel: impl AsRef<Path>) -> Result<SharedMeteredWriter> {
+        let path = self.abs(&rel);
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).map_err(|e| RoomyError::io(dir, e))?;
+        }
+        let f = File::create(&path).map_err(|e| RoomyError::io(&path, e))?;
+        self.charge_seek();
+        Ok(SharedMeteredWriter {
+            disk: Arc::clone(self),
+            w: BufWriter::with_capacity(WRITE_BUF, f),
+            path,
+        })
+    }
+
+    /// Like [`NodeDisk::append_file`] but the returned writer co-owns the
+    /// disk (see [`NodeDisk::create_file_shared`]).
+    pub fn append_file_shared(self: &Arc<Self>, rel: impl AsRef<Path>) -> Result<SharedMeteredWriter> {
+        let path = self.abs(&rel);
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).map_err(|e| RoomyError::io(dir, e))?;
+        }
+        let f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| RoomyError::io(&path, e))?;
+        self.charge_seek();
+        Ok(SharedMeteredWriter {
+            disk: Arc::clone(self),
+            w: BufWriter::with_capacity(WRITE_BUF, f),
+            path,
+        })
+    }
+
     /// Length of `rel` in bytes, or 0 if it does not exist.
     pub fn len(&self, rel: impl AsRef<Path>) -> u64 {
         fs::metadata(self.abs(rel)).map(|m| m.len()).unwrap_or(0)
@@ -253,6 +330,16 @@ impl NodeDisk {
             w.finish()?;
         }
         self.rename(&tmp, rel)
+    }
+}
+
+impl Drop for NodeDisk {
+    /// Shut the I/O service down with the disk: queued jobs drain, both
+    /// lane threads are joined, so no service thread outlives its node.
+    fn drop(&mut self) {
+        if let Some(io) = &self.io {
+            io.shutdown();
+        }
     }
 }
 
@@ -381,6 +468,35 @@ impl SharedMeteredReader {
     }
 }
 
+/// Metered buffered writer that co-owns its [`NodeDisk`] (see
+/// [`NodeDisk::create_file_shared`]) — the write-behind lane's owned
+/// counterpart of [`MeteredWriter`].
+pub struct SharedMeteredWriter {
+    disk: Arc<NodeDisk>,
+    w: BufWriter<File>,
+    path: PathBuf,
+}
+
+impl SharedMeteredWriter {
+    /// Write a full byte slice, metering it against the disk policy.
+    pub fn write_bytes(&mut self, data: &[u8]) -> Result<()> {
+        self.w.write_all(data).map_err(|e| RoomyError::io(&self.path, e))?;
+        self.disk.charge_write(data.len() as u64);
+        Ok(())
+    }
+
+    /// Flush buffers to the OS. Must be called before drop for durability;
+    /// dropping without `finish` is fine for scratch files.
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush().map_err(|e| RoomyError::io(&self.path, e))
+    }
+
+    /// Path being written (diagnostics).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -498,6 +614,29 @@ mod tests {
         assert_eq!(r.read_fully(&mut buf).unwrap(), 6);
         assert_eq!(&buf[..6], &[3u8; 6]);
         assert_eq!(d.stats().snapshot().bytes_read, 6);
+    }
+
+    #[test]
+    fn shared_writer_meters_and_persists() {
+        let t = tmpdir("diskio_shared_w");
+        let d = Arc::new(disk(t.path()));
+        let mut w = d.create_file_shared("w/f.dat").unwrap();
+        w.write_bytes(&[9u8; 12]).unwrap();
+        w.finish().unwrap();
+        assert_eq!(d.read_all("w/f.dat").unwrap(), vec![9u8; 12]);
+        assert_eq!(d.stats().snapshot().bytes_written, 12);
+        let mut a = d.append_file_shared("w/f.dat").unwrap();
+        a.write_bytes(&[7u8; 4]).unwrap();
+        a.finish().unwrap();
+        assert_eq!(d.len("w/f.dat"), 16);
+    }
+
+    #[test]
+    fn depth_zero_disk_has_no_service() {
+        let t = tmpdir("diskio_depth0");
+        let d = disk(t.path());
+        assert_eq!(d.pipeline_depth(), 0);
+        assert!(d.io_service().is_none());
     }
 
     #[test]

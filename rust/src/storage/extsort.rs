@@ -11,15 +11,34 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use super::chunkfile::{RecordReader, RecordWriter};
 use super::diskio::NodeDisk;
+use super::pipeline::{PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
 use crate::error::Result;
+
+/// Scratch prefix for a sort targeting `output`: a flattened name under
+/// `tmp/sort/` so crashed runs leave their half-written runs where
+/// [`crate::cluster::Cluster::new`] purges them. Keyed on the *output*
+/// path, which is unique per concurrent sort (two collectives may sort
+/// the same input into different outputs, never into the same one).
+fn run_prefix(output: &Path) -> PathBuf {
+    let flat: String = output
+        .to_string_lossy()
+        .chars()
+        .map(|c| if c == '/' || c == '\\' { '_' } else { c })
+        .collect();
+    PathBuf::from("tmp/sort").join(format!("{flat}.sort"))
+}
 
 /// Generate sorted runs from `input`: chunks of ~`chunk_bytes` are sorted
 /// in RAM and written to `tmp_prefix.runK`. Returns the run paths.
+/// Run generation streams through the node's I/O pipeline when enabled
+/// (the next chunk is read ahead while the current one sorts, the sorted
+/// run flushes behind).
 pub fn make_runs(
-    disk: &NodeDisk,
+    disk: &Arc<NodeDisk>,
     input: impl AsRef<Path>,
     tmp_prefix: impl AsRef<Path>,
     rec_size: usize,
@@ -34,7 +53,7 @@ pub fn make_runs(
     // memset 64 MB per (possibly tiny) shard.
     let total_recs = super::chunkfile::record_count(disk, &input, rec_size).max(1) as usize;
     let recs_per_chunk = (chunk_bytes / rec_size).clamp(1, total_recs);
-    let mut reader = RecordReader::open(disk, &input, rec_size)?;
+    let mut reader = PrefetchReader::open(disk, &input, rec_size)?;
     let mut buf = Vec::new();
     loop {
         let n = reader.read_batch(&mut buf, recs_per_chunk)?;
@@ -46,7 +65,7 @@ pub fn make_runs(
         let mut views: Vec<&[u8]> = buf.chunks_exact(rec_size).collect();
         views.sort_unstable();
         let run_rel = tmp_prefix.as_ref().with_extension(format!("run{}", runs.len()));
-        let mut w = RecordWriter::create(disk, &run_rel, rec_size)?;
+        let mut w = WriteBehindWriter::create(disk, &run_rel, rec_size)?;
         for v in views {
             w.push(v)?;
         }
@@ -58,19 +77,22 @@ pub fn make_runs(
 
 /// K-way merge sorted `runs` into `output`. `dedup` drops records equal to
 /// the previously written one. Returns records written. Run files are
-/// deleted afterwards.
+/// deleted afterwards. On a pipelined disk every run is read ahead (with
+/// per-run chunks scaled down by the fan-in, so a merge's total pipeline
+/// RAM stays O(depth × [`PIPE_CHUNK`])) and the output flushes behind.
 pub fn merge_runs(
-    disk: &NodeDisk,
+    disk: &Arc<NodeDisk>,
     runs: &[PathBuf],
     output: impl AsRef<Path>,
     rec_size: usize,
     dedup: bool,
 ) -> Result<u64> {
-    let mut writer = RecordWriter::create(disk, &output, rec_size)?;
+    let mut writer = WriteBehindWriter::create(disk, &output, rec_size)?;
     let mut heap: BinaryHeap<Reverse<(Vec<u8>, usize)>> = BinaryHeap::new();
     let mut readers = Vec::with_capacity(runs.len());
+    let run_chunk = PIPE_CHUNK / runs.len().max(1);
     for (i, run) in runs.iter().enumerate() {
-        let mut r = RecordReader::open(disk, run, rec_size)?;
+        let mut r = PrefetchReader::open_with_chunk(disk, run, rec_size, run_chunk)?;
         let mut rec = vec![0u8; rec_size];
         if r.read_one(&mut rec)? {
             heap.push(Reverse((rec, i)));
@@ -104,23 +126,24 @@ pub fn merge_runs(
 }
 
 /// Sort `input` into `output` (safe for `input == output`), optionally
-/// deduplicating. Returns records written.
+/// deduplicating. Returns records written. Run files live under
+/// `tmp/sort/` (purged at cluster bring-up if a crash strands them).
 pub fn sort_file(
-    disk: &NodeDisk,
+    disk: &Arc<NodeDisk>,
     input: impl AsRef<Path>,
     output: impl AsRef<Path>,
     rec_size: usize,
     chunk_bytes: usize,
     dedup: bool,
 ) -> Result<u64> {
-    let tmp_prefix = input.as_ref().with_extension("sort");
+    let tmp_prefix = run_prefix(output.as_ref());
     let runs = make_runs(disk, &input, &tmp_prefix, rec_size, chunk_bytes)?;
     if runs.is_empty() {
         // Empty/missing input: produce an empty output file.
         RecordWriter::create(disk, &output, rec_size)?.finish()?;
         return Ok(0);
     }
-    let tmp_out = input.as_ref().with_extension("sorted.tmp");
+    let tmp_out = tmp_prefix.with_extension("merged");
     let n = merge_runs(disk, &runs, &tmp_out, rec_size, dedup)?;
     disk.rename(&tmp_out, &output)?;
     Ok(n)
@@ -129,22 +152,24 @@ pub fn sort_file(
 /// Streaming sorted-merge difference: records of sorted `a` that do not
 /// appear in sorted `b` (every occurrence of a matching record is
 /// removed — RoomyList `removeAll` semantics). Returns records written.
+/// Both inputs read ahead (half a chunk each) and the output flushes
+/// behind on a pipelined disk.
 pub fn merge_diff(
-    disk: &NodeDisk,
+    disk: &Arc<NodeDisk>,
     a: impl AsRef<Path>,
     b: impl AsRef<Path>,
     output: impl AsRef<Path>,
     rec_size: usize,
 ) -> Result<u64> {
-    let mut out = RecordWriter::create(disk, &output, rec_size)?;
-    let mut ra = RecordReader::open(disk, &a, rec_size)?;
+    let mut out = WriteBehindWriter::create(disk, &output, rec_size)?;
+    let mut ra = PrefetchReader::open_with_chunk(disk, &a, rec_size, PIPE_CHUNK / 2)?;
     let mut rec_a = vec![0u8; rec_size];
     let mut have_a = ra.read_one(&mut rec_a)?;
 
     let mut rec_b = vec![0u8; rec_size];
     let mut have_b;
     let mut rb = if disk.exists(&b) {
-        let mut r = RecordReader::open(disk, &b, rec_size)?;
+        let mut r = PrefetchReader::open_with_chunk(disk, &b, rec_size, PIPE_CHUNK / 2)?;
         have_b = r.read_one(&mut rec_b)?;
         Some(r)
     } else {
@@ -205,8 +230,8 @@ mod tests {
     use crate::config::DiskPolicy;
     use crate::testutil::{prop_check, tmpdir};
 
-    fn disk(dir: &Path) -> NodeDisk {
-        NodeDisk::create(0, dir, DiskPolicy::unthrottled()).unwrap()
+    fn disk(dir: &Path) -> Arc<NodeDisk> {
+        Arc::new(NodeDisk::create(0, dir, DiskPolicy::unthrottled()).unwrap())
     }
 
     fn write_u32s(d: &NodeDisk, rel: &str, vals: &[u32]) {
@@ -251,8 +276,30 @@ mod tests {
         let mut expect = vals.clone();
         expect.sort();
         assert_eq!(got, expect);
-        // runs cleaned up
-        assert!(d.list(".").unwrap().iter().all(|p| !p.to_str().unwrap().contains("run")));
+        // runs (under tmp/sort) cleaned up
+        assert_eq!(crate::testutil::files_under(&t.path().join("tmp/sort")), 0);
+    }
+
+    #[test]
+    fn pipelined_sort_matches_sync_sort() {
+        let vals: Vec<u32> = (0..5_000).map(|i| (i * 2654435761u64 % 5_000) as u32).collect();
+        let t0 = tmpdir("extsort_pipe_ref");
+        let d0 = disk(t0.path());
+        write_u32s(&d0, "in.dat", &vals);
+        sort_file(&d0, "in.dat", "out.dat", 4, 512, true).unwrap();
+        let reference = d0.read_all("out.dat").unwrap();
+
+        for depth in [1usize, 4] {
+            let t = tmpdir(&format!("extsort_pipe_{depth}"));
+            let d = Arc::new(
+                NodeDisk::create_with_depth(0, t.path(), DiskPolicy::unthrottled(), depth)
+                    .unwrap(),
+            );
+            write_u32s(&d, "in.dat", &vals);
+            sort_file(&d, "in.dat", "out.dat", 4, 512, true).unwrap();
+            assert_eq!(d.read_all("out.dat").unwrap(), reference, "depth {depth}");
+            assert_eq!(crate::testutil::files_under(&t.path().join("tmp")), 0);
+        }
     }
 
     #[test]

@@ -1,24 +1,48 @@
 //! Disk substrate: metered node-local disks, fixed-record chunk files,
-//! spillable staging buffers, and external sort.
+//! spillable staging buffers, external sort, and the overlapped-I/O
+//! pipeline.
 //!
 //! Everything Roomy writes goes through [`diskio::NodeDisk`], which meters
 //! bytes/seeks into [`crate::metrics::IoStats`] and (optionally) enforces a
 //! simulated [`crate::DiskPolicy`] so the paper's 2010 disk regime can be
 //! reproduced on modern hardware.
 //!
+//! When [`RoomyConfig::io_pipeline_depth`](crate::RoomyConfig::io_pipeline_depth)
+//! is > 0, each node additionally runs an I/O service (a read-ahead lane
+//! and a write-behind lane, one OS thread each — [`pipeline`]): pool
+//! tasks stream buckets through [`pipeline::PrefetchReader`] /
+//! [`pipeline::WriteBehindWriter`], which double-buffer `depth` chunks of
+//! [`pipeline::PIPE_CHUNK`] bytes through bounded queues so a task
+//! computes on chunk *k* while the service reads chunk *k+1* ahead and
+//! flushes chunk *k−1* behind. The pipeline never changes on-disk bytes
+//! or ordering within a file (depth 0 is byte-for-byte the synchronous
+//! path — `tests/determinism.rs` pins this across depths and worker
+//! counts), transfers stay fully metered (bandwidth-model sleeps move to
+//! the service lanes — that *is* the overlap), and per-stream buffer RAM
+//! is capped at depth × chunk (observable via
+//! [`crate::metrics::PipelineStats`]).
+//!
 //! Layout conventions (one directory per simulated node):
 //!
 //! ```text
 //! <root>/node<K>/<structure>/bucket<B>.dat     bucket payload
 //! <root>/node<K>/<structure>/ops<B>.log        shuffled delayed-op log
-//! <root>/node<K>/tmp/...                       sort runs, scratch
+//! <root>/node<K>/tmp/capture/...               in-collective op-capture spill
+//! <root>/node<K>/tmp/sort/...                  external-sort run files
+//! <root>/node<K>/tmp/pipeline/...              write-behind staging files
 //! ```
+//!
+//! Everything under `tmp/` is strictly ephemeral scratch; a crashed run
+//! can leave it behind, so [`crate::cluster::Cluster::new`] purges it at
+//! bring-up.
 
 pub mod buffer;
 pub mod chunkfile;
 pub mod diskio;
 pub mod extsort;
+pub mod pipeline;
 
 pub use buffer::{SpillBuffer, SpillDrain};
 pub use chunkfile::{RecordReader, RecordWriter};
 pub use diskio::NodeDisk;
+pub use pipeline::{ByteReader, PrefetchReader, WriteBehindWriter, PIPE_CHUNK};

@@ -1,0 +1,1080 @@
+//! Read-ahead / write-behind bucket I/O: overlapping disk transfers with
+//! computation inside a pool task.
+//!
+//! The paper's premise is that disk bandwidth, not CPU, bounds
+//! space-limited computations — so a worker that alternates "read a
+//! chunk, compute on it, write a chunk" serializes two resources that
+//! could run simultaneously. This module adds a **per-node I/O service**
+//! (one read-ahead lane and one write-behind lane, each a dedicated OS
+//! thread owned by the node's [`NodeDisk`]) plus two streaming wrappers:
+//!
+//! - [`PrefetchReader`] — API-compatible with
+//!   [`RecordReader`](crate::storage::RecordReader). With pipeline depth
+//!   `d > 0` it circulates `d` chunk buffers between the consumer and the
+//!   node's read lane, so while a task computes on chunk *k* the service
+//!   is already filling chunk *k+1*.
+//! - [`WriteBehindWriter`] — API-compatible with
+//!   [`RecordWriter`](crate::storage::RecordWriter). Completed chunks are
+//!   handed to the write lane and flushed while the task keeps producing;
+//!   `finish()` drains the lane and surfaces any deferred error.
+//!   In overlapped create mode bytes are staged under `tmp/pipeline/` and
+//!   renamed to the destination at `finish()`, so an abandoned stream
+//!   (task error, worker panic) never leaves a torn destination — its
+//!   `Drop` removes the staging file.
+//! - [`ByteReader`] — owned byte-stream variant (no record framing) used
+//!   by [`crate::storage::buffer::SpillDrain`] so delayed-op log replay
+//!   prefetches too.
+//!
+//! **Determinism.** The pipeline moves *when* bytes are transferred, never
+//! *what* or *in which order within a file*: chunks of one stream are
+//! filled/flushed strictly FIFO (the lanes are FIFO queues and each
+//! stream's jobs are enqueued in offset order), and depth-0 mode is
+//! byte-for-byte today's synchronous path. On-disk state is therefore
+//! identical for every `io_pipeline_depth`, which `tests/determinism.rs`
+//! pins across depths 0/1/4 × `num_workers` 1/2/4.
+//!
+//! **Space bound.** A stream owns at most `depth` chunk buffers (the one
+//! the consumer holds counts), allocated lazily — a file smaller than one
+//! chunk allocates a single buffer no matter the depth, so depths larger
+//! than the data degrade gracefully. Peak per-stream buffer RAM is
+//! recorded in [`PipelineStats`] (`note_stream_buf`) and asserted
+//! `≤ depth × chunk` by the integration tests. Streams per task are O(1)
+//! (a scan holds one, a rewrite two, a k-way merge scales its chunk down
+//! by k), keeping per-task pipeline RAM O(depth × chunk).
+//!
+//! **Metering.** All transfers go through the same
+//! [`NodeDisk`](crate::storage::NodeDisk) metered calls, so `IoStats`
+//! counts them identically; under a throttled
+//! [`DiskPolicy`](crate::DiskPolicy) the simulated bandwidth sleeps are
+//! taken **on the service lanes**, which is exactly what "overlapped
+//! transfers" means for the bandwidth model: simulated disk time runs
+//! concurrently with compute (and read time concurrently with write
+//! time), instead of serializing with them as in depth-0 mode.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::chunkfile::{RecordReader, RecordWriter};
+use super::diskio::{NodeDisk, SharedMeteredReader, SharedMeteredWriter};
+use crate::error::{Result, RoomyError};
+use crate::metrics::PipelineStats;
+
+/// Default chunk size a pipelined stream transfers per job. Large enough
+/// to amortize the cross-thread handoff, small enough that
+/// `depth × PIPE_CHUNK` stays far below a bucket.
+pub const PIPE_CHUNK: usize = 256 * 1024;
+
+/// How long drains wait on a lane before declaring it stalled. Generous:
+/// a chunk under the paper's throttle model takes milliseconds.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Unique suffix for write-behind staging files (process-wide).
+static STAGING_ID: AtomicU64 = AtomicU64::new(0);
+
+/// One unit of work for a service lane.
+pub(crate) type Job = Box<dyn FnOnce() + Send + 'static>;
+
+fn pipeline_err(msg: &str) -> RoomyError {
+    RoomyError::Pipeline(msg.to_string())
+}
+
+/// Lock a mutex, tolerating poison (a panicked job must not wedge every
+/// other stream on the node).
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-node service: one read lane + one write lane
+// ---------------------------------------------------------------------
+
+/// One service lane: a FIFO job queue drained by a dedicated OS thread.
+#[derive(Debug)]
+struct Lane {
+    tx: Mutex<Option<Sender<Job>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    alive: Arc<AtomicBool>,
+}
+
+impl Lane {
+    fn spawn(name: String) -> Result<Lane> {
+        let (tx, rx) = channel::<Job>();
+        let alive = Arc::new(AtomicBool::new(true));
+        let alive2 = Arc::clone(&alive);
+        let handle = std::thread::Builder::new()
+            .name(name.clone())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    // A panicking job must not take the lane down with it;
+                    // its stream surfaces the failure through its own
+                    // error/guard channels.
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                }
+                alive2.store(false, Ordering::SeqCst);
+            })
+            .map_err(|e| RoomyError::Pipeline(format!("cannot spawn {name}: {e}")))?;
+        Ok(Lane {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            alive,
+        })
+    }
+
+    fn submit(&self, job: Job) -> Result<()> {
+        match lock_ignore_poison(&self.tx).as_ref() {
+            Some(tx) => tx
+                .send(job)
+                .map_err(|_| pipeline_err("io service lane is gone")),
+            None => Err(pipeline_err("io service shut down")),
+        }
+    }
+
+    /// Drop the queue (queued jobs still run) and join the thread — unless
+    /// called *from* the lane thread itself (possible when the last
+    /// `Arc<NodeDisk>` is dropped by a queued job), where joining would
+    /// self-deadlock; the thread exits on its own right after.
+    fn shutdown(&self) {
+        lock_ignore_poison(&self.tx).take();
+        let handle = lock_ignore_poison(&self.handle).take();
+        if let Some(h) = handle {
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The per-node I/O service: a read-ahead lane and a write-behind lane.
+/// Owned by the node's [`NodeDisk`]; shut down (queues drained, threads
+/// joined) when the disk is dropped.
+#[derive(Debug)]
+pub struct IoService {
+    read_lane: Lane,
+    write_lane: Lane,
+}
+
+impl IoService {
+    pub(crate) fn spawn(node: usize) -> Result<IoService> {
+        Ok(IoService {
+            read_lane: Lane::spawn(format!("roomy-ior-{node}"))?,
+            write_lane: Lane::spawn(format!("roomy-iow-{node}"))?,
+        })
+    }
+
+    pub(crate) fn submit_read(&self, job: Job) -> Result<()> {
+        self.read_lane.submit(job)
+    }
+
+    pub(crate) fn submit_write(&self, job: Job) -> Result<()> {
+        self.write_lane.submit(job)
+    }
+
+    /// Liveness flags of both lane threads (cleared as each thread
+    /// exits). The lifecycle tests hold these across instance teardown to
+    /// prove no service thread survives it.
+    pub fn alive_flags(&self) -> Vec<Arc<AtomicBool>> {
+        vec![
+            Arc::clone(&self.read_lane.alive),
+            Arc::clone(&self.write_lane.alive),
+        ]
+    }
+
+    pub(crate) fn shutdown(&self) {
+        self.read_lane.shutdown();
+        self.write_lane.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Read side: chunk fetcher + record/byte wrappers
+// ---------------------------------------------------------------------
+
+/// State shared between a reading stream's consumer and its queued fill
+/// jobs. `reader` becomes `None` at EOF or on error, turning any
+/// still-queued fill into a no-op.
+struct ReadShared {
+    reader: Mutex<Option<SharedMeteredReader>>,
+    cancelled: AtomicBool,
+    /// Total buffer bytes this stream has allocated (for the peak metric).
+    alloc: AtomicUsize,
+}
+
+/// Owned, overlapped chunk stream: up to `depth` chunk buffers circulate
+/// between this consumer and the node's read lane.
+struct ChunkFetcher {
+    disk: Arc<NodeDisk>,
+    shared: Arc<ReadShared>,
+    data_rx: Receiver<Result<Vec<u8>>>,
+    data_tx: Sender<Result<Vec<u8>>>,
+    chunk_bytes: usize,
+    cur: Vec<u8>,
+    pos: usize,
+    /// The current chunk was short: nothing follows it.
+    last: bool,
+    eof: bool,
+    failed: bool,
+}
+
+impl ChunkFetcher {
+    fn open(disk: &Arc<NodeDisk>, rel: impl AsRef<Path>, chunk_bytes: usize) -> Result<Self> {
+        let chunk_bytes = chunk_bytes.max(1);
+        let reader = disk.open_file_shared(&rel)?;
+        let (data_tx, data_rx) = channel();
+        let f = ChunkFetcher {
+            disk: Arc::clone(disk),
+            shared: Arc::new(ReadShared {
+                reader: Mutex::new(Some(reader)),
+                cancelled: AtomicBool::new(false),
+                alloc: AtomicUsize::new(0),
+            }),
+            data_rx,
+            data_tx,
+            chunk_bytes,
+            cur: Vec::new(),
+            pos: 0,
+            last: false,
+            eof: false,
+            failed: false,
+        };
+        f.disk.pipe_stats().add_stream();
+        // Prime the read-ahead: depth - 1 buffers go to the lane, the
+        // depth-th is `cur` (donated on the first refill).
+        for _ in 1..f.disk.pipeline_depth().max(1) {
+            f.submit_fill(Vec::new())?;
+        }
+        Ok(f)
+    }
+
+    fn submit_fill(&self, buf: Vec<u8>) -> Result<()> {
+        let shared = Arc::clone(&self.shared);
+        let tx = self.data_tx.clone();
+        let stats = Arc::clone(self.disk.pipe_stats());
+        let chunk_bytes = self.chunk_bytes;
+        let job: Job = Box::new(move || {
+            let mut buf = buf;
+            let out: Result<Vec<u8>>;
+            if shared.cancelled.load(Ordering::Relaxed) {
+                buf.clear();
+                out = Ok(buf);
+            } else {
+                let mut g = lock_ignore_poison(&shared.reader);
+                match g.as_mut() {
+                    None => {
+                        // EOF (or error) already hit by an earlier fill.
+                        buf.clear();
+                        out = Ok(buf);
+                    }
+                    Some(r) => {
+                        let cap0 = buf.capacity();
+                        buf.resize(chunk_bytes, 0);
+                        let grew = buf.capacity().saturating_sub(cap0);
+                        if grew > 0 {
+                            let tot = shared.alloc.fetch_add(grew, Ordering::Relaxed) + grew;
+                            stats.note_stream_buf(tot as u64);
+                        }
+                        match r.read_fully(&mut buf) {
+                            Ok(n) => {
+                                buf.truncate(n);
+                                if n < chunk_bytes {
+                                    *g = None; // EOF: close the file early
+                                }
+                                if n > 0 {
+                                    stats.add_read_ahead(n as u64);
+                                }
+                                out = Ok(buf);
+                            }
+                            Err(e) => {
+                                *g = None;
+                                out = Err(e);
+                            }
+                        }
+                    }
+                }
+            }
+            let _ = tx.send(out);
+        });
+        self.disk
+            .io_service()
+            .ok_or_else(|| pipeline_err("pipelined stream on a disk without an io service"))?
+            .submit_read(job)
+    }
+
+    /// Advance to the next chunk. `Ok(false)` = EOF.
+    fn refill(&mut self) -> Result<bool> {
+        if self.failed {
+            return Err(pipeline_err("prefetch stream already failed"));
+        }
+        if self.eof {
+            return Ok(false);
+        }
+        if self.last {
+            self.eof = true;
+            return Ok(false);
+        }
+        // Donate the consumed buffer as the next read-ahead slot, then
+        // block for the oldest in-flight chunk.
+        let donated = std::mem::take(&mut self.cur);
+        self.pos = 0;
+        self.submit_fill(donated)?;
+        let t0 = Instant::now();
+        let msg = self
+            .data_rx
+            .recv_timeout(DRAIN_TIMEOUT)
+            .map_err(|_| pipeline_err("read-ahead lane stalled"))?;
+        self.disk.pipe_stats().add_reader_wait(t0.elapsed());
+        match msg {
+            Ok(chunk) => {
+                if chunk.len() < self.chunk_bytes {
+                    self.last = true;
+                }
+                self.cur = chunk;
+                if self.cur.is_empty() {
+                    self.eof = true;
+                    return Ok(false);
+                }
+                Ok(true)
+            }
+            Err(e) => {
+                self.failed = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Fill `out` as far as possible from the chunk stream; returns bytes
+    /// copied, which is < `out.len()` only at EOF.
+    fn read_fully(&mut self, out: &mut [u8]) -> Result<usize> {
+        let mut got = 0;
+        while got < out.len() {
+            if self.pos == self.cur.len() && !self.refill()? {
+                break;
+            }
+            let n = (out.len() - got).min(self.cur.len() - self.pos);
+            out[got..got + n].copy_from_slice(&self.cur[self.pos..self.pos + n]);
+            self.pos += n;
+            got += n;
+        }
+        Ok(got)
+    }
+}
+
+impl Drop for ChunkFetcher {
+    fn drop(&mut self) {
+        // Still-queued fill jobs become no-ops; the file handle is
+        // released by whichever job (or this drop) holds the state last.
+        self.shared.cancelled.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Owned streaming byte reader: read-ahead when the disk has a pipeline,
+/// a plain metered reader otherwise. No record framing — used for the
+/// delayed-op spill segments ([`crate::storage::buffer::SpillDrain`]).
+pub struct ByteReader {
+    inner: ByteReaderInner,
+}
+
+enum ByteReaderInner {
+    Direct(SharedMeteredReader),
+    Ahead(ChunkFetcher),
+}
+
+impl ByteReader {
+    /// Open `rel` on `disk` for owned streaming reads.
+    pub fn open(disk: &Arc<NodeDisk>, rel: impl AsRef<Path>) -> Result<ByteReader> {
+        let inner = if disk.io_service().is_some() {
+            ByteReaderInner::Ahead(ChunkFetcher::open(disk, rel, PIPE_CHUNK)?)
+        } else {
+            ByteReaderInner::Direct(disk.open_file_shared(rel)?)
+        };
+        Ok(ByteReader { inner })
+    }
+
+    /// Fill `buf` as far as possible; returns bytes read, < `buf.len()`
+    /// only at EOF.
+    pub fn read_fully(&mut self, buf: &mut [u8]) -> Result<usize> {
+        match &mut self.inner {
+            ByteReaderInner::Direct(r) => r.read_fully(buf),
+            ByteReaderInner::Ahead(f) => f.read_fully(buf),
+        }
+    }
+}
+
+/// Streaming reader of fixed-size records with read-ahead.
+///
+/// Depth 0 (or a disk without a service) is exactly
+/// [`RecordReader`](crate::storage::RecordReader); otherwise chunks are
+/// prefetched through the node's read lane.
+pub struct PrefetchReader<'d> {
+    inner: PfInner<'d>,
+    rec_size: usize,
+}
+
+enum PfInner<'d> {
+    Sync(RecordReader<'d>),
+    Ahead(ChunkFetcher),
+}
+
+impl<'d> PrefetchReader<'d> {
+    /// Open `rel`; errors if the file length is not a record multiple.
+    pub fn open(disk: &'d Arc<NodeDisk>, rel: impl AsRef<Path>, rec_size: usize) -> Result<Self> {
+        Self::open_with_chunk(disk, rel, rec_size, PIPE_CHUNK)
+    }
+
+    /// Like [`PrefetchReader::open`] with an explicit chunk size — k-way
+    /// merges divide the chunk by k so a merge's total pipeline RAM stays
+    /// O(depth × [`PIPE_CHUNK`]) regardless of fan-in.
+    pub fn open_with_chunk(
+        disk: &'d Arc<NodeDisk>,
+        rel: impl AsRef<Path>,
+        rec_size: usize,
+        chunk_bytes: usize,
+    ) -> Result<Self> {
+        assert!(rec_size > 0);
+        if disk.io_service().is_none() {
+            return Ok(PrefetchReader {
+                inner: PfInner::Sync(RecordReader::open(disk, rel, rec_size)?),
+                rec_size,
+            });
+        }
+        let len = disk.len(&rel);
+        if !len.is_multiple_of(rec_size as u64) {
+            return Err(RoomyError::InvalidArg(format!(
+                "file {:?} length {len} is not a multiple of record size {rec_size}",
+                rel.as_ref()
+            )));
+        }
+        let chunk = chunk_bytes.clamp(rec_size, PIPE_CHUNK.max(rec_size));
+        Ok(PrefetchReader {
+            inner: PfInner::Ahead(ChunkFetcher::open(disk, rel, chunk)?),
+            rec_size,
+        })
+    }
+
+    /// Record size in bytes.
+    pub fn rec_size(&self) -> usize {
+        self.rec_size
+    }
+
+    /// Read up to `max` records into `out` (cleared first). Returns the
+    /// number of records read; 0 = EOF.
+    pub fn read_batch(&mut self, out: &mut Vec<u8>, max: usize) -> Result<usize> {
+        match &mut self.inner {
+            PfInner::Sync(r) => r.read_batch(out, max),
+            PfInner::Ahead(f) => {
+                out.clear();
+                out.resize(max * self.rec_size, 0);
+                let n = f.read_fully(out)?;
+                if n % self.rec_size != 0 {
+                    return Err(RoomyError::InvalidArg(format!(
+                        "truncated record ({n} bytes) in prefetch stream"
+                    )));
+                }
+                out.truncate(n);
+                Ok(n / self.rec_size)
+            }
+        }
+    }
+
+    /// Read one record into `rec`; Ok(false) = EOF.
+    pub fn read_one(&mut self, rec: &mut [u8]) -> Result<bool> {
+        debug_assert_eq!(rec.len(), self.rec_size);
+        match &mut self.inner {
+            PfInner::Sync(r) => r.read_one(rec),
+            PfInner::Ahead(f) => {
+                let n = f.read_fully(rec)?;
+                match n {
+                    0 => Ok(false),
+                    n if n == self.rec_size => Ok(true),
+                    n => Err(RoomyError::InvalidArg(format!(
+                        "truncated record ({n} bytes) in prefetch stream"
+                    ))),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Write side: chunk flusher + record wrapper
+// ---------------------------------------------------------------------
+
+/// State shared between a writing stream's producer and its queued write
+/// jobs.
+struct WriteShared {
+    slot: Mutex<WriteSlot>,
+    /// Fast-path error flag so the producer never touches `slot` (whose
+    /// lock is held across throttled writes) on the hot path.
+    has_err: AtomicBool,
+    cancelled: AtomicBool,
+    alloc: AtomicUsize,
+}
+
+struct WriteSlot {
+    w: Option<SharedMeteredWriter>,
+    err: Option<RoomyError>,
+}
+
+/// Owned, overlapped chunk sink: up to `depth` chunk buffers circulate
+/// between this producer and the node's write lane.
+struct ChunkFlusher {
+    disk: Arc<NodeDisk>,
+    shared: Arc<WriteShared>,
+    pool_rx: Receiver<Vec<u8>>,
+    pool_tx: Sender<Vec<u8>>,
+    cur: Vec<u8>,
+    /// Capacity of `cur` when it was taken (allocation accounting).
+    cur_cap0: usize,
+    chunk_bytes: usize,
+    /// Buffers we may still allocate lazily (depth − 1; `cur` is one).
+    spare_budget: usize,
+    /// Write jobs submitted whose buffers have not come back yet.
+    outstanding: usize,
+    /// `Some` in create mode: bytes go here, renamed to `target` at
+    /// finish, removed on abandoning drop.
+    staging: Option<PathBuf>,
+    target: PathBuf,
+    finished: bool,
+}
+
+impl ChunkFlusher {
+    fn open(disk: &Arc<NodeDisk>, rel: impl AsRef<Path>, append: bool) -> Result<Self> {
+        let target = rel.as_ref().to_path_buf();
+        let (writer, staging) = if append {
+            (disk.append_file_shared(&target)?, None)
+        } else {
+            let staging = PathBuf::from(format!(
+                "tmp/pipeline/n{}-{}.pstage",
+                disk.node(),
+                STAGING_ID.fetch_add(1, Ordering::Relaxed)
+            ));
+            (disk.create_file_shared(&staging)?, Some(staging))
+        };
+        let (pool_tx, pool_rx) = channel();
+        disk.pipe_stats().add_stream();
+        Ok(ChunkFlusher {
+            disk: Arc::clone(disk),
+            shared: Arc::new(WriteShared {
+                slot: Mutex::new(WriteSlot { w: Some(writer), err: None }),
+                has_err: AtomicBool::new(false),
+                cancelled: AtomicBool::new(false),
+                alloc: AtomicUsize::new(0),
+            }),
+            pool_rx,
+            pool_tx,
+            cur: Vec::new(),
+            cur_cap0: 0,
+            chunk_bytes: PIPE_CHUNK,
+            spare_budget: disk.pipeline_depth().max(1) - 1,
+            outstanding: 0,
+            staging,
+            target,
+            finished: false,
+        })
+    }
+
+    fn push(&mut self, data: &[u8]) -> Result<()> {
+        if self.shared.has_err.load(Ordering::Relaxed) {
+            return self.take_err();
+        }
+        let mut data = data;
+        // Oversized batches are cut at chunk boundaries so one push never
+        // grows a buffer past the chunk size.
+        while !data.is_empty() {
+            if self.cur.len() >= self.chunk_bytes {
+                self.flush_cur()?;
+            }
+            let room = self.chunk_bytes - self.cur.len();
+            let n = room.min(data.len());
+            self.cur.extend_from_slice(&data[..n]);
+            data = &data[n..];
+        }
+        if self.cur.len() >= self.chunk_bytes {
+            self.flush_cur()?;
+        }
+        Ok(())
+    }
+
+    /// Surface (and consume) the deferred lane error.
+    fn take_err(&mut self) -> Result<()> {
+        let e = lock_ignore_poison(&self.shared.slot).err.take();
+        Err(e.unwrap_or_else(|| pipeline_err("write-behind stream already failed")))
+    }
+
+    fn flush_cur(&mut self) -> Result<()> {
+        if self.cur.is_empty() {
+            return Ok(());
+        }
+        let grew = self.cur.capacity().saturating_sub(self.cur_cap0);
+        if grew > 0 {
+            let tot = self.shared.alloc.fetch_add(grew, Ordering::Relaxed) + grew;
+            self.disk.pipe_stats().note_stream_buf(tot as u64);
+        }
+        // Submit first, then acquire the next buffer: at depth 1 the only
+        // buffer comes back from the job just submitted.
+        let full = std::mem::take(&mut self.cur);
+        self.submit_write(full)?;
+        self.cur = self.take_buffer()?;
+        self.cur_cap0 = self.cur.capacity();
+        Ok(())
+    }
+
+    /// A free buffer: reuse a returned one, allocate while under the depth
+    /// budget, else block until the lane returns one (backpressure).
+    fn take_buffer(&mut self) -> Result<Vec<u8>> {
+        if let Ok(b) = self.pool_rx.try_recv() {
+            self.outstanding -= 1;
+            return Ok(b);
+        }
+        if self.spare_budget > 0 {
+            self.spare_budget -= 1;
+            return Ok(Vec::new());
+        }
+        if self.outstanding == 0 {
+            // Defensive: nothing in flight could ever return a buffer.
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        let b = self
+            .pool_rx
+            .recv_timeout(DRAIN_TIMEOUT)
+            .map_err(|_| pipeline_err("write-behind lane stalled"))?;
+        self.disk.pipe_stats().add_writer_wait(t0.elapsed());
+        self.outstanding -= 1;
+        Ok(b)
+    }
+
+    fn submit_write(&mut self, buf: Vec<u8>) -> Result<()> {
+        let shared = Arc::clone(&self.shared);
+        let tx = self.pool_tx.clone();
+        let stats = Arc::clone(self.disk.pipe_stats());
+        let job: Job = Box::new(move || {
+            let mut buf = buf;
+            if !shared.cancelled.load(Ordering::Relaxed) {
+                let mut slot = lock_ignore_poison(&shared.slot);
+                if slot.err.is_none() {
+                    if let Some(w) = slot.w.as_mut() {
+                        match w.write_bytes(&buf) {
+                            Ok(()) => stats.add_write_behind(buf.len() as u64),
+                            Err(e) => {
+                                slot.err = Some(e);
+                                shared.has_err.store(true, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }
+            buf.clear();
+            let _ = tx.send(buf); // buffer always returns to the producer
+        });
+        self.disk
+            .io_service()
+            .ok_or_else(|| pipeline_err("pipelined stream on a disk without an io service"))?
+            .submit_write(job)?;
+        self.outstanding += 1;
+        Ok(())
+    }
+
+    /// Wait until every submitted chunk has been written.
+    fn drain(&mut self) -> Result<()> {
+        while self.outstanding > 0 {
+            self.pool_rx
+                .recv_timeout(DRAIN_TIMEOUT)
+                .map_err(|_| pipeline_err("write-behind lane stalled in drain"))?;
+            self.outstanding -= 1;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        let result = (|| {
+            self.flush_cur()?;
+            self.drain()?;
+            let w = {
+                let mut slot = lock_ignore_poison(&self.shared.slot);
+                if let Some(e) = slot.err.take() {
+                    return Err(e);
+                }
+                slot.w.take()
+            };
+            if let Some(w) = w {
+                w.finish()?;
+            }
+            if let Some(staging) = self.staging.take() {
+                if let Err(e) = self.disk.rename(&staging, &self.target) {
+                    // Put the path back so the error-path cleanup below
+                    // still removes the staging file.
+                    self.staging = Some(staging);
+                    return Err(e);
+                }
+            }
+            Ok(())
+        })();
+        // Success or failure, this stream is done: Drop must not try to
+        // clean up again, but a failed create must not leak its staging.
+        self.finished = true;
+        if result.is_err() {
+            if let Some(staging) = self.staging.take() {
+                let _ = self.disk.remove(&staging);
+            }
+        }
+        result
+    }
+}
+
+impl Drop for ChunkFlusher {
+    /// Abandoned stream (task error / worker panic): stop the lane from
+    /// writing more, wait for in-flight chunks, close the file and remove
+    /// the staging file — the destination is never touched in create
+    /// mode, and `tmp/pipeline/` is left clean.
+    fn drop(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.shared.cancelled.store(true, Ordering::Relaxed);
+        while self.outstanding > 0 {
+            match self.pool_rx.recv_timeout(DRAIN_TIMEOUT) {
+                Ok(_) => self.outstanding -= 1,
+                Err(_) => break, // lane wedged; still try to clean up
+            }
+        }
+        lock_ignore_poison(&self.shared.slot).w = None; // close the file
+        if let Some(staging) = self.staging.take() {
+            let _ = self.disk.remove(&staging);
+        }
+    }
+}
+
+/// Streaming writer of fixed-size records with write-behind.
+///
+/// Depth 0 (or a disk without a service) is exactly
+/// [`RecordWriter`](crate::storage::RecordWriter); otherwise completed
+/// chunks flush through the node's write lane while the producer keeps
+/// going, and `finish()` drains the lane (create mode additionally
+/// renames the staging file onto the destination).
+pub struct WriteBehindWriter<'d> {
+    inner: WbInner<'d>,
+    rec_size: usize,
+    written: u64,
+}
+
+enum WbInner<'d> {
+    Sync(RecordWriter<'d>),
+    Behind(ChunkFlusher),
+}
+
+impl<'d> WriteBehindWriter<'d> {
+    /// Create/truncate `rel` on `disk` for records of `rec_size` bytes.
+    pub fn create(disk: &'d Arc<NodeDisk>, rel: impl AsRef<Path>, rec_size: usize) -> Result<Self> {
+        assert!(rec_size > 0);
+        let inner = if disk.io_service().is_some() {
+            WbInner::Behind(ChunkFlusher::open(disk, rel, false)?)
+        } else {
+            WbInner::Sync(RecordWriter::create(disk, rel, rec_size)?)
+        };
+        Ok(WriteBehindWriter { inner, rec_size, written: 0 })
+    }
+
+    /// Open `rel` for appending records of `rec_size` bytes. Append mode
+    /// writes the destination in place (no staging): an abandoned stream
+    /// has the same torn-tail semantics as the synchronous path.
+    pub fn append(disk: &'d Arc<NodeDisk>, rel: impl AsRef<Path>, rec_size: usize) -> Result<Self> {
+        assert!(rec_size > 0);
+        let inner = if disk.io_service().is_some() {
+            WbInner::Behind(ChunkFlusher::open(disk, rel, true)?)
+        } else {
+            WbInner::Sync(RecordWriter::append(disk, rel, rec_size)?)
+        };
+        Ok(WriteBehindWriter { inner, rec_size, written: 0 })
+    }
+
+    /// Write one record (must be exactly `rec_size` bytes).
+    pub fn push(&mut self, rec: &[u8]) -> Result<()> {
+        debug_assert_eq!(rec.len(), self.rec_size);
+        match &mut self.inner {
+            WbInner::Sync(w) => w.push(rec)?,
+            WbInner::Behind(f) => {
+                f.push(rec)?;
+                self.written += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Write a batch of concatenated records.
+    pub fn push_batch(&mut self, recs: &[u8]) -> Result<()> {
+        debug_assert_eq!(recs.len() % self.rec_size, 0);
+        match &mut self.inner {
+            WbInner::Sync(w) => w.push_batch(recs)?,
+            WbInner::Behind(f) => {
+                f.push(recs)?;
+                self.written += (recs.len() / self.rec_size) as u64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Records written through this writer.
+    pub fn written(&self) -> u64 {
+        match &self.inner {
+            WbInner::Sync(w) => w.written(),
+            WbInner::Behind(_) => self.written,
+        }
+    }
+
+    /// Drain, flush and close; in overlapped create mode the destination
+    /// appears (atomically, via rename) only now.
+    pub fn finish(self) -> Result<()> {
+        match self.inner {
+            WbInner::Sync(w) => w.finish(),
+            WbInner::Behind(mut f) => f.finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DiskPolicy;
+    use crate::testutil::{files_under, tmpdir};
+
+    fn plain_disk(dir: &Path) -> Arc<NodeDisk> {
+        Arc::new(NodeDisk::create(0, dir, DiskPolicy::unthrottled()).unwrap())
+    }
+
+    fn piped_disk(dir: &Path, depth: usize) -> Arc<NodeDisk> {
+        Arc::new(
+            NodeDisk::create_with_depth(0, dir, DiskPolicy::unthrottled(), depth).unwrap(),
+        )
+    }
+
+    fn write_recs(d: &Arc<NodeDisk>, rel: &str, n: u32) {
+        let mut w = RecordWriter::create(d, rel, 4).unwrap();
+        for i in 0..n {
+            w.push(&i.to_le_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    fn read_recs(d: &Arc<NodeDisk>, rel: &str) -> Vec<u32> {
+        let mut r = PrefetchReader::open(d, rel, 4).unwrap();
+        let mut out = Vec::new();
+        let mut buf = Vec::new();
+        loop {
+            let n = r.read_batch(&mut buf, 1000).unwrap();
+            if n == 0 {
+                return out;
+            }
+            for rec in buf.chunks_exact(4) {
+                out.push(u32::from_le_bytes(rec.try_into().unwrap()));
+            }
+        }
+    }
+
+    #[test]
+    fn sync_mode_roundtrip_without_service() {
+        let t = tmpdir("pipe_sync");
+        let d = plain_disk(t.path());
+        assert!(d.io_service().is_none());
+        let mut w = WriteBehindWriter::create(&d, "f.dat", 4).unwrap();
+        for i in 0u32..100 {
+            w.push(&i.to_le_bytes()).unwrap();
+        }
+        assert_eq!(w.written(), 100);
+        w.finish().unwrap();
+        assert_eq!(read_recs(&d, "f.dat"), (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn overlapped_roundtrip_matches_sync_bytes() {
+        let t0 = tmpdir("pipe_ref");
+        let d0 = plain_disk(t0.path());
+        write_recs(&d0, "f.dat", 50_000);
+        let reference = d0.read_all("f.dat").unwrap();
+
+        for depth in [1usize, 2, 4, 64] {
+            let t = tmpdir(&format!("pipe_over_{depth}"));
+            let d = piped_disk(t.path(), depth);
+            assert!(d.io_service().is_some());
+            let mut w = WriteBehindWriter::create(&d, "f.dat", 4).unwrap();
+            for i in 0u32..50_000 {
+                w.push(&i.to_le_bytes()).unwrap();
+            }
+            assert_eq!(w.written(), 50_000);
+            w.finish().unwrap();
+            assert_eq!(
+                d.read_all("f.dat").unwrap(),
+                reference,
+                "depth {depth} bytes diverged"
+            );
+            assert_eq!(read_recs(&d, "f.dat"), (0..50_000).collect::<Vec<_>>());
+            // staging is gone after finish
+            assert_eq!(files_under(&t.path().join("tmp/pipeline")), 0);
+        }
+    }
+
+    #[test]
+    fn prefetch_read_one_and_batches_cross_chunks() {
+        let t = tmpdir("pipe_read_one");
+        let d = piped_disk(t.path(), 2);
+        // 3-byte records with a chunk that is NOT a record multiple:
+        // records must still come back whole across chunk boundaries.
+        let mut w = WriteBehindWriter::create(&d, "r.dat", 3).unwrap();
+        for i in 0u32..5_000 {
+            w.push(&[i as u8, (i >> 8) as u8, (i >> 16) as u8]).unwrap();
+        }
+        w.finish().unwrap();
+        let mut r = PrefetchReader::open_with_chunk(&d, "r.dat", 3, 1024).unwrap();
+        let mut rec = [0u8; 3];
+        for i in 0u32..5_000 {
+            assert!(r.read_one(&mut rec).unwrap(), "record {i} missing");
+            assert_eq!(rec, [i as u8, (i >> 8) as u8, (i >> 16) as u8]);
+        }
+        assert!(!r.read_one(&mut rec).unwrap());
+    }
+
+    #[test]
+    fn append_mode_accumulates() {
+        let t = tmpdir("pipe_append");
+        let d = piped_disk(t.path(), 2);
+        for round in 0u32..3 {
+            let mut w = WriteBehindWriter::append(&d, "log.dat", 4).unwrap();
+            w.push(&round.to_le_bytes()).unwrap();
+            w.finish().unwrap();
+        }
+        assert_eq!(read_recs(&d, "log.dat"), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn abandoned_create_leaves_no_staging_and_no_target() {
+        let t = tmpdir("pipe_abandon");
+        let d = piped_disk(t.path(), 2);
+        {
+            let mut w = WriteBehindWriter::create(&d, "out.dat", 4).unwrap();
+            for i in 0u32..200_000 {
+                w.push(&i.to_le_bytes()).unwrap();
+            }
+            // dropped without finish — simulates a panicking task
+        }
+        assert!(!d.exists("out.dat"), "abandoned create must not publish the target");
+        assert_eq!(
+            files_under(&t.path().join("tmp/pipeline")),
+            0,
+            "staging leak"
+        );
+    }
+
+    #[test]
+    fn empty_create_publishes_empty_file() {
+        let t = tmpdir("pipe_empty");
+        let d = piped_disk(t.path(), 4);
+        WriteBehindWriter::create(&d, "e.dat", 8).unwrap().finish().unwrap();
+        assert!(d.exists("e.dat"));
+        assert_eq!(d.len("e.dat"), 0);
+    }
+
+    #[test]
+    fn depth_larger_than_file_degrades_gracefully() {
+        let t = tmpdir("pipe_tiny");
+        let d = piped_disk(t.path(), 64);
+        write_recs(&d, "tiny.dat", 3);
+        assert_eq!(read_recs(&d, "tiny.dat"), vec![0, 1, 2]);
+        // a sub-chunk file must have allocated at most one chunk buffer
+        let snap = d.pipe_stats().snapshot();
+        assert!(
+            snap.peak_stream_buf <= PIPE_CHUNK as u64,
+            "tiny stream allocated {} bytes",
+            snap.peak_stream_buf
+        );
+    }
+
+    #[test]
+    fn stream_buffers_bounded_by_depth_times_chunk() {
+        let t = tmpdir("pipe_bound");
+        for depth in [1usize, 2, 4] {
+            let d = piped_disk(&t.path().join(format!("d{depth}")), depth);
+            write_recs(&d, "big.dat", 400_000); // ~1.5 MiB, many chunks
+            let _ = read_recs(&d, "big.dat");
+            let mut w = WriteBehindWriter::create(&d, "copy.dat", 4).unwrap();
+            for i in 0u32..400_000 {
+                w.push(&i.to_le_bytes()).unwrap();
+            }
+            w.finish().unwrap();
+            let snap = d.pipe_stats().snapshot();
+            assert!(snap.chunks_ahead > 0 && snap.chunks_behind > 0);
+            assert!(
+                snap.peak_stream_buf <= (depth * PIPE_CHUNK) as u64,
+                "depth {depth}: peak stream buffers {} exceed {}",
+                snap.peak_stream_buf,
+                depth * PIPE_CHUNK
+            );
+        }
+    }
+
+    #[test]
+    fn service_threads_exit_on_disk_drop() {
+        let t = tmpdir("pipe_threads");
+        let d = piped_disk(t.path(), 2);
+        let flags = d.io_service().unwrap().alive_flags();
+        assert_eq!(flags.len(), 2);
+        assert!(flags.iter().all(|f| f.load(Ordering::SeqCst)));
+        drop(d);
+        assert!(
+            flags.iter().all(|f| !f.load(Ordering::SeqCst)),
+            "service lanes must be joined when the disk drops"
+        );
+    }
+
+    #[test]
+    fn byte_reader_streams_across_chunk_boundaries() {
+        let t = tmpdir("pipe_bytes");
+        let d = piped_disk(t.path(), 2);
+        let payload: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        d.write_all("b.dat", &payload).unwrap();
+        let mut r = ByteReader::open(&d, "b.dat").unwrap();
+        let mut got = Vec::new();
+        let mut buf = [0u8; 7777]; // prime-ish size forces chunk straddling
+        loop {
+            let n = r.read_fully(&mut buf).unwrap();
+            got.extend_from_slice(&buf[..n]);
+            if n < buf.len() {
+                break;
+            }
+        }
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn read_error_surfaces_missing_file() {
+        let t = tmpdir("pipe_missing");
+        let d = piped_disk(t.path(), 2);
+        assert!(PrefetchReader::open(&d, "nope.dat", 4).is_err());
+        assert!(ByteReader::open(&d, "nope.dat").is_err());
+    }
+
+    #[test]
+    fn metering_parity_between_depths() {
+        // The pipeline must charge the same byte totals as the sync path.
+        let t0 = tmpdir("pipe_meter0");
+        let d0 = plain_disk(t0.path());
+        write_recs(&d0, "f.dat", 10_000);
+        let w0 = d0.stats().snapshot().bytes_written;
+        let _ = read_recs(&d0, "f.dat");
+        let r0 = d0.stats().snapshot().bytes_read;
+
+        let t1 = tmpdir("pipe_meter1");
+        let d1 = piped_disk(t1.path(), 4);
+        write_recs(&d1, "f.dat", 10_000);
+        let w1 = d1.stats().snapshot().bytes_written;
+        let _ = read_recs(&d1, "f.dat");
+        let r1 = d1.stats().snapshot().bytes_read;
+        assert_eq!(w0, w1, "written bytes must meter identically");
+        assert_eq!(r0, r1, "read bytes must meter identically");
+    }
+}

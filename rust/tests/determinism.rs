@@ -1,12 +1,14 @@
-//! Parallel == serial, byte for byte.
+//! Parallel == serial, byte for byte — at every pipeline depth.
 //!
 //! Every collective runs its buckets on the worker pool
-//! (`roomy::runtime::pool`); these tests prove the pool's three
-//! determinism rules (bucket isolation, merge-by-bucket-index, per-task
-//! delayed-op capture) by running identical randomized workloads with
-//! `num_workers` ∈ {1, 2, 4} and demanding **identical on-disk bytes**
-//! (full recursive digest of the instance root) and identical
-//! order-sensitive reduce results.
+//! (`roomy::runtime::pool`) and streams them through the overlapped-I/O
+//! pipeline (`roomy::storage::pipeline`); these tests prove the pool's
+//! three determinism rules (bucket isolation, merge-by-bucket-index,
+//! per-task delayed-op capture) *and* the pipeline's transparency by
+//! running identical randomized workloads over the full matrix
+//! `io_pipeline_depth` ∈ {0, 1, 4} × `num_workers` ∈ {1, 2, 4} and
+//! demanding **identical on-disk bytes** (full recursive digest of the
+//! instance root) and identical order-sensitive reduce results.
 
 mod common;
 
@@ -15,28 +17,50 @@ use roomy::constructs::bfs;
 use roomy::testutil::{tmpdir, Rng};
 use roomy::{Roomy, RoomyConfig};
 
-/// Run `workload` once per worker count; the workload returns an optional
+/// The pipeline-depth × worker-count grid every workload must be
+/// byte-identical across. (depth 0, workers 1) is the serial reference.
+const MATRIX: [(usize, usize); 9] = [
+    (0, 1),
+    (0, 2),
+    (0, 4),
+    (1, 1),
+    (1, 2),
+    (1, 4),
+    (4, 1),
+    (4, 2),
+    (4, 4),
+];
+
+/// Run `workload` once per (depth, workers) cell; the workload returns an
 /// order-sensitive value that must also match. Asserts equal digests.
 fn assert_deterministic(tag: &str, workload: impl Fn(&Roomy, &mut Rng) -> u64) {
     let mut outcomes = Vec::new();
-    for &nw in &[1usize, 2, 4] {
-        let t = tmpdir(&format!("det_{tag}_{nw}"));
+    for &(depth, nw) in &MATRIX {
+        let t = tmpdir(&format!("det_{tag}_d{depth}_w{nw}"));
         let mut cfg = RoomyConfig::for_testing(t.path());
         cfg.workers = 3; // uneven bucket→node split
         cfg.buckets_per_worker = 2;
         cfg.num_workers = nw;
+        cfg.io_pipeline_depth = depth;
         cfg.op_buffer_bytes = 256; // force staging spills
         cfg.capture_spill_threshold = 96; // force in-collective capture spills
         let r = Roomy::open(cfg).unwrap();
-        let mut rng = Rng::new(0xD15EA5E); // identical input per worker count
+        let mut rng = Rng::new(0xD15EA5E); // identical input per cell
         let value = workload(&r, &mut rng);
+        drop(r); // join io service threads before digesting
         let digest = dir_digest(t.path());
-        outcomes.push((nw, value, digest));
+        outcomes.push((depth, nw, value, digest));
     }
-    let (_, v0, d0) = outcomes[0];
-    for (nw, v, d) in &outcomes[1..] {
-        assert_eq!(*v, v0, "{tag}: value diverged at num_workers={nw}");
-        assert_eq!(*d, d0, "{tag}: on-disk bytes diverged at num_workers={nw}");
+    let (_, _, v0, d0) = outcomes[0];
+    for (depth, nw, v, d) in &outcomes[1..] {
+        assert_eq!(
+            *v, v0,
+            "{tag}: value diverged at depth={depth} num_workers={nw}"
+        );
+        assert_eq!(
+            *d, d0,
+            "{tag}: on-disk bytes diverged at depth={depth} num_workers={nw}"
+        );
     }
 }
 
@@ -277,7 +301,9 @@ fn det_bfs_batched_staging() {
 }
 
 /// Full **batched** BFS drivers agree (level profile and totals) across
-/// worker counts — both the list and the hash-table variant.
+/// worker counts and pipeline depths — both the list and the hash-table
+/// variant (the BFS frontier scans are the issue's canonical
+/// read-ahead consumer).
 #[test]
 fn det_full_bfs_levels() {
     fn gen(batch: &[u64], out: &mut Vec<u64>) -> roomy::Result<()> {
@@ -290,22 +316,23 @@ fn det_full_bfs_levels() {
     }
     for driver in ["hash", "list"] {
         let mut profiles = Vec::new();
-        for &nw in &[1usize, 2, 4] {
-            let t = tmpdir(&format!("det_bfs_{driver}_{nw}"));
+        for &(depth, nw) in &[(0usize, 1usize), (0, 4), (1, 2), (4, 1), (4, 4)] {
+            let t = tmpdir(&format!("det_bfs_{driver}_d{depth}_w{nw}"));
             let mut cfg = RoomyConfig::for_testing(t.path());
             cfg.num_workers = nw;
+            cfg.io_pipeline_depth = depth;
             cfg.capture_spill_threshold = 128; // exercise capture spills
             let r = Roomy::open(cfg).unwrap();
             let stats = match driver {
                 "hash" => bfs::bfs_hash_batched(&r, "cube", &[0u64], gen).unwrap(),
                 _ => bfs::bfs_list_batched(&r, "cube", &[0u64], gen).unwrap(),
             };
-            profiles.push((nw, stats));
+            profiles.push((depth, nw, stats));
         }
-        for (nw, s) in &profiles[1..] {
+        for (depth, nw, s) in &profiles[1..] {
             assert_eq!(
-                s, &profiles[0].1,
-                "{driver} BFS level profile diverged at num_workers={nw}"
+                s, &profiles[0].2,
+                "{driver} BFS level profile diverged at depth={depth} num_workers={nw}"
             );
         }
     }

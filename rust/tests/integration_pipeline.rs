@@ -1,0 +1,218 @@
+//! Lifecycle and space-bound tests for the overlapped-I/O pipeline
+//! (`roomy::storage::pipeline`) and the flat per-task capture budget.
+//!
+//! The determinism matrix (depths × workers, byte-identical state) lives
+//! in `tests/determinism.rs`; this suite covers what that one cannot:
+//! teardown (no service thread survives the instance, panics leave no
+//! staging files), graceful degradation (depth ≫ data), and the
+//! metrics-observable RAM bounds.
+
+mod common;
+
+use common::{dir_digest, roomy_with};
+use roomy::storage::PIPE_CHUNK;
+use roomy::testutil::files_under;
+use std::sync::atomic::Ordering;
+
+/// A panicking collective at depth > 0 must (a) surface as WorkerPanic,
+/// (b) leave no write-behind staging files under tmp/pipeline/, and —
+/// once the instance is dropped — (c) leave no I/O service thread alive.
+#[test]
+fn panic_mid_collective_leaves_no_threads_or_staging() {
+    let (t, r) = roomy_with("pipe_panic", |c| {
+        c.workers = 2;
+        c.buckets_per_worker = 2;
+        c.num_workers = 4;
+        c.io_pipeline_depth = 4;
+    });
+    let nworkers = r.cluster().nworkers();
+    let flags = r.cluster().io_alive_flags();
+    assert_eq!(flags.len(), nworkers * 2, "one read + one write lane per node");
+    assert!(flags.iter().all(|f| f.load(Ordering::SeqCst)));
+
+    // map_update holds a PrefetchReader *and* a write-behind stream (with
+    // a staging file under tmp/pipeline/) per bucket task — panicking in
+    // its middle abandons both mid-flight.
+    let ra = r.array::<u64>("a", 600_000, 1).unwrap();
+    let res = ra.map_update(|i, _v| assert!(i != 444_444, "boom"));
+    match res {
+        Err(roomy::RoomyError::WorkerPanic { .. }) => {}
+        other => panic!("expected WorkerPanic, got {other:?}"),
+    }
+
+    // Every staging file is gone right after the failed collective
+    // returns (writer Drop cleans up during unwinding, before the pool
+    // reports the panic).
+    for w in 0..nworkers {
+        let staging = r.cluster().disk(w).root().join("tmp/pipeline");
+        assert_eq!(files_under(&staging), 0, "staging leak on node {w}");
+    }
+
+    // The instance stays usable after the failed collective...
+    let count = std::sync::atomic::AtomicU64::new(0);
+    ra.map(|_i, _v| {
+        count.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(count.into_inner(), 600_000);
+
+    // ...and teardown joins every service lane.
+    drop(ra);
+    drop(r);
+    drop(t);
+    assert!(
+        flags.iter().all(|f| !f.load(Ordering::SeqCst)),
+        "an io service thread survived instance teardown"
+    );
+}
+
+/// A depth far larger than the data (and than the bucket count) degrades
+/// gracefully: tiny structures work, produce bytes identical to the
+/// synchronous run, and allocate at most one chunk per stream.
+#[test]
+fn depth_larger_than_buckets_degrades_gracefully() {
+    let run = |depth: usize| {
+        let (t, r) = roomy_with(&format!("pipe_deep_{depth}"), |c| {
+            c.workers = 2;
+            c.buckets_per_worker = 2; // 4 buckets, depth 64 dwarfs them
+            c.num_workers = 2;
+            c.io_pipeline_depth = depth;
+        });
+        let l = r.list::<u64>("l").unwrap();
+        for v in [3u64, 1, 4, 1, 5, 9, 2, 6] {
+            l.add(&v).unwrap();
+        }
+        l.sync().unwrap();
+        l.remove_dupes().unwrap();
+        assert_eq!(l.size(), 7);
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        ht.insert(&1, &10).unwrap();
+        ht.insert(&2, &20).unwrap();
+        ht.sync().unwrap();
+        assert_eq!(ht.fetch(&2).unwrap(), Some(20));
+        if depth > 0 {
+            let snap = r.cluster().pipeline_snapshot();
+            assert!(
+                snap.peak_stream_buf <= PIPE_CHUNK as u64,
+                "sub-chunk data allocated {} bytes of stream buffers",
+                snap.peak_stream_buf
+            );
+        }
+        drop(ht);
+        drop(l);
+        drop(r);
+        dir_digest(t.path())
+    };
+    let reference = run(0);
+    assert_eq!(run(64), reference, "depth 64 diverged from synchronous bytes");
+}
+
+/// Pipeline RAM is metered and bounded: a bulk scan + rewrite at depth d
+/// keeps every stream's buffers within d × PIPE_CHUNK, visibly uses the
+/// pipeline (chunks flow both directions), and ends with clean scratch.
+#[test]
+fn pipeline_ram_bounded_by_depth_times_chunk() {
+    for depth in [1usize, 2, 4] {
+        let (t, r) = roomy_with(&format!("pipe_ram_{depth}"), |c| {
+            c.workers = 2;
+            c.buckets_per_worker = 2;
+            c.num_workers = 2;
+            c.io_pipeline_depth = depth;
+        });
+        let ra = r.array::<u64>("a", 600_000, 1).unwrap(); // ~4.8 MB
+        ra.map_update(|i, v| *v = i ^ *v).unwrap();
+        let sum = ra
+            .reduce(|| 0u64, |a, _i, v| a.wrapping_add(*v), |a, b| a.wrapping_add(b))
+            .unwrap();
+        assert_eq!(
+            sum,
+            (0..600_000u64).fold(0u64, |a, i| a.wrapping_add(i ^ 1))
+        );
+
+        let snap = r.cluster().pipeline_snapshot();
+        assert!(snap.streams > 0, "pipeline never engaged at depth {depth}");
+        assert!(snap.chunks_ahead > 0, "no read-ahead at depth {depth}");
+        assert!(snap.chunks_behind > 0, "no write-behind at depth {depth}");
+        assert!(
+            snap.peak_stream_buf <= (depth * PIPE_CHUNK) as u64,
+            "depth {depth}: peak stream buffers {} exceed depth × chunk = {}",
+            snap.peak_stream_buf,
+            depth * PIPE_CHUNK
+        );
+        for w in 0..r.cluster().nworkers() {
+            let staging = r.cluster().disk(w).root().join("tmp/pipeline");
+            assert_eq!(files_under(&staging), 0, "staging leak on node {w}");
+        }
+        drop(ra);
+        drop(r);
+        drop(t);
+    }
+}
+
+/// The flat per-task capture budget spans destination structures: a map
+/// staging into three lists stays within one threshold + one record of
+/// capture RAM per task, counts its budget-forced spills, and remains
+/// byte-deterministic across worker counts and depths.
+#[test]
+fn flat_capture_budget_spans_destinations() {
+    const THRESHOLD: usize = 256;
+    const RECORD: usize = 2 + 8 + 8; // list op (hdr + elt) + capture header
+
+    let run = |nw: usize, depth: usize| {
+        let (t, r) = roomy_with(&format!("pipe_flatcap_{nw}_{depth}"), |c| {
+            c.num_workers = nw;
+            c.workers = 3;
+            c.buckets_per_worker = 2;
+            c.io_pipeline_depth = depth;
+            c.capture_spill_threshold = THRESHOLD;
+        });
+        let src = r.list::<u64>("src").unwrap();
+        for v in 0..3_000u64 {
+            src.add(&v).unwrap();
+        }
+        src.sync().unwrap();
+        let dsts: Vec<_> =
+            (0..3).map(|i| r.list::<u64>(&format!("dst{i}")).unwrap()).collect();
+        let emit = dsts.clone();
+        // Each element stages into all three destinations: per-destination
+        // volume per task (~6.7 KiB) and task total (~20 KiB) both dwarf
+        // the 256-byte flat budget.
+        src.map(move |&v| {
+            for (i, d) in emit.iter().enumerate() {
+                d.add(&(v * 3 + i as u64)).unwrap();
+            }
+        })
+        .unwrap();
+
+        let stats = r.cluster().pool().stats();
+        assert!(
+            stats.capture_peak_task_ram() as usize <= THRESHOLD + RECORD,
+            "flat budget violated: peak {} > {} + record across 3 destinations",
+            stats.capture_peak_task_ram(),
+            THRESHOLD,
+        );
+        assert!(stats.capture_budget_spills() > 0, "budget never forced a spill");
+        assert!(stats.capture_spilled_bytes() > 0);
+        for w in 0..r.cluster().nworkers() {
+            let scratch = r.cluster().disk(w).root().join("tmp/capture");
+            assert_eq!(files_under(&scratch), 0, "scratch leak on node {w}");
+        }
+        for d in &dsts {
+            d.sync().unwrap();
+            assert_eq!(d.size(), 3_000);
+        }
+        drop(dsts);
+        drop(src);
+        drop(r);
+        dir_digest(t.path())
+    };
+
+    let serial = run(1, 0);
+    for (nw, depth) in [(2usize, 0usize), (4, 0), (1, 4), (4, 4)] {
+        assert_eq!(
+            run(nw, depth),
+            serial,
+            "on-disk bytes diverged at num_workers={nw} depth={depth}"
+        );
+    }
+}

@@ -228,8 +228,10 @@ fn prop_pancake_small_n_random_config() {
 // duplication across chunk/run boundaries, determinism, dedup = unique.
 // ---------------------------------------------------------------------
 
-fn extsort_disk(dir: &std::path::Path) -> roomy::storage::NodeDisk {
-    roomy::storage::NodeDisk::create(0, dir, roomy::DiskPolicy::unthrottled()).unwrap()
+fn extsort_disk(dir: &std::path::Path) -> std::sync::Arc<roomy::storage::NodeDisk> {
+    std::sync::Arc::new(
+        roomy::storage::NodeDisk::create(0, dir, roomy::DiskPolicy::unthrottled()).unwrap(),
+    )
 }
 
 fn write_records(d: &roomy::storage::NodeDisk, rel: &str, recs: &[Vec<u8>], rec_size: usize) {
