@@ -14,12 +14,18 @@
 //! Reported: per-level counts, wall time, aggregate disk traffic and
 //! throughput, per-phase breakdown. EXPERIMENTS.md records a run.
 //!
-//! Run: `cargo run --release --example pancake_bfs [n] [workers]`
+//! Run: `cargo run --release --example pancake_bfs [n] [workers] [checkpoint-dir]`
+//!
+//! With a third argument the run checkpoints after every BFS level and
+//! **resumes** from the last completed level if the directory already
+//! holds a checkpoint — kill it mid-run and re-run the same command line
+//! to watch it continue (the crash-recovery walkthrough in the README).
 
 use std::time::Instant;
 
 use roomy::accel::Accel;
 use roomy::apps::pancake::{self, Structure};
+use roomy::constructs::bfs::{BfsOutcome, ResumableBfs};
 use roomy::metrics::{fmt_bytes, fmt_rate};
 use roomy::{Roomy, RoomyConfig};
 
@@ -27,12 +33,14 @@ fn main() -> roomy::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let n: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(9);
     let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let checkpoint_dir = args.get(2).map(std::path::PathBuf::from);
     assert!((2..=11).contains(&n), "n must be in 2..=11");
 
     let mut cfg = RoomyConfig::default();
     cfg.workers = workers;
     cfg.buckets_per_worker = 4;
     cfg.root = std::env::temp_dir().join(format!("roomy-pancake-{}", std::process::id()));
+    cfg.checkpoint_dir = checkpoint_dir.clone();
     let r = Roomy::open(cfg)?;
     let accel = Accel::from_roomy(&r);
 
@@ -47,7 +55,30 @@ fn main() -> roomy::Result<()> {
 
     // --- the disk-based run -----------------------------------------
     let t0 = Instant::now();
-    let stats = pancake::roomy_bfs(&r, n, Structure::List, &accel)?;
+    let stats = if checkpoint_dir.is_some() {
+        let mgr = r.checkpoints()?;
+        let tag = format!("pancake{n}-list");
+        if mgr.exists(&tag) {
+            println!("resuming checkpoint {tag:?} under {:?}", mgr.root());
+        } else {
+            println!("checkpointing every level as {tag:?} under {:?}", mgr.root());
+        }
+        match pancake::roomy_bfs_resumable(
+            &r,
+            n,
+            Structure::List,
+            &accel,
+            &ResumableBfs::new(&mgr, tag),
+        )? {
+            BfsOutcome::Complete(stats) => {
+                println!("{}", mgr.stats().snapshot().report());
+                stats
+            }
+            BfsOutcome::Suspended { .. } => unreachable!("no stop hook set"),
+        }
+    } else {
+        pancake::roomy_bfs(&r, n, Structure::List, &accel)?
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     // --- RAM reference baseline --------------------------------------

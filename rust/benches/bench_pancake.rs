@@ -94,6 +94,76 @@ fn main() {
             "-".into(),
         ]);
     }
+    // ---- E4b: checkpoint overhead -----------------------------------
+    // Per-level save cost of the durable-checkpoint subsystem
+    // (storage::checkpoint): wall overhead vs the plain driver, hardlink
+    // vs copy split, and the cost of a full restore.
+    let ckpt_n = if scale() < 0.1 { 6 } else { 8 };
+    header(
+        &format!("E4b: checkpoint overhead, n={ckpt_n} (list variant, checkpoint every level)"),
+        &[
+            "run",
+            "wall s",
+            "saves",
+            "avg save ms",
+            "linked files (MB)",
+            "copied files (MB)",
+            "restore ms",
+        ],
+    );
+    {
+        use roomy::constructs::bfs::{BfsOutcome, ResumableBfs};
+
+        // plain driver baseline
+        let (_t, r) = fresh_roomy("pkckpt_base", |_| {});
+        let (base_s, _) = time(|| {
+            pancake::roomy_bfs(&r, ckpt_n, Structure::List, &Accel::rust()).unwrap()
+        });
+        row(&[
+            "no checkpoints".into(),
+            format!("{base_s:.2}"),
+            "0".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+
+        // checkpoint-every-level run + one kill/resume to time restore
+        let (_t2, r2) = fresh_roomy("pkckpt_run", |_| {});
+        let mgr = r2.checkpoints().unwrap();
+        let opts = ResumableBfs {
+            manager: &mgr,
+            tag: "pk".into(),
+            stop_after_levels: Some(3),
+        };
+        let out =
+            pancake::roomy_bfs_resumable(&r2, ckpt_n, Structure::List, &Accel::rust(), &opts)
+                .unwrap();
+        assert!(matches!(out, BfsOutcome::Suspended { .. }));
+        let (full_s, out) = time(|| {
+            pancake::roomy_bfs_resumable(
+                &r2,
+                ckpt_n,
+                Structure::List,
+                &Accel::rust(),
+                &ResumableBfs::new(&mgr, "pk"),
+            )
+            .unwrap()
+        });
+        assert!(matches!(out, BfsOutcome::Complete(_)));
+        let snap = mgr.stats().snapshot();
+        row(&[
+            "checkpoint/level (resumed)".into(),
+            format!("{full_s:.2}"),
+            snap.saves.to_string(),
+            format!("{:.2}", snap.save_ns as f64 / 1e6 / snap.saves.max(1) as f64),
+            format!("{} ({:.1})", snap.files_linked, snap.bytes_linked as f64 / 1e6),
+            format!("{} ({:.1})", snap.files_copied, snap.bytes_copied as f64 / 1e6),
+            format!("{:.2}", snap.restore_ns as f64 / 1e6 / snap.restores.max(1) as f64),
+        ]);
+    }
+
     println!(
         "\nexpansion backend: {}",
         if xla.is_some() { "XLA AOT (list/hash variants)" } else { "Rust fallback" }

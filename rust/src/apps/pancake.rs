@@ -20,8 +20,8 @@
 use std::sync::Mutex;
 
 use crate::accel::Accel;
-use crate::constructs::bfs::{self, LevelStats};
-use crate::error::Result;
+use crate::constructs::bfs::{self, BfsOutcome, LevelStats, ResumableBfs};
+use crate::error::{Result, RoomyError};
 use crate::roomy::Roomy;
 
 /// Known pancake numbers f(n) (max flips to sort any stack of n), n = 1..
@@ -184,6 +184,36 @@ pub fn roomy_bfs(r: &Roomy, n: usize, structure: Structure, accel: &Accel) -> Re
         Structure::List => bfs_list(r, n, accel),
         Structure::Hash => bfs_hash(r, n, accel),
         Structure::Array => bfs_array(r, n),
+    }
+}
+
+/// Disk-based pancake BFS with a durable checkpoint after every level:
+/// kill the process at any point and re-invoke with the same options to
+/// continue from the last completed level — the resumed run's final state
+/// and level profile are byte-identical to an uninterrupted one. Only the
+/// List and Hash variants are resumable (the Array variant's seen-bits +
+/// per-level list pair is not checkpointed yet).
+pub fn roomy_bfs_resumable(
+    r: &Roomy,
+    n: usize,
+    structure: Structure,
+    accel: &Accel,
+    opts: &ResumableBfs<'_>,
+) -> Result<BfsOutcome> {
+    assert!((2..=16).contains(&n));
+    let start = identity_packed(n);
+    let nbuckets = r.cluster().nbuckets();
+    let gen = |frontier: &[u64], out: &mut Vec<u64>| -> Result<()> {
+        let exp = accel.bfs_expand(frontier, n, nbuckets)?;
+        out.extend_from_slice(&exp.packed);
+        Ok(())
+    };
+    match structure {
+        Structure::List => bfs::bfs_list_resumable(r, "pancake", &[start], gen, opts),
+        Structure::Hash => bfs::bfs_hash_resumable(r, "pancakeh", &[start], gen, opts),
+        Structure::Array => Err(RoomyError::InvalidArg(
+            "the Array pancake variant has no resumable driver; use list or hash".into(),
+        )),
     }
 }
 
@@ -376,6 +406,56 @@ mod tests {
         let stats = roomy_bfs(&r, 5, Structure::Array, &Accel::rust()).unwrap();
         assert_eq!(stats.levels, reference_bfs(5));
         assert_eq!(stats.total, factorial(5));
+    }
+
+    #[test]
+    fn roomy_bfs_resumable_kill_and_resume_matches_reference_n6() {
+        let t = tmpdir("pk_res6");
+        // session 1: killed after two completed levels
+        {
+            let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+            let mgr = r.checkpoints().unwrap();
+            let opts = ResumableBfs {
+                manager: &mgr,
+                tag: "pk6".into(),
+                stop_after_levels: Some(2),
+            };
+            let out = roomy_bfs_resumable(&r, 6, Structure::List, &Accel::rust(), &opts).unwrap();
+            assert_eq!(out, BfsOutcome::Suspended { next_level: 3 });
+        }
+        // session 2: fresh process over the same root finishes the search
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let mgr = r.checkpoints().unwrap();
+        let out = roomy_bfs_resumable(
+            &r,
+            6,
+            Structure::List,
+            &Accel::rust(),
+            &ResumableBfs::new(&mgr, "pk6"),
+        )
+        .unwrap();
+        match out {
+            BfsOutcome::Complete(stats) => {
+                assert_eq!(stats.levels, reference_bfs(6));
+                assert_eq!(stats.total, factorial(6));
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn roomy_bfs_resumable_rejects_array_variant() {
+        let t = tmpdir("pk_res_arr");
+        let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+        let mgr = r.checkpoints().unwrap();
+        let out = roomy_bfs_resumable(
+            &r,
+            5,
+            Structure::Array,
+            &Accel::rust(),
+            &ResumableBfs::new(&mgr, "pkarr"),
+        );
+        assert!(out.is_err());
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //!   delayed ops issued inside tasks are captured/replayed
 //!   deterministically (see [`crate::runtime::pool`]).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::config::RoomyConfig;
@@ -25,6 +25,12 @@ use crate::error::{Result, RoomyError};
 use crate::metrics::{IoSnapshot, PhaseTimes, PipelineSnapshot};
 use crate::runtime::pool::WorkerPool;
 use crate::storage::NodeDisk;
+
+/// The ephemeral scratch subtrees the cluster owns under each node's
+/// `tmp/` — exactly these are purged at bring-up. Anything else (durable
+/// checkpoints, user files beside the node dirs, even unrecognized
+/// entries under `tmp/` itself) is never touched.
+const OWNED_SCRATCH: [&str; 4] = ["tmp/capture", "tmp/sort", "tmp/pipeline", "tmp/restore"];
 
 /// A simulated cluster: `workers` nodes, each owning one [`NodeDisk`],
 /// plus the collective execution pool shared by every structure on it.
@@ -34,6 +40,10 @@ pub struct Cluster {
     buckets_per_worker: usize,
     phases: PhaseTimes,
     pool: WorkerPool,
+    /// Where durable checkpoints live ([`crate::storage::checkpoint`]):
+    /// a sibling of the node directories (or a user-chosen directory),
+    /// deliberately outside every purged scratch subtree.
+    checkpoint_root: PathBuf,
 }
 
 impl Cluster {
@@ -52,23 +62,40 @@ impl Cluster {
         for w in 0..cfg.workers {
             let dir = cfg.root.join(format!("node{w}"));
             let disk = NodeDisk::create_with_depth(w, dir, cfg.disk, cfg.io_pipeline_depth)?;
-            // Everything under tmp/ is strictly ephemeral scratch
-            // (capture logs, sort runs, pipeline staging). A crashed
-            // process can leave it behind (Drop never ran), and scratch
+            // The scratch subtrees this cluster owns (capture logs, sort
+            // runs, pipeline staging) are strictly ephemeral. A crashed
+            // process can leave them behind (Drop never ran), and scratch
             // names restart per process — purge so a rerun over the same
             // root can neither replay a dead run's ops nor trip over its
-            // staging files.
-            disk.remove_dir("tmp")?;
+            // staging files. The purge is scoped to exactly those
+            // subtrees: durable state (checkpoints/, structure dirs,
+            // anything a user parked beside or under tmp/) must survive
+            // a restart — that survival is what makes checkpoint/resume
+            // possible at all.
+            for sub in OWNED_SCRATCH {
+                disk.remove_dir(sub)?;
+            }
             disks.push(Arc::new(disk));
         }
         let mut pool = WorkerPool::new(cfg.num_workers);
         pool.set_capture_spill(disks.clone(), cfg.capture_spill_threshold);
+        let checkpoint_root = cfg
+            .checkpoint_dir
+            .clone()
+            .unwrap_or_else(|| cfg.root.join("checkpoints"));
         Ok(Cluster {
             disks,
             buckets_per_worker: cfg.buckets_per_worker,
             phases: PhaseTimes::new(),
             pool,
+            checkpoint_root,
         })
+    }
+
+    /// Directory durable checkpoints are written under. Never purged at
+    /// bring-up; defaults to `<root>/checkpoints`, beside the node dirs.
+    pub fn checkpoint_root(&self) -> &Path {
+        &self.checkpoint_root
     }
 
     /// The collective execution pool (per-worker counters, width).
@@ -269,6 +296,54 @@ mod tests {
         for p in &stale {
             assert!(!p.exists(), "stale scratch {p:?} must not survive bring-up");
         }
+    }
+
+    #[test]
+    fn purge_is_scoped_to_owned_scratch_only() {
+        let t = tmpdir("cluster_purge_scope");
+        drop(cluster(2, 1, t.path()));
+        // durable / foreign state that a rerun must NOT delete:
+        let keep = [
+            // checkpoints live beside the node dirs
+            t.path().join("checkpoints/bfs/MANIFEST"),
+            t.path().join("checkpoints/bfs/node0/rl_all/s0.dat"),
+            // structure payload on a node disk
+            t.path().join("node0/rl_all/s0.dat"),
+            // unrelated sibling dir next to the node roots
+            t.path().join("not-a-node/data.bin"),
+            // even unrecognized entries under tmp/ are not ours to delete
+            t.path().join("node1/tmp/user-parked.file"),
+        ];
+        // owned scratch that MUST be purged:
+        let purge = [
+            t.path().join("node0/tmp/capture/r9t9/d0.capture"),
+            t.path().join("node1/tmp/sort/rl_x_s0.dat.run1"),
+            t.path().join("node1/tmp/pipeline/n1-3.pstage"),
+            t.path().join("node0/tmp/restore/rl_all/s0.dat"),
+        ];
+        for p in keep.iter().chain(&purge) {
+            std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+            std::fs::write(p, b"x").unwrap();
+        }
+        let _c = cluster(2, 1, t.path());
+        for p in &keep {
+            assert!(p.exists(), "bring-up must not delete durable state {p:?}");
+        }
+        for p in &purge {
+            assert!(!p.exists(), "owned scratch {p:?} must be purged");
+        }
+    }
+
+    #[test]
+    fn checkpoint_root_defaults_beside_node_dirs() {
+        let t = tmpdir("cluster_ckpt_root");
+        let c = cluster(2, 1, t.path());
+        assert_eq!(c.checkpoint_root(), t.path().join("checkpoints"));
+        // a configured override wins
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.checkpoint_dir = Some(t.path().join("elsewhere"));
+        let c2 = Cluster::new(&cfg).unwrap();
+        assert_eq!(c2.checkpoint_root(), t.path().join("elsewhere"));
     }
 
     #[test]

@@ -83,6 +83,15 @@ pub struct RoomyConfig {
     pub num_workers: usize,
     /// Root directory under which per-node disk directories are created.
     pub root: PathBuf,
+    /// Directory for durable checkpoints ([`crate::storage::checkpoint`]).
+    /// `None` (the default) puts them under `<root>/checkpoints/`, which
+    /// sits *beside* the per-node disk directories and therefore survives
+    /// both the scoped scratch purge at cluster bring-up and any structure
+    /// teardown. Keeping the default on the same filesystem as the node
+    /// disks lets snapshots hardlink bucket files instead of copying them;
+    /// pointing it at another filesystem still works (copy fallback). CLI
+    /// `--checkpoint-dir`.
+    pub checkpoint_dir: Option<PathBuf>,
     /// Staged delayed-op bytes per bucket before spilling to disk.
     pub op_buffer_bytes: usize,
     /// In-collective op-capture bytes per pool task — one **flat budget
@@ -127,6 +136,7 @@ impl RoomyConfig {
             buckets_per_worker: 2,
             num_workers: env_num_workers().unwrap_or(2),
             root: root.into(),
+            checkpoint_dir: None,
             op_buffer_bytes: 64 * 1024,
             capture_spill_threshold: env_capture_spill().unwrap_or(64 * 1024),
             io_pipeline_depth: env_io_depth().unwrap_or(0),
@@ -210,6 +220,7 @@ impl Default for RoomyConfig {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
             }),
             root: std::env::temp_dir().join("roomy"),
+            checkpoint_dir: None,
             op_buffer_bytes: 4 * 1024 * 1024,
             capture_spill_threshold: env_capture_spill().unwrap_or(4 * 1024 * 1024),
             io_pipeline_depth: env_io_depth().unwrap_or(2),

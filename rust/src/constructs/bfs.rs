@@ -26,8 +26,9 @@
 //! the unbatched per-element idiom (one delayed op per neighbor from
 //! inside `map`, as in the RoomyBitArray pancake variant).
 
-use crate::error::Result;
+use crate::error::{Result, RoomyError};
 use crate::roomy::{Element, Roomy};
+use crate::storage::checkpoint::{CheckpointManager, Checkpointable, Manifest};
 
 /// Frontier batch size for the batched drivers (matches the AOT batch so
 /// a full batch is one PJRT call).
@@ -74,22 +75,221 @@ pub fn bfs_list_batched<T: Element>(
     starts: &[T],
     gen_batch: impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync,
 ) -> Result<LevelStats> {
-    // Lists for all elements, current and next level (paper pseudocode).
-    let all = r.list::<T>(&format!("{prefix}_all"))?;
-    let mut cur = r.list::<T>(&format!("{prefix}_lev0"))?;
-    for s in starts {
-        all.add(s)?;
-        cur.add(s)?;
+    match bfs_list_impl(r, prefix, starts, gen_batch, None)? {
+        BfsOutcome::Complete(stats) => Ok(stats),
+        BfsOutcome::Suspended { .. } => unreachable!("no checkpoint hook without options"),
     }
-    all.sync()?;
-    cur.sync()?;
-    all.remove_dupes()?;
-    cur.remove_dupes()?;
+}
 
-    let mut levels = vec![cur.size()];
-    let mut lev = 0u32;
+/// RoomyHashTable BFS: `state → level`, duplicate detection by
+/// insert-if-absent (bucketed, no external sorts).
+pub fn bfs_hash_batched<T: Element>(
+    r: &Roomy,
+    prefix: &str,
+    starts: &[T],
+    gen_batch: impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync,
+) -> Result<LevelStats> {
+    match bfs_hash_impl(r, prefix, starts, gen_batch, None)? {
+        BfsOutcome::Complete(stats) => Ok(stats),
+        BfsOutcome::Suspended { .. } => unreachable!("no checkpoint hook without options"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Resumable drivers (durable checkpoint per level)
+// ---------------------------------------------------------------------
+
+/// Options for the resumable BFS drivers.
+pub struct ResumableBfs<'a> {
+    /// Where checkpoints are saved/restored.
+    pub manager: &'a CheckpointManager,
+    /// Checkpoint name for this run (one BFS per tag).
+    pub tag: String,
+    /// Testing/abort hook simulating a kill: suspend (checkpoint intact,
+    /// in-RAM state abandoned) after completing this many levels *in this
+    /// invocation*. `None` runs to completion.
+    pub stop_after_levels: Option<u32>,
+}
+
+impl<'a> ResumableBfs<'a> {
+    /// Run-to-completion options under checkpoint `tag`.
+    pub fn new(manager: &'a CheckpointManager, tag: impl Into<String>) -> Self {
+        ResumableBfs { manager, tag: tag.into(), stop_after_levels: None }
+    }
+}
+
+/// Result of a resumable BFS invocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BfsOutcome {
+    /// The search ran to the end; a final checkpoint (app key `done`)
+    /// pins the complete reachable set.
+    Complete(LevelStats),
+    /// Suspended by [`ResumableBfs::stop_after_levels`]; the checkpoint
+    /// holds everything needed to continue from `next_level` (call the
+    /// same driver again, typically from a fresh session).
+    Suspended { next_level: u32 },
+}
+
+fn fmt_levels(levels: &[u64]) -> String {
+    levels.iter().map(u64::to_string).collect::<Vec<_>>().join(",")
+}
+
+fn app_str<'m>(m: &'m Manifest, key: &str) -> Result<&'m str> {
+    m.app(key)
+        .ok_or_else(|| RoomyError::Checkpoint(format!("BFS checkpoint missing app key {key:?}")))
+}
+
+fn app_u64(m: &Manifest, key: &str) -> Result<u64> {
+    app_str(m, key)?
+        .parse()
+        .map_err(|_| RoomyError::Checkpoint(format!("BFS checkpoint app key {key:?} is not a number")))
+}
+
+fn app_levels(m: &Manifest) -> Result<Vec<u64>> {
+    app_str(m, "levels")?
+        .split(',')
+        .map(|v| {
+            v.parse::<u64>().map_err(|_| {
+                RoomyError::Checkpoint("BFS checkpoint level profile is corrupted".into())
+            })
+        })
+        .collect()
+}
+
+/// Checkpoint one completed level: the snapshotted structures plus the
+/// driver state (level counter + profile) as app rows.
+fn save_level(
+    opts: &ResumableBfs<'_>,
+    structs: &[&dyn Checkpointable],
+    lev: u32,
+    levels: &[u64],
+) -> Result<()> {
+    let lev_s = lev.to_string();
+    let levels_s = fmt_levels(levels);
+    opts.manager
+        .save(&opts.tag, structs, &[("lev", &lev_s), ("levels", &levels_s)])?;
+    Ok(())
+}
+
+/// Checkpoint the final state (`done` flag + totals) so a re-invocation
+/// returns the finished stats and the tests can digest the result bytes.
+fn save_final(
+    opts: &ResumableBfs<'_>,
+    structs: &[&dyn Checkpointable],
+    lev: u32,
+    levels: &[u64],
+    total: u64,
+) -> Result<()> {
+    let lev_s = lev.to_string();
+    let levels_s = fmt_levels(levels);
+    let total_s = total.to_string();
+    opts.manager.save(
+        &opts.tag,
+        structs,
+        &[("done", "1"), ("lev", &lev_s), ("levels", &levels_s), ("total", &total_s)],
+    )?;
+    Ok(())
+}
+
+/// [`bfs_list_batched`] with a durable checkpoint after every level:
+/// frontier + all-list + level profile are snapshotted atomically, so a
+/// run killed between levels resumes from level *k* — and produces
+/// byte-identical final state and level profile to an uninterrupted run
+/// (pinned in `tests/integration_resume.rs` across worker counts and
+/// pipeline depths). Invoke with the same `prefix`/`tag` to resume; an
+/// already-finished checkpoint returns its stats immediately.
+pub fn bfs_list_resumable<T: Element>(
+    r: &Roomy,
+    prefix: &str,
+    starts: &[T],
+    gen_batch: impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync,
+    opts: &ResumableBfs<'_>,
+) -> Result<BfsOutcome> {
+    bfs_list_impl(r, prefix, starts, gen_batch, Some(opts))
+}
+
+/// [`bfs_hash_batched`] with a durable checkpoint after every level (see
+/// [`bfs_list_resumable`]): level table + frontier are snapshotted
+/// atomically at each level boundary.
+pub fn bfs_hash_resumable<T: Element>(
+    r: &Roomy,
+    prefix: &str,
+    starts: &[T],
+    gen_batch: impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync,
+    opts: &ResumableBfs<'_>,
+) -> Result<BfsOutcome> {
+    bfs_hash_impl(r, prefix, starts, gen_batch, Some(opts))
+}
+
+/// Whether a checkpointed driver invocation should suspend now — the
+/// simulated kill of [`ResumableBfs::stop_after_levels`]. The caller
+/// releases the structure names and abandons the in-RAM state; the
+/// committed checkpoint is the only thing a resume reads.
+fn should_suspend(ckpt: Option<&ResumableBfs<'_>>, completed_here: u32) -> bool {
+    ckpt.is_some_and(|o| o.stop_after_levels.is_some_and(|k| completed_here >= k))
+}
+
+/// The one RoomyList BFS loop both [`bfs_list_batched`] (ckpt = None) and
+/// [`bfs_list_resumable`] run — a single body so the plain and resumable
+/// drivers can never drift apart in the bytes they produce.
+fn bfs_list_impl<T: Element>(
+    r: &Roomy,
+    prefix: &str,
+    starts: &[T],
+    gen_batch: impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync,
+    ckpt: Option<&ResumableBfs<'_>>,
+) -> Result<BfsOutcome> {
+    let all_name = format!("{prefix}_all");
+
+    // Resume from a checkpoint when one exists; a finished checkpoint
+    // answers from its manifest alone (no files are copied back).
+    let mut resumed = None;
+    if let Some(opts) = ckpt {
+        if opts.manager.exists(&opts.tag) {
+            let m = opts.manager.load_manifest(&opts.tag)?;
+            let levels = app_levels(&m)?;
+            let lev = app_u64(&m, "lev")? as u32;
+            if m.app("done") == Some("1") {
+                let total = app_u64(&m, "total")?;
+                return Ok(BfsOutcome::Complete(LevelStats { levels, total }));
+            }
+            let res = opts.manager.restore(&opts.tag)?;
+            let all = r.restored_list::<T>(&res, &all_name)?;
+            let cur = r.restored_list::<T>(&res, &format!("{prefix}_lev{lev}"))?;
+            resumed = Some((all, cur, levels, lev));
+        }
+    }
+    let (all, mut cur, mut levels, mut lev) = match resumed {
+        Some(state) => state,
+        None => {
+            // Lists for all elements, current and next level (paper
+            // pseudocode).
+            let all = r.list::<T>(&all_name)?;
+            let cur = r.list::<T>(&format!("{prefix}_lev0"))?;
+            for s in starts {
+                all.add(s)?;
+                cur.add(s)?;
+            }
+            all.sync()?;
+            cur.sync()?;
+            all.remove_dupes()?;
+            cur.remove_dupes()?;
+            let levels = vec![cur.size()];
+            if let Some(opts) = ckpt {
+                save_level(opts, &[&all as &dyn Checkpointable, &cur], 0, &levels)?;
+            }
+            (all, cur, levels, 0u32)
+        }
+    };
+
+    let mut completed_here = 0u32;
     // Generate levels until no new states are found.
     while cur.size() > 0 {
+        if should_suspend(ckpt, completed_here) {
+            r.release_name(all.name());
+            r.release_name(cur.name());
+            return Ok(BfsOutcome::Suspended { next_level: lev + 1 });
+        }
         lev += 1;
         let next = r.list::<T>(&format!("{prefix}_lev{lev}"))?;
         expand_into(&cur, &next, &gen_batch)?;
@@ -108,44 +308,85 @@ pub fn bfs_list_batched<T: Element>(
             levels.push(next.size());
         }
         cur = next;
+        if let Some(opts) = ckpt {
+            save_level(opts, &[&all as &dyn Checkpointable, &cur], lev, &levels)?;
+        }
+        completed_here += 1;
     }
     let name = cur.name().to_string();
     cur.destroy()?;
     r.release_name(&name);
     let total = all.size();
+    if let Some(opts) = ckpt {
+        save_final(opts, &[&all as &dyn Checkpointable], lev, &levels, total)?;
+    }
     let name = all.name().to_string();
     all.destroy()?;
     r.release_name(&name);
-    Ok(LevelStats { levels, total })
+    Ok(BfsOutcome::Complete(LevelStats { levels, total }))
 }
 
-/// RoomyHashTable BFS: `state → level`, duplicate detection by
-/// insert-if-absent (bucketed, no external sorts).
-pub fn bfs_hash_batched<T: Element>(
+/// The one RoomyHashTable BFS loop both [`bfs_hash_batched`] (ckpt =
+/// None) and [`bfs_hash_resumable`] run.
+fn bfs_hash_impl<T: Element>(
     r: &Roomy,
     prefix: &str,
     starts: &[T],
     gen_batch: impl Fn(&[T], &mut Vec<T>) -> Result<()> + Sync,
-) -> Result<LevelStats> {
-    let table = r.hash_table::<T, u32>(&format!("{prefix}_levels"))?;
-    let mut cur = r.list::<T>(&format!("{prefix}_lev0"))?;
+    ckpt: Option<&ResumableBfs<'_>>,
+) -> Result<BfsOutcome> {
+    let table_name = format!("{prefix}_levels");
 
-    let mut lev = 0u32;
-    for s in starts {
-        table.insert(s, &0)?;
-        cur.add(s)?;
+    let mut resumed = None;
+    if let Some(opts) = ckpt {
+        if opts.manager.exists(&opts.tag) {
+            let m = opts.manager.load_manifest(&opts.tag)?;
+            let levels = app_levels(&m)?;
+            let lev = app_u64(&m, "lev")? as u32;
+            if m.app("done") == Some("1") {
+                let total = app_u64(&m, "total")?;
+                return Ok(BfsOutcome::Complete(LevelStats { levels, total }));
+            }
+            let res = opts.manager.restore(&opts.tag)?;
+            let table = r.restored_hash_table::<T, u32>(&res, &table_name)?;
+            let cur = r.restored_list::<T>(&res, &format!("{prefix}_lev{lev}"))?;
+            resumed = Some((table, cur, levels, lev));
+        }
     }
-    table.sync()?;
-    cur.sync()?;
-    cur.remove_dupes()?;
-    let mut levels = vec![table.size()];
+    let (table, mut cur, mut levels, mut lev) = match resumed {
+        Some(state) => state,
+        None => {
+            let table = r.hash_table::<T, u32>(&table_name)?;
+            let cur = r.list::<T>(&format!("{prefix}_lev0"))?;
+            for s in starts {
+                table.insert(s, &0)?;
+                cur.add(s)?;
+            }
+            table.sync()?;
+            cur.sync()?;
+            cur.remove_dupes()?;
+            let levels = vec![table.size()];
+            if let Some(opts) = ckpt {
+                save_level(opts, &[&table as &dyn Checkpointable, &cur], 0, &levels)?;
+            }
+            (table, cur, levels, 0u32)
+        }
+    };
 
+    let mut completed_here = 0u32;
     while cur.size() > 0 {
+        if should_suspend(ckpt, completed_here) {
+            r.release_name(table.name());
+            r.release_name(cur.name());
+            return Ok(BfsOutcome::Suspended { next_level: lev + 1 });
+        }
         lev += 1;
         let next = r.list::<T>(&format!("{prefix}_lev{lev}"))?;
         // visit: insert-if-absent; only first-time states emit to `next`
         // (duplicate detection is free — no sorting, paper §2's bucketing
-        // argument).
+        // argument). Registered function ids restart per session, but ids
+        // only live inside a level's staged ops — never in checkpointed
+        // bytes.
         let next_emit = next.clone();
         let level_no = lev;
         let visit = table.register_update(move |k: &T, cur_v: Option<&u32>, _p: &()| {
@@ -178,15 +419,22 @@ pub fn bfs_hash_batched<T: Element>(
             levels.push(next.size());
         }
         cur = next;
+        if let Some(opts) = ckpt {
+            save_level(opts, &[&table as &dyn Checkpointable, &cur], lev, &levels)?;
+        }
+        completed_here += 1;
     }
     let name = cur.name().to_string();
     cur.destroy()?;
     r.release_name(&name);
     let total = table.size();
+    if let Some(opts) = ckpt {
+        save_final(opts, &[&table as &dyn Checkpointable], lev, &levels, total)?;
+    }
     let name = table.name().to_string();
     table.destroy()?;
     r.release_name(&name);
-    Ok(LevelStats { levels, total })
+    Ok(BfsOutcome::Complete(LevelStats { levels, total }))
 }
 
 /// Stream `cur` in per-task batches and stage every generated neighbor as
@@ -280,6 +528,92 @@ mod tests {
         .collect();
         assert_eq!(stats.levels, binom);
         assert_eq!(stats.total, 1 << d);
+    }
+
+    fn cube_gen(d: u32) -> impl Fn(&[u64], &mut Vec<u64>) -> Result<()> + Sync {
+        move |batch, out| {
+            for &v in batch {
+                for b in 0..d {
+                    out.push(v ^ (1 << b));
+                }
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn resumable_list_uninterrupted_matches_plain_driver() {
+        let t = tmpdir("bfs_res_plain");
+        let r = mk(t.path());
+        let mgr = r.checkpoints().unwrap();
+        let out = bfs_list_resumable(&r, "cube", &[0u64], cube_gen(7), &ResumableBfs::new(&mgr, "cube"))
+            .unwrap();
+        let t2 = tmpdir("bfs_res_plain_ref");
+        let r2 = mk(t2.path());
+        let reference = bfs_list_batched(&r2, "cube", &[0u64], cube_gen(7)).unwrap();
+        assert_eq!(out, BfsOutcome::Complete(reference));
+        // invoking again returns the finished stats straight from the
+        // final checkpoint
+        let again =
+            bfs_list_resumable(&r, "cube", &[0u64], cube_gen(7), &ResumableBfs::new(&mgr, "cube"))
+                .unwrap();
+        assert_eq!(again, out);
+    }
+
+    #[test]
+    fn resumable_list_kill_and_resume_in_fresh_session() {
+        let reference = {
+            let t = tmpdir("bfs_res_kill_ref");
+            let r = mk(t.path());
+            bfs_list_batched(&r, "cube", &[0u64], cube_gen(8)).unwrap()
+        };
+        let t = tmpdir("bfs_res_kill");
+        // session 1: killed after 3 levels
+        {
+            let r = mk(t.path());
+            let mgr = r.checkpoints().unwrap();
+            let opts = ResumableBfs {
+                manager: &mgr,
+                tag: "cube".into(),
+                stop_after_levels: Some(3),
+            };
+            let out = bfs_list_resumable(&r, "cube", &[0u64], cube_gen(8), &opts).unwrap();
+            assert_eq!(out, BfsOutcome::Suspended { next_level: 4 });
+        }
+        // session 2: fresh process over the same root resumes to the end
+        let r = mk(t.path());
+        let mgr = r.checkpoints().unwrap();
+        let out =
+            bfs_list_resumable(&r, "cube", &[0u64], cube_gen(8), &ResumableBfs::new(&mgr, "cube"))
+                .unwrap();
+        assert_eq!(out, BfsOutcome::Complete(reference));
+    }
+
+    #[test]
+    fn resumable_hash_kill_and_resume() {
+        let reference = {
+            let t = tmpdir("bfs_resh_ref");
+            let r = mk(t.path());
+            bfs_hash_batched(&r, "cube", &[0u64], cube_gen(7)).unwrap()
+        };
+        let t = tmpdir("bfs_resh");
+        {
+            let r = mk(t.path());
+            let mgr = r.checkpoints().unwrap();
+            let opts = ResumableBfs {
+                manager: &mgr,
+                tag: "cubeh".into(),
+                stop_after_levels: Some(2),
+            };
+            let out = bfs_hash_resumable(&r, "cube", &[0u64], cube_gen(7), &opts).unwrap();
+            assert_eq!(out, BfsOutcome::Suspended { next_level: 3 });
+        }
+        let r = mk(t.path());
+        let mgr = r.checkpoints().unwrap();
+        let out =
+            bfs_hash_resumable(&r, "cube", &[0u64], cube_gen(7), &ResumableBfs::new(&mgr, "cubeh"))
+                .unwrap();
+        assert_eq!(out, BfsOutcome::Complete(reference));
     }
 
     #[test]

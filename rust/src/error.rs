@@ -40,6 +40,13 @@ pub enum RoomyError {
     /// operation (service thread gone, stalled drain, stream poisoned by
     /// an earlier error whose value was already consumed).
     Pipeline(String),
+
+    /// Durable-checkpoint failure ([`crate::storage::checkpoint`]): a
+    /// corrupt or missing manifest, a bucket file whose digest no longer
+    /// matches the manifest, a geometry mismatch between the checkpoint
+    /// and the restoring cluster, or an attempt to snapshot a structure
+    /// with pending delayed ops.
+    Checkpoint(String),
 }
 
 impl std::fmt::Display for RoomyError {
@@ -61,6 +68,7 @@ impl std::fmt::Display for RoomyError {
                 write!(f, "worker {worker} panicked during {phase}")
             }
             RoomyError::Pipeline(msg) => write!(f, "io pipeline error: {msg}"),
+            RoomyError::Checkpoint(msg) => write!(f, "checkpoint error: {msg}"),
         }
     }
 }
@@ -108,6 +116,14 @@ mod tests {
         let e = RoomyError::UnknownFunc { structure: "ra".into(), id: 3 };
         assert!(e.to_string().contains("ra"));
         assert!(e.to_string().contains('3'));
+    }
+
+    #[test]
+    fn checkpoint_error_formats() {
+        let e = RoomyError::Checkpoint("digest mismatch in b3.dat".into());
+        let s = e.to_string();
+        assert!(s.contains("checkpoint"), "{s}");
+        assert!(s.contains("b3.dat"), "{s}");
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::time::Instant;
 
 use roomy::accel::Accel;
 use roomy::apps::pancake;
+use roomy::constructs::bfs::{BfsOutcome, ResumableBfs};
 use roomy::constructs::{mapreduce, setops};
 use roomy::metrics::{fmt_bytes, fmt_rate};
 use roomy::{AccelMode, DiskPolicy, Roomy, RoomyConfig};
@@ -59,6 +60,12 @@ USAGE:
                                        # ROOMY_IO_DEPTH)
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
+                [--checkpoint-dir DIR] # durable checkpoint after every BFS
+                                       # level (atomic snapshot + manifest);
+                                       # a rerun with the same dir resumes
+                                       # from the last completed level
+                [--resume]             # require an existing checkpoint and
+                                       # continue it (error if none found)
   roomy rubik   [--workers W] [--root DIR]        # 2x2x2 cube God's number
   roomy demo    [--workers W] [--root DIR]
   roomy kernels [--artifacts DIR]
@@ -122,6 +129,7 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
         .map(PathBuf::from)
         .unwrap_or_else(|| std::env::temp_dir().join(format!("roomy-run-{}", std::process::id())));
     cfg.artifacts_dir = f.get("artifacts").map(PathBuf::from).unwrap_or_else(|| "artifacts".into());
+    cfg.checkpoint_dir = f.get("checkpoint-dir").map(PathBuf::from);
     cfg.accel = match f.get("accel").unwrap_or("auto") {
         "rust" => AccelMode::Rust,
         "xla" => AccelMode::Xla,
@@ -157,8 +165,46 @@ fn cmd_pancake(args: &[String]) -> Result<(), String> {
     let accel = Accel::from_roomy(&r);
     println!("accel backend: {}", if accel.is_xla() { "XLA (AOT artifacts)" } else { "Rust" });
 
+    let use_checkpoints = f.has("checkpoint-dir") || f.has("resume");
     let t0 = Instant::now();
-    let stats = pancake::roomy_bfs(&r, n, structure, &accel).map_err(|e| e.to_string())?;
+    let stats = if use_checkpoints {
+        let mgr = r.checkpoints().map_err(|e| e.to_string())?;
+        let tag = format!(
+            "pancake{n}-{}",
+            match structure {
+                pancake::Structure::List => "list",
+                pancake::Structure::Array => "array",
+                pancake::Structure::Hash => "hash",
+            }
+        );
+        if mgr.exists(&tag) {
+            println!("resuming checkpoint {tag:?} under {:?}", mgr.root());
+        } else if f.has("resume") {
+            return Err(format!(
+                "--resume: no checkpoint named {tag:?} under {:?} (run once with --checkpoint-dir first)",
+                mgr.root()
+            ));
+        } else {
+            println!("checkpointing every level as {tag:?} under {:?}", mgr.root());
+        }
+        let out = pancake::roomy_bfs_resumable(
+            &r,
+            n,
+            structure,
+            &accel,
+            &ResumableBfs::new(&mgr, tag),
+        )
+        .map_err(|e| e.to_string())?;
+        println!("{}", mgr.stats().snapshot().report());
+        match out {
+            BfsOutcome::Complete(stats) => stats,
+            BfsOutcome::Suspended { next_level } => {
+                return Err(format!("BFS suspended before level {next_level}"))
+            }
+        }
+    } else {
+        pancake::roomy_bfs(&r, n, structure, &accel).map_err(|e| e.to_string())?
+    };
     let dt = t0.elapsed().as_secs_f64();
 
     println!("\nlevel  states");

@@ -291,6 +291,124 @@ impl std::ops::Add for PipelineSnapshot {
     }
 }
 
+/// Counters for the durable-checkpoint subsystem
+/// ([`crate::storage::checkpoint`]): how many snapshots were saved and
+/// restored, how many bucket files each path hardlinked vs copied, the
+/// payload bytes involved, and the wall time spent on either side.
+#[derive(Debug, Default)]
+pub struct CheckpointStats {
+    /// Checkpoints committed (staging dir renamed into place).
+    saves: AtomicU64,
+    /// Checkpoints restored into a session.
+    restores: AtomicU64,
+    /// Bucket files snapshotted or restored by hardlink (no byte copy).
+    files_linked: AtomicU64,
+    /// Bucket files snapshotted or restored by streaming copy.
+    files_copied: AtomicU64,
+    /// Payload bytes captured by hardlink (counted once per link).
+    bytes_linked: AtomicU64,
+    /// Payload bytes moved by streaming copy.
+    bytes_copied: AtomicU64,
+    /// Wall nanoseconds spent inside `save` calls.
+    save_ns: AtomicU64,
+    /// Wall nanoseconds spent inside `restore` calls.
+    restore_ns: AtomicU64,
+}
+
+impl CheckpointStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge one committed save of duration `d`.
+    pub fn add_save(&self, d: Duration) {
+        self.saves.fetch_add(1, Ordering::Relaxed);
+        self.save_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Charge one completed restore of duration `d`.
+    pub fn add_restore(&self, d: Duration) {
+        self.restores.fetch_add(1, Ordering::Relaxed);
+        self.restore_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Charge one file captured by hardlink.
+    pub fn add_link(&self, bytes: u64) {
+        self.files_linked.fetch_add(1, Ordering::Relaxed);
+        self.bytes_linked.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Charge one file captured by streaming copy.
+    pub fn add_copy(&self, bytes: u64) {
+        self.files_copied.fetch_add(1, Ordering::Relaxed);
+        self.bytes_copied.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CheckpointSnapshot {
+        CheckpointSnapshot {
+            saves: self.saves.load(Ordering::Relaxed),
+            restores: self.restores.load(Ordering::Relaxed),
+            files_linked: self.files_linked.load(Ordering::Relaxed),
+            files_copied: self.files_copied.load(Ordering::Relaxed),
+            bytes_linked: self.bytes_linked.load(Ordering::Relaxed),
+            bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
+            save_ns: self.save_ns.load(Ordering::Relaxed),
+            restore_ns: self.restore_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.saves.store(0, Ordering::Relaxed);
+        self.restores.store(0, Ordering::Relaxed);
+        self.files_linked.store(0, Ordering::Relaxed);
+        self.files_copied.store(0, Ordering::Relaxed);
+        self.bytes_linked.store(0, Ordering::Relaxed);
+        self.bytes_copied.store(0, Ordering::Relaxed);
+        self.save_ns.store(0, Ordering::Relaxed);
+        self.restore_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Plain-data snapshot of [`CheckpointStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CheckpointSnapshot {
+    pub saves: u64,
+    pub restores: u64,
+    pub files_linked: u64,
+    pub files_copied: u64,
+    pub bytes_linked: u64,
+    pub bytes_copied: u64,
+    pub save_ns: u64,
+    pub restore_ns: u64,
+}
+
+impl CheckpointSnapshot {
+    /// Total bucket files touched (linked + copied).
+    pub fn files_total(&self) -> u64 {
+        self.files_linked + self.files_copied
+    }
+
+    /// Total payload bytes captured (linked + copied).
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_linked + self.bytes_copied
+    }
+
+    /// Human-readable one-line summary.
+    pub fn report(&self) -> String {
+        format!(
+            "checkpoints: {} saved ({:.1} ms), {} restored ({:.1} ms), {} files hardlinked ({}), {} copied ({})",
+            self.saves,
+            self.save_ns as f64 / 1e6,
+            self.restores,
+            self.restore_ns as f64 / 1e6,
+            self.files_linked,
+            fmt_bytes(self.bytes_linked),
+            self.files_copied,
+            fmt_bytes(self.bytes_copied),
+        )
+    }
+}
+
 /// Per-worker counters for the collective execution pool
 /// ([`crate::runtime::pool`]): how many bucket tasks each worker slot ran
 /// and how long it was busy. Worker slots are stable across collectives
@@ -565,6 +683,29 @@ mod tests {
         assert_eq!(p.capture_bytes(), 0);
         assert_eq!(p.capture_peak_task_ram(), 0);
         assert_eq!(p.capture_budget_spills(), 0);
+    }
+
+    #[test]
+    fn checkpoint_stats_accumulate_and_reset() {
+        let s = CheckpointStats::new();
+        s.add_save(Duration::from_millis(3));
+        s.add_restore(Duration::from_millis(2));
+        s.add_link(100);
+        s.add_link(50);
+        s.add_copy(30);
+        let snap = s.snapshot();
+        assert_eq!(snap.saves, 1);
+        assert_eq!(snap.restores, 1);
+        assert_eq!(snap.files_linked, 2);
+        assert_eq!(snap.files_copied, 1);
+        assert_eq!(snap.bytes_linked, 150);
+        assert_eq!(snap.bytes_copied, 30);
+        assert_eq!(snap.files_total(), 3);
+        assert_eq!(snap.bytes_total(), 180);
+        assert!(snap.save_ns >= 3_000_000 && snap.restore_ns >= 2_000_000);
+        assert!(snap.report().contains("hardlinked"), "{}", snap.report());
+        s.reset();
+        assert_eq!(s.snapshot(), CheckpointSnapshot::default());
     }
 
     #[test]

@@ -20,8 +20,11 @@ use super::funcs::{AccessId, FuncRegistry, PredId, UpdateId};
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
+use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::RecordWriter;
-use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
+use crate::storage::{
+    read_all_pipelined, write_all_pipelined, NodeDisk, PrefetchReader, WriteBehindWriter,
+};
 
 /// Records streamed per batch during map/reduce scans.
 const SCAN_BATCH: usize = 8192;
@@ -63,6 +66,10 @@ impl<T: Element> RoomyArray<T> {
             return Err(RoomyError::InvalidArg("RoomyArray length must be > 0".into()));
         }
         let dir = format!("ra_{name}");
+        // A freshly created structure must be fully default-filled: clear
+        // any same-named leftovers (e.g. rewrite tmp files) from a killed
+        // run before materializing the buckets.
+        ctx.cluster.remove_structure_dirs(&dir)?;
         let cluster = ctx.cluster.clone();
         let nb = cluster.nbuckets() as u64;
         let bsize = len.div_ceil(nb).max(1);
@@ -102,6 +109,33 @@ impl<T: Element> RoomyArray<T> {
             w.finish()
         })?;
         Ok(RoomyArray { inner: Arc::new(inner) })
+    }
+
+    /// Re-open a restored array over bucket files already on disk
+    /// ([`crate::storage::checkpoint`]): the layout mirrors `create`, but
+    /// no bucket is materialized. Registered functions do not survive a
+    /// checkpoint — re-register before staging delayed ops.
+    pub(crate) fn open_restored(ctx: Ctx, name: &str, len: u64) -> Result<Self> {
+        if len == 0 {
+            return Err(RoomyError::InvalidArg("RoomyArray length must be > 0".into()));
+        }
+        let dir = format!("ra_{name}");
+        let cluster = ctx.cluster.clone();
+        let nb = cluster.nbuckets() as u64;
+        let bsize = len.div_ceil(nb).max(1);
+        Ok(RoomyArray {
+            inner: Arc::new(ArrayInner {
+                staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
+                funcs: FuncRegistry::new(&format!("RoomyArray({name})")),
+                write_lock: std::sync::Mutex::new(()),
+                ctx,
+                name: name.to_string(),
+                dir,
+                len,
+                bsize,
+                _t: PhantomData,
+            }),
+        })
     }
 
     /// Number of elements (immediate; paper Table 1 `size`).
@@ -252,7 +286,9 @@ impl<T: Element> RoomyArray<T> {
                 return ops.clear();
             }
             let file = this.bucket_file(b);
-            let mut data = disk.read_all(&file)?;
+            // Whole-bucket load/store rides the pipeline lanes too: the
+            // op-log drain below prefetches while the bucket streams in.
+            let mut data = read_all_pipelined(disk, &file)?;
             let base = b as u64 * this.bsize;
             let npreds = this.funcs.npreds();
             let mut dirty = false;
@@ -308,7 +344,7 @@ impl<T: Element> RoomyArray<T> {
             }
             drop(reader);
             if dirty {
-                disk.write_all(&file, &data)?;
+                write_all_pipelined(disk, &file, &data)?;
             }
             Ok(())
         })
@@ -449,7 +485,7 @@ impl RoomyArray<i64> {
             return Ok(Vec::new());
         }
         let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
-        let data = disk.read_all(inner.bucket_file(b))?;
+        let data = read_all_pipelined(disk, inner.bucket_file(b))?;
         Ok(data.chunks_exact(8).map(i64::read_from).collect())
     }
 
@@ -462,7 +498,31 @@ impl RoomyArray<i64> {
         for (v, chunk) in vals.iter().zip(bytes.chunks_exact_mut(8)) {
             v.write_to(chunk);
         }
-        disk.write_all(inner.bucket_file(b), &bytes)
+        write_all_pipelined(disk, inner.bucket_file(b), &bytes)
+    }
+}
+
+impl<T: Element> Checkpointable for RoomyArray<T> {
+    fn ckpt_meta(&self) -> StructMeta {
+        StructMeta {
+            kind: StructKind::Array,
+            name: self.inner.name.clone(),
+            dir: self.inner.dir.clone(),
+            rec_size: T::SIZE,
+            key_size: 0,
+            len: self.inner.len,
+            size: 0,
+            bits: 0,
+            sorted: false,
+            // bucket files are only ever replaced whole (tmp + rename),
+            // so snapshots may hardlink them
+            appendable: false,
+            counts: Vec::new(),
+        }
+    }
+
+    fn ckpt_pending(&self) -> u64 {
+        RoomyArray::pending_bytes(self)
     }
 }
 

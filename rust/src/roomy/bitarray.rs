@@ -18,6 +18,8 @@ use super::funcs::{AccessId, UpdateId};
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
+use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
+use crate::storage::{read_all_pipelined, write_all_pipelined};
 
 /// Type-erased bit-array update: `(index, current, passed) -> new`.
 type BitUpdateFn = Box<dyn Fn(u64, u8, &[u8]) -> u8 + Send + Sync>;
@@ -60,6 +62,10 @@ impl RoomyBitArray {
             return Err(RoomyError::InvalidArg("RoomyBitArray length must be > 0".into()));
         }
         let dir = format!("rba_{name}");
+        // A freshly created structure must be fully zero-filled: clear
+        // any same-named leftovers from a killed run before materializing
+        // the buckets.
+        ctx.cluster.remove_structure_dirs(&dir)?;
         let cluster = ctx.cluster.clone();
         let per_byte = (8 / bits) as u64;
         let nb = cluster.nbuckets() as u64;
@@ -95,6 +101,54 @@ impl RoomyBitArray {
         Ok(RoomyBitArray { inner: Arc::new(inner) })
     }
 
+    /// Re-open a restored bit array over bucket files already on disk
+    /// ([`crate::storage::checkpoint`]); `counts` is the checkpointed
+    /// per-value histogram. Registered functions do not survive a
+    /// checkpoint — re-register before staging delayed ops.
+    pub(crate) fn open_restored(
+        ctx: Ctx,
+        name: &str,
+        len: u64,
+        bits: u8,
+        counts: &[u64],
+    ) -> Result<Self> {
+        if !matches!(bits, 1 | 2 | 4 | 8) {
+            return Err(RoomyError::InvalidArg(format!(
+                "bit width must be 1, 2, 4 or 8 (got {bits})"
+            )));
+        }
+        if len == 0 {
+            return Err(RoomyError::InvalidArg("RoomyBitArray length must be > 0".into()));
+        }
+        let nvals = 1usize << bits;
+        if counts.len() != nvals {
+            return Err(RoomyError::Checkpoint(format!(
+                "bit array {name:?}: histogram has {} entries, want {nvals}",
+                counts.len()
+            )));
+        }
+        let dir = format!("rba_{name}");
+        let cluster = ctx.cluster.clone();
+        let per_byte = (8 / bits) as u64;
+        let nb = cluster.nbuckets() as u64;
+        let bsize = len.div_ceil(nb).div_ceil(per_byte) * per_byte;
+        Ok(RoomyBitArray {
+            inner: Arc::new(BitInner {
+                staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
+                updates: std::sync::RwLock::new(Vec::new()),
+                accesses: std::sync::RwLock::new(Vec::new()),
+                write_lock: std::sync::Mutex::new(()),
+                ctx,
+                name: name.to_string(),
+                dir,
+                len,
+                bits,
+                bsize,
+                counts: counts.iter().map(|&c| AtomicI64::new(c as i64)).collect(),
+            }),
+        })
+    }
+
     /// Number of elements.
     pub fn len(&self) -> u64 {
         self.inner.len
@@ -113,6 +167,11 @@ impl RoomyBitArray {
     /// Structure name.
     pub fn name(&self) -> &str {
         &self.inner.name
+    }
+
+    /// Total staged (not yet synced) delayed-op bytes.
+    pub fn pending_bytes(&self) -> u64 {
+        self.inner.staged.staged_bytes()
     }
 
     /// Count of elements currently equal to `v` (O(1); maintained at every
@@ -210,7 +269,9 @@ impl RoomyBitArray {
                 return ops.clear();
             }
             let file = this.bucket_file(b);
-            let mut data = disk.read_all(&file)?;
+            // Whole-bucket load/store rides the pipeline lanes too: the
+            // op-log drain below prefetches while the bucket streams in.
+            let mut data = read_all_pipelined(disk, &file)?;
             let mut dirty = false;
 
             // Op-log replay streams through the read-ahead lane; the
@@ -277,7 +338,7 @@ impl RoomyBitArray {
             }
             drop(reader);
             if dirty {
-                disk.write_all(&file, &data)?;
+                write_all_pipelined(disk, &file, &data)?;
             }
             Ok(())
         })
@@ -291,7 +352,7 @@ impl RoomyBitArray {
             if nbytes == 0 {
                 return Ok(());
             }
-            let data = disk.read_all(this.bucket_file(b))?;
+            let data = read_all_pipelined(disk, this.bucket_file(b))?;
             let base = b as u64 * this.bsize;
             let count = this.bucket_len(b);
             for local in 0..count {
@@ -323,6 +384,30 @@ impl RoomyBitArray {
     pub fn destroy(self) -> Result<()> {
         let dir = self.inner.dir.clone();
         self.inner.ctx.cluster.remove_structure_dirs(dir)
+    }
+}
+
+impl Checkpointable for RoomyBitArray {
+    fn ckpt_meta(&self) -> StructMeta {
+        let nvals = 1usize << self.inner.bits;
+        StructMeta {
+            kind: StructKind::BitArray,
+            name: self.inner.name.clone(),
+            dir: self.inner.dir.clone(),
+            rec_size: 0,
+            key_size: 0,
+            len: self.inner.len,
+            size: 0,
+            bits: self.inner.bits,
+            sorted: false,
+            // bucket files are only ever replaced whole (tmp + rename)
+            appendable: false,
+            counts: (0..nvals).map(|v| self.count_value(v as u8)).collect(),
+        }
+    }
+
+    fn ckpt_pending(&self) -> u64 {
+        RoomyBitArray::pending_bytes(self)
     }
 }
 

@@ -21,6 +21,7 @@ use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
 use crate::hashfn;
+use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
 
 const SCAN_BATCH: usize = 4096;
@@ -58,6 +59,14 @@ struct HtInner<K: Element, V: Element> {
 
 impl<K: Element, V: Element> RoomyHashTable<K, V> {
     pub(crate) fn create(ctx: Ctx, name: &str) -> Result<Self> {
+        // A freshly created structure must be empty: clear any same-named
+        // bucket files a killed run left behind (same-root reruns are the
+        // normal case now that checkpoints make state durable).
+        ctx.cluster.remove_structure_dirs(format!("rht_{name}"))?;
+        Self::build(ctx, name)
+    }
+
+    fn build(ctx: Ctx, name: &str) -> Result<Self> {
         let dir = format!("rht_{name}");
         let cluster = ctx.cluster.clone();
         let inner = HtInner {
@@ -72,6 +81,16 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
             _t: PhantomData,
         };
         Ok(RoomyHashTable { inner: Arc::new(inner) })
+    }
+
+    /// Re-open a restored table over bucket files already on disk
+    /// ([`crate::storage::checkpoint`]), reconstituting the in-RAM size
+    /// counter. Registered functions do not survive a checkpoint —
+    /// re-register before staging delayed ops.
+    pub(crate) fn open_restored(ctx: Ctx, name: &str, size: u64) -> Result<Self> {
+        let ht = Self::build(ctx, name)?;
+        ht.inner.size.store(size as i64, std::sync::atomic::Ordering::Relaxed);
+        Ok(ht)
     }
 
     /// Number of (key, value) pairs (immediate; maintained at sync).
@@ -310,6 +329,29 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
     pub fn destroy(self) -> Result<()> {
         let dir = self.inner.dir.clone();
         self.inner.ctx.cluster.remove_structure_dirs(dir)
+    }
+}
+
+impl<K: Element, V: Element> Checkpointable for RoomyHashTable<K, V> {
+    fn ckpt_meta(&self) -> StructMeta {
+        StructMeta {
+            kind: StructKind::HashTable,
+            name: self.inner.name.clone(),
+            dir: self.inner.dir.clone(),
+            rec_size: K::SIZE + V::SIZE,
+            key_size: K::SIZE,
+            len: 0,
+            size: self.size(),
+            bits: 0,
+            sorted: false,
+            // bucket files are only ever replaced whole (tmp + rename)
+            appendable: false,
+            counts: Vec::new(),
+        }
+    }
+
+    fn ckpt_pending(&self) -> u64 {
+        RoomyHashTable::pending_bytes(self)
     }
 }
 

@@ -24,6 +24,7 @@ use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
 use crate::hashfn;
+use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
 use crate::storage::extsort;
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
@@ -64,6 +65,14 @@ struct ListInner<T: Element> {
 
 impl<T: Element> RoomyList<T> {
     pub(crate) fn create(ctx: Ctx, name: &str) -> Result<Self> {
+        // A freshly created structure must be empty: clear any same-named
+        // shard files a killed run left behind — same-root reruns are the
+        // normal case now that checkpoints make state durable.
+        ctx.cluster.remove_structure_dirs(format!("rl_{name}"))?;
+        Self::build(ctx, name)
+    }
+
+    fn build(ctx: Ctx, name: &str) -> Result<Self> {
         let dir = format!("rl_{name}");
         let cluster = ctx.cluster.clone();
         let inner = ListInner {
@@ -78,6 +87,17 @@ impl<T: Element> RoomyList<T> {
             _t: PhantomData,
         };
         Ok(RoomyList { inner: Arc::new(inner) })
+    }
+
+    /// Re-open a restored list over shard files already on disk
+    /// ([`crate::storage::checkpoint`]), reconstituting the in-RAM size
+    /// counter and sorted flag from the checkpoint manifest. Registered
+    /// predicates do not survive a checkpoint — re-register if needed.
+    pub(crate) fn open_restored(ctx: Ctx, name: &str, size: u64, sorted: bool) -> Result<Self> {
+        let list = Self::build(ctx, name)?;
+        list.inner.size.store(size as i64, Ordering::Relaxed);
+        list.inner.sorted.store(sorted, Ordering::Relaxed);
+        Ok(list)
     }
 
     /// Number of elements, duplicates included (immediate).
@@ -388,6 +408,31 @@ impl<T: Element> RoomyList<T> {
     pub fn destroy(self) -> Result<()> {
         let dir = self.inner.dir.clone();
         self.inner.ctx.cluster.remove_structure_dirs(dir)
+    }
+}
+
+impl<T: Element> Checkpointable for RoomyList<T> {
+    fn ckpt_meta(&self) -> StructMeta {
+        StructMeta {
+            kind: StructKind::List,
+            name: self.inner.name.clone(),
+            dir: self.inner.dir.clone(),
+            rec_size: T::SIZE,
+            key_size: 0,
+            len: 0,
+            size: self.size(),
+            bits: 0,
+            sorted: self.is_sorted(),
+            // `sync`/`add_all` append shard files in place, so a
+            // snapshot must copy them — a hardlink would let the next
+            // appends reach back into the committed checkpoint
+            appendable: true,
+            counts: Vec::new(),
+        }
+    }
+
+    fn ckpt_pending(&self) -> u64 {
+        RoomyList::pending_bytes(self)
     }
 }
 

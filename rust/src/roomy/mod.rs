@@ -40,6 +40,7 @@ use crate::cluster::Cluster;
 use crate::config::RoomyConfig;
 use crate::error::{Result, RoomyError};
 use crate::runtime::Engine;
+use crate::storage::checkpoint::{CheckpointManager, Restored, StructKind};
 
 /// Shared context threaded through every structure: configuration, the
 /// cluster, and the lazily-initialized XLA engine.
@@ -145,6 +146,88 @@ impl Roomy {
     /// long-lived programs like the BFS level rotation).
     pub fn release_name(&self, name: &str) {
         self.names.lock().unwrap().remove(name);
+    }
+
+    // ------------------------------------------------------------------
+    // Durable checkpoints ([`crate::storage::checkpoint`])
+    // ------------------------------------------------------------------
+
+    /// A checkpoint manager over this instance's cluster, rooted at
+    /// [`Cluster::checkpoint_root`] (default `<root>/checkpoints/`,
+    /// configurable via `RoomyConfig::checkpoint_dir`).
+    pub fn checkpoints(&self) -> Result<CheckpointManager> {
+        CheckpointManager::new(&self.ctx.cluster)
+    }
+
+    /// Re-open a checkpointed [`RoomyList`] whose files
+    /// [`CheckpointManager::restore`] put back on the node disks. The
+    /// element type is checked against the manifest record size.
+    pub fn restored_list<T: Element>(&self, res: &Restored, name: &str) -> Result<RoomyList<T>> {
+        let meta = res.require(StructKind::List, name)?;
+        if meta.rec_size != T::SIZE {
+            return Err(RoomyError::Checkpoint(format!(
+                "list {name:?} holds {}-byte elements, requested type is {} bytes",
+                meta.rec_size,
+                T::SIZE
+            )));
+        }
+        self.claim_name(name)?;
+        RoomyList::open_restored(self.ctx(), name, meta.size, meta.sorted)
+    }
+
+    /// Re-open a checkpointed [`RoomyArray`] (see [`Roomy::restored_list`]).
+    pub fn restored_array<T: Element>(&self, res: &Restored, name: &str) -> Result<RoomyArray<T>> {
+        let meta = res.require(StructKind::Array, name)?;
+        if meta.rec_size != T::SIZE {
+            return Err(RoomyError::Checkpoint(format!(
+                "array {name:?} holds {}-byte elements, requested type is {} bytes",
+                meta.rec_size,
+                T::SIZE
+            )));
+        }
+        self.claim_name(name)?;
+        RoomyArray::open_restored(self.ctx(), name, meta.len)
+    }
+
+    /// Re-open a checkpointed [`RoomyBitArray`] (see [`Roomy::restored_list`]).
+    pub fn restored_bit_array(&self, res: &Restored, name: &str) -> Result<RoomyBitArray> {
+        let meta = res.require(StructKind::BitArray, name)?;
+        self.claim_name(name)?;
+        RoomyBitArray::open_restored(self.ctx(), name, meta.len, meta.bits, &meta.counts)
+    }
+
+    /// Re-open a checkpointed [`RoomyHashTable`] (see [`Roomy::restored_list`]).
+    pub fn restored_hash_table<K: Element, V: Element>(
+        &self,
+        res: &Restored,
+        name: &str,
+    ) -> Result<RoomyHashTable<K, V>> {
+        let meta = res.require(StructKind::HashTable, name)?;
+        if meta.rec_size != K::SIZE + V::SIZE || meta.key_size != K::SIZE {
+            return Err(RoomyError::Checkpoint(format!(
+                "hash table {name:?} holds {}-byte keys / {}-byte records, requested types are {} / {}",
+                meta.key_size,
+                meta.rec_size,
+                K::SIZE,
+                K::SIZE + V::SIZE
+            )));
+        }
+        self.claim_name(name)?;
+        RoomyHashTable::open_restored(self.ctx(), name, meta.size)
+    }
+
+    /// Re-open a checkpointed [`RoomySet`] (see [`Roomy::restored_list`]).
+    pub fn restored_set<T: Element>(&self, res: &Restored, name: &str) -> Result<RoomySet<T>> {
+        let meta = res.require(StructKind::Set, name)?;
+        if meta.rec_size != T::SIZE {
+            return Err(RoomyError::Checkpoint(format!(
+                "set {name:?} holds {}-byte elements, requested type is {} bytes",
+                meta.rec_size,
+                T::SIZE
+            )));
+        }
+        self.claim_name(name)?;
+        RoomySet::open_restored(self.ctx(), name, meta.size)
     }
 
     /// Aggregate I/O across all node disks.

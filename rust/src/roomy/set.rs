@@ -23,6 +23,7 @@ use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
 use crate::hashfn;
+use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
 
@@ -54,6 +55,14 @@ struct SetInner<T: Element> {
 
 impl<T: Element> RoomySet<T> {
     pub(crate) fn create(ctx: Ctx, name: &str) -> Result<Self> {
+        // A freshly created structure must be empty: clear any same-named
+        // shard files a killed run left behind (same-root reruns are the
+        // normal case now that checkpoints make state durable).
+        ctx.cluster.remove_structure_dirs(format!("rs_{name}"))?;
+        Self::build(ctx, name)
+    }
+
+    fn build(ctx: Ctx, name: &str) -> Result<Self> {
         let dir = format!("rs_{name}");
         let cluster = ctx.cluster.clone();
         Ok(RoomySet {
@@ -69,9 +78,23 @@ impl<T: Element> RoomySet<T> {
         })
     }
 
+    /// Re-open a restored set over shard files already on disk
+    /// ([`crate::storage::checkpoint`]), reconstituting the in-RAM size
+    /// counter.
+    pub(crate) fn open_restored(ctx: Ctx, name: &str, size: u64) -> Result<Self> {
+        let set = Self::build(ctx, name)?;
+        set.inner.size.store(size as i64, Ordering::Relaxed);
+        Ok(set)
+    }
+
     /// Number of elements (immediate).
     pub fn size(&self) -> u64 {
         self.inner.size.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    /// Total staged (not yet synced) delayed-op bytes.
+    pub fn pending_bytes(&self) -> u64 {
+        self.inner.staged.staged_bytes()
     }
 
     /// True if the set has no synced elements.
@@ -230,6 +253,30 @@ pub enum SetOp {
     Union,
     Difference,
     Intersection,
+}
+
+impl<T: Element> Checkpointable for RoomySet<T> {
+    fn ckpt_meta(&self) -> StructMeta {
+        StructMeta {
+            kind: StructKind::Set,
+            name: self.inner.name.clone(),
+            dir: self.inner.dir.clone(),
+            rec_size: T::SIZE,
+            key_size: 0,
+            len: 0,
+            size: self.size(),
+            bits: 0,
+            // shards are maintained sorted by construction
+            sorted: true,
+            // shard files are only ever replaced whole (merge + rename)
+            appendable: false,
+            counts: Vec::new(),
+        }
+    }
+
+    fn ckpt_pending(&self) -> u64 {
+        RoomySet::pending_bytes(self)
+    }
 }
 
 impl<T: Element> SetInner<T> {

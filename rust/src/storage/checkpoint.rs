@@ -1,0 +1,1020 @@
+//! Durable checkpoint/restart: atomic snapshots of named sets of Roomy
+//! structures, restorable into a fresh session.
+//!
+//! Roomy's flagship computations run for days with all state on disk, yet
+//! a crash used to lose everything. This module makes the on-disk state
+//! *durable*: a [`CheckpointManager`] snapshots any set of structures
+//! (anything implementing [`Checkpointable`]) into a **versioned,
+//! digest-validated checkpoint directory** and restores them — bytes,
+//! size counters, sorted flags, bit-array histograms — into a fresh
+//! [`Roomy`](crate::Roomy) session via the typed
+//! `Roomy::restored_*` constructors.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! <checkpoint root>/<name>/MANIFEST            versioned manifest (self-digested)
+//! <checkpoint root>/<name>/node<K>/<dir>/<f>   snapshotted bucket/shard files
+//! <checkpoint root>/<name>.staging/...         in-progress save (never read)
+//! <checkpoint root>/<name>.prev/...            previous checkpoint during commit
+//! ```
+//!
+//! The checkpoint root defaults to `<root>/checkpoints/`, a **sibling** of
+//! the per-node disk directories — outside every `node<K>/tmp/` scratch
+//! subtree the cluster purges at bring-up, so checkpoints survive crashed
+//! runs and restarts ([`Cluster::checkpoint_root`]).
+//!
+//! ## Atomicity (staging → rename, as in fold's CHECKPOINT_DESIGN)
+//!
+//! `save` writes everything — snapshot files first, manifest last — under
+//! `<name>.staging/`, then commits:
+//!
+//! 1. remove any stale `<name>.prev`;
+//! 2. rename the live `<name>` (if any) to `<name>.prev`;
+//! 3. rename `<name>.staging` to `<name>`;
+//! 4. remove `<name>.prev`.
+//!
+//! A crash at any point leaves either the old or the new checkpoint fully
+//! intact, never a torn one: during staging the live directory is
+//! untouched; between steps 2 and 3 the old checkpoint survives as
+//! `.prev`, which [`CheckpointManager::restore`] falls back to when the
+//! live directory is missing; after step 3 the new checkpoint is
+//! complete. Stale `.staging`/`.prev` directories are cleaned up by the
+//! next save.
+//!
+//! ## Validation
+//!
+//! The manifest records, per snapshotted file, its length and an FNV-1a
+//! digest, plus a digest of the manifest text itself. `restore` re-reads
+//! every file and refuses (typed [`RoomyError::Checkpoint`]) if a single
+//! byte differs — a flipped bit in a bucket file or a manifest field is
+//! caught before any state reaches the session.
+//!
+//! ## Hardlink where possible
+//!
+//! Structures whose files are only ever replaced whole (tmp + rename) —
+//! arrays, bit arrays, hash tables, native sets — are snapshotted by
+//! `hard_link` when the checkpoint root shares their filesystem, falling
+//! back to a streaming copy otherwise. `RoomyList` shards are *appended
+//! to in place* by `sync`/`add_all`, so they are always copied
+//! ([`StructMeta::appendable`]) — a hardlinked list shard would let the
+//! next level's appends reach back into the committed checkpoint.
+//! [`crate::metrics::CheckpointStats`] counts both paths.
+//!
+//! ## Quiescence
+//!
+//! `save` snapshots on-disk bytes plus in-RAM counters; it must run
+//! between collectives (no concurrent `sync`/`map` on the snapshotted
+//! structures) and refuses structures with pending delayed ops. The
+//! resumable BFS drivers ([`crate::constructs::bfs`]) call it at level
+//! boundaries, where both hold by construction.
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::diskio::NodeDisk;
+use super::pipeline::ByteReader;
+use crate::cluster::Cluster;
+use crate::error::{Result, RoomyError};
+use crate::metrics::CheckpointStats;
+
+/// Manifest format version; bumped on incompatible layout changes.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// Manifest file name inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// Streaming chunk for digest/copy passes.
+const COPY_CHUNK: usize = 256 * 1024;
+
+fn ckpt_err(msg: impl Into<String>) -> RoomyError {
+    RoomyError::Checkpoint(msg.into())
+}
+
+// ---------------------------------------------------------------------
+// FNV-1a digests
+// ---------------------------------------------------------------------
+
+/// Streaming FNV-1a 64 — the crate-local digest (no external deps).
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf29ce484222325)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        self.0 = h;
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a 64 of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut f = Fnv64::new();
+    f.update(bytes);
+    f.finish()
+}
+
+// ---------------------------------------------------------------------
+// Structure metadata
+// ---------------------------------------------------------------------
+
+/// Which Roomy structure a checkpointed entry reconstructs into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StructKind {
+    Array,
+    BitArray,
+    HashTable,
+    List,
+    Set,
+}
+
+impl StructKind {
+    fn as_str(&self) -> &'static str {
+        match self {
+            StructKind::Array => "array",
+            StructKind::BitArray => "bitarray",
+            StructKind::HashTable => "hashtable",
+            StructKind::List => "list",
+            StructKind::Set => "set",
+        }
+    }
+
+    fn parse(s: &str) -> Result<StructKind> {
+        Ok(match s {
+            "array" => StructKind::Array,
+            "bitarray" => StructKind::BitArray,
+            "hashtable" => StructKind::HashTable,
+            "list" => StructKind::List,
+            "set" => StructKind::Set,
+            other => return Err(ckpt_err(format!("unknown structure kind {other:?}"))),
+        })
+    }
+}
+
+/// Persistent identity + reconstruction metadata for one structure: the
+/// part of a structure's state that lives in RAM (size counters, sorted
+/// flag, histogram) plus enough layout information (kind, record size,
+/// directory) to validate a typed re-open.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StructMeta {
+    pub kind: StructKind,
+    /// Structure name (claimed again on restore).
+    pub name: String,
+    /// On-disk directory under each node root (e.g. `rl_pancake_all`).
+    pub dir: String,
+    /// Record size in bytes (key + value for hash tables; 0 for bit
+    /// arrays, whose buckets are packed).
+    pub rec_size: usize,
+    /// Key size in bytes (hash tables only, else 0).
+    pub key_size: usize,
+    /// Element count for arrays / bit arrays (fixed at creation).
+    pub len: u64,
+    /// Element count for lists / tables / sets (the in-RAM counter).
+    pub size: u64,
+    /// Bits per element (bit arrays only, else 0).
+    pub bits: u8,
+    /// Whether every shard is currently sorted (lists only).
+    pub sorted: bool,
+    /// True if the structure mutates its files by appending in place
+    /// (lists): snapshot/restore must copy these files, never hardlink.
+    pub appendable: bool,
+    /// Per-value histogram (bit arrays only; `counts[v]` = elements = v).
+    pub counts: Vec<u64>,
+}
+
+/// A structure the [`CheckpointManager`] can snapshot. Implemented by all
+/// five Roomy structures.
+pub trait Checkpointable {
+    /// Identity + reconstruction metadata at snapshot time.
+    fn ckpt_meta(&self) -> StructMeta;
+
+    /// Staged-but-unsynced delayed-op bytes. Must be 0 at snapshot time:
+    /// staged ops live partly in RAM, so a snapshot taken with pending
+    /// ops could not be restored faithfully.
+    fn ckpt_pending(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------
+
+/// One snapshotted file: which node it belongs to, its path relative to
+/// that node's root, and the validation pair (length, digest).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestFile {
+    pub node: usize,
+    pub rel: String,
+    pub len: u64,
+    pub digest: u64,
+}
+
+/// Parsed checkpoint manifest: cluster geometry, per-structure metadata,
+/// per-file validation entries, and free-form application state (the
+/// resumable BFS drivers store their level counter and profile here).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub version: u32,
+    pub workers: usize,
+    pub nbuckets: u32,
+    pub structs: Vec<StructMeta>,
+    pub files: Vec<ManifestFile>,
+    pub app: Vec<(String, String)>,
+}
+
+impl Manifest {
+    /// Metadata for structure `name`, if present.
+    pub fn meta(&self, name: &str) -> Option<&StructMeta> {
+        self.structs.iter().find(|m| m.name == name)
+    }
+
+    /// Application-state value for `key`, if present.
+    pub fn app(&self, key: &str) -> Option<&str> {
+        self.app.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Sorted `(node, rel, len, digest)` rows — the byte-identity
+    /// currency the resume tests compare across runs.
+    pub fn file_digests(&self) -> Vec<(usize, String, u64, u64)> {
+        let mut rows: Vec<_> = self
+            .files
+            .iter()
+            .map(|f| (f.node, f.rel.clone(), f.len, f.digest))
+            .collect();
+        rows.sort();
+        rows
+    }
+
+    /// Serialize to the on-disk text format, self-digest line last.
+    fn encode(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("roomy-checkpoint v{}\n", self.version));
+        s.push_str(&format!("cluster {} {}\n", self.workers, self.nbuckets));
+        for m in &self.structs {
+            let counts = if m.counts.is_empty() {
+                "-".to_string()
+            } else {
+                m.counts.iter().map(u64::to_string).collect::<Vec<_>>().join(",")
+            };
+            s.push_str(&format!(
+                "struct {} {} {} {} {} {} {} {} {} {} {counts}\n",
+                m.kind.as_str(),
+                m.name,
+                m.dir,
+                m.rec_size,
+                m.key_size,
+                m.len,
+                m.size,
+                m.bits,
+                m.sorted as u8,
+                m.appendable as u8,
+            ));
+        }
+        for f in &self.files {
+            s.push_str(&format!("file {} {} {:016x} {}\n", f.node, f.len, f.digest, f.rel));
+        }
+        for (k, v) in &self.app {
+            s.push_str(&format!("app {k} {v}\n"));
+        }
+        s.push_str(&format!("digest {:016x}\n", fnv64(s.as_bytes())));
+        s
+    }
+
+    /// Parse and validate the self-digest; any corruption — a flipped
+    /// byte in any field — fails the digest check. The digest is checked
+    /// over **raw bytes** before any UTF-8 interpretation, so corruption
+    /// that produces invalid UTF-8 (a set high bit) is still the typed
+    /// checkpoint error, never an I/O decode failure.
+    fn decode(raw: &[u8]) -> Result<Manifest> {
+        const NEEDLE: &[u8] = b"digest ";
+        let at = raw
+            .windows(NEEDLE.len())
+            .rposition(|w| w == NEEDLE)
+            .ok_or_else(|| ckpt_err("manifest missing its digest line"))?;
+        let (body, tail) = raw.split_at(at);
+        let want = std::str::from_utf8(tail)
+            .ok()
+            .and_then(|t| t.trim().strip_prefix("digest "))
+            .and_then(|h| u64::from_str_radix(h.trim(), 16).ok())
+            .ok_or_else(|| ckpt_err("manifest digest line corrupted"))?;
+        if fnv64(body) != want {
+            return Err(ckpt_err("manifest digest mismatch: manifest corrupted"));
+        }
+        // The digest matched, so the body is the bytes we wrote — which
+        // were valid UTF-8; this conversion is a belt-and-braces check.
+        let body = std::str::from_utf8(body)
+            .map_err(|_| ckpt_err("manifest digest matched but body is not UTF-8"))?;
+
+        let mut lines = body.lines();
+        let head = lines.next().ok_or_else(|| ckpt_err("empty manifest"))?;
+        let version: u32 = head
+            .strip_prefix("roomy-checkpoint v")
+            .and_then(|v| v.parse().ok())
+            .ok_or_else(|| ckpt_err(format!("bad manifest header {head:?}")))?;
+        if version != MANIFEST_VERSION {
+            return Err(ckpt_err(format!(
+                "manifest version {version} unsupported (this build reads v{MANIFEST_VERSION})"
+            )));
+        }
+        let mut m = Manifest {
+            version,
+            workers: 0,
+            nbuckets: 0,
+            structs: Vec::new(),
+            files: Vec::new(),
+            app: Vec::new(),
+        };
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let bad = || ckpt_err(format!("bad manifest line {line:?}"));
+            let mut parts = line.splitn(2, ' ');
+            let tag = parts.next().ok_or_else(bad)?;
+            let rest = parts.next().ok_or_else(bad)?;
+            match tag {
+                "cluster" => {
+                    let mut it = rest.split(' ');
+                    m.workers = it.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+                    m.nbuckets = it.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+                }
+                "struct" => {
+                    let f: Vec<&str> = rest.split(' ').collect();
+                    if f.len() != 11 {
+                        return Err(bad());
+                    }
+                    let counts = if f[10] == "-" {
+                        Vec::new()
+                    } else {
+                        f[10]
+                            .split(',')
+                            .map(|v| v.parse::<u64>().map_err(|_| bad()))
+                            .collect::<Result<Vec<u64>>>()?
+                    };
+                    m.structs.push(StructMeta {
+                        kind: StructKind::parse(f[0])?,
+                        name: f[1].to_string(),
+                        dir: f[2].to_string(),
+                        rec_size: f[3].parse().map_err(|_| bad())?,
+                        key_size: f[4].parse().map_err(|_| bad())?,
+                        len: f[5].parse().map_err(|_| bad())?,
+                        size: f[6].parse().map_err(|_| bad())?,
+                        bits: f[7].parse().map_err(|_| bad())?,
+                        sorted: f[8] == "1",
+                        appendable: f[9] == "1",
+                        counts,
+                    });
+                }
+                "file" => {
+                    let f: Vec<&str> = rest.splitn(4, ' ').collect();
+                    if f.len() != 4 {
+                        return Err(bad());
+                    }
+                    m.files.push(ManifestFile {
+                        node: f[0].parse().map_err(|_| bad())?,
+                        len: f[1].parse().map_err(|_| bad())?,
+                        digest: u64::from_str_radix(f[2], 16).map_err(|_| bad())?,
+                        rel: f[3].to_string(),
+                    });
+                }
+                "app" => {
+                    let mut it = rest.splitn(2, ' ');
+                    let k = it.next().ok_or_else(bad)?.to_string();
+                    let v = it.next().unwrap_or("").to_string();
+                    m.app.push((k, v));
+                }
+                _ => return Err(bad()),
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// What one `save` did (per-call view of the cumulative
+/// [`CheckpointStats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SaveReport {
+    pub files: u64,
+    pub bytes: u64,
+    pub linked: u64,
+    pub copied: u64,
+    pub wall_secs: f64,
+}
+
+/// A validated, restored checkpoint: its files are back in the node
+/// directories; hand this to the typed `Roomy::restored_*` constructors
+/// to re-open the structures.
+#[derive(Debug)]
+pub struct Restored {
+    manifest: Manifest,
+}
+
+impl Restored {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Application-state value for `key`.
+    pub fn app(&self, key: &str) -> Option<&str> {
+        self.manifest.app(key)
+    }
+
+    /// Metadata for `name`, required to be of `kind`.
+    pub fn require(&self, kind: StructKind, name: &str) -> Result<&StructMeta> {
+        let m = self
+            .manifest
+            .meta(name)
+            .ok_or_else(|| ckpt_err(format!("checkpoint holds no structure named {name:?}")))?;
+        if m.kind != kind {
+            return Err(ckpt_err(format!(
+                "structure {name:?} was checkpointed as {:?}, not {kind:?}",
+                m.kind
+            )));
+        }
+        Ok(m)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Manager
+// ---------------------------------------------------------------------
+
+/// Atomic snapshots of named sets of structures over one cluster.
+pub struct CheckpointManager {
+    cluster: Arc<Cluster>,
+    root: PathBuf,
+    stats: Arc<CheckpointStats>,
+}
+
+impl CheckpointManager {
+    /// Manager rooted at the cluster's checkpoint root (created here).
+    pub fn new(cluster: &Arc<Cluster>) -> Result<CheckpointManager> {
+        let root = cluster.checkpoint_root().to_path_buf();
+        fs::create_dir_all(&root).map_err(|e| RoomyError::io(&root, e))?;
+        Ok(CheckpointManager {
+            cluster: Arc::clone(cluster),
+            root,
+            stats: Arc::new(CheckpointStats::new()),
+        })
+    }
+
+    /// The checkpoint root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Cumulative save/restore counters.
+    pub fn stats(&self) -> &Arc<CheckpointStats> {
+        &self.stats
+    }
+
+    fn live_dir(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    fn staging_dir(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.staging"))
+    }
+
+    fn prev_dir(&self, name: &str) -> PathBuf {
+        self.root.join(format!("{name}.prev"))
+    }
+
+    fn validate_name(name: &str) -> Result<()> {
+        if name.is_empty()
+            || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return Err(ckpt_err(format!(
+                "checkpoint name {name:?} must be non-empty [A-Za-z0-9_-]"
+            )));
+        }
+        Ok(())
+    }
+
+    /// The directory a restore would read: the live checkpoint, or the
+    /// `.prev` survivor of an interrupted commit.
+    fn pick_dir(&self, name: &str) -> Option<PathBuf> {
+        let live = self.live_dir(name);
+        if live.join(MANIFEST_FILE).is_file() {
+            return Some(live);
+        }
+        let prev = self.prev_dir(name);
+        if prev.join(MANIFEST_FILE).is_file() {
+            return Some(prev);
+        }
+        None
+    }
+
+    /// Whether a restorable checkpoint `name` exists (live or `.prev`).
+    pub fn exists(&self, name: &str) -> bool {
+        self.pick_dir(name).is_some()
+    }
+
+    /// Delete checkpoint `name` (live, previous and staging).
+    pub fn remove(&self, name: &str) -> Result<()> {
+        Self::validate_name(name)?;
+        for d in [self.live_dir(name), self.prev_dir(name), self.staging_dir(name)] {
+            if d.exists() {
+                fs::remove_dir_all(&d).map_err(|e| RoomyError::io(&d, e))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load (and self-digest-validate) the manifest of checkpoint `name`
+    /// without touching any session state.
+    pub fn load_manifest(&self, name: &str) -> Result<Manifest> {
+        Self::validate_name(name)?;
+        let dir = self
+            .pick_dir(name)
+            .ok_or_else(|| ckpt_err(format!("no checkpoint named {name:?}")))?;
+        let path = dir.join(MANIFEST_FILE);
+        let raw = fs::read(&path).map_err(|e| RoomyError::io(&path, e))?;
+        Manifest::decode(&raw)
+    }
+
+    /// Atomically snapshot `structs` (plus free-form `app` state) as
+    /// checkpoint `name`, replacing any previous checkpoint of that name.
+    /// Must be called between collectives; structures with pending
+    /// delayed ops are refused.
+    pub fn save(
+        &self,
+        name: &str,
+        structs: &[&dyn Checkpointable],
+        app: &[(&str, &str)],
+    ) -> Result<SaveReport> {
+        let t0 = Instant::now();
+        Self::validate_name(name)?;
+        for (k, v) in app {
+            // '\r' is rejected too: the line-oriented decode would strip
+            // it from a trailing "\r\n", silently altering the value.
+            if k.is_empty()
+                || k.contains(|c: char| c.is_whitespace())
+                || v.contains('\n')
+                || v.contains('\r')
+            {
+                return Err(ckpt_err(format!(
+                    "app state key {k:?} must be non-empty without whitespace; values must be single-line"
+                )));
+            }
+        }
+        let metas: Vec<StructMeta> = structs.iter().map(|s| s.ckpt_meta()).collect();
+        for (s, m) in structs.iter().zip(&metas) {
+            if s.ckpt_pending() > 0 {
+                return Err(ckpt_err(format!(
+                    "structure {:?} has pending delayed ops; sync before checkpointing",
+                    m.name
+                )));
+            }
+        }
+        for (i, m) in metas.iter().enumerate() {
+            if metas[..i].iter().any(|o| o.name == m.name || o.dir == m.dir) {
+                return Err(ckpt_err(format!("structure {:?} snapshotted twice", m.name)));
+            }
+        }
+
+        // Stage everything under <name>.staging (cleared first: a crashed
+        // earlier save may have left one behind).
+        let staging = self.staging_dir(name);
+        if staging.exists() {
+            fs::remove_dir_all(&staging).map_err(|e| RoomyError::io(&staging, e))?;
+        }
+        fs::create_dir_all(&staging).map_err(|e| RoomyError::io(&staging, e))?;
+
+        // One job per node: each digests/links/copies its own files, so
+        // checkpoint wall time stays flat as nodes are added — the same
+        // per-node fan-out every other collective uses.
+        let metas_ref = &metas;
+        let staging_ref = &staging;
+        let stats = &self.stats;
+        let per_node: Vec<(Vec<ManifestFile>, SaveReport)> =
+            self.cluster.run("checkpoint.save", |w, disk| {
+                let mut files = Vec::new();
+                let mut rep = SaveReport::default();
+                for m in metas_ref {
+                    for rel in disk.list(&m.dir)? {
+                        let fname = rel.file_name().and_then(|f| f.to_str()).unwrap_or("");
+                        // Spill/tmp files are transient scratch (empty
+                        // staged buffers, interrupted rewrites) — never
+                        // part of the durable state.
+                        if fname.ends_with(".spill") || fname.ends_with(".tmp") {
+                            continue;
+                        }
+                        let rel_str = rel.to_string_lossy().into_owned();
+                        let dest = staging_ref.join(format!("node{w}")).join(&rel);
+                        if let Some(parent) = dest.parent() {
+                            fs::create_dir_all(parent).map_err(|e| RoomyError::io(parent, e))?;
+                        }
+                        let len = disk.len(&rel);
+                        let digest = if m.appendable {
+                            // Append-in-place files: one streaming pass
+                            // that digests and copies.
+                            stats.add_copy(len);
+                            rep.copied += 1;
+                            digest_from_disk(disk, &rel, Some(&dest))?
+                        } else if fs::hard_link(disk.root().join(&rel), &dest).is_ok() {
+                            // Replace-by-rename files: share the inode;
+                            // still read once for the manifest digest.
+                            stats.add_link(len);
+                            rep.linked += 1;
+                            digest_from_disk(disk, &rel, None)?
+                        } else {
+                            stats.add_copy(len);
+                            rep.copied += 1;
+                            digest_from_disk(disk, &rel, Some(&dest))?
+                        };
+                        rep.files += 1;
+                        rep.bytes += len;
+                        files.push(ManifestFile { node: w, rel: rel_str, len, digest });
+                    }
+                }
+                Ok((files, rep))
+            })?;
+        let mut report = SaveReport::default();
+        let mut files = Vec::new();
+        for (f, rep) in per_node {
+            files.extend(f);
+            report.files += rep.files;
+            report.bytes += rep.bytes;
+            report.linked += rep.linked;
+            report.copied += rep.copied;
+        }
+
+        let manifest = Manifest {
+            version: MANIFEST_VERSION,
+            workers: self.cluster.nworkers(),
+            nbuckets: self.cluster.nbuckets(),
+            structs: metas,
+            files,
+            app: app.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        };
+        let mpath = staging.join(MANIFEST_FILE);
+        fs::write(&mpath, manifest.encode()).map_err(|e| RoomyError::io(&mpath, e))?;
+
+        // Commit: old checkpoint steps aside as .prev, staging becomes
+        // live, .prev is dropped. Every intermediate state keeps one
+        // complete checkpoint restorable: a stale .prev is only removed
+        // while the live dir still exists (crash → live survives), the
+        // live → .prev window is covered by the .prev fallback in
+        // `pick_dir`, and once staging is renamed the new checkpoint is
+        // whole.
+        let live = self.live_dir(name);
+        let prev = self.prev_dir(name);
+        if live.exists() {
+            if prev.exists() {
+                fs::remove_dir_all(&prev).map_err(|e| RoomyError::io(&prev, e))?;
+            }
+            fs::rename(&live, &prev).map_err(|e| RoomyError::io(&live, e))?;
+        }
+        fs::rename(&staging, &live).map_err(|e| RoomyError::io(&staging, e))?;
+        if prev.exists() {
+            fs::remove_dir_all(&prev).map_err(|e| RoomyError::io(&prev, e))?;
+        }
+
+        report.wall_secs = t0.elapsed().as_secs_f64();
+        self.stats.add_save(t0.elapsed());
+        Ok(report)
+    }
+
+    /// Validate checkpoint `name` (every file digest, the manifest
+    /// self-digest, cluster geometry) and copy its files back into the
+    /// node directories, replacing any same-named structure state. The
+    /// returned [`Restored`] feeds the typed `Roomy::restored_*`
+    /// constructors.
+    pub fn restore(&self, name: &str) -> Result<Restored> {
+        let t0 = Instant::now();
+        let manifest = self.load_manifest(name)?;
+        let dir = self.pick_dir(name).expect("load_manifest verified existence");
+        if manifest.workers != self.cluster.nworkers()
+            || manifest.nbuckets != self.cluster.nbuckets()
+        {
+            return Err(ckpt_err(format!(
+                "checkpoint {name:?} was written by a {}-node / {}-bucket cluster; this cluster is {} / {}",
+                manifest.workers,
+                manifest.nbuckets,
+                self.cluster.nworkers(),
+                self.cluster.nbuckets()
+            )));
+        }
+
+        // Clear stale restore staging left by an interrupted restore.
+        for d in self.cluster.disks() {
+            d.remove_dir("tmp/restore")?;
+        }
+
+        // Pass 1 (one job per node): validate every snapshot file before
+        // touching session state — a single flipped byte aborts the
+        // restore. Copy-installed files stream exactly once: digested
+        // while staged under the node's tmp/restore/, renamed into place
+        // only in pass 2; hardlink-installed files are digest-read only.
+        let manifest_ref = &manifest;
+        let dir_ref = dir.as_path();
+        let validated = self.cluster.run("checkpoint.validate", |w, disk| {
+            for f in manifest_ref.files.iter().filter(|f| f.node == w) {
+                let src = dir_ref.join(format!("node{w}")).join(&f.rel);
+                let (len, digest) = if installs_by_copy(manifest_ref, f) {
+                    digest_and_copy_to_disk(&src, disk, restore_staging(f))?
+                } else {
+                    digest_plain_file(&src)?
+                };
+                if len != f.len || digest != f.digest {
+                    return Err(ckpt_err(format!(
+                        "digest mismatch in {:?} (node {}): checkpoint is corrupted",
+                        f.rel, f.node
+                    )));
+                }
+            }
+            Ok(())
+        });
+        if let Err(e) = validated {
+            for d in self.cluster.disks() {
+                let _ = d.remove_dir("tmp/restore");
+            }
+            return Err(e);
+        }
+
+        // Pass 2: install. Same-named structure dirs from a dead run are
+        // removed wholesale first (they may hold post-checkpoint state),
+        // then every node installs its own files in parallel.
+        for m in &manifest.structs {
+            self.cluster.remove_structure_dirs(m.dir.clone())?;
+        }
+        let stats = &self.stats;
+        self.cluster.run("checkpoint.install", |w, disk| {
+            for f in manifest_ref.files.iter().filter(|f| f.node == w) {
+                if installs_by_copy(manifest_ref, f) {
+                    disk.rename(restore_staging(f), &f.rel)?;
+                    stats.add_copy(f.len);
+                } else {
+                    let src = dir_ref.join(format!("node{w}")).join(&f.rel);
+                    let dest_abs = disk.root().join(&f.rel);
+                    if let Some(parent) = dest_abs.parent() {
+                        fs::create_dir_all(parent).map_err(|e| RoomyError::io(parent, e))?;
+                    }
+                    if fs::hard_link(&src, &dest_abs).is_ok() {
+                        stats.add_link(f.len);
+                    } else {
+                        // cross-filesystem fallback: stream-copy, and
+                        // re-check the digest for free
+                        let (len, digest) = digest_and_copy_to_disk(&src, disk, &f.rel)?;
+                        if len != f.len || digest != f.digest {
+                            return Err(ckpt_err(format!(
+                                "checkpoint file {:?} changed between validation and install",
+                                f.rel
+                            )));
+                        }
+                        stats.add_copy(f.len);
+                    }
+                }
+            }
+            Ok(())
+        })?;
+        // every staged file was renamed away; drop the empty staging tree
+        for d in self.cluster.disks() {
+            d.remove_dir("tmp/restore")?;
+        }
+        self.stats.add_restore(t0.elapsed());
+        Ok(Restored { manifest })
+    }
+}
+
+/// True for manifest files installed by streaming copy (append-in-place
+/// structures); false for replace-by-rename files, which hardlink.
+fn installs_by_copy(manifest: &Manifest, f: &ManifestFile) -> bool {
+    manifest
+        .structs
+        .iter()
+        .find(|m| Path::new(&f.rel).starts_with(&m.dir))
+        .is_some_and(|m| m.appendable)
+}
+
+/// Per-node staging path a copy-installed file is validated into before
+/// pass 2 renames it into place.
+fn restore_staging(f: &ManifestFile) -> String {
+    format!("tmp/restore/{}", f.rel)
+}
+
+/// Stream `rel` off `disk` (metered; read-ahead on a pipelined disk),
+/// returning its FNV-1a digest and optionally copying it to `dest`.
+fn digest_from_disk(
+    disk: &Arc<NodeDisk>,
+    rel: impl AsRef<Path>,
+    dest: Option<&Path>,
+) -> Result<u64> {
+    let mut r = ByteReader::open(disk, &rel)?;
+    let mut out = match dest {
+        Some(p) => Some(std::io::BufWriter::new(
+            fs::File::create(p).map_err(|e| RoomyError::io(p, e))?,
+        )),
+        None => None,
+    };
+    let mut fnv = Fnv64::new();
+    let mut buf = vec![0u8; COPY_CHUNK];
+    loop {
+        let n = r.read_fully(&mut buf)?;
+        fnv.update(&buf[..n]);
+        if let Some(w) = out.as_mut() {
+            w.write_all(&buf[..n])
+                .map_err(|e| RoomyError::io(dest.unwrap(), e))?;
+        }
+        if n < buf.len() {
+            break;
+        }
+    }
+    if let Some(mut w) = out {
+        w.flush().map_err(|e| RoomyError::io(dest.unwrap(), e))?;
+    }
+    Ok(fnv.finish())
+}
+
+/// Length + FNV-1a digest of a plain (non-NodeDisk) file.
+fn digest_plain_file(path: &Path) -> Result<(u64, u64)> {
+    let f = fs::File::open(path).map_err(|e| RoomyError::io(path, e))?;
+    let mut r = std::io::BufReader::with_capacity(COPY_CHUNK, f);
+    let mut fnv = Fnv64::new();
+    let mut buf = vec![0u8; COPY_CHUNK];
+    let mut len = 0u64;
+    loop {
+        let n = r.read(&mut buf).map_err(|e| RoomyError::io(path, e))?;
+        if n == 0 {
+            break;
+        }
+        len += n as u64;
+        fnv.update(&buf[..n]);
+    }
+    Ok((len, fnv.finish()))
+}
+
+/// Stream a checkpoint file onto `disk` at `rel` through the metered
+/// writer, computing its length + FNV-1a digest in the same pass (the
+/// single-read validate-and-stage path of restore).
+fn digest_and_copy_to_disk(
+    src: &Path,
+    disk: &Arc<NodeDisk>,
+    rel: impl AsRef<Path>,
+) -> Result<(u64, u64)> {
+    let f = fs::File::open(src).map_err(|e| RoomyError::io(src, e))?;
+    let mut r = std::io::BufReader::with_capacity(COPY_CHUNK, f);
+    let mut w = disk.create_file(&rel)?;
+    let mut fnv = Fnv64::new();
+    let mut len = 0u64;
+    let mut buf = vec![0u8; COPY_CHUNK];
+    loop {
+        let n = r.read(&mut buf).map_err(|e| RoomyError::io(src, e))?;
+        if n == 0 {
+            break;
+        }
+        len += n as u64;
+        fnv.update(&buf[..n]);
+        w.write_bytes(&buf[..n])?;
+    }
+    w.finish()?;
+    Ok((len, fnv.finish()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_fixture() -> Manifest {
+        Manifest {
+            version: MANIFEST_VERSION,
+            workers: 3,
+            nbuckets: 6,
+            structs: vec![
+                StructMeta {
+                    kind: StructKind::List,
+                    name: "all".into(),
+                    dir: "rl_all".into(),
+                    rec_size: 8,
+                    key_size: 0,
+                    len: 0,
+                    size: 5040,
+                    bits: 0,
+                    sorted: true,
+                    appendable: true,
+                    counts: vec![],
+                },
+                StructMeta {
+                    kind: StructKind::BitArray,
+                    name: "seen".into(),
+                    dir: "rba_seen".into(),
+                    rec_size: 0,
+                    key_size: 0,
+                    len: 128,
+                    size: 0,
+                    bits: 2,
+                    sorted: false,
+                    appendable: false,
+                    counts: vec![100, 20, 8, 0],
+                },
+            ],
+            files: vec![
+                ManifestFile { node: 0, rel: "rl_all/s0.dat".into(), len: 64, digest: 0xDEAD },
+                ManifestFile { node: 2, rel: "rba_seen/b5.dat".into(), len: 16, digest: 0xBEEF },
+            ],
+            app: vec![
+                ("lev".into(), "3".into()),
+                ("levels".into(), "1,6,15,20".into()),
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let m = manifest_fixture();
+        let text = m.encode();
+        let back = Manifest::decode(text.as_bytes()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.app("lev"), Some("3"));
+        assert_eq!(back.meta("seen").unwrap().counts, vec![100, 20, 8, 0]);
+        assert!(back.meta("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_flipped_byte_rejected_everywhere() {
+        let text = manifest_fixture().encode();
+        let bytes = text.as_bytes();
+        // flip every bit of every byte (incl. the high bit — invalid
+        // UTF-8 — and inside the digest line itself); every flip must
+        // either fail with the typed error or decode to the *identical*
+        // manifest (value-preserving flips exist: hex case toggles in
+        // the digest line parse to the same value). The final trailing
+        // newline is excluded: it sits outside every digested field.
+        for pos in 0..bytes.len() - 1 {
+            for bit in 0..8 {
+                let mut corrupt = bytes.to_vec();
+                corrupt[pos] ^= 1u8 << bit;
+                match Manifest::decode(&corrupt) {
+                    Err(RoomyError::Checkpoint(_)) => {}
+                    Ok(m) => assert_eq!(
+                        m,
+                        manifest_fixture(),
+                        "flip at {pos} bit {bit} decoded to different content"
+                    ),
+                    Err(other) => {
+                        panic!("flip at {pos} bit {bit}: wrong error type {other:?}")
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_truncation_rejected() {
+        let text = manifest_fixture().encode();
+        let bytes = text.as_bytes();
+        for cut in [1usize, bytes.len() / 2, bytes.len() - 2] {
+            assert!(Manifest::decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable_and_order_sensitive() {
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv64(b"ab"), fnv64(b"ba"));
+        let mut f = Fnv64::new();
+        f.update(b"a");
+        f.update(b"b");
+        assert_eq!(f.finish(), fnv64(b"ab"));
+    }
+
+    #[test]
+    fn name_validation() {
+        assert!(CheckpointManager::validate_name("bfs_pancake-7").is_ok());
+        assert!(CheckpointManager::validate_name("").is_err());
+        assert!(CheckpointManager::validate_name("a/b").is_err());
+        assert!(CheckpointManager::validate_name("a.staging").is_err());
+        assert!(CheckpointManager::validate_name("a b").is_err());
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let text = manifest_fixture().encode();
+        let bumped = text.replace("roomy-checkpoint v1", "roomy-checkpoint v9");
+        // fix the digest so only the version check can fire
+        let at = bumped.rfind("digest ").unwrap();
+        let body = &bumped[..at];
+        let fixed = format!("{body}digest {:016x}\n", fnv64(body.as_bytes()));
+        let err = Manifest::decode(fixed.as_bytes()).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+}

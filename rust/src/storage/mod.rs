@@ -22,7 +22,8 @@
 //! is capped at depth × chunk (observable via
 //! [`crate::metrics::PipelineStats`]).
 //!
-//! Layout conventions (one directory per simulated node):
+//! Layout conventions (one directory per simulated node, checkpoints
+//! beside them):
 //!
 //! ```text
 //! <root>/node<K>/<structure>/bucket<B>.dat     bucket payload
@@ -30,19 +31,57 @@
 //! <root>/node<K>/tmp/capture/...               in-collective op-capture spill
 //! <root>/node<K>/tmp/sort/...                  external-sort run files
 //! <root>/node<K>/tmp/pipeline/...              write-behind staging files
+//! <root>/node<K>/tmp/restore/...               checkpoint-restore staging
+//! <root>/checkpoints/<name>/MANIFEST           durable checkpoint manifest
+//! <root>/checkpoints/<name>/node<K>/...        snapshotted structure files
+//! <root>/checkpoints/<name>.staging/           in-progress save (never read)
+//! <root>/checkpoints/<name>.prev/              commit-window survivor
 //! ```
 //!
-//! Everything under `tmp/` is strictly ephemeral scratch; a crashed run
-//! can leave it behind, so [`crate::cluster::Cluster::new`] purges it at
-//! bring-up.
+//! The `tmp/capture`, `tmp/sort`, `tmp/pipeline` and `tmp/restore`
+//! subtrees are strictly ephemeral scratch; a crashed run can leave them
+//! behind, so [`crate::cluster::Cluster::new`] purges exactly those at
+//! bring-up — and nothing else, because everything outside them is
+//! durable state.
+//!
+//! ## Checkpoint / manifest format ([`checkpoint`])
+//!
+//! A checkpoint directory holds one snapshotted copy (hardlink where the
+//! filesystem allows and the file is replace-by-rename; streaming copy
+//! otherwise, and always for append-in-place list shards) of every file
+//! of every snapshotted structure, under `node<K>/<structure>/`, plus a
+//! `MANIFEST`: a line-oriented text file
+//!
+//! ```text
+//! roomy-checkpoint v1
+//! cluster <workers> <nbuckets>
+//! struct <kind> <name> <dir> <rec> <key> <len> <size> <bits> <sorted> <append> <counts>
+//! file <node> <len> <fnv1a-64 hex> <relpath>
+//! app <key> <value>
+//! digest <fnv1a-64 hex of everything above>
+//! ```
+//!
+//! `struct` rows carry the in-RAM half of a structure's state (size
+//! counters, sorted flag, bit-array histogram) so a typed re-open
+//! reconstitutes it; `file` rows pin every byte with a digest that
+//! restore re-verifies; `app` rows hold driver state (the resumable BFS
+//! level counter and profile); the final `digest` row makes any flipped
+//! byte in the manifest itself detectable. Saves stage under
+//! `<name>.staging/` and commit by rename (old checkpoint briefly
+//! `<name>.prev`), so a crash anywhere leaves a restorable checkpoint.
 
 pub mod buffer;
+pub mod checkpoint;
 pub mod chunkfile;
 pub mod diskio;
 pub mod extsort;
 pub mod pipeline;
 
 pub use buffer::{SpillBuffer, SpillDrain};
+pub use checkpoint::{CheckpointManager, Checkpointable, Manifest, Restored, StructKind, StructMeta};
 pub use chunkfile::{RecordReader, RecordWriter};
 pub use diskio::NodeDisk;
-pub use pipeline::{ByteReader, PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
+pub use pipeline::{
+    read_all_pipelined, write_all_pipelined, ByteReader, PrefetchReader, WriteBehindWriter,
+    PIPE_CHUNK,
+};

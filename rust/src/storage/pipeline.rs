@@ -406,6 +406,44 @@ impl ByteReader {
     }
 }
 
+/// Read the whole of `rel` into RAM — the whole-bucket load the array /
+/// bit-array sync paths use (a bucket is the unit Roomy sizes to fit in
+/// memory). On a pipelined disk the bytes stream through the read-ahead
+/// lane, so the caller overlaps with the tail of the file; without a
+/// service this is exactly [`NodeDisk::read_all`].
+pub fn read_all_pipelined(disk: &Arc<NodeDisk>, rel: impl AsRef<Path>) -> Result<Vec<u8>> {
+    if disk.io_service().is_none() {
+        return disk.read_all(rel);
+    }
+    let mut r = ByteReader::open(disk, &rel)?;
+    let mut out = Vec::with_capacity(disk.len(&rel) as usize);
+    let mut buf = vec![0u8; PIPE_CHUNK];
+    loop {
+        let n = r.read_fully(&mut buf)?;
+        out.extend_from_slice(&buf[..n]);
+        if n < buf.len() {
+            return Ok(out);
+        }
+    }
+}
+
+/// Write `data` to `rel` atomically (staging + rename) — the whole-bucket
+/// store counterpart of [`read_all_pipelined`]. On a pipelined disk the
+/// chunks flush through the write-behind lane while the caller returns to
+/// compute; without a service this is exactly [`NodeDisk::write_all`].
+pub fn write_all_pipelined(
+    disk: &Arc<NodeDisk>,
+    rel: impl AsRef<Path>,
+    data: &[u8],
+) -> Result<()> {
+    if disk.io_service().is_none() {
+        return disk.write_all(rel, data);
+    }
+    let mut f = ChunkFlusher::open(disk, rel, false)?;
+    f.push(data)?;
+    f.finish()
+}
+
 /// Streaming reader of fixed-size records with read-ahead.
 ///
 /// Depth 0 (or a disk without a service) is exactly
@@ -1048,6 +1086,41 @@ mod tests {
             }
         }
         assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn whole_file_helpers_roundtrip_at_every_depth() {
+        let payload: Vec<u8> = (0..600_000u32).map(|i| (i % 249) as u8).collect();
+        let mut references = Vec::new();
+        for depth in [0usize, 1, 2, 4] {
+            let t = tmpdir(&format!("pipe_whole_{depth}"));
+            let d = if depth == 0 { plain_disk(t.path()) } else { piped_disk(t.path(), depth) };
+            write_all_pipelined(&d, "w/bucket.dat", &payload).unwrap();
+            assert_eq!(read_all_pipelined(&d, "w/bucket.dat").unwrap(), payload);
+            // depth 0 and depth > 0 must agree byte-for-byte on disk
+            references.push(d.read_all("w/bucket.dat").unwrap());
+            // atomic: no staging or .tmp residue
+            assert_eq!(files_under(&t.path().join("tmp")), 0);
+            assert!(!d.exists("w/bucket.tmp"));
+        }
+        for r in &references[1..] {
+            assert_eq!(r, &references[0]);
+        }
+    }
+
+    #[test]
+    fn whole_file_helpers_meter_and_use_lanes() {
+        let t = tmpdir("pipe_whole_meter");
+        let d = piped_disk(t.path(), 2);
+        let payload = vec![7u8; 512 * 1024];
+        write_all_pipelined(&d, "b.dat", &payload).unwrap();
+        let _ = read_all_pipelined(&d, "b.dat").unwrap();
+        let io = d.stats().snapshot();
+        assert_eq!(io.bytes_written, payload.len() as u64);
+        assert_eq!(io.bytes_read, payload.len() as u64);
+        let pipe = d.pipe_stats().snapshot();
+        assert!(pipe.chunks_behind > 0, "write must ride the write lane");
+        assert!(pipe.chunks_ahead > 0, "read must ride the read lane");
     }
 
     #[test]

@@ -1,0 +1,462 @@
+//! Durable checkpoint/restart (`storage::checkpoint`): atomic snapshots
+//! of structure sets, digest-validated restore, crash-window recovery.
+//!
+//! Covers the subsystem end to end: full-fidelity roundtrips of all five
+//! structures, corruption detection (a flipped byte in any bucket file or
+//! manifest field is a typed `RoomyError::Checkpoint` at restore),
+//! interrupted saves (staging present → previous checkpoint restores
+//! cleanly; commit window → `.prev` fallback), hardlink-vs-copy
+//! accounting, and survival across cluster bring-up over the same root.
+
+mod common;
+
+use std::path::Path;
+
+use common::{roomy, roomy_with};
+use roomy::storage::checkpoint::Checkpointable;
+use roomy::testutil::Rng;
+use roomy::{Roomy, RoomyConfig, RoomyError};
+
+/// Recursively collect plain files under `dir` (absolute paths).
+fn files_in(dir: &Path) -> Vec<std::path::PathBuf> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else { return out };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            out.extend(files_in(&p));
+        } else {
+            out.push(p);
+        }
+    }
+    out.sort();
+    out
+}
+
+#[test]
+fn roundtrip_all_five_structures() {
+    let (t, r) = roomy("ckpt_rt");
+    let list = r.list::<u64>("lst").unwrap();
+    for v in 0..500u64 {
+        list.add(&(v % 300)).unwrap();
+    }
+    list.sync().unwrap();
+    list.remove_dupes().unwrap();
+
+    let arr = r.array::<u32>("arr", 257, 7).unwrap();
+    let set_fn = arr.register_update(|i, v: &mut u32, p: &u32| *v = *p + i as u32);
+    for i in 0..257 {
+        arr.update(i, &1000u32, set_fn).unwrap();
+    }
+    arr.sync().unwrap();
+
+    let bits = r.bit_array("bits", 1000, 2).unwrap();
+    let mark = bits.register_update(|i, _cur, _p: &()| (i % 4) as u8);
+    for i in 0..1000 {
+        bits.update(i, &(), mark).unwrap();
+    }
+    bits.sync().unwrap();
+
+    let ht = r.hash_table::<u64, u64>("ht").unwrap();
+    for k in 0..400u64 {
+        ht.insert(&k, &(k * k)).unwrap();
+    }
+    ht.sync().unwrap();
+
+    let set = r.set::<u64>("set").unwrap();
+    for v in 0..300u64 {
+        set.add(&(v % 200)).unwrap();
+    }
+    set.sync().unwrap();
+
+    let mgr = r.checkpoints().unwrap();
+    mgr.save(
+        "snap",
+        &[&list as &dyn Checkpointable, &arr, &bits, &ht, &set],
+        &[("note", "all five structures")],
+    )
+    .unwrap();
+    drop((list, arr, bits, ht, set));
+    drop(r);
+
+    // Fresh session over the same root: restore and verify every value.
+    let r2 = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+    let mgr2 = r2.checkpoints().unwrap();
+    let res = mgr2.restore("snap").unwrap();
+    assert_eq!(res.app("note"), Some("all five structures"));
+
+    let list = r2.restored_list::<u64>(&res, "lst").unwrap();
+    assert_eq!(list.size(), 300);
+    assert!(list.is_sorted());
+    let mut got = list.collect().unwrap();
+    got.sort();
+    assert_eq!(got, (0..300u64).collect::<Vec<_>>());
+
+    let arr = r2.restored_array::<u32>(&res, "arr").unwrap();
+    assert_eq!(arr.len(), 257);
+    for i in [0u64, 100, 256] {
+        assert_eq!(arr.fetch(i).unwrap(), 1000 + i as u32);
+    }
+
+    let bits = r2.restored_bit_array(&res, "bits").unwrap();
+    assert_eq!(bits.len(), 1000);
+    assert_eq!(bits.bits(), 2);
+    assert_eq!(bits.count_value(0), 250);
+    assert_eq!(bits.count_value(3), 250);
+    assert_eq!(bits.fetch(5).unwrap(), 1);
+
+    let ht = r2.restored_hash_table::<u64, u64>(&res, "ht").unwrap();
+    assert_eq!(ht.size(), 400);
+    assert_eq!(ht.fetch(&17).unwrap(), Some(289));
+
+    let set = r2.restored_set::<u64>(&res, "set").unwrap();
+    assert_eq!(set.size(), 200);
+    assert!(set.contains(&199).unwrap());
+    assert!(!set.contains(&200).unwrap());
+}
+
+#[test]
+fn restored_structures_keep_working() {
+    let (t, r) = roomy("ckpt_alive");
+    let list = r.list::<u64>("l").unwrap();
+    for v in 0..100u64 {
+        list.add(&v).unwrap();
+    }
+    list.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    mgr.save("s", &[&list as &dyn Checkpointable], &[]).unwrap();
+    drop(list);
+    drop(r);
+
+    let r2 = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+    let mgr2 = r2.checkpoints().unwrap();
+    let res = mgr2.restore("s").unwrap();
+    let list = r2.restored_list::<u64>(&res, "l").unwrap();
+    // keep mutating after restore: appends, dedup, map/reduce
+    for v in 100..150u64 {
+        list.add(&v).unwrap();
+    }
+    list.sync().unwrap();
+    assert_eq!(list.size(), 150);
+    list.remove_dupes().unwrap();
+    assert_eq!(list.size(), 150);
+    let sum = list.reduce(|| 0u64, |a, v| a + v, |a, b| a + b).unwrap();
+    assert_eq!(sum, (0..150u64).sum::<u64>());
+    // ...and mutations after restore must never reach back into the
+    // committed checkpoint (lists are copied, never hardlinked): a second
+    // restore re-validates every digest against the original bytes.
+    r2.release_name("l");
+    drop(list);
+    let res2 = mgr2.restore("s").unwrap();
+    assert_eq!(
+        res2.manifest().file_digests(),
+        res.manifest().file_digests(),
+        "checkpoint bytes changed after post-restore mutations"
+    );
+    let list = r2.restored_list::<u64>(&res2, "l").unwrap();
+    assert_eq!(list.size(), 100, "second restore returns the original state");
+}
+
+#[test]
+fn pending_ops_refused() {
+    let (_t, r) = roomy("ckpt_pending");
+    let list = r.list::<u64>("l").unwrap();
+    list.add(&1).unwrap(); // staged, not synced
+    let mgr = r.checkpoints().unwrap();
+    let err = mgr.save("s", &[&list as &dyn Checkpointable], &[]).unwrap_err();
+    match err {
+        RoomyError::Checkpoint(msg) => assert!(msg.contains("pending"), "{msg}"),
+        other => panic!("expected Checkpoint error, got {other:?}"),
+    }
+    // after sync it goes through
+    list.sync().unwrap();
+    mgr.save("s", &[&list as &dyn Checkpointable], &[]).unwrap();
+}
+
+#[test]
+fn prop_flipped_byte_in_any_bucket_file_caught_at_restore() {
+    let (t, r) = roomy("ckpt_fuzz");
+    let list = r.list::<u64>("fuzzlist").unwrap();
+    for v in 0..2_000u64 {
+        list.add(&v).unwrap();
+    }
+    list.sync().unwrap();
+    let ht = r.hash_table::<u64, u32>("fuzzht").unwrap();
+    for k in 0..1_000u64 {
+        ht.insert(&k, &(k as u32)).unwrap();
+    }
+    ht.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    mgr.save("fz", &[&list as &dyn Checkpointable, &ht], &[]).unwrap();
+
+    let ckpt_dir = mgr.root().join("fz");
+    let victims: Vec<_> = files_in(&ckpt_dir)
+        .into_iter()
+        .filter(|p| p.file_name().is_some_and(|f| f != std::ffi::OsStr::new("MANIFEST")))
+        .collect();
+    assert!(!victims.is_empty(), "checkpoint holds no bucket files?");
+
+    let mut rng = Rng::new(0xC0FFEE);
+    for round in 0..20 {
+        // flip one random byte in one random snapshotted bucket file
+        let victim = &victims[rng.range(0, victims.len())];
+        let mut bytes = std::fs::read(victim).unwrap();
+        if bytes.is_empty() {
+            continue;
+        }
+        let pos = rng.range(0, bytes.len());
+        let orig = bytes[pos];
+        bytes[pos] ^= 1u8 << rng.range(0, 8);
+        std::fs::write(victim, &bytes).unwrap();
+
+        let err = mgr.restore("fz");
+        match err {
+            Err(RoomyError::Checkpoint(msg)) => {
+                assert!(msg.contains("digest mismatch"), "round {round}: {msg}")
+            }
+            other => panic!("round {round}: corruption undetected: {other:?}"),
+        }
+
+        // undo the flip; the checkpoint must validate again
+        bytes[pos] = orig;
+        std::fs::write(victim, &bytes).unwrap();
+    }
+    drop((list, ht));
+    drop(r);
+    let r2 = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+    let mgr2 = r2.checkpoints().unwrap();
+    mgr2.restore("fz").unwrap();
+}
+
+#[test]
+fn prop_flipped_byte_in_manifest_caught() {
+    let (_t, r) = roomy("ckpt_fuzz_manifest");
+    let list = r.list::<u64>("l").unwrap();
+    for v in 0..500u64 {
+        list.add(&v).unwrap();
+    }
+    list.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    mgr.save("m", &[&list as &dyn Checkpointable], &[("lev", "3")]).unwrap();
+
+    let mpath = mgr.root().join("m").join("MANIFEST");
+    let orig = std::fs::read(&mpath).unwrap();
+    let pristine = mgr.load_manifest("m").unwrap();
+    let mut rng = Rng::new(0xBADC0DE);
+    for round in 0..30 {
+        let mut bytes = orig.clone();
+        // exclude the final trailing newline: it sits outside every
+        // digested field (flipping it to another whitespace is a no-op)
+        let pos = rng.range(0, bytes.len() - 1);
+        bytes[pos] ^= 1u8 << rng.range(0, 8);
+        if bytes == orig {
+            continue;
+        }
+        std::fs::write(&mpath, &bytes).unwrap();
+        match mgr.restore("m") {
+            // real corruption: the typed error
+            Err(RoomyError::Checkpoint(_)) => {}
+            // value-preserving flip (e.g. hex case in the digest line):
+            // legal only if it decodes to the identical manifest
+            Ok(res) => assert_eq!(
+                res.manifest(),
+                &pristine,
+                "round {round} (flip at {pos}): decoded to different content"
+            ),
+            other => panic!("round {round} (flip at {pos}): undetected: {other:?}"),
+        }
+    }
+    std::fs::write(&mpath, &orig).unwrap();
+    mgr.load_manifest("m").unwrap();
+}
+
+#[test]
+fn interrupted_save_previous_checkpoint_restores_cleanly() {
+    let (_t, r) = roomy("ckpt_staging");
+    let list = r.list::<u64>("l").unwrap();
+    for v in 0..100u64 {
+        list.add(&v).unwrap();
+    }
+    list.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    mgr.save("s", &[&list as &dyn Checkpointable], &[("gen", "1")]).unwrap();
+
+    // simulate a crash mid-save: a half-written staging dir appears
+    let staging = mgr.root().join("s.staging");
+    std::fs::create_dir_all(staging.join("node0/rl_l")).unwrap();
+    std::fs::write(staging.join("node0/rl_l/s0.dat"), b"torn half-written").unwrap();
+    // no MANIFEST in staging — it is never eligible for restore
+
+    let res = mgr.restore("s").unwrap();
+    assert_eq!(res.app("gen"), Some("1"), "previous checkpoint must restore");
+    let restored = r
+        .restored_list::<u64>(&res, "l")
+        .map(|l| l.size());
+    // name still claimed by the live handle in this session
+    assert!(restored.is_err());
+    r.release_name("l");
+    drop(list);
+    let list = r.restored_list::<u64>(&res, "l").unwrap();
+    assert_eq!(list.size(), 100);
+
+    // the next save clears the stale staging dir
+    mgr.save("s", &[&list as &dyn Checkpointable], &[("gen", "2")]).unwrap();
+    assert!(!staging.exists(), "stale staging must be cleaned by the next save");
+    assert_eq!(mgr.load_manifest("s").unwrap().app("gen"), Some("2"));
+}
+
+#[test]
+fn crash_in_commit_window_falls_back_to_prev() {
+    let (_t, r) = roomy("ckpt_prev");
+    let list = r.list::<u64>("l").unwrap();
+    for v in 0..64u64 {
+        list.add(&v).unwrap();
+    }
+    list.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    mgr.save("s", &[&list as &dyn Checkpointable], &[("gen", "1")]).unwrap();
+
+    // simulate the commit window: live renamed to .prev, new live not yet
+    // in place (crash between steps 2 and 3)
+    std::fs::rename(mgr.root().join("s"), mgr.root().join("s.prev")).unwrap();
+    assert!(mgr.exists("s"), "prev survivor must count as restorable");
+    let res = mgr.restore("s").unwrap();
+    assert_eq!(res.app("gen"), Some("1"));
+
+    // the next save commits a fresh live dir and drops the survivor
+    r.release_name("l");
+    drop(list);
+    let list = r.restored_list::<u64>(&res, "l").unwrap();
+    mgr.save("s", &[&list as &dyn Checkpointable], &[("gen", "2")]).unwrap();
+    assert!(mgr.root().join("s").is_dir());
+    assert!(!mgr.root().join("s.prev").exists());
+    assert_eq!(mgr.load_manifest("s").unwrap().app("gen"), Some("2"));
+}
+
+#[test]
+fn checkpoints_survive_cluster_bringup_and_geometry_is_enforced() {
+    let (t, r) = roomy("ckpt_survive");
+    let list = r.list::<u64>("l").unwrap();
+    list.add(&42).unwrap();
+    list.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    mgr.save("s", &[&list as &dyn Checkpointable], &[]).unwrap();
+    drop(list);
+    drop(r);
+
+    // same root, same geometry: bring-up must not purge checkpoints
+    let r2 = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+    let mgr2 = r2.checkpoints().unwrap();
+    assert!(mgr2.exists("s"), "checkpoint lost across bring-up");
+    mgr2.restore("s").unwrap();
+    drop(r2);
+
+    // different geometry: typed refusal
+    let mut cfg = RoomyConfig::for_testing(t.path());
+    cfg.workers = 2;
+    cfg.buckets_per_worker = 1;
+    let r3 = Roomy::open(cfg).unwrap();
+    let mgr3 = r3.checkpoints().unwrap();
+    match mgr3.restore("s") {
+        Err(RoomyError::Checkpoint(msg)) => assert!(msg.contains("cluster"), "{msg}"),
+        other => panic!("geometry mismatch undetected: {other:?}"),
+    }
+}
+
+#[test]
+fn hardlink_and_copy_paths_both_exercised_and_stats_counted() {
+    let (_t, r) = roomy("ckpt_stats");
+    let list = r.list::<u64>("l").unwrap(); // appendable → copied
+    for v in 0..1_000u64 {
+        list.add(&v).unwrap();
+    }
+    list.sync().unwrap();
+    let ht = r.hash_table::<u64, u32>("h").unwrap(); // rename-only → linked
+    for k in 0..1_000u64 {
+        ht.insert(&k, &1).unwrap();
+    }
+    ht.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    let report = mgr
+        .save("s", &[&list as &dyn Checkpointable, &ht], &[])
+        .unwrap();
+    assert!(report.files > 0 && report.bytes > 0);
+    assert!(report.copied > 0, "list shards must be copied");
+    // default checkpoint root shares the node filesystem → links succeed
+    assert!(report.linked > 0, "hash-table buckets should hardlink");
+    let snap = mgr.stats().snapshot();
+    assert_eq!(snap.saves, 1);
+    assert_eq!(snap.files_copied + snap.files_linked, report.files);
+
+    // restore counts too
+    r.release_name("l");
+    r.release_name("h");
+    drop((list, ht));
+    let res = mgr.restore("s").unwrap();
+    let snap = mgr.stats().snapshot();
+    assert_eq!(snap.restores, 1);
+    assert!(snap.restore_ns > 0);
+    let list = r.restored_list::<u64>(&res, "l").unwrap();
+    assert_eq!(list.size(), 1_000);
+}
+
+#[test]
+fn type_mismatches_rejected_at_reopen() {
+    let (_t, r) = roomy("ckpt_types");
+    let list = r.list::<u64>("l").unwrap();
+    list.add(&1).unwrap();
+    list.sync().unwrap();
+    let ht = r.hash_table::<u64, u32>("h").unwrap();
+    ht.insert(&1, &2).unwrap();
+    ht.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    mgr.save("s", &[&list as &dyn Checkpointable, &ht], &[]).unwrap();
+    r.release_name("l");
+    r.release_name("h");
+    drop((list, ht));
+
+    let res = mgr.restore("s").unwrap();
+    // wrong element width
+    assert!(r.restored_list::<u32>(&res, "l").is_err());
+    // wrong kind
+    assert!(r.restored_set::<u64>(&res, "l").is_err());
+    // wrong key/value split
+    assert!(r.restored_hash_table::<u32, u64>(&res, "h").is_err());
+    // unknown name
+    assert!(r.restored_list::<u64>(&res, "nope").is_err());
+    // correct types go through
+    let _l = r.restored_list::<u64>(&res, "l").unwrap();
+    let _h = r.restored_hash_table::<u64, u32>(&res, "h").unwrap();
+}
+
+#[test]
+fn checkpoint_dir_override_is_honored() {
+    let t = roomy::testutil::tmpdir("ckpt_override");
+    let elsewhere = t.path().join("my-checkpoints");
+    let (_t2, r) = roomy_with("ckpt_override_inst", |cfg| {
+        cfg.checkpoint_dir = Some(elsewhere.clone());
+    });
+    let list = r.list::<u64>("l").unwrap();
+    list.add(&1).unwrap();
+    list.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    assert_eq!(mgr.root(), elsewhere.as_path());
+    mgr.save("s", &[&list as &dyn Checkpointable], &[]).unwrap();
+    assert!(elsewhere.join("s").join("MANIFEST").is_file());
+}
+
+#[test]
+fn remove_deletes_all_variants() {
+    let (_t, r) = roomy("ckpt_remove");
+    let list = r.list::<u64>("l").unwrap();
+    list.add(&1).unwrap();
+    list.sync().unwrap();
+    let mgr = r.checkpoints().unwrap();
+    mgr.save("s", &[&list as &dyn Checkpointable], &[]).unwrap();
+    std::fs::create_dir_all(mgr.root().join("s.staging")).unwrap();
+    std::fs::create_dir_all(mgr.root().join("s.prev")).unwrap();
+    mgr.remove("s").unwrap();
+    assert!(!mgr.exists("s"));
+    assert!(!mgr.root().join("s.staging").exists());
+    assert!(!mgr.root().join("s.prev").exists());
+}

@@ -58,6 +58,53 @@ fn pancake_rejects_bad_args() {
 }
 
 #[test]
+fn pancake_checkpoint_dir_then_resume() {
+    let root = tmp_root("pkck");
+    let ckpt = tmp_root("pkck-ckpt");
+    let base = [
+        "pancake", "--n", "5", "--structure", "list", "--workers", "2",
+        "--accel", "rust",
+    ];
+    let out = roomy_bin()
+        .args(base)
+        .args(["--root", &root, "--checkpoint-dir", &ckpt])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stdout: {text}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("checkpointing every level"), "{text}");
+    assert!(text.contains("checkpoints:"), "{text}");
+
+    // rerun with --resume: the finished checkpoint answers immediately
+    // and still validates
+    let root2 = tmp_root("pkck2");
+    let out = roomy_bin()
+        .args(base)
+        .args(["--root", &root2, "--checkpoint-dir", &ckpt, "--resume"])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stdout: {text}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("resuming checkpoint"), "{text}");
+    assert!(text.contains("validation vs known f(5)=5: OK"), "{text}");
+
+    // --resume against an empty checkpoint dir is a hard error
+    let empty = tmp_root("pkck-empty");
+    let out = roomy_bin()
+        .args(base)
+        .args(["--root", &root2, "--checkpoint-dir", &empty, "--resume"])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1));
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::remove_dir_all(&root2).ok();
+    std::fs::remove_dir_all(&ckpt).ok();
+    std::fs::remove_dir_all(&empty).ok();
+}
+
+#[test]
 fn demo_runs_clean() {
     let root = tmp_root("demo");
     let out = roomy_bin()

@@ -1,0 +1,187 @@
+//! Kill-and-resume pancake BFS — the acceptance bar for the durable
+//! checkpoint subsystem.
+//!
+//! For every cell of pool workers {1, 4} × io pipeline depths {0, 4}:
+//! run pancake n=7 to completion with a checkpoint after every level
+//! (the uninterrupted reference), then run it again in a separate root,
+//! "kill" it after three levels (in-RAM state abandoned, checkpoint on
+//! disk), wreck the checkpoint dir with a half-written staging directory
+//! (crash-mid-save), and resume in a **fresh session**. The resumed run
+//! must produce the identical level profile and a final checkpoint whose
+//! per-file digests are byte-identical to the reference — and every cell
+//! must agree with every other cell, so neither the kill point, the
+//! worker count nor the pipeline depth leaves a trace in the bytes.
+
+mod common;
+
+use roomy::accel::Accel;
+use roomy::apps::pancake::{self, Structure};
+use roomy::constructs::bfs::{BfsOutcome, LevelStats, ResumableBfs};
+use roomy::testutil::tmpdir;
+use roomy::{Roomy, RoomyConfig};
+
+const MATRIX: [(usize, usize); 4] = [(1, 0), (1, 4), (4, 0), (4, 4)];
+
+fn open(root: &std::path::Path, num_workers: usize, depth: usize) -> Roomy {
+    let mut cfg = RoomyConfig::for_testing(root);
+    cfg.num_workers = num_workers;
+    cfg.io_pipeline_depth = depth;
+    Roomy::open(cfg).unwrap()
+}
+
+/// Run the resumable pancake driver to completion and return the level
+/// stats plus the final checkpoint's per-file digest rows.
+fn run_to_completion(
+    r: &Roomy,
+    n: usize,
+    structure: Structure,
+    tag: &str,
+) -> (LevelStats, Vec<(usize, String, u64, u64)>) {
+    let mgr = r.checkpoints().unwrap();
+    let out = pancake::roomy_bfs_resumable(
+        r,
+        n,
+        structure,
+        &Accel::rust(),
+        &ResumableBfs::new(&mgr, tag),
+    )
+    .unwrap();
+    let digests = mgr.load_manifest(tag).unwrap().file_digests();
+    match out {
+        BfsOutcome::Complete(stats) => (stats, digests),
+        other => panic!("expected completion, got {other:?}"),
+    }
+}
+
+/// `#[ignore]`: 8 full pancake n=7 runs make this the most expensive
+/// test in the repo, and it pins its own worker/depth matrix regardless
+/// of the suite-wide env — so the plain `cargo test` pass would only
+/// repeat it without adding coverage. CI runs it in a dedicated release
+/// step (`--include-ignored`); locally: `cargo test --release --test
+/// integration_resume -- --include-ignored`.
+#[test]
+#[ignore]
+fn pancake_n7_kill_and_resume_matrix_is_byte_identical() {
+    let n = 7;
+    let expect_levels = pancake::reference_bfs(n);
+    let mut pinned: Option<(LevelStats, Vec<(usize, String, u64, u64)>)> = None;
+
+    for &(nw, depth) in &MATRIX {
+        // --- uninterrupted reference, checkpointing every level -------
+        let t_ref = tmpdir(&format!("resume_ref_w{nw}_d{depth}"));
+        let (ref_stats, ref_digests) = {
+            let r = open(t_ref.path(), nw, depth);
+            run_to_completion(&r, n, Structure::List, "pk")
+        };
+        assert_eq!(ref_stats.levels, expect_levels, "w{nw} d{depth}");
+        assert_eq!(ref_stats.total, pancake::factorial(n));
+
+        // --- killed after 3 levels, crash-mid-save, resumed fresh -----
+        let t_kill = tmpdir(&format!("resume_kill_w{nw}_d{depth}"));
+        {
+            let r = open(t_kill.path(), nw, depth);
+            let mgr = r.checkpoints().unwrap();
+            let opts = ResumableBfs {
+                manager: &mgr,
+                tag: "pk".into(),
+                stop_after_levels: Some(3),
+            };
+            let out =
+                pancake::roomy_bfs_resumable(&r, n, Structure::List, &Accel::rust(), &opts)
+                    .unwrap();
+            assert_eq!(out, BfsOutcome::Suspended { next_level: 4 }, "w{nw} d{depth}");
+            // crash mid-save: a half-written staging dir appears beside
+            // the committed checkpoint; the prior checkpoint must stay
+            // restorable and the next save must clean this up
+            let staging = mgr.root().join("pk.staging");
+            std::fs::create_dir_all(staging.join("node0/rl_pancake_all")).unwrap();
+            std::fs::write(staging.join("node0/rl_pancake_all/s0.dat"), b"torn").unwrap();
+        } // session dies here (io services joined, state dropped)
+
+        let (res_stats, res_digests) = {
+            let r = open(t_kill.path(), nw, depth);
+            run_to_completion(&r, n, Structure::List, "pk")
+        };
+
+        // within-cell: resumed == uninterrupted, to the byte
+        assert_eq!(res_stats, ref_stats, "level profile diverged at w{nw} d{depth}");
+        assert_eq!(
+            res_digests, ref_digests,
+            "final structure digests diverged at w{nw} d{depth}"
+        );
+        assert!(!res_digests.is_empty(), "final checkpoint holds no files?");
+
+        // cross-cell: no worker count / pipeline depth leaves a trace
+        match pinned.take() {
+            None => pinned = Some((ref_stats, ref_digests)),
+            Some((p_stats, p_digests)) => {
+                assert_eq!(ref_stats, p_stats, "profile diverged across cells at w{nw} d{depth}");
+                assert_eq!(
+                    ref_digests, p_digests,
+                    "digests diverged across cells at w{nw} d{depth}"
+                );
+                pinned = Some((p_stats, p_digests));
+            }
+        }
+    }
+}
+
+#[test]
+fn pancake_hash_variant_kill_and_resume_matches() {
+    let n = 6;
+    let t_ref = tmpdir("resume_hash_ref");
+    let (ref_stats, ref_digests) = {
+        let r = open(t_ref.path(), 4, 4);
+        run_to_completion(&r, n, Structure::Hash, "pkh")
+    };
+    assert_eq!(ref_stats.levels, pancake::reference_bfs(n));
+
+    let t_kill = tmpdir("resume_hash_kill");
+    {
+        let r = open(t_kill.path(), 4, 4);
+        let mgr = r.checkpoints().unwrap();
+        let opts =
+            ResumableBfs { manager: &mgr, tag: "pkh".into(), stop_after_levels: Some(2) };
+        let out =
+            pancake::roomy_bfs_resumable(&r, n, Structure::Hash, &Accel::rust(), &opts).unwrap();
+        assert_eq!(out, BfsOutcome::Suspended { next_level: 3 });
+    }
+    let (res_stats, res_digests) = {
+        let r = open(t_kill.path(), 4, 4);
+        run_to_completion(&r, n, Structure::Hash, "pkh")
+    };
+    assert_eq!(res_stats, ref_stats);
+    assert_eq!(res_digests, ref_digests);
+}
+
+#[test]
+fn repeated_kills_every_level_still_converge() {
+    // the pathological operator: killed after every single level
+    let n = 6;
+    let t_ref = tmpdir("resume_rep_ref");
+    let (ref_stats, ref_digests) = {
+        let r = open(t_ref.path(), 4, 0);
+        run_to_completion(&r, n, Structure::List, "pk")
+    };
+
+    let t = tmpdir("resume_rep");
+    let mut rounds = 0u32;
+    let (stats, digests) = loop {
+        rounds += 1;
+        assert!(rounds < 32, "resume failed to make progress");
+        let r = open(t.path(), 4, 0);
+        let mgr = r.checkpoints().unwrap();
+        let opts =
+            ResumableBfs { manager: &mgr, tag: "pk".into(), stop_after_levels: Some(1) };
+        match pancake::roomy_bfs_resumable(&r, n, Structure::List, &Accel::rust(), &opts)
+            .unwrap()
+        {
+            BfsOutcome::Suspended { .. } => continue,
+            BfsOutcome::Complete(stats) => {
+                break (stats, mgr.load_manifest("pk").unwrap().file_digests())
+            }
+        }
+    };
+    assert_eq!(stats, ref_stats);
+    assert_eq!(digests, ref_digests);
+}
