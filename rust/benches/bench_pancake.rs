@@ -164,6 +164,51 @@ fn main() {
         ]);
     }
 
+    // ---- E5: locality-aware pool scheduling -------------------------
+    // The per-node work-queue engine (runtime::pool) vs the pre-refactor
+    // flat cursor: pancake n=7 on a 4-wide pool with the I/O pipeline at
+    // depth 2, one row per steal policy. `greedy` reproduces the old
+    // flat-cursor schedule; `bounded` is the default home-first +
+    // LIFO-steal policy; `off` is strict locality. All three produce
+    // byte-identical state (tests/determinism.rs) — the columns show the
+    // scheduling differences: wall time, how many tasks ran off their
+    // home worker, the locality hit-rate, and how the cross-task
+    // prefetch hints fared.
+    {
+        use roomy::StealPolicy;
+        let e5_n = 7usize;
+        header(
+            &format!("E5: pool scheduling policy, pancake n={e5_n} (hash variant, 4 pool workers, io depth 2)"),
+            &["policy", "wall s", "steals", "locality", "hints posted", "hint hits", "hint wastes"],
+        );
+        for (label, policy) in [
+            ("greedy (flat cursor)", StealPolicy::Greedy),
+            ("bounded (default)", StealPolicy::Bounded),
+            ("off (strict locality)", StealPolicy::Off),
+        ] {
+            let (_t, r) = fresh_roomy(&format!("pk{e5_n}steal-{policy}"), |c| {
+                c.num_workers = 4;
+                c.io_pipeline_depth = 2;
+                c.steal_policy = policy;
+            });
+            let (secs, stats) = time(|| {
+                pancake::roomy_bfs(&r, e5_n, Structure::Hash, &Accel::rust()).unwrap()
+            });
+            assert_eq!(stats.total, pancake::factorial(e5_n), "{label} must be exact");
+            let ps = r.cluster().pool().stats();
+            let pipe = r.cluster().pipeline_snapshot();
+            row(&[
+                label.into(),
+                format!("{secs:.2}"),
+                ps.steals().to_string(),
+                format!("{:.0}%", ps.locality_rate() * 100.0),
+                pipe.hints_posted.to_string(),
+                format!("{} ({:.0}%)", pipe.hint_hits, pipe.hint_hit_rate() * 100.0),
+                pipe.hint_wastes.to_string(),
+            ]);
+        }
+    }
+
     println!(
         "\nexpansion backend: {}",
         if xla.is_some() { "XLA AOT (list/hash variants)" } else { "Rust fallback" }

@@ -16,6 +16,19 @@
 //!   bucket tasks are independent, results come back in bucket order, and
 //!   delayed ops issued inside tasks are captured/replayed
 //!   deterministically (see [`crate::runtime::pool`]).
+//!
+//! Bucket tasks are dispatched **locality-aware**: the shared
+//! [`Topology`] tags every task with its owning node, the pool keeps one
+//! work queue per node with worker slots bound to home nodes, and idle
+//! workers steal across nodes only as
+//! [`RoomyConfig::steal_policy`](crate::RoomyConfig::steal_policy)
+//! allows. [`Cluster::run_buckets_hinted`] additionally supplies the
+//! per-bucket file a task will scan, which the pool turns into cross-task
+//! prefetch hints on the owning node's read-ahead lane.
+
+pub mod topology;
+
+pub use topology::Topology;
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -37,7 +50,7 @@ const OWNED_SCRATCH: [&str; 4] = ["tmp/capture", "tmp/sort", "tmp/pipeline", "tm
 #[derive(Debug)]
 pub struct Cluster {
     disks: Vec<Arc<NodeDisk>>,
-    buckets_per_worker: usize,
+    topology: Topology,
     phases: PhaseTimes,
     pool: WorkerPool,
     /// Where durable checkpoints live ([`crate::storage::checkpoint`]):
@@ -79,13 +92,14 @@ impl Cluster {
         }
         let mut pool = WorkerPool::new(cfg.num_workers);
         pool.set_capture_spill(disks.clone(), cfg.capture_spill_threshold);
+        pool.set_steal_policy(cfg.steal_policy);
         let checkpoint_root = cfg
             .checkpoint_dir
             .clone()
             .unwrap_or_else(|| cfg.root.join("checkpoints"));
         Ok(Cluster {
             disks,
-            buckets_per_worker: cfg.buckets_per_worker,
+            topology: Topology::new(cfg.workers, cfg.buckets_per_worker),
             phases: PhaseTimes::new(),
             pool,
             checkpoint_root,
@@ -103,6 +117,13 @@ impl Cluster {
         &self.pool
     }
 
+    /// The bucket→node ownership arithmetic of this cluster, shared with
+    /// the pool's per-node work queues, the checkpoint geometry checks
+    /// and the structures' hash routing.
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+
     /// Number of nodes.
     pub fn nworkers(&self) -> usize {
         self.disks.len()
@@ -110,19 +131,18 @@ impl Cluster {
 
     /// Total bucket count every structure on this cluster is split into.
     pub fn nbuckets(&self) -> u32 {
-        (self.disks.len() * self.buckets_per_worker) as u32
+        self.topology.nbuckets()
     }
 
     /// The node that owns bucket `b` (round-robin: balances buckets and,
     /// with a good hash, bytes across disks).
     pub fn owner(&self, bucket: u32) -> usize {
-        (bucket as usize) % self.disks.len()
+        self.topology.owner(bucket)
     }
 
     /// Buckets owned by `node`, ascending.
     pub fn buckets_of(&self, node: usize) -> impl Iterator<Item = u32> + '_ {
-        let w = self.nworkers();
-        (0..self.nbuckets()).filter(move |b| (*b as usize) % w == node)
+        self.topology.buckets_of(node)
     }
 
     /// Disk of node `w`.
@@ -182,11 +202,12 @@ impl Cluster {
     }
 
     /// Run `job(bucket, disk-of-owner)` for **every bucket**, dispatched
-    /// through the worker pool; results are returned in ascending bucket
-    /// order regardless of the schedule. This is the per-bucket collective
-    /// engine all structure sync/map/reduce paths use: bucket tasks touch
-    /// only their own bucket's files, so any `num_workers` produces
-    /// byte-identical on-disk state (see [`crate::runtime::pool`]).
+    /// through the worker pool's per-node queues; results are returned in
+    /// ascending bucket order regardless of the schedule. This is the
+    /// per-bucket collective engine all structure sync/map/reduce paths
+    /// use: bucket tasks touch only their own bucket's files, so any
+    /// `num_workers` / steal policy produces byte-identical on-disk state
+    /// (see [`crate::runtime::pool`]).
     ///
     /// Wall time is charged to phase `phase`.
     pub fn run_buckets<R, F>(&self, phase: &str, job: F) -> Result<Vec<R>>
@@ -194,12 +215,41 @@ impl Cluster {
         R: Send,
         F: Fn(u32, &Arc<NodeDisk>) -> Result<R> + Sync,
     {
+        self.run_buckets_hinted(phase, |_b| None, job)
+    }
+
+    /// [`Cluster::run_buckets`] plus a **cross-task prefetch hint**:
+    /// `hint(b)` names the file (relative to bucket `b`'s owner disk)
+    /// the task will scan. When a worker dequeues a bucket, the pool
+    /// posts the hint for the *next* queued bucket on the same node into
+    /// that node's read-ahead lane ([`NodeDisk::hint_prefetch`]), so the
+    /// next task's scan finds its first chunk already staged. Hints are
+    /// best-effort and bounded by the pipeline depth; they never change
+    /// what a task reads, only when the bytes move.
+    pub fn run_buckets_hinted<R, F, H>(&self, phase: &str, hint: H, job: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(u32, &Arc<NodeDisk>) -> Result<R> + Sync,
+        H: Fn(u32) -> Option<String> + Sync,
+    {
         let nb = self.nbuckets() as usize;
+        let topo = self.topology;
         self.phases.time(phase, || {
-            self.pool.run_tasks(phase, nb, |t| {
-                let b = t as u32;
-                job(b, self.disk(self.owner(b)))
-            })
+            self.pool.run_tagged(
+                phase,
+                nb,
+                topo,
+                |t| {
+                    let b = t as u32;
+                    if let Some(rel) = hint(b) {
+                        self.disk(topo.owner(b)).hint_prefetch(rel);
+                    }
+                },
+                |t| {
+                    let b = t as u32;
+                    job(b, self.disk(topo.owner(b)))
+                },
+            )
         })
     }
 

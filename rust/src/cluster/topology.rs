@@ -1,0 +1,149 @@
+//! Bucket → node ownership arithmetic, in one place.
+//!
+//! Every layer of the system needs the same three facts about the data
+//! layout: how many nodes there are, how many buckets each structure is
+//! split into, and which node owns a given bucket. Before this type the
+//! modulo arithmetic was repeated in [`Cluster`](super::Cluster)'s
+//! `owner`/`buckets_of`, in the checkpoint manifest's geometry check, and
+//! (via the bucket count) in every structure's hash routing. [`Topology`]
+//! is the single owner of that arithmetic; the per-node work queues in
+//! [`crate::runtime::pool`] consume it too, so the scheduler and the
+//! storage layout can never disagree about which node a bucket belongs to.
+//!
+//! Ownership is round-robin (`bucket % nodes`): with a good routing hash
+//! it balances both bucket count and bytes across disks, and it makes
+//! `buckets_of` a strided range rather than a lookup table.
+
+use crate::hashfn;
+
+/// The data layout of one cluster: `nodes` disks, each owning
+/// `buckets_per_node` buckets of every structure. Cheap to copy; value
+/// equality is layout equality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    nodes: usize,
+    buckets_per_node: usize,
+}
+
+impl Topology {
+    /// Layout of `nodes` nodes × `buckets_per_node` buckets each.
+    pub fn new(nodes: usize, buckets_per_node: usize) -> Topology {
+        assert!(nodes > 0 && buckets_per_node > 0, "degenerate topology");
+        Topology { nodes, buckets_per_node }
+    }
+
+    /// The degenerate one-bucket-per-rank layout a bare
+    /// [`WorkerPool`](crate::runtime::pool::WorkerPool) runs under: task
+    /// `t` homes on slot `t % nodes`. Clamps to at least one node.
+    pub fn flat(nodes: usize) -> Topology {
+        Topology::new(nodes.max(1), 1)
+    }
+
+    /// Number of nodes (disks).
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Total bucket count of every structure on this layout.
+    pub fn nbuckets(&self) -> u32 {
+        (self.nodes * self.buckets_per_node) as u32
+    }
+
+    /// The node that owns bucket `b` (round-robin).
+    pub fn owner(&self, bucket: u32) -> usize {
+        (bucket as usize) % self.nodes
+    }
+
+    /// Buckets owned by `node`, ascending (empty for out-of-range nodes).
+    pub fn buckets_of(&self, node: usize) -> impl Iterator<Item = u32> + '_ {
+        let start = node as u32;
+        let end = if node < self.nodes { self.nbuckets() } else { start };
+        (start..end).step_by(self.nodes)
+    }
+
+    /// The pool worker slot that homes `node` when `nworkers` slots are
+    /// live (round-robin over the slots; every node has exactly one home
+    /// worker, so strict-locality scheduling still drains every queue).
+    pub fn home_worker(&self, node: usize, nworkers: usize) -> usize {
+        node % nworkers.max(1)
+    }
+
+    /// Hash-route an element's bytes to its bucket (the shared
+    /// fingerprint + fast-range formula of [`crate::hashfn`]).
+    pub fn route(&self, elt_bytes: &[u8]) -> u32 {
+        hashfn::bucket_of_bytes(elt_bytes, self.nbuckets())
+    }
+
+    /// Whether a recorded geometry (checkpoint manifest, peer structure)
+    /// matches this layout.
+    pub fn matches(&self, nodes: usize, nbuckets: u32) -> bool {
+        self.nodes == nodes && self.nbuckets() == nbuckets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ownership_partitions_all_buckets() {
+        let t = Topology::new(3, 4);
+        assert_eq!(t.nbuckets(), 12);
+        let mut seen = vec![false; 12];
+        for n in 0..t.nodes() {
+            for b in t.buckets_of(n) {
+                assert_eq!(t.owner(b), n);
+                assert!(!seen[b as usize], "bucket {b} owned twice");
+                seen[b as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn every_node_has_exactly_one_home_worker() {
+        for (nodes, workers) in [(4usize, 2usize), (2, 4), (3, 3), (5, 1)] {
+            let t = Topology::new(nodes, 2);
+            for w in 0..workers {
+                let mine: Vec<usize> =
+                    (0..nodes).filter(|&n| t.home_worker(n, workers) == w).collect();
+                for n in &mine {
+                    assert_eq!(n % workers, w);
+                }
+            }
+            // partition: each node maps to exactly one worker < workers
+            for n in 0..nodes {
+                assert!(t.home_worker(n, workers) < workers);
+            }
+        }
+    }
+
+    #[test]
+    fn route_matches_hashfn() {
+        let t = Topology::new(3, 2);
+        for v in 0u64..200 {
+            assert_eq!(
+                t.route(&v.to_le_bytes()),
+                crate::hashfn::bucket_of_bytes(&v.to_le_bytes(), 6)
+            );
+        }
+    }
+
+    #[test]
+    fn geometry_matching() {
+        let t = Topology::new(3, 2);
+        assert!(t.matches(3, 6));
+        assert!(!t.matches(2, 6));
+        assert!(!t.matches(3, 12));
+    }
+
+    #[test]
+    fn flat_is_one_bucket_per_rank() {
+        let t = Topology::flat(4);
+        assert_eq!(t.nodes(), 4);
+        for task in 0..16u32 {
+            assert_eq!(t.owner(task), task as usize % 4);
+        }
+        assert_eq!(Topology::flat(0).nodes(), 1);
+    }
+}

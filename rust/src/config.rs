@@ -52,6 +52,66 @@ impl Default for DiskPolicy {
     }
 }
 
+/// How the collective pool schedules bucket tasks across its worker
+/// slots ([`crate::runtime::pool`]). Worker slots are bound to home nodes
+/// (node `n` is homed by slot `n % num_workers`); the policy only governs
+/// what an **idle** worker does once its home queues drain. Scheduling
+/// moves *where/when* a task runs, never its output: results merge by
+/// bucket index and delayed ops replay in (task, issue) order, so every
+/// policy yields byte-identical on-disk state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StealPolicy {
+    /// Strict locality: a worker only ever runs tasks of its home nodes.
+    /// A node with a heavy bucket serializes behind its home worker, but
+    /// no worker ever touches another node's data — the multi-node
+    /// sharding contract.
+    Off,
+    /// Home queues first; when idle, steal **one task at a time** from
+    /// the LIFO end of the most-loaded node queue (the home worker keeps
+    /// draining its FIFO front undisturbed). The default.
+    #[default]
+    Bounded,
+    /// Ignore homes entirely: every worker takes the globally
+    /// lowest-index remaining task — the pre-locality flat-cursor
+    /// schedule, kept as the bench baseline.
+    Greedy,
+}
+
+impl StealPolicy {
+    /// Parse the `off` / `bounded` / `greedy` spelling used by the env
+    /// var and CLI flag.
+    pub fn parse(s: &str) -> Option<StealPolicy> {
+        Some(match s {
+            "off" => StealPolicy::Off,
+            "bounded" => StealPolicy::Bounded,
+            "greedy" => StealPolicy::Greedy,
+            _ => return None,
+        })
+    }
+
+    /// The canonical spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StealPolicy::Off => "off",
+            StealPolicy::Bounded => "bounded",
+            StealPolicy::Greedy => "greedy",
+        }
+    }
+}
+
+impl std::str::FromStr for StealPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        StealPolicy::parse(s).ok_or_else(|| format!("bad steal policy {s:?} (off|bounded|greedy)"))
+    }
+}
+
+impl std::fmt::Display for StealPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Which implementation backs the numeric batch kernels in [`crate::accel`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AccelMode {
@@ -114,6 +174,13 @@ pub struct RoomyConfig {
     /// stream is depth × [`crate::storage::PIPE_CHUNK`]. Env
     /// `ROOMY_IO_DEPTH` overrides, CLI `--io-depth`.
     pub io_pipeline_depth: usize,
+    /// How idle pool workers acquire tasks from other nodes' queues
+    /// ([`crate::runtime::pool`]): `Off` is strict locality, `Bounded`
+    /// (default) steals one task at a time from the most-loaded queue,
+    /// `Greedy` reproduces the old flat-cursor schedule. Byte-identical
+    /// on-disk state at every setting. Env `ROOMY_STEAL` overrides, CLI
+    /// `--steal`.
+    pub steal_policy: StealPolicy,
     /// In-RAM run size for external sort (bytes).
     pub sort_chunk_bytes: usize,
     /// RAM budget per worker for hash-set based `remove_all` before
@@ -140,6 +207,7 @@ impl RoomyConfig {
             op_buffer_bytes: 64 * 1024,
             capture_spill_threshold: env_capture_spill().unwrap_or(64 * 1024),
             io_pipeline_depth: env_io_depth().unwrap_or(0),
+            steal_policy: env_steal().unwrap_or_default(),
             sort_chunk_bytes: 4 * 1024 * 1024,
             ram_budget_bytes: 64 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -211,6 +279,12 @@ fn env_io_depth() -> Option<usize> {
         .and_then(|s| s.parse::<usize>().ok())
 }
 
+/// Steal-policy override (`ROOMY_STEAL` ∈ off|bounded|greedy), used by CI
+/// to run the whole suite under strict locality.
+fn env_steal() -> Option<StealPolicy> {
+    std::env::var("ROOMY_STEAL").ok().as_deref().and_then(StealPolicy::parse)
+}
+
 impl Default for RoomyConfig {
     fn default() -> Self {
         RoomyConfig {
@@ -224,6 +298,7 @@ impl Default for RoomyConfig {
             op_buffer_bytes: 4 * 1024 * 1024,
             capture_spill_threshold: env_capture_spill().unwrap_or(4 * 1024 * 1024),
             io_pipeline_depth: env_io_depth().unwrap_or(2),
+            steal_policy: env_steal().unwrap_or_default(),
             sort_chunk_bytes: 64 * 1024 * 1024,
             ram_budget_bytes: 256 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -285,6 +360,17 @@ mod tests {
             c.io_pipeline_depth = depth;
             c.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn steal_policy_parses_and_round_trips() {
+        for p in [StealPolicy::Off, StealPolicy::Bounded, StealPolicy::Greedy] {
+            assert_eq!(StealPolicy::parse(p.as_str()), Some(p));
+            assert_eq!(p.as_str().parse::<StealPolicy>().unwrap(), p);
+        }
+        assert_eq!(StealPolicy::parse("half"), None);
+        assert!("".parse::<StealPolicy>().is_err());
+        assert_eq!(StealPolicy::default(), StealPolicy::Bounded);
     }
 
     #[test]

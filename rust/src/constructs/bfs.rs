@@ -20,11 +20,20 @@
 //! Determinism note: frontier batches are accumulated **per pool task**
 //! ([`crate::roomy::RoomyList::map_batched`] builds them shard-locally),
 //! so batch composition depends only on the frontier's on-disk shard
-//! contents — never on `num_workers` or the schedule. Combined with the
-//! pool's per-task delayed-op capture, both batched drivers stage their
-//! neighbor ops in byte-identical order at any worker count, matching
-//! the unbatched per-element idiom (one delayed op per neighbor from
-//! inside `map`, as in the RoomyBitArray pancake variant).
+//! contents — never on `num_workers`, the pool's steal policy, or the
+//! schedule. Combined with the pool's per-task delayed-op capture, both
+//! batched drivers stage their neighbor ops in byte-identical order at
+//! any worker count, matching the unbatched per-element idiom (one
+//! delayed op per neighbor from inside `map`, as in the RoomyBitArray
+//! pancake variant).
+//!
+//! Scheduling note: the frontier scans ride the locality-aware pool
+//! directly — `map_batched` submits one task per frontier shard tagged
+//! with its owning node and hinted with its shard file, so while shard
+//! `s` expands, the same node's read lane is already staging shard
+//! `s+1`'s first chunk (cross-task prefetch,
+//! [`crate::storage::pipeline`]), and under `ROOMY_STEAL=off` every
+//! shard expands strictly on its home worker.
 
 use crate::error::{Result, RoomyError};
 use crate::roomy::{Element, Roomy};

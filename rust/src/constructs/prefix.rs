@@ -53,19 +53,24 @@ pub fn parallel_prefix<T: Element>(
 /// carry computation. RAM use stays one bucket per pool worker.
 pub fn prefix_scan_array(ra: &RoomyArray<i64>, accel: &Accel) -> Result<()> {
     let nb = ra.bucket_count();
-    // Pass 1 (pooled): scan each bucket in place, return its total.
-    let totals: Vec<i64> = ra.cluster().run_buckets("prefix.scan", |b, _disk| {
-        if b >= nb {
-            return Ok(0i64);
-        }
-        let data = ra.read_bucket_i64(b)?;
-        if data.is_empty() {
-            return Ok(0i64);
-        }
-        let (scanned, total) = accel.prefix_scan(&data)?;
-        ra.write_bucket_i64(b, &scanned)?;
-        Ok(total)
-    })?;
+    // Pass 1 (pooled, with cross-task prefetch hints on the bucket
+    // files): scan each bucket in place, return its total.
+    let totals: Vec<i64> = ra.cluster().run_buckets_hinted(
+        "prefix.scan",
+        |b| (b < nb).then(|| ra.bucket_rel(b)),
+        |b, _disk| {
+            if b >= nb {
+                return Ok(0i64);
+            }
+            let data = ra.read_bucket_i64(b)?;
+            if data.is_empty() {
+                return Ok(0i64);
+            }
+            let (scanned, total) = accel.prefix_scan(&data)?;
+            ra.write_bucket_i64(b, &scanned)?;
+            Ok(total)
+        },
+    )?;
     // Serial: exclusive prefix of bucket totals = per-bucket carries.
     let mut carries = Vec::with_capacity(totals.len());
     let mut carry = 0i64;
@@ -74,20 +79,27 @@ pub fn prefix_scan_array(ra: &RoomyArray<i64>, accel: &Accel) -> Result<()> {
         carry = carry.wrapping_add(*t);
     }
     // Pass 2 (pooled): add each bucket's carry.
-    ra.cluster().run_buckets("prefix.carry", |b, _disk| {
-        let c = carries.get(b as usize).copied().unwrap_or(0);
-        if b >= nb || c == 0 {
-            return Ok(());
-        }
-        let mut data = ra.read_bucket_i64(b)?;
-        if data.is_empty() {
-            return Ok(());
-        }
-        for v in data.iter_mut() {
-            *v = v.wrapping_add(c);
-        }
-        ra.write_bucket_i64(b, &data)
-    })?;
+    ra.cluster().run_buckets_hinted(
+        "prefix.carry",
+        |b| {
+            (b < nb && carries.get(b as usize).copied().unwrap_or(0) != 0)
+                .then(|| ra.bucket_rel(b))
+        },
+        |b, _disk| {
+            let c = carries.get(b as usize).copied().unwrap_or(0);
+            if b >= nb || c == 0 {
+                return Ok(());
+            }
+            let mut data = ra.read_bucket_i64(b)?;
+            if data.is_empty() {
+                return Ok(());
+            }
+            for v in data.iter_mut() {
+                *v = v.wrapping_add(c);
+            }
+            ra.write_bucket_i64(b, &data)
+        },
+    )?;
     Ok(())
 }
 

@@ -78,7 +78,8 @@ pub mod runtime;
 pub mod storage;
 pub mod testutil;
 
-pub use config::{AccelMode, DiskPolicy, RoomyConfig};
+pub use cluster::Topology;
+pub use config::{AccelMode, DiskPolicy, RoomyConfig, StealPolicy};
 pub use error::{Result, RoomyError};
 pub use roomy::{
     Element, Roomy, RoomyArray, RoomyBitArray, RoomyHashTable, RoomyList, RoomySet,

@@ -58,6 +58,13 @@ USAGE:
                                        # ahead / writes behind through the
                                        # per-node io service (env
                                        # ROOMY_IO_DEPTH)
+                [--steal P]            # idle pool-worker policy over the
+                                       # per-node work queues: off =
+                                       # strict locality, bounded =
+                                       # home-first + LIFO steals
+                                       # (default), greedy = flat cursor
+                                       # (env ROOMY_STEAL); on-disk bytes
+                                       # identical at every setting
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
                 [--checkpoint-dir DIR] # durable checkpoint after every BFS
@@ -122,6 +129,7 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
         capture_spill_threshold: f
             .get_parse("capture-spill", defaults.capture_spill_threshold)?,
         io_pipeline_depth: f.get_parse("io-depth", defaults.io_pipeline_depth)?,
+        steal_policy: f.get_parse("steal", defaults.steal_policy)?,
         ..defaults
     };
     cfg.root = f

@@ -201,6 +201,17 @@ pub struct PipelineStats {
     /// Largest buffer RAM a single stream ever allocated — must stay
     /// ≤ depth × chunk (tests assert this).
     peak_stream_buf: AtomicU64,
+    /// Cross-task prefetch hints accepted by the hint cache (posted to
+    /// the read lane). Dropped hints (cache full, duplicate path) are
+    /// not counted anywhere — they cost nothing.
+    hints_posted: AtomicU64,
+    /// Hints whose warmed first chunk a scan adopted (the scan skipped
+    /// its own open + first-chunk read).
+    hint_hits: AtomicU64,
+    /// Hints that did work nobody used: the warm failed, went stale
+    /// (file replaced/grown before the scan arrived), or was still
+    /// unconsumed at teardown. Eventually `posted == hits + wastes`.
+    hint_wastes: AtomicU64,
 }
 
 impl PipelineStats {
@@ -236,6 +247,18 @@ impl PipelineStats {
         self.peak_stream_buf.fetch_max(bytes, Ordering::Relaxed);
     }
 
+    pub fn add_hint_posted(&self) {
+        self.hints_posted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_hint_hit(&self) {
+        self.hint_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_hint_wastes(&self, n: u64) {
+        self.hint_wastes.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> PipelineSnapshot {
         PipelineSnapshot {
             streams: self.streams.load(Ordering::Relaxed),
@@ -246,6 +269,9 @@ impl PipelineStats {
             reader_wait_ns: self.reader_wait_ns.load(Ordering::Relaxed),
             writer_wait_ns: self.writer_wait_ns.load(Ordering::Relaxed),
             peak_stream_buf: self.peak_stream_buf.load(Ordering::Relaxed),
+            hints_posted: self.hints_posted.load(Ordering::Relaxed),
+            hint_hits: self.hint_hits.load(Ordering::Relaxed),
+            hint_wastes: self.hint_wastes.load(Ordering::Relaxed),
         }
     }
 
@@ -258,6 +284,9 @@ impl PipelineStats {
         self.reader_wait_ns.store(0, Ordering::Relaxed);
         self.writer_wait_ns.store(0, Ordering::Relaxed);
         self.peak_stream_buf.store(0, Ordering::Relaxed);
+        self.hints_posted.store(0, Ordering::Relaxed);
+        self.hint_hits.store(0, Ordering::Relaxed);
+        self.hint_wastes.store(0, Ordering::Relaxed);
     }
 }
 
@@ -273,6 +302,21 @@ pub struct PipelineSnapshot {
     pub reader_wait_ns: u64,
     pub writer_wait_ns: u64,
     pub peak_stream_buf: u64,
+    pub hints_posted: u64,
+    pub hint_hits: u64,
+    pub hint_wastes: u64,
+}
+
+impl PipelineSnapshot {
+    /// Fraction of posted prefetch hints a scan actually adopted
+    /// (0.0 when none were posted).
+    pub fn hint_hit_rate(&self) -> f64 {
+        if self.hints_posted == 0 {
+            0.0
+        } else {
+            self.hint_hits as f64 / self.hints_posted as f64
+        }
+    }
 }
 
 impl std::ops::Add for PipelineSnapshot {
@@ -287,6 +331,9 @@ impl std::ops::Add for PipelineSnapshot {
             reader_wait_ns: self.reader_wait_ns + o.reader_wait_ns,
             writer_wait_ns: self.writer_wait_ns + o.writer_wait_ns,
             peak_stream_buf: self.peak_stream_buf.max(o.peak_stream_buf),
+            hints_posted: self.hints_posted + o.hints_posted,
+            hint_hits: self.hint_hits + o.hint_hits,
+            hint_wastes: self.hint_wastes + o.hint_wastes,
         }
     }
 }
@@ -309,6 +356,13 @@ pub struct CheckpointStats {
     bytes_linked: AtomicU64,
     /// Payload bytes moved by streaming copy.
     bytes_copied: AtomicU64,
+    /// Hardlinked files whose digest was **reused** from the prior
+    /// manifest because their (inode, length) pair was unchanged — the
+    /// differential-checkpoint fast path: a metadata stat instead of a
+    /// full re-read.
+    files_reused: AtomicU64,
+    /// Payload bytes those reuses did *not* have to re-read.
+    bytes_reused: AtomicU64,
     /// Wall nanoseconds spent inside `save` calls.
     save_ns: AtomicU64,
     /// Wall nanoseconds spent inside `restore` calls.
@@ -344,6 +398,13 @@ impl CheckpointStats {
         self.bytes_copied.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Charge one hardlinked file whose digest was reused from the prior
+    /// manifest (no re-read).
+    pub fn add_digest_reuse(&self, bytes: u64) {
+        self.files_reused.fetch_add(1, Ordering::Relaxed);
+        self.bytes_reused.fetch_add(bytes, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> CheckpointSnapshot {
         CheckpointSnapshot {
             saves: self.saves.load(Ordering::Relaxed),
@@ -352,6 +413,8 @@ impl CheckpointStats {
             files_copied: self.files_copied.load(Ordering::Relaxed),
             bytes_linked: self.bytes_linked.load(Ordering::Relaxed),
             bytes_copied: self.bytes_copied.load(Ordering::Relaxed),
+            files_reused: self.files_reused.load(Ordering::Relaxed),
+            bytes_reused: self.bytes_reused.load(Ordering::Relaxed),
             save_ns: self.save_ns.load(Ordering::Relaxed),
             restore_ns: self.restore_ns.load(Ordering::Relaxed),
         }
@@ -364,6 +427,8 @@ impl CheckpointStats {
         self.files_copied.store(0, Ordering::Relaxed);
         self.bytes_linked.store(0, Ordering::Relaxed);
         self.bytes_copied.store(0, Ordering::Relaxed);
+        self.files_reused.store(0, Ordering::Relaxed);
+        self.bytes_reused.store(0, Ordering::Relaxed);
         self.save_ns.store(0, Ordering::Relaxed);
         self.restore_ns.store(0, Ordering::Relaxed);
     }
@@ -378,6 +443,8 @@ pub struct CheckpointSnapshot {
     pub files_copied: u64,
     pub bytes_linked: u64,
     pub bytes_copied: u64,
+    pub files_reused: u64,
+    pub bytes_reused: u64,
     pub save_ns: u64,
     pub restore_ns: u64,
 }
@@ -396,7 +463,7 @@ impl CheckpointSnapshot {
     /// Human-readable one-line summary.
     pub fn report(&self) -> String {
         format!(
-            "checkpoints: {} saved ({:.1} ms), {} restored ({:.1} ms), {} files hardlinked ({}), {} copied ({})",
+            "checkpoints: {} saved ({:.1} ms), {} restored ({:.1} ms), {} files hardlinked ({}), {} copied ({}), {} digests reused ({})",
             self.saves,
             self.save_ns as f64 / 1e6,
             self.restores,
@@ -405,6 +472,8 @@ impl CheckpointSnapshot {
             fmt_bytes(self.bytes_linked),
             self.files_copied,
             fmt_bytes(self.bytes_copied),
+            self.files_reused,
+            fmt_bytes(self.bytes_reused),
         )
     }
 }
@@ -434,6 +503,15 @@ pub struct PoolStats {
     /// destination log pushed the task's total capture RAM over
     /// `capture_spill_threshold`, flushing the largest log to scratch.
     cap_budget_spills: AtomicU64,
+    /// Tasks executed by their owning node's home worker (locality hits).
+    locality_hits: AtomicU64,
+    /// Tasks executed by any other worker — explicit steals under
+    /// `StealPolicy::Bounded`, off-home cursor grabs under `Greedy`,
+    /// always 0 under `Off`. `locality_hits + steals == total tasks`.
+    steals: AtomicU64,
+    /// Peak initial work-queue depth per node across collectives (queues
+    /// only drain, so each collective's initial depth is its peak).
+    node_depth: Mutex<Vec<u64>>,
 }
 
 impl PoolStats {
@@ -447,6 +525,9 @@ impl PoolStats {
             cap_files: AtomicU64::new(0),
             cap_peak_task_ram: AtomicU64::new(0),
             cap_budget_spills: AtomicU64::new(0),
+            locality_hits: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            node_depth: Mutex::new(Vec::new()),
         }
     }
 
@@ -527,6 +608,55 @@ impl PoolStats {
         self.cap_budget_spills.load(Ordering::Relaxed)
     }
 
+    /// Charge one dequeued task against the locality counters: `local`
+    /// when it ran on its owning node's home worker.
+    pub fn add_locality(&self, local: bool) {
+        if local {
+            self.locality_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Tasks executed by their owning node's home worker.
+    pub fn locality_hits(&self) -> u64 {
+        self.locality_hits.load(Ordering::Relaxed)
+    }
+
+    /// Tasks executed off their home worker (steals / cursor grabs).
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of tasks that ran on their home worker (1.0 when no
+    /// tasks have run — trivially local).
+    pub fn locality_rate(&self) -> f64 {
+        let hits = self.locality_hits();
+        let total = hits + self.steals();
+        if total == 0 {
+            1.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Fold one collective's initial per-node queue depths into the
+    /// per-node peaks (called once per pool fan-out).
+    pub fn note_queue_depths(&self, depths: &[u64]) {
+        let mut g = self.node_depth.lock().unwrap();
+        if g.len() < depths.len() {
+            g.resize(depths.len(), 0);
+        }
+        for (peak, &d) in g.iter_mut().zip(depths) {
+            *peak = (*peak).max(d);
+        }
+    }
+
+    /// Peak initial work-queue depth seen per node.
+    pub fn per_node_queue_depth(&self) -> Vec<u64> {
+        self.node_depth.lock().unwrap().clone()
+    }
+
     /// Zero all counters (bench harness support).
     pub fn reset(&self) {
         for t in &self.tasks {
@@ -540,6 +670,9 @@ impl PoolStats {
         self.cap_files.store(0, Ordering::Relaxed);
         self.cap_peak_task_ram.store(0, Ordering::Relaxed);
         self.cap_budget_spills.store(0, Ordering::Relaxed);
+        self.locality_hits.store(0, Ordering::Relaxed);
+        self.steals.store(0, Ordering::Relaxed);
+        self.node_depth.lock().unwrap().clear();
     }
 
     /// Human-readable multi-line report (one row per worker slot).
@@ -551,6 +684,13 @@ impl PoolStats {
                 busy.as_secs_f64() * 1e3
             ));
         }
+        s.push_str(&format!(
+            "  locality: {} home tasks, {} steals ({:.0}% local), peak node queue depths {:?}\n",
+            self.locality_hits(),
+            self.steals(),
+            self.locality_rate() * 100.0,
+            self.per_node_queue_depth(),
+        ));
         s.push_str(&format!(
             "  capture: {} captured, {} spilled, {} scratch files, peak task ram {}, {} budget-forced spills\n",
             fmt_bytes(self.capture_bytes()),
@@ -683,6 +823,60 @@ mod tests {
         assert_eq!(p.capture_bytes(), 0);
         assert_eq!(p.capture_peak_task_ram(), 0);
         assert_eq!(p.capture_budget_spills(), 0);
+    }
+
+    #[test]
+    fn pool_locality_counters() {
+        let p = PoolStats::new(2);
+        p.add_locality(true);
+        p.add_locality(true);
+        p.add_locality(false);
+        assert_eq!(p.locality_hits(), 2);
+        assert_eq!(p.steals(), 1);
+        assert!((p.locality_rate() - 2.0 / 3.0).abs() < 1e-9);
+        p.note_queue_depths(&[3, 1]);
+        p.note_queue_depths(&[2, 4, 5]); // grows, folds max per node
+        assert_eq!(p.per_node_queue_depth(), vec![3, 4, 5]);
+        assert!(p.report().contains("locality:"), "{}", p.report());
+        p.reset();
+        assert_eq!(p.steals(), 0);
+        assert_eq!(p.locality_hits(), 0);
+        assert_eq!(p.locality_rate(), 1.0, "no tasks is trivially local");
+        assert!(p.per_node_queue_depth().is_empty());
+    }
+
+    #[test]
+    fn pipeline_hint_counters() {
+        let s = PipelineStats::new();
+        s.add_hint_posted();
+        s.add_hint_posted();
+        s.add_hint_posted();
+        s.add_hint_hit();
+        s.add_hint_wastes(2);
+        let snap = s.snapshot();
+        assert_eq!(snap.hints_posted, 3);
+        assert_eq!(snap.hint_hits, 1);
+        assert_eq!(snap.hint_wastes, 2);
+        assert!((snap.hint_hit_rate() - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(PipelineSnapshot::default().hint_hit_rate(), 0.0);
+        let sum = snap + snap;
+        assert_eq!(sum.hints_posted, 6);
+        assert_eq!(sum.hint_hits, 2);
+        s.reset();
+        assert_eq!(s.snapshot().hints_posted, 0);
+    }
+
+    #[test]
+    fn checkpoint_digest_reuse_counters() {
+        let s = CheckpointStats::new();
+        s.add_digest_reuse(128);
+        s.add_digest_reuse(64);
+        let snap = s.snapshot();
+        assert_eq!(snap.files_reused, 2);
+        assert_eq!(snap.bytes_reused, 192);
+        assert!(snap.report().contains("digests reused"), "{}", snap.report());
+        s.reset();
+        assert_eq!(s.snapshot().files_reused, 0);
     }
 
     #[test]

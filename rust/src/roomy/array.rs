@@ -422,15 +422,19 @@ impl<T: Element> RoomyArray<T> {
         merge: impl Fn(R, R) -> R,
     ) -> Result<R> {
         let inner = &self.inner;
-        let partials: Vec<R> = inner.ctx.cluster.run_buckets("ra.reduce", |b, disk| {
-            let mut local = Some(identity());
-            inner.scan_bucket(b, disk, |idx, elt| {
-                let cur = local.take().expect("reduce accumulator");
-                local = Some(fold(cur, idx, &T::read_from(elt)));
-                Ok(())
-            })?;
-            Ok(local.take().expect("reduce accumulator"))
-        })?;
+        let partials: Vec<R> = inner.ctx.cluster.run_buckets_hinted(
+            "ra.reduce",
+            |b| Some(inner.bucket_file(b)),
+            |b, disk| {
+                let mut local = Some(identity());
+                inner.scan_bucket(b, disk, |idx, elt| {
+                    let cur = local.take().expect("reduce accumulator");
+                    local = Some(fold(cur, idx, &T::read_from(elt)));
+                    Ok(())
+                })?;
+                Ok(local.take().expect("reduce accumulator"))
+            },
+        )?;
         let mut it = partials.into_iter();
         let first = it.next().expect("at least one bucket");
         Ok(it.fold(first, merge))
@@ -476,6 +480,12 @@ impl RoomyArray<i64> {
     /// accelerated constructs).
     pub(crate) fn cluster(&self) -> &Arc<crate::cluster::Cluster> {
         &self.inner.ctx.cluster
+    }
+
+    /// Relative path of bucket `b`'s file (prefetch hints from the
+    /// accelerated constructs).
+    pub(crate) fn bucket_rel(&self, b: u32) -> String {
+        self.inner.bucket_file(b)
     }
 
     /// Read bucket `b` and decode its elements.
@@ -545,13 +555,19 @@ impl<T: Element> ArrayInner<T> {
         }
     }
 
-    /// Run `f(self, bucket, disk)` for every bucket on the worker pool.
+    /// Run `f(self, bucket, disk)` for every bucket on the worker pool,
+    /// hinting each bucket's file for cross-task prefetch (sync, map and
+    /// rewrite all start by streaming it).
     fn for_owned_buckets(
         &self,
         phase: &str,
         f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
-        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
+        self.ctx.cluster.run_buckets_hinted(
+            phase,
+            |b| Some(self.bucket_file(b)),
+            |b, disk| f(self, b, disk),
+        )?;
         Ok(())
     }
 

@@ -466,12 +466,18 @@ impl BitInner {
         })
     }
 
+    /// Run `f(self, bucket, disk)` for every bucket on the worker pool,
+    /// hinting each bucket's file for cross-task prefetch.
     fn for_owned_buckets(
         &self,
         phase: &str,
         f: impl Fn(&Self, u32, &std::sync::Arc<crate::storage::NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
-        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
+        self.ctx.cluster.run_buckets_hinted(
+            phase,
+            |b| Some(self.bucket_file(b)),
+            |b, disk| f(self, b, disk),
+        )?;
         Ok(())
     }
 }

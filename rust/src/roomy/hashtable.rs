@@ -20,7 +20,6 @@ use super::funcs::{AccessId, FuncRegistry, PredId, UpdateId};
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
-use crate::hashfn;
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
 
@@ -208,10 +207,7 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
             let koff = rec.len();
             rec.resize(koff + K::SIZE, 0);
             key.write_to(&mut rec[koff..]);
-            let bucket = hashfn::bucket_of_bytes(
-                &rec[koff..koff + K::SIZE],
-                self.inner.ctx.cluster.nbuckets(),
-            );
+            let bucket = self.inner.bucket_of_key(&rec[koff..koff + K::SIZE]);
             payload(rec);
             self.inner.staged.stage(bucket, rec)
         })
@@ -256,10 +252,11 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
         if inner.staged.is_empty() {
             return Ok(());
         }
-        let deltas: Vec<i64> = inner
-            .ctx
-            .cluster
-            .run_buckets("rht.sync", |b, disk| inner.sync_bucket(b, disk))?;
+        let deltas: Vec<i64> = inner.ctx.cluster.run_buckets_hinted(
+            "rht.sync",
+            |b| Some(inner.bucket_file(b)),
+            |b, disk| inner.sync_bucket(b, disk),
+        )?;
         inner
             .size
             .fetch_add(deltas.iter().sum::<i64>(), std::sync::atomic::Ordering::Relaxed);
@@ -290,19 +287,23 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
         merge: impl Fn(R, R) -> R,
     ) -> Result<R> {
         let inner = &self.inner;
-        let partials: Vec<R> = inner.ctx.cluster.run_buckets("rht.reduce", |b, disk| {
-            let mut local = Some(identity());
-            inner.scan_bucket(b, disk, |kv| {
-                let cur = local.take().expect("reduce accumulator");
-                local = Some(fold(
-                    cur,
-                    &K::read_from(&kv[..K::SIZE]),
-                    &V::read_from(&kv[K::SIZE..]),
-                ));
-                Ok(())
-            })?;
-            Ok(local.take().expect("reduce accumulator"))
-        })?;
+        let partials: Vec<R> = inner.ctx.cluster.run_buckets_hinted(
+            "rht.reduce",
+            |b| Some(inner.bucket_file(b)),
+            |b, disk| {
+                let mut local = Some(identity());
+                inner.scan_bucket(b, disk, |kv| {
+                    let cur = local.take().expect("reduce accumulator");
+                    local = Some(fold(
+                        cur,
+                        &K::read_from(&kv[..K::SIZE]),
+                        &V::read_from(&kv[K::SIZE..]),
+                    ));
+                    Ok(())
+                })?;
+                Ok(local.take().expect("reduce accumulator"))
+            },
+        )?;
         let mut it = partials.into_iter();
         let first = it.next().expect("at least one bucket");
         Ok(it.fold(first, merge))
@@ -361,7 +362,7 @@ impl<K: Element, V: Element> HtInner<K, V> {
     }
 
     fn bucket_of_key(&self, key_bytes: &[u8]) -> u32 {
-        hashfn::bucket_of_bytes(key_bytes, self.ctx.cluster.nbuckets())
+        self.ctx.cluster.topology().route(key_bytes)
     }
 
     fn bucket_file(&self, b: u32) -> String {
@@ -380,12 +381,18 @@ impl<K: Element, V: Element> HtInner<K, V> {
             })
     }
 
+    /// Run `f(self, bucket, disk)` for every bucket on the worker pool,
+    /// hinting each bucket's file for cross-task prefetch.
     fn for_owned_buckets(
         &self,
         phase: &str,
         f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
-        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
+        self.ctx.cluster.run_buckets_hinted(
+            phase,
+            |b| Some(self.bucket_file(b)),
+            |b, disk| f(self, b, disk),
+        )?;
         Ok(())
     }
 

@@ -23,7 +23,6 @@ use super::funcs::{FuncRegistry, PredId};
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
-use crate::hashfn;
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
 use crate::storage::extsort;
@@ -183,7 +182,10 @@ impl<T: Element> RoomyList<T> {
             ));
         }
         let _write = inner.write_lock.write().unwrap();
-        let added: Vec<i64> = inner.ctx.cluster.run_buckets("rl.add_all", |b, disk| {
+        let added: Vec<i64> = inner.ctx.cluster.run_buckets_hinted(
+            "rl.add_all",
+            |b| Some(other.inner.shard_file(b)),
+            |b, disk| {
             let src = other.inner.shard_file(b);
             if !disk.exists(&src) {
                 return Ok(0i64);
@@ -205,7 +207,8 @@ impl<T: Element> RoomyList<T> {
             }
             w_.finish()?;
             Ok(n)
-        })?;
+            },
+        )?;
         inner.size.fetch_add(added.iter().sum::<i64>(), Ordering::Relaxed);
         inner.sorted.store(false, Ordering::Relaxed);
         Ok(())
@@ -223,7 +226,12 @@ impl<T: Element> RoomyList<T> {
         let _write = inner.write_lock.write().unwrap();
         let ram_budget = inner.ctx.cfg.ram_budget_bytes;
         let sort_chunk = inner.ctx.cfg.sort_chunk_bytes;
-        let removed: Vec<i64> = inner.ctx.cluster.run_buckets("rl.remove_all", |b, disk| {
+        // hint the *other* list's shard: it is streamed first (into the
+        // filter set or the sort), before our own shard is touched
+        let removed: Vec<i64> = inner.ctx.cluster.run_buckets_hinted(
+            "rl.remove_all",
+            |b| Some(other.inner.shard_file(b)),
+            |b, disk| {
             let mine = inner.shard_file(b);
             let theirs = other.inner.shard_file(b);
             if !disk.exists(&mine) || !disk.exists(&theirs) {
@@ -232,16 +240,22 @@ impl<T: Element> RoomyList<T> {
             let their_bytes = disk.len(&theirs) as usize;
             let npreds = inner.funcs.npreds();
             if their_bytes <= ram_budget {
-                // Hash-set filter: stream `other`'s shard into RAM,
+                // Hash-set filter: stream `other`'s shard into RAM
+                // (read-ahead; adopts the task's prefetch hint),
                 // stream-rewrite ours.
                 let mut del: HashSet<Vec<u8>> = HashSet::new();
-                crate::storage::chunkfile::for_each_record(
-                    disk, &theirs, T::SIZE, SCAN_BATCH,
-                    |rec| {
+                let mut r = PrefetchReader::open(disk, &theirs, T::SIZE)?;
+                let mut buf = Vec::new();
+                loop {
+                    let got = r.read_batch(&mut buf, SCAN_BATCH)?;
+                    if got == 0 {
+                        break;
+                    }
+                    for rec in buf.chunks_exact(T::SIZE) {
                         del.insert(rec.to_vec());
-                        Ok(())
-                    },
-                )?;
+                    }
+                }
+                drop(r);
                 inner.filter_shard(b, disk, |rec| !del.contains(rec))
             } else {
                 // Space-limited path: sort both shards, sorted-merge
@@ -264,7 +278,8 @@ impl<T: Element> RoomyList<T> {
                 }
                 Ok(before as i64 - after as i64)
             }
-        })?;
+            },
+        )?;
         inner.size.fetch_add(-removed.iter().sum::<i64>(), Ordering::Relaxed);
         Ok(())
     }
@@ -276,7 +291,10 @@ impl<T: Element> RoomyList<T> {
         let _write = inner.write_lock.write().unwrap();
         let sort_chunk = inner.ctx.cfg.sort_chunk_bytes;
         let npreds = inner.funcs.npreds();
-        let removed: Vec<i64> = inner.ctx.cluster.run_buckets("rl.remove_dupes", |b, disk| {
+        let removed: Vec<i64> = inner.ctx.cluster.run_buckets_hinted(
+            "rl.remove_dupes",
+            |b| Some(inner.shard_file(b)),
+            |b, disk| {
             let file = inner.shard_file(b);
             if !disk.exists(&file) {
                 return Ok(0i64);
@@ -290,7 +308,8 @@ impl<T: Element> RoomyList<T> {
                 inner.charge_shard(b, disk, 1)?;
             }
             Ok(before as i64 - after as i64)
-        })?;
+            },
+        )?;
         inner.size.fetch_add(-removed.iter().sum::<i64>(), Ordering::Relaxed);
         inner.sorted.store(true, Ordering::Relaxed);
         Ok(())
@@ -354,15 +373,19 @@ impl<T: Element> RoomyList<T> {
     ) -> Result<R> {
         let inner = &self.inner;
         let _read = inner.write_lock.read().unwrap();
-        let partials: Vec<R> = inner.ctx.cluster.run_buckets("rl.reduce", |b, disk| {
-            let mut local = Some(identity());
-            inner.scan_shard(b, disk, |rec| {
-                let cur = local.take().expect("reduce accumulator");
-                local = Some(fold(cur, &T::read_from(rec)));
-                Ok(())
-            })?;
-            Ok(local.take().expect("reduce accumulator"))
-        })?;
+        let partials: Vec<R> = inner.ctx.cluster.run_buckets_hinted(
+            "rl.reduce",
+            |b| Some(inner.shard_file(b)),
+            |b, disk| {
+                let mut local = Some(identity());
+                inner.scan_shard(b, disk, |rec| {
+                    let cur = local.take().expect("reduce accumulator");
+                    local = Some(fold(cur, &T::read_from(rec)));
+                    Ok(())
+                })?;
+                Ok(local.take().expect("reduce accumulator"))
+            },
+        )?;
         let mut it = partials.into_iter();
         let first = it.next().expect("at least one shard");
         Ok(it.fold(first, merge))
@@ -438,20 +461,27 @@ impl<T: Element> Checkpointable for RoomyList<T> {
 
 impl<T: Element> ListInner<T> {
     fn shard_of(&self, elt_bytes: &[u8]) -> u32 {
-        hashfn::bucket_of_bytes(elt_bytes, self.ctx.cluster.nbuckets())
+        self.ctx.cluster.topology().route(elt_bytes)
     }
 
     fn shard_file(&self, b: u32) -> String {
         format!("{}/s{b}.dat", self.dir)
     }
 
+    /// Scan-type collectives announce the shard file each task will
+    /// stream, so the pool's per-node schedulers can prefetch the next
+    /// shard's first chunk while the current one computes.
     fn for_owned_shards(
         &self,
         phase: &str,
         f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
         let _read = self.write_lock.read().unwrap();
-        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
+        self.ctx.cluster.run_buckets_hinted(
+            phase,
+            |b| Some(self.shard_file(b)),
+            |b, disk| f(self, b, disk),
+        )?;
         Ok(())
     }
 

@@ -260,11 +260,19 @@ impl Roomy {
             pipe.reader_wait_ns as f64 / 1e6,
             pipe.writer_wait_ns as f64 / 1e6,
         ));
+        s.push_str(&format!(
+            "prefetch hints: {} posted, {} hits ({:.0}%), {} wasted\n",
+            pipe.hints_posted,
+            pipe.hint_hits,
+            pipe.hint_hit_rate() * 100.0,
+            pipe.hint_wastes,
+        ));
         s.push_str("phases:\n");
         s.push_str(&self.ctx.cluster.phases().report());
         s.push_str(&format!(
-            "pool ({} workers):\n",
-            self.ctx.cluster.pool().num_workers()
+            "pool ({} workers, steal={}):\n",
+            self.ctx.cluster.pool().num_workers(),
+            self.ctx.cluster.pool().steal_policy(),
         ));
         s.push_str(&self.ctx.cluster.pool().stats().report());
         s

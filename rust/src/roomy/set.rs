@@ -22,7 +22,6 @@ use super::element::Element;
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
-use crate::hashfn;
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
@@ -124,10 +123,7 @@ impl<T: Element> RoomySet<T> {
             let off = rec.len();
             rec.resize(off + T::SIZE, 0);
             elt.write_to(&mut rec[off..]);
-            let shard = hashfn::bucket_of_bytes(
-                &rec[off..off + T::SIZE],
-                self.inner.ctx.cluster.nbuckets(),
-            );
+            let shard = self.inner.ctx.cluster.topology().route(&rec[off..off + T::SIZE]);
             self.inner.staged.stage(shard, rec)
         })
     }
@@ -141,10 +137,11 @@ impl<T: Element> RoomySet<T> {
         if inner.staged.is_empty() {
             return Ok(());
         }
-        let deltas: Vec<i64> = inner
-            .ctx
-            .cluster
-            .run_buckets("rset.sync", |b, disk| inner.sync_shard(b, disk))?;
+        let deltas: Vec<i64> = inner.ctx.cluster.run_buckets_hinted(
+            "rset.sync",
+            |b| Some(inner.shard_file(b)),
+            |b, disk| inner.sync_shard(b, disk),
+        )?;
         inner.size.fetch_add(deltas.iter().sum::<i64>(), Ordering::Relaxed);
         Ok(())
     }
@@ -153,7 +150,7 @@ impl<T: Element> RoomySet<T> {
     pub fn contains(&self, elt: &T) -> Result<bool> {
         let inner = &self.inner;
         let eb = elt.to_bytes();
-        let b = hashfn::bucket_of_bytes(&eb, inner.ctx.cluster.nbuckets());
+        let b = inner.ctx.cluster.topology().route(&eb);
         let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
         let mut found = false;
         inner.scan_shard(b, disk, |rec| {
@@ -186,15 +183,19 @@ impl<T: Element> RoomySet<T> {
         merge: impl Fn(R, R) -> R,
     ) -> Result<R> {
         let inner = &self.inner;
-        let partials: Vec<R> = inner.ctx.cluster.run_buckets("rset.reduce", |b, disk| {
-            let mut local = Some(identity());
-            inner.scan_shard(b, disk, |rec| {
-                let cur = local.take().expect("reduce accumulator");
-                local = Some(fold(cur, &T::read_from(rec)));
-                Ok(())
-            })?;
-            Ok(local.take().expect("reduce accumulator"))
-        })?;
+        let partials: Vec<R> = inner.ctx.cluster.run_buckets_hinted(
+            "rset.reduce",
+            |b| Some(inner.shard_file(b)),
+            |b, disk| {
+                let mut local = Some(identity());
+                inner.scan_shard(b, disk, |rec| {
+                    let cur = local.take().expect("reduce accumulator");
+                    local = Some(fold(cur, &T::read_from(rec)));
+                    Ok(())
+                })?;
+                Ok(local.take().expect("reduce accumulator"))
+            },
+        )?;
         let mut it = partials.into_iter();
         let first = it.next().expect("at least one shard");
         Ok(it.fold(first, merge))
@@ -211,6 +212,8 @@ impl<T: Element> RoomySet<T> {
             ));
         }
         let _write = inner.write_lock.lock().unwrap();
+        // no prefetch hint: the merge halves its chunk size per side
+        // (PIPE_CHUNK / 2), which a full-chunk warm cannot serve
         let deltas: Vec<i64> = inner.ctx.cluster.run_buckets("rset.merge", |b, disk| {
             inner.merge_shard(b, disk, &other.inner.shard_file(b), op)
         })?;
@@ -284,12 +287,18 @@ impl<T: Element> SetInner<T> {
         format!("{}/s{b}.dat", self.dir)
     }
 
+    /// Run `f(self, shard, disk)` for every shard on the worker pool,
+    /// hinting each shard's file for cross-task prefetch.
     fn for_owned_shards(
         &self,
         phase: &str,
         f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
-        self.ctx.cluster.run_buckets(phase, |b, disk| f(self, b, disk))?;
+        self.ctx.cluster.run_buckets_hinted(
+            phase,
+            |b| Some(self.shard_file(b)),
+            |b, disk| f(self, b, disk),
+        )?;
         Ok(())
     }
 

@@ -7,15 +7,25 @@
 //! merge, BFS level expansion — decomposes into **independent per-bucket
 //! tasks**: bucket `b`'s payload, op log and scratch files all live on one
 //! node disk and are touched by no other bucket's task. The [`pool`]
-//! module exploits that: a [`pool::WorkerPool`] of
+//! module exploits that with a **locality-aware** scheduler: a
+//! [`pool::WorkerPool`] of
 //! [`RoomyConfig::num_workers`](crate::RoomyConfig::num_workers) scoped
-//! worker threads drains the bucket-task queue of each collective
-//! (dynamic work-stealing via an atomic cursor), so disk streaming and
-//! user-function CPU overlap across buckets instead of serializing per
-//! node.
+//! worker threads drains **one work queue per node** (tasks tagged by the
+//! shared [`Topology`](crate::cluster::Topology); worker slot
+//! `n % num_workers` homes node `n`), so each worker streams its own
+//! node's disk — computation follows the data, the paper's premise. What
+//! an idle worker does is
+//! [`RoomyConfig::steal_policy`](crate::RoomyConfig::steal_policy):
+//! nothing (`off`, strict locality), one LIFO steal at a time from the
+//! most-loaded queue (`bounded`, the default), or flat-cursor greed
+//! (`greedy`, the pre-locality baseline). On dequeue the pool posts a
+//! **cross-task prefetch hint** for the next bucket queued on the same
+//! node, warming that bucket's file through the node's read-ahead lane
+//! ([`crate::storage::pipeline`]) while the current bucket computes.
 //!
-//! Three rules make the parallel schedule **observably identical** to the
-//! serial one (`num_workers = 1`), byte-for-byte on disk:
+//! Three rules make every parallel schedule **observably identical** to
+//! the serial one (`num_workers = 1`, any steal policy), byte-for-byte on
+//! disk:
 //!
 //! 1. *Bucket isolation* — a task only reads/writes files of its own
 //!    bucket, so file contents depend on the task, not the schedule.
@@ -36,11 +46,13 @@
 //!    [`crate::roomy::ops::StagedOps`] and the capture machinery in
 //!    [`pool`].
 //!
-//! The pool is the seam all later scaling work hangs off: async I/O slots
-//! under a task, multi-node sharding replaces the task queue with a
-//! per-node queue, and the per-worker counters in
-//! [`crate::metrics::PoolStats`] already expose the load-balance skew
-//! those changes must preserve.
+//! The pool is the seam all later scaling work hangs off. The per-node
+//! queues are the topology real multi-node sharding ships on: `off`
+//! already models "a worker may only touch its own node's disk", and the
+//! locality / steal / queue-depth counters in
+//! [`crate::metrics::PoolStats`] (plus the prefetch-hint hit/waste
+//! counters in [`crate::metrics::PipelineStats`]) expose exactly the
+//! load-balance behavior a cross-machine scheduler must preserve.
 //!
 //! # PJRT engine
 //!

@@ -1,10 +1,34 @@
-//! Worker-pool execution engine for Roomy collectives.
+//! Worker-pool execution engine for Roomy collectives — locality-aware:
+//! per-node work queues, bounded stealing, cross-task prefetch hints.
 //!
 //! A [`WorkerPool`] fans a set of **independent bucket tasks** out to
-//! `num_workers` scoped worker threads. Workers claim tasks dynamically
-//! (an atomic cursor — cheap work stealing, so a skewed bucket does not
-//! stall the others), and three mechanisms keep the result *observably
-//! identical* to a serial run regardless of worker count or schedule:
+//! `num_workers` scoped worker threads. Tasks are tagged with their
+//! owning node by the shared [`Topology`] and land on **one FIFO queue
+//! per node**; worker slots are bound to home nodes (node `n` is homed
+//! by slot `n % nthreads`, so every node has exactly one home worker).
+//! A worker drains its home queues first — computation follows the data
+//! on its own node's disk, the premise of the paper — and what an *idle*
+//! worker does next is the [`StealPolicy`]:
+//!
+//! - `Off` — strict locality: the worker stops; a skewed node serializes
+//!   behind its home worker but no worker ever touches another node's
+//!   data (the multi-node sharding contract).
+//! - `Bounded` (default) — steal **one task at a time** from the LIFO
+//!   end of the most-loaded node queue, leaving the victim's FIFO front
+//!   to its home worker.
+//! - `Greedy` — the pre-locality flat cursor: any worker takes the
+//!   globally lowest-index remaining task (bench baseline).
+//!
+//! When a worker dequeues a task, the pool posts a **cross-task prefetch
+//! hint** for the next task still queued on the same node (each task
+//! hinted at most once): the caller-supplied hint closure typically
+//! warms that bucket's file through the node's read-ahead lane
+//! ([`crate::storage::pipeline`]), so the next scan starts with its
+//! first chunk already staged.
+//!
+//! Scheduling only moves *where and when* a task runs — three mechanisms
+//! keep the result *observably identical* to a serial run regardless of
+//! worker count, steal policy or schedule:
 //!
 //! 1. results are returned **indexed by task** (ascending bucket order),
 //!    never in completion order;
@@ -50,11 +74,14 @@
 //! [`crate::metrics::PoolStats`].
 
 use std::cell::RefCell;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::cluster::Topology;
+use crate::config::StealPolicy;
 use crate::error::{Result, RoomyError};
 use crate::metrics::PoolStats;
 use crate::roomy::ops::StagedOps;
@@ -275,6 +302,139 @@ struct Done<R> {
     capture: OpCapture,
 }
 
+/// One dequeued task: its index, whether it came off the worker's own
+/// home queue, and the next task still queued on the same node (the
+/// prefetch-hint candidate).
+struct Take {
+    task: usize,
+    local: bool,
+    next_on_node: Option<usize>,
+}
+
+/// Where one collective's tasks are drawn from.
+enum SourceKind {
+    /// `Greedy`: the flat global cursor of the pre-locality engine —
+    /// every worker takes the lowest-index remaining task.
+    Cursor { cursor: AtomicUsize, ntasks: usize },
+    /// `Off` / `Bounded`: one FIFO queue per node, tasks ascending.
+    /// `lens` mirrors the queue sizes so victim selection does not lock
+    /// every queue; each is decremented under its queue's lock, so a
+    /// zero read without the lock is authoritative once all pops drain.
+    Queues {
+        queues: Vec<Mutex<VecDeque<usize>>>,
+        lens: Vec<AtomicUsize>,
+        steal: bool,
+    },
+}
+
+/// Per-collective task source: the schedule lives here, the determinism
+/// lives in the merge (results by task index, capture replay in (task,
+/// issue) order) — so this type may hand tasks out in any order it
+/// likes.
+struct TaskSource {
+    kind: SourceKind,
+    /// Tasks initially queued per node — each queue's peak depth, since
+    /// queues only drain (reported to [`PoolStats`]).
+    depths: Vec<u64>,
+}
+
+impl TaskSource {
+    fn build(ntasks: usize, topo: &Topology, policy: StealPolicy) -> TaskSource {
+        let nodes = topo.nodes();
+        let mut depths = vec![0u64; nodes];
+        for t in 0..ntasks {
+            depths[topo.owner(t as u32)] += 1;
+        }
+        let kind = match policy {
+            StealPolicy::Greedy => {
+                SourceKind::Cursor { cursor: AtomicUsize::new(0), ntasks }
+            }
+            _ => {
+                let mut qs: Vec<VecDeque<usize>> =
+                    (0..nodes).map(|n| VecDeque::with_capacity(depths[n] as usize)).collect();
+                for t in 0..ntasks {
+                    qs[topo.owner(t as u32)].push_back(t);
+                }
+                SourceKind::Queues {
+                    queues: qs.into_iter().map(Mutex::new).collect(),
+                    lens: depths.iter().map(|&d| AtomicUsize::new(d as usize)).collect(),
+                    steal: policy == StealPolicy::Bounded,
+                }
+            }
+        };
+        TaskSource { kind, depths }
+    }
+
+    /// Next task for worker `wid`, or `None` when this worker is done:
+    /// all queues empty, or (under `Off`) its home queues empty.
+    fn next(
+        &self,
+        wid: usize,
+        nthreads: usize,
+        homes: &[usize],
+        home_cursor: &mut usize,
+        topo: &Topology,
+    ) -> Option<Take> {
+        match &self.kind {
+            SourceKind::Cursor { cursor, ntasks } => {
+                let t = cursor.fetch_add(1, Ordering::Relaxed);
+                if t >= *ntasks {
+                    return None;
+                }
+                Some(Take {
+                    task: t,
+                    local: topo.home_worker(topo.owner(t as u32), nthreads) == wid,
+                    // no hints: greedy is the faithful pre-locality
+                    // baseline, and the global next task is usually
+                    // dequeued by another worker before a warm could
+                    // land — it would only race its own consumer
+                    next_on_node: None,
+                })
+            }
+            SourceKind::Queues { queues, lens, steal } => {
+                // Home drain: finish the current home node before moving
+                // to the next (one streaming disk at a time), FIFO within
+                // a node so hints always name the next bucket to run.
+                for k in 0..homes.len() {
+                    let n = homes[(*home_cursor + k) % homes.len()];
+                    if lens[n].load(Ordering::Relaxed) == 0 {
+                        continue;
+                    }
+                    let mut q = queues[n].lock().expect("node queue poisoned");
+                    if let Some(t) = q.pop_front() {
+                        lens[n].fetch_sub(1, Ordering::Relaxed);
+                        let next_on_node = q.front().copied();
+                        drop(q);
+                        *home_cursor = (*home_cursor + k) % homes.len();
+                        return Some(Take { task: t, local: true, next_on_node });
+                    }
+                }
+                if !*steal {
+                    return None; // strict locality: idle when home is dry
+                }
+                // Bounded steal: one task from the LIFO end of the most
+                // loaded queue (ties → lowest node); rescan on a race.
+                loop {
+                    let victim = lens
+                        .iter()
+                        .enumerate()
+                        .map(|(n, l)| (l.load(Ordering::Relaxed), n))
+                        .filter(|&(len, _)| len > 0)
+                        .max_by_key(|&(len, n)| (len, std::cmp::Reverse(n)))
+                        .map(|(_, n)| n)?;
+                    let mut q = queues[victim].lock().expect("node queue poisoned");
+                    if let Some(t) = q.pop_back() {
+                        lens[victim].fetch_sub(1, Ordering::Relaxed);
+                        let next_on_node = q.front().copied();
+                        drop(q);
+                        return Some(Take { task: t, local: false, next_on_node });
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Spill backing shared by every capture the pool arms: the cluster's
 /// node disks, the capture threshold, and a run counter that keeps the
 /// scratch directories of concurrent collectives on one pool disjoint.
@@ -293,15 +453,33 @@ pub struct WorkerPool {
     workers: usize,
     stats: PoolStats,
     capture: Option<CaptureSpillCfg>,
+    steal: StealPolicy,
 }
 
 impl WorkerPool {
     /// Pool of `workers` threads (clamped to ≥ 1). Until
     /// [`WorkerPool::set_capture_spill`] is called, op capture is RAM-only
-    /// (no disks to spill to).
+    /// (no disks to spill to). Stealing defaults to
+    /// [`StealPolicy::Bounded`]; [`crate::cluster::Cluster::new`] installs
+    /// the configured policy.
     pub fn new(workers: usize) -> WorkerPool {
         let workers = workers.max(1);
-        WorkerPool { workers, stats: PoolStats::new(workers), capture: None }
+        WorkerPool {
+            workers,
+            stats: PoolStats::new(workers),
+            capture: None,
+            steal: StealPolicy::default(),
+        }
+    }
+
+    /// Install the idle-worker scheduling policy (see [`StealPolicy`]).
+    pub fn set_steal_policy(&mut self, policy: StealPolicy) {
+        self.steal = policy;
+    }
+
+    /// The idle-worker scheduling policy in force.
+    pub fn steal_policy(&self) -> StealPolicy {
+        self.steal
     }
 
     /// Back op capture with scratch files on `disks` (task `t` scratches
@@ -335,11 +513,29 @@ impl WorkerPool {
     }
 
     /// Run `job(task)` for every `task` in `0..ntasks` across the pool and
-    /// return the results **in task order**. Delayed ops issued inside
-    /// `job` are captured per task and replayed in (task, destination,
-    /// issue) order after all tasks complete — per destination buffer
-    /// that is the serial byte order; see the module docs for why this
-    /// makes the schedule invisible.
+    /// return the results **in task order**. Tasks are spread over the
+    /// degenerate one-task-per-slot [`Topology`] (task `t` homes on slot
+    /// `t % workers`); no prefetch hints. See [`WorkerPool::run_tagged`].
+    pub fn run_tasks<R, F>(&self, phase: &str, ntasks: usize, job: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(usize) -> Result<R> + Sync,
+    {
+        self.run_tagged(phase, ntasks, Topology::flat(self.workers), |_t| {}, job)
+    }
+
+    /// Run `job(task)` for every `task` in `0..ntasks` across the pool's
+    /// per-node work queues and return the results **in task order**.
+    /// `topo` tags each task with its owning node; worker slots are bound
+    /// to home nodes and idle slots follow the configured
+    /// [`StealPolicy`]. When a task is dequeued, `hint(next)` is invoked
+    /// for the next task still queued on the same node (at most once per
+    /// task) — the cross-task prefetch entry point.
+    ///
+    /// Delayed ops issued inside `job` are captured per task and replayed
+    /// in (task, destination, issue) order after all tasks complete — per
+    /// destination buffer that is the serial byte order; see the module
+    /// docs for why this makes the schedule invisible.
     ///
     /// On failure the error of the lowest-index failing task is returned
     /// (a panic in task `t` beats an `Err` from any task after `t`);
@@ -347,16 +543,28 @@ impl WorkerPool {
     /// state any failed collective leaves on disk — but every task's
     /// capture scratch files are removed, so failure never leaks disk
     /// space under `tmp/capture/`.
-    pub fn run_tasks<R, F>(&self, phase: &str, ntasks: usize, job: F) -> Result<Vec<R>>
+    pub fn run_tagged<R, F, H>(
+        &self,
+        phase: &str,
+        ntasks: usize,
+        topo: Topology,
+        hint: H,
+        job: F,
+    ) -> Result<Vec<R>>
     where
         R: Send,
         F: Fn(usize) -> Result<R> + Sync,
+        H: Fn(usize) + Sync,
     {
         if ntasks == 0 {
             return Ok(Vec::new());
         }
         let nthreads = self.workers.min(ntasks);
-        let cursor = AtomicUsize::new(0);
+        let nodes = topo.nodes();
+        let source = TaskSource::build(ntasks, &topo, self.steal);
+        self.stats.note_queue_depths(&source.depths);
+        // Each task's hint fires at most once, whichever worker peeks it.
+        let hinted: Vec<AtomicBool> = (0..ntasks).map(|_| AtomicBool::new(false)).collect();
         let abort = AtomicBool::new(false);
         let run = self
             .capture
@@ -368,16 +576,32 @@ impl WorkerPool {
             std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..nthreads)
                     .map(|wid| {
-                        let (cursor, abort, job, stats) =
-                            (&cursor, &abort, &job, &self.stats);
+                        let (abort, job, stats) = (&abort, &job, &self.stats);
+                        let (source, hinted, hint, topo) = (&source, &hinted, &hint, &topo);
                         scope.spawn(move || {
+                            // Home nodes of this slot: {n : n % nthreads == wid}.
+                            let homes: Vec<usize> =
+                                (wid..nodes).step_by(nthreads).collect();
+                            let mut home_cursor = 0usize;
                             let mut done: Vec<Done<R>> = Vec::new();
                             let mut panicked: Option<(usize, usize)> = None;
                             while !abort.load(Ordering::Relaxed) {
-                                let t = cursor.fetch_add(1, Ordering::Relaxed);
-                                if t >= ntasks {
+                                let Some(take) = source.next(
+                                    wid,
+                                    nthreads,
+                                    &homes,
+                                    &mut home_cursor,
+                                    topo,
+                                ) else {
                                     break;
+                                };
+                                if let Some(nx) = take.next_on_node {
+                                    if !hinted[nx].swap(true, Ordering::Relaxed) {
+                                        hint(nx);
+                                    }
                                 }
+                                stats.add_locality(take.local);
+                                let t = take.task;
                                 let t0 = Instant::now();
                                 TASK.with(|c| {
                                     *c.borrow_mut() = Some(TaskCtx {
@@ -582,6 +806,122 @@ mod tests {
         assert_eq!(p.stats().total_tasks(), 10);
         p.stats().reset();
         assert_eq!(p.stats().total_tasks(), 0);
+    }
+
+    /// Strict locality: every task must run on its owning node's home
+    /// worker — no worker ever touches another node's tasks.
+    #[test]
+    fn off_policy_is_strictly_local() {
+        let mut p = pool(4);
+        p.set_steal_policy(StealPolicy::Off);
+        let ran = std::sync::Mutex::new(Vec::new());
+        let topo = Topology::new(4, 4); // 16 tasks over 4 nodes
+        p.run_tagged("t", 16, topo, |_| {}, |t| {
+            // jitter so a non-local scheduler would interleave
+            if t % 3 == 0 {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            ran.lock().unwrap().push((t, current_worker().unwrap()));
+            Ok(())
+        })
+        .unwrap();
+        for (t, w) in ran.into_inner().unwrap() {
+            assert_eq!(w, topo.owner(t as u32) % 4, "task {t} ran off its home worker");
+        }
+        assert_eq!(p.stats().steals(), 0);
+        assert_eq!(p.stats().locality_hits(), 16);
+        assert_eq!(p.stats().locality_rate(), 1.0);
+        assert_eq!(p.stats().per_node_queue_depth(), vec![4, 4, 4, 4]);
+    }
+
+    /// Off policy still completes when one worker homes several nodes
+    /// (num_workers < nodes) — every node has exactly one home worker.
+    #[test]
+    fn off_policy_covers_unhomed_nodes() {
+        let mut p = pool(2);
+        p.set_steal_policy(StealPolicy::Off);
+        let out = p
+            .run_tagged("t", 12, Topology::new(5, 3), |_| {}, |t| Ok(t))
+            .unwrap();
+        assert_eq!(out, (0..12).collect::<Vec<_>>());
+        assert_eq!(p.stats().steals(), 0);
+    }
+
+    /// Bounded stealing: when one node's tasks are slow, the other
+    /// workers must drain it instead of idling — and the result is still
+    /// ordered by task index.
+    #[test]
+    fn bounded_steal_drains_a_slow_node() {
+        let mut p = pool(2);
+        p.set_steal_policy(StealPolicy::Bounded);
+        let topo = Topology::new(2, 4); // node 0: even tasks, node 1: odd
+        let out = p
+            .run_tagged("t", 8, topo, |_| {}, |t| {
+                if t % 2 == 0 {
+                    // node 0's tasks are 20ms each; worker 1 finishes its
+                    // four instant tasks and must steal
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Ok(t)
+            })
+            .unwrap();
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+        assert!(p.stats().steals() > 0, "idle worker must have stolen");
+        assert_eq!(p.stats().steals() + p.stats().locality_hits(), 8);
+    }
+
+    /// Greedy ignores homes (the flat-cursor baseline): a single worker
+    /// runs tasks in exactly ascending order, and with several workers
+    /// the locality accounting still partitions every task.
+    #[test]
+    fn greedy_is_flat_cursor() {
+        let mut p = pool(1);
+        p.set_steal_policy(StealPolicy::Greedy);
+        let order = std::sync::Mutex::new(Vec::new());
+        p.run_tagged("t", 6, Topology::new(3, 2), |_| {}, |t| {
+            order.lock().unwrap().push(t);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(*order.lock().unwrap(), (0..6).collect::<Vec<_>>());
+        // one worker homes every node, so everything is trivially local
+        assert_eq!(p.stats().locality_hits(), 6);
+        assert_eq!(p.stats().steals(), 0);
+
+        let mut p = pool(3);
+        p.set_steal_policy(StealPolicy::Greedy);
+        let out = p
+            .run_tagged("t", 30, Topology::new(3, 10), |_| {}, |t| {
+                if t % 4 == 0 {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Ok(t)
+            })
+            .unwrap();
+        assert_eq!(out, (0..30).collect::<Vec<_>>());
+        assert_eq!(p.stats().steals() + p.stats().locality_hits(), 30);
+    }
+
+    /// Every dequeue posts a hint for the next task still queued on the
+    /// same node, exactly once per task; the first task of a queue is
+    /// never hinted (it is dequeued immediately).
+    #[test]
+    fn hints_fire_once_for_every_queued_successor() {
+        let p = pool(1); // serial: deterministic queue fronts
+        let hints = std::sync::Mutex::new(Vec::new());
+        p.run_tagged(
+            "t",
+            6,
+            Topology::new(2, 3), // node 0: {0,2,4}, node 1: {1,3,5}
+            |t| hints.lock().unwrap().push(t),
+            |_t| Ok(()),
+        )
+        .unwrap();
+        let mut got = hints.into_inner().unwrap();
+        got.sort();
+        // worker 0 homes both nodes: drains node 0 (hints 2, 4) then
+        // node 1 (hints 3, 5); queue fronts 0 and 1 are never hinted
+        assert_eq!(got, vec![2, 3, 4, 5]);
     }
 
     /// Captured ops must replay in (task, issue) order — the serial byte

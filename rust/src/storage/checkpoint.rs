@@ -69,13 +69,14 @@
 //! resumable BFS drivers ([`crate::constructs::bfs`]) call it at level
 //! boundaries, where both hold by construction.
 
+use std::collections::HashMap;
 use std::fs;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::diskio::NodeDisk;
+use super::diskio::{path_file_id, NodeDisk};
 use super::pipeline::ByteReader;
 use crate::cluster::Cluster;
 use crate::error::{Result, RoomyError};
@@ -416,6 +417,9 @@ pub struct SaveReport {
     pub bytes: u64,
     pub linked: u64,
     pub copied: u64,
+    /// Hardlinked files whose digest was reused from the prior manifest
+    /// (unchanged (inode, length) — no re-read; always ≤ `linked`).
+    pub reused: u64,
     pub wall_secs: f64,
 }
 
@@ -591,6 +595,33 @@ impl CheckpointManager {
             }
         }
 
+        // Differential fast path (cheap half): files that would be
+        // hardlinked are only ever replaced whole (tmp + rename), so a
+        // live file whose (device, inode) still equals the prior
+        // snapshot's copy — which was hardlinked *from* it — is
+        // byte-identical to what the prior manifest digested. For those,
+        // reuse the recorded digest: a metadata stat instead of a full
+        // re-read, making per-level checkpoint I/O proportional to what
+        // *changed* rather than to cumulative state. Append-in-place
+        // structures (lists) are excluded — they are always copied and
+        // re-digested. A missing or corrupt prior manifest simply
+        // disables the fast path.
+        let prior: Option<(PathBuf, Manifest)> = self.pick_dir(name).and_then(|dir| {
+            let raw = fs::read(dir.join(MANIFEST_FILE)).ok()?;
+            Some((dir, Manifest::decode(&raw).ok()?))
+        });
+        // Index the prior files once: (node, rel) → (len, digest), so the
+        // per-file lookup below is O(1) instead of a manifest scan.
+        let prior_idx: Option<(&Path, HashMap<(usize, &str), (u64, u64)>)> =
+            prior.as_ref().map(|(dir, m)| {
+                let mut idx = HashMap::with_capacity(m.files.len());
+                for f in &m.files {
+                    idx.insert((f.node, f.rel.as_str()), (f.len, f.digest));
+                }
+                (dir.as_path(), idx)
+            });
+        let prior_ref = prior_idx.as_ref();
+
         // Stage everything under <name>.staging (cleared first: a crashed
         // earlier save may have left one behind).
         let staging = self.staging_dir(name);
@@ -631,11 +662,32 @@ impl CheckpointManager {
                             rep.copied += 1;
                             digest_from_disk(disk, &rel, Some(&dest))?
                         } else if fs::hard_link(disk.root().join(&rel), &dest).is_ok() {
-                            // Replace-by-rename files: share the inode;
-                            // still read once for the manifest digest.
+                            // Replace-by-rename files: share the inode.
+                            // If the prior snapshot's copy still shares
+                            // the live inode (and the recorded length
+                            // matches), its digest is this file's digest
+                            // — no re-read. Otherwise read once.
                             stats.add_link(len);
                             rep.linked += 1;
-                            digest_from_disk(disk, &rel, None)?
+                            let reused = prior_ref.and_then(|(pdir, idx)| {
+                                let &(plen, pdigest) =
+                                    idx.get(&(w, rel_str.as_str()))?;
+                                if plen != len {
+                                    return None;
+                                }
+                                let live = path_file_id(&disk.root().join(&rel));
+                                let snap =
+                                    path_file_id(&pdir.join(format!("node{w}")).join(&rel));
+                                (live != (0, 0) && live == snap).then_some(pdigest)
+                            });
+                            match reused {
+                                Some(d) => {
+                                    stats.add_digest_reuse(len);
+                                    rep.reused += 1;
+                                    d
+                                }
+                                None => digest_from_disk(disk, &rel, None)?,
+                            }
                         } else {
                             stats.add_copy(len);
                             rep.copied += 1;
@@ -656,12 +708,14 @@ impl CheckpointManager {
             report.bytes += rep.bytes;
             report.linked += rep.linked;
             report.copied += rep.copied;
+            report.reused += rep.reused;
         }
 
+        let topo = self.cluster.topology();
         let manifest = Manifest {
             version: MANIFEST_VERSION,
-            workers: self.cluster.nworkers(),
-            nbuckets: self.cluster.nbuckets(),
+            workers: topo.nodes(),
+            nbuckets: topo.nbuckets(),
             structs: metas,
             files,
             app: app.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
@@ -703,9 +757,10 @@ impl CheckpointManager {
         let t0 = Instant::now();
         let manifest = self.load_manifest(name)?;
         let dir = self.pick_dir(name).expect("load_manifest verified existence");
-        if manifest.workers != self.cluster.nworkers()
-            || manifest.nbuckets != self.cluster.nbuckets()
-        {
+        // Geometry check through the shared ownership arithmetic: a
+        // manifest written under a different Topology would route buckets
+        // to the wrong nodes after restore.
+        if !self.cluster.topology().matches(manifest.workers, manifest.nbuckets) {
             return Err(ckpt_err(format!(
                 "checkpoint {name:?} was written by a {}-node / {}-bucket cluster; this cluster is {} / {}",
                 manifest.workers,

@@ -12,10 +12,40 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use super::pipeline::IoService;
+use super::pipeline::{HintCache, IoService};
 use crate::config::DiskPolicy;
 use crate::error::{Result, RoomyError};
 use crate::metrics::{IoStats, PipelineStats};
+
+/// Identity of an open file's inode: `(device, inode)`. `(0, 0)` means
+/// "unknown" and never matches anything — on non-Unix targets every id is
+/// unknown, which simply disables the identity-based fast paths (prefetch
+/// hint adoption, checkpoint digest reuse), never their correctness.
+pub(crate) fn file_id_of(f: &File) -> (u64, u64) {
+    match f.metadata() {
+        Ok(m) => metadata_id(&m),
+        Err(_) => (0, 0),
+    }
+}
+
+/// Identity of the inode currently behind `path` (see [`file_id_of`]).
+pub(crate) fn path_file_id(path: &Path) -> (u64, u64) {
+    match fs::metadata(path) {
+        Ok(m) => metadata_id(&m),
+        Err(_) => (0, 0),
+    }
+}
+
+#[cfg(unix)]
+fn metadata_id(m: &fs::Metadata) -> (u64, u64) {
+    use std::os::unix::fs::MetadataExt;
+    (m.dev(), m.ino())
+}
+
+#[cfg(not(unix))]
+fn metadata_id(_m: &fs::Metadata) -> (u64, u64) {
+    (0, 0)
+}
 
 /// Buffered writer size. Large enough that the OS sees streaming writes.
 const WRITE_BUF: usize = 1 << 20;
@@ -41,6 +71,11 @@ pub struct NodeDisk {
     pipeline_depth: usize,
     io: Option<IoService>,
     pipe_stats: Arc<PipelineStats>,
+    /// Cross-task prefetch hints warmed by the read lane, waiting for the
+    /// scan that asked for them ([`crate::storage::pipeline`]). Bounded
+    /// by the pipeline depth. Holds no `Arc<NodeDisk>` — a cycle here
+    /// would keep the disk (and its service threads) alive forever.
+    hints: HintCache,
 }
 
 impl NodeDisk {
@@ -73,7 +108,27 @@ impl NodeDisk {
             pipeline_depth: depth,
             io,
             pipe_stats: Arc::new(PipelineStats::new()),
+            hints: HintCache::new(depth),
         })
+    }
+
+    /// The prefetch-hint cache (crate-internal; sized by the pipeline
+    /// depth).
+    pub(crate) fn hints(&self) -> &HintCache {
+        &self.hints
+    }
+
+    /// Post a cross-task prefetch hint: warm the first chunk of `rel`
+    /// through this node's read-ahead lane so an upcoming scan of the
+    /// same file finds its bytes already staged
+    /// ([`crate::storage::pipeline`]). Best-effort and infallible: with
+    /// no I/O service, a missing file, a duplicate hint, or a full cache
+    /// (bounded by the pipeline depth) the hint is simply dropped. Hints
+    /// never change what a scan reads — adoption is guarded by the
+    /// file's (device, inode, length) identity — only when the bytes
+    /// move.
+    pub fn hint_prefetch(self: &Arc<Self>, rel: impl AsRef<Path>) {
+        super::pipeline::post_hint(self, rel.as_ref());
     }
 
     /// Chunk buffers per pipelined stream (0 = synchronous I/O).
@@ -336,9 +391,15 @@ impl NodeDisk {
 impl Drop for NodeDisk {
     /// Shut the I/O service down with the disk: queued jobs drain, both
     /// lane threads are joined, so no service thread outlives its node.
+    /// Hints still warming drain with the queue; whatever sits in the
+    /// hint cache afterwards was never consumed and is counted as waste.
     fn drop(&mut self) {
         if let Some(io) = &self.io {
             io.shutdown();
+        }
+        let unconsumed = self.hints.clear();
+        if unconsumed > 0 {
+            self.pipe_stats.add_hint_wastes(unconsumed);
         }
     }
 }
@@ -465,6 +526,37 @@ impl SharedMeteredReader {
     /// Path being read (diagnostics).
     pub fn path(&self) -> &Path {
         &self.path
+    }
+
+    /// `(device, inode)` of the open file — pins the exact inode the
+    /// bytes come from (prefetch-hint staleness checks).
+    pub(crate) fn file_id(&self) -> (u64, u64) {
+        file_id_of(self.r.get_ref())
+    }
+
+    /// Split off the disk handle, keeping the open file + position. The
+    /// prefetch-hint cache lives *inside* the `NodeDisk` and must not own
+    /// an `Arc` back to it, so it stores this instead.
+    pub(crate) fn detach(self) -> DetachedReader {
+        DetachedReader { r: self.r, path: self.path }
+    }
+
+    /// Rejoin a [`DetachedReader`] with its disk (hint adoption).
+    pub(crate) fn reattach(disk: Arc<NodeDisk>, d: DetachedReader) -> SharedMeteredReader {
+        SharedMeteredReader { disk, r: d.r, path: d.path }
+    }
+}
+
+/// An open, positioned, metered-on-reattach file handle without its disk
+/// — see [`SharedMeteredReader::detach`].
+pub(crate) struct DetachedReader {
+    r: BufReader<File>,
+    path: PathBuf,
+}
+
+impl std::fmt::Debug for DetachedReader {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DetachedReader").field("path", &self.path).finish()
     }
 }
 

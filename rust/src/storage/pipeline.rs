@@ -25,6 +25,14 @@
 //!   by [`crate::storage::buffer::SpillDrain`] so delayed-op log replay
 //!   prefetches too.
 //!
+//! On top of the per-stream pipeline, **cross-task prefetch hints**
+//! ([`NodeDisk::hint_prefetch`]) let the pool's per-node schedulers warm
+//! the *next* bucket's file while the current bucket computes: the read
+//! lane parks (first chunk, open reader) in a per-node [`HintCache`]
+//! bounded by the pipeline depth, and the next scan's `ChunkFetcher`
+//! adopts it — guarded by (device, inode, length) identity so a replaced
+//! or appended file makes the hint a counted waste, never a wrong byte.
+//!
 //! **Determinism.** The pipeline moves *when* bytes are transferred, never
 //! *what* or *in which order within a file*: chunks of one stream are
 //! filled/flushed strictly FIFO (the lanes are FIFO queues and each
@@ -59,7 +67,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::chunkfile::{RecordReader, RecordWriter};
-use super::diskio::{NodeDisk, SharedMeteredReader, SharedMeteredWriter};
+use super::diskio::{
+    path_file_id, DetachedReader, NodeDisk, SharedMeteredReader, SharedMeteredWriter,
+};
 use crate::error::{Result, RoomyError};
 use crate::metrics::PipelineStats;
 
@@ -193,6 +203,275 @@ impl IoService {
 }
 
 // ---------------------------------------------------------------------
+// Cross-task prefetch hints
+// ---------------------------------------------------------------------
+//
+// The pool's per-node queues know which bucket runs *next* on a node
+// while the current bucket still computes ([`crate::runtime::pool`]).
+// `post_hint` turns that knowledge into read-lane work: open the named
+// file, read its first chunk, and park (chunk, open reader) in the
+// node's bounded `HintCache`. When the next task's scan opens the same
+// file, `ChunkFetcher::open` adopts the warmed chunk as its first
+// in-flight buffer and continues on the already-positioned reader — the
+// scan skips one open and one chunk-read of dead time.
+//
+// Correctness: adoption is guarded by the file's (device, inode)
+// identity plus a length check (a short warmed chunk is only valid if
+// the file still ends where it did), so a file replaced by rename or
+// appended to since the hint was posted is detected and the hint
+// discarded — a hint can change *when* bytes move, never *which* bytes a
+// scan observes. Metering: the warm is charged exactly like the
+// first-chunk read it replaces (one open + one chunk through the metered
+// reader), so an adopted hint leaves byte/seek totals identical to an
+// unhinted run; only a *wasted* hint adds I/O, which
+// [`PipelineStats`] counts.
+
+/// One slot of the hint cache.
+#[derive(Debug)]
+struct HintSlot {
+    rel: PathBuf,
+    state: HintState,
+}
+
+#[derive(Debug)]
+enum HintState {
+    /// Accepted; the read lane has not warmed it yet.
+    Pending,
+    /// Warmed and ready to adopt.
+    Ready {
+        /// (device, inode) of the file the bytes were read from.
+        file_id: (u64, u64),
+        /// Chunk geometry the warm used (must match the consumer's).
+        chunk_bytes: usize,
+        /// The file's first `chunk.len()` bytes (short only at EOF).
+        chunk: Vec<u8>,
+        /// The open reader positioned after `chunk` — kept open even at
+        /// EOF, because the held fd pins the warmed inode and makes the
+        /// `file_id` staleness check sound against inode recycling.
+        rest: Option<DetachedReader>,
+    },
+}
+
+/// Outcome of a [`HintCache::take`].
+enum HintTake {
+    /// No slot for this path (or it is still warming).
+    Miss,
+    /// A ready slot existed but no longer serves this consumer (file
+    /// identity changed, or wrong chunk geometry) — evicted so it cannot
+    /// wedge the bounded cache; the caller counts the waste.
+    Stale,
+    /// Adopt these.
+    Hit { chunk: Vec<u8>, rest: Option<DetachedReader> },
+}
+
+/// Bounded store of warmed prefetch hints for one node. Owned by the
+/// node's [`NodeDisk`]; capacity is the pipeline depth, so hint buffers
+/// obey the same budget as every other stream's chunks.
+#[derive(Debug)]
+pub(crate) struct HintCache {
+    slots: Mutex<Vec<HintSlot>>,
+    cap: usize,
+}
+
+impl HintCache {
+    pub(crate) fn new(cap: usize) -> HintCache {
+        HintCache { slots: Mutex::new(Vec::new()), cap }
+    }
+
+    /// Reserve a pending slot for `rel`. A full cache evicts its oldest
+    /// **ready** slot first — a stale leftover (warmed for a file nobody
+    /// re-opened) must not wedge hinting for the rest of the run; a cache
+    /// full of still-warming slots drops the new hint instead. Returns
+    /// `(accepted, ready_slots_evicted)`; not accepted also covers a
+    /// duplicate path.
+    fn reserve(&self, rel: &Path) -> (bool, u64) {
+        let mut g = lock_ignore_poison(&self.slots);
+        if g.iter().any(|s| s.rel == rel) {
+            return (false, 0);
+        }
+        let mut evicted = 0u64;
+        while g.len() >= self.cap {
+            match g.iter().position(|s| matches!(s.state, HintState::Ready { .. })) {
+                Some(i) => {
+                    g.remove(i);
+                    evicted += 1;
+                }
+                None => return (false, evicted),
+            }
+        }
+        g.push(HintSlot { rel: rel.to_path_buf(), state: HintState::Pending });
+        (true, evicted)
+    }
+
+    /// Warm the pending slot for `rel` (called by the read-lane job).
+    fn fill(
+        &self,
+        rel: &Path,
+        file_id: (u64, u64),
+        chunk_bytes: usize,
+        chunk: Vec<u8>,
+        rest: Option<DetachedReader>,
+    ) {
+        let mut g = lock_ignore_poison(&self.slots);
+        if let Some(s) = g.iter_mut().find(|s| s.rel == rel) {
+            s.state = HintState::Ready { file_id, chunk_bytes, chunk, rest };
+        }
+    }
+
+    /// Drop the pending slot for `rel` (warm failed).
+    fn abandon(&self, rel: &Path) {
+        let mut g = lock_ignore_poison(&self.slots);
+        g.retain(|s| s.rel != rel);
+    }
+
+    /// Consume the slot for `rel` if it is ready, matches the consumer's
+    /// chunk geometry, and still describes the live file (`live_id`,
+    /// `live_len`).
+    fn take(
+        &self,
+        rel: &Path,
+        chunk_bytes: usize,
+        live_id: (u64, u64),
+        live_len: u64,
+    ) -> HintTake {
+        let mut g = lock_ignore_poison(&self.slots);
+        let Some(i) = g.iter().position(|s| s.rel == rel) else {
+            return HintTake::Miss;
+        };
+        let fresh = match &g[i].state {
+            // still warming; leave it
+            HintState::Pending => return HintTake::Miss,
+            HintState::Ready { file_id, chunk_bytes: cb, chunk, .. } => {
+                // wrong chunk geometry counts as stale too: this
+                // consumer *is* the file's next reader, so a slot it
+                // cannot serve would otherwise sit in the bounded cache
+                // until teardown
+                *cb == chunk_bytes
+                    && live_id != (0, 0)
+                    && *file_id == live_id
+                    // a short warmed chunk claims "this is the whole
+                    // file" — only true while the length is unchanged
+                    && (chunk.len() == *cb || chunk.len() as u64 == live_len)
+            }
+        };
+        let slot = g.remove(i);
+        match slot.state {
+            HintState::Ready { chunk, rest, .. } if fresh => HintTake::Hit { chunk, rest },
+            _ => HintTake::Stale,
+        }
+    }
+
+    /// Cheap membership probe (one lock, ≤ cap comparisons) — lets every
+    /// stream open without a hint for its path skip the identity stats
+    /// entirely (op-log drains, sort runs, and plain scans all come
+    /// through `ChunkFetcher::open` while the cache is non-empty).
+    fn contains(&self, rel: &Path) -> bool {
+        lock_ignore_poison(&self.slots).iter().any(|s| s.rel == rel)
+    }
+
+    /// Whether `rel`'s hint is warmed and waiting (test synchronization).
+    #[cfg(test)]
+    pub(crate) fn is_ready(&self, rel: &Path) -> bool {
+        lock_ignore_poison(&self.slots)
+            .iter()
+            .any(|s| s.rel == rel && matches!(s.state, HintState::Ready { .. }))
+    }
+
+    /// Drop every slot, returning how many there were (teardown waste
+    /// accounting).
+    pub(crate) fn clear(&self) -> u64 {
+        let mut g = lock_ignore_poison(&self.slots);
+        let n = g.len() as u64;
+        g.clear();
+        n
+    }
+}
+
+/// Post a prefetch hint for `rel` on `disk` (see
+/// [`NodeDisk::hint_prefetch`] — the public entry point). Best-effort:
+/// every failure path just drops the hint.
+pub(crate) fn post_hint(disk: &Arc<NodeDisk>, rel: &Path) {
+    let Some(service) = disk.io_service() else { return };
+    // One stat up front keeps never-created bucket files (empty shards)
+    // from becoming lane traffic and waste noise.
+    if !disk.exists(rel) {
+        return;
+    }
+    let (accepted, evicted) = disk.hints().reserve(rel);
+    if evicted > 0 {
+        disk.pipe_stats().add_hint_wastes(evicted);
+    }
+    if !accepted {
+        return; // duplicate, or a cache full of in-flight warms
+    }
+    disk.pipe_stats().add_hint_posted();
+    let disk2 = Arc::clone(disk);
+    let rel2 = rel.to_path_buf();
+    let job: Job = Box::new(move || {
+        let warmed = (|| -> Result<((u64, u64), Vec<u8>, Option<DetachedReader>)> {
+            let mut r = disk2.open_file_shared(&rel2)?;
+            let id = r.file_id();
+            let mut chunk = vec![0u8; PIPE_CHUNK];
+            let n = r.read_fully(&mut chunk)?;
+            chunk.truncate(n);
+            // a short warm (whole file < one chunk) keeps only what it
+            // holds — the adopting stream's buffer accounting sees the
+            // real footprint
+            chunk.shrink_to_fit();
+            if n > 0 {
+                disk2.pipe_stats().add_read_ahead(n as u64);
+            }
+            // The open reader is kept even at EOF: the held fd PINS the
+            // warmed inode, which is what makes the (dev, ino) identity
+            // check at take time sound — a closed handle would let the
+            // filesystem recycle the inode into a replacement file and
+            // fake a match. (Post-EOF fills through it just read 0.)
+            let rest = Some(r.detach());
+            Ok((id, chunk, rest))
+        })();
+        match warmed {
+            Ok((id, chunk, rest)) => {
+                disk2.hints().fill(&rel2, id, PIPE_CHUNK, chunk, rest)
+            }
+            Err(_) => {
+                disk2.hints().abandon(&rel2);
+                disk2.pipe_stats().add_hint_wastes(1);
+            }
+        }
+    });
+    if service.submit_read(job).is_err() {
+        disk.hints().abandon(rel);
+        disk.pipe_stats().add_hint_wastes(1);
+    }
+}
+
+/// Try to adopt a warmed hint for `rel`: validate it against the live
+/// file's identity and hand back (first chunk, reattached reader).
+/// `None` = no usable hint; the caller opens normally.
+fn take_hint(
+    disk: &Arc<NodeDisk>,
+    rel: &Path,
+    chunk_bytes: usize,
+) -> Option<(Vec<u8>, Option<SharedMeteredReader>)> {
+    if disk.io_service().is_none() || !disk.hints().contains(rel) {
+        return None;
+    }
+    let live_id = path_file_id(&disk.root().join(rel));
+    let live_len = disk.len(rel);
+    match disk.hints().take(rel, chunk_bytes, live_id, live_len) {
+        HintTake::Hit { chunk, rest } => {
+            disk.pipe_stats().add_hint_hit();
+            Some((chunk, rest.map(|d| SharedMeteredReader::reattach(Arc::clone(disk), d))))
+        }
+        HintTake::Stale => {
+            disk.pipe_stats().add_hint_wastes(1);
+            None
+        }
+        HintTake::Miss => None,
+    }
+}
+
+// ---------------------------------------------------------------------
 // Read side: chunk fetcher + record/byte wrappers
 // ---------------------------------------------------------------------
 
@@ -220,17 +499,27 @@ struct ChunkFetcher {
     last: bool,
     eof: bool,
     failed: bool,
+    /// Set when a warmed prefetch hint was adopted as the first in-flight
+    /// chunk: the first refill receives it without donating a fill, so
+    /// the circulating buffer count stays at `depth`.
+    skip_submit_once: bool,
 }
 
 impl ChunkFetcher {
     fn open(disk: &Arc<NodeDisk>, rel: impl AsRef<Path>, chunk_bytes: usize) -> Result<Self> {
         let chunk_bytes = chunk_bytes.max(1);
-        let reader = disk.open_file_shared(&rel)?;
+        // Adopt a warmed cross-task prefetch hint when one matches this
+        // exact file + chunk geometry; otherwise open fresh.
+        let adopted = take_hint(disk, rel.as_ref(), chunk_bytes);
+        let (reader, warm) = match adopted {
+            Some((chunk, rest)) => (rest, Some(chunk)),
+            None => (Some(disk.open_file_shared(&rel)?), None),
+        };
         let (data_tx, data_rx) = channel();
         let f = ChunkFetcher {
             disk: Arc::clone(disk),
             shared: Arc::new(ReadShared {
-                reader: Mutex::new(Some(reader)),
+                reader: Mutex::new(reader),
                 cancelled: AtomicBool::new(false),
                 alloc: AtomicUsize::new(0),
             }),
@@ -242,10 +531,24 @@ impl ChunkFetcher {
             last: false,
             eof: false,
             failed: false,
+            skip_submit_once: false,
         };
         f.disk.pipe_stats().add_stream();
+        let mut f = f;
+        if let Some(chunk) = warm {
+            // The warmed chunk becomes in-flight chunk 0: it is sent
+            // before any fill job can run, so stream FIFO order holds
+            // (fills continue on the already-positioned reader).
+            let cap = chunk.capacity();
+            f.shared.alloc.store(cap, Ordering::Relaxed);
+            f.disk.pipe_stats().note_stream_buf(cap as u64);
+            f.skip_submit_once = true;
+            let _ = f.data_tx.send(Ok(chunk));
+        }
         // Prime the read-ahead: depth - 1 buffers go to the lane, the
-        // depth-th is `cur` (donated on the first refill).
+        // depth-th is `cur` (donated on the first refill) — or, with an
+        // adopted hint, the warmed chunk (whose receipt skips one
+        // donation instead).
         for _ in 1..f.disk.pipeline_depth().max(1) {
             f.submit_fill(Vec::new())?;
         }
@@ -319,10 +622,16 @@ impl ChunkFetcher {
             return Ok(false);
         }
         // Donate the consumed buffer as the next read-ahead slot, then
-        // block for the oldest in-flight chunk.
+        // block for the oldest in-flight chunk. When an adopted hint is
+        // the oldest chunk, skip one donation instead — the hint already
+        // occupies the slot this donation would have created.
         let donated = std::mem::take(&mut self.cur);
         self.pos = 0;
-        self.submit_fill(donated)?;
+        if self.skip_submit_once {
+            self.skip_submit_once = false;
+        } else {
+            self.submit_fill(donated)?;
+        }
         let t0 = Instant::now();
         let msg = self
             .data_rx
@@ -1129,6 +1438,166 @@ mod tests {
         let d = piped_disk(t.path(), 2);
         assert!(PrefetchReader::open(&d, "nope.dat", 4).is_err());
         assert!(ByteReader::open(&d, "nope.dat").is_err());
+    }
+
+    /// Block until `rel`'s hint is warmed (the hint job is asynchronous on
+    /// the read lane).
+    fn wait_hint_ready(d: &Arc<NodeDisk>, rel: &str) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !d.hints().is_ready(Path::new(rel)) {
+            assert!(Instant::now() < deadline, "hint for {rel} never warmed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn hint_warms_first_chunk_and_scan_adopts_it() {
+        // reference run without hints, for metering parity
+        let t0 = tmpdir("hint_ref");
+        let d0 = piped_disk(t0.path(), 2);
+        write_recs(&d0, "f.dat", 200_000); // ~800 KiB, several chunks
+        let r0 = d0.stats().snapshot().bytes_read;
+        let s0 = d0.stats().snapshot().seeks;
+        let data0 = read_recs(&d0, "f.dat");
+        let read0 = d0.stats().snapshot().bytes_read - r0;
+        let seeks0 = d0.stats().snapshot().seeks - s0;
+
+        let t = tmpdir("hint_hit");
+        let d = piped_disk(t.path(), 2);
+        write_recs(&d, "f.dat", 200_000);
+        let r1 = d.stats().snapshot().bytes_read;
+        let s1 = d.stats().snapshot().seeks;
+        d.hint_prefetch("f.dat");
+        wait_hint_ready(&d, "f.dat");
+        assert_eq!(read_recs(&d, "f.dat"), data0);
+        let snap = d.pipe_stats().snapshot();
+        assert_eq!(snap.hints_posted, 1);
+        assert_eq!(snap.hint_hits, 1, "warmed hint must be adopted");
+        assert_eq!(snap.hint_wastes, 0);
+        // an adopted hint replaces the scan's own open + first-chunk
+        // read, so byte and seek totals match the unhinted run exactly
+        assert_eq!(d.stats().snapshot().bytes_read - r1, read0);
+        assert_eq!(d.stats().snapshot().seeks - s1, seeks0);
+        drop(d);
+    }
+
+    #[test]
+    fn stale_hint_is_discarded_after_rewrite() {
+        let t = tmpdir("hint_stale");
+        let d = piped_disk(t.path(), 2);
+        write_recs(&d, "f.dat", 100_000);
+        d.hint_prefetch("f.dat");
+        wait_hint_ready(&d, "f.dat");
+        // replace-by-rename: new inode, same path
+        let mut w = RecordWriter::create(&d, "f.tmp", 4).unwrap();
+        for i in 0..50u32 {
+            w.push(&(i + 7).to_le_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+        d.rename("f.tmp", "f.dat").unwrap();
+        assert_eq!(
+            read_recs(&d, "f.dat"),
+            (7..57).collect::<Vec<_>>(),
+            "a stale hint must never leak old bytes into a scan"
+        );
+        let snap = d.pipe_stats().snapshot();
+        assert_eq!(snap.hint_hits, 0);
+        assert!(snap.hint_wastes >= 1, "stale hint must be counted as waste");
+    }
+
+    #[test]
+    fn short_file_hint_hits_and_append_invalidates() {
+        let t = tmpdir("hint_short");
+        let d = piped_disk(t.path(), 2);
+        // a file smaller than one chunk: the warm captures all of it
+        write_recs(&d, "tiny.dat", 5);
+        d.hint_prefetch("tiny.dat");
+        wait_hint_ready(&d, "tiny.dat");
+        assert_eq!(read_recs(&d, "tiny.dat"), vec![0, 1, 2, 3, 4]);
+        assert_eq!(d.pipe_stats().snapshot().hint_hits, 1);
+
+        // same again, but the file grows before the scan arrives: the
+        // short warmed chunk would truncate the scan — must be discarded
+        d.hint_prefetch("tiny.dat");
+        wait_hint_ready(&d, "tiny.dat");
+        let mut w = RecordWriter::append(&d, "tiny.dat", 4).unwrap();
+        w.push(&5u32.to_le_bytes()).unwrap();
+        w.finish().unwrap();
+        assert_eq!(read_recs(&d, "tiny.dat"), vec![0, 1, 2, 3, 4, 5]);
+        let snap = d.pipe_stats().snapshot();
+        assert_eq!(snap.hint_hits, 1, "grown file must not re-hit");
+        assert!(snap.hint_wastes >= 1);
+    }
+
+    #[test]
+    fn hint_cache_bounded_by_depth_and_counts_teardown_waste() {
+        let t = tmpdir("hint_cap");
+        let d = piped_disk(t.path(), 2); // cap = depth = 2
+        for i in 0..4 {
+            write_recs(&d, &format!("f{i}.dat"), 10);
+        }
+        // fill the cache with two warmed hints...
+        d.hint_prefetch("f0.dat");
+        wait_hint_ready(&d, "f0.dat");
+        d.hint_prefetch("f1.dat");
+        wait_hint_ready(&d, "f1.dat");
+        // ...a duplicate is dropped (still 2 posted)...
+        d.hint_prefetch("f0.dat");
+        assert_eq!(d.pipe_stats().snapshot().hints_posted, 2);
+        // ...and further hints evict the oldest *ready* slot (waste) so
+        // stale leftovers never wedge the bounded cache
+        d.hint_prefetch("f2.dat");
+        wait_hint_ready(&d, "f2.dat");
+        d.hint_prefetch("f3.dat");
+        wait_hint_ready(&d, "f3.dat");
+        let snap = d.pipe_stats().snapshot();
+        assert_eq!(snap.hints_posted, 4);
+        assert_eq!(snap.hint_wastes, 2, "evicted warms are waste");
+        assert!(!d.hints().is_ready(Path::new("f0.dat")), "f0 evicted");
+        assert!(!d.hints().is_ready(Path::new("f1.dat")), "f1 evicted");
+        // missing files are ignored outright
+        d.hint_prefetch("nope.dat");
+        assert_eq!(d.pipe_stats().snapshot().hints_posted, 4);
+        let stats = Arc::clone(d.pipe_stats());
+        drop(d); // f2 + f3 still warmed, never consumed
+        assert_eq!(stats.snapshot().hint_wastes, 4, "unconsumed hints are waste");
+        assert_eq!(stats.snapshot().hint_hits, 0);
+        // full lifecycle accounted: posted == hits + wastes
+        assert_eq!(stats.snapshot().hints_posted, 4);
+    }
+
+    #[test]
+    fn geometry_mismatched_hint_is_evicted_not_wedged() {
+        let t = tmpdir("hint_geom");
+        let d = piped_disk(t.path(), 2);
+        write_recs(&d, "f.dat", 200_000);
+        d.hint_prefetch("f.dat");
+        wait_hint_ready(&d, "f.dat");
+        // a consumer with a reduced chunk (the k-way-merge geometry)
+        // cannot adopt the full-chunk warm — the slot must be evicted
+        // (counted as waste), not left to occupy the bounded cache
+        let mut r = PrefetchReader::open_with_chunk(&d, "f.dat", 4, 1024).unwrap();
+        let mut rec = [0u8; 4];
+        assert!(r.read_one(&mut rec).unwrap());
+        assert_eq!(u32::from_le_bytes(rec), 0);
+        let snap = d.pipe_stats().snapshot();
+        assert_eq!(snap.hint_hits, 0);
+        assert!(snap.hint_wastes >= 1, "mismatched warm must be evicted as waste");
+        assert!(!d.hints().is_ready(Path::new("f.dat")), "slot must be gone");
+    }
+
+    #[test]
+    fn unhinted_scans_are_unaffected() {
+        // a plain read with hints never posted must not touch the hint
+        // counters at all
+        let t = tmpdir("hint_none");
+        let d = piped_disk(t.path(), 2);
+        write_recs(&d, "f.dat", 1_000);
+        let _ = read_recs(&d, "f.dat");
+        let snap = d.pipe_stats().snapshot();
+        assert_eq!(snap.hints_posted, 0);
+        assert_eq!(snap.hint_hits, 0);
+        assert_eq!(snap.hint_wastes, 0);
     }
 
     #[test]

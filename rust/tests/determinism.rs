@@ -1,47 +1,58 @@
-//! Parallel == serial, byte for byte — at every pipeline depth.
+//! Parallel == serial, byte for byte — at every pipeline depth and every
+//! pool scheduling policy.
 //!
-//! Every collective runs its buckets on the worker pool
-//! (`roomy::runtime::pool`) and streams them through the overlapped-I/O
-//! pipeline (`roomy::storage::pipeline`); these tests prove the pool's
-//! three determinism rules (bucket isolation, merge-by-bucket-index,
-//! per-task delayed-op capture) *and* the pipeline's transparency by
-//! running identical randomized workloads over the full matrix
-//! `io_pipeline_depth` ∈ {0, 1, 4} × `num_workers` ∈ {1, 2, 4} and
-//! demanding **identical on-disk bytes** (full recursive digest of the
-//! instance root) and identical order-sensitive reduce results.
+//! Every collective runs its buckets on the locality-aware worker pool
+//! (`roomy::runtime::pool`: per-node queues, bounded stealing, cross-task
+//! prefetch hints) and streams them through the overlapped-I/O pipeline
+//! (`roomy::storage::pipeline`); these tests prove the pool's three
+//! determinism rules (bucket isolation, merge-by-bucket-index, per-task
+//! delayed-op capture) *and* the pipeline's transparency by running
+//! identical randomized workloads over the matrix `steal_policy` ∈
+//! {off, bounded} × `num_workers` ∈ {1, 2, 4} × `io_pipeline_depth` ∈
+//! {0, 4} (plus one greedy = flat-cursor cell) and demanding **identical
+//! on-disk bytes** (full recursive digest of the instance root) and
+//! identical order-sensitive reduce results.
 
 mod common;
 
 use common::dir_digest;
 use roomy::constructs::bfs;
 use roomy::testutil::{tmpdir, Rng};
-use roomy::{Roomy, RoomyConfig};
+use roomy::{Roomy, RoomyConfig, StealPolicy};
 
-/// The pipeline-depth × worker-count grid every workload must be
-/// byte-identical across. (depth 0, workers 1) is the serial reference.
-const MATRIX: [(usize, usize); 9] = [
-    (0, 1),
-    (0, 2),
-    (0, 4),
-    (1, 1),
-    (1, 2),
-    (1, 4),
-    (4, 1),
-    (4, 2),
-    (4, 4),
+/// The steal-policy × pipeline-depth × worker-count grid every workload
+/// must be byte-identical across. (off, depth 0, workers 1) is the
+/// serial reference; the final greedy cell pins the pre-locality
+/// flat-cursor schedule to the same bytes.
+const MATRIX: [(StealPolicy, usize, usize); 13] = [
+    (StealPolicy::Off, 0, 1),
+    (StealPolicy::Off, 0, 2),
+    (StealPolicy::Off, 0, 4),
+    (StealPolicy::Off, 4, 1),
+    (StealPolicy::Off, 4, 2),
+    (StealPolicy::Off, 4, 4),
+    (StealPolicy::Bounded, 0, 1),
+    (StealPolicy::Bounded, 0, 2),
+    (StealPolicy::Bounded, 0, 4),
+    (StealPolicy::Bounded, 4, 1),
+    (StealPolicy::Bounded, 4, 2),
+    (StealPolicy::Bounded, 4, 4),
+    (StealPolicy::Greedy, 4, 4),
 ];
 
-/// Run `workload` once per (depth, workers) cell; the workload returns an
-/// order-sensitive value that must also match. Asserts equal digests.
+/// Run `workload` once per (steal, depth, workers) cell; the workload
+/// returns an order-sensitive value that must also match. Asserts equal
+/// digests.
 fn assert_deterministic(tag: &str, workload: impl Fn(&Roomy, &mut Rng) -> u64) {
     let mut outcomes = Vec::new();
-    for &(depth, nw) in &MATRIX {
-        let t = tmpdir(&format!("det_{tag}_d{depth}_w{nw}"));
+    for &(steal, depth, nw) in &MATRIX {
+        let t = tmpdir(&format!("det_{tag}_s{steal}_d{depth}_w{nw}"));
         let mut cfg = RoomyConfig::for_testing(t.path());
         cfg.workers = 3; // uneven bucket→node split
         cfg.buckets_per_worker = 2;
         cfg.num_workers = nw;
         cfg.io_pipeline_depth = depth;
+        cfg.steal_policy = steal;
         cfg.op_buffer_bytes = 256; // force staging spills
         cfg.capture_spill_threshold = 96; // force in-collective capture spills
         let r = Roomy::open(cfg).unwrap();
@@ -49,17 +60,17 @@ fn assert_deterministic(tag: &str, workload: impl Fn(&Roomy, &mut Rng) -> u64) {
         let value = workload(&r, &mut rng);
         drop(r); // join io service threads before digesting
         let digest = dir_digest(t.path());
-        outcomes.push((depth, nw, value, digest));
+        outcomes.push((steal, depth, nw, value, digest));
     }
-    let (_, _, v0, d0) = outcomes[0];
-    for (depth, nw, v, d) in &outcomes[1..] {
+    let (_, _, _, v0, d0) = outcomes[0];
+    for (steal, depth, nw, v, d) in &outcomes[1..] {
         assert_eq!(
             *v, v0,
-            "{tag}: value diverged at depth={depth} num_workers={nw}"
+            "{tag}: value diverged at steal={steal} depth={depth} num_workers={nw}"
         );
         assert_eq!(
             *d, d0,
-            "{tag}: on-disk bytes diverged at depth={depth} num_workers={nw}"
+            "{tag}: on-disk bytes diverged at steal={steal} depth={depth} num_workers={nw}"
         );
     }
 }
@@ -314,25 +325,34 @@ fn det_full_bfs_levels() {
         }
         Ok(())
     }
+    let grid: [(StealPolicy, usize, usize); 6] = [
+        (StealPolicy::Off, 0, 1),
+        (StealPolicy::Off, 4, 4),
+        (StealPolicy::Bounded, 0, 4),
+        (StealPolicy::Bounded, 1, 2),
+        (StealPolicy::Bounded, 4, 4),
+        (StealPolicy::Greedy, 4, 1),
+    ];
     for driver in ["hash", "list"] {
         let mut profiles = Vec::new();
-        for &(depth, nw) in &[(0usize, 1usize), (0, 4), (1, 2), (4, 1), (4, 4)] {
-            let t = tmpdir(&format!("det_bfs_{driver}_d{depth}_w{nw}"));
+        for &(steal, depth, nw) in &grid {
+            let t = tmpdir(&format!("det_bfs_{driver}_s{steal}_d{depth}_w{nw}"));
             let mut cfg = RoomyConfig::for_testing(t.path());
             cfg.num_workers = nw;
             cfg.io_pipeline_depth = depth;
+            cfg.steal_policy = steal;
             cfg.capture_spill_threshold = 128; // exercise capture spills
             let r = Roomy::open(cfg).unwrap();
             let stats = match driver {
                 "hash" => bfs::bfs_hash_batched(&r, "cube", &[0u64], gen).unwrap(),
                 _ => bfs::bfs_list_batched(&r, "cube", &[0u64], gen).unwrap(),
             };
-            profiles.push((depth, nw, stats));
+            profiles.push((steal, depth, nw, stats));
         }
-        for (depth, nw, s) in &profiles[1..] {
+        for (steal, depth, nw, s) in &profiles[1..] {
             assert_eq!(
-                s, &profiles[0].2,
-                "{driver} BFS level profile diverged at depth={depth} num_workers={nw}"
+                s, &profiles[0].3,
+                "{driver} BFS level profile diverged at steal={steal} depth={depth} num_workers={nw}"
             );
         }
     }

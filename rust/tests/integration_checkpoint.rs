@@ -460,3 +460,76 @@ fn remove_deletes_all_variants() {
     assert!(!mgr.root().join("s.staging").exists());
     assert!(!mgr.root().join("s.prev").exists());
 }
+
+/// Differential checkpoints, cheap half: re-saving unchanged structures
+/// must reuse the prior manifest's digests for every hardlinkable file
+/// (a metadata stat instead of a full re-read — observable as fewer read
+/// bytes), while list shards (copied) and genuinely changed buckets are
+/// always re-digested. A restore after a reuse-heavy save must still
+/// validate and reproduce the data exactly.
+#[test]
+fn unchanged_files_reuse_prior_digests() {
+    let (t, r) = roomy("ckpt_reuse");
+    let arr = r.array::<u64>("arr", 500, 0).unwrap();
+    let setv = arr.register_update(|i, v: &mut u64, p: &u64| *v = *p ^ i);
+    for i in 0..500 {
+        arr.update(i, &0xABCDu64, setv).unwrap();
+    }
+    arr.sync().unwrap();
+    let list = r.list::<u64>("lst").unwrap();
+    for v in 0..400u64 {
+        list.add(&v).unwrap();
+    }
+    list.sync().unwrap();
+
+    let mgr = r.checkpoints().unwrap();
+    let io0 = r.io_snapshot();
+    let rep1 = mgr.save("ck", &[&arr as &dyn Checkpointable, &list], &[]).unwrap();
+    let read1 = r.io_snapshot().delta(&io0).bytes_read;
+    assert_eq!(rep1.reused, 0, "first save has no prior manifest to reuse");
+    assert!(rep1.linked > 0, "array buckets must hardlink");
+
+    // Save again with nothing changed: every hardlinked file reuses its
+    // digest; only the list shards are re-read.
+    let io1 = r.io_snapshot();
+    let rep2 = mgr.save("ck", &[&arr as &dyn Checkpointable, &list], &[]).unwrap();
+    let read2 = r.io_snapshot().delta(&io1).bytes_read;
+    assert_eq!(rep2.reused, rep2.linked, "all unchanged hardlinks must reuse");
+    assert!(rep2.reused > 0);
+    assert!(
+        read2 < read1,
+        "digest reuse must cut save read I/O ({read2} !< {read1})"
+    );
+    let stats = mgr.stats().snapshot();
+    assert_eq!(stats.files_reused, rep2.reused);
+    assert!(stats.bytes_reused > 0);
+    // both manifests describe identical payloads
+    let m1 = mgr.load_manifest("ck").unwrap();
+    assert_eq!(m1.file_digests().len() as u64, rep2.files);
+
+    // Mutate the array: its buckets get new inodes, so the next save
+    // re-digests them (no stale digests), while nothing else regresses.
+    arr.map_update(|_i, v| *v = v.wrapping_add(1)).unwrap();
+    let rep3 = mgr.save("ck", &[&arr as &dyn Checkpointable, &list], &[]).unwrap();
+    assert_eq!(rep3.reused, 0, "rewritten buckets must not reuse digests");
+
+    // The reuse-written checkpoint restores and validates end to end.
+    drop((arr, list));
+    drop(r);
+    let mut cfg = RoomyConfig::for_testing(t.path());
+    cfg.workers = 4;
+    cfg.buckets_per_worker = 2;
+    let r2 = Roomy::open(cfg).unwrap();
+    let mgr2 = r2.checkpoints().unwrap();
+    let restored = mgr2.restore("ck").unwrap();
+    let arr2 = r2.restored_array::<u64>(&restored, "arr").unwrap();
+    let check = arr2
+        .reduce(|| 0u64, |acc, i, v| acc ^ (v.wrapping_mul(i + 1)), |a, b| a ^ b)
+        .unwrap();
+    let expect = (0..500u64).fold(0u64, |acc, i| {
+        acc ^ ((0xABCDu64 ^ i).wrapping_add(1).wrapping_mul(i + 1))
+    });
+    assert_eq!(check, expect, "restored array content diverged");
+    let lst2 = r2.restored_list::<u64>(&restored, "lst").unwrap();
+    assert_eq!(lst2.size(), 400);
+}

@@ -37,7 +37,7 @@ fn pancake_n7_level_profile_under_pool() {
         .map(|(t, _)| t)
         .sum();
     assert_eq!(per, r.cluster().pool().stats().total_tasks());
-    assert!(r.report().contains("pool (4 workers)"), "{}", r.report());
+    assert!(r.report().contains("pool (4 workers"), "{}", r.report());
 }
 
 /// The list variant agrees with the hash variant at n = 6 under the pool
@@ -249,4 +249,80 @@ fn concurrent_collectives_do_not_interleave_state() {
             });
         }
     });
+}
+
+/// The issue's pinned locality scenario: a deliberately skewed bucket
+/// load (every element hashes into node 0's buckets, so node 0's two
+/// shard tasks carry all the work while the other six are empty). Under
+/// `bounded` stealing the idle workers must drain node 0's queue
+/// (steals > 0), `PoolStats` must report per-node queue depths and the
+/// locality split, and the on-disk result must stay byte-identical to
+/// the serial run.
+#[test]
+fn skewed_load_steals_and_matches_serial_digest() {
+    use roomy::{hashfn, StealPolicy};
+
+    let (workers, bpw) = (4usize, 2usize);
+    let nb = (workers * bpw) as u32;
+    // deterministically collect values routed to node 0's buckets
+    let mut vals = Vec::new();
+    let mut v = 0u64;
+    while vals.len() < 6_000 {
+        if hashfn::bucket_of_bytes(&v.to_le_bytes(), nb) as usize % workers == 0 {
+            vals.push(v);
+        }
+        v += 1;
+    }
+
+    let run = |nw: usize, steal: StealPolicy| {
+        let (t, r) = roomy_with(&format!("pool_skew_{nw}_{steal}"), |c| {
+            c.workers = workers;
+            c.buckets_per_worker = bpw;
+            c.num_workers = nw;
+            c.steal_policy = steal;
+        });
+        let l = r.list::<u64>("skew").unwrap();
+        for x in &vals {
+            l.add(x).unwrap();
+        }
+        l.sync().unwrap();
+        // a scan-heavy collective over the skewed shards, with a little
+        // CPU per element so node 0's tasks are visibly long
+        let acc = AtomicU64::new(0);
+        l.map(|&x| {
+            acc.fetch_add(x.wrapping_mul(0x9E3779B97F4A7C15), Ordering::Relaxed);
+        })
+        .unwrap();
+        let _ = l.reduce(|| 0u64, |a, &x| a ^ x, |a, b| a.wrapping_add(b)).unwrap();
+
+        if nw > 1 && steal == StealPolicy::Bounded {
+            let st = r.cluster().pool().stats();
+            assert!(st.steals() > 0, "skewed load must trigger steals");
+            assert!(st.locality_hits() > 0, "home drains must dominate");
+            let rate = st.locality_rate();
+            assert!(rate > 0.0 && rate < 1.0, "mixed schedule expected, got {rate}");
+            // queue depth is balanced by construction (count skew lives
+            // in task *weight*): 8 buckets over 4 nodes = 2 each
+            assert_eq!(st.per_node_queue_depth(), vec![2, 2, 2, 2]);
+            assert!(
+                r.report().contains("locality:"),
+                "report must surface the locality counters:\n{}",
+                r.report()
+            );
+        }
+        drop(r);
+        dir_digest(t.path())
+    };
+
+    let serial = run(1, StealPolicy::Off);
+    assert_eq!(
+        run(4, StealPolicy::Bounded),
+        serial,
+        "stealing must not change on-disk bytes"
+    );
+    assert_eq!(
+        run(4, StealPolicy::Off),
+        serial,
+        "strict locality must not change on-disk bytes"
+    );
 }
