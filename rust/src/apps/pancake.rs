@@ -21,8 +21,9 @@ use std::sync::Mutex;
 
 use crate::accel::Accel;
 use crate::constructs::bfs::{self, BfsOutcome, LevelStats, ResumableBfs};
-use crate::error::{Result, RoomyError};
+use crate::error::Result;
 use crate::roomy::Roomy;
+use crate::storage::checkpoint::Checkpointable;
 
 /// Known pancake numbers f(n) (max flips to sort any stack of n), n = 1..
 /// OEIS A058986.
@@ -190,9 +191,9 @@ pub fn roomy_bfs(r: &Roomy, n: usize, structure: Structure, accel: &Accel) -> Re
 /// Disk-based pancake BFS with a durable checkpoint after every level:
 /// kill the process at any point and re-invoke with the same options to
 /// continue from the last completed level — the resumed run's final state
-/// and level profile are byte-identical to an uninterrupted one. Only the
-/// List and Hash variants are resumable (the Array variant's seen-bits +
-/// per-level list pair is not checkpointed yet).
+/// and level profile are byte-identical to an uninterrupted one. All
+/// three variants are resumable; the Array variant snapshots its
+/// seen-bits bit array together with the current level list.
 pub fn roomy_bfs_resumable(
     r: &Roomy,
     n: usize,
@@ -211,9 +212,7 @@ pub fn roomy_bfs_resumable(
     match structure {
         Structure::List => bfs::bfs_list_resumable(r, "pancake", &[start], gen, opts),
         Structure::Hash => bfs::bfs_hash_resumable(r, "pancakeh", &[start], gen, opts),
-        Structure::Array => Err(RoomyError::InvalidArg(
-            "the Array pancake variant has no resumable driver; use list or hash".into(),
-        )),
+        Structure::Array => bfs_array_impl(r, n, Some(opts)),
     }
 }
 
@@ -241,24 +240,66 @@ fn bfs_hash(r: &Roomy, n: usize, accel: &Accel) -> Result<LevelStats> {
 /// RoomyBitArray variant: one seen-bit per Lehmer rank, frontier as lists
 /// of packed states ("elements can be as small as one bit").
 fn bfs_array(r: &Roomy, n: usize) -> Result<LevelStats> {
+    match bfs_array_impl(r, n, None)? {
+        BfsOutcome::Complete(stats) => Ok(stats),
+        BfsOutcome::Suspended { .. } => unreachable!("no checkpoint hook without options"),
+    }
+}
+
+/// The one RoomyBitArray BFS loop both [`bfs_array`] (ckpt = None) and
+/// the resumable Array driver run (mirroring `bfs_list_impl` in
+/// [`crate::constructs::bfs`]): the seen-bits bit array and the current
+/// level list are snapshotted atomically after every completed level, so
+/// a killed run resumes from level *k* with byte-identical final state
+/// and level profile.
+fn bfs_array_impl(r: &Roomy, n: usize, ckpt: Option<&ResumableBfs<'_>>) -> Result<BfsOutcome> {
     let total = factorial(n);
-    let seen = r.bit_array("pancakea_seen", total, 1)?;
     let start = identity_packed(n);
 
-    let mut levels = vec![1u64];
-    let mut level_no = 0u32;
-    // Mark the start.
-    let mark = seen.register_update(|_i, _cur, _p: &()| 1);
-    seen.update(rank_perm(&unpack_perm(start, n)), &(), mark)?;
-    seen.sync()?;
+    let mut resumed = None;
+    if let Some(opts) = ckpt {
+        if opts.manager.exists(&opts.tag) {
+            let m = opts.manager.load_manifest(&opts.tag)?;
+            let levels = bfs::app_levels(&m)?;
+            let lev = bfs::app_u64(&m, "lev")? as u32;
+            if m.app("done") == Some("1") {
+                let total_seen = bfs::app_u64(&m, "total")?;
+                return Ok(BfsOutcome::Complete(LevelStats { levels, total: total_seen }));
+            }
+            let res = opts.manager.restore(&opts.tag)?;
+            let seen = r.restored_bit_array(&res, "pancakea_seen")?;
+            let cur = r.restored_list::<u64>(&res, &format!("pancakea_lev{lev}"))?;
+            resumed = Some((seen, cur, levels, lev));
+        }
+    }
+    let (seen, mut cur, mut levels, mut lev) = match resumed {
+        Some(state) => state,
+        None => {
+            let seen = r.bit_array("pancakea_seen", total, 1)?;
+            // Mark the start.
+            let mark = seen.register_update(|_i, _cur, _p: &()| 1);
+            seen.update(rank_perm(&unpack_perm(start, n)), &(), mark)?;
+            seen.sync()?;
+            let cur = r.list::<u64>("pancakea_lev0")?;
+            cur.add(&start)?;
+            cur.sync()?;
+            let levels = vec![1u64];
+            if let Some(opts) = ckpt {
+                bfs::save_level(opts, &[&seen as &dyn Checkpointable, &cur], 0, &levels)?;
+            }
+            (seen, cur, levels, 0u32)
+        }
+    };
 
-    let mut cur = r.list::<u64>(&format!("pancakea_lev{level_no}"))?;
-    cur.add(&start)?;
-    cur.sync()?;
-
-    loop {
-        level_no += 1;
-        let next = r.list::<u64>(&format!("pancakea_lev{level_no}"))?;
+    let mut completed_here = 0u32;
+    while cur.size() > 0 {
+        if bfs::should_suspend(ckpt, completed_here) {
+            r.release_name(seen.name());
+            r.release_name(cur.name());
+            return Ok(BfsOutcome::Suspended { next_level: lev + 1 });
+        }
+        lev += 1;
+        let next = r.list::<u64>(&format!("pancakea_lev{lev}"))?;
         // visit: set seen bit; newly-seen states go to `next` (the
         // passed value carries the packed state whose rank is `i`).
         let next_emit = next.clone();
@@ -283,23 +324,29 @@ fn bfs_array(r: &Roomy, n: usize) -> Result<LevelStats> {
         seen.sync()?;
         next.sync()?;
 
-        let found = next.size();
-        let old_name = cur.name().to_string();
+        let name = cur.name().to_string();
         cur.destroy()?;
-        r.release_name(&old_name);
-        if found == 0 {
-            let next_name = next.name().to_string();
-            next.destroy()?;
-            r.release_name(&next_name);
-            break;
+        r.release_name(&name);
+        if next.size() > 0 {
+            levels.push(next.size());
         }
-        levels.push(found);
         cur = next;
+        if let Some(opts) = ckpt {
+            bfs::save_level(opts, &[&seen as &dyn Checkpointable, &cur], lev, &levels)?;
+        }
+        completed_here += 1;
     }
+    let name = cur.name().to_string();
+    cur.destroy()?;
+    r.release_name(&name);
     let seen_count = seen.count_value(1);
+    if let Some(opts) = ckpt {
+        bfs::save_final(opts, &[&seen as &dyn Checkpointable], lev, &levels, seen_count)?;
+    }
+    let name = seen.name().to_string();
     seen.destroy()?;
-    r.release_name("pancakea_seen");
-    Ok(LevelStats { levels, total: seen_count })
+    r.release_name(&name);
+    Ok(BfsOutcome::Complete(LevelStats { levels, total: seen_count }))
 }
 
 #[cfg(test)]
@@ -444,18 +491,39 @@ mod tests {
     }
 
     #[test]
-    fn roomy_bfs_resumable_rejects_array_variant() {
-        let t = tmpdir("pk_res_arr");
+    fn roomy_bfs_resumable_array_kill_and_resume_matches_reference_n6() {
+        let t = tmpdir("pk_res_arr6");
+        // session 1: killed after two completed levels
+        {
+            let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
+            let mgr = r.checkpoints().unwrap();
+            let opts = ResumableBfs {
+                manager: &mgr,
+                tag: "pkarr6".into(),
+                stop_after_levels: Some(2),
+            };
+            let out =
+                roomy_bfs_resumable(&r, 6, Structure::Array, &Accel::rust(), &opts).unwrap();
+            assert_eq!(out, BfsOutcome::Suspended { next_level: 3 });
+        }
+        // session 2: fresh process over the same root finishes the search
         let r = Roomy::open(crate::RoomyConfig::for_testing(t.path())).unwrap();
         let mgr = r.checkpoints().unwrap();
         let out = roomy_bfs_resumable(
             &r,
-            5,
+            6,
             Structure::Array,
             &Accel::rust(),
-            &ResumableBfs::new(&mgr, "pkarr"),
-        );
-        assert!(out.is_err());
+            &ResumableBfs::new(&mgr, "pkarr6"),
+        )
+        .unwrap();
+        match out {
+            BfsOutcome::Complete(stats) => {
+                assert_eq!(stats.levels, reference_bfs(6));
+                assert_eq!(stats.total, factorial(6));
+            }
+            other => panic!("expected Complete, got {other:?}"),
+        }
     }
 
     #[test]

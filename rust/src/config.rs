@@ -181,6 +181,29 @@ pub struct RoomyConfig {
     /// on-disk state at every setting. Env `ROOMY_STEAL` overrides, CLI
     /// `--steal`.
     pub steal_policy: StealPolicy,
+    /// Bits per key for the per-node approximate-membership dedup tier
+    /// ([`crate::storage::bloom`]): 0 (the default) disables the filter
+    /// entirely — the seed behavior. A value `b > 0` gives every
+    /// list/set/hashtable bucket a scalable bloom filter sized at `b`
+    /// bits per inserted record (`k = round(b·ln 2)` probe hashes); a
+    /// record the filter proves **definitely new** skips the exact
+    /// sort-merge / full-bucket-replay path and appends directly, while
+    /// any "maybe seen" answer falls through to the exact pass — so
+    /// on-disk bytes stay identical with the filter on or off
+    /// (`tests/determinism.rs` pins this). Filter RAM is metered in
+    /// [`crate::metrics::DedupStats`] against the space bound. Env
+    /// `ROOMY_BLOOM` overrides, CLI `--bloom`.
+    pub bloom_bits_per_key: usize,
+    /// Opt-in approximate dedup mode (requires `bloom_bits_per_key > 0`):
+    /// treat a bloom "maybe seen" answer as **seen** instead of falling
+    /// through to the exact pass. This trades a small, measured
+    /// false-positive rate (genuinely-new records wrongly dropped as
+    /// duplicates — bounded by the bits-per-key budget and reported in
+    /// [`crate::metrics::DedupStats`]) for skipping the exact merge
+    /// entirely. Results are no longer byte-identical to exact mode;
+    /// BFS level counts become lower bounds. Env `ROOMY_BLOOM_APPROX`
+    /// (any non-empty value), CLI `--bloom-approx`.
+    pub bloom_approximate: bool,
     /// In-RAM run size for external sort (bytes).
     pub sort_chunk_bytes: usize,
     /// RAM budget per worker for hash-set based `remove_all` before
@@ -208,6 +231,8 @@ impl RoomyConfig {
             capture_spill_threshold: env_capture_spill().unwrap_or(64 * 1024),
             io_pipeline_depth: env_io_depth().unwrap_or(0),
             steal_policy: env_steal().unwrap_or_default(),
+            bloom_bits_per_key: env_bloom().unwrap_or(0),
+            bloom_approximate: env_bloom_approx(),
             sort_chunk_bytes: 4 * 1024 * 1024,
             ram_budget_bytes: 64 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -237,6 +262,11 @@ impl RoomyConfig {
         if self.num_workers == 0 {
             return Err(crate::RoomyError::InvalidArg(
                 "num_workers must be > 0".into(),
+            ));
+        }
+        if self.bloom_approximate && self.bloom_bits_per_key == 0 {
+            return Err(crate::RoomyError::InvalidArg(
+                "bloom_approximate requires bloom_bits_per_key > 0".into(),
             ));
         }
         if self.op_buffer_bytes == 0
@@ -285,6 +315,19 @@ fn env_steal() -> Option<StealPolicy> {
     std::env::var("ROOMY_STEAL").ok().as_deref().and_then(StealPolicy::parse)
 }
 
+/// Bloom bits-per-key override (`ROOMY_BLOOM`; 0 = filter off), used by
+/// CI to run the whole suite with the approximate-membership dedup tier
+/// fronting every exact pass.
+fn env_bloom() -> Option<usize> {
+    std::env::var("ROOMY_BLOOM").ok().and_then(|s| s.parse::<usize>().ok())
+}
+
+/// Approximate-dedup override (`ROOMY_BLOOM_APPROX`; any non-empty value
+/// enables it). Exact-backed mode stays the default everywhere.
+fn env_bloom_approx() -> bool {
+    std::env::var("ROOMY_BLOOM_APPROX").map(|s| !s.is_empty()).unwrap_or(false)
+}
+
 impl Default for RoomyConfig {
     fn default() -> Self {
         RoomyConfig {
@@ -299,6 +342,8 @@ impl Default for RoomyConfig {
             capture_spill_threshold: env_capture_spill().unwrap_or(4 * 1024 * 1024),
             io_pipeline_depth: env_io_depth().unwrap_or(2),
             steal_policy: env_steal().unwrap_or_default(),
+            bloom_bits_per_key: env_bloom().unwrap_or(0),
+            bloom_approximate: env_bloom_approx(),
             sort_chunk_bytes: 64 * 1024 * 1024,
             ram_budget_bytes: 256 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -371,6 +416,28 @@ mod tests {
         assert_eq!(StealPolicy::parse("half"), None);
         assert!("".parse::<StealPolicy>().is_err());
         assert_eq!(StealPolicy::default(), StealPolicy::Bounded);
+    }
+
+    #[test]
+    fn bloom_defaults_off_and_any_width_validates() {
+        let mut c = RoomyConfig::for_testing("/tmp/x");
+        if std::env::var("ROOMY_BLOOM").is_err() {
+            assert_eq!(c.bloom_bits_per_key, 0, "filter must default off (seed behavior)");
+        }
+        for bits in [0usize, 1, 10, 64] {
+            c.bloom_bits_per_key = bits;
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn approximate_mode_requires_a_filter() {
+        let mut c = RoomyConfig::for_testing("/tmp/x");
+        c.bloom_bits_per_key = 0;
+        c.bloom_approximate = true;
+        assert!(c.validate().is_err());
+        c.bloom_bits_per_key = 10;
+        c.validate().unwrap();
     }
 
     #[test]

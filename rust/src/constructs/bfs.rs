@@ -143,18 +143,18 @@ fn fmt_levels(levels: &[u64]) -> String {
     levels.iter().map(u64::to_string).collect::<Vec<_>>().join(",")
 }
 
-fn app_str<'m>(m: &'m Manifest, key: &str) -> Result<&'m str> {
+pub(crate) fn app_str<'m>(m: &'m Manifest, key: &str) -> Result<&'m str> {
     m.app(key)
         .ok_or_else(|| RoomyError::Checkpoint(format!("BFS checkpoint missing app key {key:?}")))
 }
 
-fn app_u64(m: &Manifest, key: &str) -> Result<u64> {
+pub(crate) fn app_u64(m: &Manifest, key: &str) -> Result<u64> {
     app_str(m, key)?
         .parse()
         .map_err(|_| RoomyError::Checkpoint(format!("BFS checkpoint app key {key:?} is not a number")))
 }
 
-fn app_levels(m: &Manifest) -> Result<Vec<u64>> {
+pub(crate) fn app_levels(m: &Manifest) -> Result<Vec<u64>> {
     app_str(m, "levels")?
         .split(',')
         .map(|v| {
@@ -167,7 +167,7 @@ fn app_levels(m: &Manifest) -> Result<Vec<u64>> {
 
 /// Checkpoint one completed level: the snapshotted structures plus the
 /// driver state (level counter + profile) as app rows.
-fn save_level(
+pub(crate) fn save_level(
     opts: &ResumableBfs<'_>,
     structs: &[&dyn Checkpointable],
     lev: u32,
@@ -182,7 +182,7 @@ fn save_level(
 
 /// Checkpoint the final state (`done` flag + totals) so a re-invocation
 /// returns the finished stats and the tests can digest the result bytes.
-fn save_final(
+pub(crate) fn save_final(
     opts: &ResumableBfs<'_>,
     structs: &[&dyn Checkpointable],
     lev: u32,
@@ -234,7 +234,7 @@ pub fn bfs_hash_resumable<T: Element>(
 /// simulated kill of [`ResumableBfs::stop_after_levels`]. The caller
 /// releases the structure names and abandons the in-RAM state; the
 /// committed checkpoint is the only thing a resume reads.
-fn should_suspend(ckpt: Option<&ResumableBfs<'_>>, completed_here: u32) -> bool {
+pub(crate) fn should_suspend(ckpt: Option<&ResumableBfs<'_>>, completed_here: u32) -> bool {
     ckpt.is_some_and(|o| o.stop_after_levels.is_some_and(|k| completed_here >= k))
 }
 

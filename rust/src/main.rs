@@ -65,6 +65,15 @@ USAGE:
                                        # (default), greedy = flat cursor
                                        # (env ROOMY_STEAL); on-disk bytes
                                        # identical at every setting
+                [--bloom BITS]         # per-key bits for the per-node
+                                       # bloom dedup tier over exact
+                                       # sort-merge; 0 = off (default;
+                                       # env ROOMY_BLOOM). Exact-backed:
+                                       # on-disk bytes identical to off
+                [--bloom-approx]       # approximate mode: drop maybe-seen
+                                       # adds without the exact merge
+                                       # (bounded false-positive budget;
+                                       # env ROOMY_BLOOM_APPROX)
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
                 [--checkpoint-dir DIR] # durable checkpoint after every BFS
@@ -130,6 +139,8 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
             .get_parse("capture-spill", defaults.capture_spill_threshold)?,
         io_pipeline_depth: f.get_parse("io-depth", defaults.io_pipeline_depth)?,
         steal_policy: f.get_parse("steal", defaults.steal_policy)?,
+        bloom_bits_per_key: f.get_parse("bloom", defaults.bloom_bits_per_key)?,
+        bloom_approximate: f.has("bloom-approx") || defaults.bloom_approximate,
         ..defaults
     };
     cfg.root = f

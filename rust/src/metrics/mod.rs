@@ -703,6 +703,152 @@ impl PoolStats {
     }
 }
 
+/// Counters for the approximate-membership dedup tier
+/// ([`crate::storage::bloom`]): how often the per-bucket filters were
+/// probed and what they answered, how many exact-merge passes were
+/// skipped outright (and how many bytes of exact-pass streaming those
+/// skips avoided), and how much RAM the filters hold — the tier's
+/// charge against the space bound.
+#[derive(Debug, Default)]
+pub struct DedupStats {
+    /// Membership probes issued against any shard filter.
+    pub probes: AtomicU64,
+    /// Probes answered "definitely new" (the shortcut-eligible answer).
+    pub definite_new: AtomicU64,
+    /// Probes answered "maybe seen" (falls through to the exact pass in
+    /// exact-backed mode; dropped as a duplicate in approximate mode).
+    pub maybe_seen: AtomicU64,
+    /// Records fed to the filters (every append path feeds them).
+    pub inserts: AtomicU64,
+    /// Exact-merge passes skipped entirely because the filter proved
+    /// every candidate record new (per shard/bucket).
+    pub shortcuts: AtomicU64,
+    /// Exact-merge passes that still ran with the filter enabled
+    /// (at least one "maybe seen" forced the full pass).
+    pub exact_fallbacks: AtomicU64,
+    /// Bytes of exact-pass streaming the shortcuts avoided (seen-set
+    /// shards never read, bucket files never rewritten).
+    pub bytes_avoided: AtomicU64,
+    /// Records dropped as duplicates **without** an exact check
+    /// (approximate mode only; 0 in exact-backed mode).
+    pub approx_dropped: AtomicU64,
+    /// High-water filter RAM across all structures (bytes).
+    pub filter_ram_bytes: AtomicU64,
+}
+
+impl DedupStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one filter bank's current RAM into the high-water mark.
+    pub fn note_ram(&self, bytes: u64) {
+        self.filter_ram_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    /// Charge one exact pass skipped outright, avoiding `bytes` of
+    /// exact-pass streaming.
+    pub fn add_shortcut(&self, bytes: u64) {
+        self.shortcuts.fetch_add(1, Ordering::Relaxed);
+        self.bytes_avoided.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Charge one exact pass that had to run despite the filter.
+    pub fn add_fallback(&self) {
+        self.exact_fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Charge `n` records dropped by approximate mode without an exact
+    /// check.
+    pub fn add_approx_dropped(&self, n: u64) {
+        self.approx_dropped.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> DedupSnapshot {
+        DedupSnapshot {
+            probes: self.probes.load(Ordering::Relaxed),
+            definite_new: self.definite_new.load(Ordering::Relaxed),
+            maybe_seen: self.maybe_seen.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            shortcuts: self.shortcuts.load(Ordering::Relaxed),
+            exact_fallbacks: self.exact_fallbacks.load(Ordering::Relaxed),
+            bytes_avoided: self.bytes_avoided.load(Ordering::Relaxed),
+            approx_dropped: self.approx_dropped.load(Ordering::Relaxed),
+            filter_ram_bytes: self.filter_ram_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.probes.store(0, Ordering::Relaxed);
+        self.definite_new.store(0, Ordering::Relaxed);
+        self.maybe_seen.store(0, Ordering::Relaxed);
+        self.inserts.store(0, Ordering::Relaxed);
+        self.shortcuts.store(0, Ordering::Relaxed);
+        self.exact_fallbacks.store(0, Ordering::Relaxed);
+        self.bytes_avoided.store(0, Ordering::Relaxed);
+        self.approx_dropped.store(0, Ordering::Relaxed);
+        self.filter_ram_bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Plain-data snapshot of [`DedupStats`]; `+` aggregates instances
+/// (filter RAM is a max, everything else sums).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DedupSnapshot {
+    pub probes: u64,
+    pub definite_new: u64,
+    pub maybe_seen: u64,
+    pub inserts: u64,
+    pub shortcuts: u64,
+    pub exact_fallbacks: u64,
+    pub bytes_avoided: u64,
+    pub approx_dropped: u64,
+    pub filter_ram_bytes: u64,
+}
+
+impl DedupSnapshot {
+    /// Fraction of probes answered "definitely new" (0.0 when none).
+    pub fn definite_new_rate(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            self.definite_new as f64 / self.probes as f64
+        }
+    }
+
+    /// Human-readable one-line summary.
+    pub fn report(&self) -> String {
+        format!(
+            "dedup filter: {} probes ({} definitely-new, {} maybe-seen), {} exact passes skipped ({} avoided), {} ran, {} approx-dropped, filter ram {}",
+            self.probes,
+            self.definite_new,
+            self.maybe_seen,
+            self.shortcuts,
+            fmt_bytes(self.bytes_avoided),
+            self.exact_fallbacks,
+            self.approx_dropped,
+            fmt_bytes(self.filter_ram_bytes),
+        )
+    }
+}
+
+impl std::ops::Add for DedupSnapshot {
+    type Output = DedupSnapshot;
+    fn add(self, o: DedupSnapshot) -> DedupSnapshot {
+        DedupSnapshot {
+            probes: self.probes + o.probes,
+            definite_new: self.definite_new + o.definite_new,
+            maybe_seen: self.maybe_seen + o.maybe_seen,
+            inserts: self.inserts + o.inserts,
+            shortcuts: self.shortcuts + o.shortcuts,
+            exact_fallbacks: self.exact_fallbacks + o.exact_fallbacks,
+            bytes_avoided: self.bytes_avoided + o.bytes_avoided,
+            approx_dropped: self.approx_dropped + o.approx_dropped,
+            filter_ram_bytes: self.filter_ram_bytes.max(o.filter_ram_bytes),
+        }
+    }
+}
+
 /// Format a byte count with binary units.
 pub fn fmt_bytes(b: u64) -> String {
     const UNITS: &[&str] = &["B", "KiB", "MiB", "GiB", "TiB"];
@@ -929,6 +1075,37 @@ mod tests {
 
         s.reset();
         assert_eq!(s.snapshot(), PipelineSnapshot::default());
+    }
+
+    #[test]
+    fn dedup_stats_accumulate_and_aggregate() {
+        let s = DedupStats::new();
+        s.probes.fetch_add(10, Ordering::Relaxed);
+        s.definite_new.fetch_add(7, Ordering::Relaxed);
+        s.maybe_seen.fetch_add(3, Ordering::Relaxed);
+        s.inserts.fetch_add(5, Ordering::Relaxed);
+        s.add_shortcut(1024);
+        s.add_shortcut(512);
+        s.add_fallback();
+        s.add_approx_dropped(2);
+        s.note_ram(4096);
+        s.note_ram(2048); // smaller must not lower the high-water mark
+        let a = s.snapshot();
+        assert_eq!(a.probes, 10);
+        assert_eq!(a.shortcuts, 2);
+        assert_eq!(a.bytes_avoided, 1536);
+        assert_eq!(a.exact_fallbacks, 1);
+        assert_eq!(a.approx_dropped, 2);
+        assert_eq!(a.filter_ram_bytes, 4096);
+        assert!((a.definite_new_rate() - 0.7).abs() < 1e-9);
+        assert_eq!(DedupSnapshot::default().definite_new_rate(), 0.0);
+        let b = DedupSnapshot { filter_ram_bytes: 8192, probes: 1, ..Default::default() };
+        let sum = a + b;
+        assert_eq!(sum.probes, 11);
+        assert_eq!(sum.filter_ram_bytes, 8192, "aggregate ram is a max");
+        assert!(a.report().contains("exact passes skipped"), "{}", a.report());
+        s.reset();
+        assert_eq!(s.snapshot(), DedupSnapshot::default());
     }
 
     #[test]

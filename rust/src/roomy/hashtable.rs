@@ -20,7 +20,9 @@ use super::funcs::{AccessId, FuncRegistry, PredId, UpdateId};
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
+use crate::storage::bloom::{DedupFilter, ShardBloom};
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
+use crate::storage::chunkfile::record_count;
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
 
 const SCAN_BATCH: usize = 4096;
@@ -53,6 +55,13 @@ struct HtInner<K: Element, V: Element> {
     /// threads.
     write_lock: std::sync::Mutex<()>,
     size: std::sync::atomic::AtomicI64,
+    /// Optional approximate-membership tier over **keys**
+    /// ([`crate::storage::bloom`]). When a whole bucket op log probes
+    /// definitely-new, `sync_bucket` skips the full-bucket load and
+    /// rewrite and appends the new records in place (byte-identical to
+    /// the rewrite); `fetch` answers definitely-absent without a scan.
+    /// RAM-only: rebuilt from bucket files after a checkpoint restore.
+    bloom: Option<DedupFilter>,
     _t: PhantomData<fn() -> (K, V)>,
 }
 
@@ -68,6 +77,7 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
     fn build(ctx: Ctx, name: &str) -> Result<Self> {
         let dir = format!("rht_{name}");
         let cluster = ctx.cluster.clone();
+        let bloom = ctx.dedup_filter();
         let inner = HtInner {
             staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
             funcs: FuncRegistry::new(&format!("RoomyHashTable({name})")),
@@ -77,6 +87,7 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
             name: name.to_string(),
             dir,
             size: std::sync::atomic::AtomicI64::new(0),
+            bloom,
             _t: PhantomData,
         };
         Ok(RoomyHashTable { inner: Arc::new(inner) })
@@ -84,11 +95,13 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
 
     /// Re-open a restored table over bucket files already on disk
     /// ([`crate::storage::checkpoint`]), reconstituting the in-RAM size
-    /// counter. Registered functions do not survive a checkpoint —
-    /// re-register before staging delayed ops.
+    /// counter and re-deriving the (RAM-only) dedup filters from the
+    /// restored buckets. Registered functions do not survive a
+    /// checkpoint — re-register before staging delayed ops.
     pub(crate) fn open_restored(ctx: Ctx, name: &str, size: u64) -> Result<Self> {
         let ht = Self::build(ctx, name)?;
         ht.inner.size.store(size as i64, std::sync::atomic::Ordering::Relaxed);
+        ht.inner.rebuild_bloom()?;
         Ok(ht)
     }
 
@@ -316,6 +329,15 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
         let kb = key.to_bytes();
         let b = inner.bucket_of_key(&kb);
         let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
+        if let Some(bl) = &inner.bloom {
+            if !bl.probe(b as usize, &kb) {
+                let avoided = record_count(disk, inner.bucket_file(b), K::SIZE + V::SIZE)
+                    * (K::SIZE + V::SIZE) as u64;
+                inner.ctx.dedup.add_shortcut(avoided);
+                return Ok(None);
+            }
+            inner.ctx.dedup.add_fallback();
+        }
         let mut found = None;
         inner.scan_bucket(b, disk, |kv| {
             if kv[..K::SIZE] == kb[..] {
@@ -345,7 +367,11 @@ impl<K: Element, V: Element> Checkpointable for RoomyHashTable<K, V> {
             size: self.size(),
             bits: 0,
             sorted: false,
-            // bucket files are only ever replaced whole (tmp + rename)
+            // Checkpoints treat bucket files as replaced-whole even when
+            // the bloom fast path appends in place: `sync_bucket` only
+            // appends to a bucket whose inode is private (nlink == 1), so
+            // a file hardlinked into (or restored from) a checkpoint is
+            // always rewritten via tmp + rename first.
             appendable: false,
             counts: Vec::new(),
         }
@@ -429,26 +455,30 @@ impl<K: Element, V: Element> HtInner<K, V> {
         self.funcs.charge_preds(0, kvbuf, sign);
     }
 
-    /// Load bucket `b` into a RAM map, apply its op log FIFO, write back.
-    /// Returns the size delta.
+    /// Apply bucket `b`'s op log FIFO and write the result back. Returns
+    /// the size delta.
+    ///
+    /// Without a dedup filter (or when one is inconclusive) this is the
+    /// classic Roomy sync: load the bucket into a RAM [`FlatTable`],
+    /// replay the log, rewrite the bucket whole (tmp + rename). With a
+    /// filter, decoded ops are first buffered — never applied, since
+    /// update/access closures must run exactly once — while every key
+    /// probes definitely-new. If the whole log qualifies, the buffered ops
+    /// replay into an empty table whose records are **appended** to the
+    /// bucket file, skipping the full read + rewrite. The bytes are
+    /// identical to the rewrite: the arena preserves insertion order, so
+    /// the full path would emit exactly (old records in file order ++ new
+    /// records in first-put order). One maybe-seen key, an oversized log,
+    /// or a bucket inode shared with a checkpoint falls back to the exact
+    /// path, replaying the buffered prefix first.
     fn sync_bucket(&self, b: u32, disk: &Arc<NodeDisk>) -> Result<i64> {
         let mut ops =
             self.staged.take(b, &self.ctx.cluster, &self.dir, self.ctx.cfg.op_buffer_bytes);
         if ops.is_empty() {
             return ops.clear().map(|_| 0);
         }
-        // Bucket → RAM (the unit Roomy sizes to fit in memory). FlatTable
-        // keeps records in one arena: no per-record allocations (§Perf P3).
-        let expect = crate::storage::chunkfile::record_count(
-            disk,
-            self.bucket_file(b),
-            Self::rec_size(),
-        ) as usize;
-        let mut table = FlatTable::new(K::SIZE, V::SIZE, expect);
-        self.scan_bucket(b, disk, |kv| {
-            table.put(&kv[..K::SIZE], &kv[K::SIZE..]);
-            Ok(())
-        })?;
+        let file = self.bucket_file(b);
+        let expect = record_count(disk, &file, Self::rec_size()) as usize;
         let npreds = self.funcs.npreds();
         let mut delta = 0i64;
         let mut kvbuf = vec![0u8; Self::rec_size()];
@@ -459,6 +489,13 @@ impl<K: Element, V: Element> HtInner<K, V> {
         let mut header = [0u8; 2];
         let mut key = vec![0u8; K::SIZE];
         let mut payload = Vec::new();
+
+        let mut probing = self.bloom.is_some() && self.bucket_is_private(disk, &file);
+        let mut buffered: Vec<(OpKind, u8, Vec<u8>, Vec<u8>)> = Vec::new();
+        let mut buffered_bytes = 0usize;
+        let budget = self.ctx.cfg.op_buffer_bytes.max(4096);
+        let mut table: Option<FlatTable> = None;
+
         while reader.read_exact_or_eof(&mut header)? {
             let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
                 RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
@@ -482,88 +519,64 @@ impl<K: Element, V: Element> HtInner<K, V> {
             if plen > 0 && !reader.read_exact_or_eof(&mut payload)? {
                 return Err(RoomyError::InvalidArg("truncated op record".into()));
             }
-            // Pre-read the old value only when predicates need it.
-            let mut old_val: Option<Vec<u8>> = None;
-            if npreds > 0 && matches!(kind, OpKind::HtInsert | OpKind::HtRemove | OpKind::HtUpdate)
-            {
-                old_val = table.get(&key).map(|v| v.to_vec());
+            if probing {
+                let bl = self.bloom.as_ref().expect("probing implies a filter");
+                let maybe_seen = bl.probe(b as usize, &key);
+                buffered_bytes += 2 + K::SIZE + plen;
+                buffered.push((kind, fn_id, key.clone(), payload.clone()));
+                if maybe_seen || buffered_bytes > budget {
+                    // Inconclusive (or the backlog outgrew the op buffer):
+                    // close the window; the next op loads the bucket and
+                    // replays the backlog first.
+                    probing = false;
+                }
+                continue;
             }
-            match kind {
-                OpKind::HtInsert => {
-                    let existed = table.put(&key, &payload);
-                    if !existed {
-                        delta += 1;
-                    }
-                    if npreds > 0 {
-                        if let Some(old) = &old_val {
-                            self.charge_kv(&mut kvbuf, &key, old, -1);
-                        }
-                        self.charge_kv(&mut kvbuf, &key, &payload, 1);
-                    }
-                }
-                OpKind::HtRemove => {
-                    if table.remove(&key) {
-                        delta -= 1;
-                        if npreds > 0 {
-                            if let Some(old) = &old_val {
-                                self.charge_kv(&mut kvbuf, &key, old, -1);
-                            }
-                        }
-                    }
-                }
-                OpKind::HtAccess => {
-                    if let Some(val) = table.get(&key) {
-                        kvbuf[..K::SIZE].copy_from_slice(&key);
-                        kvbuf[K::SIZE..].copy_from_slice(val);
-                        self.funcs.apply_access(fn_id, 0, &kvbuf, &payload)?;
-                    }
-                }
-                OpKind::HtUpdate => {
-                    let new = {
-                        let g = self.ht_updates.read().unwrap();
-                        let (_, f) = g.get(fn_id as usize).ok_or_else(|| {
-                            RoomyError::UnknownFunc {
-                                structure: format!("RoomyHashTable({})", self.name),
-                                id: fn_id,
-                            }
-                        })?;
-                        f(&key, table.get(&key), &payload)
-                    };
-                    match new {
-                        Some(v) => {
-                            let existed = table.put(&key, &v);
-                            if !existed {
-                                delta += 1;
-                            }
-                            if npreds > 0 {
-                                if let Some(old) = &old_val {
-                                    self.charge_kv(&mut kvbuf, &key, old, -1);
-                                }
-                                self.charge_kv(&mut kvbuf, &key, &v, 1);
-                            }
-                        }
-                        None => {
-                            if table.remove(&key) {
-                                delta -= 1;
-                                if npreds > 0 {
-                                    if let Some(old) = &old_val {
-                                        self.charge_kv(&mut kvbuf, &key, old, -1);
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-                _ => unreachable!(),
+            if table.is_none() {
+                table = Some(self.load_and_replay(
+                    b,
+                    disk,
+                    expect,
+                    &mut buffered,
+                    npreds,
+                    &mut kvbuf,
+                    &mut delta,
+                )?);
             }
+            let t = table.as_mut().expect("table just loaded");
+            self.apply_op(t, b, kind, fn_id, &key, &payload, npreds, &mut kvbuf, &mut delta)?;
         }
         drop(reader);
 
-        // Write the bucket back (streaming rewrite straight from the
-        // arena, flushed through the write-behind lane).
-        let tmp = format!("{}.sync.tmp", self.bucket_file(b));
-        {
-            let mut w = WriteBehindWriter::create(disk, &tmp, Self::rec_size())?;
+        // The probe window survived the whole log: every key is
+        // definitely new, so replay into an empty table and append.
+        let fast = probing && table.is_none();
+        let table = match table {
+            Some(t) => t,
+            None if fast => {
+                let mut t = FlatTable::new(K::SIZE, V::SIZE, buffered.len());
+                for (kind, fn_id, k, p) in std::mem::take(&mut buffered) {
+                    self.apply_op(&mut t, b, kind, fn_id, &k, &p, npreds, &mut kvbuf, &mut delta)?;
+                }
+                // Avoided streaming every existing record in and back out.
+                self.ctx.dedup.add_shortcut((expect * Self::rec_size() * 2) as u64);
+                t
+            }
+            // The window closed on the final op: load and replay the
+            // backlog even though the streaming loop never got there.
+            None => self.load_and_replay(
+                b,
+                disk,
+                expect,
+                &mut buffered,
+                npreds,
+                &mut kvbuf,
+                &mut delta,
+            )?,
+        };
+
+        if fast {
+            let mut w = WriteBehindWriter::append(disk, &file, Self::rec_size())?;
             let mut err = None;
             table.for_each(|rec| {
                 if err.is_none() {
@@ -576,9 +589,191 @@ impl<K: Element, V: Element> HtInner<K, V> {
                 return Err(e);
             }
             w.finish()?;
+        } else {
+            // Write the bucket back (streaming rewrite straight from the
+            // arena, flushed through the write-behind lane).
+            let tmp = format!("{file}.sync.tmp");
+            {
+                let mut w = WriteBehindWriter::create(disk, &tmp, Self::rec_size())?;
+                let mut err = None;
+                table.for_each(|rec| {
+                    if err.is_none() {
+                        if let Err(e) = w.push(rec) {
+                            err = Some(e);
+                        }
+                    }
+                });
+                if let Some(e) = err {
+                    return Err(e);
+                }
+                w.finish()?;
+            }
+            disk.rename(&tmp, &file)?;
         }
-        disk.rename(&tmp, self.bucket_file(b))?;
         Ok(delta)
+    }
+
+    /// Load bucket `b` into a RAM [`FlatTable`] (the unit Roomy sizes to
+    /// fit in memory; one arena, no per-record allocations — §Perf P3) and
+    /// replay any ops buffered during the probe window, FIFO.
+    #[allow(clippy::too_many_arguments)]
+    fn load_and_replay(
+        &self,
+        b: u32,
+        disk: &Arc<NodeDisk>,
+        expect: usize,
+        buffered: &mut Vec<(OpKind, u8, Vec<u8>, Vec<u8>)>,
+        npreds: usize,
+        kvbuf: &mut [u8],
+        delta: &mut i64,
+    ) -> Result<FlatTable> {
+        if self.bloom.is_some() {
+            self.ctx.dedup.add_fallback();
+        }
+        let mut table = FlatTable::new(K::SIZE, V::SIZE, expect);
+        self.scan_bucket(b, disk, |kv| {
+            table.put(&kv[..K::SIZE], &kv[K::SIZE..]);
+            Ok(())
+        })?;
+        for (kind, fn_id, k, p) in buffered.drain(..) {
+            self.apply_op(&mut table, b, kind, fn_id, &k, &p, npreds, kvbuf, delta)?;
+        }
+        Ok(table)
+    }
+
+    /// Apply one decoded delayed op to `table`, charging predicates and
+    /// feeding the dedup filter with every key that lands in the table.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_op(
+        &self,
+        table: &mut FlatTable,
+        b: u32,
+        kind: OpKind,
+        fn_id: u8,
+        key: &[u8],
+        payload: &[u8],
+        npreds: usize,
+        kvbuf: &mut [u8],
+        delta: &mut i64,
+    ) -> Result<()> {
+        // Pre-read the old value only when predicates need it.
+        let mut old_val: Option<Vec<u8>> = None;
+        if npreds > 0 && matches!(kind, OpKind::HtInsert | OpKind::HtRemove | OpKind::HtUpdate) {
+            old_val = table.get(key).map(|v| v.to_vec());
+        }
+        match kind {
+            OpKind::HtInsert => {
+                let existed = table.put(key, payload);
+                if !existed {
+                    *delta += 1;
+                }
+                if let Some(bl) = &self.bloom {
+                    bl.insert(b as usize, key);
+                }
+                if npreds > 0 {
+                    if let Some(old) = &old_val {
+                        self.charge_kv(kvbuf, key, old, -1);
+                    }
+                    self.charge_kv(kvbuf, key, payload, 1);
+                }
+            }
+            OpKind::HtRemove => {
+                if table.remove(key) {
+                    *delta -= 1;
+                    if npreds > 0 {
+                        if let Some(old) = &old_val {
+                            self.charge_kv(kvbuf, key, old, -1);
+                        }
+                    }
+                }
+            }
+            OpKind::HtAccess => {
+                if let Some(val) = table.get(key) {
+                    kvbuf[..K::SIZE].copy_from_slice(key);
+                    kvbuf[K::SIZE..].copy_from_slice(val);
+                    self.funcs.apply_access(fn_id, 0, kvbuf, payload)?;
+                }
+            }
+            OpKind::HtUpdate => {
+                let new = {
+                    let g = self.ht_updates.read().unwrap();
+                    let (_, f) = g.get(fn_id as usize).ok_or_else(|| {
+                        RoomyError::UnknownFunc {
+                            structure: format!("RoomyHashTable({})", self.name),
+                            id: fn_id,
+                        }
+                    })?;
+                    f(key, table.get(key), payload)
+                };
+                match new {
+                    Some(v) => {
+                        let existed = table.put(key, &v);
+                        if !existed {
+                            *delta += 1;
+                        }
+                        if let Some(bl) = &self.bloom {
+                            bl.insert(b as usize, key);
+                        }
+                        if npreds > 0 {
+                            if let Some(old) = &old_val {
+                                self.charge_kv(kvbuf, key, old, -1);
+                            }
+                            self.charge_kv(kvbuf, key, &v, 1);
+                        }
+                    }
+                    None => {
+                        if table.remove(key) {
+                            *delta -= 1;
+                            if npreds > 0 {
+                                if let Some(old) = &old_val {
+                                    self.charge_kv(kvbuf, key, old, -1);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            other => {
+                return Err(RoomyError::InvalidArg(format!(
+                    "unexpected op kind {other:?} in hash-table log"
+                )))
+            }
+        }
+        Ok(())
+    }
+
+    /// True when bucket file `file` may be appended to in place: its
+    /// inode must not be shared (hardlinked) with a checkpoint. A missing
+    /// file is private — append creates it.
+    #[cfg(unix)]
+    fn bucket_is_private(&self, disk: &Arc<NodeDisk>, file: &str) -> bool {
+        use std::os::unix::fs::MetadataExt;
+        match std::fs::metadata(disk.root().join(file)) {
+            Ok(m) => m.nlink() == 1,
+            Err(_) => true,
+        }
+    }
+
+    #[cfg(not(unix))]
+    fn bucket_is_private(&self, _disk: &Arc<NodeDisk>, _file: &str) -> bool {
+        false
+    }
+
+    /// Re-derive the per-bucket dedup filters from the on-disk bucket
+    /// files (after a checkpoint restore — filters are never serialized).
+    fn rebuild_bloom(&self) -> Result<()> {
+        let Some(bloom) = &self.bloom else { return Ok(()) };
+        let bits = bloom.bits_per_key();
+        self.ctx.cluster.run_buckets("rht.bloom_rebuild", |b, disk| {
+            bloom.with_shard(b as usize, |s| {
+                *s = ShardBloom::new(bits);
+                self.scan_bucket(b, disk, |kv| {
+                    s.insert(&kv[..K::SIZE]);
+                    Ok(())
+                })
+            })
+        })?;
+        Ok(())
     }
 }
 
@@ -739,6 +934,126 @@ mod tests {
         })
         .unwrap();
         assert_eq!(count.into_inner(), 100);
+    }
+
+    fn mk_bloom(root: &std::path::Path) -> Roomy {
+        let mut cfg = crate::RoomyConfig::for_testing(root);
+        cfg.bloom_bits_per_key = 10;
+        cfg.bloom_approximate = false;
+        Roomy::open(cfg).unwrap()
+    }
+
+    /// Collect (worker-qualified name, bytes) for every bucket file under
+    /// `dir` on every worker root, sorted for cross-run comparison.
+    fn ht_bucket_bytes(r: &Roomy, dir: &str) -> Vec<(String, Vec<u8>)> {
+        let mut out = Vec::new();
+        for w in 0..r.cluster().nworkers() {
+            let root = r.cluster().disk(w).root().join(dir);
+            if !root.exists() {
+                continue;
+            }
+            let mut names: Vec<String> = std::fs::read_dir(&root)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().into_string().unwrap())
+                .collect();
+            names.sort();
+            for n in names {
+                out.push((format!("w{w}/{n}"), std::fs::read(root.join(&n)).unwrap()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn bloom_fast_path_bytes_match_plain_rewrite() {
+        let tp = tmpdir("ht_bloom_plain");
+        let tb = tmpdir("ht_bloom_fast");
+        let plain = mk(tp.path());
+        let bloomed = mk_bloom(tb.path());
+        for r in [&plain, &bloomed] {
+            let ht = r.hash_table::<u64, u64>("h").unwrap();
+            // Three waves of all-new keys: with the filter on, every wave
+            // takes the append fast path instead of the full rewrite.
+            for wave in 0..3u64 {
+                for k in (wave * 400)..(wave * 400 + 400) {
+                    ht.insert(&k, &(k * 7)).unwrap();
+                }
+                ht.sync().unwrap();
+            }
+            assert_eq!(ht.size(), 1200);
+        }
+        assert_eq!(
+            ht_bucket_bytes(&plain, "rht_h"),
+            ht_bucket_bytes(&bloomed, "rht_h"),
+            "append fast path must be byte-identical to the rewrite"
+        );
+        let snap = bloomed.dedup_snapshot();
+        assert!(snap.shortcuts > 0, "fast path never taken: {snap:?}");
+    }
+
+    #[test]
+    fn bloom_dup_keys_fall_back_to_exact() {
+        let t = tmpdir("ht_bloom_dup");
+        let r = mk_bloom(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        for k in 0..300u64 {
+            ht.insert(&k, &1).unwrap();
+        }
+        ht.sync().unwrap();
+        // Overwrite the same keys: every bucket log probes maybe-seen and
+        // takes the exact rewrite.
+        for k in 0..300u64 {
+            ht.insert(&k, &2).unwrap();
+        }
+        ht.sync().unwrap();
+        assert_eq!(ht.size(), 300);
+        assert_eq!(ht.fetch(&123).unwrap(), Some(2));
+        assert!(r.dedup_snapshot().exact_fallbacks > 0);
+    }
+
+    #[test]
+    fn bloom_update_fast_path_insert_if_absent() {
+        let t = tmpdir("ht_bloom_upd");
+        let r = mk_bloom(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        let bump = ht.register_update(|_k, cur: Option<&u32>, _p: &()| {
+            Some(cur.copied().unwrap_or(0) + 1)
+        });
+        for k in 0..200u64 {
+            ht.update(&k, &(), bump).unwrap();
+        }
+        ht.sync().unwrap();
+        assert_eq!(ht.size(), 200);
+        assert_eq!(ht.fetch(&7).unwrap(), Some(1));
+        let snap = r.dedup_snapshot();
+        assert!(snap.shortcuts > 0, "update-only new-key log should fast-path: {snap:?}");
+        // A second round over the same keys must fall back and bump to 2.
+        for k in 0..200u64 {
+            ht.update(&k, &(), bump).unwrap();
+        }
+        ht.sync().unwrap();
+        assert_eq!(ht.fetch(&7).unwrap(), Some(2));
+        assert_eq!(ht.size(), 200);
+    }
+
+    #[test]
+    fn bloom_fetch_answers_absent_without_scan() {
+        let t = tmpdir("ht_bloom_fetch");
+        let r = mk_bloom(t.path());
+        let ht = r.hash_table::<u64, u32>("h").unwrap();
+        for k in 0..100u64 {
+            ht.insert(&k, &(k as u32)).unwrap();
+        }
+        ht.sync().unwrap();
+        for k in 0..100u64 {
+            assert_eq!(ht.fetch(&k).unwrap(), Some(k as u32));
+        }
+        for k in 10_000..10_100u64 {
+            assert_eq!(ht.fetch(&k).unwrap(), None);
+        }
+        let snap = r.dedup_snapshot();
+        assert!(snap.probes >= 200);
+        assert!(snap.shortcuts > 0, "absent fetches should shortcut: {snap:?}");
     }
 
     #[test]

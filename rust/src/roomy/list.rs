@@ -23,6 +23,7 @@ use super::funcs::{FuncRegistry, PredId};
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
+use crate::storage::bloom::{DedupFilter, ShardBloom};
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
 use crate::storage::extsort;
@@ -59,6 +60,12 @@ struct ListInner<T: Element> {
     /// `remove_dupes`, cleared by appends) — lets repeated dedups and
     /// `remove_all` skip re-sorting.
     sorted: AtomicBool,
+    /// Per-shard approximate-membership filters
+    /// ([`crate::storage::bloom`]); `None` when `bloom_bits_per_key` is
+    /// 0. Fed by every append path (`sync_shard` adds, `add_all`),
+    /// probed by `remove_all` against the *other* list's filter. RAM
+    /// only — never checkpointed, rebuilt on restore.
+    bloom: Option<DedupFilter>,
     _t: PhantomData<fn() -> T>,
 }
 
@@ -74,6 +81,7 @@ impl<T: Element> RoomyList<T> {
     fn build(ctx: Ctx, name: &str) -> Result<Self> {
         let dir = format!("rl_{name}");
         let cluster = ctx.cluster.clone();
+        let bloom = ctx.dedup_filter();
         let inner = ListInner {
             staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
             funcs: FuncRegistry::new(&format!("RoomyList({name})")),
@@ -83,6 +91,7 @@ impl<T: Element> RoomyList<T> {
             dir,
             size: AtomicI64::new(0),
             sorted: AtomicBool::new(false),
+            bloom,
             _t: PhantomData,
         };
         Ok(RoomyList { inner: Arc::new(inner) })
@@ -92,10 +101,14 @@ impl<T: Element> RoomyList<T> {
     /// ([`crate::storage::checkpoint`]), reconstituting the in-RAM size
     /// counter and sorted flag from the checkpoint manifest. Registered
     /// predicates do not survive a checkpoint — re-register if needed.
+    /// The bloom filters (when enabled) are RAM-only and never
+    /// checkpointed; they are rebuilt here from the restored shard
+    /// files, so on-disk state stays byte-identical filter on or off.
     pub(crate) fn open_restored(ctx: Ctx, name: &str, size: u64, sorted: bool) -> Result<Self> {
         let list = Self::build(ctx, name)?;
         list.inner.size.store(size as i64, Ordering::Relaxed);
         list.inner.sorted.store(sorted, Ordering::Relaxed);
+        list.inner.rebuild_bloom()?;
         Ok(list)
     }
 
@@ -202,6 +215,9 @@ impl<T: Element> RoomyList<T> {
                 if got == 0 {
                     break;
                 }
+                if let Some(bl) = &inner.bloom {
+                    bl.insert_batch(b as usize, &buf, T::SIZE);
+                }
                 w_.push_batch(&buf)?;
                 n += got as i64;
             }
@@ -239,6 +255,45 @@ impl<T: Element> RoomyList<T> {
             }
             let their_bytes = disk.len(&theirs) as usize;
             let npreds = inner.funcs.npreds();
+            // Bloom front: probe `other`'s per-shard filter with our own
+            // records before touching `theirs` at all.
+            if let Some(ob) = other.inner.bloom.as_ref() {
+                if ob.approximate() {
+                    // Approximate mode: treat "maybe in other" as "in
+                    // other" — rewrite `mine` keeping only records the
+                    // filter proves absent from `other`, never reading
+                    // `theirs`. False positives (genuinely-new records
+                    // dropped) are bounded by the bits-per-key budget
+                    // and metered.
+                    let dropped =
+                        inner.filter_shard(b, disk, |rec| !ob.probe(b as usize, rec))?;
+                    inner.ctx.dedup.add_shortcut(their_bytes as u64);
+                    inner.ctx.dedup.add_approx_dropped(dropped as u64);
+                    return Ok(dropped);
+                }
+                if their_bytes <= ram_budget {
+                    // Exact-backed shortcut: if every record of ours is
+                    // *definitely* not in `other`, nothing would be
+                    // removed — skip streaming `theirs` and skip the
+                    // rewrite (which would reproduce `mine` byte for
+                    // byte). Only valid on the hash-set path: the
+                    // sort-merge path below rewrites `mine` in sorted
+                    // order even when it removes nothing, so skipping
+                    // it would change bytes vs the filter-off run.
+                    let mut any_maybe = false;
+                    inner.scan_shard(b, disk, |rec| {
+                        if !any_maybe && ob.probe(b as usize, rec) {
+                            any_maybe = true;
+                        }
+                        Ok(())
+                    })?;
+                    if !any_maybe {
+                        inner.ctx.dedup.add_shortcut(their_bytes as u64);
+                        return Ok(0);
+                    }
+                }
+                inner.ctx.dedup.add_fallback();
+            }
             if their_bytes <= ram_budget {
                 // Hash-set filter: stream `other`'s shard into RAM
                 // (read-ahead; adopts the task's prefetch hint),
@@ -464,6 +519,23 @@ impl<T: Element> ListInner<T> {
         self.ctx.cluster.topology().route(elt_bytes)
     }
 
+    /// Re-derive every shard's bloom filter from its on-disk records
+    /// (checkpoint restore: filters are RAM-only and never serialized).
+    fn rebuild_bloom(&self) -> Result<()> {
+        let Some(bloom) = &self.bloom else { return Ok(()) };
+        let bits = bloom.bits_per_key();
+        self.ctx.cluster.run_buckets("rl.bloom_rebuild", |b, disk| {
+            bloom.with_shard(b as usize, |s| {
+                *s = ShardBloom::new(bits);
+                self.scan_shard(b, disk, |rec| {
+                    s.insert(rec);
+                    Ok(())
+                })
+            })
+        })?;
+        Ok(())
+    }
+
     fn shard_file(&self, b: u32) -> String {
         format!("{}/s{b}.dat", self.dir)
     }
@@ -597,6 +669,9 @@ impl<T: Element> ListInner<T> {
                             )?);
                         }
                         writer.as_mut().unwrap().push(&elt)?;
+                        if let Some(bl) = &self.bloom {
+                            bl.insert(b as usize, &elt);
+                        }
                         added += 1;
                         if npreds > 0 {
                             self.funcs.charge_preds(0, &elt, 1);
@@ -829,6 +904,78 @@ mod tests {
         assert_eq!(l.size(), n);
         l.remove_dupes().unwrap();
         assert_eq!(l.size(), 1000);
+    }
+
+    fn mk_bloom(root: &std::path::Path, approx: bool) -> Roomy {
+        let mut cfg = crate::RoomyConfig::for_testing(root);
+        cfg.bloom_bits_per_key = 10;
+        cfg.bloom_approximate = approx;
+        Roomy::open(cfg).unwrap()
+    }
+
+    #[test]
+    fn bloom_exact_remove_all_matches_plain() {
+        let t = tmpdir("rl_bloom_exact");
+        let r = mk_bloom(t.path(), false);
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for v in 0..500u64 {
+            a.add(&v).unwrap();
+        }
+        for v in (0..500u64).step_by(2) {
+            b.add(&v).unwrap();
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        a.remove_all(&b).unwrap();
+        let expect: Vec<u64> = (0..500).filter(|v| v % 2 == 1).collect();
+        assert_eq!(sorted_collect(&a), expect);
+        let snap = r.dedup_snapshot();
+        assert!(snap.probes > 0, "filter was never probed");
+        assert_eq!(snap.approx_dropped, 0, "exact mode must never approx-drop");
+    }
+
+    #[test]
+    fn bloom_shortcut_skips_exact_pass_on_disjoint_lists() {
+        let t = tmpdir("rl_bloom_skip");
+        let r = mk_bloom(t.path(), false);
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for v in 0..500u64 {
+            a.add(&v).unwrap();
+            b.add(&(v + 10_000)).unwrap(); // fully disjoint
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        a.remove_all(&b).unwrap();
+        assert_eq!(a.size(), 500, "disjoint remove_all must remove nothing");
+        let snap = r.dedup_snapshot();
+        assert!(snap.shortcuts > 0, "no shard skipped its exact pass: {snap:?}");
+        assert!(snap.bytes_avoided > 0);
+    }
+
+    #[test]
+    fn bloom_approximate_remove_all_never_reads_theirs() {
+        let t = tmpdir("rl_bloom_approx");
+        let r = mk_bloom(t.path(), true);
+        let a = r.list::<u64>("a").unwrap();
+        let b = r.list::<u64>("b").unwrap();
+        for v in 0..500u64 {
+            a.add(&v).unwrap();
+        }
+        for v in (0..500u64).step_by(2) {
+            b.add(&v).unwrap();
+        }
+        a.sync().unwrap();
+        b.sync().unwrap();
+        a.remove_all(&b).unwrap();
+        // Every even is in b's filter (no false negatives), so at most
+        // the odds survive; false positives may drop a few odds too.
+        let got = sorted_collect(&a);
+        assert!(got.iter().all(|v| v % 2 == 1), "an even survived: {got:?}");
+        assert!(got.len() >= 200, "implausibly many false positives: {}", got.len());
+        let snap = r.dedup_snapshot();
+        assert!(snap.shortcuts > 0, "approx mode always skips the exact pass");
     }
 
     #[test]

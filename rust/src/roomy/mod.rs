@@ -39,18 +39,41 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::cluster::Cluster;
 use crate::config::RoomyConfig;
 use crate::error::{Result, RoomyError};
+use crate::metrics::DedupStats;
 use crate::runtime::Engine;
+use crate::storage::bloom::DedupFilter;
 use crate::storage::checkpoint::{CheckpointManager, Restored, StructKind};
 
 /// Shared context threaded through every structure: configuration, the
-/// cluster, and the lazily-initialized XLA engine.
+/// cluster, the lazily-initialized XLA engine, and the instance-wide
+/// dedup-tier counters.
 pub(crate) struct CtxInner {
     pub cfg: RoomyConfig,
     pub cluster: Arc<Cluster>,
     pub engine: OnceLock<Option<Arc<Engine>>>,
+    pub dedup: Arc<DedupStats>,
 }
 
 pub(crate) type Ctx = Arc<CtxInner>;
+
+impl CtxInner {
+    /// A fresh per-bucket bloom filter bank for one structure, or `None`
+    /// when the tier is disabled (`bloom_bits_per_key == 0`). Structures
+    /// that participate in dup-elim (list, set, hashtable) call this at
+    /// create/restore time; every filter bank shares the instance's
+    /// [`DedupStats`].
+    pub fn dedup_filter(&self) -> Option<DedupFilter> {
+        if self.cfg.bloom_bits_per_key == 0 {
+            return None;
+        }
+        Some(DedupFilter::new(
+            self.cfg.nbuckets(),
+            self.cfg.bloom_bits_per_key,
+            self.cfg.bloom_approximate,
+            Arc::clone(&self.dedup),
+        ))
+    }
+}
 
 /// Handle to a Roomy instance. Cheap to clone.
 #[derive(Clone)]
@@ -65,7 +88,12 @@ impl Roomy {
     pub fn open(cfg: RoomyConfig) -> Result<Roomy> {
         let cluster = Arc::new(Cluster::new(&cfg)?);
         Ok(Roomy {
-            ctx: Arc::new(CtxInner { cfg, cluster, engine: OnceLock::new() }),
+            ctx: Arc::new(CtxInner {
+                cfg,
+                cluster,
+                engine: OnceLock::new(),
+                dedup: Arc::new(DedupStats::new()),
+            }),
             names: Arc::new(Mutex::new(HashSet::new())),
         })
     }
@@ -235,6 +263,13 @@ impl Roomy {
         self.ctx.cluster.io_snapshot()
     }
 
+    /// Point-in-time counters of the approximate-membership dedup tier
+    /// ([`crate::storage::bloom`]); all zeros when `bloom_bits_per_key`
+    /// is 0.
+    pub fn dedup_snapshot(&self) -> crate::metrics::DedupSnapshot {
+        self.ctx.dedup.snapshot()
+    }
+
     /// Multi-line human-readable metrics report.
     pub fn report(&self) -> String {
         let io = self.io_snapshot();
@@ -267,6 +302,14 @@ impl Roomy {
             pipe.hint_hit_rate() * 100.0,
             pipe.hint_wastes,
         ));
+        if self.ctx.cfg.bloom_bits_per_key > 0 {
+            s.push_str(&format!(
+                "{} ({} bits/key, {} mode)\n",
+                self.dedup_snapshot().report(),
+                self.ctx.cfg.bloom_bits_per_key,
+                if self.ctx.cfg.bloom_approximate { "approximate" } else { "exact-backed" },
+            ));
+        }
         s.push_str("phases:\n");
         s.push_str(&self.ctx.cluster.phases().report());
         s.push_str(&format!(

@@ -22,6 +22,7 @@ use super::element::Element;
 use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
+use crate::storage::bloom::{DedupFilter, ShardBloom};
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
@@ -49,6 +50,14 @@ struct SetInner<T: Element> {
     /// against concurrent client threads.
     write_lock: std::sync::Mutex<()>,
     size: AtomicI64,
+    /// Optional approximate-membership tier ([`crate::storage::bloom`]).
+    /// Fed by every append path (sync merges and union merges); fronts
+    /// `contains` in exact-backed mode and drops maybe-seen adds before
+    /// the merge in approximate mode. Shards here stay sorted and are
+    /// replaced whole at sync, so there is no append-bypass — the list
+    /// and hashtable carry that shortcut. RAM-only: rebuilt from shard
+    /// files after a checkpoint restore, never serialized.
+    bloom: Option<DedupFilter>,
     _t: PhantomData<fn() -> T>,
 }
 
@@ -64,6 +73,7 @@ impl<T: Element> RoomySet<T> {
     fn build(ctx: Ctx, name: &str) -> Result<Self> {
         let dir = format!("rs_{name}");
         let cluster = ctx.cluster.clone();
+        let bloom = ctx.dedup_filter();
         Ok(RoomySet {
             inner: Arc::new(SetInner {
                 staged: StagedOps::new(&cluster, &dir, ctx.cfg.op_buffer_bytes),
@@ -72,6 +82,7 @@ impl<T: Element> RoomySet<T> {
                 name: name.to_string(),
                 dir,
                 size: AtomicI64::new(0),
+                bloom,
                 _t: PhantomData,
             }),
         })
@@ -79,10 +90,12 @@ impl<T: Element> RoomySet<T> {
 
     /// Re-open a restored set over shard files already on disk
     /// ([`crate::storage::checkpoint`]), reconstituting the in-RAM size
-    /// counter.
+    /// counter and re-deriving the (RAM-only) dedup filters from the
+    /// restored shards.
     pub(crate) fn open_restored(ctx: Ctx, name: &str, size: u64) -> Result<Self> {
         let set = Self::build(ctx, name)?;
         set.inner.size.store(size as i64, Ordering::Relaxed);
+        set.inner.rebuild_bloom()?;
         Ok(set)
     }
 
@@ -147,11 +160,23 @@ impl<T: Element> RoomySet<T> {
     }
 
     /// Membership probe (immediate, **debug/testing**: random access).
+    ///
+    /// With the dedup tier enabled, a "definitely new" filter answer
+    /// settles the probe without touching disk; only "maybe seen" falls
+    /// through to the exact shard scan, so the answer is always exact.
     pub fn contains(&self, elt: &T) -> Result<bool> {
         let inner = &self.inner;
         let eb = elt.to_bytes();
         let b = inner.ctx.cluster.topology().route(&eb);
         let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
+        if let Some(bl) = &inner.bloom {
+            if !bl.probe(b as usize, &eb) {
+                let avoided = record_count(disk, &inner.shard_file(b), T::SIZE) * T::SIZE as u64;
+                inner.ctx.dedup.add_shortcut(avoided);
+                return Ok(false);
+            }
+            inner.ctx.dedup.add_fallback();
+        }
         let mut found = false;
         inner.scan_shard(b, disk, |rec| {
             if rec == &eb[..] {
@@ -325,6 +350,23 @@ impl<T: Element> SetInner<T> {
         }
     }
 
+    /// Re-derive every shard's dedup filter from the authoritative shard
+    /// files (checkpoint restore: filters are RAM-only, never serialized).
+    fn rebuild_bloom(&self) -> Result<()> {
+        let Some(bloom) = &self.bloom else { return Ok(()) };
+        let bits = bloom.bits_per_key();
+        self.ctx.cluster.run_buckets("rset.bloom_rebuild", |b, disk| {
+            bloom.with_shard(b as usize, |s| {
+                *s = ShardBloom::new(bits);
+                self.scan_shard(b, disk, |rec| {
+                    s.insert(rec);
+                    Ok(())
+                })
+            })
+        })?;
+        Ok(())
+    }
+
     /// One streaming merge of (sorted shard) with (sorted staged deltas).
     fn sync_shard(&self, b: u32, disk: &Arc<NodeDisk>) -> Result<i64> {
         let mut ops =
@@ -362,6 +404,29 @@ impl<T: Element> SetInner<T> {
             }
         }
 
+        // Approximate mode: treat "maybe seen" adds as duplicates and
+        // drop them before the merge; if nothing survives, the shard
+        // merge (a full sorted rewrite) is skipped outright. Exact-backed
+        // mode never prunes here — the sorted rewrite must see every
+        // verdict to keep bytes identical to the filter-off run.
+        if let Some(bl) = &self.bloom {
+            if bl.approximate() {
+                let before = verdicts.len();
+                verdicts.retain(|(elt, is_add)| !*is_add || !bl.probe(b as usize, elt));
+                let dropped = before - verdicts.len();
+                if dropped > 0 {
+                    self.ctx.dedup.add_approx_dropped(dropped as u64);
+                }
+                if verdicts.is_empty() {
+                    let avoided =
+                        record_count(disk, &self.shard_file(b), T::SIZE) * T::SIZE as u64;
+                    self.ctx.dedup.add_shortcut(avoided);
+                    return Ok(0);
+                }
+                self.ctx.dedup.add_fallback();
+            }
+        }
+
         // Streaming merge with the sorted shard file.
         let file = self.shard_file(b);
         let tmp = format!("{file}.sync.tmp");
@@ -379,6 +444,11 @@ impl<T: Element> SetInner<T> {
                 {
                     if verdicts[*vi].1 {
                         w.push(&verdicts[*vi].0)?;
+                        // genuinely-new element entering the shard: feed
+                        // the dedup filter (append-path soundness rule)
+                        if let Some(bl) = &self.bloom {
+                            bl.insert(b as usize, &verdicts[*vi].0);
+                        }
                         *delta += 1;
                     }
                     *vi += 1;
@@ -460,6 +530,11 @@ impl<T: Element> SetInner<T> {
                     (false, true) => {
                         if matches!(op, SetOp::Union) {
                             w.push(&b_rec)?;
+                            // record from `other` entering this set: feed
+                            // the dedup filter (append-path soundness)
+                            if let Some(bl) = &self.bloom {
+                                bl.insert(b as usize, &b_rec);
+                            }
                             written += 1;
                         }
                         have_b = rb.as_mut().unwrap().read_one(&mut b_rec)?;
@@ -475,6 +550,9 @@ impl<T: Element> SetInner<T> {
                         std::cmp::Ordering::Greater => {
                             if matches!(op, SetOp::Union) {
                                 w.push(&b_rec)?;
+                                if let Some(bl) = &self.bloom {
+                                    bl.insert(b as usize, &b_rec);
+                                }
                                 written += 1;
                             }
                             have_b = rb.as_mut().unwrap().read_one(&mut b_rec)?;
@@ -683,6 +761,86 @@ mod tests {
         }
         s.sync().unwrap();
         assert_eq!(s.size(), 5000);
+    }
+
+    fn mk_bloom(root: &std::path::Path, approx: bool) -> Roomy {
+        let mut cfg = crate::RoomyConfig::for_testing(root);
+        cfg.bloom_bits_per_key = 10;
+        cfg.bloom_approximate = approx;
+        Roomy::open(cfg).unwrap()
+    }
+
+    #[test]
+    fn bloom_exact_mode_matches_plain_semantics() {
+        let t0 = tmpdir("rset_bl_off");
+        let t1 = tmpdir("rset_bl_on");
+        let run = |r: &Roomy| -> (BTreeSet<u64>, u64) {
+            let s = r.set::<u64>("s").unwrap();
+            for v in [9u64, 3, 7, 1, 3, 100, 55] {
+                s.add(&v).unwrap();
+            }
+            s.sync().unwrap();
+            for v in [2u64, 8, 4, 7] {
+                s.add(&v).unwrap();
+            }
+            s.remove(&9).unwrap();
+            s.sync().unwrap();
+            (as_btree(&s), s.size())
+        };
+        let plain = run(&mk(t0.path()));
+        let bloomed = run(&mk_bloom(t1.path(), false));
+        assert_eq!(plain, bloomed);
+        assert_eq!(plain.0, BTreeSet::from([1, 2, 3, 4, 7, 8, 55, 100]));
+    }
+
+    #[test]
+    fn bloom_fronts_contains_without_scanning() {
+        let t = tmpdir("rset_bl_contains");
+        let r = mk_bloom(t.path(), false);
+        let s = r.set::<u64>("s").unwrap();
+        for v in 0..100u64 {
+            s.add(&v).unwrap();
+        }
+        s.sync().unwrap();
+        for v in 0..100u64 {
+            assert!(s.contains(&v).unwrap(), "fed element must be found");
+        }
+        for v in 1000..1100u64 {
+            assert!(!s.contains(&v).unwrap(), "absent element must stay absent");
+        }
+        let snap = r.dedup_snapshot();
+        assert!(snap.probes >= 200, "every contains goes through the filter");
+        assert!(snap.shortcuts > 0, "definitely-new probes skip the shard scan");
+    }
+
+    #[test]
+    fn bloom_approximate_drops_duplicate_adds_before_merge() {
+        let t = tmpdir("rset_bl_approx");
+        let r = mk_bloom(t.path(), true);
+        let s = r.set::<u64>("s").unwrap();
+        for v in 0..500u64 {
+            s.add(&v).unwrap();
+        }
+        s.sync().unwrap();
+        assert_eq!(s.size(), 500);
+        // Re-adding the same elements: every add probes maybe-seen (no
+        // false negatives over the fed set), so the whole second sync
+        // short-circuits without a merge.
+        for v in 0..500u64 {
+            s.add(&v).unwrap();
+        }
+        s.sync().unwrap();
+        assert_eq!(s.size(), 500);
+        let snap = r.dedup_snapshot();
+        assert_eq!(snap.approx_dropped, 500);
+        assert!(snap.shortcuts > 0, "all-duplicate shards skip the merge");
+        // Genuinely-new elements still land (modulo the small measured
+        // FP budget — deterministic for a fixed key set).
+        for v in 500..550u64 {
+            s.add(&v).unwrap();
+        }
+        s.sync().unwrap();
+        assert!(s.size() >= 540 && s.size() <= 550, "size {}", s.size());
     }
 
     #[test]

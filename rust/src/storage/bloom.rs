@@ -1,0 +1,371 @@
+//! Approximate-membership dedup tier: per-bucket scalable bloom filters.
+//!
+//! Duplicate elimination is the dominant cost of every Roomy BFS level —
+//! the exact path sorts and merges the full seen set against the
+//! frontier every level. When
+//! [`RoomyConfig::bloom_bits_per_key`](crate::RoomyConfig::bloom_bits_per_key)
+//! is > 0, each list shard / set shard / hashtable bucket keeps a
+//! [`ShardBloom`] in RAM that answers one question without touching
+//! disk: *is this record **definitely new**?*
+//!
+//! - **Exact-backed mode** (the default once enabled): a "definitely
+//!   new" answer lets the caller skip the exact sort-merge or
+//!   full-bucket replay and append directly; a "maybe seen" answer falls
+//!   through to the unchanged exact pass. Because a bloom filter has no
+//!   false negatives over its fed set, the *result bytes are identical*
+//!   to the filter-off run — only the amount of exact-pass work changes
+//!   (`tests/determinism.rs` and `tests/integration_dedup.rs` pin this).
+//! - **Approximate mode**
+//!   ([`bloom_approximate`](crate::RoomyConfig::bloom_approximate)):
+//!   "maybe seen" is treated as seen and the record is dropped without
+//!   an exact check. The false-positive rate is bounded by the
+//!   bits-per-key budget (~`0.6185^bits` per probe) and measured in
+//!   [`crate::metrics::DedupStats`].
+//!
+//! ## Why per bucket, and why rebuilt instead of checkpointed
+//!
+//! Filters shard exactly like the data: one filter per bucket, touched
+//! only by the pool task that owns that bucket during a collective — no
+//! shared mutable state, so the tier composes with any
+//! `Topology`/steal-policy schedule unchanged. Filters are **RAM-only**:
+//! checkpoints never contain them, and a restored structure rebuilds its
+//! filters by streaming the restored bucket files once
+//! ([`DedupFilter::rebuild_shard`]). That keeps checkpoint manifests and
+//! on-disk digests byte-identical with the filter on or off, which is
+//! what lets kill-and-resume stay pinned against filter-less reference
+//! runs.
+//!
+//! Soundness rule for callers: **every append path must feed the
+//! filter** (over-approximation is safe, under-feeding is not — a
+//! record on disk that the filter never saw would later be called
+//! "definitely new" and duplicated in exact mode). Removals do *not*
+//! clear bits; a removed-then-readded record simply takes the exact
+//! path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::hashfn::fp_bytes;
+use crate::metrics::DedupStats;
+
+/// A scalable bloom filter over raw record bytes.
+///
+/// Grows as a sequence of sub-filters with doubling capacity (starting
+/// at [`ShardBloom::FIRST_BITS`] bits): inserts go to the newest
+/// sub-filter, probes OR across all of them. Growth is driven purely by
+/// the deterministic insert count, so two filters fed the same multiset
+/// in any order hold the same bits per sub-filter boundary only if fed
+/// in the same counts — callers never rely on bit equality, only on the
+/// no-false-negative guarantee, which holds regardless.
+#[derive(Debug)]
+pub struct ShardBloom {
+    /// Probe hashes per record: `max(1, round(bits_per_key · ln 2))`.
+    k: u32,
+    /// Bits budgeted per inserted key; fixes each sub-filter's capacity.
+    bits_per_key: usize,
+    /// Sub-filter bit arrays, oldest first, capacities doubling.
+    subs: Vec<Vec<u64>>,
+    /// Inserts into the newest sub-filter.
+    newest_count: usize,
+    /// Insert capacity of the newest sub-filter before growing.
+    newest_cap: usize,
+    /// Total inserts ever (monotone; removals never decrement).
+    inserts: usize,
+}
+
+impl ShardBloom {
+    /// Bits in the first sub-filter (2^12; one 512-byte cache-friendly
+    /// array before any growth).
+    pub const FIRST_BITS: usize = 4096;
+
+    /// An empty filter budgeting `bits_per_key` bits per inserted key.
+    /// `bits_per_key` must be > 0 (0 means "tier disabled" and is the
+    /// caller's responsibility to gate).
+    pub fn new(bits_per_key: usize) -> ShardBloom {
+        assert!(bits_per_key > 0, "bits_per_key must be > 0");
+        // k = bits_per_key * ln 2, the FP-minimizing probe count.
+        let k = ((bits_per_key as f64) * std::f64::consts::LN_2).round().max(1.0) as u32;
+        ShardBloom {
+            k,
+            bits_per_key,
+            subs: vec![vec![0u64; Self::FIRST_BITS / 64]],
+            newest_count: 0,
+            newest_cap: Self::FIRST_BITS / bits_per_key.max(1),
+            inserts: 0,
+        }
+    }
+
+    /// Derive the double-hashing pair (Kirsch–Mitzenmacher): all k probe
+    /// positions are `h1 + i·h2`, with `h2` forced odd so it is
+    /// invertible mod any power-of-two bit count.
+    fn hash_pair(rec: &[u8]) -> (u64, u64) {
+        let h1 = fp_bytes(rec);
+        // Independent-looking second hash from the same fingerprint:
+        // one more splitmix-style avalanche round, forced odd.
+        let mut h2 = h1 ^ 0x9E3779B97F4A7C15;
+        h2 ^= h2 >> 30;
+        h2 = h2.wrapping_mul(0xBF58476D1CE4E5B9);
+        h2 ^= h2 >> 27;
+        (h1, h2 | 1)
+    }
+
+    /// Record `rec` as seen.
+    pub fn insert(&mut self, rec: &[u8]) {
+        if self.newest_count >= self.newest_cap {
+            self.grow();
+        }
+        let (h1, h2) = Self::hash_pair(rec);
+        let words = self.subs.last_mut().expect("at least one sub-filter");
+        let nbits = (words.len() * 64) as u64;
+        for i in 0..self.k as u64 {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) % nbits;
+            words[(bit / 64) as usize] |= 1u64 << (bit % 64);
+        }
+        self.newest_count += 1;
+        self.inserts += 1;
+    }
+
+    /// `false` means **definitely not** inserted; `true` means *maybe*.
+    pub fn maybe_contains(&self, rec: &[u8]) -> bool {
+        let (h1, h2) = Self::hash_pair(rec);
+        'sub: for words in &self.subs {
+            let nbits = (words.len() * 64) as u64;
+            for i in 0..self.k as u64 {
+                let bit = h1.wrapping_add(i.wrapping_mul(h2)) % nbits;
+                if words[(bit / 64) as usize] & (1u64 << (bit % 64)) == 0 {
+                    continue 'sub;
+                }
+            }
+            return true;
+        }
+        false
+    }
+
+    /// Append a fresh sub-filter with double the previous capacity.
+    fn grow(&mut self) {
+        let next_words = self.subs.last().expect("non-empty").len() * 2;
+        self.subs.push(vec![0u64; next_words]);
+        self.newest_cap = (next_words * 64) / self.bits_per_key.max(1);
+        self.newest_count = 0;
+    }
+
+    /// Total inserts ever fed to this filter.
+    pub fn inserts(&self) -> usize {
+        self.inserts
+    }
+
+    /// RAM held by the bit arrays, in bytes.
+    pub fn ram_bytes(&self) -> usize {
+        self.subs.iter().map(|w| w.len() * 8).sum()
+    }
+}
+
+/// Per-structure sidecar: one [`ShardBloom`] per bucket, plus the shared
+/// [`DedupStats`] the instance reports. Buckets are mutually exclusive
+/// per collective task, so per-bucket mutexes never contend — they only
+/// make the sidecar `Sync` for the pool.
+pub struct DedupFilter {
+    bits_per_key: usize,
+    approximate: bool,
+    shards: Vec<Mutex<ShardBloom>>,
+    /// Current RAM across all shards, maintained by growth deltas so
+    /// `DedupStats` can meter filter memory against the space bound
+    /// without locking every shard on read.
+    ram: AtomicUsize,
+    stats: std::sync::Arc<DedupStats>,
+}
+
+impl std::fmt::Debug for DedupFilter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DedupFilter")
+            .field("bits_per_key", &self.bits_per_key)
+            .field("approximate", &self.approximate)
+            .field("shards", &self.shards.len())
+            .finish()
+    }
+}
+
+impl DedupFilter {
+    /// A filter bank of `nbuckets` empty shards. Callers gate on
+    /// `bits_per_key > 0` and pass `None` otherwise.
+    pub fn new(
+        nbuckets: usize,
+        bits_per_key: usize,
+        approximate: bool,
+        stats: std::sync::Arc<DedupStats>,
+    ) -> DedupFilter {
+        let shards: Vec<Mutex<ShardBloom>> =
+            (0..nbuckets).map(|_| Mutex::new(ShardBloom::new(bits_per_key))).collect();
+        let initial: usize = shards.iter().map(|s| s.lock().unwrap().ram_bytes()).sum();
+        let f = DedupFilter {
+            bits_per_key,
+            approximate,
+            shards,
+            ram: AtomicUsize::new(initial),
+            stats,
+        };
+        f.stats.note_ram(initial as u64);
+        f
+    }
+
+    /// Whether "maybe seen" answers may be treated as seen (drop without
+    /// the exact pass).
+    pub fn approximate(&self) -> bool {
+        self.approximate
+    }
+
+    /// The configured bits-per-key budget.
+    pub fn bits_per_key(&self) -> usize {
+        self.bits_per_key
+    }
+
+    /// Run `f` with exclusive access to bucket `b`'s filter, folding any
+    /// RAM growth (or shrink, after a rebuild) into the metered total.
+    pub fn with_shard<R>(&self, b: usize, f: impl FnOnce(&mut ShardBloom) -> R) -> R {
+        let mut g = self.shards[b].lock().unwrap();
+        let before = g.ram_bytes();
+        let r = f(&mut g);
+        let after = g.ram_bytes();
+        drop(g);
+        self.apply_ram_delta(before, after);
+        r
+    }
+
+    fn apply_ram_delta(&self, before: usize, after: usize) {
+        if after > before {
+            let total = self.ram.fetch_add(after - before, Ordering::Relaxed) + (after - before);
+            self.stats.note_ram(total as u64);
+        } else if before > after {
+            self.ram.fetch_sub(before - after, Ordering::Relaxed);
+        }
+    }
+
+    /// Feed one record of bucket `b` (append-path hook).
+    pub fn insert(&self, b: usize, rec: &[u8]) {
+        self.with_shard(b, |s| s.insert(rec));
+        self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Feed a batch of `rec_size`-byte records of bucket `b` under one
+    /// lock acquisition (streaming append paths).
+    pub fn insert_batch(&self, b: usize, batch: &[u8], rec_size: usize) {
+        let n = (batch.len() / rec_size) as u64;
+        if n == 0 {
+            return;
+        }
+        self.with_shard(b, |s| {
+            for rec in batch.chunks_exact(rec_size) {
+                s.insert(rec);
+            }
+        });
+        self.stats.inserts.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Probe bucket `b`: `false` = definitely new (metered as a
+    /// shortcut candidate), `true` = maybe seen (metered as an
+    /// exact-pass fallback candidate).
+    pub fn probe(&self, b: usize, rec: &[u8]) -> bool {
+        self.stats.probes.fetch_add(1, Ordering::Relaxed);
+        let hit = self.shards[b].lock().unwrap().maybe_contains(rec);
+        if hit {
+            self.stats.maybe_seen.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.definite_new.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Rebuild bucket `b`'s filter from the authoritative record stream
+    /// (used after a checkpoint restore: filters are RAM-only and never
+    /// serialized, so a restored structure re-derives them from its
+    /// restored bucket files).
+    pub fn rebuild_shard(&self, b: usize, records: impl Iterator<Item = Vec<u8>>) {
+        self.with_shard(b, |s| {
+            *s = ShardBloom::new(self.bits_per_key);
+            for rec in records {
+                s.insert(&rec);
+            }
+        });
+    }
+
+    /// Current filter RAM in bytes (all shards).
+    pub fn ram_bytes(&self) -> usize {
+        self.ram.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn no_false_negatives_over_fed_set() {
+        let mut f = ShardBloom::new(10);
+        let mut rng = Rng::new(0xB100F1);
+        let keys: Vec<[u8; 8]> = (0..5000).map(|_| rng.next_u64().to_le_bytes()).collect();
+        for k in &keys {
+            f.insert(k);
+        }
+        for k in &keys {
+            assert!(f.maybe_contains(k), "fed key reported definitely-absent");
+        }
+    }
+
+    #[test]
+    fn fp_rate_within_budget_on_random_keys() {
+        let mut f = ShardBloom::new(10);
+        let mut rng = Rng::new(0xB100F2);
+        for _ in 0..10_000 {
+            f.insert(&rng.next_u64().to_le_bytes());
+        }
+        // Disjoint probe set (different generator stream).
+        let mut rng2 = Rng::new(0xDEADBEEF);
+        let probes = 20_000usize;
+        let fps = (0..probes)
+            .filter(|_| f.maybe_contains(&(rng2.next_u64() | 1 << 63).to_le_bytes()))
+            .count();
+        // 10 bits/key ⇒ theoretical ~0.8% per sub-filter; scalable
+        // growth unions a few sub-filters, so allow a generous 5%.
+        let rate = fps as f64 / probes as f64;
+        assert!(rate < 0.05, "false-positive rate {rate} out of budget");
+    }
+
+    #[test]
+    fn grows_and_meters_ram() {
+        let mut f = ShardBloom::new(8);
+        let base_ram = f.ram_bytes();
+        let mut rng = Rng::new(0xB100F3);
+        for _ in 0..100_000 {
+            f.insert(&rng.next_u64().to_le_bytes());
+        }
+        assert!(f.subs.len() > 1, "filter should have grown");
+        assert!(f.ram_bytes() > base_ram);
+        assert_eq!(f.inserts(), 100_000);
+    }
+
+    #[test]
+    fn empty_filter_rejects_everything() {
+        let f = ShardBloom::new(10);
+        for v in 0..1000u64 {
+            assert!(!f.maybe_contains(&v.to_le_bytes()));
+        }
+    }
+
+    #[test]
+    fn dedup_filter_probe_and_rebuild() {
+        let stats = std::sync::Arc::new(DedupStats::default());
+        let f = DedupFilter::new(4, 10, false, stats.clone());
+        f.insert(2, b"hello...");
+        assert!(f.probe(2, b"hello..."), "fed record must probe maybe-seen");
+        assert!(!f.probe(3, b"hello..."), "other shard untouched");
+        // Rebuild shard 2 from a different authoritative stream.
+        f.rebuild_shard(2, vec![b"world...".to_vec()].into_iter());
+        assert!(!f.probe(2, b"hello..."), "rebuilt shard forgot old records");
+        assert!(f.probe(2, b"world..."));
+        assert!(f.ram_bytes() >= 4 * ShardBloom::FIRST_BITS / 8);
+        let snap = stats.snapshot();
+        assert_eq!(snap.probes, 4);
+        assert!(snap.filter_ram_bytes > 0);
+    }
+}

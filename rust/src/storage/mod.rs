@@ -70,6 +70,7 @@
 //! `<name>.staging/` and commit by rename (old checkpoint briefly
 //! `<name>.prev`), so a crash anywhere leaves a restorable checkpoint.
 
+pub mod bloom;
 pub mod buffer;
 pub mod checkpoint;
 pub mod chunkfile;
@@ -77,6 +78,7 @@ pub mod diskio;
 pub mod extsort;
 pub mod pipeline;
 
+pub use bloom::{DedupFilter, ShardBloom};
 pub use buffer::{SpillBuffer, SpillDrain};
 pub use checkpoint::{CheckpointManager, Checkpointable, Manifest, Restored, StructKind, StructMeta};
 pub use chunkfile::{RecordReader, RecordWriter};

@@ -311,6 +311,79 @@ fn det_bfs_batched_staging() {
     });
 }
 
+/// The exact-backed bloom dedup tier is byte-transparent: the same
+/// dup-heavy workload over the native set and the hash table produces
+/// identical on-disk bytes with the filter off (reference cell) and on —
+/// across filter widths, schedules, worker counts, and pipeline depths.
+#[test]
+fn det_bloom_exact_tier_is_byte_transparent() {
+    // (bloom bits, steal, depth, workers); cell 0 = filter off.
+    let grid: [(usize, StealPolicy, usize, usize); 6] = [
+        (0, StealPolicy::Off, 0, 1),
+        (10, StealPolicy::Off, 0, 1),
+        (10, StealPolicy::Off, 4, 2),
+        (10, StealPolicy::Bounded, 4, 4),
+        (10, StealPolicy::Greedy, 4, 4),
+        (6, StealPolicy::Bounded, 0, 4),
+    ];
+    let workload = |r: &Roomy, rng: &mut Rng| -> u64 {
+        let s = r.set::<u64>("s").unwrap();
+        let ht = r.hash_table::<u64, u64>("h").unwrap();
+        let bump = ht.register_update(|k, cur: Option<&u64>, p: &u64| {
+            Some(cur.copied().unwrap_or(*k).wrapping_add(*p))
+        });
+        for _round in 0..3 {
+            for _ in 0..600 {
+                let v = rng.below(350);
+                if rng.chance(0.8) {
+                    s.add(&v).unwrap();
+                } else {
+                    s.remove(&v).unwrap();
+                }
+                let k = rng.below(250);
+                match rng.range(0, 4) {
+                    0 => ht.insert(&k, &rng.next_u64()).unwrap(),
+                    1 => ht.remove(&k).unwrap(),
+                    _ => ht.update(&k, &(rng.next_u64() >> 40), bump).unwrap(),
+                }
+            }
+            s.sync().unwrap();
+            ht.sync().unwrap();
+        }
+        let h = s
+            .reduce(|| 0u64, |acc, v| order_hash(acc, *v), order_hash)
+            .unwrap();
+        ht.reduce(|| h, |acc, k, v| order_hash(acc, k ^ v), order_hash).unwrap()
+    };
+    let mut outcomes = Vec::new();
+    for &(bloom, steal, depth, nw) in &grid {
+        let t = tmpdir(&format!("det_bloom_b{bloom}_s{steal}_d{depth}_w{nw}"));
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 3;
+        cfg.buckets_per_worker = 2;
+        cfg.num_workers = nw;
+        cfg.io_pipeline_depth = depth;
+        cfg.steal_policy = steal;
+        cfg.bloom_bits_per_key = bloom;
+        let r = Roomy::open(cfg).unwrap();
+        let mut rng = Rng::new(0xD15EA5E);
+        let value = workload(&r, &mut rng);
+        drop(r);
+        outcomes.push((bloom, steal, depth, nw, value, dir_digest(t.path())));
+    }
+    let (_, _, _, _, v0, d0) = outcomes[0];
+    for (bloom, steal, depth, nw, v, d) in &outcomes[1..] {
+        assert_eq!(
+            *v, v0,
+            "value diverged at bloom={bloom} steal={steal} depth={depth} num_workers={nw}"
+        );
+        assert_eq!(
+            *d, d0,
+            "on-disk bytes diverged at bloom={bloom} steal={steal} depth={depth} num_workers={nw}"
+        );
+    }
+}
+
 /// Full **batched** BFS drivers agree (level profile and totals) across
 /// worker counts and pipeline depths — both the list and the hash-table
 /// variant (the BFS frontier scans are the issue's canonical

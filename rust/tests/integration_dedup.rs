@@ -1,0 +1,261 @@
+//! The approximate-membership dedup tier (`roomy::storage::bloom`) is
+//! **exact-backed by default**: a bloom "definitely new" answer may skip
+//! exact work (scans, sort-merges, full bucket rewrites), but anything
+//! "maybe seen" falls through to the seed's exact paths — so with the
+//! filter on, every structure's on-disk bytes are identical to the
+//! filter-off run at every worker count and pipeline depth. Opt-in
+//! approximate mode trades a small, measured false-positive rate for
+//! skipping the exact merge; its FP budget is pinned here too.
+
+mod common;
+
+use std::collections::BTreeSet;
+
+use common::dir_digest;
+use roomy::constructs::bfs;
+use roomy::testutil::{tmpdir, Rng};
+use roomy::{Roomy, RoomyConfig};
+
+/// (bloom bits-per-key, num_workers, io_pipeline_depth) grid: cell 0 is
+/// the filter-off serial reference every other cell must match.
+const CELLS: [(usize, usize, usize); 8] = [
+    (0, 1, 0),
+    (0, 4, 4),
+    (10, 1, 0),
+    (10, 1, 4),
+    (10, 4, 0),
+    (10, 4, 4),
+    (6, 4, 4),
+    (14, 1, 0),
+];
+
+fn open_cell(root: &std::path::Path, bloom: usize, nw: usize, depth: usize) -> Roomy {
+    let mut cfg = RoomyConfig::for_testing(root);
+    cfg.workers = 3; // uneven bucket→node split
+    cfg.buckets_per_worker = 2;
+    cfg.num_workers = nw;
+    cfg.io_pipeline_depth = depth;
+    cfg.bloom_bits_per_key = bloom;
+    cfg.bloom_approximate = false;
+    Roomy::open(cfg).unwrap()
+}
+
+/// A dup-heavy mixed workload over every structure the filter fronts:
+/// set add/remove churn, hash-table upserts, list dedup + set algebra.
+/// Returns an order-sensitive value so result order is pinned too.
+fn dedup_workload(r: &Roomy, rng: &mut Rng) -> u64 {
+    let s = r.set::<u64>("s").unwrap();
+    let ht = r.hash_table::<u64, u64>("h").unwrap();
+    let l = r.list::<u64>("l").unwrap();
+    let bump = ht.register_update(|k, cur: Option<&u64>, p: &u64| {
+        Some(cur.copied().unwrap_or(*k).wrapping_add(*p))
+    });
+    for _round in 0..3 {
+        for _ in 0..600 {
+            let v = rng.below(400);
+            if rng.chance(0.8) {
+                s.add(&v).unwrap();
+            } else {
+                s.remove(&v).unwrap();
+            }
+            let k = rng.below(300);
+            match rng.range(0, 4) {
+                0 => ht.insert(&k, &rng.next_u64()).unwrap(),
+                1 => ht.remove(&k).unwrap(),
+                _ => ht.update(&k, &(rng.next_u64() >> 40), bump).unwrap(),
+            }
+            l.add(&rng.below(500)).unwrap();
+        }
+        s.sync().unwrap();
+        ht.sync().unwrap();
+        l.sync().unwrap();
+    }
+    l.remove_dupes().unwrap();
+    // Queries that ride the filter front.
+    let mut probe_hash = 0u64;
+    for q in 0..800u64 {
+        if s.contains(&q).unwrap() {
+            probe_hash = probe_hash.wrapping_mul(0x9E3779B97F4A7C15) ^ q;
+        }
+        if let Some(v) = ht.fetch(&q).unwrap() {
+            probe_hash = probe_hash.wrapping_mul(0x9E3779B97F4A7C15) ^ v;
+        }
+    }
+    let h1 = s
+        .reduce(|| probe_hash, |acc, v| acc.wrapping_mul(0x9E3779B97F4A7C15) ^ v, |a, b| {
+            a.wrapping_mul(0x9E3779B97F4A7C15) ^ b
+        })
+        .unwrap();
+    ht.reduce(
+        || h1,
+        |acc, k, v| acc.wrapping_mul(0x9E3779B97F4A7C15) ^ (k ^ v),
+        |a, b| a.wrapping_mul(0x9E3779B97F4A7C15) ^ b,
+    )
+    .unwrap()
+}
+
+/// Tentpole acceptance: with the exact-backed filter on, on-disk bytes
+/// (full recursive digest of the instance root) and results are identical
+/// to the filter-off run — across filter widths, worker counts, and
+/// pipeline depths.
+#[test]
+fn digests_identical_bloom_on_off_across_workers_and_depths() {
+    let mut outcomes = Vec::new();
+    for &(bloom, nw, depth) in &CELLS {
+        let t = tmpdir(&format!("dedup_dig_b{bloom}_w{nw}_d{depth}"));
+        let r = open_cell(t.path(), bloom, nw, depth);
+        let mut rng = Rng::new(0xB10_0F11);
+        let value = dedup_workload(&r, &mut rng);
+        let snap = r.dedup_snapshot();
+        if bloom > 0 {
+            assert!(snap.probes > 0, "filter configured but never probed: {snap:?}");
+        } else {
+            assert_eq!(snap.probes, 0, "filter off must not probe");
+        }
+        drop(r); // join io service threads before digesting
+        let digest = dir_digest(t.path());
+        outcomes.push((bloom, nw, depth, value, digest));
+    }
+    let (_, _, _, v0, d0) = outcomes[0];
+    for (bloom, nw, depth, v, d) in &outcomes[1..] {
+        assert_eq!(*v, v0, "value diverged at bloom={bloom} workers={nw} depth={depth}");
+        assert_eq!(
+            *d, d0,
+            "on-disk bytes diverged at bloom={bloom} workers={nw} depth={depth}"
+        );
+    }
+}
+
+/// Exact-backed mode never drops a genuinely-new record: the final set
+/// contents equal an in-RAM model of the same operation stream, for every
+/// random seed tried.
+#[test]
+fn bloom_exact_never_drops_new_records() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let t = tmpdir(&format!("dedup_nofn_{seed}"));
+        let r = open_cell(t.path(), 10, 4, 4);
+        let s = r.set::<u64>("s").unwrap();
+        let mut model = BTreeSet::new();
+        let mut rng = Rng::new(seed);
+        for _round in 0..4 {
+            for _ in 0..500 {
+                let v = rng.below(3_000);
+                if rng.chance(0.85) {
+                    s.add(&v).unwrap();
+                    model.insert(v);
+                } else {
+                    s.remove(&v).unwrap();
+                    model.remove(&v);
+                }
+            }
+            s.sync().unwrap();
+        }
+        let got: BTreeSet<u64> = s.collect().unwrap().into_iter().collect();
+        assert_eq!(got, model, "seed {seed}: exact-backed filter dropped/kept wrong records");
+        assert_eq!(s.size(), model.len() as u64);
+        // Membership queries stay exact through the filter front.
+        for v in 0..200u64 {
+            assert_eq!(s.contains(&v).unwrap(), model.contains(&v), "seed {seed} elt {v}");
+        }
+    }
+}
+
+/// The filter actually avoids exact work on dup-free traffic (the metric
+/// the E6 bench table reports): fresh keys through set + hash table must
+/// record exact-merge shortcuts with nonzero bytes avoided.
+#[test]
+fn bloom_records_exact_work_avoided() {
+    let t = tmpdir("dedup_avoided");
+    let r = open_cell(t.path(), 10, 4, 0);
+    let ht = r.hash_table::<u64, u64>("h").unwrap();
+    for wave in 0..3u64 {
+        for k in (wave * 500)..(wave * 500 + 500) {
+            ht.insert(&k, &k).unwrap();
+        }
+        ht.sync().unwrap();
+    }
+    let s = r.set::<u64>("s").unwrap();
+    for v in 0..500u64 {
+        s.add(&v).unwrap();
+    }
+    s.sync().unwrap();
+    for v in 5_000..5_500u64 {
+        assert!(!s.contains(&v).unwrap());
+    }
+    let snap = r.dedup_snapshot();
+    assert!(snap.shortcuts > 0, "no exact work avoided: {snap:?}");
+    assert!(snap.bytes_avoided > 0, "no bytes avoided: {snap:?}");
+    assert!(snap.filter_ram_bytes > 0, "filter RAM unmetered: {snap:?}");
+    assert!(snap.inserts > 0, "filter never fed: {snap:?}");
+}
+
+/// Approximate mode: distinct records wrongly dropped as duplicates stay
+/// within the configured bits-per-key false-positive budget, and the drop
+/// count is surfaced in `DedupStats`.
+#[test]
+fn approximate_fp_rate_within_budget() {
+    let t = tmpdir("dedup_fp");
+    let mut cfg = RoomyConfig::for_testing(t.path());
+    cfg.bloom_bits_per_key = 10;
+    cfg.bloom_approximate = true;
+    let r = Roomy::open(cfg).unwrap();
+    let s = r.set::<u64>("s").unwrap();
+    // Phase 1: fill the filter with 20k distinct keys.
+    for v in 0..20_000u64 {
+        s.add(&v).unwrap();
+    }
+    s.sync().unwrap();
+    assert_eq!(s.size(), 20_000, "phase 1 adds probe an empty filter — nothing may drop");
+    // Phase 2: 20k more distinct keys; any drop is a filter false
+    // positive. 10 bits/key targets ~1% FP; 5% is a generous ceiling.
+    for v in 20_000..40_000u64 {
+        s.add(&v).unwrap();
+    }
+    s.sync().unwrap();
+    let snap = r.dedup_snapshot();
+    let dropped = 40_000 - s.size();
+    assert_eq!(snap.approx_dropped, dropped, "drop accounting disagrees with set size");
+    assert!(
+        dropped <= 1_000,
+        "false-positive rate {:.2}% exceeds budget (dropped {dropped} of 20000)",
+        dropped as f64 / 200.0
+    );
+    // Dropping the exact merge is the point: shortcut work must register.
+    assert!(snap.shortcuts > 0 || snap.approx_dropped > 0, "{snap:?}");
+}
+
+/// Full BFS drivers (list and hash families) produce identical level
+/// profiles and totals with the exact-backed filter on or off.
+#[test]
+fn bfs_profiles_identical_bloom_on_off() {
+    fn gen(batch: &[u64], out: &mut Vec<u64>) -> roomy::Result<()> {
+        for &v in batch {
+            for b in 0..7u32 {
+                out.push(v ^ (1 << b));
+            }
+        }
+        Ok(())
+    }
+    for driver in ["hash", "list"] {
+        let mut profiles = Vec::new();
+        for &(bloom, nw, depth) in &[(0usize, 1usize, 0usize), (10, 1, 0), (10, 4, 4)] {
+            let t = tmpdir(&format!("dedup_bfs_{driver}_b{bloom}_w{nw}_d{depth}"));
+            let r = open_cell(t.path(), bloom, nw, depth);
+            let stats = match driver {
+                "hash" => bfs::bfs_hash_batched(&r, "cube", &[0u64], gen).unwrap(),
+                _ => bfs::bfs_list_batched(&r, "cube", &[0u64], gen).unwrap(),
+            };
+            if bloom > 0 {
+                let snap = r.dedup_snapshot();
+                assert!(snap.probes > 0, "{driver}: BFS never touched the filter: {snap:?}");
+            }
+            profiles.push((bloom, nw, depth, stats));
+        }
+        for (bloom, nw, depth, s) in &profiles[1..] {
+            assert_eq!(
+                s, &profiles[0].3,
+                "{driver} BFS diverged at bloom={bloom} workers={nw} depth={depth}"
+            );
+        }
+    }
+}

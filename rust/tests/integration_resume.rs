@@ -29,6 +29,16 @@ fn open(root: &std::path::Path, num_workers: usize, depth: usize) -> Roomy {
     Roomy::open(cfg).unwrap()
 }
 
+/// Like [`open`] but with the exact-backed bloom dedup tier active —
+/// checkpoint bytes must not notice the difference.
+fn open_bloom(root: &std::path::Path, num_workers: usize, depth: usize) -> Roomy {
+    let mut cfg = RoomyConfig::for_testing(root);
+    cfg.num_workers = num_workers;
+    cfg.io_pipeline_depth = depth;
+    cfg.bloom_bits_per_key = 10;
+    Roomy::open(cfg).unwrap()
+}
+
 /// Run the resumable pancake driver to completion and return the level
 /// stats plus the final checkpoint's per-file digest rows.
 fn run_to_completion(
@@ -124,6 +134,25 @@ fn pancake_n7_kill_and_resume_matrix_is_byte_identical() {
             }
         }
     }
+
+    // bloom cell: kill-and-resume with the dedup filter active must land
+    // on the same pinned bytes as every bloom-off cell above.
+    let (p_stats, p_digests) = pinned.expect("matrix ran");
+    let t_bloom = tmpdir("resume_kill_bloom");
+    {
+        let r = open_bloom(t_bloom.path(), 4, 4);
+        let mgr = r.checkpoints().unwrap();
+        let opts = ResumableBfs { manager: &mgr, tag: "pk".into(), stop_after_levels: Some(3) };
+        let out =
+            pancake::roomy_bfs_resumable(&r, n, Structure::List, &Accel::rust(), &opts).unwrap();
+        assert_eq!(out, BfsOutcome::Suspended { next_level: 4 }, "bloom cell");
+    }
+    let (bloom_stats, bloom_digests) = {
+        let r = open_bloom(t_bloom.path(), 4, 4);
+        run_to_completion(&r, n, Structure::List, "pk")
+    };
+    assert_eq!(bloom_stats, p_stats, "profile diverged in the bloom cell");
+    assert_eq!(bloom_digests, p_digests, "digests diverged in the bloom cell");
 }
 
 #[test]
@@ -152,6 +181,123 @@ fn pancake_hash_variant_kill_and_resume_matches() {
     };
     assert_eq!(res_stats, ref_stats);
     assert_eq!(res_digests, ref_digests);
+}
+
+#[test]
+fn pancake_array_variant_kill_and_resume_matches() {
+    // The Array variant checkpoints its seen-bits bit array together with
+    // the current level list (the carried ROADMAP item).
+    let n = 6;
+    let t_ref = tmpdir("resume_arr_ref");
+    let (ref_stats, ref_digests) = {
+        let r = open(t_ref.path(), 4, 4);
+        run_to_completion(&r, n, Structure::Array, "pka")
+    };
+    assert_eq!(ref_stats.levels, pancake::reference_bfs(n));
+    assert_eq!(ref_stats.total, pancake::factorial(n));
+
+    let t_kill = tmpdir("resume_arr_kill");
+    {
+        let r = open(t_kill.path(), 4, 4);
+        let mgr = r.checkpoints().unwrap();
+        let opts =
+            ResumableBfs { manager: &mgr, tag: "pka".into(), stop_after_levels: Some(2) };
+        let out =
+            pancake::roomy_bfs_resumable(&r, n, Structure::Array, &Accel::rust(), &opts).unwrap();
+        assert_eq!(out, BfsOutcome::Suspended { next_level: 3 });
+    }
+    let (res_stats, res_digests) = {
+        let r = open(t_kill.path(), 4, 4);
+        run_to_completion(&r, n, Structure::Array, "pka")
+    };
+    assert_eq!(res_stats, ref_stats);
+    assert_eq!(res_digests, ref_digests);
+    assert!(!res_digests.is_empty());
+}
+
+/// Kill-and-resume with the bloom dedup tier active: the filter is
+/// RAM-only and rebuilt from restored bucket/shard files, so a bloom-on
+/// killed-and-resumed run must match the **bloom-off uninterrupted**
+/// reference byte-for-byte — for both BFS dedup families.
+#[test]
+fn bloom_kill_and_resume_matches_bloom_off_reference_n6() {
+    let n = 6;
+    for (structure, tag) in [(Structure::List, "pkbl"), (Structure::Hash, "pkbh")] {
+        // bloom-off uninterrupted reference
+        let t_ref = tmpdir(&format!("resume_bloom_ref_{tag}"));
+        let (ref_stats, ref_digests) = {
+            let r = open(t_ref.path(), 4, 4);
+            run_to_completion(&r, n, structure, tag)
+        };
+        assert_eq!(ref_stats.levels, pancake::reference_bfs(n), "{tag}");
+
+        // bloom-on, killed after two levels, resumed bloom-on fresh
+        let t_kill = tmpdir(&format!("resume_bloom_kill_{tag}"));
+        {
+            let r = open_bloom(t_kill.path(), 4, 4);
+            let mgr = r.checkpoints().unwrap();
+            let opts =
+                ResumableBfs { manager: &mgr, tag: tag.into(), stop_after_levels: Some(2) };
+            let out =
+                pancake::roomy_bfs_resumable(&r, n, structure, &Accel::rust(), &opts).unwrap();
+            assert_eq!(out, BfsOutcome::Suspended { next_level: 3 }, "{tag}");
+        }
+        let (res_stats, res_digests) = {
+            let r = open_bloom(t_kill.path(), 4, 4);
+            let snap_before = r.dedup_snapshot();
+            let out = run_to_completion(&r, n, structure, tag);
+            let snap = r.dedup_snapshot();
+            assert!(
+                snap.probes > snap_before.probes,
+                "{tag}: resumed run never touched the filter: {snap:?}"
+            );
+            out
+        };
+        assert_eq!(res_stats, ref_stats, "{tag}: profile diverged under bloom");
+        assert_eq!(
+            res_digests, ref_digests,
+            "{tag}: bloom-on resumed checkpoint bytes differ from bloom-off reference"
+        );
+    }
+}
+
+/// A checkpoint written bloom-off must resume correctly bloom-on (and
+/// vice versa): the filter is config state, not checkpoint state.
+#[test]
+fn bloom_mode_can_change_across_resume_sessions() {
+    let n = 6;
+    let t_ref = tmpdir("resume_bloomx_ref");
+    let (ref_stats, ref_digests) = {
+        let r = open(t_ref.path(), 4, 0);
+        run_to_completion(&r, n, Structure::Hash, "pkx")
+    };
+
+    let t = tmpdir("resume_bloomx");
+    {
+        // session 1: bloom OFF, killed after one level
+        let r = open(t.path(), 4, 0);
+        let mgr = r.checkpoints().unwrap();
+        let opts = ResumableBfs { manager: &mgr, tag: "pkx".into(), stop_after_levels: Some(1) };
+        let out =
+            pancake::roomy_bfs_resumable(&r, n, Structure::Hash, &Accel::rust(), &opts).unwrap();
+        assert_eq!(out, BfsOutcome::Suspended { next_level: 2 });
+    }
+    {
+        // session 2: bloom ON over the bloom-off checkpoint, killed again
+        let r = open_bloom(t.path(), 4, 0);
+        let mgr = r.checkpoints().unwrap();
+        let opts = ResumableBfs { manager: &mgr, tag: "pkx".into(), stop_after_levels: Some(2) };
+        let out =
+            pancake::roomy_bfs_resumable(&r, n, Structure::Hash, &Accel::rust(), &opts).unwrap();
+        assert_eq!(out, BfsOutcome::Suspended { next_level: 4 });
+    }
+    // session 3: bloom OFF again, runs to completion
+    let (stats, digests) = {
+        let r = open(t.path(), 4, 0);
+        run_to_completion(&r, n, Structure::Hash, "pkx")
+    };
+    assert_eq!(stats, ref_stats);
+    assert_eq!(digests, ref_digests);
 }
 
 #[test]
