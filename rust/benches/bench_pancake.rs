@@ -78,6 +78,12 @@ fn main() {
                 .map(|(_, d, _)| d.as_secs_f64())
                 .sum();
             let lt = *list_time.get_or_insert(secs);
+            record(&format!("pancake_{name} n={n}"), "secs", secs);
+            record(
+                &format!("pancake_{name} n={n}"),
+                "mb_moved",
+                io.bytes_total() as f64 / 1e6,
+            );
             row(&[
                 name.into(),
                 format!("{secs:.2}"),
@@ -197,6 +203,7 @@ fn main() {
             assert_eq!(stats.total, pancake::factorial(e5_n), "{label} must be exact");
             let ps = r.cluster().pool().stats();
             let pipe = r.cluster().pipeline_snapshot();
+            record(&format!("pancake_steal_{policy} n={e5_n}"), "secs", secs);
             row(&[
                 label.into(),
                 format!("{secs:.2}"),
@@ -272,8 +279,50 @@ fn main() {
         }
     }
 
+    // ---- E7: counter-driven self-tuning -----------------------------
+    // runtime::autotune off (seed behavior) vs on: the controller reads
+    // pipeline stall counters and pool queue-depth peaks between
+    // collectives and moves each node's effective pipeline depth and the
+    // cross-task hint distance. Both modes are byte-identical on disk
+    // (tests/determinism.rs pins the digests) — only wall time and the
+    // pipeline/hint counters may move.
+    {
+        use roomy::AutotuneMode;
+        let e7_n = 7usize;
+        header(
+            &format!("E7: self-tuning, pancake n={e7_n} (hash variant, 4 pool workers, io depth 4)"),
+            &["autotune", "wall s", "stalls r+w ms", "hint hits", "controller"],
+        );
+        for (label, mode) in [("off", AutotuneMode::Off), ("on", AutotuneMode::On)] {
+            let (_t, r) = fresh_roomy(&format!("pk{e7_n}at-{label}"), |c| {
+                c.num_workers = 4;
+                c.io_pipeline_depth = 4;
+                c.autotune = mode;
+            });
+            let (secs, stats) = time(|| {
+                pancake::roomy_bfs(&r, e7_n, Structure::Hash, &Accel::rust()).unwrap()
+            });
+            assert_eq!(stats.total, pancake::factorial(e7_n), "autotune {label} must be exact");
+            let pipe = r.cluster().pipeline_snapshot();
+            record(&format!("pancake_autotune_{label} n={e7_n}"), "secs", secs);
+            let controller = r
+                .cluster()
+                .autotune()
+                .map(|at| at.report(r.cluster().disks()))
+                .unwrap_or_else(|| "-".into());
+            row(&[
+                label.into(),
+                format!("{secs:.2}"),
+                format!("{:.1}", (pipe.reader_wait_ns + pipe.writer_wait_ns) as f64 / 1e6),
+                pipe.hint_hits.to_string(),
+                controller,
+            ]);
+        }
+    }
+
     println!(
         "\nexpansion backend: {}",
         if xla.is_some() { "XLA AOT (list/hash variants)" } else { "Rust fallback" }
     );
+    write_baseline("pancake");
 }

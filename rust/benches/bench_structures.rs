@@ -29,6 +29,8 @@ fn main() {
             let before = r.io_snapshot();
             let (secs, _) = time(|| ra.map(|_i, _v| {}).unwrap());
             let io = r.io_snapshot().delta(&before);
+            record(&format!("map n={n}"), "secs", secs);
+            record(&format!("map n={n}"), "mb_moved", io.bytes_total() as f64 / 1e6);
             format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
         };
         let map_update_cell = {
@@ -37,6 +39,8 @@ fn main() {
             let before = r.io_snapshot();
             let (secs, _) = time(|| ra.map_update(|_i, v| *v += 1).unwrap());
             let io = r.io_snapshot().delta(&before);
+            record(&format!("map_update n={n}"), "secs", secs);
+            record(&format!("map_update n={n}"), "mb_moved", io.bytes_total() as f64 / 1e6);
             format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
         };
         let reduce_cell = {
@@ -49,6 +53,8 @@ fn main() {
             });
             assert_eq!(v, n as i64);
             let io = r.io_snapshot().delta(&before);
+            record(&format!("reduce n={n}"), "secs", secs);
+            record(&format!("reduce n={n}"), "mb_moved", io.bytes_total() as f64 / 1e6);
             format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
         };
         let chain_cell = {
@@ -58,6 +64,8 @@ fn main() {
             let (secs, _) =
                 time(|| chainred::chain_reduce(&ra, |a, b| a.wrapping_add(*b)).unwrap());
             let io = r.io_snapshot().delta(&before);
+            record(&format!("chain_reduce n={n}"), "secs", secs);
+            record(&format!("chain_reduce n={n}"), "mb_moved", io.bytes_total() as f64 / 1e6);
             format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
         };
         let prefix_log_cell = {
@@ -67,6 +75,8 @@ fn main() {
             let (secs, _) =
                 time(|| prefix::parallel_prefix(&ra, |a, b| a.wrapping_add(*b)).unwrap());
             let io = r.io_snapshot().delta(&before);
+            record(&format!("prefix_log n={n}"), "secs", secs);
+            record(&format!("prefix_log n={n}"), "mb_moved", io.bytes_total() as f64 / 1e6);
             format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
         };
         let prefix_scan_cell = {
@@ -76,6 +86,8 @@ fn main() {
             let (secs, _) =
                 time(|| prefix::prefix_scan_array(&ra, &Accel::rust()).unwrap());
             let io = r.io_snapshot().delta(&before);
+            record(&format!("prefix_scan n={n}"), "secs", secs);
+            record(&format!("prefix_scan n={n}"), "mb_moved", io.bytes_total() as f64 / 1e6);
             format!("{secs:.2}s/{:.0}MB", io.bytes_total() as f64 / 1e6)
         };
         cells.extend([
@@ -104,6 +116,8 @@ fn main() {
         });
         let pairs = count.load(std::sync::atomic::Ordering::Relaxed);
         assert_eq!(pairs, n * n);
+        record(&format!("pairred n={n}"), "secs", secs);
+        record(&format!("pairred n={n}"), "mops_per_s", pairs as f64 / 1e6 / secs);
         row(&[
             n.to_string(),
             pairs.to_string(),
@@ -111,4 +125,6 @@ fn main() {
             format!("{:.2}", pairs as f64 / 1e6 / secs),
         ]);
     }
+
+    write_baseline("structures");
 }

@@ -36,6 +36,7 @@ use std::sync::Arc;
 use crate::config::RoomyConfig;
 use crate::error::{Result, RoomyError};
 use crate::metrics::{IoSnapshot, PhaseTimes, PipelineSnapshot};
+use crate::runtime::autotune::Autotune;
 use crate::runtime::pool::WorkerPool;
 use crate::storage::NodeDisk;
 
@@ -53,6 +54,11 @@ pub struct Cluster {
     topology: Topology,
     phases: PhaseTimes,
     pool: WorkerPool,
+    /// Counter-driven self-tuner ([`crate::runtime::autotune`]), present
+    /// only when [`RoomyConfig::autotune`] is `On`. Runs one adaptation
+    /// round at the top of every bucket collective; absent (the default)
+    /// the hot path is untouched.
+    autotune: Option<Autotune>,
     /// Where durable checkpoints live ([`crate::storage::checkpoint`]):
     /// a sibling of the node directories (or a user-chosen directory),
     /// deliberately outside every purged scratch subtree.
@@ -97,11 +103,13 @@ impl Cluster {
             .checkpoint_dir
             .clone()
             .unwrap_or_else(|| cfg.root.join("checkpoints"));
+        let autotune = cfg.autotune.enabled().then(|| Autotune::new(cfg.workers));
         Ok(Cluster {
             disks,
             topology: Topology::new(cfg.workers, cfg.buckets_per_worker),
             phases: PhaseTimes::new(),
             pool,
+            autotune,
             checkpoint_root,
         })
     }
@@ -115,6 +123,11 @@ impl Cluster {
     /// The collective execution pool (per-worker counters, width).
     pub fn pool(&self) -> &WorkerPool {
         &self.pool
+    }
+
+    /// The self-tuning controller, when autotune is `On`.
+    pub fn autotune(&self) -> Option<&Autotune> {
+        self.autotune.as_ref()
     }
 
     /// The bucket→node ownership arithmetic of this cluster, shared with
@@ -234,6 +247,11 @@ impl Cluster {
     {
         let nb = self.nbuckets() as usize;
         let topo = self.topology;
+        // Self-tuning happens strictly between collectives: streams
+        // started inside keep the depth they began with.
+        if let Some(at) = &self.autotune {
+            at.adapt(&self.disks, &self.pool);
+        }
         self.phases.time(phase, || {
             self.pool.run_tagged(
                 phase,
@@ -489,6 +507,27 @@ mod tests {
         c.pool().stats().reset();
         c.run_buckets("count", |_b, _| Ok(())).unwrap();
         assert_eq!(c.pool().stats().total_tasks(), 4);
+    }
+
+    /// Autotune `On` builds the controller and runs one adapt round per
+    /// bucket collective; the default `Off` holds no controller.
+    #[test]
+    fn autotune_rounds_follow_collectives() {
+        let t = tmpdir("cluster_autotune");
+        let off = cluster(2, 2, t.path());
+        assert!(off.autotune().is_none(), "default must carry no controller");
+        drop(off);
+
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 2;
+        cfg.buckets_per_worker = 2;
+        cfg.autotune = crate::config::AutotuneMode::On;
+        let c = Cluster::new(&cfg).unwrap();
+        let at = c.autotune().expect("On must build the controller");
+        assert_eq!(at.rounds(), 0);
+        c.run_buckets("a", |_b, _| Ok(())).unwrap();
+        c.run_buckets("b", |_b, _| Ok(())).unwrap();
+        assert_eq!(at.rounds(), 2);
     }
 
     #[test]

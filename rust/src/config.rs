@@ -112,6 +112,61 @@ impl std::fmt::Display for StealPolicy {
     }
 }
 
+/// Counter-driven self-tuning of the I/O pipeline
+/// ([`crate::runtime::autotune`]). `Off` (the default) leaves every knob
+/// exactly where the config put it — byte-for-byte and timing-knob
+/// identical to the seed. `On` lets the controller adapt each node's
+/// *effective* pipeline depth (within `1..=io_pipeline_depth`) from
+/// pipeline stall counters, and the pool's hint-ahead distance from
+/// per-node queue-depth peaks, between collectives. Tuning only moves
+/// buffering/prefetch knobs that are already proven byte-invisible, so
+/// on-disk state is identical in both modes (`tests/determinism.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AutotuneMode {
+    /// No adaptation (seed behavior). The default.
+    #[default]
+    Off,
+    /// Adapt effective pipeline depth + hint-ahead between collectives.
+    On,
+}
+
+impl AutotuneMode {
+    /// Parse the `off` / `on` spelling used by the env var and CLI flag.
+    pub fn parse(s: &str) -> Option<AutotuneMode> {
+        Some(match s {
+            "off" => AutotuneMode::Off,
+            "on" => AutotuneMode::On,
+            _ => return None,
+        })
+    }
+
+    /// The canonical spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AutotuneMode::Off => "off",
+            AutotuneMode::On => "on",
+        }
+    }
+
+    /// True when the controller should run.
+    pub fn enabled(&self) -> bool {
+        matches!(self, AutotuneMode::On)
+    }
+}
+
+impl std::str::FromStr for AutotuneMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        AutotuneMode::parse(s).ok_or_else(|| format!("bad autotune mode {s:?} (off|on)"))
+    }
+}
+
+impl std::fmt::Display for AutotuneMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Which implementation backs the numeric batch kernels in [`crate::accel`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AccelMode {
@@ -204,6 +259,13 @@ pub struct RoomyConfig {
     /// BFS level counts become lower bounds. Env `ROOMY_BLOOM_APPROX`
     /// (any non-empty value), CLI `--bloom-approx`.
     pub bloom_approximate: bool,
+    /// Counter-driven self-tuning ([`crate::runtime::autotune`]): `Off`
+    /// (default) pins every knob to its configured value — the seed
+    /// behavior; `On` adapts each node's effective pipeline depth and the
+    /// pool's hint-ahead distance from the previous collective's stall /
+    /// queue-depth counters. On-disk bytes identical in both modes. Env
+    /// `ROOMY_AUTOTUNE` ∈ off|on overrides, CLI `--autotune`.
+    pub autotune: AutotuneMode,
     /// In-RAM run size for external sort (bytes).
     pub sort_chunk_bytes: usize,
     /// RAM budget per worker for hash-set based `remove_all` before
@@ -233,6 +295,7 @@ impl RoomyConfig {
             steal_policy: env_steal().unwrap_or_default(),
             bloom_bits_per_key: env_bloom().unwrap_or(0),
             bloom_approximate: env_bloom_approx(),
+            autotune: env_autotune().unwrap_or_default(),
             sort_chunk_bytes: 4 * 1024 * 1024,
             ram_budget_bytes: 64 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -328,6 +391,12 @@ fn env_bloom_approx() -> bool {
     std::env::var("ROOMY_BLOOM_APPROX").map(|s| !s.is_empty()).unwrap_or(false)
 }
 
+/// Autotune override (`ROOMY_AUTOTUNE` ∈ off|on), used by CI to run the
+/// whole suite with the self-tuning controller active.
+fn env_autotune() -> Option<AutotuneMode> {
+    std::env::var("ROOMY_AUTOTUNE").ok().as_deref().and_then(AutotuneMode::parse)
+}
+
 impl Default for RoomyConfig {
     fn default() -> Self {
         RoomyConfig {
@@ -344,6 +413,7 @@ impl Default for RoomyConfig {
             steal_policy: env_steal().unwrap_or_default(),
             bloom_bits_per_key: env_bloom().unwrap_or(0),
             bloom_approximate: env_bloom_approx(),
+            autotune: env_autotune().unwrap_or_default(),
             sort_chunk_bytes: 64 * 1024 * 1024,
             ram_budget_bytes: 256 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -437,6 +507,24 @@ mod tests {
         c.bloom_approximate = true;
         assert!(c.validate().is_err());
         c.bloom_bits_per_key = 10;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn autotune_parses_and_defaults_off() {
+        for m in [AutotuneMode::Off, AutotuneMode::On] {
+            assert_eq!(AutotuneMode::parse(m.as_str()), Some(m));
+            assert_eq!(m.as_str().parse::<AutotuneMode>().unwrap(), m);
+        }
+        assert_eq!(AutotuneMode::parse("auto"), None);
+        assert!("".parse::<AutotuneMode>().is_err());
+        assert_eq!(AutotuneMode::default(), AutotuneMode::Off);
+        assert!(!AutotuneMode::Off.enabled());
+        assert!(AutotuneMode::On.enabled());
+        let c = RoomyConfig::for_testing("/tmp/x");
+        if std::env::var("ROOMY_AUTOTUNE").is_err() {
+            assert_eq!(c.autotune, AutotuneMode::Off, "must default off (seed behavior)");
+        }
         c.validate().unwrap();
     }
 

@@ -74,6 +74,12 @@ USAGE:
                                        # adds without the exact merge
                                        # (bounded false-positive budget;
                                        # env ROOMY_BLOOM_APPROX)
+                [--autotune M]         # off (default) pins every knob to
+                                       # its configured value; on adapts
+                                       # effective io depth + hint-ahead
+                                       # from stall/queue counters between
+                                       # collectives (env ROOMY_AUTOTUNE);
+                                       # on-disk bytes identical either way
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
                 [--checkpoint-dir DIR] # durable checkpoint after every BFS
@@ -141,6 +147,7 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
         steal_policy: f.get_parse("steal", defaults.steal_policy)?,
         bloom_bits_per_key: f.get_parse("bloom", defaults.bloom_bits_per_key)?,
         bloom_approximate: f.has("bloom-approx") || defaults.bloom_approximate,
+        autotune: f.get_parse("autotune", defaults.autotune)?,
         ..defaults
     };
     cfg.root = f

@@ -849,6 +849,191 @@ impl std::ops::Add for DedupSnapshot {
     }
 }
 
+/// Counters for the scratch buffer pool ([`crate::storage::scratch`]):
+/// how often hot-path loops reused a pooled buffer instead of hitting
+/// the allocator, how much scratch RAM is on loan right now (and at
+/// peak), how much idle RAM the pool itself retains (bounded by the
+/// pool cap — tests assert this), and how many bytes flowed through
+/// the flat decode arenas.
+///
+/// Two acquisition styles feed these counters differently: scoped
+/// [`crate::storage::scratch::ScratchBuf`] guards maintain the
+/// `outstanding*` loan gauges (their `Drop` runs even during unwind, so
+/// a panicking collective leaks nothing — tests assert the gauge
+/// returns to zero), while the raw take/put API used by the pipeline's
+/// channel-circulated chunk buffers counts only hits/misses/pooled RAM
+/// (those buffers' custody crosses threads, so a loan gauge would
+/// miscount at teardown).
+#[derive(Debug, Default)]
+pub struct AllocStats {
+    /// Buffer checkouts served from the pool (no allocator hit).
+    pool_hits: AtomicU64,
+    /// Buffer checkouts that had to allocate fresh (pool empty).
+    pool_misses: AtomicU64,
+    /// Buffers checked back in and retained for reuse.
+    returns: AtomicU64,
+    /// Buffers checked back in but freed (pool full or oversized).
+    discards: AtomicU64,
+    /// Gauge: scoped scratch buffers currently on loan.
+    outstanding: AtomicU64,
+    /// Gauge: capacity (bytes) of scoped scratch buffers on loan.
+    outstanding_bytes: AtomicU64,
+    /// High-water of `outstanding_bytes` — the peak scratch RAM any
+    /// moment of the computation borrowed.
+    peak_outstanding_bytes: AtomicU64,
+    /// Gauge: idle RAM parked in the pool's free lists.
+    pooled_bytes: AtomicU64,
+    /// High-water of `pooled_bytes` — must stay ≤ the pool cap.
+    peak_pooled_bytes: AtomicU64,
+    /// Bytes decoded into flat arenas by the batch record codecs.
+    arena_bytes: AtomicU64,
+}
+
+impl AllocStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge one checkout; `bytes` is the handed-out capacity,
+    /// `hit` whether the pool served it. `scoped` checkouts also move
+    /// the loan gauges.
+    pub fn on_checkout(&self, bytes: u64, hit: bool, scoped: bool) {
+        if hit {
+            self.pool_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.pool_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        if scoped {
+            self.outstanding.fetch_add(1, Ordering::Relaxed);
+            let cur = self.outstanding_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+            self.peak_outstanding_bytes.fetch_max(cur, Ordering::Relaxed);
+        }
+    }
+
+    /// Charge capacity growth of a scoped buffer while on loan.
+    pub fn on_grow(&self, delta: u64) {
+        let cur = self.outstanding_bytes.fetch_add(delta, Ordering::Relaxed) + delta;
+        self.peak_outstanding_bytes.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    /// Charge one check-in; `bytes` is the returned capacity, `kept`
+    /// whether the pool retained it. `scoped` check-ins also move the
+    /// loan gauges.
+    pub fn on_checkin(&self, bytes: u64, kept: bool, scoped: bool) {
+        if kept {
+            self.returns.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.discards.fetch_add(1, Ordering::Relaxed);
+        }
+        if scoped {
+            self.outstanding.fetch_sub(1, Ordering::Relaxed);
+            self.outstanding_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Record the pool's current idle RAM (called under the pool lock
+    /// after every mutation).
+    pub fn note_pooled(&self, bytes: u64) {
+        self.pooled_bytes.store(bytes, Ordering::Relaxed);
+        self.peak_pooled_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    /// Charge `n` bytes decoded into a flat arena.
+    pub fn add_arena_bytes(&self, n: u64) {
+        self.arena_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> AllocSnapshot {
+        AllocSnapshot {
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+            discards: self.discards.load(Ordering::Relaxed),
+            outstanding: self.outstanding.load(Ordering::Relaxed),
+            outstanding_bytes: self.outstanding_bytes.load(Ordering::Relaxed),
+            peak_outstanding_bytes: self.peak_outstanding_bytes.load(Ordering::Relaxed),
+            pooled_bytes: self.pooled_bytes.load(Ordering::Relaxed),
+            peak_pooled_bytes: self.peak_pooled_bytes.load(Ordering::Relaxed),
+            arena_bytes: self.arena_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero the counters and high-water marks. The loan and pooled
+    /// gauges are live custody state, not history, so they survive a
+    /// reset (zeroing them would unbalance in-flight check-ins).
+    pub fn reset(&self) {
+        self.pool_hits.store(0, Ordering::Relaxed);
+        self.pool_misses.store(0, Ordering::Relaxed);
+        self.returns.store(0, Ordering::Relaxed);
+        self.discards.store(0, Ordering::Relaxed);
+        self.peak_outstanding_bytes
+            .store(self.outstanding_bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.peak_pooled_bytes
+            .store(self.pooled_bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.arena_bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Plain-data snapshot of [`AllocStats`]; `+` aggregates pools (peaks
+/// are maxes, everything else sums).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    pub returns: u64,
+    pub discards: u64,
+    pub outstanding: u64,
+    pub outstanding_bytes: u64,
+    pub peak_outstanding_bytes: u64,
+    pub pooled_bytes: u64,
+    pub peak_pooled_bytes: u64,
+    pub arena_bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Fraction of checkouts the pool served without allocating
+    /// (0.0 when none happened).
+    pub fn reuse_rate(&self) -> f64 {
+        let total = self.pool_hits + self.pool_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.pool_hits as f64 / total as f64
+        }
+    }
+
+    /// Human-readable one-line summary.
+    pub fn report(&self) -> String {
+        format!(
+            "scratch pool: {} hits / {} misses ({:.0}% reuse), peak scratch ram {} (pooled idle {}), arena {}",
+            self.pool_hits,
+            self.pool_misses,
+            self.reuse_rate() * 100.0,
+            fmt_bytes(self.peak_outstanding_bytes),
+            fmt_bytes(self.peak_pooled_bytes),
+            fmt_bytes(self.arena_bytes),
+        )
+    }
+}
+
+impl std::ops::Add for AllocSnapshot {
+    type Output = AllocSnapshot;
+    fn add(self, o: AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            pool_hits: self.pool_hits + o.pool_hits,
+            pool_misses: self.pool_misses + o.pool_misses,
+            returns: self.returns + o.returns,
+            discards: self.discards + o.discards,
+            outstanding: self.outstanding + o.outstanding,
+            outstanding_bytes: self.outstanding_bytes + o.outstanding_bytes,
+            peak_outstanding_bytes: self.peak_outstanding_bytes.max(o.peak_outstanding_bytes),
+            pooled_bytes: self.pooled_bytes + o.pooled_bytes,
+            peak_pooled_bytes: self.peak_pooled_bytes.max(o.peak_pooled_bytes),
+            arena_bytes: self.arena_bytes + o.arena_bytes,
+        }
+    }
+}
+
 /// Format a byte count with binary units.
 pub fn fmt_bytes(b: u64) -> String {
     const UNITS: &[&str] = &["B", "KiB", "MiB", "GiB", "TiB"];

@@ -22,6 +22,7 @@ use super::Ctx;
 use crate::error::{Result, RoomyError};
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::RecordWriter;
+use crate::storage::scratch;
 use crate::storage::{
     read_all_pipelined, write_all_pipelined, NodeDisk, PrefetchReader, WriteBehindWriter,
 };
@@ -298,8 +299,9 @@ impl<T: Element> RoomyArray<T> {
             let mut reader = ops.into_drain()?;
             let mut header = [0u8; 2];
             let mut idx_buf = [0u8; 8];
-            let mut passed = Vec::new();
-            let mut old = vec![0u8; T::SIZE];
+            let mut passed = scratch::record_buf();
+            let mut old = scratch::record_buf();
+            old.resize(T::SIZE, 0);
             while reader.read_exact_or_eof(&mut header)? {
                 let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
                     RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
@@ -381,7 +383,7 @@ impl<T: Element> RoomyArray<T> {
                 // read-ahead the scan, write-behind the rewrite
                 let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
                 let mut w = WriteBehindWriter::create(disk, &tmp, T::SIZE)?;
-                let mut buf = Vec::new();
+                let mut buf = scratch::record_buf();
                 let base = b as u64 * this.bsize;
                 let mut idx = base;
                 loop {
@@ -582,7 +584,7 @@ impl<T: Element> ArrayInner<T> {
             return Ok(());
         }
         let mut r = PrefetchReader::open(disk, self.bucket_file(b), T::SIZE)?;
-        let mut buf = Vec::new();
+        let mut buf = scratch::record_buf();
         let mut idx = b as u64 * self.bsize;
         loop {
             let n = r.read_batch(&mut buf, SCAN_BATCH)?;

@@ -19,6 +19,7 @@ use super::ops::{OpKind, StagedOps};
 use super::Ctx;
 use crate::error::{Result, RoomyError};
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
+use crate::storage::scratch;
 use crate::storage::{read_all_pipelined, write_all_pipelined};
 
 /// Type-erased bit-array update: `(index, current, passed) -> new`.
@@ -279,7 +280,7 @@ impl RoomyBitArray {
             let mut reader = ops.into_drain()?;
             let mut header = [0u8; 2];
             let mut idx_buf = [0u8; 8];
-            let mut passed = Vec::new();
+            let mut passed = scratch::record_buf();
             while reader.read_exact_or_eof(&mut header)? {
                 let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
                     RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))

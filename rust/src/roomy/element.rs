@@ -8,6 +8,19 @@
 //! (memcmp) order used by the external sort coincides with numeric order —
 //! the sort only needs an order consistent with equality, but numeric
 //! order makes sorted files human-auditable and enables range debugging.
+//!
+//! The **batch codec** methods ([`Element::decode_chunk_into`] /
+//! [`Element::encode_from`]) move whole chunks between disk form and a
+//! flat [`Arena`], so hot loops iterate borrowed `&[u8]` slices instead
+//! of materializing a `Vec` per record. The defaults are correct for
+//! every fixed-size encoding (records on disk are already the arena
+//! layout — the decode is a bulk copy); impls with a faster path may
+//! override. The bytes produced are identical to record-at-a-time
+//! `write_to`, so fingerprint routing via
+//! [`crate::hashfn::fp_bytes`] and every determinism pin are
+//! unaffected.
+
+use crate::storage::scratch::Arena;
 
 /// A value storable in a Roomy structure: fixed size, plain bytes.
 pub trait Element: Clone + Send + Sync + 'static {
@@ -25,6 +38,40 @@ pub trait Element: Clone + Send + Sync + 'static {
         let mut v = vec![0u8; Self::SIZE];
         self.write_to(&mut v);
         v
+    }
+
+    /// Re-encode into a reusable buffer (the pooled replacement for
+    /// [`Element::to_bytes`] in hot loops): clears `out` and leaves
+    /// exactly `SIZE` bytes in it.
+    #[inline]
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.resize(Self::SIZE, 0);
+        self.write_to(out);
+    }
+
+    /// Batch-decode a whole chunk of encoded records (`chunk.len()`
+    /// must be a multiple of `SIZE`) into `arena`, whose record size
+    /// must match. Records land end to end; iterate them as borrowed
+    /// slices via [`Arena::iter`]. Fixed-size records are already the
+    /// arena layout, so the default is one bulk copy.
+    #[inline]
+    fn decode_chunk_into(chunk: &[u8], arena: &mut Arena) {
+        debug_assert_eq!(arena.rec_size(), Self::SIZE, "arena record size mismatch");
+        arena.extend_raw(chunk);
+    }
+
+    /// Batch-encode `items` by appending `items.len() × SIZE` bytes to
+    /// `out`. One resize, then in-place `write_to` per record — no
+    /// intermediate allocations.
+    #[inline]
+    fn encode_from(items: &[Self], out: &mut Vec<u8>) {
+        let start = out.len();
+        out.resize(start + items.len() * Self::SIZE, 0);
+        for (i, it) in items.iter().enumerate() {
+            let off = start + i * Self::SIZE;
+            it.write_to(&mut out[off..off + Self::SIZE]);
+        }
     }
 }
 
@@ -172,5 +219,34 @@ mod tests {
         let a = (1u32, 9u32).to_bytes();
         let b = (2u32, 0u32).to_bytes();
         assert!(a < b);
+    }
+
+    #[test]
+    fn batch_codec_matches_record_at_a_time() {
+        let items: Vec<u64> = vec![3, 1, u64::MAX, 0, 42];
+        let mut batch = Vec::new();
+        Element::encode_from(&items, &mut batch);
+        let mut one_by_one = Vec::new();
+        for it in &items {
+            one_by_one.extend_from_slice(&it.to_bytes());
+        }
+        assert_eq!(batch, one_by_one);
+
+        let mut arena = Arena::new(u64::SIZE);
+        u64::decode_chunk_into(&batch, &mut arena);
+        assert_eq!(arena.len(), items.len());
+        let back: Vec<u64> = arena.iter().map(u64::read_from).collect();
+        assert_eq!(back, items);
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer() {
+        let mut buf = Vec::new();
+        7u32.encode_into(&mut buf);
+        assert_eq!(buf, 7u32.to_bytes());
+        let cap = buf.capacity();
+        9u32.encode_into(&mut buf);
+        assert_eq!(buf, 9u32.to_bytes());
+        assert_eq!(buf.capacity(), cap);
     }
 }

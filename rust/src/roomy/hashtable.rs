@@ -23,13 +23,15 @@ use crate::error::{Result, RoomyError};
 use crate::storage::bloom::{DedupFilter, ShardBloom};
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
+use crate::storage::scratch;
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
 
 const SCAN_BATCH: usize = 4096;
 
-/// Type-erased hash-table update: `(key, current value or None, passed)`
-/// → new value or None.
-type HtUpdateFn = Box<dyn Fn(&[u8], Option<&[u8]>, &[u8]) -> Option<Vec<u8>> + Send + Sync>;
+/// Type-erased hash-table update: `(key, current value or None, passed,
+/// out)` → whether a new value was written into `out`. Writing into a
+/// caller-owned buffer keeps the per-op hot path allocation-free.
+type HtUpdateFn = Box<dyn Fn(&[u8], Option<&[u8]>, &[u8], &mut Vec<u8>) -> bool + Send + Sync>;
 
 /// A distributed disk-backed hash table. Cheap to clone (shared state).
 pub struct RoomyHashTable<K: Element, V: Element> {
@@ -154,10 +156,16 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
         assert!(g.len() < 256, "at most 256 update functions per structure");
         g.push((
             P::SIZE,
-            Box::new(move |k, cur, passed| {
+            Box::new(move |k, cur, passed, out: &mut Vec<u8>| {
                 let key = K::read_from(k);
                 let cur_v = cur.map(V::read_from);
-                f(&key, cur_v.as_ref(), &P::read_from(passed)).map(|v| v.to_bytes())
+                match f(&key, cur_v.as_ref(), &P::read_from(passed)) {
+                    Some(v) => {
+                        v.encode_into(out);
+                        true
+                    }
+                    None => false,
+                }
             }),
         ));
         UpdateId((g.len() - 1) as u8)
@@ -326,7 +334,8 @@ impl<K: Element, V: Element> RoomyHashTable<K, V> {
     /// latency-bound pattern Roomy exists to avoid): scans the key's bucket.
     pub fn fetch(&self, key: &K) -> Result<Option<V>> {
         let inner = &self.inner;
-        let kb = key.to_bytes();
+        let mut kb = scratch::record_buf();
+        key.encode_into(&mut kb);
         let b = inner.bucket_of_key(&kb);
         let disk = inner.ctx.cluster.disk(inner.ctx.cluster.owner(b));
         if let Some(bl) = &inner.bloom {
@@ -436,7 +445,7 @@ impl<K: Element, V: Element> HtInner<K, V> {
         }
         let rec = Self::rec_size();
         let mut r = PrefetchReader::open(disk, &file, rec)?;
-        let mut buf = Vec::new();
+        let mut buf = scratch::record_buf();
         loop {
             let n = r.read_batch(&mut buf, SCAN_BATCH)?;
             if n == 0 {
@@ -481,17 +490,24 @@ impl<K: Element, V: Element> HtInner<K, V> {
         let expect = record_count(disk, &file, Self::rec_size()) as usize;
         let npreds = self.funcs.npreds();
         let mut delta = 0i64;
-        let mut kvbuf = vec![0u8; Self::rec_size()];
+        let mut kvbuf = scratch::record_buf();
+        kvbuf.resize(Self::rec_size(), 0);
 
         // Op-log replay streams through the read-ahead lane; the drain
         // removes the log's spill file when it drops.
         let mut reader = ops.into_drain()?;
         let mut header = [0u8; 2];
-        let mut key = vec![0u8; K::SIZE];
-        let mut payload = Vec::new();
+        let mut key = scratch::record_buf();
+        key.resize(K::SIZE, 0);
+        let mut payload = scratch::record_buf();
 
         let mut probing = self.bloom.is_some() && self.bucket_is_private(disk, &file);
-        let mut buffered: Vec<(OpKind, u8, Vec<u8>, Vec<u8>)> = Vec::new();
+        // Probe-window backlog: decoded-but-unapplied ops live in one
+        // flat pooled buffer ([key ++ payload] spans laid end to end)
+        // plus a small index — no per-op heap pair. The window is
+        // bounded by `budget` bytes.
+        let mut opbuf = scratch::chunk_buf(0);
+        let mut bindex: Vec<(OpKind, u8, usize)> = Vec::new(); // (kind, fn_id, payload len)
         let mut buffered_bytes = 0usize;
         let budget = self.ctx.cfg.op_buffer_bytes.max(4096);
         let mut table: Option<FlatTable> = None;
@@ -523,7 +539,9 @@ impl<K: Element, V: Element> HtInner<K, V> {
                 let bl = self.bloom.as_ref().expect("probing implies a filter");
                 let maybe_seen = bl.probe(b as usize, &key);
                 buffered_bytes += 2 + K::SIZE + plen;
-                buffered.push((kind, fn_id, key.clone(), payload.clone()));
+                bindex.push((kind, fn_id, plen));
+                opbuf.extend_from_slice(&key);
+                opbuf.extend_from_slice(&payload);
                 if maybe_seen || buffered_bytes > budget {
                     // Inconclusive (or the backlog outgrew the op buffer):
                     // close the window; the next op loads the bucket and
@@ -537,7 +555,8 @@ impl<K: Element, V: Element> HtInner<K, V> {
                     b,
                     disk,
                     expect,
-                    &mut buffered,
+                    &opbuf,
+                    &mut bindex,
                     npreds,
                     &mut kvbuf,
                     &mut delta,
@@ -554,9 +573,13 @@ impl<K: Element, V: Element> HtInner<K, V> {
         let table = match table {
             Some(t) => t,
             None if fast => {
-                let mut t = FlatTable::new(K::SIZE, V::SIZE, buffered.len());
-                for (kind, fn_id, k, p) in std::mem::take(&mut buffered) {
-                    self.apply_op(&mut t, b, kind, fn_id, &k, &p, npreds, &mut kvbuf, &mut delta)?;
+                let mut t = FlatTable::new(K::SIZE, V::SIZE, bindex.len());
+                let mut cur = 0usize;
+                for (kind, fn_id, plen) in bindex.drain(..) {
+                    let k = &opbuf[cur..cur + K::SIZE];
+                    let p = &opbuf[cur + K::SIZE..cur + K::SIZE + plen];
+                    cur += K::SIZE + plen;
+                    self.apply_op(&mut t, b, kind, fn_id, k, p, npreds, &mut kvbuf, &mut delta)?;
                 }
                 // Avoided streaming every existing record in and back out.
                 self.ctx.dedup.add_shortcut((expect * Self::rec_size() * 2) as u64);
@@ -568,7 +591,8 @@ impl<K: Element, V: Element> HtInner<K, V> {
                 b,
                 disk,
                 expect,
-                &mut buffered,
+                &opbuf,
+                &mut bindex,
                 npreds,
                 &mut kvbuf,
                 &mut delta,
@@ -622,7 +646,8 @@ impl<K: Element, V: Element> HtInner<K, V> {
         b: u32,
         disk: &Arc<NodeDisk>,
         expect: usize,
-        buffered: &mut Vec<(OpKind, u8, Vec<u8>, Vec<u8>)>,
+        opbuf: &[u8],
+        bindex: &mut Vec<(OpKind, u8, usize)>,
         npreds: usize,
         kvbuf: &mut [u8],
         delta: &mut i64,
@@ -635,8 +660,12 @@ impl<K: Element, V: Element> HtInner<K, V> {
             table.put(&kv[..K::SIZE], &kv[K::SIZE..]);
             Ok(())
         })?;
-        for (kind, fn_id, k, p) in buffered.drain(..) {
-            self.apply_op(&mut table, b, kind, fn_id, &k, &p, npreds, kvbuf, delta)?;
+        let mut cur = 0usize;
+        for (kind, fn_id, plen) in bindex.drain(..) {
+            let k = &opbuf[cur..cur + K::SIZE];
+            let p = &opbuf[cur + K::SIZE..cur + K::SIZE + plen];
+            cur += K::SIZE + plen;
+            self.apply_op(&mut table, b, kind, fn_id, k, p, npreds, kvbuf, delta)?;
         }
         Ok(table)
     }
@@ -656,10 +685,15 @@ impl<K: Element, V: Element> HtInner<K, V> {
         kvbuf: &mut [u8],
         delta: &mut i64,
     ) -> Result<()> {
-        // Pre-read the old value only when predicates need it.
-        let mut old_val: Option<Vec<u8>> = None;
+        // Pre-read the old value only when predicates need it (pooled
+        // copy — the table arena may move under the op below).
+        let mut old_val: Option<scratch::ScratchBuf> = None;
         if npreds > 0 && matches!(kind, OpKind::HtInsert | OpKind::HtRemove | OpKind::HtUpdate) {
-            old_val = table.get(key).map(|v| v.to_vec());
+            old_val = table.get(key).map(|v| {
+                let mut o = scratch::record_buf();
+                o.extend_from_slice(v);
+                o
+            });
         }
         match kind {
             OpKind::HtInsert => {
@@ -695,7 +729,8 @@ impl<K: Element, V: Element> HtInner<K, V> {
                 }
             }
             OpKind::HtUpdate => {
-                let new = {
+                let mut newbuf = scratch::record_buf();
+                let present = {
                     let g = self.ht_updates.read().unwrap();
                     let (_, f) = g.get(fn_id as usize).ok_or_else(|| {
                         RoomyError::UnknownFunc {
@@ -703,32 +738,27 @@ impl<K: Element, V: Element> HtInner<K, V> {
                             id: fn_id,
                         }
                     })?;
-                    f(key, table.get(key), payload)
+                    f(key, table.get(key), payload, &mut newbuf)
                 };
-                match new {
-                    Some(v) => {
-                        let existed = table.put(key, &v);
-                        if !existed {
-                            *delta += 1;
-                        }
-                        if let Some(bl) = &self.bloom {
-                            bl.insert(b as usize, key);
-                        }
-                        if npreds > 0 {
-                            if let Some(old) = &old_val {
-                                self.charge_kv(kvbuf, key, old, -1);
-                            }
-                            self.charge_kv(kvbuf, key, &v, 1);
-                        }
+                if present {
+                    let existed = table.put(key, &newbuf);
+                    if !existed {
+                        *delta += 1;
                     }
-                    None => {
-                        if table.remove(key) {
-                            *delta -= 1;
-                            if npreds > 0 {
-                                if let Some(old) = &old_val {
-                                    self.charge_kv(kvbuf, key, old, -1);
-                                }
-                            }
+                    if let Some(bl) = &self.bloom {
+                        bl.insert(b as usize, key);
+                    }
+                    if npreds > 0 {
+                        if let Some(old) = &old_val {
+                            self.charge_kv(kvbuf, key, old, -1);
+                        }
+                        self.charge_kv(kvbuf, key, &newbuf, 1);
+                    }
+                } else if table.remove(key) {
+                    *delta -= 1;
+                    if npreds > 0 {
+                        if let Some(old) = &old_val {
+                            self.charge_kv(kvbuf, key, old, -1);
                         }
                     }
                 }

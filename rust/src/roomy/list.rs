@@ -13,7 +13,6 @@
 //! delete **all occurrences** of each removed element (including ones
 //! added in the same sync).
 
-use std::collections::HashSet;
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::Arc;
@@ -27,6 +26,7 @@ use crate::storage::bloom::{DedupFilter, ShardBloom};
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
 use crate::storage::extsort;
+use crate::storage::scratch::{self, Arena};
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter};
 
 const SCAN_BATCH: usize = 8192;
@@ -209,7 +209,7 @@ impl<T: Element> RoomyList<T> {
             let mut n = 0i64;
             let mut r = PrefetchReader::open(disk, &src, T::SIZE)?;
             let mut w_ = WriteBehindWriter::append(disk, inner.shard_file(b), T::SIZE)?;
-            let mut buf = Vec::new();
+            let mut buf = scratch::record_buf();
             loop {
                 let got = r.read_batch(&mut buf, SCAN_BATCH)?;
                 if got == 0 {
@@ -295,23 +295,23 @@ impl<T: Element> RoomyList<T> {
                 inner.ctx.dedup.add_fallback();
             }
             if their_bytes <= ram_budget {
-                // Hash-set filter: stream `other`'s shard into RAM
-                // (read-ahead; adopts the task's prefetch hint),
-                // stream-rewrite ours.
-                let mut del: HashSet<Vec<u8>> = HashSet::new();
+                // In-RAM filter set: batch-decode `other`'s shard into a
+                // flat arena (read-ahead; adopts the task's prefetch
+                // hint), sort it once, binary-search during the
+                // stream-rewrite of ours — no per-record `Vec`s.
+                let mut del = Arena::new(T::SIZE);
                 let mut r = PrefetchReader::open(disk, &theirs, T::SIZE)?;
-                let mut buf = Vec::new();
+                let mut buf = scratch::record_buf();
                 loop {
                     let got = r.read_batch(&mut buf, SCAN_BATCH)?;
                     if got == 0 {
                         break;
                     }
-                    for rec in buf.chunks_exact(T::SIZE) {
-                        del.insert(rec.to_vec());
-                    }
+                    T::decode_chunk_into(&buf, &mut del);
                 }
                 drop(r);
-                inner.filter_shard(b, disk, |rec| !del.contains(rec))
+                del.sort_records();
+                inner.filter_shard(b, disk, |rec| !del.contains_sorted(rec))
             } else {
                 // Space-limited path: sort both shards, sorted-merge
                 // difference (the paper's regime for huge lists).
@@ -475,11 +475,27 @@ impl<T: Element> RoomyList<T> {
     }
 
     /// Collect every element into a `Vec` (testing/debug; the whole point
-    /// of Roomy is that this usually does not fit in RAM).
+    /// of Roomy is that this usually does not fit in RAM). Each shard
+    /// task accumulates into its own buffer and the pool merges them by
+    /// shard index — no shared lock on the hot path, and the result
+    /// order is shard order regardless of `num_workers` (the PR 2
+    /// batched-BFS pattern).
     pub fn collect(&self) -> Result<Vec<T>> {
-        let all = std::sync::Mutex::new(Vec::new());
-        self.map(|e| all.lock().unwrap().push(e.clone()))?;
-        Ok(all.into_inner().unwrap())
+        let inner = &self.inner;
+        let _read = inner.write_lock.read().unwrap();
+        let per_shard: Vec<Vec<T>> = inner.ctx.cluster.run_buckets_hinted(
+            "rl.collect",
+            |b| Some(inner.shard_file(b)),
+            |b, disk| {
+                let mut acc = Vec::new();
+                inner.scan_shard(b, disk, |rec| {
+                    acc.push(T::read_from(rec));
+                    Ok(())
+                })?;
+                Ok(acc)
+            },
+        )?;
+        Ok(per_shard.into_iter().flatten().collect())
     }
 
     /// Delete all on-disk state.
@@ -568,7 +584,7 @@ impl<T: Element> ListInner<T> {
             return Ok(());
         }
         let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
-        let mut buf = Vec::new();
+        let mut buf = scratch::record_buf();
         loop {
             let n = r.read_batch(&mut buf, SCAN_BATCH)?;
             if n == 0 {
@@ -609,7 +625,7 @@ impl<T: Element> ListInner<T> {
         {
             let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
             let mut w = WriteBehindWriter::create(disk, &tmp, T::SIZE)?;
-            let mut buf = Vec::new();
+            let mut buf = scratch::record_buf();
             loop {
                 let n = r.read_batch(&mut buf, SCAN_BATCH)?;
                 if n == 0 {
@@ -641,16 +657,19 @@ impl<T: Element> ListInner<T> {
             return ops.clear().map(|_| (0, false));
         }
         let npreds = self.funcs.npreds();
-        let mut removes: HashSet<Vec<u8>> = HashSet::new();
+        let mut removes = Arena::new(T::SIZE);
         let mut added = 0i64;
         {
-            // Pass 1: append adds, collect removes. The op log streams
-            // back through the read-ahead lane (into_drain), appended
-            // elements flush through the write-behind lane; the drain
-            // deletes the log's spill file when it drops, error or not.
+            // Pass 1: append adds, collect removes (into a flat arena —
+            // sorted once below, binary-searched during the rewrite).
+            // The op log streams back through the read-ahead lane
+            // (into_drain), appended elements flush through the
+            // write-behind lane; the drain deletes the log's spill file
+            // when it drops, error or not.
             let mut reader = ops.into_drain()?;
             let mut header = [0u8; 2];
-            let mut elt = vec![0u8; T::SIZE];
+            let mut elt = scratch::record_buf();
+            elt.resize(T::SIZE, 0);
             let mut writer: Option<WriteBehindWriter> = None;
             while reader.read_exact_or_eof(&mut header)? {
                 let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
@@ -678,7 +697,7 @@ impl<T: Element> ListInner<T> {
                         }
                     }
                     OpKind::Remove => {
-                        removes.insert(elt.clone());
+                        removes.push_record(&elt);
                     }
                     other => {
                         return Err(RoomyError::InvalidArg(format!(
@@ -694,7 +713,8 @@ impl<T: Element> ListInner<T> {
         // Pass 2: apply removes (all occurrences).
         let mut removed = 0i64;
         if !removes.is_empty() {
-            removed = self.filter_shard(b, disk, |rec| !removes.contains(rec))?;
+            removes.sort_records();
+            removed = self.filter_shard(b, disk, |rec| !removes.contains_sorted(rec))?;
         }
         Ok((added - removed, added > 0))
     }

@@ -310,6 +310,15 @@ impl Roomy {
                 if self.ctx.cfg.bloom_approximate { "approximate" } else { "exact-backed" },
             ));
         }
+        s.push_str(&crate::storage::scratch::alloc_snapshot().report());
+        s.push('\n');
+        match self.ctx.cluster.autotune() {
+            Some(at) => {
+                s.push_str(&at.report(self.ctx.cluster.disks()));
+                s.push('\n');
+            }
+            None => s.push_str("autotune: off\n"),
+        }
         s.push_str("phases:\n");
         s.push_str(&self.ctx.cluster.phases().report());
         s.push_str(&format!(
@@ -363,5 +372,7 @@ mod tests {
         let _a = r.array::<u32>("arr", 100, 1).unwrap();
         let rep = r.report();
         assert!(rep.contains("io:"), "{rep}");
+        assert!(rep.contains("scratch pool:"), "{rep}");
+        assert!(rep.contains("autotune: off"), "{rep}");
     }
 }

@@ -25,6 +25,7 @@ use crate::error::{Result, RoomyError};
 use crate::storage::bloom::{DedupFilter, ShardBloom};
 use crate::storage::checkpoint::{Checkpointable, StructKind, StructMeta};
 use crate::storage::chunkfile::record_count;
+use crate::storage::scratch::{self, Arena};
 use crate::storage::{NodeDisk, PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
 
 const SCAN_BATCH: usize = 8192;
@@ -261,11 +262,24 @@ impl<T: Element> RoomySet<T> {
         self.merge_with(other, SetOp::Intersection)
     }
 
-    /// Collect every element (testing/debug).
+    /// Collect every element (testing/debug). Each shard accumulates
+    /// into its own buffer on the pool; partials concatenate in shard
+    /// order, so the result is deterministic and lock-free.
     pub fn collect(&self) -> Result<Vec<T>> {
-        let all = std::sync::Mutex::new(Vec::new());
-        self.map(|e| all.lock().unwrap().push(e.clone()))?;
-        Ok(all.into_inner().unwrap())
+        let inner = &self.inner;
+        let per_shard: Vec<Vec<T>> = inner.ctx.cluster.run_buckets_hinted(
+            "rset.collect",
+            |b| Some(inner.shard_file(b)),
+            |b, disk| {
+                let mut acc = Vec::new();
+                inner.scan_shard(b, disk, |rec| {
+                    acc.push(T::read_from(rec));
+                    Ok(())
+                })?;
+                Ok(acc)
+            },
+        )?;
+        Ok(per_shard.into_iter().flatten().collect())
     }
 
     /// Delete all on-disk state.
@@ -338,7 +352,7 @@ impl<T: Element> SetInner<T> {
             return Ok(());
         }
         let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
-        let mut buf = Vec::new();
+        let mut buf = scratch::record_buf();
         loop {
             let n = r.read_batch(&mut buf, SCAN_BATCH)?;
             if n == 0 {
@@ -374,35 +388,36 @@ impl<T: Element> SetInner<T> {
         if ops.is_empty() {
             return ops.clear().map(|_| 0);
         }
-        // Collect staged (kind, elt) pairs; sort by elt; removes win.
-        // (Staged volume is bounded by op_buffer_bytes per shard in RAM;
-        // spilled segments stream back through the reader.)
-        let mut staged: Vec<(Vec<u8>, bool)> = Vec::new(); // (elt, is_add)
+        // Collect staged ops into a flat arena: each record is the
+        // element's bytes followed by one verdict byte (0 = remove,
+        // 1 = add). Sorting bytewise orders by element first and puts
+        // removes ahead of adds within a run, so the prefix-dedup keeps
+        // the winning verdict ("remove dominates") with zero per-op
+        // allocation. (Staged volume is bounded by op_buffer_bytes per
+        // shard in RAM; spilled segments stream back through the reader.)
+        let vrec = T::SIZE + 1;
+        let mut verdicts = Arena::new(vrec);
         {
             // Op-log replay streams through the read-ahead lane; the
             // drain removes the log's spill file when it drops.
             let mut reader = ops.into_drain()?;
             let mut header = [0u8; 2];
-            let mut elt = vec![0u8; T::SIZE];
+            let mut rec = scratch::record_buf();
+            rec.resize(vrec, 0);
             while reader.read_exact_or_eof(&mut header)? {
                 let kind = OpKind::from_u8(header[0]).ok_or_else(|| {
                     RoomyError::InvalidArg(format!("corrupt op tag {}", header[0]))
                 })?;
-                if !reader.read_exact_or_eof(&mut elt)? {
+                if !reader.read_exact_or_eof(&mut rec[..T::SIZE])? {
                     return Err(RoomyError::InvalidArg("truncated op record".into()));
                 }
-                staged.push((elt.clone(), kind == OpKind::Add));
+                rec[T::SIZE] = (kind == OpKind::Add) as u8;
+                verdicts.push_record(&rec);
             }
         }
-        // Sort; for equal elements keep one verdict: remove dominates.
-        staged.sort();
-        let mut verdicts: Vec<(Vec<u8>, bool)> = Vec::with_capacity(staged.len());
-        for (elt, is_add) in staged {
-            match verdicts.last_mut() {
-                Some((last, add)) if *last == elt => *add &= is_add,
-                _ => verdicts.push((elt, is_add)),
-            }
-        }
+        // Sort; one verdict per element, remove dominating.
+        verdicts.sort_records();
+        verdicts.dedup_by_prefix(T::SIZE);
 
         // Approximate mode: treat "maybe seen" adds as duplicates and
         // drop them before the merge; if nothing survives, the shard
@@ -412,7 +427,7 @@ impl<T: Element> SetInner<T> {
         if let Some(bl) = &self.bloom {
             if bl.approximate() {
                 let before = verdicts.len();
-                verdicts.retain(|(elt, is_add)| !*is_add || !bl.probe(b as usize, elt));
+                verdicts.retain(|v| v[T::SIZE] == 0 || !bl.probe(b as usize, &v[..T::SIZE]));
                 let dropped = before - verdicts.len();
                 if dropped > 0 {
                     self.ctx.dedup.add_approx_dropped(dropped as u64);
@@ -440,14 +455,15 @@ impl<T: Element> SetInner<T> {
                                     delta: &mut i64|
              -> Result<()> {
                 while *vi < verdicts.len()
-                    && upto.is_none_or(|rec| verdicts[*vi].0.as_slice() < rec)
+                    && upto.is_none_or(|rec| &verdicts.get(*vi)[..T::SIZE] < &rec[..])
                 {
-                    if verdicts[*vi].1 {
-                        w.push(&verdicts[*vi].0)?;
+                    let v = verdicts.get(*vi);
+                    if v[T::SIZE] == 1 {
+                        w.push(&v[..T::SIZE])?;
                         // genuinely-new element entering the shard: feed
                         // the dedup filter (append-path soundness rule)
                         if let Some(bl) = &self.bloom {
-                            bl.insert(b as usize, &verdicts[*vi].0);
+                            bl.insert(b as usize, &v[..T::SIZE]);
                         }
                         *delta += 1;
                     }
@@ -457,13 +473,14 @@ impl<T: Element> SetInner<T> {
             };
             if disk.exists(&file) {
                 let mut r = PrefetchReader::open(disk, &file, T::SIZE)?;
-                let mut rec = vec![0u8; T::SIZE];
+                let mut rec = scratch::record_buf();
+                rec.resize(T::SIZE, 0);
                 while r.read_one(&mut rec)? {
                     emit_pending(&mut w, &mut vi, Some(&rec), &mut delta)?;
-                    if vi < verdicts.len() && verdicts[vi].0 == rec {
+                    if vi < verdicts.len() && verdicts.get(vi)[..T::SIZE] == rec[..] {
                         // existing element with a verdict: keep on add,
                         // drop on remove; either way consume the verdict.
-                        if verdicts[vi].1 {
+                        if verdicts.get(vi)[T::SIZE] == 1 {
                             w.push(&rec)?;
                         } else {
                             delta -= 1;
@@ -497,8 +514,10 @@ impl<T: Element> SetInner<T> {
         let mut written = 0i64;
         {
             let mut w = WriteBehindWriter::create(disk, &tmp, T::SIZE)?;
-            let mut a_rec = vec![0u8; T::SIZE];
-            let mut b_rec = vec![0u8; T::SIZE];
+            let mut a_rec = scratch::record_buf();
+            a_rec.resize(T::SIZE, 0);
+            let mut b_rec = scratch::record_buf();
+            b_rec.resize(T::SIZE, 0);
             let mut ra = if disk.exists(&mine) {
                 Some(PrefetchReader::open_with_chunk(disk, &mine, T::SIZE, PIPE_CHUNK / 2)?)
             } else {

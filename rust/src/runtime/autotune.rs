@@ -1,0 +1,232 @@
+//! Counter-driven self-tuning of the I/O pipeline and prefetch distance.
+//!
+//! Roomy's streaming machinery has two knobs whose best setting depends
+//! on the workload, not the configuration: how many chunk buffers each
+//! pipelined stream circulates ([`NodeDisk::effective_depth`], seeded
+//! from `io_pipeline_depth`), and how far ahead the pool's cross-task
+//! prefetch hints reach ([`WorkerPool::hint_ahead`]). The [`Autotune`]
+//! controller closes the loop from the metrics the runtime already
+//! keeps:
+//!
+//! - **Pipeline depth** — per node, the growth of
+//!   `reader_wait_ns + writer_wait_ns` (time collectives spent blocked
+//!   on the I/O lanes, from [`crate::metrics::PipelineStats`]) since the
+//!   last round. A stalling node gets one more buffer (up to the
+//!   configured `io_pipeline_depth` ceiling — the controller never
+//!   exceeds the RAM budget the user chose); a node whose streams never
+//!   wait gives buffers back, decaying toward 1.
+//! - **Hint distance** — the peak per-node task-queue depth from
+//!   [`crate::metrics::PoolStats`]. Deep queues mean each dequeue can
+//!   profitably warm several successors; shallow queues keep the seed's
+//!   next-task-only hint.
+//!
+//! One `adapt` round runs **between** collectives (the cluster calls it
+//! at the top of each bucket fan-out), never inside one, so a running
+//! stream always keeps the depth it started with. Both knobs move *when
+//! bytes move*, never *which bytes* — on-disk state stays byte-identical
+//! to a run with the controller off, which the determinism suite pins.
+//!
+//! The controller exists only when
+//! [`RoomyConfig::autotune`](crate::RoomyConfig::autotune) is `On`
+//! (`ROOMY_AUTOTUNE=on`); in the default `Off` mode the cluster holds no
+//! controller and the hot path is exactly the seed's.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::pool::{WorkerPool, MAX_HINT_AHEAD};
+use crate::storage::NodeDisk;
+
+/// Pipeline stall growth per round above which a node earns one more
+/// chunk buffer: 2 ms of blocked reader/writer time since the last
+/// round, i.e. the collective measurably out-ran the I/O lanes.
+const RAISE_STALL_NS: u64 = 2_000_000;
+
+/// Stall growth per round below which a node gives one buffer back:
+/// under 0.1 ms of waiting means the pipeline is already ahead of the
+/// compute and the extra chunk RAM buys nothing.
+const DECAY_STALL_NS: u64 = 100_000;
+
+/// Feedback controller adapting per-node pipeline depth and the pool's
+/// prefetch-hint distance from runtime counters. One per
+/// [`crate::cluster::Cluster`], present only with autotune `On`.
+#[derive(Debug)]
+pub struct Autotune {
+    /// Per-node `reader_wait_ns + writer_wait_ns` at the previous round.
+    /// Counters only grow (a metrics reset makes one delta read low —
+    /// `saturating_sub` keeps that safe), so deltas are per-round stall.
+    last_wait: Mutex<Vec<u64>>,
+    rounds: AtomicU64,
+    depth_raises: AtomicU64,
+    depth_decays: AtomicU64,
+    /// Last hint distance applied (for reporting).
+    hint_ahead: AtomicUsize,
+}
+
+impl Autotune {
+    /// Controller for a cluster of `nodes` node disks.
+    pub fn new(nodes: usize) -> Autotune {
+        Autotune {
+            last_wait: Mutex::new(vec![0; nodes]),
+            rounds: AtomicU64::new(0),
+            depth_raises: AtomicU64::new(0),
+            depth_decays: AtomicU64::new(0),
+            hint_ahead: AtomicUsize::new(1),
+        }
+    }
+
+    /// One adaptation round. Called between collectives; cheap (a few
+    /// atomic loads per node) so per-collective overhead is noise.
+    pub fn adapt(&self, disks: &[Arc<NodeDisk>], pool: &WorkerPool) {
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        let mut last = self.last_wait.lock().expect("autotune state poisoned");
+        for (n, disk) in disks.iter().enumerate() {
+            if disk.pipeline_depth() == 0 {
+                continue; // synchronous I/O: nothing to tune
+            }
+            let s = disk.pipe_stats().snapshot();
+            let wait = s.reader_wait_ns + s.writer_wait_ns;
+            let delta = wait.saturating_sub(last[n]);
+            last[n] = wait;
+            let cur = disk.effective_depth();
+            if delta >= RAISE_STALL_NS {
+                // set_effective_depth clamps at the configured ceiling;
+                // only count rounds that actually moved the knob
+                disk.set_effective_depth(cur + 1);
+                if disk.effective_depth() > cur {
+                    self.depth_raises.fetch_add(1, Ordering::Relaxed);
+                }
+            } else if delta <= DECAY_STALL_NS && cur > 1 {
+                disk.set_effective_depth(cur - 1);
+                self.depth_decays.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // Hint distance follows the deepest node queue seen so far: with
+        // q tasks waiting behind every dequeue there is real lookahead to
+        // warm; with queues ≤ 1 deep wider hints are pure waste.
+        let peak = pool
+            .stats()
+            .per_node_queue_depth()
+            .into_iter()
+            .max()
+            .unwrap_or(0);
+        let k = match peak {
+            0..=1 => 1,
+            2..=3 => 2,
+            4..=7 => 3,
+            _ => MAX_HINT_AHEAD,
+        };
+        pool.set_hint_ahead(k);
+        self.hint_ahead.store(pool.hint_ahead(), Ordering::Relaxed);
+    }
+
+    /// Adaptation rounds run so far.
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Relaxed)
+    }
+
+    /// Rounds that raised some node's effective depth.
+    pub fn depth_raises(&self) -> u64 {
+        self.depth_raises.load(Ordering::Relaxed)
+    }
+
+    /// Rounds that decayed some node's effective depth toward 1.
+    pub fn depth_decays(&self) -> u64 {
+        self.depth_decays.load(Ordering::Relaxed)
+    }
+
+    /// Hint distance the controller last applied.
+    pub fn hint_ahead(&self) -> usize {
+        self.hint_ahead.load(Ordering::Relaxed)
+    }
+
+    /// One human-readable summary line for [`crate::Roomy::report`].
+    pub fn report(&self, disks: &[Arc<NodeDisk>]) -> String {
+        let depths: Vec<String> = disks
+            .iter()
+            .map(|d| d.effective_depth().to_string())
+            .collect();
+        format!(
+            "autotune: {} rounds, depth +{}/-{}, effective depths [{}], hint ahead {}",
+            self.rounds(),
+            self.depth_raises(),
+            self.depth_decays(),
+            depths.join(" "),
+            self.hint_ahead(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DiskPolicy;
+    use crate::testutil::tmpdir;
+
+    fn disk(depth: usize, dir: &std::path::Path) -> Arc<NodeDisk> {
+        Arc::new(
+            NodeDisk::create_with_depth(0, dir.join("n0"), DiskPolicy::default(), depth)
+                .unwrap(),
+        )
+    }
+
+    /// A quiet pipeline decays toward depth 1; a stalling one climbs back
+    /// to the configured ceiling and never beyond it.
+    #[test]
+    fn depth_follows_stall_counters() {
+        let t = tmpdir("autotune_depth");
+        let d = disk(4, t.path());
+        let pool = WorkerPool::new(2);
+        let at = Autotune::new(1);
+
+        // no stalls recorded → decay one step per round, floor at 1
+        for _ in 0..6 {
+            at.adapt(std::slice::from_ref(&d), &pool);
+        }
+        assert_eq!(d.effective_depth(), 1);
+        assert!(at.depth_decays() >= 3);
+
+        // heavy stalls each round → climb to the ceiling, then hold
+        for _ in 0..6 {
+            d.pipe_stats().add_reader_wait(std::time::Duration::from_millis(5));
+            at.adapt(std::slice::from_ref(&d), &pool);
+        }
+        assert_eq!(d.effective_depth(), 4, "must stop at io_pipeline_depth");
+        assert_eq!(at.depth_raises(), 3);
+        assert_eq!(at.rounds(), 12);
+    }
+
+    /// Depth-0 (synchronous) disks are never touched.
+    #[test]
+    fn sync_disks_are_left_alone() {
+        let t = tmpdir("autotune_sync");
+        let d = disk(0, t.path());
+        let pool = WorkerPool::new(1);
+        let at = Autotune::new(1);
+        at.adapt(std::slice::from_ref(&d), &pool);
+        assert_eq!(d.effective_depth(), 0);
+        assert_eq!(at.depth_raises() + at.depth_decays(), 0);
+    }
+
+    /// Hint distance tracks the peak per-node queue depth.
+    #[test]
+    fn hint_distance_tracks_queue_depth() {
+        let t = tmpdir("autotune_hint");
+        let d = disk(2, t.path());
+        let pool = WorkerPool::new(2);
+        let at = Autotune::new(1);
+
+        at.adapt(std::slice::from_ref(&d), &pool);
+        assert_eq!(pool.hint_ahead(), 1, "no queues seen yet");
+
+        pool.stats().note_queue_depths(&[2, 6]);
+        at.adapt(std::slice::from_ref(&d), &pool);
+        assert_eq!(pool.hint_ahead(), 3);
+        assert_eq!(at.hint_ahead(), 3);
+
+        pool.stats().note_queue_depths(&[20, 1]);
+        at.adapt(std::slice::from_ref(&d), &pool);
+        assert_eq!(pool.hint_ahead(), MAX_HINT_AHEAD);
+        assert!(at.report(std::slice::from_ref(&d)).contains("hint ahead"));
+    }
+}

@@ -74,7 +74,10 @@
 //! channel and block on a reply. Batches are large (thousands of elements)
 //! so the channel hop is noise compared to execution.
 
+pub mod autotune;
 pub mod pool;
+
+pub use autotune::Autotune;
 
 use std::path::PathBuf;
 

@@ -20,8 +20,9 @@
 //!   globally lowest-index remaining task (bench baseline).
 //!
 //! When a worker dequeues a task, the pool posts a **cross-task prefetch
-//! hint** for the next task still queued on the same node (each task
-//! hinted at most once): the caller-supplied hint closure typically
+//! hint** for up to [`WorkerPool::hint_ahead`] tasks still queued on the
+//! same node (default 1 — the next task only; each task hinted at most
+//! once): the caller-supplied hint closure typically
 //! warms that bucket's file through the node's read-ahead lane
 //! ([`crate::storage::pipeline`]), so the next scan starts with its
 //! first chunk already staged.
@@ -89,6 +90,13 @@ use crate::storage::{NodeDisk, SpillBuffer};
 
 /// Capture log record header: `[bucket u32 LE, payload len u32 LE]`.
 const CAPTURE_HDR: usize = 8;
+
+/// Ceiling on the cross-task prefetch hint distance: the most queued
+/// successors one dequeue may hint. Fixed so [`Take`] stays a flat,
+/// allocation-free struct on the dequeue path. Hinting further ahead than
+/// the deepest read-ahead lane (`io_pipeline_depth` caps at small values
+/// in practice) only evicts its own warm chunks.
+pub const MAX_HINT_AHEAD: usize = 4;
 
 /// Where one task's capture logs overflow to: a private scratch directory
 /// on one node disk, created lazily on first spill and removed when the
@@ -303,12 +311,25 @@ struct Done<R> {
 }
 
 /// One dequeued task: its index, whether it came off the worker's own
-/// home queue, and the next task still queued on the same node (the
-/// prefetch-hint candidate).
+/// home queue, and up to `hint_ahead` tasks still queued on the same node
+/// (the prefetch-hint candidates, nearest first). Fixed-width so the
+/// dequeue path never allocates.
 struct Take {
     task: usize,
     local: bool,
-    next_on_node: Option<usize>,
+    hints: [usize; MAX_HINT_AHEAD],
+    nhints: usize,
+}
+
+/// First `k` tasks still queued, nearest first, into a flat array.
+fn peek_hints(q: &VecDeque<usize>, k: usize) -> ([usize; MAX_HINT_AHEAD], usize) {
+    let mut hints = [0usize; MAX_HINT_AHEAD];
+    let mut n = 0;
+    for &t in q.iter().take(k.min(MAX_HINT_AHEAD)) {
+        hints[n] = t;
+        n += 1;
+    }
+    (hints, n)
 }
 
 /// Where one collective's tasks are drawn from.
@@ -374,6 +395,7 @@ impl TaskSource {
         homes: &[usize],
         home_cursor: &mut usize,
         topo: &Topology,
+        hint_k: usize,
     ) -> Option<Take> {
         match &self.kind {
             SourceKind::Cursor { cursor, ntasks } => {
@@ -388,7 +410,8 @@ impl TaskSource {
                     // baseline, and the global next task is usually
                     // dequeued by another worker before a warm could
                     // land — it would only race its own consumer
-                    next_on_node: None,
+                    hints: [0; MAX_HINT_AHEAD],
+                    nhints: 0,
                 })
             }
             SourceKind::Queues { queues, lens, steal } => {
@@ -403,10 +426,10 @@ impl TaskSource {
                     let mut q = queues[n].lock().expect("node queue poisoned");
                     if let Some(t) = q.pop_front() {
                         lens[n].fetch_sub(1, Ordering::Relaxed);
-                        let next_on_node = q.front().copied();
+                        let (hints, nhints) = peek_hints(&q, hint_k);
                         drop(q);
                         *home_cursor = (*home_cursor + k) % homes.len();
-                        return Some(Take { task: t, local: true, next_on_node });
+                        return Some(Take { task: t, local: true, hints, nhints });
                     }
                 }
                 if !*steal {
@@ -425,9 +448,9 @@ impl TaskSource {
                     let mut q = queues[victim].lock().expect("node queue poisoned");
                     if let Some(t) = q.pop_back() {
                         lens[victim].fetch_sub(1, Ordering::Relaxed);
-                        let next_on_node = q.front().copied();
+                        let (hints, nhints) = peek_hints(&q, hint_k);
                         drop(q);
-                        return Some(Take { task: t, local: false, next_on_node });
+                        return Some(Take { task: t, local: false, hints, nhints });
                     }
                 }
             }
@@ -454,6 +477,12 @@ pub struct WorkerPool {
     stats: PoolStats,
     capture: Option<CaptureSpillCfg>,
     steal: StealPolicy,
+    /// Cross-task prefetch hint distance: queued successors hinted per
+    /// dequeue (1 = the seed's next-task-only behavior). Atomic so the
+    /// autotune controller can adjust it through a shared reference
+    /// between collectives; hints never change what a task reads, only
+    /// when bytes move, so any value is byte-identical.
+    hint_ahead: AtomicUsize,
 }
 
 impl WorkerPool {
@@ -469,6 +498,7 @@ impl WorkerPool {
             stats: PoolStats::new(workers),
             capture: None,
             steal: StealPolicy::default(),
+            hint_ahead: AtomicUsize::new(1),
         }
     }
 
@@ -480,6 +510,17 @@ impl WorkerPool {
     /// The idle-worker scheduling policy in force.
     pub fn steal_policy(&self) -> StealPolicy {
         self.steal
+    }
+
+    /// Set the cross-task prefetch hint distance, clamped to
+    /// `1..=`[`MAX_HINT_AHEAD`]. Takes effect at the next collective.
+    pub fn set_hint_ahead(&self, k: usize) {
+        self.hint_ahead.store(k.clamp(1, MAX_HINT_AHEAD), Ordering::Relaxed);
+    }
+
+    /// The cross-task prefetch hint distance in force (default 1).
+    pub fn hint_ahead(&self) -> usize {
+        self.hint_ahead.load(Ordering::Relaxed)
     }
 
     /// Back op capture with scratch files on `disks` (task `t` scratches
@@ -565,6 +606,9 @@ impl WorkerPool {
         self.stats.note_queue_depths(&source.depths);
         // Each task's hint fires at most once, whichever worker peeks it.
         let hinted: Vec<AtomicBool> = (0..ntasks).map(|_| AtomicBool::new(false)).collect();
+        // Hint distance is sampled once per collective so every worker
+        // sees one consistent value for the whole run.
+        let hint_k = self.hint_ahead();
         let abort = AtomicBool::new(false);
         let run = self
             .capture
@@ -592,10 +636,11 @@ impl WorkerPool {
                                     &homes,
                                     &mut home_cursor,
                                     topo,
+                                    hint_k,
                                 ) else {
                                     break;
                                 };
-                                if let Some(nx) = take.next_on_node {
+                                for &nx in &take.hints[..take.nhints] {
                                     if !hinted[nx].swap(true, Ordering::Relaxed) {
                                         hint(nx);
                                     }
@@ -922,6 +967,37 @@ mod tests {
         // worker 0 homes both nodes: drains node 0 (hints 2, 4) then
         // node 1 (hints 3, 5); queue fronts 0 and 1 are never hinted
         assert_eq!(got, vec![2, 3, 4, 5]);
+    }
+
+    /// Raising the hint distance fans each dequeue's hints over several
+    /// queued successors, still at most once per task, and clamps to
+    /// `MAX_HINT_AHEAD`; queue fronts are dequeued before any peek can
+    /// see them, so they are still never hinted.
+    #[test]
+    fn hint_ahead_widens_the_hint_window() {
+        let p = pool(1); // serial: deterministic queue fronts
+        assert_eq!(p.hint_ahead(), 1);
+        p.set_hint_ahead(3);
+        assert_eq!(p.hint_ahead(), 3);
+        p.set_hint_ahead(0); // clamps low
+        assert_eq!(p.hint_ahead(), 1);
+        p.set_hint_ahead(64); // clamps high
+        assert_eq!(p.hint_ahead(), MAX_HINT_AHEAD);
+        p.set_hint_ahead(3);
+
+        let hints = std::sync::Mutex::new(Vec::new());
+        p.run_tagged(
+            "t",
+            8,
+            Topology::new(2, 4), // node 0: {0,2,4,6}, node 1: {1,3,5,7}
+            |t| hints.lock().unwrap().push(t),
+            |_t| Ok(()),
+        )
+        .unwrap();
+        let mut got = hints.into_inner().unwrap();
+        got.sort();
+        // every task except the two queue fronts is hinted exactly once
+        assert_eq!(got, vec![2, 3, 4, 5, 6, 7]);
     }
 
     /// Captured ops must replay in (task, issue) order — the serial byte

@@ -69,6 +69,12 @@ pub struct NodeDisk {
     /// and, when depth > 0, this node's I/O service lanes
     /// ([`crate::storage::pipeline`]).
     pipeline_depth: usize,
+    /// Runtime-adjustable stream depth ([`crate::runtime::autotune`]):
+    /// new streams circulate this many buffers. Clamped to
+    /// `1..=pipeline_depth` — the service's existence is fixed at
+    /// creation, so a depth-0 disk stays synchronous and an overlapped
+    /// disk never exceeds its configured buffer budget.
+    effective_depth: std::sync::atomic::AtomicUsize,
     io: Option<IoService>,
     pipe_stats: Arc<PipelineStats>,
     /// Cross-task prefetch hints warmed by the read lane, waiting for the
@@ -106,6 +112,7 @@ impl NodeDisk {
             read_free: Mutex::new(None),
             write_free: Mutex::new(None),
             pipeline_depth: depth,
+            effective_depth: std::sync::atomic::AtomicUsize::new(depth),
             io,
             pipe_stats: Arc::new(PipelineStats::new()),
             hints: HintCache::new(depth),
@@ -131,9 +138,33 @@ impl NodeDisk {
         super::pipeline::post_hint(self, rel.as_ref());
     }
 
-    /// Chunk buffers per pipelined stream (0 = synchronous I/O).
+    /// Chunk buffers per pipelined stream as configured at creation
+    /// (0 = synchronous I/O).
     pub fn pipeline_depth(&self) -> usize {
         self.pipeline_depth
+    }
+
+    /// Chunk buffers a *new* stream will circulate right now: the
+    /// configured depth unless [`NodeDisk::set_effective_depth`]
+    /// lowered/restored it between collectives. Equal to
+    /// `pipeline_depth()` unless autotune is active.
+    pub fn effective_depth(&self) -> usize {
+        self.effective_depth.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Adjust the depth new streams use, clamped to
+    /// `1..=pipeline_depth()`. A no-op on a synchronous (depth-0) disk —
+    /// the service's existence cannot change after creation. Safe to
+    /// call between collectives: depth only moves *when* bytes
+    /// transfer, never what lands on disk (`tests/determinism.rs` pins
+    /// bytes across depths).
+    pub fn set_effective_depth(&self, depth: usize) {
+        if self.pipeline_depth == 0 {
+            return;
+        }
+        let clamped = depth.clamp(1, self.pipeline_depth);
+        self.effective_depth
+            .store(clamped, std::sync::atomic::Ordering::Relaxed);
     }
 
     /// This node's I/O service lanes, if the pipeline is enabled.
@@ -729,6 +760,26 @@ mod tests {
         let d = disk(t.path());
         assert_eq!(d.pipeline_depth(), 0);
         assert!(d.io_service().is_none());
+    }
+
+    #[test]
+    fn effective_depth_clamps_and_ignores_sync_disks() {
+        let t = tmpdir("diskio_effdepth");
+        let sync = NodeDisk::create(0, t.path().join("n0"), DiskPolicy::unthrottled()).unwrap();
+        sync.set_effective_depth(8);
+        assert_eq!(sync.effective_depth(), 0, "sync disk depth is immutable");
+
+        let piped =
+            NodeDisk::create_with_depth(1, t.path().join("n1"), DiskPolicy::unthrottled(), 4)
+                .unwrap();
+        assert_eq!(piped.effective_depth(), 4);
+        piped.set_effective_depth(2);
+        assert_eq!(piped.effective_depth(), 2);
+        piped.set_effective_depth(0); // clamps up to 1, never disables
+        assert_eq!(piped.effective_depth(), 1);
+        piped.set_effective_depth(99); // clamps down to the created depth
+        assert_eq!(piped.effective_depth(), 4);
+        assert_eq!(piped.pipeline_depth(), 4, "configured depth unchanged");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::sync::Arc;
 use super::chunkfile::{RecordReader, RecordWriter};
 use super::diskio::NodeDisk;
 use super::pipeline::{PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
+use super::scratch;
 use crate::error::Result;
 
 /// Scratch prefix for a sort targeting `output`: a flattened name under
@@ -54,7 +55,7 @@ pub fn make_runs(
     let total_recs = super::chunkfile::record_count(disk, &input, rec_size).max(1) as usize;
     let recs_per_chunk = (chunk_bytes / rec_size).clamp(1, total_recs);
     let mut reader = PrefetchReader::open(disk, &input, rec_size)?;
-    let mut buf = Vec::new();
+    let mut buf = scratch::record_buf();
     loop {
         let n = reader.read_batch(&mut buf, recs_per_chunk)?;
         if n == 0 {
@@ -99,18 +100,21 @@ pub fn merge_runs(
         }
         readers.push(r);
     }
-    let mut last: Option<Vec<u8>> = None;
+    // Dedup compares against a single reused buffer — no per-unique
+    // clone. The heap's k record buffers circulate pop → refill → push,
+    // so the merge allocates nothing per record in steady state.
+    let mut last = scratch::record_buf();
+    last.resize(rec_size, 0);
+    let mut have_last = false;
     let mut written = 0u64;
     while let Some(Reverse((rec, i))) = heap.pop() {
-        let emit = match (&last, dedup) {
-            (Some(prev), true) => prev != &rec,
-            _ => true,
-        };
+        let emit = !(dedup && have_last && last[..] == rec[..]);
         if emit {
             writer.push(&rec)?;
             written += 1;
             if dedup {
-                last = Some(rec.clone());
+                last.copy_from_slice(&rec);
+                have_last = true;
             }
         }
         let mut next = rec; // reuse allocation

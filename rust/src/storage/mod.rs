@@ -77,6 +77,7 @@ pub mod chunkfile;
 pub mod diskio;
 pub mod extsort;
 pub mod pipeline;
+pub mod scratch;
 
 pub use bloom::{DedupFilter, ShardBloom};
 pub use buffer::{SpillBuffer, SpillDrain};
@@ -87,3 +88,4 @@ pub use pipeline::{
     read_all_pipelined, write_all_pipelined, ByteReader, PrefetchReader, WriteBehindWriter,
     PIPE_CHUNK,
 };
+pub use scratch::{Arena, ScratchBuf, ScratchPool};

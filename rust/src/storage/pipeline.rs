@@ -70,6 +70,7 @@ use super::chunkfile::{RecordReader, RecordWriter};
 use super::diskio::{
     path_file_id, DetachedReader, NodeDisk, SharedMeteredReader, SharedMeteredWriter,
 };
+use super::scratch;
 use crate::error::{Result, RoomyError};
 use crate::metrics::PipelineStats;
 
@@ -411,7 +412,8 @@ pub(crate) fn post_hint(disk: &Arc<NodeDisk>, rel: &Path) {
         let warmed = (|| -> Result<((u64, u64), Vec<u8>, Option<DetachedReader>)> {
             let mut r = disk2.open_file_shared(&rel2)?;
             let id = r.file_id();
-            let mut chunk = vec![0u8; PIPE_CHUNK];
+            let mut chunk = scratch::take_chunk_vec(PIPE_CHUNK);
+            chunk.resize(PIPE_CHUNK, 0);
             let n = r.read_fully(&mut chunk)?;
             chunk.truncate(n);
             // a short warm (whole file < one chunk) keeps only what it
@@ -548,9 +550,18 @@ impl ChunkFetcher {
         // Prime the read-ahead: depth - 1 buffers go to the lane, the
         // depth-th is `cur` (donated on the first refill) — or, with an
         // adopted hint, the warmed chunk (whose receipt skips one
-        // donation instead).
-        for _ in 1..f.disk.pipeline_depth().max(1) {
-            f.submit_fill(Vec::new())?;
+        // donation instead). Buffers come from the scratch pool;
+        // pre-sized checkouts are charged to the stream's allocation
+        // accounting here (the fill job's grow-metering only sees
+        // capacity it adds itself).
+        for _ in 1..f.disk.effective_depth().max(1) {
+            let buf = scratch::take_chunk_vec(f.chunk_bytes);
+            let cap = buf.capacity();
+            if cap > 0 {
+                let tot = f.shared.alloc.fetch_add(cap, Ordering::Relaxed) + cap;
+                f.disk.pipe_stats().note_stream_buf(tot as u64);
+            }
+            f.submit_fill(buf)?;
         }
         Ok(f)
     }
@@ -601,7 +612,13 @@ impl ChunkFetcher {
                     }
                 }
             }
-            let _ = tx.send(out);
+            if let Err(lost) = tx.send(out) {
+                // Consumer gone (stream dropped mid-flight): park the
+                // buffer instead of leaking the allocation to the heap.
+                if let Ok(buf) = lost.0 {
+                    scratch::put_chunk_vec(buf);
+                }
+            }
         });
         self.disk
             .io_service()
@@ -679,6 +696,15 @@ impl Drop for ChunkFetcher {
         // Still-queued fill jobs become no-ops; the file handle is
         // released by whichever job (or this drop) holds the state last.
         self.shared.cancelled.store(true, Ordering::Relaxed);
+        // Park every buffer we still have custody of: the consumer's
+        // chunk and everything already delivered. In-flight fills park
+        // their own buffer when their send fails (receiver gone).
+        scratch::put_chunk_vec(std::mem::take(&mut self.cur));
+        while let Ok(msg) = self.data_rx.try_recv() {
+            if let Ok(buf) = msg {
+                scratch::put_chunk_vec(buf);
+            }
+        }
     }
 }
 
@@ -726,7 +752,8 @@ pub fn read_all_pipelined(disk: &Arc<NodeDisk>, rel: impl AsRef<Path>) -> Result
     }
     let mut r = ByteReader::open(disk, &rel)?;
     let mut out = Vec::with_capacity(disk.len(&rel) as usize);
-    let mut buf = vec![0u8; PIPE_CHUNK];
+    let mut buf = scratch::chunk_buf(PIPE_CHUNK);
+    buf.resize(PIPE_CHUNK, 0);
     loop {
         let n = r.read_fully(&mut buf)?;
         out.extend_from_slice(&buf[..n]);
@@ -905,20 +932,30 @@ impl ChunkFlusher {
         };
         let (pool_tx, pool_rx) = channel();
         disk.pipe_stats().add_stream();
+        let shared = Arc::new(WriteShared {
+            slot: Mutex::new(WriteSlot { w: Some(writer), err: None }),
+            has_err: AtomicBool::new(false),
+            cancelled: AtomicBool::new(false),
+            alloc: AtomicUsize::new(0),
+        });
+        // The producer's first chunk buffer comes from the scratch
+        // pool; charge its capacity up front (flush_cur's grow-metering
+        // only sees capacity added past `cur_cap0`).
+        let cur = scratch::take_chunk_vec(PIPE_CHUNK);
+        let cur_cap0 = cur.capacity();
+        if cur_cap0 > 0 {
+            shared.alloc.store(cur_cap0, Ordering::Relaxed);
+            disk.pipe_stats().note_stream_buf(cur_cap0 as u64);
+        }
         Ok(ChunkFlusher {
             disk: Arc::clone(disk),
-            shared: Arc::new(WriteShared {
-                slot: Mutex::new(WriteSlot { w: Some(writer), err: None }),
-                has_err: AtomicBool::new(false),
-                cancelled: AtomicBool::new(false),
-                alloc: AtomicUsize::new(0),
-            }),
+            shared,
             pool_rx,
             pool_tx,
-            cur: Vec::new(),
-            cur_cap0: 0,
+            cur,
+            cur_cap0,
             chunk_bytes: PIPE_CHUNK,
-            spare_budget: disk.pipeline_depth().max(1) - 1,
+            spare_budget: disk.effective_depth().max(1) - 1,
             outstanding: 0,
             staging,
             target,
@@ -981,7 +1018,13 @@ impl ChunkFlusher {
         }
         if self.spare_budget > 0 {
             self.spare_budget -= 1;
-            return Ok(Vec::new());
+            let b = scratch::take_chunk_vec(self.chunk_bytes);
+            let cap = b.capacity();
+            if cap > 0 {
+                let tot = self.shared.alloc.fetch_add(cap, Ordering::Relaxed) + cap;
+                self.disk.pipe_stats().note_stream_buf(tot as u64);
+            }
+            return Ok(b);
         }
         if self.outstanding == 0 {
             // Defensive: nothing in flight could ever return a buffer.
@@ -1018,7 +1061,11 @@ impl ChunkFlusher {
                 }
             }
             buf.clear();
-            let _ = tx.send(buf); // buffer always returns to the producer
+            // The buffer returns to the producer; if the producer is
+            // gone (abandoned stream past its drain), park it instead.
+            if let Err(lost) = tx.send(buf) {
+                scratch::put_chunk_vec(lost.0);
+            }
         });
         self.disk
             .io_service()
@@ -1028,12 +1075,16 @@ impl ChunkFlusher {
         Ok(())
     }
 
-    /// Wait until every submitted chunk has been written.
+    /// Wait until every submitted chunk has been written; the returned
+    /// buffers go back to the scratch pool (this stream is done with
+    /// them).
     fn drain(&mut self) -> Result<()> {
         while self.outstanding > 0 {
-            self.pool_rx
+            let b = self
+                .pool_rx
                 .recv_timeout(DRAIN_TIMEOUT)
                 .map_err(|_| pipeline_err("write-behind lane stalled in drain"))?;
+            scratch::put_chunk_vec(b);
             self.outstanding -= 1;
         }
         Ok(())
@@ -1066,6 +1117,7 @@ impl ChunkFlusher {
         // Success or failure, this stream is done: Drop must not try to
         // clean up again, but a failed create must not leak its staging.
         self.finished = true;
+        scratch::put_chunk_vec(std::mem::take(&mut self.cur));
         if result.is_err() {
             if let Some(staging) = self.staging.take() {
                 let _ = self.disk.remove(&staging);
@@ -1087,10 +1139,14 @@ impl Drop for ChunkFlusher {
         self.shared.cancelled.store(true, Ordering::Relaxed);
         while self.outstanding > 0 {
             match self.pool_rx.recv_timeout(DRAIN_TIMEOUT) {
-                Ok(_) => self.outstanding -= 1,
+                Ok(b) => {
+                    scratch::put_chunk_vec(b);
+                    self.outstanding -= 1;
+                }
                 Err(_) => break, // lane wedged; still try to clean up
             }
         }
+        scratch::put_chunk_vec(std::mem::take(&mut self.cur));
         lock_ignore_poison(&self.shared.slot).w = None; // close the file
         if let Some(staging) = self.staging.take() {
             let _ = self.disk.remove(&staging);

@@ -1,0 +1,521 @@
+//! Pooled scratch buffers and flat decode arenas for the record hot
+//! path.
+//!
+//! The paper's premise is that disk bandwidth, not CPU, bounds a Roomy
+//! computation — but a scan loop that allocates a fresh `Vec` per batch
+//! (or per record) is allocator-bound on warm-cache runs. This module
+//! gives every hot loop a process-wide pool of reusable byte buffers:
+//!
+//! - [`ScratchBuf`] — a scoped guard around a pooled `Vec<u8>`. Deref
+//!   to `Vec<u8>`, so it drops into any `&mut Vec<u8>` call site.
+//!   Checked back into the pool on drop — **including during panic
+//!   unwind**, so a worker that dies mid-scan leaks nothing (the
+//!   `outstanding` gauge in [`AllocStats`] returns to zero; tests
+//!   assert this).
+//! - [`take_chunk_vec`] / [`put_chunk_vec`] — a raw take/put pair for
+//!   the I/O pipeline's chunk buffers, whose custody crosses threads
+//!   through channels (a scoped guard cannot follow them). These count
+//!   pool hits/misses and idle RAM but not loans.
+//! - [`Arena`] — a flat byte arena the [`crate::Element`] batch codecs
+//!   decode whole chunks into, so syncs and dup-elim merges iterate
+//!   borrowed `&[u8]` slices instead of materializing per-record
+//!   `Vec`s.
+//!
+//! The pool is deliberately small and bounded: at most [`POOL_WIDTH`]
+//! idle buffers per class, each clamped to its class's byte ceiling, so
+//! idle pooled RAM never exceeds [`pool_cap_bytes`] (tests assert the
+//! high-water mark stays under it). Buffers that grew past the ceiling
+//! while on loan are freed at check-in rather than parked.
+//!
+//! Pooling is invisible to on-disk bytes: a pooled buffer is cleared on
+//! checkout and every consumer writes before reading, so determinism
+//! pins are untouched.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Mutex, OnceLock};
+
+use crate::metrics::{AllocSnapshot, AllocStats};
+
+/// Maximum idle buffers retained per class. Sized to the widest test
+/// pool (4 workers): one buffer per concurrently scanning task.
+pub const POOL_WIDTH: usize = 4;
+
+/// Capacity ceiling for pooled chunk-class buffers — one pipeline
+/// chunk. Larger check-ins are freed, not parked.
+pub const CHUNK_CLASS_MAX: usize = super::pipeline::PIPE_CHUNK;
+
+/// Capacity ceiling for pooled record-class buffers (scan batches,
+/// record staging, sort-merge heads).
+pub const RECORD_CLASS_MAX: usize = 128 * 1024;
+
+/// Upper bound on idle RAM the pool may retain across both classes.
+pub fn pool_cap_bytes() -> u64 {
+    (POOL_WIDTH * (CHUNK_CLASS_MAX + RECORD_CLASS_MAX)) as u64
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Class {
+    Chunk,
+    Record,
+}
+
+impl Class {
+    fn ceiling(self) -> usize {
+        match self {
+            Class::Chunk => CHUNK_CLASS_MAX,
+            Class::Record => RECORD_CLASS_MAX,
+        }
+    }
+}
+
+/// Process-wide scratch buffer pool: two bounded free lists (chunk and
+/// record class) plus the [`AllocStats`] they feed.
+pub struct ScratchPool {
+    chunks: Mutex<Vec<Vec<u8>>>,
+    records: Mutex<Vec<Vec<u8>>>,
+    stats: AllocStats,
+}
+
+impl ScratchPool {
+    fn new() -> Self {
+        ScratchPool {
+            chunks: Mutex::new(Vec::new()),
+            records: Mutex::new(Vec::new()),
+            stats: AllocStats::new(),
+        }
+    }
+
+    fn list(&self, class: Class) -> &Mutex<Vec<Vec<u8>>> {
+        match class {
+            Class::Chunk => &self.chunks,
+            Class::Record => &self.records,
+        }
+    }
+
+    /// Pop a pooled buffer (cleared, capacity intact) or allocate a
+    /// fresh one with exactly `want` bytes reserved. A pooled buffer is
+    /// only handed out when its capacity is at most 2 × `want` (for
+    /// `want > 0`): k-way merges open streams with chunks scaled down
+    /// by k precisely to bound their total RAM, and serving them
+    /// full-size pooled buffers would undo that bound. Returns the vec
+    /// and whether the pool served it.
+    fn take_vec(&self, class: Class, want: usize) -> (Vec<u8>, bool) {
+        let popped = {
+            let mut list = self.list(class).lock().unwrap();
+            let fits = list
+                .last()
+                .is_some_and(|b| want == 0 || b.capacity() <= want.saturating_mul(2));
+            let v = if fits { list.pop() } else { None };
+            let total: usize = list.iter().map(|b| b.capacity()).sum();
+            self.stats.note_pooled(self.pooled_total(total));
+            v
+        };
+        match popped {
+            Some(mut v) => {
+                v.clear();
+                if v.capacity() < want {
+                    v.reserve_exact(want - v.capacity());
+                }
+                (v, true)
+            }
+            None => (Vec::with_capacity(want), false),
+        }
+    }
+
+    /// Park a buffer for reuse. Freed instead if the class list is full
+    /// or the buffer outgrew its class ceiling. Returns whether it was
+    /// kept.
+    fn put_vec(&self, class: Class, mut v: Vec<u8>) -> bool {
+        if v.capacity() == 0 || v.capacity() > class.ceiling() {
+            return false;
+        }
+        v.clear();
+        let mut list = self.list(class).lock().unwrap();
+        let kept = if list.len() < POOL_WIDTH {
+            list.push(v);
+            true
+        } else {
+            false
+        };
+        let total: usize = list.iter().map(|b| b.capacity()).sum();
+        self.stats.note_pooled(self.pooled_total(total));
+        kept
+    }
+
+    /// Total idle bytes across both classes, given one class's total
+    /// computed under its own lock (the other class is read afresh —
+    /// momentary raciness only moves the gauge, never custody).
+    fn pooled_total(&self, this_class_total: usize) -> u64 {
+        // Called with exactly one class lock held; summing the other
+        // class takes its lock briefly. Lock order is irrelevant: the
+        // two locks are never both required by any single operation
+        // except this read, which tries the other side non-blockingly.
+        let other: usize = [&self.chunks, &self.records]
+            .iter()
+            .filter_map(|m| m.try_lock().ok())
+            .map(|l| l.iter().map(|b| b.capacity()).sum::<usize>())
+            .sum();
+        (this_class_total + other) as u64
+    }
+
+    pub fn stats(&self) -> &AllocStats {
+        &self.stats
+    }
+}
+
+/// The process-wide pool instance.
+pub fn global() -> &'static ScratchPool {
+    static POOL: OnceLock<ScratchPool> = OnceLock::new();
+    POOL.get_or_init(ScratchPool::new)
+}
+
+/// Snapshot of the global pool's [`AllocStats`].
+pub fn alloc_snapshot() -> AllocSnapshot {
+    global().stats().snapshot()
+}
+
+/// Reset the global pool's counters (gauges survive — see
+/// [`AllocStats::reset`]).
+pub fn reset_alloc_stats() {
+    global().stats().reset();
+}
+
+/// Scoped checkout of a chunk-class buffer with at least `want` bytes
+/// reserved.
+pub fn chunk_buf(want: usize) -> ScratchBuf {
+    ScratchBuf::checkout(Class::Chunk, want)
+}
+
+/// Scoped checkout of a record-class buffer (scan batches, record
+/// staging). Capacity is whatever the pool had parked; callers resize
+/// as needed.
+pub fn record_buf() -> ScratchBuf {
+    ScratchBuf::checkout(Class::Record, 0)
+}
+
+/// Raw checkout of a chunk buffer for custody that crosses threads
+/// (pipeline chunk circulation). Pair with [`put_chunk_vec`]; counts
+/// hits/misses but not loans.
+pub fn take_chunk_vec(want: usize) -> Vec<u8> {
+    let pool = global();
+    let (v, hit) = pool.take_vec(Class::Chunk, want);
+    pool.stats.on_checkout(v.capacity() as u64, hit, false);
+    v
+}
+
+/// Raw check-in of a chunk buffer taken with [`take_chunk_vec`] (or of
+/// a stream buffer whose circulation has ended). Zero-capacity vecs are
+/// ignored — they carry no allocation worth counting.
+pub fn put_chunk_vec(v: Vec<u8>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    let pool = global();
+    let cap = v.capacity() as u64;
+    let kept = pool.put_vec(Class::Chunk, v);
+    pool.stats.on_checkin(cap, kept, false);
+}
+
+/// A pooled `Vec<u8>` on loan from the global [`ScratchPool`]. Derefs
+/// to `Vec<u8>`; checked back in on drop (panic-safe).
+pub struct ScratchBuf {
+    buf: Vec<u8>,
+    charged: usize,
+    class: Class,
+}
+
+impl ScratchBuf {
+    fn checkout(class: Class, want: usize) -> ScratchBuf {
+        let pool = global();
+        let (buf, hit) = pool.take_vec(class, want);
+        let charged = buf.capacity();
+        pool.stats.on_checkout(charged as u64, hit, true);
+        ScratchBuf { buf, charged, class }
+    }
+}
+
+impl Deref for ScratchBuf {
+    type Target = Vec<u8>;
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl DerefMut for ScratchBuf {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for ScratchBuf {
+    fn drop(&mut self) {
+        let pool = global();
+        let v = std::mem::take(&mut self.buf);
+        let cap = v.capacity();
+        if cap > self.charged {
+            // Grew while on loan: charge the growth so the release
+            // below balances the gauge.
+            pool.stats.on_grow((cap - self.charged) as u64);
+        }
+        // The gauge holds max(cap, charged): `charged` from checkout,
+        // topped up to `cap` just above if the buffer grew. (cap <
+        // charged happens when a caller moved the allocation out with
+        // mem::take — release what was charged.)
+        let release = cap.max(self.charged) as u64;
+        let kept = pool.put_vec(self.class, v);
+        pool.stats.on_checkin(release, kept, true);
+    }
+}
+
+/// A flat byte arena for batch record decode: one backing buffer,
+/// records laid end to end, iterated as borrowed `&[u8]` slices. The
+/// backing store is itself a pooled scratch buffer, so arenas recycle
+/// like everything else.
+pub struct Arena {
+    buf: ScratchBuf,
+    rec: usize,
+}
+
+impl Arena {
+    /// A fresh arena for fixed-size records of `rec` bytes.
+    pub fn new(rec: usize) -> Arena {
+        assert!(rec > 0, "arena record size must be non-zero");
+        Arena { buf: chunk_buf(0), rec }
+    }
+
+    /// Record size this arena was built for.
+    pub fn rec_size(&self) -> usize {
+        self.rec
+    }
+
+    /// Forget all decoded records, keeping capacity.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Append raw record bytes (`bytes.len()` must be a whole number of
+    /// records). Charges [`AllocStats::add_arena_bytes`].
+    pub fn extend_raw(&mut self, bytes: &[u8]) {
+        debug_assert_eq!(bytes.len() % self.rec, 0, "arena fed a partial record");
+        self.buf.extend_from_slice(bytes);
+        global().stats().add_arena_bytes(bytes.len() as u64);
+    }
+
+    /// Append one record's bytes.
+    pub fn push_record(&mut self, bytes: &[u8]) {
+        debug_assert_eq!(bytes.len(), self.rec, "arena fed a wrong-size record");
+        self.buf.extend_from_slice(bytes);
+        global().stats().add_arena_bytes(bytes.len() as u64);
+    }
+
+    /// Number of whole records currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len() / self.rec
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Borrow record `i`.
+    pub fn get(&self, i: usize) -> &[u8] {
+        &self.buf[i * self.rec..(i + 1) * self.rec]
+    }
+
+    /// Iterate all records as borrowed slices.
+    pub fn iter(&self) -> std::slice::ChunksExact<'_, u8> {
+        self.buf.chunks_exact(self.rec)
+    }
+
+    /// The whole arena as one contiguous byte slice.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Sort the records lexicographically in place (fixed-size records
+    /// compare bytewise, which is how every sorted structure orders
+    /// them). Stable, allocation-free beyond a permutation vector.
+    pub fn sort_records(&mut self) {
+        let n = self.len();
+        if n <= 1 {
+            return;
+        }
+        let rec = self.rec;
+        let mut order: Vec<usize> = (0..n).collect();
+        {
+            let bytes: &[u8] = &self.buf;
+            order.sort_by(|&a, &b| bytes[a * rec..(a + 1) * rec].cmp(&bytes[b * rec..(b + 1) * rec]));
+        }
+        let mut sorted = chunk_buf(self.buf.len());
+        for &i in &order {
+            sorted.extend_from_slice(&self.buf[i * rec..(i + 1) * rec]);
+        }
+        std::mem::swap(&mut *self.buf, &mut *sorted);
+    }
+
+    /// Keep only records for which `keep` returns true, compacting in
+    /// place (order preserved, no allocation).
+    pub fn retain(&mut self, mut keep: impl FnMut(&[u8]) -> bool) {
+        let rec = self.rec;
+        let len = self.buf.len();
+        let (mut read, mut write) = (0usize, 0usize);
+        while read < len {
+            if keep(&self.buf[read..read + rec]) {
+                if write != read {
+                    self.buf.copy_within(read..read + rec, write);
+                }
+                write += rec;
+            }
+            read += rec;
+        }
+        self.buf.truncate(write);
+    }
+
+    /// Collapse runs of records whose leading `prefix` bytes are equal,
+    /// keeping the first record of each run (arena must be sorted).
+    /// With a verdict byte stored after the key, the record that sorts
+    /// first in its run carries the winning verdict.
+    pub fn dedup_by_prefix(&mut self, prefix: usize) {
+        assert!(prefix <= self.rec, "dedup prefix exceeds record size");
+        let rec = self.rec;
+        let len = self.buf.len();
+        let (mut read, mut write) = (0usize, 0usize);
+        while read < len {
+            let dup = write > 0
+                && self.buf[write - rec..write - rec + prefix]
+                    == self.buf[read..read + prefix];
+            if !dup {
+                if write != read {
+                    self.buf.copy_within(read..read + rec, write);
+                }
+                write += rec;
+            }
+            read += rec;
+        }
+        self.buf.truncate(write);
+    }
+
+    /// Binary-search for a record equal to `needle` (arena must be
+    /// sorted). Returns whether it is present.
+    pub fn contains_sorted(&self, needle: &[u8]) -> bool {
+        debug_assert_eq!(needle.len(), self.rec);
+        let n = self.len();
+        let (mut lo, mut hi) = (0usize, n);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            match self.get(mid).cmp(needle) {
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+                std::cmp::Ordering::Equal => return true,
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scoped_checkout_reuses_and_balances_gauges() {
+        let before = alloc_snapshot();
+        {
+            let mut b = record_buf();
+            b.extend_from_slice(&[1, 2, 3]);
+        }
+        // The freed buffer must be served back on the next checkout.
+        let b2 = record_buf();
+        assert!(b2.capacity() >= 3);
+        drop(b2);
+        let after = alloc_snapshot();
+        assert_eq!(after.outstanding, before.outstanding);
+        assert_eq!(after.outstanding_bytes, before.outstanding_bytes);
+        assert!(after.pool_hits > before.pool_hits);
+    }
+
+    #[test]
+    fn pool_never_retains_more_than_cap() {
+        // Check in far more buffers than the pool width; idle RAM must
+        // stay bounded.
+        for _ in 0..4 * POOL_WIDTH {
+            let mut b = chunk_buf(CHUNK_CLASS_MAX);
+            b.push(0);
+        }
+        let snap = alloc_snapshot();
+        assert!(
+            snap.peak_pooled_bytes <= pool_cap_bytes(),
+            "pooled {} > cap {}",
+            snap.peak_pooled_bytes,
+            pool_cap_bytes()
+        );
+    }
+
+    #[test]
+    fn oversized_buffers_are_freed_not_parked() {
+        let mut b = record_buf();
+        b.resize(RECORD_CLASS_MAX * 2, 0);
+        drop(b);
+        let snap = alloc_snapshot();
+        assert!(snap.pooled_bytes <= pool_cap_bytes());
+    }
+
+    #[test]
+    fn raw_take_put_round_trips() {
+        let v = take_chunk_vec(1024);
+        assert!(v.capacity() >= 1024);
+        put_chunk_vec(v);
+        let v2 = take_chunk_vec(512);
+        assert!(v2.capacity() >= 512);
+        put_chunk_vec(v2);
+    }
+
+    #[test]
+    fn guard_drop_runs_during_unwind() {
+        let before = alloc_snapshot();
+        let r = std::panic::catch_unwind(|| {
+            let mut b = record_buf();
+            b.push(7);
+            panic!("boom");
+        });
+        assert!(r.is_err());
+        let after = alloc_snapshot();
+        assert_eq!(after.outstanding, before.outstanding);
+    }
+
+    #[test]
+    fn arena_roundtrip_sort_and_search() {
+        let mut a = Arena::new(4);
+        a.extend_raw(&[9, 9, 9, 9, 1, 1, 1, 1, 5, 5, 5, 5]);
+        assert_eq!(a.len(), 3);
+        a.sort_records();
+        assert_eq!(a.get(0), &[1, 1, 1, 1]);
+        assert_eq!(a.get(1), &[5, 5, 5, 5]);
+        assert_eq!(a.get(2), &[9, 9, 9, 9]);
+        assert!(a.contains_sorted(&[5, 5, 5, 5]));
+        assert!(!a.contains_sorted(&[0, 0, 0, 0]));
+        let collected: Vec<&[u8]> = a.iter().collect();
+        assert_eq!(collected.len(), 3);
+        a.clear();
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn arena_retain_and_prefix_dedup() {
+        // records = 2-byte key + 1 verdict byte; remove (0) sorts first
+        let mut a = Arena::new(3);
+        for rec in [[2u8, 0, 1], [1, 0, 1], [2, 0, 0], [3, 0, 1], [2, 0, 1]] {
+            a.push_record(&rec);
+        }
+        a.sort_records();
+        a.dedup_by_prefix(2);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.get(0), &[1, 0, 1]); // key 1: add
+        assert_eq!(a.get(1), &[2, 0, 0]); // key 2: remove dominates
+        assert_eq!(a.get(2), &[3, 0, 1]); // key 3: add
+        a.retain(|rec| rec[2] == 1);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.get(0), &[1, 0, 1]);
+        assert_eq!(a.get(1), &[3, 0, 1]);
+    }
+}

@@ -384,6 +384,80 @@ fn det_bloom_exact_tier_is_byte_transparent() {
     }
 }
 
+/// The autotune controller is byte-transparent: it moves pipeline depth
+/// and hint distance between collectives, never what lands on disk. The
+/// same dup-heavy multi-structure workload digests identically across
+/// autotune {off, on} × num_workers {1, 4} × pipeline depth {0, 4} —
+/// with (off, depth 0, serial) as the reference cell.
+#[test]
+fn det_autotune_is_byte_transparent() {
+    use roomy::AutotuneMode;
+    let grid: [(AutotuneMode, usize, usize); 8] = [
+        (AutotuneMode::Off, 0, 1),
+        (AutotuneMode::Off, 0, 4),
+        (AutotuneMode::Off, 4, 1),
+        (AutotuneMode::Off, 4, 4),
+        (AutotuneMode::On, 0, 1),
+        (AutotuneMode::On, 0, 4),
+        (AutotuneMode::On, 4, 1),
+        (AutotuneMode::On, 4, 4),
+    ];
+    let workload = |r: &Roomy, rng: &mut Rng| -> u64 {
+        let ra = r.array::<u64>("a", 777, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut u64, p: &u64| *v = v.wrapping_add(*p));
+        let s = r.set::<u64>("s").unwrap();
+        for _round in 0..4 {
+            for _ in 0..500 {
+                ra.update(rng.below(777), &(rng.next_u64() >> 32), add).unwrap();
+                let v = rng.below(300);
+                if rng.chance(0.8) {
+                    s.add(&v).unwrap();
+                } else {
+                    s.remove(&v).unwrap();
+                }
+            }
+            ra.sync().unwrap();
+            s.sync().unwrap();
+        }
+        let h = ra
+            .reduce(|| 0u64, |acc, i, v| order_hash(acc, i ^ *v), order_hash)
+            .unwrap();
+        s.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap()
+    };
+    let mut outcomes = Vec::new();
+    for &(tune, depth, nw) in &grid {
+        let t = tmpdir(&format!("det_tune_{tune}_d{depth}_w{nw}"));
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 3;
+        cfg.buckets_per_worker = 2;
+        cfg.num_workers = nw;
+        cfg.io_pipeline_depth = depth;
+        cfg.autotune = tune;
+        let r = Roomy::open(cfg).unwrap();
+        let mut rng = Rng::new(0xD15EA5E);
+        let value = workload(&r, &mut rng);
+        if tune.enabled() {
+            let at = r.cluster().autotune().expect("controller must exist when on");
+            assert!(at.rounds() > 0, "controller never adapted");
+        } else {
+            assert!(r.cluster().autotune().is_none());
+        }
+        drop(r);
+        outcomes.push((tune, depth, nw, value, dir_digest(t.path())));
+    }
+    let (_, _, _, v0, d0) = outcomes[0];
+    for (tune, depth, nw, v, d) in &outcomes[1..] {
+        assert_eq!(
+            *v, v0,
+            "value diverged at autotune={tune} depth={depth} num_workers={nw}"
+        );
+        assert_eq!(
+            *d, d0,
+            "on-disk bytes diverged at autotune={tune} depth={depth} num_workers={nw}"
+        );
+    }
+}
+
 /// Full **batched** BFS drivers agree (level profile and totals) across
 /// worker counts and pipeline depths — both the list and the hash-table
 /// variant (the BFS frontier scans are the issue's canonical

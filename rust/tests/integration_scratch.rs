@@ -1,0 +1,103 @@
+//! Invariants of the process-wide scratch buffer pool
+//! (`roomy::storage::scratch`): bounded idle RAM, measurable reuse, and
+//! leak-free unwinding when a collective panics mid-stream.
+//!
+//! These live in their own integration binary because the pool and its
+//! [`roomy::metrics::AllocStats`] gauges are process-global — the loan
+//! gauge (`outstanding`) is only meaningfully zero when no other test in
+//! the same process is mid-collective. Within this binary the tests
+//! additionally serialize on a lock so their snapshots never interleave.
+
+mod common;
+
+use common::roomy_with;
+use roomy::storage::scratch;
+use std::sync::Mutex;
+
+/// Serializes the tests in this binary: each one reads the global pool
+/// gauges and must not observe another test's checked-out buffers.
+static POOL_GAUGES: Mutex<()> = Mutex::new(());
+
+/// Under a parallel scan + rewrite (4 pool workers × pipeline depth 4 —
+/// the widest hot path), the pool's idle RAM stays under the fixed cap,
+/// buffers are measurably reused, and every loan is returned once the
+/// collectives finish.
+#[test]
+fn pool_ram_bounded_and_loans_returned() {
+    let _g = POOL_GAUGES.lock().unwrap();
+    scratch::reset_alloc_stats();
+
+    let (_t, r) = roomy_with("scratch_bound", |c| {
+        c.workers = 2;
+        c.buckets_per_worker = 2;
+        c.num_workers = 4;
+        c.io_pipeline_depth = 4;
+    });
+    let ra = r.array::<u64>("a", 600_000, 1).unwrap(); // ~4.8 MB
+    for _round in 0..3 {
+        ra.map_update(|i, v| *v = i ^ *v).unwrap();
+    }
+    let ht = r.hash_table::<u64, u64>("h").unwrap();
+    for k in 0..5_000u64 {
+        ht.insert(&k, &(k * 3)).unwrap();
+    }
+    ht.sync().unwrap();
+    drop(ht);
+    drop(ra);
+    drop(r); // join io service threads: they hold circulating chunks
+
+    let snap = scratch::alloc_snapshot();
+    assert!(
+        snap.peak_pooled_bytes <= scratch::pool_cap_bytes(),
+        "idle pool RAM {} exceeds the cap {}",
+        snap.peak_pooled_bytes,
+        scratch::pool_cap_bytes(),
+    );
+    assert!(snap.pool_hits > 0, "hot loops never reused a pooled buffer: {snap:?}");
+    assert_eq!(snap.outstanding, 0, "leaked scratch loans: {snap:?}");
+    assert_eq!(snap.outstanding_bytes, 0, "leaked scratch bytes: {snap:?}");
+}
+
+/// A panic inside a mapped collective unwinds through borrowed scratch
+/// buffers (scan chunks, record scratch, pipeline stream buffers) — every
+/// loan must still come back to the pool, exactly like the staging-file
+/// guarantee in `integration_pipeline.rs`.
+#[test]
+fn panicking_map_returns_every_loan() {
+    let _g = POOL_GAUGES.lock().unwrap();
+    scratch::reset_alloc_stats();
+
+    let (_t, r) = roomy_with("scratch_panic", |c| {
+        c.workers = 2;
+        c.buckets_per_worker = 2;
+        c.num_workers = 4;
+        c.io_pipeline_depth = 4;
+    });
+    let ra = r.array::<u64>("a", 600_000, 1).unwrap();
+    let res = ra.map_update(|i, _v| assert!(i != 444_444, "boom"));
+    assert!(
+        matches!(res, Err(roomy::RoomyError::WorkerPanic { .. })),
+        "expected WorkerPanic, got {res:?}"
+    );
+
+    // The instance survives a failed collective; run a clean pass to show
+    // the pool still serves buffers normally after the unwind.
+    let count = std::sync::atomic::AtomicU64::new(0);
+    ra.map(|_i, _v| {
+        count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(count.into_inner(), 600_000);
+
+    drop(ra);
+    drop(r);
+    let snap = scratch::alloc_snapshot();
+    assert_eq!(snap.outstanding, 0, "panic leaked scratch loans: {snap:?}");
+    assert_eq!(snap.outstanding_bytes, 0, "panic leaked scratch bytes: {snap:?}");
+    assert!(
+        snap.peak_pooled_bytes <= scratch::pool_cap_bytes(),
+        "idle pool RAM {} exceeds the cap {}",
+        snap.peak_pooled_bytes,
+        scratch::pool_cap_bytes(),
+    );
+}
