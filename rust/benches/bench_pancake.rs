@@ -320,6 +320,57 @@ fn main() {
         }
     }
 
+    // ---- E8: flight-recorder overhead -------------------------------
+    // obs::trace off (default; counters only) vs armed: the recorder
+    // writes fixed-size events into pre-sized per-worker rings, so the
+    // on-collective cost should be noise-level. On-disk bytes are
+    // identical either way (tests/determinism.rs pins the digests) —
+    // only wall time and the event volume may move.
+    {
+        let e8_n = 7usize;
+        header(
+            &format!("E8: flight recorder, pancake n={e8_n} (hash variant, 4 pool workers, io depth 4)"),
+            &["trace", "wall s", "overhead vs off", "trace events", "trace KB"],
+        );
+        let mut off_secs = None;
+        for (label, armed) in [("off", false), ("on", true)] {
+            let tpath = std::env::temp_dir()
+                .join(format!("roomy-bench-trace-{}.json", std::process::id()));
+            let (_t, r) = fresh_roomy(&format!("pk{e8_n}tr-{label}"), |c| {
+                c.num_workers = 4;
+                c.io_pipeline_depth = 4;
+                c.trace_path = if armed { Some(tpath.clone()) } else { None };
+            });
+            let (secs, stats) = time(|| {
+                pancake::roomy_bfs(&r, e8_n, Structure::Hash, &Accel::rust()).unwrap()
+            });
+            assert_eq!(stats.total, pancake::factorial(e8_n), "trace {label} must be exact");
+            record(&format!("pancake_trace_{label} n={e8_n}"), "secs", secs);
+            let off = *off_secs.get_or_insert(secs);
+            let (events, kb) = if armed {
+                let flushed = r.flush_trace().unwrap().expect("trace must be armed");
+                let text = std::fs::read_to_string(&flushed).expect("read flushed trace");
+                let doc = roomy::obs::json::parse(&text).expect("trace must parse");
+                let n = doc
+                    .get("traceEvents")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.len())
+                    .unwrap_or(0);
+                let _ = std::fs::remove_file(&flushed);
+                (n.to_string(), format!("{:.1}", text.len() as f64 / 1e3))
+            } else {
+                ("-".into(), "-".into())
+            };
+            row(&[
+                label.into(),
+                format!("{secs:.2}"),
+                if armed { format!("{:+.1}%", 100.0 * (secs - off) / off.max(1e-9)) } else { "-".into() },
+                events,
+                kb,
+            ]);
+        }
+    }
+
     println!(
         "\nexpansion backend: {}",
         if xla.is_some() { "XLA AOT (list/hash variants)" } else { "Rust fallback" }

@@ -8,6 +8,7 @@
 //! micro-sampling would add nothing).
 
 #![allow(dead_code)]
+#![allow(unused_imports)]
 
 use std::sync::Mutex;
 use std::time::Instant;
@@ -81,9 +82,15 @@ pub fn scaled(n: u64) -> u64 {
 // ----------------------------------------------------------------------
 // Machine-readable baseline: a flat sample list mirroring the printed
 // tables, dumped as JSON so CI (and before/after comparisons) can diff
-// runs without scraping markdown. Hand-rolled writer — no serde in the
-// offline image; the CI bench smoke job asserts the file parses.
+// runs without scraping markdown. The writer is the library's own
+// hand-rolled JSON module (`roomy::obs::json`) — one escaper shared
+// with `Roomy::report_json()` and the trace flusher; the CI bench smoke
+// job asserts the file parses.
 // ----------------------------------------------------------------------
+
+/// The library escaper, re-exported so benches (and their tests) use
+/// exactly what `BENCH_baseline.json` is written with.
+pub use roomy::obs::json::escape as json_escape;
 
 static SAMPLES: Mutex<Vec<(String, String, f64)>> = Mutex::new(Vec::new());
 
@@ -93,43 +100,25 @@ pub fn record(group: &str, metric: &str, value: f64) {
     SAMPLES.lock().unwrap().push((group.to_string(), metric.to_string(), value));
 }
 
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
-
 /// Write every recorded sample to `BENCH_baseline.json` (path overridable
 /// via `ROOMY_BENCH_JSON`). Call once at the end of a bench `main`.
 pub fn write_baseline(bench: &str) {
+    use roomy::obs::json::{array, num, Obj};
     let path =
         std::env::var("ROOMY_BENCH_JSON").unwrap_or_else(|_| "BENCH_baseline.json".into());
     let samples = SAMPLES.lock().unwrap();
-    let mut out = String::new();
-    out.push_str("{\n");
-    out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
-    out.push_str(&format!("  \"scale\": {},\n", scale()));
-    out.push_str("  \"samples\": [\n");
-    for (i, (group, metric, value)) in samples.iter().enumerate() {
-        // non-finite values (empty timing, div-by-zero rates) → null
-        let v = if value.is_finite() { format!("{value}") } else { "null".into() };
-        let sep = if i + 1 < samples.len() { "," } else { "" };
-        out.push_str(&format!(
-            "    {{\"group\": \"{}\", \"metric\": \"{}\", \"value\": {}}}{}\n",
-            json_escape(group),
-            json_escape(metric),
-            v,
-            sep,
-        ));
-    }
-    out.push_str("  ]\n}\n");
+    let rows: Vec<String> = samples
+        .iter()
+        .map(|(group, metric, value)| {
+            let mut r = Obj::new();
+            // non-finite values (empty timing, div-by-zero rates) → null
+            r.str("group", group).str("metric", metric).raw("value", &num(*value));
+            r.build()
+        })
+        .collect();
+    let mut doc = Obj::new();
+    doc.str("bench", bench).raw("scale", &num(scale())).raw("samples", &array(&rows));
+    let out = doc.build();
     std::fs::write(&path, &out).expect("write bench baseline JSON");
     println!("\nwrote {} samples to {path}", samples.len());
 }

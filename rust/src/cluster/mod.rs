@@ -35,7 +35,8 @@ use std::sync::Arc;
 
 use crate::config::RoomyConfig;
 use crate::error::{Result, RoomyError};
-use crate::metrics::{IoSnapshot, PhaseTimes, PipelineSnapshot};
+use crate::metrics::{CheckpointStats, IoSnapshot, PhaseTimes, PipelineSnapshot};
+use crate::obs::trace;
 use crate::runtime::autotune::Autotune;
 use crate::runtime::pool::WorkerPool;
 use crate::storage::NodeDisk;
@@ -63,6 +64,11 @@ pub struct Cluster {
     /// a sibling of the node directories (or a user-chosen directory),
     /// deliberately outside every purged scratch subtree.
     checkpoint_root: PathBuf,
+    /// Save/restore counters shared by every
+    /// [`crate::storage::checkpoint::CheckpointManager`] on this cluster,
+    /// so `Roomy::report()`/`report_json()` see checkpoint activity no
+    /// matter which manager instance performed it.
+    checkpoint_stats: Arc<CheckpointStats>,
 }
 
 impl Cluster {
@@ -111,6 +117,7 @@ impl Cluster {
             pool,
             autotune,
             checkpoint_root,
+            checkpoint_stats: Arc::new(CheckpointStats::new()),
         })
     }
 
@@ -118,6 +125,12 @@ impl Cluster {
     /// bring-up; defaults to `<root>/checkpoints`, beside the node dirs.
     pub fn checkpoint_root(&self) -> &Path {
         &self.checkpoint_root
+    }
+
+    /// Cluster-wide checkpoint save/restore counters (shared by every
+    /// manager created on this cluster).
+    pub fn checkpoint_stats(&self) -> &Arc<CheckpointStats> {
+        &self.checkpoint_stats
     }
 
     /// The collective execution pool (per-worker counters, width).
@@ -183,7 +196,9 @@ impl Cluster {
         R: Send,
         F: Fn(usize, &Arc<NodeDisk>) -> Result<R> + Sync,
     {
-        self.phases.time(phase, || {
+        let mut sp = self.open_collective(phase);
+        let io0 = sp.as_ref().map(|_| self.io_snapshot());
+        let out = self.phases.time(phase, || {
             let results: Vec<std::thread::Result<Result<R>>> =
                 std::thread::scope(|scope| {
                     let handles: Vec<_> = self
@@ -211,7 +226,33 @@ impl Cluster {
                 }
             }
             Ok(out)
-        })
+        });
+        self.close_collective(&mut sp, io0);
+        out
+    }
+
+    /// Open a flight-recorder span for one collective (`None` when
+    /// tracing is off — the only cost is one relaxed load). The span is
+    /// tagged with the calling structure's instance label, if any.
+    fn open_collective(&self, phase: &str) -> Option<trace::Span> {
+        if !trace::enabled() {
+            return None;
+        }
+        let name = match trace::current_label() {
+            Some(l) => format!("{phase} [{l}]"),
+            None => phase.to_string(),
+        };
+        Some(trace::span(trace::Kind::Collective, &name, None))
+    }
+
+    /// Attach the collective's I/O delta (bytes in/out) before the span
+    /// closes. Snapshot reads happen only while tracing — they are reads
+    /// of relaxed counters either way, but off means *zero* extra work.
+    fn close_collective(&self, sp: &mut Option<trace::Span>, io0: Option<IoSnapshot>) {
+        if let (Some(sp), Some(io0)) = (sp.as_mut(), io0) {
+            let d = self.io_snapshot().delta(&io0);
+            sp.set_args(d.bytes_read, d.bytes_written);
+        }
     }
 
     /// Run `job(bucket, disk-of-owner)` for **every bucket**, dispatched
@@ -252,7 +293,9 @@ impl Cluster {
         if let Some(at) = &self.autotune {
             at.adapt(&self.disks, &self.pool);
         }
-        self.phases.time(phase, || {
+        let mut sp = self.open_collective(phase);
+        let io0 = sp.as_ref().map(|_| self.io_snapshot());
+        let out = self.phases.time(phase, || {
             self.pool.run_tagged(
                 phase,
                 nb,
@@ -268,7 +311,9 @@ impl Cluster {
                     job(b, self.disk(topo.owner(b)))
                 },
             )
-        })
+        });
+        self.close_collective(&mut sp, io0);
+        out
     }
 
     /// Aggregate I/O across all node disks.

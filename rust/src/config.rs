@@ -277,6 +277,15 @@ pub struct RoomyConfig {
     pub accel: AccelMode,
     /// Directory holding AOT artifacts (`make artifacts`).
     pub artifacts_dir: PathBuf,
+    /// Flight-recorder destination ([`crate::obs::trace`]): `None` (the
+    /// default) leaves tracing off — counters only, ~zero cost. A path
+    /// arms the process-global span recorder on [`crate::Roomy::open`]
+    /// and flushes Chrome-trace-event JSON there on teardown (or via
+    /// `Roomy::flush_trace()`). Recording never touches the data paths:
+    /// on-disk bytes are identical with tracing on or off
+    /// (`tests/determinism.rs` pins this). Env `ROOMY_TRACE=<path>`
+    /// overrides, CLI `--trace`.
+    pub trace_path: Option<PathBuf>,
 }
 
 impl RoomyConfig {
@@ -301,6 +310,7 @@ impl RoomyConfig {
             disk: DiskPolicy::unthrottled(),
             accel: AccelMode::Rust,
             artifacts_dir: PathBuf::from("artifacts"),
+            trace_path: env_trace(),
         }
     }
 
@@ -397,6 +407,12 @@ fn env_autotune() -> Option<AutotuneMode> {
     std::env::var("ROOMY_AUTOTUNE").ok().as_deref().and_then(AutotuneMode::parse)
 }
 
+/// Flight-recorder override (`ROOMY_TRACE=<path>`; empty = off), used by
+/// CI to run the whole suite with span recording armed.
+fn env_trace() -> Option<PathBuf> {
+    std::env::var("ROOMY_TRACE").ok().filter(|s| !s.is_empty()).map(PathBuf::from)
+}
+
 impl Default for RoomyConfig {
     fn default() -> Self {
         RoomyConfig {
@@ -419,6 +435,7 @@ impl Default for RoomyConfig {
             disk: DiskPolicy::unthrottled(),
             accel: AccelMode::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
+            trace_path: env_trace(),
         }
     }
 }

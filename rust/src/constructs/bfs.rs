@@ -300,6 +300,9 @@ fn bfs_list_impl<T: Element>(
             return Ok(BfsOutcome::Suspended { next_level: lev + 1 });
         }
         lev += 1;
+        let mut lsp =
+            crate::obs::trace::span(crate::obs::trace::Kind::Level, "bfs.level", None);
+        lsp.set_args(lev as u64, cur.size());
         let next = r.list::<T>(&format!("{prefix}_lev{lev}"))?;
         expand_into(&cur, &next, &gen_batch)?;
         next.sync()?;
@@ -317,6 +320,7 @@ fn bfs_list_impl<T: Element>(
             levels.push(next.size());
         }
         cur = next;
+        drop(lsp);
         if let Some(opts) = ckpt {
             save_level(opts, &[&all as &dyn Checkpointable, &cur], lev, &levels)?;
         }
@@ -390,6 +394,9 @@ fn bfs_hash_impl<T: Element>(
             return Ok(BfsOutcome::Suspended { next_level: lev + 1 });
         }
         lev += 1;
+        let mut lsp =
+            crate::obs::trace::span(crate::obs::trace::Kind::Level, "bfs.level", None);
+        lsp.set_args(lev as u64, cur.size());
         let next = r.list::<T>(&format!("{prefix}_lev{lev}"))?;
         // visit: insert-if-absent; only first-time states emit to `next`
         // (duplicate detection is free — no sorting, paper §2's bucketing
@@ -428,6 +435,7 @@ fn bfs_hash_impl<T: Element>(
             levels.push(next.size());
         }
         cur = next;
+        drop(lsp);
         if let Some(opts) = ckpt {
             save_level(opts, &[&table as &dyn Checkpointable, &cur], lev, &levels)?;
         }

@@ -73,6 +73,7 @@ pub mod constructs;
 pub mod error;
 pub mod hashfn;
 pub mod metrics;
+pub mod obs;
 pub mod roomy;
 pub mod runtime;
 pub mod storage;

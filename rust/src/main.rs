@@ -88,8 +88,16 @@ USAGE:
                                        # from the last completed level
                 [--resume]             # require an existing checkpoint and
                                        # continue it (error if none found)
+                [--trace PATH]         # arm the flight recorder and flush
+                                       # a Chrome-trace-event JSON there on
+                                       # exit (load in Perfetto; env
+                                       # ROOMY_TRACE); on-disk bytes are
+                                       # identical with tracing on or off
+                [--report-json PATH]   # write the machine-readable metrics
+                                       # report (Roomy::report_json) there
+                                       # before exit
   roomy rubik   [--workers W] [--root DIR]        # 2x2x2 cube God's number
-  roomy demo    [--workers W] [--root DIR]
+  roomy demo    [--workers W] [--root DIR] [--trace PATH] [--report-json PATH]
   roomy kernels [--artifacts DIR]
   roomy help"
     );
@@ -156,6 +164,10 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
         .unwrap_or_else(|| std::env::temp_dir().join(format!("roomy-run-{}", std::process::id())));
     cfg.artifacts_dir = f.get("artifacts").map(PathBuf::from).unwrap_or_else(|| "artifacts".into());
     cfg.checkpoint_dir = f.get("checkpoint-dir").map(PathBuf::from);
+    if let Some(p) = f.get("trace") {
+        // `..defaults` already picked up ROOMY_TRACE; the flag wins.
+        cfg.trace_path = Some(PathBuf::from(p));
+    }
     cfg.accel = match f.get("accel").unwrap_or("auto") {
         "rust" => AccelMode::Rust,
         "xla" => AccelMode::Xla,
@@ -166,6 +178,23 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
         cfg.disk = DiskPolicy::paper_2010();
     }
     Ok(cfg)
+}
+
+/// End-of-run observability outputs shared by the subcommands: honor
+/// `--report-json PATH` and flush the flight recorder (if armed) so the
+/// trace lands even when the instance outlives `main`'s scope briefly.
+fn finish_run(f: &Flags, r: &Roomy) -> Result<(), String> {
+    if let Some(p) = f.get("report-json") {
+        std::fs::write(p, r.report_json())
+            .map_err(|e| format!("cannot write --report-json {p:?}: {e}"))?;
+        println!("metrics report written to {p}");
+    }
+    match r.flush_trace() {
+        Ok(Some(path)) => println!("trace written to {}", path.display()),
+        Ok(None) => {}
+        Err(e) => return Err(format!("trace flush failed: {e}")),
+    }
+    Ok(())
 }
 
 fn cmd_pancake(args: &[String]) -> Result<(), String> {
@@ -254,6 +283,7 @@ fn cmd_pancake(args: &[String]) -> Result<(), String> {
         fmt_rate(io.bytes_read + io.bytes_written, dt),
     );
     print!("{}", r.report());
+    finish_run(&f, &r)?;
     Ok(())
 }
 
@@ -331,6 +361,31 @@ fn cmd_demo(args: &[String]) -> Result<(), String> {
         ht.sync()?;
         println!("count(10) = {:?}, size = {}", ht.fetch(&10)?, ht.size());
 
+        println!("\n== RoomySet: incrementally-sorted shards + merge algebra ==");
+        let s1 = r.set::<u64>("demo_s1")?;
+        let s2 = r.set::<u64>("demo_s2")?;
+        for v in [2u64, 4, 6, 8] {
+            s1.add(&v)?;
+        }
+        for v in [4u64, 8, 16] {
+            s2.add(&v)?;
+        }
+        s1.sync()?;
+        s2.sync()?;
+        s1.intersect_with(&s2)?;
+        let mut got = s1.collect()?;
+        got.sort();
+        println!("S1 ∩ S2 = {got:?} (size {})", s1.size());
+
+        println!("\n== RoomyBitArray: 2-bit visited colors ==");
+        let ba = r.bit_array("demo_bits", 64, 2)?;
+        let mark = ba.register_update(|_i, cur, _p: &()| if cur == 0 { 1 } else { cur });
+        for i in [0u64, 7, 7, 63] {
+            ba.update(i, &(), mark)?;
+        }
+        ba.sync()?;
+        println!("marked cells = {}, cell(7) = {}", ba.count_value(1), ba.fetch(7)?);
+
         println!("\n== reduce: paper's sum of squares ==");
         let l = r.list::<i64>("demo_sq")?;
         for v in 1..=10i64 {
@@ -342,6 +397,7 @@ fn cmd_demo(args: &[String]) -> Result<(), String> {
     };
     run().map_err(|e| e.to_string())?;
     print!("\n{}", r.report());
+    finish_run(&f, &r)?;
     Ok(())
 }
 

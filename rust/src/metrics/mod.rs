@@ -751,11 +751,25 @@ impl DedupStats {
     pub fn add_shortcut(&self, bytes: u64) {
         self.shortcuts.fetch_add(1, Ordering::Relaxed);
         self.bytes_avoided.fetch_add(bytes, Ordering::Relaxed);
+        crate::obs::trace::instant(
+            crate::obs::trace::Kind::BloomShortcut,
+            "bloom.shortcut",
+            None,
+            bytes,
+            0,
+        );
     }
 
     /// Charge one exact pass that had to run despite the filter.
     pub fn add_fallback(&self) {
         self.exact_fallbacks.fetch_add(1, Ordering::Relaxed);
+        crate::obs::trace::instant(
+            crate::obs::trace::Kind::BloomFallback,
+            "bloom.fallback",
+            None,
+            0,
+            0,
+        );
     }
 
     /// Charge `n` records dropped by approximate mode without an exact

@@ -1,0 +1,677 @@
+//! Flight recorder: per-worker bounded ring-buffer span tracing with a
+//! Chrome-trace-event JSON flusher.
+//!
+//! Off by default: every instrumentation site guards on one relaxed
+//! atomic load ([`enabled`]) and does nothing else, so the counters-only
+//! configuration pays ~zero cost and — critically — the recorder can
+//! never influence what the collectives compute. Tracing records *when*
+//! things happened, never what bytes land on disk; `tests/determinism.rs`
+//! pins byte-identical instance roots with tracing on and off.
+//!
+//! Arming (`ROOMY_TRACE=<path>` / `--trace <path>` /
+//! [`crate::Roomy::open`] with `trace_path` set) is process-global and
+//! sticky: rings are shared by every instance in the process and flushed
+//! as one timeline. Each *track* is a fixed-capacity ring of fixed-size
+//! [`Event`] records — recording copies one struct under a short mutex,
+//! allocates nothing on the hot path, and overwrites the oldest event
+//! when full (a flight recorder keeps the most recent window, not the
+//! whole flight).
+//!
+//! Track assignment mirrors the thread structure: pool worker slot `w`
+//! records onto worker track `w % 32`, any other thread (the leader, a
+//! per-node checkpoint thread) gets a lazily assigned leader track. The
+//! flusher maps events to Chrome trace form: one `pid` per simulated node
+//! (`pid 1` = cluster-scoped events such as collectives), one `tid` per
+//! worker, collectives and tasks as nesting `X` complete events, autotune
+//! decisions and bloom outcomes as `i` instant events. The output loads
+//! directly into `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use std::cell::{Cell, RefCell};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::json;
+
+/// Span/instant taxonomy. Each kind maps to a Chrome `cat` and fixed arg
+/// names at flush time, so the recorded [`Event`] stays fixed-size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// A structure collective on the leader (`ra.sync`, `rl.remove_dupes`,
+    /// `checkpoint.save`, ...). Args: bytes read / bytes written.
+    Collective,
+    /// One pool bucket task, nested under its collective on the worker's
+    /// track. Args: bucket index / stolen flag (0 = home node).
+    Task,
+    /// Pipeline consumer waited on the read-ahead lane. No args.
+    ReaderStall,
+    /// Pipeline producer waited for a write-behind buffer. No args.
+    WriterStall,
+    /// A cross-task prefetch hint was adopted by a scan. No args.
+    HintHit,
+    /// External sort run generation. Args: runs produced.
+    SortRuns,
+    /// External sort merge. Args: records written / fan-in.
+    SortMerge,
+    /// Checkpoint save. Args: files written or linked / bytes.
+    CkptSave,
+    /// Checkpoint restore. Args: files restored / bytes.
+    CkptRestore,
+    /// Bloom "definitely new" shortcut skipped exact work. Args: bytes of
+    /// exact merge work avoided.
+    BloomShortcut,
+    /// Bloom "maybe seen" fell through to the exact path. No args.
+    BloomFallback,
+    /// One autotune adaptation round. Args: depth raises+decays this
+    /// round / chosen hint distance.
+    Autotune,
+    /// Autotune changed one node's effective pipeline depth. Args: new
+    /// depth.
+    AutotuneDepth,
+    /// One BFS level. Args: level index / frontier size entering it.
+    Level,
+    /// Free-form marker (tests, apps). Args: generic a / b.
+    Mark,
+}
+
+impl Kind {
+    fn cat(self) -> &'static str {
+        match self {
+            Kind::Collective => "collective",
+            Kind::Task => "task",
+            Kind::ReaderStall | Kind::WriterStall | Kind::HintHit => "pipeline",
+            Kind::SortRuns | Kind::SortMerge => "extsort",
+            Kind::CkptSave | Kind::CkptRestore => "checkpoint",
+            Kind::BloomShortcut | Kind::BloomFallback => "bloom",
+            Kind::Autotune | Kind::AutotuneDepth => "autotune",
+            Kind::Level => "bfs",
+            Kind::Mark => "mark",
+        }
+    }
+
+    /// Arg names for (a, b); empty string = omit the arg.
+    fn arg_names(self) -> (&'static str, &'static str) {
+        match self {
+            Kind::Collective => ("bytes_read", "bytes_written"),
+            Kind::Task => ("bucket", "stolen"),
+            Kind::ReaderStall | Kind::WriterStall | Kind::HintHit => ("", ""),
+            Kind::SortRuns => ("runs", ""),
+            Kind::SortMerge => ("records", "fanin"),
+            Kind::CkptSave | Kind::CkptRestore => ("files", "bytes"),
+            Kind::BloomShortcut => ("bytes_avoided", ""),
+            Kind::BloomFallback => ("", ""),
+            Kind::Autotune => ("moves", "hint_ahead"),
+            Kind::AutotuneDepth => ("depth", ""),
+            Kind::Level => ("level", "frontier"),
+            Kind::Mark => ("a", "b"),
+        }
+    }
+}
+
+/// Longest recorded span name; longer names are truncated at record time.
+pub const MAX_NAME: usize = 48;
+
+/// Sentinel duration marking an instant event.
+const INSTANT: u64 = u64::MAX;
+
+/// Node id for cluster-scoped events (the leader's collectives).
+const CLUSTER: u32 = u32::MAX;
+
+/// Worker id for non-pool threads.
+const LEADER: u32 = u32::MAX;
+
+/// One fixed-size trace record (~90 bytes, `Copy`, no heap).
+#[derive(Clone, Copy)]
+struct Event {
+    /// Start, ns since the recorder epoch (monotonic clock).
+    t0_ns: u64,
+    /// Duration in ns; [`INSTANT`] for instant events.
+    dur_ns: u64,
+    kind: Kind,
+    name: [u8; MAX_NAME],
+    name_len: u8,
+    /// Owning node, or [`CLUSTER`].
+    node: u32,
+    /// Pool worker slot, or [`LEADER`].
+    worker: u32,
+    a: u64,
+    b: u64,
+}
+
+/// Events kept per track. 4096 × ~90 B ≈ 360 KiB per active track; only
+/// tracks that record anything allocate at all.
+const RING_CAP: usize = 4096;
+
+const WORKER_TRACKS: usize = 32;
+const LEADER_TRACKS: usize = 64;
+const NUM_TRACKS: usize = WORKER_TRACKS + LEADER_TRACKS;
+
+struct Ring {
+    buf: Vec<Event>,
+    /// Overwrite cursor once `buf` reaches capacity (oldest event).
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring { buf: Vec::new(), next: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % RING_CAP;
+            self.dropped += 1;
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static PATH: Mutex<Option<PathBuf>> = Mutex::new(None);
+static TRACKS: OnceLock<Vec<Mutex<Option<Ring>>>> = OnceLock::new();
+static FLUSH_LOCK: Mutex<()> = Mutex::new(());
+static NEXT_LEADER: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Lazily assigned leader-track slot for non-pool threads.
+    static LEADER_SLOT: Cell<usize> = const { Cell::new(usize::MAX) };
+    /// Structure-instance label prepended to collective span names.
+    static LABEL: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Is recording armed? One relaxed load — the entire cost of every
+/// instrumentation site when tracing is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm the process-global recorder and set the flush destination.
+/// Idempotent; a later arm re-points the destination. The epoch is pinned
+/// on first arm so all timestamps share one monotonic origin.
+pub fn arm(path: &Path) {
+    EPOCH.get_or_init(Instant::now);
+    *PATH.lock().unwrap() = Some(path.to_path_buf());
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// The armed flush destination, if any.
+pub fn armed_path() -> Option<PathBuf> {
+    PATH.lock().unwrap().clone()
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn tracks() -> &'static [Mutex<Option<Ring>>] {
+    TRACKS.get_or_init(|| (0..NUM_TRACKS).map(|_| Mutex::new(None)).collect())
+}
+
+fn leader_track() -> usize {
+    LEADER_SLOT.with(|s| {
+        let mut slot = s.get();
+        if slot == usize::MAX {
+            slot = NEXT_LEADER.fetch_add(1, Ordering::Relaxed) % LEADER_TRACKS;
+            s.set(slot);
+        }
+        WORKER_TRACKS + slot
+    })
+}
+
+/// (worker id, track index) for the current thread.
+fn here() -> (u32, usize) {
+    match crate::runtime::pool::current_worker() {
+        Some(w) => (w as u32, w % WORKER_TRACKS),
+        None => (LEADER, leader_track()),
+    }
+}
+
+fn copy_name(name: &str) -> ([u8; MAX_NAME], u8) {
+    let mut buf = [0u8; MAX_NAME];
+    let n = name.len().min(MAX_NAME);
+    buf[..n].copy_from_slice(&name.as_bytes()[..n]);
+    (buf, n as u8)
+}
+
+fn record(track: usize, ev: Event) {
+    let mut g = tracks()[track].lock().unwrap();
+    g.get_or_insert_with(Ring::new).push(ev);
+}
+
+fn ns_since_epoch(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).unwrap_or_default().as_nanos() as u64
+}
+
+// ----------------------------------------------------------------------
+// Recording API
+// ----------------------------------------------------------------------
+
+/// An in-flight span; records one complete event on drop. Disarmed (free)
+/// when tracing is off.
+pub struct Span(Option<SpanInner>);
+
+struct SpanInner {
+    kind: Kind,
+    name: [u8; MAX_NAME],
+    name_len: u8,
+    node: u32,
+    worker: u32,
+    track: usize,
+    t0: Instant,
+    a: u64,
+    b: u64,
+}
+
+impl Span {
+    /// Attach args before the span closes (e.g. bytes moved, once known).
+    pub fn set_args(&mut self, a: u64, b: u64) {
+        if let Some(s) = &mut self.0 {
+            s.a = a;
+            s.b = b;
+        }
+    }
+
+    /// Whether this span will record (i.e. tracing was on at open).
+    pub fn armed(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(s) = self.0.take() {
+            record(
+                s.track,
+                Event {
+                    t0_ns: ns_since_epoch(s.t0),
+                    dur_ns: s.t0.elapsed().as_nanos() as u64,
+                    kind: s.kind,
+                    name: s.name,
+                    name_len: s.name_len,
+                    node: s.node,
+                    worker: s.worker,
+                    a: s.a,
+                    b: s.b,
+                },
+            );
+        }
+    }
+}
+
+fn open_span(kind: Kind, name: &str, node: Option<usize>, worker: u32, track: usize) -> Span {
+    let (name, name_len) = copy_name(name);
+    Span(Some(SpanInner {
+        kind,
+        name,
+        name_len,
+        node: node.map_or(CLUSTER, |n| n as u32),
+        worker,
+        track,
+        t0: Instant::now(),
+        a: 0,
+        b: 0,
+    }))
+}
+
+/// Open a span on the current thread's track (`node: None` = cluster
+/// scope). Returns a disarmed no-op span when tracing is off.
+pub fn span(kind: Kind, name: &str, node: Option<usize>) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    let (worker, track) = here();
+    open_span(kind, name, node, worker, track)
+}
+
+/// Open a span attributed to an explicit pool worker slot (used by the
+/// pool itself, where the slot is known without a thread-local lookup).
+pub fn span_at(kind: Kind, name: &str, node: Option<usize>, worker: usize) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    open_span(kind, name, node, worker as u32, worker % WORKER_TRACKS)
+}
+
+/// Record an instant event on the current thread's track.
+pub fn instant(kind: Kind, name: &str, node: Option<usize>, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    let (worker, track) = here();
+    let (name, name_len) = copy_name(name);
+    record(
+        track,
+        Event {
+            t0_ns: ns_since_epoch(Instant::now()),
+            dur_ns: INSTANT,
+            kind,
+            name,
+            name_len,
+            node: node.map_or(CLUSTER, |n| n as u32),
+            worker,
+            a,
+            b,
+        },
+    );
+}
+
+/// Record a complete event for an interval that started at `t0` and ends
+/// now — used where the caller already took a timestamp for its counters
+/// (pipeline stall metering), so tracing adds no extra clock reads.
+pub fn complete_since(kind: Kind, name: &str, node: Option<usize>, t0: Instant, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    let (worker, track) = here();
+    let (name, name_len) = copy_name(name);
+    record(
+        track,
+        Event {
+            t0_ns: ns_since_epoch(t0),
+            dur_ns: t0.elapsed().as_nanos() as u64,
+            kind,
+            name,
+            name_len,
+            node: node.map_or(CLUSTER, |n| n as u32),
+            worker,
+            a,
+            b,
+        },
+    );
+}
+
+// ----------------------------------------------------------------------
+// Structure-instance labels
+// ----------------------------------------------------------------------
+
+/// Restores the previous label on drop.
+pub struct LabelGuard(Option<Option<String>>);
+
+impl Drop for LabelGuard {
+    fn drop(&mut self) {
+        if let Some(prev) = self.0.take() {
+            LABEL.with(|l| *l.borrow_mut() = prev);
+        }
+    }
+}
+
+/// Tag collective spans opened on this thread (until the guard drops)
+/// with a structure-instance label, so `rl.sync` becomes
+/// `rl.sync [frontier]` in the trace. No-op when tracing is off.
+pub fn struct_label(name: &str) -> LabelGuard {
+    if !enabled() {
+        return LabelGuard(None);
+    }
+    let prev = LABEL.with(|l| l.replace(Some(name.to_string())));
+    LabelGuard(Some(prev))
+}
+
+/// The current thread's structure label, if tracing is on and one is set.
+pub fn current_label() -> Option<String> {
+    if !enabled() {
+        return None;
+    }
+    LABEL.with(|l| l.borrow().clone())
+}
+
+// ----------------------------------------------------------------------
+// Chrome trace flusher
+// ----------------------------------------------------------------------
+
+/// Chrome pid for an event: the cluster timeline or one pid per node.
+fn pid_of(ev: &Event) -> u32 {
+    if ev.node == CLUSTER {
+        1
+    } else {
+        ev.node + 2
+    }
+}
+
+/// Chrome tid for an event on `track`: one tid per worker slot; leader
+/// threads get stable 1000+ tids so concurrent non-pool threads (per-node
+/// checkpoint jobs, parallel test harness threads) never interleave spans
+/// on one timeline row.
+fn tid_of(ev: &Event, track: usize) -> u32 {
+    if ev.worker == LEADER {
+        1000 + (track.saturating_sub(WORKER_TRACKS)) as u32
+    } else {
+        ev.worker + 2
+    }
+}
+
+fn render() -> String {
+    // Snapshot every ring under its own lock; events are Copy.
+    let mut evs: Vec<(usize, Event)> = Vec::new();
+    let mut dropped: u64 = 0;
+    for (track, slot) in tracks().iter().enumerate() {
+        let g = slot.lock().unwrap();
+        if let Some(ring) = g.as_ref() {
+            dropped += ring.dropped;
+            // Oldest-first: the ring is in push order until it wraps.
+            for i in 0..ring.buf.len() {
+                evs.push((track, ring.buf[(ring.next + i) % ring.buf.len()]));
+            }
+        }
+    }
+    evs.sort_by_key(|(_, e)| (e.t0_ns, u64::MAX - e.dur_ns.min(INSTANT - 1)));
+
+    let mut pids: Vec<u32> = Vec::new();
+    let mut tids: Vec<(u32, u32)> = Vec::new();
+    let mut rows: Vec<String> = Vec::new();
+    for (track, ev) in &evs {
+        let pid = pid_of(ev);
+        let tid = tid_of(ev, *track);
+        if !pids.contains(&pid) {
+            pids.push(pid);
+        }
+        if !tids.contains(&(pid, tid)) {
+            tids.push((pid, tid));
+        }
+        let name = String::from_utf8_lossy(&ev.name[..ev.name_len as usize]).into_owned();
+        let ts = ev.t0_ns as f64 / 1000.0;
+        let (an, bn) = ev.kind.arg_names();
+        let mut args = json::Obj::new();
+        if !an.is_empty() {
+            args.u64(an, ev.a);
+        }
+        if !bn.is_empty() {
+            args.u64(bn, ev.b);
+        }
+        let mut o = json::Obj::new();
+        o.str("name", &name).str("cat", ev.kind.cat());
+        if ev.dur_ns == INSTANT {
+            o.str("ph", "i").str("s", "t");
+        } else {
+            o.str("ph", "X").raw("dur", &json::num(ev.dur_ns as f64 / 1000.0));
+        }
+        o.raw("ts", &json::num(ts)).u64("pid", pid as u64).u64("tid", tid as u64);
+        o.raw("args", &args.build());
+        rows.push(o.build());
+    }
+
+    // Process/thread naming metadata so Perfetto labels the timeline.
+    let mut meta: Vec<String> = Vec::new();
+    for pid in &pids {
+        let pname = if *pid == 1 { "cluster".to_string() } else { format!("node{}", pid - 2) };
+        let mut args = json::Obj::new();
+        args.str("name", &pname);
+        let mut o = json::Obj::new();
+        o.str("ph", "M").str("name", "process_name").u64("pid", *pid as u64).u64("tid", 0);
+        o.raw("args", &args.build());
+        meta.push(o.build());
+    }
+    for (pid, tid) in &tids {
+        let tname = if *tid >= 1000 {
+            format!("leader-{}", tid - 1000)
+        } else {
+            format!("worker{}", tid - 2)
+        };
+        let mut args = json::Obj::new();
+        args.str("name", &tname);
+        let mut o = json::Obj::new();
+        o.str("ph", "M").str("name", "thread_name").u64("pid", *pid as u64).u64("tid", *tid as u64);
+        o.raw("args", &args.build());
+        meta.push(o.build());
+    }
+
+    let mut doc = json::Obj::new();
+    doc.str("displayTimeUnit", "ms");
+    doc.u64("droppedEvents", dropped);
+    meta.extend(rows);
+    doc.raw("traceEvents", &json::array(&meta));
+    doc.build()
+}
+
+/// Serialize every ring to the armed path as Chrome trace JSON. Returns
+/// the path written, or `None` when tracing was never armed. The file is
+/// written whole via a temp + rename so a concurrently flushed path is
+/// always complete; each flush rewrites the full timeline, so calling it
+/// repeatedly (every `Roomy` teardown) is safe.
+pub fn flush() -> std::io::Result<Option<PathBuf>> {
+    if !enabled() {
+        return Ok(None);
+    }
+    let Some(path) = armed_path() else { return Ok(None) };
+    let _g = FLUSH_LOCK.lock().unwrap();
+    let text = render();
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    std::fs::write(&tmp, &text)?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(Some(path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::json::Value;
+
+    fn f(e: &Value, k: &str) -> f64 {
+        e.get(k).and_then(Value::as_f64).unwrap_or(f64::NAN)
+    }
+
+    /// Serializes tests that arm the (process-global) recorder.
+    static ARM: Mutex<()> = Mutex::new(());
+
+    /// The tentpole contract in miniature: an emitted trace parses as
+    /// JSON, and a nested span pair comes back as X events where the
+    /// inner begin/end sit strictly inside the outer's, with monotonic
+    /// timestamps (begin grows along the recording order, every end ≥ its
+    /// begin).
+    #[test]
+    fn emitted_trace_parses_and_nests() {
+        let _g = ARM.lock().unwrap();
+        let dir = crate::testutil::tmpdir("obs-trace-unit");
+        let path = dir.path().join("trace.json");
+        arm(&path);
+
+        {
+            let mut outer = span(Kind::Mark, "ut.outer", Some(3));
+            assert!(outer.armed());
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let mut inner = span(Kind::Mark, "ut.inner", Some(3));
+                inner.set_args(7, 9);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            instant(Kind::Mark, "ut.tick", Some(3), 1, 2);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            outer.set_args(1, 0);
+        }
+
+        // Read the path flush() actually wrote: a concurrent Roomy
+        // instance (suite-wide ROOMY_TRACE) may have re-pointed the
+        // global destination between our arm() and here; the rings are
+        // shared either way, so the flushed file contains our events.
+        let written = flush().expect("flush trace").expect("recorder is armed");
+        let text = std::fs::read_to_string(&written).expect("read flushed trace");
+        let doc = crate::obs::json::parse(&text).expect("trace must be valid JSON");
+        let evs = doc.get("traceEvents").and_then(Value::as_arr).expect("traceEvents array");
+        assert!(!evs.is_empty());
+
+        // Every complete event in the file is well-formed on its own.
+        for e in evs {
+            if e.get("ph").and_then(Value::as_str) == Some("X") {
+                assert!(f(e, "ts") >= 0.0 && f(e, "dur") >= 0.0, "bad X event: {e:?}");
+            }
+        }
+
+        let find = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").and_then(Value::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("event {name:?} missing from trace"))
+        };
+        let outer = find("ut.outer");
+        let inner = find("ut.inner");
+        let tick = find("ut.tick");
+
+        // Same node → same pid; same thread → same tid.
+        for k in ["pid", "tid"] {
+            assert_eq!(f(outer, k), f(inner, k));
+            assert_eq!(f(outer, k), f(tick, k));
+        }
+        assert_eq!(outer.get("ph").and_then(Value::as_str), Some("X"));
+        assert_eq!(inner.get("ph").and_then(Value::as_str), Some("X"));
+        assert_eq!(tick.get("ph").and_then(Value::as_str), Some("i"));
+
+        // Monotonic + properly nested: outer begin < inner begin,
+        // inner end < outer end, instant inside the outer interval.
+        let (ob, oe) = (f(outer, "ts"), f(outer, "ts") + f(outer, "dur"));
+        let (ib, ie) = (f(inner, "ts"), f(inner, "ts") + f(inner, "dur"));
+        assert!(ob < ib, "outer must begin before inner ({ob} vs {ib})");
+        assert!(ie < oe, "inner must end before outer ({ie} vs {oe})");
+        assert!(ib < ie && ob < oe, "ends must follow begins");
+        let tt = f(tick, "ts");
+        assert!(ob < tt && tt < oe, "instant must fall inside the outer span");
+
+        // Args flow through with kind-mapped names.
+        assert_eq!(f(inner.get("args").unwrap(), "a"), 7.0);
+        assert_eq!(f(inner.get("args").unwrap(), "b"), 9.0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let mut r = Ring::new();
+        let (name, name_len) = copy_name("x");
+        for i in 0..(RING_CAP as u64 + 10) {
+            r.push(Event {
+                t0_ns: i,
+                dur_ns: INSTANT,
+                kind: Kind::Mark,
+                name,
+                name_len,
+                node: CLUSTER,
+                worker: LEADER,
+                a: i,
+                b: 0,
+            });
+        }
+        assert_eq!(r.buf.len(), RING_CAP);
+        assert_eq!(r.dropped, 10);
+        // Oldest surviving event is #10; ring order starts at `next`.
+        assert_eq!(r.buf[r.next].t0_ns, 10);
+    }
+
+    #[test]
+    fn labels_nest_and_restore() {
+        let _g = ARM.lock().unwrap();
+        let dir = crate::testutil::tmpdir("obs-label-unit");
+        arm(&dir.path().join("t.json"));
+        assert_eq!(current_label(), None);
+        {
+            let _a = struct_label("outer");
+            assert_eq!(current_label().as_deref(), Some("outer"));
+            {
+                let _b = struct_label("inner");
+                assert_eq!(current_label().as_deref(), Some("inner"));
+            }
+            assert_eq!(current_label().as_deref(), Some("outer"));
+        }
+        assert_eq!(current_label(), None);
+    }
+}

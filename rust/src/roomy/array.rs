@@ -565,6 +565,7 @@ impl<T: Element> ArrayInner<T> {
         phase: &str,
         f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
+        let _lbl = crate::obs::trace::struct_label(&self.name);
         self.ctx.cluster.run_buckets_hinted(
             phase,
             |b| Some(self.bucket_file(b)),

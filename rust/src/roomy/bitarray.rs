@@ -474,6 +474,7 @@ impl BitInner {
         phase: &str,
         f: impl Fn(&Self, u32, &std::sync::Arc<crate::storage::NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
+        let _lbl = crate::obs::trace::struct_label(&self.name);
         self.ctx.cluster.run_buckets_hinted(
             phase,
             |b| Some(self.bucket_file(b)),

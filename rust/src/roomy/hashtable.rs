@@ -423,6 +423,7 @@ impl<K: Element, V: Element> HtInner<K, V> {
         phase: &str,
         f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
+        let _lbl = crate::obs::trace::struct_label(&self.name);
         self.ctx.cluster.run_buckets_hinted(
             phase,
             |b| Some(self.bucket_file(b)),

@@ -565,6 +565,7 @@ impl<T: Element> ListInner<T> {
         f: impl Fn(&Self, u32, &Arc<NodeDisk>) -> Result<()> + Sync,
     ) -> Result<()> {
         let _read = self.write_lock.read().unwrap();
+        let _lbl = crate::obs::trace::struct_label(&self.name);
         self.ctx.cluster.run_buckets_hinted(
             phase,
             |b| Some(self.shard_file(b)),

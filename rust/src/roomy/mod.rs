@@ -56,6 +56,18 @@ pub(crate) struct CtxInner {
 
 pub(crate) type Ctx = Arc<CtxInner>;
 
+impl Drop for CtxInner {
+    fn drop(&mut self) {
+        // Last handle to the instance: flush any armed flight-recorder
+        // trace so short-lived programs get a file without calling
+        // `flush_trace()` explicitly. Errors are swallowed — teardown
+        // must never fail because a trace destination vanished.
+        if crate::obs::trace::enabled() {
+            let _ = crate::obs::trace::flush();
+        }
+    }
+}
+
 impl CtxInner {
     /// A fresh per-bucket bloom filter bank for one structure, or `None`
     /// when the tier is disabled (`bloom_bits_per_key == 0`). Structures
@@ -86,6 +98,9 @@ impl Roomy {
     /// Bring up a Roomy instance: validates `cfg`, creates the per-node
     /// disk directories.
     pub fn open(cfg: RoomyConfig) -> Result<Roomy> {
+        if let Some(p) = &cfg.trace_path {
+            crate::obs::trace::arm(p);
+        }
         let cluster = Arc::new(Cluster::new(&cfg)?);
         Ok(Roomy {
             ctx: Arc::new(CtxInner {
@@ -329,6 +344,201 @@ impl Roomy {
         s.push_str(&self.ctx.cluster.pool().stats().report());
         s
     }
+
+    /// Flush the flight recorder to the armed trace destination now
+    /// (normally it flushes on teardown). Returns the path written, or
+    /// `Ok(None)` when tracing was never armed.
+    pub fn flush_trace(&self) -> std::io::Result<Option<std::path::PathBuf>> {
+        crate::obs::trace::flush()
+    }
+
+    /// Machine-readable metrics report: every counter surface
+    /// ([`report`](Roomy::report) shows the same data for humans) as one
+    /// JSON document.
+    ///
+    /// The document carries `"schema": 1`. Versioning rule: adding keys
+    /// is allowed without a bump; removing or renaming a key, or changing
+    /// a value's type or unit, bumps the schema number.
+    pub fn report_json(&self) -> String {
+        use crate::obs::json::{array, Obj};
+        let cfg = &self.ctx.cfg;
+        let io = self.io_snapshot();
+        let pipe = self.ctx.cluster.pipeline_snapshot();
+        let dd = self.dedup_snapshot();
+        let al = crate::storage::scratch::alloc_snapshot();
+        let ck = self.ctx.cluster.checkpoint_stats().snapshot();
+        let pool = self.ctx.cluster.pool();
+        let ps = pool.stats();
+
+        let mut root = Obj::new();
+        root.u64("schema", 1);
+
+        let mut c = Obj::new();
+        c.u64("nodes", cfg.workers as u64);
+        c.u64("buckets_per_worker", cfg.buckets_per_worker as u64);
+        c.u64("num_workers", cfg.num_workers as u64);
+        c.u64("io_pipeline_depth", cfg.io_pipeline_depth as u64);
+        c.str("steal_policy", &format!("{}", cfg.steal_policy));
+        c.u64("bloom_bits_per_key", cfg.bloom_bits_per_key as u64);
+        c.bool("bloom_approximate", cfg.bloom_approximate);
+        c.str("autotune", &format!("{:?}", cfg.autotune));
+        match &cfg.trace_path {
+            Some(p) => {
+                c.str("trace_path", &p.display().to_string());
+            }
+            None => {
+                c.raw("trace_path", "null");
+            }
+        }
+        root.raw("config", &c.build());
+
+        let mut o = Obj::new();
+        o.u64("bytes_read", io.bytes_read);
+        o.u64("bytes_written", io.bytes_written);
+        o.u64("reads", io.reads);
+        o.u64("writes", io.writes);
+        o.u64("seeks", io.seeks);
+        o.f64("throttle_ms", io.throttle_ns as f64 / 1e6);
+        root.raw("io", &o.build());
+
+        let mut o = Obj::new();
+        o.u64("depth", cfg.io_pipeline_depth as u64);
+        o.u64("streams", pipe.streams);
+        o.u64("chunks_ahead", pipe.chunks_ahead);
+        o.u64("bytes_ahead", pipe.bytes_ahead);
+        o.u64("chunks_behind", pipe.chunks_behind);
+        o.u64("bytes_behind", pipe.bytes_behind);
+        o.u64("peak_stream_buf", pipe.peak_stream_buf);
+        o.f64("reader_wait_ms", pipe.reader_wait_ns as f64 / 1e6);
+        o.f64("writer_wait_ms", pipe.writer_wait_ns as f64 / 1e6);
+        o.u64("hints_posted", pipe.hints_posted);
+        o.u64("hint_hits", pipe.hint_hits);
+        o.u64("hint_wastes", pipe.hint_wastes);
+        o.f64("hint_hit_rate", pipe.hint_hit_rate());
+        root.raw("pipeline", &o.build());
+
+        let mut o = Obj::new();
+        o.bool("enabled", cfg.bloom_bits_per_key > 0);
+        o.u64("probes", dd.probes);
+        o.u64("definite_new", dd.definite_new);
+        o.u64("maybe_seen", dd.maybe_seen);
+        o.u64("inserts", dd.inserts);
+        o.u64("shortcuts", dd.shortcuts);
+        o.u64("exact_fallbacks", dd.exact_fallbacks);
+        o.u64("bytes_avoided", dd.bytes_avoided);
+        o.u64("approx_dropped", dd.approx_dropped);
+        o.u64("filter_ram_bytes", dd.filter_ram_bytes);
+        root.raw("dedup", &o.build());
+
+        let mut o = Obj::new();
+        o.u64("pool_hits", al.pool_hits);
+        o.u64("pool_misses", al.pool_misses);
+        o.f64("reuse_rate", al.reuse_rate());
+        o.u64("returns", al.returns);
+        o.u64("discards", al.discards);
+        o.u64("outstanding", al.outstanding);
+        o.u64("outstanding_bytes", al.outstanding_bytes);
+        o.u64("peak_outstanding_bytes", al.peak_outstanding_bytes);
+        o.u64("pooled_bytes", al.pooled_bytes);
+        o.u64("peak_pooled_bytes", al.peak_pooled_bytes);
+        o.u64("arena_bytes", al.arena_bytes);
+        root.raw("scratch", &o.build());
+
+        let mut o = Obj::new();
+        o.u64("saves", ck.saves);
+        o.u64("restores", ck.restores);
+        o.u64("files_linked", ck.files_linked);
+        o.u64("files_copied", ck.files_copied);
+        o.u64("bytes_linked", ck.bytes_linked);
+        o.u64("bytes_copied", ck.bytes_copied);
+        o.u64("files_reused", ck.files_reused);
+        o.u64("bytes_reused", ck.bytes_reused);
+        o.f64("save_ms", ck.save_ns as f64 / 1e6);
+        o.f64("restore_ms", ck.restore_ns as f64 / 1e6);
+        root.raw("checkpoint", &o.build());
+
+        let mut o = Obj::new();
+        o.u64("workers", pool.num_workers() as u64);
+        o.str("steal_policy", &format!("{}", pool.steal_policy()));
+        o.u64("locality_hits", ps.locality_hits());
+        o.u64("steals", ps.steals());
+        o.f64("locality_rate", ps.locality_rate());
+        o.u64("capture_bytes", ps.capture_bytes());
+        o.u64("capture_spilled_bytes", ps.capture_spilled_bytes());
+        o.u64("capture_scratch_files", ps.capture_scratch_files());
+        o.u64("capture_peak_task_ram", ps.capture_peak_task_ram());
+        o.u64("capture_budget_spills", ps.capture_budget_spills());
+        let depths: Vec<String> =
+            ps.per_node_queue_depth().iter().map(|d| d.to_string()).collect();
+        o.raw("queue_depth_peaks", &array(&depths));
+        let rows: Vec<String> = ps
+            .per_worker()
+            .into_iter()
+            .enumerate()
+            .map(|(w, (tasks, busy))| {
+                let mut r = Obj::new();
+                r.u64("worker", w as u64);
+                r.u64("tasks", tasks);
+                r.f64("busy_ms", busy.as_secs_f64() * 1e3);
+                r.build()
+            })
+            .collect();
+        o.raw("per_worker", &array(&rows));
+        root.raw("pool", &o.build());
+
+        let mut o = Obj::new();
+        match self.ctx.cluster.autotune() {
+            Some(at) => {
+                o.bool("enabled", true);
+                o.u64("rounds", at.rounds());
+                o.u64("depth_raises", at.depth_raises());
+                o.u64("depth_decays", at.depth_decays());
+                o.u64("hint_ahead", at.hint_ahead() as u64);
+                let eff: Vec<String> = self
+                    .ctx
+                    .cluster
+                    .disks()
+                    .iter()
+                    .map(|d| d.effective_depth().to_string())
+                    .collect();
+                o.raw("effective_depths", &array(&eff));
+            }
+            None => {
+                o.bool("enabled", false);
+            }
+        }
+        root.raw("autotune", &o.build());
+
+        let phases: Vec<String> = self
+            .ctx
+            .cluster
+            .phases()
+            .rows()
+            .into_iter()
+            .map(|(name, d, hits)| {
+                let mut r = Obj::new();
+                r.str("name", &name);
+                r.f64("total_ms", d.as_secs_f64() * 1e3);
+                r.u64("calls", hits);
+                r.build()
+            })
+            .collect();
+        root.raw("phases", &array(&phases));
+
+        let mut o = Obj::new();
+        o.bool("enabled", crate::obs::trace::enabled());
+        match crate::obs::trace::armed_path() {
+            Some(p) => {
+                o.str("path", &p.display().to_string());
+            }
+            None => {
+                o.raw("path", "null");
+            }
+        }
+        root.raw("trace", &o.build());
+
+        root.build()
+    }
 }
 
 #[cfg(test)]
@@ -363,6 +573,25 @@ mod tests {
         assert!(r.array::<u32>("", 10, 0).is_err());
         assert!(r.array::<u32>("a/b", 10, 0).is_err());
         assert!(r.array::<u32>("a b", 10, 0).is_err());
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let t = tmpdir("roomy_report_json");
+        let r = Roomy::open(RoomyConfig::for_testing(t.path())).unwrap();
+        let a = r.array::<u32>("arr", 100, 1).unwrap();
+        a.map(|_, _| {}).unwrap();
+        let doc = r.report_json();
+        let v = crate::obs::json::parse(&doc).expect("report_json must parse");
+        assert_eq!(v.get("schema").and_then(|s| s.as_f64()), Some(1.0), "{doc}");
+        let io = v.get("io").expect("io section");
+        assert!(io.get("bytes_read").and_then(|b| b.as_f64()).is_some());
+        let pool = v.get("pool").expect("pool section");
+        let rows = pool.get("per_worker").and_then(|w| w.as_arr()).expect("per_worker");
+        assert_eq!(rows.len(), r.config().num_workers);
+        assert!(v.get("phases").and_then(|p| p.as_arr()).is_some());
+        let at = v.get("autotune").expect("autotune section");
+        assert!(at.get("enabled").is_some());
     }
 
     #[test]

@@ -79,6 +79,8 @@ impl Autotune {
     /// atomic loads per node) so per-collective overhead is noise.
     pub fn adapt(&self, disks: &[Arc<NodeDisk>], pool: &WorkerPool) {
         self.rounds.fetch_add(1, Ordering::Relaxed);
+        let moves0 = self.depth_raises.load(Ordering::Relaxed)
+            + self.depth_decays.load(Ordering::Relaxed);
         let mut last = self.last_wait.lock().expect("autotune state poisoned");
         for (n, disk) in disks.iter().enumerate() {
             if disk.pipeline_depth() == 0 {
@@ -118,6 +120,18 @@ impl Autotune {
         };
         pool.set_hint_ahead(k);
         self.hint_ahead.store(pool.hint_ahead(), Ordering::Relaxed);
+        // Flight recorder: one instant per adapt round with the decision
+        // taken (depth moves this round, hint distance applied).
+        let moves = self.depth_raises.load(Ordering::Relaxed)
+            + self.depth_decays.load(Ordering::Relaxed)
+            - moves0;
+        crate::obs::trace::instant(
+            crate::obs::trace::Kind::Autotune,
+            "autotune.adapt",
+            None,
+            moves,
+            pool.hint_ahead() as u64,
+        );
     }
 
     /// Adaptation rounds run so far.

@@ -656,7 +656,19 @@ impl WorkerPool {
                                         ),
                                     })
                                 });
+                                // Flight recorder: one span per bucket
+                                // task, on this worker's track, tagged
+                                // with the owning node and whether the
+                                // task was stolen. Disarmed = no-op.
+                                let mut tsp = crate::obs::trace::span_at(
+                                    crate::obs::trace::Kind::Task,
+                                    phase,
+                                    Some(topo.owner(t as u32)),
+                                    wid,
+                                );
+                                tsp.set_args(t as u64, u64::from(!take.local));
                                 let r = catch_unwind(AssertUnwindSafe(|| job(t)));
+                                drop(tsp);
                                 let ctx = TASK
                                     .with(|c| c.borrow_mut().take())
                                     .expect("pool task context vanished");

@@ -280,12 +280,17 @@ impl DedupFilter {
     /// serialized, so a restored structure re-derives them from its
     /// restored bucket files).
     pub fn rebuild_shard(&self, b: usize, records: impl Iterator<Item = Vec<u8>>) {
+        let mut sp =
+            crate::obs::trace::span(crate::obs::trace::Kind::Mark, "bloom.rebuild", None);
+        let mut fed = 0u64;
         self.with_shard(b, |s| {
             *s = ShardBloom::new(self.bits_per_key);
             for rec in records {
                 s.insert(&rec);
+                fed += 1;
             }
         });
+        sp.set_args(b as u64, fed);
     }
 
     /// Current filter RAM in bytes (all shards).

@@ -81,6 +81,7 @@ use super::pipeline::ByteReader;
 use crate::cluster::Cluster;
 use crate::error::{Result, RoomyError};
 use crate::metrics::CheckpointStats;
+use crate::obs::trace;
 
 /// Manifest format version; bumped on incompatible layout changes.
 pub const MANIFEST_VERSION: u32 = 1;
@@ -476,7 +477,9 @@ impl CheckpointManager {
         Ok(CheckpointManager {
             cluster: Arc::clone(cluster),
             root,
-            stats: Arc::new(CheckpointStats::new()),
+            // Counters live on the cluster so every manager over it (and
+            // `Roomy::report()`/`report_json()`) sees one shared ledger.
+            stats: Arc::clone(cluster.checkpoint_stats()),
         })
     }
 
@@ -485,7 +488,7 @@ impl CheckpointManager {
         &self.root
     }
 
-    /// Cumulative save/restore counters.
+    /// Cumulative save/restore counters (shared cluster-wide).
     pub fn stats(&self) -> &Arc<CheckpointStats> {
         &self.stats
     }
@@ -566,6 +569,8 @@ impl CheckpointManager {
         app: &[(&str, &str)],
     ) -> Result<SaveReport> {
         let t0 = Instant::now();
+        let mut sp = trace::span(trace::Kind::CkptSave, "ckpt.save", None);
+        let stats0 = sp.armed().then(|| self.stats.snapshot());
         Self::validate_name(name)?;
         for (k, v) in app {
             // '\r' is rejected too: the line-oriented decode would strip
@@ -745,6 +750,13 @@ impl CheckpointManager {
 
         report.wall_secs = t0.elapsed().as_secs_f64();
         self.stats.add_save(t0.elapsed());
+        if let Some(s0) = stats0 {
+            let s1 = self.stats.snapshot();
+            sp.set_args(
+                s1.files_total() - s0.files_total(),
+                s1.bytes_total() - s0.bytes_total(),
+            );
+        }
         Ok(report)
     }
 
@@ -755,6 +767,8 @@ impl CheckpointManager {
     /// constructors.
     pub fn restore(&self, name: &str) -> Result<Restored> {
         let t0 = Instant::now();
+        let mut sp = trace::span(trace::Kind::CkptRestore, "ckpt.restore", None);
+        let stats0 = sp.armed().then(|| self.stats.snapshot());
         let manifest = self.load_manifest(name)?;
         let dir = self.pick_dir(name).expect("load_manifest verified existence");
         // Geometry check through the shared ownership arithmetic: a
@@ -847,6 +861,13 @@ impl CheckpointManager {
             d.remove_dir("tmp/restore")?;
         }
         self.stats.add_restore(t0.elapsed());
+        if let Some(s0) = stats0 {
+            let s1 = self.stats.snapshot();
+            sp.set_args(
+                s1.files_total() - s0.files_total(),
+                s1.bytes_total() - s0.bytes_total(),
+            );
+        }
         Ok(Restored { manifest })
     }
 }

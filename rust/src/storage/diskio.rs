@@ -163,8 +163,18 @@ impl NodeDisk {
             return;
         }
         let clamped = depth.clamp(1, self.pipeline_depth);
-        self.effective_depth
-            .store(clamped, std::sync::atomic::Ordering::Relaxed);
+        let prev = self
+            .effective_depth
+            .swap(clamped, std::sync::atomic::Ordering::Relaxed);
+        if prev != clamped {
+            crate::obs::trace::instant(
+                crate::obs::trace::Kind::AutotuneDepth,
+                "autotune.depth",
+                Some(self.node),
+                clamped as u64,
+                0,
+            );
+        }
     }
 
     /// This node's I/O service lanes, if the pipeline is enabled.

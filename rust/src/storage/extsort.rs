@@ -18,6 +18,7 @@ use super::diskio::NodeDisk;
 use super::pipeline::{PrefetchReader, WriteBehindWriter, PIPE_CHUNK};
 use super::scratch;
 use crate::error::Result;
+use crate::obs::trace;
 
 /// Scratch prefix for a sort targeting `output`: a flattened name under
 /// `tmp/sort/` so crashed runs leave their half-written runs where
@@ -49,6 +50,7 @@ pub fn make_runs(
     if !disk.exists(&input) {
         return Ok(runs);
     }
+    let mut sp = trace::span(trace::Kind::SortRuns, "sort.runs", Some(disk.node()));
     // Cap the run size to the file's actual record count: read_batch
     // zero-fills its buffer up front, so an uncapped 64 MB chunk would
     // memset 64 MB per (possibly tiny) shard.
@@ -73,6 +75,7 @@ pub fn make_runs(
         w.finish()?;
         runs.push(run_rel);
     }
+    sp.set_args(runs.len() as u64, 0);
     Ok(runs)
 }
 
@@ -88,6 +91,7 @@ pub fn merge_runs(
     rec_size: usize,
     dedup: bool,
 ) -> Result<u64> {
+    let mut sp = trace::span(trace::Kind::SortMerge, "sort.merge", Some(disk.node()));
     let mut writer = WriteBehindWriter::create(disk, &output, rec_size)?;
     let mut heap: BinaryHeap<Reverse<(Vec<u8>, usize)>> = BinaryHeap::new();
     let mut readers = Vec::with_capacity(runs.len());
@@ -126,6 +130,7 @@ pub fn merge_runs(
     for run in runs {
         disk.remove(run)?;
     }
+    sp.set_args(written, runs.len() as u64);
     Ok(written)
 }
 

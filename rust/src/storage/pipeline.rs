@@ -73,6 +73,7 @@ use super::diskio::{
 use super::scratch;
 use crate::error::{Result, RoomyError};
 use crate::metrics::PipelineStats;
+use crate::obs::trace;
 
 /// Default chunk size a pipelined stream transfers per job. Large enough
 /// to amortize the cross-thread handoff, small enough that
@@ -82,6 +83,11 @@ pub const PIPE_CHUNK: usize = 256 * 1024;
 /// How long drains wait on a lane before declaring it stalled. Generous:
 /// a chunk under the paper's throttle model takes milliseconds.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Stall intervals shorter than this are metered in [`PipelineStats`] but
+/// not recorded as flight-recorder spans — a sub-50 µs wait is a queue
+/// handoff, not a stall worth a timeline row.
+const STALL_TRACE_MIN: Duration = Duration::from_micros(50);
 
 /// Unique suffix for write-behind staging files (process-wide).
 static STAGING_ID: AtomicU64 = AtomicU64::new(0);
@@ -463,6 +469,7 @@ fn take_hint(
     match disk.hints().take(rel, chunk_bytes, live_id, live_len) {
         HintTake::Hit { chunk, rest } => {
             disk.pipe_stats().add_hint_hit();
+            trace::instant(trace::Kind::HintHit, "pipe.hint_hit", Some(disk.node()), 0, 0);
             Some((chunk, rest.map(|d| SharedMeteredReader::reattach(Arc::clone(disk), d))))
         }
         HintTake::Stale => {
@@ -655,6 +662,16 @@ impl ChunkFetcher {
             .recv_timeout(DRAIN_TIMEOUT)
             .map_err(|_| pipeline_err("read-ahead lane stalled"))?;
         self.disk.pipe_stats().add_reader_wait(t0.elapsed());
+        if t0.elapsed() >= STALL_TRACE_MIN {
+            trace::complete_since(
+                trace::Kind::ReaderStall,
+                "pipe.read_stall",
+                Some(self.disk.node()),
+                t0,
+                0,
+                0,
+            );
+        }
         match msg {
             Ok(chunk) => {
                 if chunk.len() < self.chunk_bytes {
@@ -1036,6 +1053,16 @@ impl ChunkFlusher {
             .recv_timeout(DRAIN_TIMEOUT)
             .map_err(|_| pipeline_err("write-behind lane stalled"))?;
         self.disk.pipe_stats().add_writer_wait(t0.elapsed());
+        if t0.elapsed() >= STALL_TRACE_MIN {
+            trace::complete_since(
+                trace::Kind::WriterStall,
+                "pipe.write_stall",
+                Some(self.disk.node()),
+                t0,
+                0,
+                0,
+            );
+        }
         self.outstanding -= 1;
         Ok(b)
     }

@@ -180,6 +180,61 @@ pub fn reset_alloc_stats() {
     global().stats().reset();
 }
 
+/// Exclusive, quiesced view of the process-global pool gauges for
+/// tests: takes a process-wide gate (scoped tests serialize against
+/// each other), waits until every outstanding scratch loan has been
+/// returned, then zeroes the counters. Assertions inside the scope see
+/// only their own activity; [`MetricScope::settled`] re-quiesces before
+/// the closing snapshot so loans held briefly by unrelated threads
+/// cannot flake a balance check. Lets gauge tests share a test binary
+/// instead of needing their own process.
+pub fn metric_scope() -> MetricScope {
+    static GATE: Mutex<()> = Mutex::new(());
+    let gate = GATE.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    wait_loans_returned();
+    reset_alloc_stats();
+    MetricScope { _gate: gate }
+}
+
+/// See [`metric_scope`]. Dropping the guard releases the gate; counters
+/// are left as the scope's activity set them (the next scope resets).
+pub struct MetricScope {
+    _gate: std::sync::MutexGuard<'static, ()>,
+}
+
+impl MetricScope {
+    /// Snapshot taken at an instant when every outstanding loan
+    /// (process-wide) was returned. A leaked guard keeps the gauge
+    /// pinned above zero forever, so this panics after the timeout —
+    /// returning at all *is* the no-leak assertion; tests on other
+    /// threads merely delay it.
+    pub fn settled(&self) -> AllocSnapshot {
+        wait_loans_returned()
+    }
+}
+
+/// Poll until one snapshot shows zero outstanding loans (loans are
+/// scoped guards, so any healthy workload returns them promptly) and
+/// return that snapshot. A generous timeout turns a genuine leak into a
+/// clear failure instead of a hang.
+fn wait_loans_returned() -> AllocSnapshot {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let snap = alloc_snapshot();
+        if snap.outstanding == 0 && snap.outstanding_bytes == 0 {
+            return snap;
+        }
+        if std::time::Instant::now() >= deadline {
+            panic!(
+                "metric_scope: {} scratch loans ({} bytes) still outstanding after 60s — \
+                 a buffer guard leaked or a concurrent workload is wedged",
+                snap.outstanding, snap.outstanding_bytes
+            );
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+}
+
 /// Scoped checkout of a chunk-class buffer with at least `want` bytes
 /// reserved.
 pub fn chunk_buf(want: usize) -> ScratchBuf {

@@ -458,6 +458,103 @@ fn det_autotune_is_byte_transparent() {
     }
 }
 
+/// The flight recorder is byte-transparent: the same dup-heavy
+/// multi-structure workload digests identically with tracing off and
+/// with tracing armed — across num_workers {1, 4} × pipeline depth
+/// {0, 4}, with (off, depth 0, serial) as the reference cell. The trace
+/// destination lives *outside* the digested instance root; recording
+/// only ever captures timestamps and counter deltas, never data. Armed
+/// cells additionally flush and re-parse their trace: it must be valid
+/// JSON with a non-empty traceEvents array.
+///
+/// (Arming is process-global and sticky, so the off cells run first —
+/// under a suite-wide ROOMY_TRACE they may still record, which is
+/// exactly the transparency this test pins.)
+#[test]
+fn det_trace_is_byte_transparent() {
+    let grid: [(bool, usize, usize); 8] = [
+        (false, 0, 1),
+        (false, 0, 4),
+        (false, 4, 1),
+        (false, 4, 4),
+        (true, 0, 1),
+        (true, 0, 4),
+        (true, 4, 1),
+        (true, 4, 4),
+    ];
+    let workload = |r: &Roomy, rng: &mut Rng| -> u64 {
+        let ra = r.array::<u64>("a", 777, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut u64, p: &u64| *v = v.wrapping_add(*p));
+        let s = r.set::<u64>("s").unwrap();
+        let l = r.list::<u64>("l").unwrap();
+        for _round in 0..3 {
+            for _ in 0..500 {
+                ra.update(rng.below(777), &(rng.next_u64() >> 32), add).unwrap();
+                let v = rng.below(300);
+                if rng.chance(0.8) {
+                    s.add(&v).unwrap();
+                } else {
+                    s.remove(&v).unwrap();
+                }
+                l.add(&rng.below(200)).unwrap();
+            }
+            ra.sync().unwrap();
+            s.sync().unwrap();
+            l.sync().unwrap();
+        }
+        l.remove_dupes().unwrap(); // external sort → run-gen/merge spans
+        let h = ra
+            .reduce(|| 0u64, |acc, i, v| order_hash(acc, i ^ *v), order_hash)
+            .unwrap();
+        let h = s.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap();
+        l.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap()
+    };
+    let mut outcomes = Vec::new();
+    for &(trace, depth, nw) in &grid {
+        let t = tmpdir(&format!("det_trace_{trace}_d{depth}_w{nw}"));
+        // Trace file goes in its own directory, outside the digested root.
+        let tdir = tmpdir(&format!("det_tracefile_{trace}_d{depth}_w{nw}"));
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 3;
+        cfg.buckets_per_worker = 2;
+        cfg.num_workers = nw;
+        cfg.io_pipeline_depth = depth;
+        // Explicit per-cell destination; the off cells clear any
+        // suite-wide ROOMY_TRACE that for_testing picked up.
+        cfg.trace_path = if trace { Some(tdir.path().join("trace.json")) } else { None };
+        let r = Roomy::open(cfg).unwrap();
+        let mut rng = Rng::new(0xD15EA5E);
+        let value = workload(&r, &mut rng);
+        if trace {
+            // Flush to whatever destination is currently armed (a
+            // concurrently-opened instance may have re-pointed it; the
+            // rings are shared, so any flushed file carries our spans).
+            let flushed = r.flush_trace().unwrap().expect("tracing must be armed");
+            let text = std::fs::read_to_string(&flushed).unwrap();
+            let doc = roomy::obs::json::parse(&text)
+                .unwrap_or_else(|e| panic!("flushed trace must parse as JSON: {e}"));
+            let events = doc
+                .get("traceEvents")
+                .and_then(|v| v.as_arr())
+                .expect("trace must carry a traceEvents array");
+            assert!(!events.is_empty(), "armed trace captured no events");
+        }
+        drop(r); // join io service threads + teardown flush
+        outcomes.push((trace, depth, nw, value, dir_digest(t.path())));
+    }
+    let (_, _, _, v0, d0) = outcomes[0];
+    for (trace, depth, nw, v, d) in &outcomes[1..] {
+        assert_eq!(
+            *v, v0,
+            "value diverged at trace={trace} depth={depth} num_workers={nw}"
+        );
+        assert_eq!(
+            *d, d0,
+            "on-disk bytes diverged at trace={trace} depth={depth} num_workers={nw}"
+        );
+    }
+}
+
 /// Full **batched** BFS drivers agree (level profile and totals) across
 /// worker counts and pipeline depths — both the list and the hash-table
 /// variant (the BFS frontier scans are the issue's canonical

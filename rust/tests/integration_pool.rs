@@ -326,3 +326,93 @@ fn skewed_load_steals_and_matches_serial_digest() {
         "strict locality must not change on-disk bytes"
     );
 }
+
+// ----------------------------------------------------------------------
+// Process-wide scratch pool invariants (bounded idle RAM, measurable
+// reuse, leak-free unwinding). The pool and its AllocStats gauges are
+// process-global; `scratch::metric_scope()` gates these tests against
+// each other and quiesces/zeroes the counters, so they can share this
+// binary instead of needing their own (formerly tests/integration_scratch.rs).
+// ----------------------------------------------------------------------
+
+/// Under a parallel scan + rewrite (4 pool workers × pipeline depth 4 —
+/// the widest hot path), the pool's idle RAM stays under the fixed cap,
+/// buffers are measurably reused, and every loan is returned once the
+/// collectives finish.
+#[test]
+fn pool_ram_bounded_and_loans_returned() {
+    let scope = roomy::storage::scratch::metric_scope();
+
+    let (_t, r) = roomy_with("scratch_bound", |c| {
+        c.workers = 2;
+        c.buckets_per_worker = 2;
+        c.num_workers = 4;
+        c.io_pipeline_depth = 4;
+    });
+    let ra = r.array::<u64>("a", 600_000, 1).unwrap(); // ~4.8 MB
+    for _round in 0..3 {
+        ra.map_update(|i, v| *v = i ^ *v).unwrap();
+    }
+    let ht = r.hash_table::<u64, u64>("h").unwrap();
+    for k in 0..5_000u64 {
+        ht.insert(&k, &(k * 3)).unwrap();
+    }
+    ht.sync().unwrap();
+    drop(ht);
+    drop(ra);
+    drop(r); // join io service threads: they hold circulating chunks
+
+    let snap = scope.settled();
+    assert!(
+        snap.peak_pooled_bytes <= roomy::storage::scratch::pool_cap_bytes(),
+        "idle pool RAM {} exceeds the cap {}",
+        snap.peak_pooled_bytes,
+        roomy::storage::scratch::pool_cap_bytes(),
+    );
+    assert!(snap.pool_hits > 0, "hot loops never reused a pooled buffer: {snap:?}");
+    assert_eq!(snap.outstanding, 0, "leaked scratch loans: {snap:?}");
+    assert_eq!(snap.outstanding_bytes, 0, "leaked scratch bytes: {snap:?}");
+}
+
+/// A panic inside a mapped collective unwinds through borrowed scratch
+/// buffers (scan chunks, record scratch, pipeline stream buffers) — every
+/// loan must still come back to the pool, exactly like the staging-file
+/// guarantee in `integration_pipeline.rs`.
+#[test]
+fn panicking_map_returns_every_loan() {
+    let scope = roomy::storage::scratch::metric_scope();
+
+    let (_t, r) = roomy_with("scratch_panic", |c| {
+        c.workers = 2;
+        c.buckets_per_worker = 2;
+        c.num_workers = 4;
+        c.io_pipeline_depth = 4;
+    });
+    let ra = r.array::<u64>("a", 600_000, 1).unwrap();
+    let res = ra.map_update(|i, _v| assert!(i != 444_444, "boom"));
+    assert!(
+        matches!(res, Err(roomy::RoomyError::WorkerPanic { .. })),
+        "expected WorkerPanic, got {res:?}"
+    );
+
+    // The instance survives a failed collective; run a clean pass to show
+    // the pool still serves buffers normally after the unwind.
+    let count = AtomicU64::new(0);
+    ra.map(|_i, _v| {
+        count.fetch_add(1, Ordering::Relaxed);
+    })
+    .unwrap();
+    assert_eq!(count.into_inner(), 600_000);
+
+    drop(ra);
+    drop(r);
+    let snap = scope.settled();
+    assert_eq!(snap.outstanding, 0, "panic leaked scratch loans: {snap:?}");
+    assert_eq!(snap.outstanding_bytes, 0, "panic leaked scratch bytes: {snap:?}");
+    assert!(
+        snap.peak_pooled_bytes <= roomy::storage::scratch::pool_cap_bytes(),
+        "idle pool RAM {} exceeds the cap {}",
+        snap.peak_pooled_bytes,
+        roomy::storage::scratch::pool_cap_bytes(),
+    );
+}
