@@ -100,8 +100,42 @@ pub fn record(group: &str, metric: &str, value: f64) {
     SAMPLES.lock().unwrap().push((group.to_string(), metric.to_string(), value));
 }
 
+/// The commit this bench binary was built from: `GITHUB_SHA` in CI, `git
+/// rev-parse HEAD` on a workstation, `"unknown"` outside a checkout. Makes
+/// two `BENCH_*.json` files diffable *across commits*, not just runs.
+fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// Snapshot of the `ROOMY_*` environment the run saw — the config axes
+/// CI's matrix moves — so a baseline says what knobs produced it.
+fn env_snapshot() -> Vec<(String, String)> {
+    let mut vars: Vec<(String, String)> = std::env::vars()
+        .filter(|(k, _)| k.starts_with("ROOMY_"))
+        .collect();
+    vars.sort();
+    vars
+}
+
 /// Write every recorded sample to `BENCH_baseline.json` (path overridable
 /// via `ROOMY_BENCH_JSON`). Call once at the end of a bench `main`.
+///
+/// Besides the samples, the document carries provenance: git SHA, unix
+/// timestamp, bench scale, and the `ROOMY_*` env snapshot — enough to
+/// know whether two baselines are comparable before `roomy analyze-diff`
+/// compares them.
 pub fn write_baseline(bench: &str) {
     use roomy::obs::json::{array, num, Obj};
     let path =
@@ -116,8 +150,21 @@ pub fn write_baseline(bench: &str) {
             r.build()
         })
         .collect();
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut env = Obj::new();
+    for (k, v) in env_snapshot() {
+        env.str(&k, &v);
+    }
     let mut doc = Obj::new();
-    doc.str("bench", bench).raw("scale", &num(scale())).raw("samples", &array(&rows));
+    doc.str("bench", bench)
+        .raw("scale", &num(scale()))
+        .str("git_sha", &git_sha())
+        .u64("unix_secs", unix_secs)
+        .raw("env", &env.build())
+        .raw("samples", &array(&rows));
     let out = doc.build();
     std::fs::write(&path, &out).expect("write bench baseline JSON");
     println!("\nwrote {} samples to {path}", samples.len());

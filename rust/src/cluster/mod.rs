@@ -33,10 +33,10 @@ pub use topology::Topology;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::config::RoomyConfig;
+use crate::config::{AutotuneMode, RoomyConfig};
 use crate::error::{Result, RoomyError};
 use crate::metrics::{CheckpointStats, IoSnapshot, PhaseTimes, PipelineSnapshot};
-use crate::obs::trace;
+use crate::obs::{hist, trace};
 use crate::runtime::autotune::Autotune;
 use crate::runtime::pool::WorkerPool;
 use crate::storage::NodeDisk;
@@ -55,8 +55,9 @@ pub struct Cluster {
     topology: Topology,
     phases: PhaseTimes,
     pool: WorkerPool,
-    /// Counter-driven self-tuner ([`crate::runtime::autotune`]), present
-    /// only when [`RoomyConfig::autotune`] is `On`. Runs one adaptation
+    /// Self-tuner ([`crate::runtime::autotune`]), present only when
+    /// [`RoomyConfig::autotune`] is enabled (`On` reads coarse counters,
+    /// `Spans` reads histogram p95s). Runs one adaptation
     /// round at the top of every bucket collective; absent (the default)
     /// the hot path is untouched.
     autotune: Option<Autotune>,
@@ -109,7 +110,15 @@ impl Cluster {
             .checkpoint_dir
             .clone()
             .unwrap_or_else(|| cfg.root.join("checkpoints"));
-        let autotune = cfg.autotune.enabled().then(|| Autotune::new(cfg.workers));
+        let autotune = match cfg.autotune {
+            AutotuneMode::Off => None,
+            AutotuneMode::On => Some(Autotune::new(cfg.workers)),
+            // Spans mode reads the process-global histogram bank (armed
+            // by `Roomy::open` before the cluster comes up).
+            AutotuneMode::Spans => {
+                Some(Autotune::with_spans(cfg.workers, hist::global()))
+            }
+        };
         Ok(Cluster {
             disks,
             topology: Topology::new(cfg.workers, cfg.buckets_per_worker),
@@ -198,6 +207,9 @@ impl Cluster {
     {
         let mut sp = self.open_collective(phase);
         let io0 = sp.as_ref().map(|_| self.io_snapshot());
+        // Collective wall-time histogram: disarmed, the only cost is the
+        // one relaxed load inside `enabled()`.
+        let h0 = hist::enabled().then(std::time::Instant::now);
         let out = self.phases.time(phase, || {
             let results: Vec<std::thread::Result<Result<R>>> =
                 std::thread::scope(|scope| {
@@ -227,6 +239,9 @@ impl Cluster {
             }
             Ok(out)
         });
+        if let Some(t0) = h0 {
+            hist::record_collective(t0.elapsed());
+        }
         self.close_collective(&mut sp, io0);
         out
     }
@@ -295,6 +310,7 @@ impl Cluster {
         }
         let mut sp = self.open_collective(phase);
         let io0 = sp.as_ref().map(|_| self.io_snapshot());
+        let h0 = hist::enabled().then(std::time::Instant::now);
         let out = self.phases.time(phase, || {
             self.pool.run_tagged(
                 phase,
@@ -312,6 +328,9 @@ impl Cluster {
                 },
             )
         });
+        if let Some(t0) = h0 {
+            hist::record_collective(t0.elapsed());
+        }
         self.close_collective(&mut sp, io0);
         out
     }

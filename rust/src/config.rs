@@ -126,16 +126,24 @@ pub enum AutotuneMode {
     /// No adaptation (seed behavior). The default.
     #[default]
     Off,
-    /// Adapt effective pipeline depth + hint-ahead between collectives.
+    /// Adapt effective pipeline depth + hint-ahead between collectives
+    /// from the coarse end-of-collective counters.
     On,
+    /// Like `On`, but read the latency *distributions* instead of the
+    /// coarse sums: per-node stall p95s from [`crate::obs::hist`] drive
+    /// depth, and per-node task-duration p95 skew drives the hint-ahead
+    /// distance. Implies arming the histogram bank.
+    Spans,
 }
 
 impl AutotuneMode {
-    /// Parse the `off` / `on` spelling used by the env var and CLI flag.
+    /// Parse the `off` / `on` / `spans` spelling used by the env var and
+    /// CLI flag.
     pub fn parse(s: &str) -> Option<AutotuneMode> {
         Some(match s {
             "off" => AutotuneMode::Off,
             "on" => AutotuneMode::On,
+            "spans" => AutotuneMode::Spans,
             _ => return None,
         })
     }
@@ -145,19 +153,20 @@ impl AutotuneMode {
         match self {
             AutotuneMode::Off => "off",
             AutotuneMode::On => "on",
+            AutotuneMode::Spans => "spans",
         }
     }
 
     /// True when the controller should run.
     pub fn enabled(&self) -> bool {
-        matches!(self, AutotuneMode::On)
+        !matches!(self, AutotuneMode::Off)
     }
 }
 
 impl std::str::FromStr for AutotuneMode {
     type Err = String;
     fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
-        AutotuneMode::parse(s).ok_or_else(|| format!("bad autotune mode {s:?} (off|on)"))
+        AutotuneMode::parse(s).ok_or_else(|| format!("bad autotune mode {s:?} (off|on|spans)"))
     }
 }
 
@@ -286,6 +295,18 @@ pub struct RoomyConfig {
     /// (`tests/determinism.rs` pins this). Env `ROOMY_TRACE=<path>`
     /// overrides, CLI `--trace`.
     pub trace_path: Option<PathBuf>,
+    /// Latency histograms ([`crate::obs::hist`]): `false` (the default)
+    /// leaves the bank disarmed — each record site costs one relaxed
+    /// atomic load and nothing else. `true` arms the process-global
+    /// log2-bucket histograms of pool task durations (per node),
+    /// pipeline reader/writer stalls, and per-collective wall times;
+    /// merged p50/p95/p99 surface in `Roomy::report()` /
+    /// `report_json()`. Recording never touches the data paths: on-disk
+    /// bytes are identical with histograms on or off
+    /// (`tests/determinism.rs` pins this). `autotune = spans` arms the
+    /// bank implicitly. Env `ROOMY_HIST` (any non-empty value)
+    /// overrides, CLI `--hist`.
+    pub hist: bool,
 }
 
 impl RoomyConfig {
@@ -311,6 +332,7 @@ impl RoomyConfig {
             accel: AccelMode::Rust,
             artifacts_dir: PathBuf::from("artifacts"),
             trace_path: env_trace(),
+            hist: env_hist(),
         }
     }
 
@@ -413,6 +435,12 @@ fn env_trace() -> Option<PathBuf> {
     std::env::var("ROOMY_TRACE").ok().filter(|s| !s.is_empty()).map(PathBuf::from)
 }
 
+/// Latency-histogram override (`ROOMY_HIST`; any non-empty value arms the
+/// bank), used by CI to run the whole suite with histograms recording.
+fn env_hist() -> bool {
+    std::env::var("ROOMY_HIST").map(|s| !s.is_empty()).unwrap_or(false)
+}
+
 impl Default for RoomyConfig {
     fn default() -> Self {
         RoomyConfig {
@@ -436,6 +464,7 @@ impl Default for RoomyConfig {
             accel: AccelMode::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
             trace_path: env_trace(),
+            hist: env_hist(),
         }
     }
 }
@@ -529,7 +558,7 @@ mod tests {
 
     #[test]
     fn autotune_parses_and_defaults_off() {
-        for m in [AutotuneMode::Off, AutotuneMode::On] {
+        for m in [AutotuneMode::Off, AutotuneMode::On, AutotuneMode::Spans] {
             assert_eq!(AutotuneMode::parse(m.as_str()), Some(m));
             assert_eq!(m.as_str().parse::<AutotuneMode>().unwrap(), m);
         }
@@ -538,9 +567,19 @@ mod tests {
         assert_eq!(AutotuneMode::default(), AutotuneMode::Off);
         assert!(!AutotuneMode::Off.enabled());
         assert!(AutotuneMode::On.enabled());
+        assert!(AutotuneMode::Spans.enabled());
         let c = RoomyConfig::for_testing("/tmp/x");
         if std::env::var("ROOMY_AUTOTUNE").is_err() {
             assert_eq!(c.autotune, AutotuneMode::Off, "must default off (seed behavior)");
+        }
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn hist_defaults_off() {
+        let c = RoomyConfig::for_testing("/tmp/x");
+        if std::env::var("ROOMY_HIST").is_err() {
+            assert!(!c.hist, "histograms must default off (seed behavior)");
         }
         c.validate().unwrap();
     }

@@ -21,13 +21,15 @@ use roomy::{AccelMode, DiskPolicy, Roomy, RoomyConfig};
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
-        Some("pancake") => cmd_pancake(&args[1..]),
-        Some("rubik") => cmd_rubik(&args[1..]),
-        Some("demo") => cmd_demo(&args[1..]),
-        Some("kernels") => cmd_kernels(&args[1..]),
+        Some("pancake") => cmd_pancake(&args[1..]).map(|_| 0),
+        Some("rubik") => cmd_rubik(&args[1..]).map(|_| 0),
+        Some("demo") => cmd_demo(&args[1..]).map(|_| 0),
+        Some("kernels") => cmd_kernels(&args[1..]).map(|_| 0),
+        Some("analyze") | Some("--analyze") => cmd_analyze(&args[1..]).map(|_| 0),
+        Some("analyze-diff") | Some("--analyze-diff") => cmd_analyze_diff(&args[1..]),
         Some("help") | None => {
             print_help();
-            Ok(())
+            Ok(0)
         }
         Some(other) => {
             eprintln!("unknown subcommand {other:?}\n");
@@ -35,7 +37,6 @@ fn main() {
             std::process::exit(2);
         }
     }
-    .map(|_| 0)
     .unwrap_or_else(|e| {
         eprintln!("error: {e}");
         1
@@ -78,8 +79,11 @@ USAGE:
                                        # its configured value; on adapts
                                        # effective io depth + hint-ahead
                                        # from stall/queue counters between
-                                       # collectives (env ROOMY_AUTOTUNE);
-                                       # on-disk bytes identical either way
+                                       # collectives; spans adapts them
+                                       # from histogram p95s instead
+                                       # (implies --hist; env
+                                       # ROOMY_AUTOTUNE); on-disk bytes
+                                       # identical in every mode
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
                 [--checkpoint-dir DIR] # durable checkpoint after every BFS
@@ -96,9 +100,27 @@ USAGE:
                 [--report-json PATH]   # write the machine-readable metrics
                                        # report (Roomy::report_json) there
                                        # before exit
+                [--hist]               # arm the latency histograms: log2
+                                       # buckets of task / stall /
+                                       # collective durations, p50/p95/p99
+                                       # in the report (env ROOMY_HIST);
+                                       # on-disk bytes identical either way
   roomy rubik   [--workers W] [--root DIR]        # 2x2x2 cube God's number
   roomy demo    [--workers W] [--root DIR] [--trace PATH] [--report-json PATH]
   roomy kernels [--artifacts DIR]
+  roomy analyze <run.json> [--top N] [--out PATH]
+                # offline run analysis over a flushed Chrome trace
+                # (--trace output) or a metrics report (--report-json
+                # output): per-collective critical path, per-node task
+                # p95 skew, reader/writer stall attribution, steal
+                # counts, top-N slow collectives. --out also writes the
+                # analysis as machine-readable JSON.
+  roomy analyze-diff <a.json> <b.json> [--threshold-pct P]
+                # side-by-side comparison of two runs (traces, reports,
+                # analysis JSON, or BENCH_*.json baselines, in any
+                # combination). Time-like metrics that grew more than P%
+                # (default 25) are regressions: exit code 3 when any
+                # fire, 0 otherwise — wire it into CI as a perf gate.
   roomy help"
     );
 }
@@ -156,6 +178,7 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
         bloom_bits_per_key: f.get_parse("bloom", defaults.bloom_bits_per_key)?,
         bloom_approximate: f.has("bloom-approx") || defaults.bloom_approximate,
         autotune: f.get_parse("autotune", defaults.autotune)?,
+        hist: f.has("hist") || defaults.hist,
         ..defaults
     };
     cfg.root = f
@@ -399,6 +422,67 @@ fn cmd_demo(args: &[String]) -> Result<(), String> {
     print!("\n{}", r.report());
     finish_run(&f, &r)?;
     Ok(())
+}
+
+/// Split `args` into leading positional operands (everything before the
+/// first `--flag`) and the remaining flag tail.
+fn split_positional(args: &[String]) -> (Vec<String>, &[String]) {
+    let n = args.iter().take_while(|a| !a.starts_with("--")).count();
+    (args[..n].to_vec(), &args[n..])
+}
+
+fn load_json(path: &str) -> Result<roomy::obs::json::Value, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("cannot read {path:?}: {e}"))?;
+    roomy::obs::json::parse(&text).map_err(|e| format!("{path:?} is not valid JSON: {e}"))
+}
+
+fn cmd_analyze(args: &[String]) -> Result<(), String> {
+    use roomy::obs::analyze::{render_table, Analysis};
+    let (paths, rest) = split_positional(args);
+    let f = Flags::parse(rest)?;
+    let [path] = paths.as_slice() else {
+        return Err("usage: roomy analyze <trace.json|report.json> [--top N] [--out PATH]".into());
+    };
+    let a = Analysis::from_value(&load_json(path)?)?;
+    if a.truncated() {
+        eprintln!(
+            "warning: {path} is a truncated trace ({} events overwritten before the flush); \
+             attribution is a lower bound",
+            a.dropped_events
+        );
+    }
+    let top = f.get_parse("top", 10usize)?;
+    print!("{}", render_table(&a, top));
+    if let Some(out) = f.get("out") {
+        std::fs::write(out, a.to_json())
+            .map_err(|e| format!("cannot write --out {out:?}: {e}"))?;
+        println!("\nanalysis JSON written to {out}");
+    }
+    Ok(())
+}
+
+/// Returns the process exit code: 0 when no time-like metric regressed
+/// past the threshold, 3 when at least one did.
+fn cmd_analyze_diff(args: &[String]) -> Result<i32, String> {
+    use roomy::obs::analyze::{diff, render_diff};
+    let (paths, rest) = split_positional(args);
+    let f = Flags::parse(rest)?;
+    let [a, b] = paths.as_slice() else {
+        return Err(
+            "usage: roomy analyze-diff <a.json> <b.json> [--threshold-pct P] (a = baseline, b = candidate)"
+                .into(),
+        );
+    };
+    let threshold = f.get_parse("threshold-pct", 25.0f64)?;
+    if threshold < 0.0 {
+        return Err("--threshold-pct must be >= 0".into());
+    }
+    let (rows, regressed) = diff(&load_json(a)?, &load_json(b)?, threshold)?;
+    if rows.is_empty() {
+        return Err(format!("no common metrics between {a:?} and {b:?}"));
+    }
+    print!("{}", render_diff(&rows, threshold, regressed));
+    Ok(if regressed { 3 } else { 0 })
 }
 
 fn cmd_kernels(args: &[String]) -> Result<(), String> {

@@ -1048,6 +1048,22 @@ impl std::ops::Add for AllocSnapshot {
     }
 }
 
+/// Format a duration given in nanoseconds with an adaptive unit, for
+/// report lines that range from sub-microsecond stalls to multi-second
+/// collectives.
+pub fn fmt_dur_ns(ns: u64) -> String {
+    let v = ns as f64;
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1} us", v / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1} ms", v / 1e6)
+    } else {
+        format!("{:.2} s", v / 1e9)
+    }
+}
+
 /// Format a byte count with binary units.
 pub fn fmt_bytes(b: u64) -> String {
     const UNITS: &[&str] = &["B", "KiB", "MiB", "GiB", "TiB"];
@@ -1075,6 +1091,15 @@ pub fn fmt_rate(bytes: u64, secs: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fmt_dur_ns_picks_a_unit() {
+        assert_eq!(fmt_dur_ns(0), "0 ns");
+        assert_eq!(fmt_dur_ns(999), "999 ns");
+        assert_eq!(fmt_dur_ns(1_500), "1.5 us");
+        assert_eq!(fmt_dur_ns(2_500_000), "2.5 ms");
+        assert_eq!(fmt_dur_ns(3_250_000_000), "3.25 s");
+    }
 
     #[test]
     fn counters_accumulate() {

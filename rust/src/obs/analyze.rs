@@ -1,0 +1,822 @@
+//! Offline run analysis: turn a flushed Chrome trace and/or a
+//! `report_json` document back into performance *answers*.
+//!
+//! The flight recorder ([`super::trace`]) captures raw spans; this module
+//! is the read side. [`Analysis::from_value`] loads a document parsed by
+//! [`super::json::parse`] — either a Chrome-trace file (`traceEvents`) or
+//! a [`crate::Roomy::report_json`] snapshot (`schema`) — and computes,
+//! per collective:
+//!
+//! - **critical path**: the busiest single worker's task time inside the
+//!   collective's window (the lower bound on wall time any schedule of
+//!   the same tasks could reach);
+//! - **per-node skew**: exact per-node task-duration p95s and their
+//!   max/median ratio (1.0 = perfectly balanced);
+//! - **stall attribution**: read-ahead / write-behind stall time whose
+//!   interval falls inside the collective;
+//! - **steal/locality attribution**: how many of its tasks ran stolen.
+//!
+//! Rows group by collective name (a `rl.sync [frontier]` label stays its
+//! own row), and [`render_table`] prints the top-N by total wall time.
+//! [`Analysis::to_json`] emits the same data machine-readably (the
+//! `"analysis": 1` marker distinguishes it from the inputs).
+//!
+//! [`diff`] compares two runs: any two of {trace, report_json, analysis
+//! JSON, `BENCH_*.json` bench baseline} flatten into one metric
+//! namespace, and time-like metrics (`secs`, `*_ms`, `*_us`) that grew
+//! past a configurable threshold are flagged as regressions — the CLI
+//! (`roomy analyze-diff a b`) exits nonzero when any fire, which is what
+//! makes "faster" a gated claim in CI.
+//!
+//! Truncation is never silent: a trace whose rings overwrote events
+//! carries `droppedEvents` > 0, and both the table and the analysis JSON
+//! say so (attribution is then a lower bound over the surviving window).
+
+use std::collections::BTreeMap;
+
+use super::json::{array, num, Obj, Value};
+
+/// Per-node task statistics inside one collective group.
+#[derive(Clone, Debug, Default)]
+pub struct NodeStat {
+    pub node: u32,
+    pub tasks: u64,
+    pub task_us: f64,
+    /// Exact p95 task duration (µs) — offline we have every surviving
+    /// span, so no bucketing error.
+    pub p95_us: f64,
+    pub max_us: f64,
+}
+
+/// One collective name's aggregate across all its instances in the run.
+#[derive(Clone, Debug, Default)]
+pub struct Group {
+    pub name: String,
+    /// Collective instances (spans) under this name.
+    pub calls: u64,
+    /// Total wall time across instances (µs).
+    pub wall_us: f64,
+    /// Sum over instances of the busiest worker's task time (µs).
+    pub critical_us: f64,
+    pub tasks: u64,
+    pub task_us: f64,
+    pub stolen: u64,
+    pub reader_stall_us: f64,
+    pub writer_stall_us: f64,
+    pub per_node: Vec<NodeStat>,
+}
+
+impl Group {
+    /// max / median of the per-node p95s: 1.0 = balanced, large = one
+    /// node dominates. 0.0 when no node ran tasks.
+    pub fn p95_skew(&self) -> f64 {
+        let mut p95s: Vec<f64> =
+            self.per_node.iter().filter(|n| n.tasks > 0).map(|n| n.p95_us).collect();
+        if p95s.is_empty() {
+            return 0.0;
+        }
+        p95s.sort_by(|a, b| a.total_cmp(b));
+        let med = p95s[p95s.len() / 2].max(f64::MIN_POSITIVE);
+        p95s[p95s.len() - 1] / med
+    }
+
+    /// Wall / critical-path: how much headroom a better schedule has
+    /// (1.0 = the schedule already matched the busiest worker).
+    pub fn stretch(&self) -> f64 {
+        if self.critical_us <= 0.0 { 0.0 } else { self.wall_us / self.critical_us }
+    }
+}
+
+/// Run-wide sums.
+#[derive(Clone, Debug, Default)]
+pub struct Totals {
+    pub collectives: u64,
+    pub wall_us: f64,
+    pub tasks: u64,
+    pub task_us: f64,
+    pub stolen: u64,
+    pub reader_stalls: u64,
+    pub reader_stall_us: f64,
+    pub writer_stalls: u64,
+    pub writer_stall_us: f64,
+}
+
+/// The analyzed run.
+#[derive(Clone, Debug, Default)]
+pub struct Analysis {
+    /// `"trace"` or `"report"` — which document kind produced this.
+    pub source: String,
+    /// Events the recorder overwrote before the flush (0 = complete).
+    pub dropped_events: u64,
+    pub totals: Totals,
+    /// Groups sorted by total wall time, descending.
+    pub groups: Vec<Group>,
+}
+
+impl Analysis {
+    /// True when the source trace lost events to ring overwrites; every
+    /// attribution is then a lower bound over the surviving window.
+    pub fn truncated(&self) -> bool {
+        self.dropped_events > 0
+    }
+
+    /// Analyze a parsed document: a Chrome trace (`traceEvents`), a
+    /// `report_json` snapshot (`schema`), or an already-analyzed document
+    /// (`analysis`, reloaded as-is for diffing).
+    pub fn from_value(v: &Value) -> Result<Analysis, String> {
+        if v.get("traceEvents").is_some() {
+            Ok(Self::from_trace(v))
+        } else if v.get("schema").is_some() {
+            Ok(Self::from_report(v))
+        } else {
+            Err("document is neither a Chrome trace (traceEvents) nor a metrics report (schema)"
+                .into())
+        }
+    }
+
+    fn from_trace(v: &Value) -> Analysis {
+        let dropped =
+            v.get("droppedEvents").and_then(Value::as_f64).unwrap_or(0.0).max(0.0) as u64;
+        let events = v.get("traceEvents").and_then(Value::as_arr).unwrap_or(&[]);
+
+        // One pass over the event soup, split by category.
+        struct Inst {
+            name: String,
+            t0: f64,
+            t1: f64,
+            // accumulated attribution
+            per_worker_us: BTreeMap<u32, f64>,
+            per_node: BTreeMap<u32, Vec<f64>>,
+            tasks: u64,
+            stolen: u64,
+            reader_stall_us: f64,
+            writer_stall_us: f64,
+        }
+        let mut insts: Vec<Inst> = Vec::new();
+        struct TaskEv {
+            name: String,
+            ts: f64,
+            dur: f64,
+            node: u32,
+            tid: u32,
+            stolen: bool,
+        }
+        struct StallEv {
+            reader: bool,
+            ts: f64,
+            dur: f64,
+        }
+        let mut task_evs: Vec<TaskEv> = Vec::new();
+        let mut stall_evs: Vec<StallEv> = Vec::new();
+
+        let fnum = |e: &Value, k: &str| e.get(k).and_then(Value::as_f64).unwrap_or(0.0);
+        for e in events {
+            if e.get("ph").and_then(Value::as_str) != Some("X") {
+                continue;
+            }
+            let cat = e.get("cat").and_then(Value::as_str).unwrap_or("");
+            let name = e.get("name").and_then(Value::as_str).unwrap_or("").to_string();
+            let (ts, dur) = (fnum(e, "ts"), fnum(e, "dur"));
+            match cat {
+                "collective" => insts.push(Inst {
+                    name,
+                    t0: ts,
+                    t1: ts + dur,
+                    per_worker_us: BTreeMap::new(),
+                    per_node: BTreeMap::new(),
+                    tasks: 0,
+                    stolen: 0,
+                    reader_stall_us: 0.0,
+                    writer_stall_us: 0.0,
+                }),
+                "task" => {
+                    let pid = fnum(e, "pid") as u32;
+                    let stolen = e
+                        .get("args")
+                        .map(|a| fnum(a, "stolen") != 0.0)
+                        .unwrap_or(false);
+                    task_evs.push(TaskEv {
+                        name,
+                        ts,
+                        dur,
+                        node: pid.saturating_sub(2),
+                        tid: fnum(e, "tid") as u32,
+                        stolen,
+                    });
+                }
+                "pipeline" => {
+                    let reader = match name.as_str() {
+                        "pipe.read_stall" => true,
+                        "pipe.write_stall" => false,
+                        _ => continue,
+                    };
+                    stall_evs.push(StallEv { reader, ts, dur });
+                }
+                _ => {}
+            }
+        }
+
+        // Attribute each task to the narrowest enclosing collective whose
+        // base name matches (collective spans carry an optional
+        // " [label]" suffix the task spans don't). Dropped events can
+        // orphan tasks; those simply stay unattributed.
+        let base = |n: &str| n.split(" [").next().unwrap_or(n).to_string();
+        let inst_base: Vec<String> = insts.iter().map(|i| base(&i.name)).collect();
+        for t in &task_evs {
+            let mut best: Option<usize> = None;
+            for (i, inst) in insts.iter().enumerate() {
+                if inst_base[i] == t.name && inst.t0 <= t.ts && t.ts < inst.t1 {
+                    let narrower = match best {
+                        Some(b) => (inst.t1 - inst.t0) < (insts[b].t1 - insts[b].t0),
+                        None => true,
+                    };
+                    if narrower {
+                        best = Some(i);
+                    }
+                }
+            }
+            if let Some(i) = best {
+                let inst = &mut insts[i];
+                inst.tasks += 1;
+                inst.stolen += u64::from(t.stolen);
+                *inst.per_worker_us.entry(t.tid).or_insert(0.0) += t.dur;
+                inst.per_node.entry(t.node).or_default().push(t.dur);
+            }
+        }
+        // Stalls carry no collective name — attribute by time window.
+        for s in &stall_evs {
+            let mid = s.ts + s.dur / 2.0;
+            let mut best: Option<usize> = None;
+            for (i, inst) in insts.iter().enumerate() {
+                if inst.t0 <= mid && mid < inst.t1 {
+                    let narrower = match best {
+                        Some(b) => (inst.t1 - inst.t0) < (insts[b].t1 - insts[b].t0),
+                        None => true,
+                    };
+                    if narrower {
+                        best = Some(i);
+                    }
+                }
+            }
+            if let Some(i) = best {
+                if s.reader {
+                    insts[i].reader_stall_us += s.dur;
+                } else {
+                    insts[i].writer_stall_us += s.dur;
+                }
+            }
+        }
+
+        // Fold instances into name groups.
+        let mut groups: BTreeMap<String, (Group, BTreeMap<u32, Vec<f64>>)> = BTreeMap::new();
+        let mut totals = Totals::default();
+        for inst in &insts {
+            totals.collectives += 1;
+            totals.wall_us += inst.t1 - inst.t0;
+            totals.tasks += inst.tasks;
+            totals.stolen += inst.stolen;
+            let entry = groups
+                .entry(inst.name.clone())
+                .or_insert_with(|| {
+                    (Group { name: inst.name.clone(), ..Group::default() }, BTreeMap::new())
+                });
+            let (g, node_durs) = entry;
+            g.calls += 1;
+            g.wall_us += inst.t1 - inst.t0;
+            g.critical_us +=
+                inst.per_worker_us.values().fold(0.0f64, |m, &v| m.max(v));
+            g.tasks += inst.tasks;
+            g.stolen += inst.stolen;
+            g.reader_stall_us += inst.reader_stall_us;
+            g.writer_stall_us += inst.writer_stall_us;
+            for (&node, durs) in &inst.per_node {
+                let acc = node_durs.entry(node).or_default();
+                acc.extend_from_slice(durs);
+                g.task_us += durs.iter().sum::<f64>();
+            }
+        }
+        totals.task_us = groups.values().map(|(g, _)| g.task_us).sum();
+        // Totals cover *every* stall, attributed or not (a stall between
+        // collectives is still time the run lost); per-group rows only
+        // carry what fell inside their windows.
+        totals.reader_stalls = stall_evs.iter().filter(|s| s.reader).count() as u64;
+        totals.writer_stalls = stall_evs.iter().filter(|s| !s.reader).count() as u64;
+        totals.reader_stall_us = stall_evs.iter().filter(|s| s.reader).map(|s| s.dur).sum();
+        totals.writer_stall_us = stall_evs.iter().filter(|s| !s.reader).map(|s| s.dur).sum();
+
+        let mut out: Vec<Group> = groups
+            .into_values()
+            .map(|(mut g, node_durs)| {
+                g.per_node = node_durs
+                    .into_iter()
+                    .map(|(node, mut durs)| {
+                        durs.sort_by(|a, b| a.total_cmp(b));
+                        let rank =
+                            ((0.95 * durs.len() as f64).ceil() as usize).clamp(1, durs.len());
+                        NodeStat {
+                            node,
+                            tasks: durs.len() as u64,
+                            task_us: durs.iter().sum(),
+                            p95_us: durs[rank - 1],
+                            max_us: *durs.last().unwrap(),
+                        }
+                    })
+                    .collect();
+                g
+            })
+            .collect();
+        out.sort_by(|a, b| b.wall_us.total_cmp(&a.wall_us));
+        Analysis { source: "trace".into(), dropped_events: dropped, totals, groups: out }
+    }
+
+    /// Reduced analysis from a `report_json` document: phase rows become
+    /// groups (wall only — the counters carry no per-task spans), stall
+    /// totals come from the pipeline section, steals from the pool.
+    fn from_report(v: &Value) -> Analysis {
+        let mut a = Analysis { source: "report".into(), ..Analysis::default() };
+        a.dropped_events = v
+            .get("trace")
+            .and_then(|t| t.get("dropped_events"))
+            .and_then(Value::as_f64)
+            .unwrap_or(0.0) as u64;
+        if let Some(rows) = v.get("phases").and_then(Value::as_arr) {
+            for r in rows {
+                let name = r.get("name").and_then(Value::as_str).unwrap_or("?").to_string();
+                let wall_us =
+                    r.get("total_ms").and_then(Value::as_f64).unwrap_or(0.0) * 1e3;
+                let calls = r.get("calls").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+                a.totals.collectives += calls;
+                a.totals.wall_us += wall_us;
+                a.groups.push(Group { name, calls, wall_us, ..Group::default() });
+            }
+        }
+        if let Some(p) = v.get("pipeline") {
+            a.totals.reader_stall_us =
+                p.get("reader_wait_ms").and_then(Value::as_f64).unwrap_or(0.0) * 1e3;
+            a.totals.writer_stall_us =
+                p.get("writer_wait_ms").and_then(Value::as_f64).unwrap_or(0.0) * 1e3;
+        }
+        if let Some(p) = v.get("pool") {
+            a.totals.stolen = p.get("steals").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+            a.totals.tasks = a.totals.stolen
+                + p.get("locality_hits").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+        }
+        a.groups.sort_by(|x, y| y.wall_us.total_cmp(&x.wall_us));
+        a
+    }
+
+    /// Machine-readable form (marker `"analysis": 1`).
+    pub fn to_json(&self) -> String {
+        let mut root = Obj::new();
+        root.u64("analysis", 1);
+        root.str("source", &self.source);
+        root.bool("truncated", self.truncated());
+        root.u64("dropped_events", self.dropped_events);
+
+        let t = &self.totals;
+        let mut o = Obj::new();
+        o.u64("collectives", t.collectives);
+        o.f64("wall_ms", t.wall_us / 1e3);
+        o.u64("tasks", t.tasks);
+        o.f64("task_ms", t.task_us / 1e3);
+        o.u64("stolen", t.stolen);
+        o.f64("steal_rate", if t.tasks == 0 { 0.0 } else { t.stolen as f64 / t.tasks as f64 });
+        o.u64("reader_stalls", t.reader_stalls);
+        o.f64("reader_stall_ms", t.reader_stall_us / 1e3);
+        o.u64("writer_stalls", t.writer_stalls);
+        o.f64("writer_stall_ms", t.writer_stall_us / 1e3);
+        root.raw("totals", &o.build());
+
+        let rows: Vec<String> = self
+            .groups
+            .iter()
+            .map(|g| {
+                let mut r = Obj::new();
+                r.str("name", &g.name);
+                r.u64("calls", g.calls);
+                r.f64("wall_ms", g.wall_us / 1e3);
+                r.f64("critical_path_ms", g.critical_us / 1e3);
+                r.f64("stretch", g.stretch());
+                r.u64("tasks", g.tasks);
+                r.f64("task_ms", g.task_us / 1e3);
+                r.u64("stolen", g.stolen);
+                r.f64("reader_stall_ms", g.reader_stall_us / 1e3);
+                r.f64("writer_stall_ms", g.writer_stall_us / 1e3);
+                r.f64("p95_skew", g.p95_skew());
+                let nodes: Vec<String> = g
+                    .per_node
+                    .iter()
+                    .map(|n| {
+                        let mut o = Obj::new();
+                        o.u64("node", n.node as u64);
+                        o.u64("tasks", n.tasks);
+                        o.f64("task_ms", n.task_us / 1e3);
+                        o.f64("p95_us", n.p95_us);
+                        o.f64("max_us", n.max_us);
+                        o.build()
+                    })
+                    .collect();
+                r.raw("per_node", &array(&nodes));
+                r.build()
+            })
+            .collect();
+        root.raw("collectives", &array(&rows));
+        root.build()
+    }
+}
+
+/// The human attribution table: top-`top_n` collective groups by wall
+/// time, plus run totals and a truncation warning when events were lost.
+pub fn render_table(a: &Analysis, top_n: usize) -> String {
+    let mut s = String::new();
+    if a.truncated() {
+        s.push_str(&format!(
+            "WARNING: trace is truncated ({} events overwritten in the rings before the \
+             flush); every attribution below is a lower bound over the surviving window\n\n",
+            a.dropped_events
+        ));
+    }
+    let t = &a.totals;
+    s.push_str(&format!(
+        "source: {} | {} collectives, {:.1} ms wall | {} tasks ({} stolen, {:.0}% local) | \
+         stalls: read {:.1} ms, write {:.1} ms\n\n",
+        a.source,
+        t.collectives,
+        t.wall_us / 1e3,
+        t.tasks,
+        t.stolen,
+        if t.tasks == 0 { 100.0 } else { 100.0 * (t.tasks - t.stolen) as f64 / t.tasks as f64 },
+        t.reader_stall_us / 1e3,
+        t.writer_stall_us / 1e3,
+    ));
+    s.push_str(&format!(
+        "{:<34} {:>5} {:>9} {:>9} {:>6} {:>6} {:>6} {:>8} {:>8} {:>7}\n",
+        "collective", "calls", "wall_ms", "crit_ms", "strch", "tasks", "stolen", "rstl_ms",
+        "wstl_ms", "p95skew"
+    ));
+    for g in a.groups.iter().take(top_n) {
+        let name: String = if g.name.len() > 34 {
+            format!("{}…", &g.name[..33.min(g.name.len())])
+        } else {
+            g.name.clone()
+        };
+        s.push_str(&format!(
+            "{:<34} {:>5} {:>9.2} {:>9.2} {:>6.2} {:>6} {:>6} {:>8.2} {:>8.2} {:>7.2}\n",
+            name,
+            g.calls,
+            g.wall_us / 1e3,
+            g.critical_us / 1e3,
+            g.stretch(),
+            g.tasks,
+            g.stolen,
+            g.reader_stall_us / 1e3,
+            g.writer_stall_us / 1e3,
+            g.p95_skew(),
+        ));
+    }
+    if a.groups.len() > top_n {
+        s.push_str(&format!(
+            "… {} more groups (raise --top to see them)\n",
+            a.groups.len() - top_n
+        ));
+    }
+    // Per-node skew detail for the heaviest group that actually ran
+    // tasks — the "which node is the problem" answer.
+    if let Some(g) = a.groups.iter().find(|g| !g.per_node.is_empty()) {
+        s.push_str(&format!("\nper-node task p95 for {:?}:\n", g.name));
+        for n in &g.per_node {
+            s.push_str(&format!(
+                "  node{:<3} {:>6} tasks  {:>10.2} ms total  p95 {:>9.1} us  max {:>9.1} us\n",
+                n.node, n.tasks, n.task_us / 1e3, n.p95_us, n.max_us
+            ));
+        }
+    }
+    s
+}
+
+// ----------------------------------------------------------------------
+// Run diffing
+// ----------------------------------------------------------------------
+
+/// One compared metric.
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub key: String,
+    pub a: f64,
+    pub b: f64,
+    /// (b - a) / a × 100; 0 when a == 0.
+    pub delta_pct: f64,
+    /// Time-like metric that grew past the threshold.
+    pub regressed: bool,
+}
+
+/// Is a grown value of this metric bad? Only time-like metrics gate the
+/// diff; throughputs, rates and byte counts are reported but never fail
+/// a run (their direction is workload-dependent).
+fn time_like(key: &str) -> bool {
+    key.ends_with("secs")
+        || key.ends_with("_ms")
+        || key.ends_with("_us")
+        || key.ends_with("_ns")
+}
+
+/// Flatten any supported document into one `name → value` metric map.
+///
+/// - bench baseline (`samples`): `bench/<group>/<metric>`
+/// - analysis (`analysis`): `collective/<name>/{wall_ms,critical_path_ms,
+///   reader_stall_ms,writer_stall_ms}` + `total/...`
+/// - trace (`traceEvents`): analyzed first, then as above
+/// - report (`schema`): phases, pipeline waits, io bytes
+pub fn flatten_metrics(v: &Value) -> Result<BTreeMap<String, f64>, String> {
+    let mut m = BTreeMap::new();
+    if let Some(samples) = v.get("samples").and_then(Value::as_arr) {
+        for s in samples {
+            let g = s.get("group").and_then(Value::as_str).unwrap_or("?");
+            let k = s.get("metric").and_then(Value::as_str).unwrap_or("?");
+            if let Some(val) = s.get("value").and_then(Value::as_f64) {
+                m.insert(format!("bench/{g}/{k}"), val);
+            }
+        }
+        return Ok(m);
+    }
+    let analysis_doc;
+    let a = if v.get("analysis").is_some() {
+        v
+    } else if v.get("traceEvents").is_some() || v.get("schema").is_some() {
+        analysis_doc = super::json::parse(&Analysis::from_value(v)?.to_json())
+            .map_err(|e| format!("internal: analysis JSON does not reparse: {e}"))?;
+        // Also surface raw report counters alongside the phase analysis.
+        if let Some(io) = v.get("io") {
+            for k in ["bytes_read", "bytes_written"] {
+                if let Some(val) = io.get(k).and_then(Value::as_f64) {
+                    m.insert(format!("io/{k}"), val);
+                }
+            }
+        }
+        &analysis_doc
+    } else {
+        return Err(
+            "unsupported document: expected traceEvents, schema, analysis, or samples".into()
+        );
+    };
+    if let Some(t) = a.get("totals") {
+        for k in ["wall_ms", "task_ms", "reader_stall_ms", "writer_stall_ms"] {
+            if let Some(val) = t.get(k).and_then(Value::as_f64) {
+                m.insert(format!("total/{k}"), val);
+            }
+        }
+        for k in ["collectives", "tasks", "stolen"] {
+            if let Some(val) = t.get(k).and_then(Value::as_f64) {
+                m.insert(format!("total/{k}"), val);
+            }
+        }
+    }
+    if let Some(rows) = a.get("collectives").and_then(Value::as_arr) {
+        for r in rows {
+            let name = r.get("name").and_then(Value::as_str).unwrap_or("?");
+            for k in ["wall_ms", "critical_path_ms", "reader_stall_ms", "writer_stall_ms"] {
+                if let Some(val) = r.get(k).and_then(Value::as_f64) {
+                    m.insert(format!("collective/{name}/{k}"), val);
+                }
+            }
+        }
+    }
+    Ok(m)
+}
+
+/// Compare two flattened runs. A row regresses when it is time-like and
+/// `b > a × (1 + threshold_pct/100)` (with a tiny absolute floor so
+/// zero-vs-epsilon noise never fires). Returns all common rows sorted by
+/// |delta|, plus the regression verdict.
+pub fn diff(
+    a: &Value,
+    b: &Value,
+    threshold_pct: f64,
+) -> Result<(Vec<DiffRow>, bool), String> {
+    let ma = flatten_metrics(a)?;
+    let mb = flatten_metrics(b)?;
+    let mut rows = Vec::new();
+    let mut regressed = false;
+    for (k, &va) in &ma {
+        let Some(&vb) = mb.get(k) else { continue };
+        let delta_pct = if va == 0.0 {
+            if vb == 0.0 { 0.0 } else { 100.0 }
+        } else {
+            (vb - va) / va * 100.0
+        };
+        let bad = time_like(k)
+            && vb > va * (1.0 + threshold_pct / 100.0)
+            && (vb - va) > 1e-6;
+        regressed |= bad;
+        rows.push(DiffRow { key: k.clone(), a: va, b: vb, delta_pct, regressed: bad });
+    }
+    rows.sort_by(|x, y| y.delta_pct.abs().total_cmp(&x.delta_pct.abs()));
+    Ok((rows, regressed))
+}
+
+/// Human side-by-side diff table.
+pub fn render_diff(rows: &[DiffRow], threshold_pct: f64, regressed: bool) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<52} {:>12} {:>12} {:>9}\n",
+        "metric", "a", "b", "delta"
+    ));
+    for r in rows {
+        let key: String = if r.key.len() > 52 {
+            format!("{}…", &r.key[..51.min(r.key.len())])
+        } else {
+            r.key.clone()
+        };
+        s.push_str(&format!(
+            "{:<52} {:>12.4} {:>12.4} {:>+8.1}%{}\n",
+            key,
+            r.a,
+            r.b,
+            r.delta_pct,
+            if r.regressed { "  << REGRESSION" } else { "" }
+        ));
+    }
+    s.push_str(&format!(
+        "\n{} metrics compared, threshold +{threshold_pct:.0}% on time-like metrics: {}\n",
+        rows.len(),
+        if regressed { "REGRESSED" } else { "ok" }
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::json::parse;
+
+    /// A hand-built two-collective trace: `rl.sync [s]` with tasks on two
+    /// nodes (one slow, stolen work, a reader stall inside), and a fast
+    /// `ra.map`. Matches the flusher's event shape exactly.
+    fn synthetic_trace() -> String {
+        let ev = |name: &str, cat: &str, ts: f64, dur: f64, pid: u32, tid: u32, args: &str| {
+            format!(
+                r#"{{"name":"{name}","cat":"{cat}","ph":"X","dur":{dur},"ts":{ts},"pid":{pid},"tid":{tid},"args":{args}}}"#
+            )
+        };
+        let events = [
+            // collective 1: wall 1000us, window [0, 1000)
+            ev("rl.sync [s]", "collective", 0.0, 1000.0, 1, 1000, "{}"),
+            // node0 (pid 2) tasks on worker0 (tid 2): 100 + 200 us
+            ev("rl.sync", "task", 10.0, 100.0, 2, 2, r#"{"bucket":0,"stolen":0}"#),
+            ev("rl.sync", "task", 120.0, 200.0, 2, 2, r#"{"bucket":1,"stolen":0}"#),
+            // node1 (pid 3) tasks: 600us on worker1, 150us stolen on worker0
+            ev("rl.sync", "task", 10.0, 600.0, 3, 3, r#"{"bucket":2,"stolen":0}"#),
+            ev("rl.sync", "task", 330.0, 150.0, 3, 2, r#"{"bucket":3,"stolen":1}"#),
+            // a reader stall inside the window
+            ev("pipe.read_stall", "pipeline", 400.0, 80.0, 3, 3, "{}"),
+            // collective 2: wall 300us, window [2000, 2300), no tasks recorded
+            ev("ra.map", "collective", 2000.0, 300.0, 1, 1000, "{}"),
+            // a writer stall outside both windows: stays unattributed but
+            // still counts in totals
+            ev("pipe.write_stall", "pipeline", 5000.0, 40.0, 2, 2, "{}"),
+        ];
+        format!(
+            r#"{{"displayTimeUnit":"ms","droppedEvents":0,"traceEvents":[{}]}}"#,
+            events.join(",")
+        )
+    }
+
+    #[test]
+    fn attributes_critical_path_skew_and_stalls() {
+        let v = parse(&synthetic_trace()).unwrap();
+        let a = Analysis::from_value(&v).unwrap();
+        assert_eq!(a.source, "trace");
+        assert!(!a.truncated());
+        assert_eq!(a.totals.collectives, 2);
+        assert_eq!(a.totals.tasks, 4);
+        assert_eq!(a.totals.stolen, 1);
+        assert_eq!(a.totals.reader_stalls, 1);
+        assert!((a.totals.writer_stall_us - 40.0).abs() < 1e-9, "totals count all stalls");
+
+        // Heaviest group first.
+        let g = &a.groups[0];
+        assert_eq!(g.name, "rl.sync [s]");
+        assert_eq!(g.calls, 1);
+        assert!((g.wall_us - 1000.0).abs() < 1e-9);
+        // worker0 (tid 2): 100+200+150 = 450; worker1 (tid 3): 600 → crit 600
+        assert!((g.critical_us - 600.0).abs() < 1e-9, "critical path is the busiest worker");
+        assert_eq!(g.tasks, 4);
+        assert_eq!(g.stolen, 1);
+        assert!((g.reader_stall_us - 80.0).abs() < 1e-9, "stall inside the window attributes");
+        assert!((g.writer_stall_us - 0.0).abs() < 1e-9, "stall outside stays out");
+
+        // Per-node: node0 p95 = 200 (durs 100,200), node1 p95 = 600
+        // (durs 150,600) → skew 600/median. medians: [200,600] → med 600?
+        // sorted p95s = [200, 600], len 2, med = p95s[1] = 600, max = 600
+        // → skew 1.0? No: p95s[len/2] = p95s[1] = 600 → 600/600 = 1.0.
+        let n0 = g.per_node.iter().find(|n| n.node == 0).unwrap();
+        let n1 = g.per_node.iter().find(|n| n.node == 1).unwrap();
+        assert_eq!(n0.tasks, 2);
+        assert!((n0.p95_us - 200.0).abs() < 1e-9);
+        assert_eq!(n1.tasks, 2);
+        assert!((n1.p95_us - 600.0).abs() < 1e-9);
+        assert!(g.p95_skew() >= 1.0);
+        assert!(g.stretch() > 1.0, "wall 1000 vs crit 600");
+
+        // The analysis JSON round-trips and carries the marker.
+        let j = parse(&a.to_json()).expect("analysis JSON must parse");
+        assert_eq!(j.get("analysis").and_then(Value::as_f64), Some(1.0));
+        let rows = j.get("collectives").and_then(Value::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").and_then(Value::as_str), Some("rl.sync [s]"));
+        assert!(rows[0].get("per_node").and_then(Value::as_arr).unwrap().len() == 2);
+
+        // Human table mentions the headline numbers.
+        let table = render_table(&a, 10);
+        assert!(table.contains("rl.sync [s]"), "{table}");
+        assert!(table.contains("per-node task p95"), "{table}");
+        assert!(!table.contains("WARNING"), "{table}");
+    }
+
+    #[test]
+    fn truncated_traces_warn() {
+        let t = synthetic_trace().replace("\"droppedEvents\":0", "\"droppedEvents\":123");
+        let a = Analysis::from_value(&parse(&t).unwrap()).unwrap();
+        assert!(a.truncated());
+        assert_eq!(a.dropped_events, 123);
+        assert!(render_table(&a, 10).contains("WARNING"));
+        let j = parse(&a.to_json()).unwrap();
+        assert_eq!(j.get("truncated"), Some(&Value::Bool(true)));
+    }
+
+    #[test]
+    fn report_documents_analyze_too() {
+        let doc = r#"{"schema":1,
+            "pipeline":{"reader_wait_ms":12.5,"writer_wait_ms":2.5},
+            "pool":{"steals":3,"locality_hits":17},
+            "phases":[{"name":"rl.sync","total_ms":40.0,"calls":4},
+                      {"name":"ra.map","total_ms":10.0,"calls":1}],
+            "trace":{"enabled":false,"dropped_events":0}}"#;
+        let a = Analysis::from_value(&parse(doc).unwrap()).unwrap();
+        assert_eq!(a.source, "report");
+        assert_eq!(a.totals.collectives, 5);
+        assert_eq!(a.totals.tasks, 20);
+        assert_eq!(a.totals.stolen, 3);
+        assert!((a.totals.reader_stall_us - 12_500.0).abs() < 1e-6);
+        assert_eq!(a.groups[0].name, "rl.sync");
+    }
+
+    #[test]
+    fn diff_is_zero_on_identical_and_fires_on_regression() {
+        let v = parse(&synthetic_trace()).unwrap();
+        let (rows, regressed) = diff(&v, &v, 50.0).unwrap();
+        assert!(!rows.is_empty());
+        assert!(!regressed, "identical runs must never regress");
+        assert!(rows.iter().all(|r| r.delta_pct == 0.0));
+
+        // Inject a 10x slowdown into the heavy collective.
+        let slow = synthetic_trace().replace("\"dur\":1000,", "\"dur\":10000,");
+        assert_ne!(slow, synthetic_trace());
+        let vb = parse(&slow).unwrap();
+        let (rows, regressed) = diff(&v, &vb, 50.0).unwrap();
+        assert!(regressed, "10x wall growth past a 50% threshold must regress");
+        let hit = rows
+            .iter()
+            .find(|r| r.key == "collective/rl.sync [s]/wall_ms")
+            .expect("per-collective wall metric");
+        assert!(hit.regressed);
+        assert!(hit.delta_pct > 800.0);
+        assert!(render_diff(&rows, 50.0, regressed).contains("REGRESSION"));
+
+        // The same regression under a generous-enough threshold passes.
+        let (_, regressed) = diff(&v, &vb, 100_000.0).unwrap();
+        assert!(!regressed);
+    }
+
+    #[test]
+    fn bench_baselines_flatten_and_diff() {
+        let a = parse(
+            r#"{"bench":"structures","scale":1,"samples":[
+                {"group":"map n=10","metric":"secs","value":0.5},
+                {"group":"map n=10","metric":"mb_moved","value":100.0}]}"#,
+        )
+        .unwrap();
+        let b = parse(
+            r#"{"bench":"structures","scale":1,"samples":[
+                {"group":"map n=10","metric":"secs","value":2.0},
+                {"group":"map n=10","metric":"mb_moved","value":100.0}]}"#,
+        )
+        .unwrap();
+        let m = flatten_metrics(&a).unwrap();
+        assert_eq!(m.get("bench/map n=10/secs"), Some(&0.5));
+        let (rows, regressed) = diff(&a, &b, 50.0).unwrap();
+        assert!(regressed, "4x secs past 50% must regress");
+        assert!(rows.iter().any(|r| r.key.ends_with("/secs") && r.regressed));
+        // mb_moved is not time-like: identical here, but even growth
+        // would only be reported, never gated.
+        let (_, regressed) = diff(&a, &b, 500.0).unwrap();
+        assert!(!regressed, "4x is under a 500% threshold");
+    }
+
+    #[test]
+    fn unsupported_documents_error() {
+        let v = parse(r#"{"hello":1}"#).unwrap();
+        assert!(Analysis::from_value(&v).is_err());
+        assert!(flatten_metrics(&v).is_err());
+    }
+}

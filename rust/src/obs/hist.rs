@@ -1,0 +1,451 @@
+//! Latency histograms: fixed-size log2-bucket duration distributions.
+//!
+//! The flight recorder ([`super::trace`]) keeps the most recent *window*
+//! of spans; histograms keep the whole run's *distribution* in constant
+//! space. Each histogram is a fixed array of [`BUCKETS`] atomic counters
+//! — bucket 0 counts zero-length durations, bucket `i ≥ 1` counts
+//! durations in `[2^(i-1), 2^i)` nanoseconds — plus one total-ns counter
+//! for means. Recording is lock-free (two relaxed `fetch_add`s) and
+//! allocation-free; like tracing, every site is off-by-default behind one
+//! relaxed atomic load ([`enabled`]), so the counters-only configuration
+//! pays ~zero cost and the recorder can never influence what collectives
+//! compute. `tests/determinism.rs` pins byte-identical instance roots
+//! with histograms on and off.
+//!
+//! Three duration domains are recorded per node, one per cluster:
+//!
+//! - [`Domain::Task`] — pool bucket-task wall time, keyed by the owning
+//!   node (the per-node p95 here is the tuner's task-skew signal).
+//! - [`Domain::ReaderStall`] / [`Domain::WriterStall`] — time a
+//!   collective spent blocked on the per-node I/O lanes.
+//! - [`Domain::Collective`] — whole-collective wall time (cluster scope).
+//!
+//! Snapshots are plain arrays: they merge by element-wise addition (so
+//! per-node snapshots fold into cluster totals and round deltas are
+//! subtraction), and percentiles come from the bucket boundaries — a
+//! reported pNN is the *upper bound* of the bucket the NNth percentile
+//! falls in, i.e. exact-to-within-2× by construction. Arming
+//! (`ROOMY_HIST=on` / `--hist` / `RoomyConfig::hist`, and implicitly
+//! `--autotune spans`) is process-global and sticky, mirroring the trace
+//! recorder.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// Log2 buckets per histogram. Bucket 0 holds zero-length durations;
+/// bucket `i ≥ 1` holds `[2^(i-1), 2^i)` ns. 43 doubling buckets reach
+/// `2^42` ns ≈ 73 minutes — beyond any single task/stall/collective —
+/// and everything longer clamps into the last bucket.
+pub const BUCKETS: usize = 44;
+
+/// Per-node histogram slots. Nodes beyond this clamp into the last slot
+/// (the report stays correct in aggregate; per-node attribution saturates
+/// like the trace recorder's 32 worker tracks).
+pub const MAX_NODES: usize = 64;
+
+/// What a recorded duration measures. Each domain keeps [`MAX_NODES`]
+/// per-node histograms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// One pool bucket task, keyed by the owning node.
+    Task,
+    /// Pipeline consumer blocked on the read-ahead lane.
+    ReaderStall,
+    /// Pipeline producer blocked on a write-behind buffer.
+    WriterStall,
+    /// One whole collective (cluster scope; recorded as node 0).
+    Collective,
+}
+
+/// All domains, in storage order.
+pub const DOMAINS: [Domain; 4] =
+    [Domain::Task, Domain::ReaderStall, Domain::WriterStall, Domain::Collective];
+
+impl Domain {
+    fn index(self) -> usize {
+        match self {
+            Domain::Task => 0,
+            Domain::ReaderStall => 1,
+            Domain::WriterStall => 2,
+            Domain::Collective => 3,
+        }
+    }
+
+    /// Stable key used in `report_json` / analysis documents.
+    pub fn key(self) -> &'static str {
+        match self {
+            Domain::Task => "task",
+            Domain::ReaderStall => "reader_stall",
+            Domain::WriterStall => "writer_stall",
+            Domain::Collective => "collective",
+        }
+    }
+}
+
+/// Bucket index for a duration of `ns` nanoseconds: 0 for 0, else
+/// `floor(log2(ns)) + 1`, clamped to the last bucket.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Smallest duration (ns) counted by bucket `i`.
+pub fn bucket_lower(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        _ => 1u64 << (i - 1),
+    }
+}
+
+/// Largest duration (ns) counted by bucket `i` (inclusive). The last
+/// bucket clamps, so its upper bound is `u64::MAX`.
+pub fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i == BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// A bank of lock-free histograms: one per (domain, node). All storage is
+/// allocated up front; recording is two relaxed `fetch_add`s.
+#[derive(Debug)]
+pub struct Hist {
+    /// `DOMAINS.len() × MAX_NODES × BUCKETS` counters, row-major.
+    counts: Vec<AtomicU64>,
+    /// `DOMAINS.len() × MAX_NODES` total-ns accumulators (for means).
+    sums: Vec<AtomicU64>,
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist {
+            counts: (0..DOMAINS.len() * MAX_NODES * BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sums: (0..DOMAINS.len() * MAX_NODES).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn slot(domain: Domain, node: usize) -> usize {
+        domain.index() * MAX_NODES + node.min(MAX_NODES - 1)
+    }
+
+    /// Record one duration. Lock-free, allocation-free.
+    pub fn record(&self, domain: Domain, node: usize, dur: Duration) {
+        let ns = dur.as_nanos().min(u128::from(u64::MAX)) as u64;
+        let slot = Self::slot(domain, node);
+        self.counts[slot * BUCKETS + bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sums[slot].fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of one (domain, node) histogram.
+    pub fn snapshot(&self, domain: Domain, node: usize) -> HistSnapshot {
+        let slot = Self::slot(domain, node);
+        let mut s = HistSnapshot::default();
+        for (i, b) in s.buckets.iter_mut().enumerate() {
+            *b = self.counts[slot * BUCKETS + i].load(Ordering::Relaxed);
+        }
+        s.total_ns = self.sums[slot].load(Ordering::Relaxed);
+        s
+    }
+
+    /// One snapshot per node in `0..nodes` for a domain.
+    pub fn per_node(&self, domain: Domain, nodes: usize) -> Vec<HistSnapshot> {
+        (0..nodes.min(MAX_NODES)).map(|n| self.snapshot(domain, n)).collect()
+    }
+
+    /// All nodes of a domain merged into one distribution.
+    pub fn merged(&self, domain: Domain) -> HistSnapshot {
+        let mut acc = HistSnapshot::default();
+        for n in 0..MAX_NODES {
+            acc.merge(&self.snapshot(domain, n));
+        }
+        acc
+    }
+
+    /// Zero every counter (bench harness support, tests).
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        for s in &self.sums {
+            s.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+/// Plain copy of one histogram. Merging is element-wise addition (and is
+/// therefore associative and commutative — pinned by tests); round deltas
+/// are element-wise saturating subtraction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub total_ns: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; BUCKETS], total_ns: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Recorded durations in this snapshot.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Mean duration in ns (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        let n = self.count();
+        if n == 0 { 0 } else { self.total_ns / n }
+    }
+
+    /// Fold `other` into `self` (element-wise addition).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.total_ns += other.total_ns;
+    }
+
+    /// What grew since `earlier` (element-wise saturating subtraction —
+    /// safe across a counter reset, which just reads as an empty delta).
+    pub fn delta(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut d = HistSnapshot::default();
+        for (i, (a, b)) in self.buckets.iter().zip(earlier.buckets.iter()).enumerate() {
+            d.buckets[i] = a.saturating_sub(*b);
+        }
+        d.total_ns = self.total_ns.saturating_sub(earlier.total_ns);
+        d
+    }
+
+    /// The `q`-quantile (`0.0 < q <= 1.0`) in ns: the upper bound of the
+    /// bucket the quantile rank falls in (so the true value is within 2×
+    /// below the reported one). Returns 0 for an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        // ceil(q * n) with q clamped into (0, 1]: the rank of the
+        // percentile observation, 1-based.
+        let q = q.clamp(f64::MIN_POSITIVE, 1.0);
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Process-global instance + one-relaxed-load gate
+// ----------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<Arc<Hist>> = OnceLock::new();
+
+/// Is recording armed? One relaxed load — the entire cost of every
+/// instrumentation site when histograms are off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm the process-global histograms. Idempotent and sticky, mirroring
+/// the trace recorder: rings are shared by every instance in the process.
+pub fn arm() {
+    let _ = global();
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// The process-global histogram bank (allocated on first use).
+pub fn global() -> Arc<Hist> {
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(Hist::new())))
+}
+
+/// Record one duration into the global bank. The disarmed cost is the
+/// single relaxed load in [`enabled`].
+#[inline]
+pub fn record(domain: Domain, node: usize, dur: Duration) {
+    if !enabled() {
+        return;
+    }
+    global().record(domain, node, dur);
+}
+
+/// Record one collective wall time (cluster scope).
+#[inline]
+pub fn record_collective(dur: Duration) {
+    if !enabled() {
+        return;
+    }
+    global().record(Domain::Collective, 0, dur);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ns(n: u64) -> Duration {
+        Duration::from_nanos(n)
+    }
+
+    /// The log2 bucket boundaries, pinned exactly: bucket 0 = {0},
+    /// bucket i = [2^(i-1), 2^i) for i ≥ 1, last bucket clamps.
+    #[test]
+    fn bucket_boundaries_are_pinned() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        for i in 1..BUCKETS - 1 {
+            // Every bucket's own bounds map back into it, and the bound
+            // arithmetic tiles the u64 range with no gaps or overlaps.
+            assert_eq!(bucket_of(bucket_lower(i)), i, "lower bound of bucket {i}");
+            assert_eq!(bucket_of(bucket_upper(i)), i, "upper bound of bucket {i}");
+            assert_eq!(bucket_lower(i + 1), bucket_upper(i).wrapping_add(1));
+        }
+        assert_eq!(bucket_upper(BUCKETS - 1), u64::MAX);
+    }
+
+    /// Merging snapshots is associative and commutative — the property
+    /// that makes per-node → cluster folds and cross-run sums exact.
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let h = Hist::new();
+        for (node, base) in [(0usize, 10u64), (1, 5_000), (2, 9_999_999)] {
+            for k in 0..50u64 {
+                h.record(Domain::Task, node, ns(base + k * base / 10));
+            }
+        }
+        let a = h.snapshot(Domain::Task, 0);
+        let b = h.snapshot(Domain::Task, 1);
+        let c = h.snapshot(Domain::Task, 2);
+
+        let mut ab_c = a;
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut a_bc = b;
+        a_bc.merge(&c);
+        let mut left = a;
+        left.merge(&a_bc);
+        assert_eq!(ab_c, left, "(a+b)+c must equal a+(b+c)");
+
+        let mut ba = b;
+        ba.merge(&a);
+        let mut ab = a;
+        ab.merge(&b);
+        assert_eq!(ab, ba, "a+b must equal b+a");
+
+        assert_eq!(ab_c.count(), 150);
+        assert_eq!(h.merged(Domain::Task), ab_c, "merged() must equal the manual fold");
+    }
+
+    /// Percentiles agree with an exact reference computation, to within
+    /// the log2-bucket guarantee: reference ≤ reported ≤ 2 × reference
+    /// (the reported value is the bucket upper bound).
+    #[test]
+    fn percentiles_match_reference_within_bucket_bounds() {
+        let h = Hist::new();
+        // A deliberately skewed distribution: many fast, few slow.
+        let mut vals: Vec<u64> = Vec::new();
+        let mut x = 0x2545F4914F6CDD1Du64;
+        for i in 0..1000u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = if i % 50 == 0 { 40_000_000 + x % 10_000_000 } else { 1_000 + x % 30_000 };
+            vals.push(v);
+            h.record(Domain::ReaderStall, 2, ns(v));
+        }
+        vals.sort_unstable();
+        let s = h.snapshot(Domain::ReaderStall, 2);
+        assert_eq!(s.count(), 1000);
+        for q in [0.5, 0.95, 0.99] {
+            let rank = ((q * 1000.0).ceil() as usize).clamp(1, 1000);
+            let exact = vals[rank - 1];
+            let got = s.percentile(q);
+            assert!(
+                got >= exact && got <= exact.saturating_mul(2),
+                "p{q}: exact {exact} vs bucketed {got} out of the 2x envelope"
+            );
+        }
+        assert_eq!(s.percentile(1.0), bucket_upper(bucket_of(*vals.last().unwrap())));
+        let mean: u64 = vals.iter().sum::<u64>() / 1000;
+        assert_eq!(s.mean_ns(), mean);
+    }
+
+    #[test]
+    fn empty_and_zero_histograms() {
+        let h = Hist::new();
+        let s = h.snapshot(Domain::WriterStall, 0);
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.p50(), 0);
+        assert_eq!(s.p99(), 0);
+        assert_eq!(s.mean_ns(), 0);
+        h.record(Domain::WriterStall, 0, ns(0));
+        let s = h.snapshot(Domain::WriterStall, 0);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.p50(), 0, "a zero-length duration lands in bucket 0");
+    }
+
+    /// Deltas subtract element-wise and survive a reset (saturating).
+    #[test]
+    fn deltas_subtract_and_survive_reset() {
+        let h = Hist::new();
+        h.record(Domain::Collective, 0, ns(500));
+        let early = h.snapshot(Domain::Collective, 0);
+        h.record(Domain::Collective, 0, ns(700_000));
+        let late = h.snapshot(Domain::Collective, 0);
+        let d = late.delta(&early);
+        assert_eq!(d.count(), 1);
+        assert_eq!(d.buckets[bucket_of(700_000)], 1);
+        assert_eq!(d.total_ns, 700_000);
+        h.reset();
+        let after = h.snapshot(Domain::Collective, 0);
+        assert_eq!(after.count(), 0);
+        assert_eq!(after.delta(&late).count(), 0, "reset must read as an empty delta");
+    }
+
+    /// Out-of-range node ids clamp into the last slot instead of
+    /// panicking (mirrors the trace recorder's track saturation).
+    #[test]
+    fn node_ids_clamp() {
+        let h = Hist::new();
+        h.record(Domain::Task, MAX_NODES + 7, ns(100));
+        assert_eq!(h.snapshot(Domain::Task, MAX_NODES - 1).count(), 1);
+        assert_eq!(h.merged(Domain::Task).count(), 1);
+    }
+}

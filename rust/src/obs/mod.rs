@@ -1,10 +1,14 @@
-//! Observability: the flight recorder ([`trace`]) and the shared
+//! Observability: the flight recorder ([`trace`]), latency histograms
+//! ([`hist`]), the offline run analyzer ([`analyze`]), and the shared
 //! hand-rolled JSON surface ([`json`]) behind `Roomy::report_json()`, the
 //! Chrome-trace flusher, and the bench harness's `BENCH_baseline.json`.
 //!
 //! Everything here is read-only with respect to the computation: tracing
-//! records timestamps and counter deltas, never data, so arming it cannot
-//! change a single on-disk byte (pinned by `tests/determinism.rs`).
+//! and histograms record timestamps and counter deltas, never data, so
+//! arming them cannot change a single on-disk byte (pinned by
+//! `tests/determinism.rs`).
 
+pub mod analyze;
+pub mod hist;
 pub mod json;
 pub mod trace;

@@ -449,10 +449,16 @@ fn render() -> String {
     // Snapshot every ring under its own lock; events are Copy.
     let mut evs: Vec<(usize, Event)> = Vec::new();
     let mut dropped: u64 = 0;
+    // Per-track overwrite counts (track index → count), so a truncated
+    // trace says *which* timeline lost its head, not just that one did.
+    let mut dropped_by_track: Vec<(usize, u64)> = Vec::new();
     for (track, slot) in tracks().iter().enumerate() {
         let g = slot.lock().unwrap();
         if let Some(ring) = g.as_ref() {
             dropped += ring.dropped;
+            if ring.dropped > 0 {
+                dropped_by_track.push((track, ring.dropped));
+            }
             // Oldest-first: the ring is in push order until it wraps.
             for i in 0..ring.buf.len() {
                 evs.push((track, ring.buf[(ring.next + i) % ring.buf.len()]));
@@ -523,9 +529,36 @@ fn render() -> String {
     let mut doc = json::Obj::new();
     doc.str("displayTimeUnit", "ms");
     doc.u64("droppedEvents", dropped);
+    if !dropped_by_track.is_empty() {
+        // Track i < WORKER_TRACKS is worker i's ring; the rest are
+        // leader slots — same naming as the thread_name metadata.
+        let mut by = json::Obj::new();
+        for (track, n) in &dropped_by_track {
+            let name = if *track < WORKER_TRACKS {
+                format!("worker{track}")
+            } else {
+                format!("leader-{}", track - WORKER_TRACKS)
+            };
+            by.u64(&name, *n);
+        }
+        doc.raw("droppedEventsByTrack", &by.build());
+    }
     meta.extend(rows);
     doc.raw("traceEvents", &json::array(&meta));
     doc.build()
+}
+
+/// Total events overwritten in the rings so far (all tracks). Zero means
+/// every recorded span is still in the buffers; nonzero means a flushed
+/// trace is a truncated window and `report_json` says so.
+pub fn dropped_events() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    tracks()
+        .iter()
+        .map(|slot| slot.lock().unwrap().as_ref().map_or(0, |r| r.dropped))
+        .sum()
 }
 
 /// Serialize every ring to the armed path as Chrome trace JSON. Returns

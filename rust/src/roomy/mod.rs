@@ -101,6 +101,12 @@ impl Roomy {
         if let Some(p) = &cfg.trace_path {
             crate::obs::trace::arm(p);
         }
+        // Latency histograms: armed explicitly, or implied by the
+        // spans-mode tuner (which reads them every round). Must happen
+        // before the cluster comes up so its Autotune sees a live bank.
+        if cfg.hist || cfg.autotune == crate::config::AutotuneMode::Spans {
+            crate::obs::hist::arm();
+        }
         let cluster = Arc::new(Cluster::new(&cfg)?);
         Ok(Roomy {
             ctx: Arc::new(CtxInner {
@@ -327,6 +333,25 @@ impl Roomy {
         }
         s.push_str(&crate::storage::scratch::alloc_snapshot().report());
         s.push('\n');
+        if crate::obs::hist::enabled() {
+            use crate::metrics::fmt_dur_ns;
+            let bank = crate::obs::hist::global();
+            for d in crate::obs::hist::DOMAINS {
+                let m = bank.merged(d);
+                if m.count() == 0 {
+                    continue;
+                }
+                s.push_str(&format!(
+                    "hist {}: {} samples, p50 {} / p95 {} / p99 {}, mean {}\n",
+                    d.key(),
+                    m.count(),
+                    fmt_dur_ns(m.p50()),
+                    fmt_dur_ns(m.p95()),
+                    fmt_dur_ns(m.p99()),
+                    fmt_dur_ns(m.mean_ns()),
+                ));
+            }
+        }
         match self.ctx.cluster.autotune() {
             Some(at) => {
                 s.push_str(&at.report(self.ctx.cluster.disks()));
@@ -382,6 +407,7 @@ impl Roomy {
         c.u64("bloom_bits_per_key", cfg.bloom_bits_per_key as u64);
         c.bool("bloom_approximate", cfg.bloom_approximate);
         c.str("autotune", &format!("{:?}", cfg.autotune));
+        c.bool("hist", cfg.hist);
         match &cfg.trace_path {
             Some(p) => {
                 c.str("trace_path", &p.display().to_string());
@@ -490,6 +516,7 @@ impl Roomy {
         match self.ctx.cluster.autotune() {
             Some(at) => {
                 o.bool("enabled", true);
+                o.str("mode", at.mode());
                 o.u64("rounds", at.rounds());
                 o.u64("depth_raises", at.depth_raises());
                 o.u64("depth_decays", at.depth_decays());
@@ -527,6 +554,9 @@ impl Roomy {
 
         let mut o = Obj::new();
         o.bool("enabled", crate::obs::trace::enabled());
+        // Ring-overwrite total: nonzero means any flushed trace is a
+        // truncated window, and `obs::analyze` will say so.
+        o.u64("dropped_events", crate::obs::trace::dropped_events());
         match crate::obs::trace::armed_path() {
             Some(p) => {
                 o.str("path", &p.display().to_string());
@@ -536,6 +566,42 @@ impl Roomy {
             }
         }
         root.raw("trace", &o.build());
+
+        // Latency histograms ([`crate::obs::hist`]): per-domain merged
+        // percentiles plus per-node task rows (the skew surface the
+        // spans-mode tuner reads). All zeros / absent domains when the
+        // bank was never armed.
+        let mut o = Obj::new();
+        o.bool("enabled", crate::obs::hist::enabled());
+        if crate::obs::hist::enabled() {
+            let bank = crate::obs::hist::global();
+            for d in crate::obs::hist::DOMAINS {
+                let m = bank.merged(d);
+                let mut h = Obj::new();
+                h.u64("count", m.count());
+                h.f64("p50_us", m.p50() as f64 / 1e3);
+                h.f64("p95_us", m.p95() as f64 / 1e3);
+                h.f64("p99_us", m.p99() as f64 / 1e3);
+                h.f64("mean_us", m.mean_ns() as f64 / 1e3);
+                o.raw(d.key(), &h.build());
+            }
+            let rows: Vec<String> = bank
+                .per_node(crate::obs::hist::Domain::Task, cfg.workers)
+                .into_iter()
+                .enumerate()
+                .filter(|(_, m)| m.count() > 0)
+                .map(|(n, m)| {
+                    let mut r = Obj::new();
+                    r.u64("node", n as u64);
+                    r.u64("count", m.count());
+                    r.f64("p95_us", m.p95() as f64 / 1e3);
+                    r.f64("mean_us", m.mean_ns() as f64 / 1e3);
+                    r.build()
+                })
+                .collect();
+            o.raw("task_per_node", &array(&rows));
+        }
+        root.raw("hist", &o.build());
 
         root.build()
     }
@@ -592,6 +658,36 @@ mod tests {
         assert!(v.get("phases").and_then(|p| p.as_arr()).is_some());
         let at = v.get("autotune").expect("autotune section");
         assert!(at.get("enabled").is_some());
+        let tr = v.get("trace").expect("trace section");
+        assert!(tr.get("dropped_events").and_then(|d| d.as_u64()).is_some());
+        let h = v.get("hist").expect("hist section");
+        assert!(h.get("enabled").and_then(|e| e.as_bool()).is_some());
+    }
+
+    /// With the bank armed, the report surfaces task/collective
+    /// percentiles and per-node task rows.
+    #[test]
+    fn report_json_surfaces_hist_percentiles() {
+        let t = tmpdir("roomy_report_hist");
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.hist = true;
+        let r = Roomy::open(cfg).unwrap();
+        let a = r.array::<u32>("arr", 200, 1).unwrap();
+        a.map(|_, _| {}).unwrap();
+        a.map(|_, _| {}).unwrap();
+        let v = crate::obs::json::parse(&r.report_json()).unwrap();
+        let h = v.get("hist").expect("hist section");
+        assert_eq!(h.get("enabled").and_then(|e| e.as_bool()), Some(true));
+        let task = h.get("task").expect("task domain");
+        assert!(task.get("count").and_then(|c| c.as_u64()).unwrap() > 0);
+        assert!(task.get("p95_us").and_then(|p| p.as_f64()).unwrap() > 0.0);
+        let coll = h.get("collective").expect("collective domain");
+        assert!(coll.get("count").and_then(|c| c.as_u64()).unwrap() >= 2);
+        let rows = h.get("task_per_node").and_then(|r| r.as_arr()).unwrap();
+        assert!(!rows.is_empty(), "per-node task rows must be present");
+        let rep = r.report();
+        assert!(rep.contains("hist task:"), "{rep}");
+        assert!(rep.contains("p95"), "{rep}");
     }
 
     #[test]

@@ -27,13 +27,25 @@
 //! to a run with the controller off, which the determinism suite pins.
 //!
 //! The controller exists only when
-//! [`RoomyConfig::autotune`](crate::RoomyConfig::autotune) is `On`
-//! (`ROOMY_AUTOTUNE=on`); in the default `Off` mode the cluster holds no
-//! controller and the hot path is exactly the seed's.
+//! [`RoomyConfig::autotune`](crate::RoomyConfig::autotune) is enabled;
+//! in the default `Off` mode the cluster holds no controller and the hot
+//! path is exactly the seed's. Two inputs are available:
+//!
+//! - **`On`** reads the coarse end-of-collective counters (total stall
+//!   nanoseconds, peak queue depth) — cheap, but a sum can't tell one
+//!   10 ms stall from ten thousand 1 µs handoffs.
+//! - **`Spans`** reads the latency *distributions* from
+//!   [`crate::obs::hist`] instead: per-node stall p95s drive depth (a
+//!   node whose typical stall is long is genuinely I/O-bound; a node
+//!   with many tiny waits is not), and the skew of per-node task p95s
+//!   drives the hint distance (skewed nodes mean idle workers that
+//!   profit from deeper cross-task warming). `Spans` implies arming the
+//!   histogram bank at `Roomy::open`.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::obs::hist::{Domain, Hist, HistSnapshot};
 use crate::runtime::pool::{WorkerPool, MAX_HINT_AHEAD};
 use crate::storage::NodeDisk;
 
@@ -47,15 +59,44 @@ const RAISE_STALL_NS: u64 = 2_000_000;
 /// compute and the extra chunk RAM buys nothing.
 const DECAY_STALL_NS: u64 = 100_000;
 
+/// Spans mode: p95 stall duration this round above which a node earns a
+/// buffer — the *typical* stall is half a millisecond, so the lanes are
+/// genuinely behind (a counter-sum of the same magnitude could just be
+/// thousands of harmless queue handoffs).
+const SPANS_RAISE_P95_NS: u64 = 500_000;
+
+/// Spans mode: p95 stall duration below which a node decays a buffer —
+/// even the slow tail of its waits is a queue handoff, not I/O.
+const SPANS_DECAY_P95_NS: u64 = 50_000;
+
+/// Per-node histogram snapshots at the previous spans-mode round, so each
+/// round sees only its own delta.
+#[derive(Debug, Clone, Copy, Default)]
+struct SpansLast {
+    stall: HistSnapshot,
+    task: HistSnapshot,
+}
+
+/// Spans-mode state: the histogram bank read each round plus the
+/// previous round's snapshots.
+#[derive(Debug)]
+struct Spans {
+    hist: Arc<Hist>,
+    last: Mutex<Vec<SpansLast>>,
+}
+
 /// Feedback controller adapting per-node pipeline depth and the pool's
-/// prefetch-hint distance from runtime counters. One per
-/// [`crate::cluster::Cluster`], present only with autotune `On`.
+/// prefetch-hint distance from runtime counters (`On`) or latency
+/// distributions (`Spans`). One per [`crate::cluster::Cluster`], present
+/// only when autotune is enabled.
 #[derive(Debug)]
 pub struct Autotune {
     /// Per-node `reader_wait_ns + writer_wait_ns` at the previous round.
     /// Counters only grow (a metrics reset makes one delta read low —
     /// `saturating_sub` keeps that safe), so deltas are per-round stall.
     last_wait: Mutex<Vec<u64>>,
+    /// Present in spans mode only.
+    spans: Option<Spans>,
     rounds: AtomicU64,
     depth_raises: AtomicU64,
     depth_decays: AtomicU64,
@@ -64,10 +105,11 @@ pub struct Autotune {
 }
 
 impl Autotune {
-    /// Controller for a cluster of `nodes` node disks.
+    /// Counter-mode controller for a cluster of `nodes` node disks.
     pub fn new(nodes: usize) -> Autotune {
         Autotune {
             last_wait: Mutex::new(vec![0; nodes]),
+            spans: None,
             rounds: AtomicU64::new(0),
             depth_raises: AtomicU64::new(0),
             depth_decays: AtomicU64::new(0),
@@ -75,12 +117,48 @@ impl Autotune {
         }
     }
 
+    /// Spans-mode controller reading per-node latency distributions from
+    /// `hist`. The cluster passes the process-global bank
+    /// ([`crate::obs::hist::global`]); tests pass a private instance.
+    pub fn with_spans(nodes: usize, hist: Arc<Hist>) -> Autotune {
+        let mut at = Autotune::new(nodes);
+        at.spans = Some(Spans { hist, last: Mutex::new(vec![SpansLast::default(); nodes]) });
+        at
+    }
+
+    /// The input this controller reads, for reports.
+    pub fn mode(&self) -> &'static str {
+        if self.spans.is_some() { "spans" } else { "on" }
+    }
+
     /// One adaptation round. Called between collectives; cheap (a few
-    /// atomic loads per node) so per-collective overhead is noise.
+    /// atomic loads per node, or one histogram snapshot per node in
+    /// spans mode) so per-collective overhead is noise.
     pub fn adapt(&self, disks: &[Arc<NodeDisk>], pool: &WorkerPool) {
         self.rounds.fetch_add(1, Ordering::Relaxed);
         let moves0 = self.depth_raises.load(Ordering::Relaxed)
             + self.depth_decays.load(Ordering::Relaxed);
+        match &self.spans {
+            Some(s) => self.adapt_spans(s, disks, pool),
+            None => self.adapt_counters(disks, pool),
+        }
+        // Flight recorder: one instant per adapt round with the decision
+        // taken (depth moves this round, hint distance applied).
+        let moves = self.depth_raises.load(Ordering::Relaxed)
+            + self.depth_decays.load(Ordering::Relaxed)
+            - moves0;
+        crate::obs::trace::instant(
+            crate::obs::trace::Kind::Autotune,
+            "autotune.adapt",
+            None,
+            moves,
+            pool.hint_ahead() as u64,
+        );
+    }
+
+    /// Counter mode: stall-sum deltas drive depth, queue-depth peaks
+    /// drive the hint distance.
+    fn adapt_counters(&self, disks: &[Arc<NodeDisk>], pool: &WorkerPool) {
         let mut last = self.last_wait.lock().expect("autotune state poisoned");
         for (n, disk) in disks.iter().enumerate() {
             if disk.pipeline_depth() == 0 {
@@ -120,18 +198,60 @@ impl Autotune {
         };
         pool.set_hint_ahead(k);
         self.hint_ahead.store(pool.hint_ahead(), Ordering::Relaxed);
-        // Flight recorder: one instant per adapt round with the decision
-        // taken (depth moves this round, hint distance applied).
-        let moves = self.depth_raises.load(Ordering::Relaxed)
-            + self.depth_decays.load(Ordering::Relaxed)
-            - moves0;
-        crate::obs::trace::instant(
-            crate::obs::trace::Kind::Autotune,
-            "autotune.adapt",
-            None,
-            moves,
-            pool.hint_ahead() as u64,
-        );
+    }
+
+    /// Spans mode: per-node stall-duration p95s (this round's histogram
+    /// delta) drive depth; the skew of per-node task p95s drives the
+    /// hint distance.
+    fn adapt_spans(&self, s: &Spans, disks: &[Arc<NodeDisk>], pool: &WorkerPool) {
+        let mut last = s.last.lock().expect("autotune spans state poisoned");
+        for (n, disk) in disks.iter().enumerate() {
+            let mut cur_stall = s.hist.snapshot(Domain::ReaderStall, n);
+            cur_stall.merge(&s.hist.snapshot(Domain::WriterStall, n));
+            let delta = cur_stall.delta(&last[n].stall);
+            last[n].stall = cur_stall;
+            if disk.pipeline_depth() == 0 {
+                continue; // synchronous I/O: nothing to tune
+            }
+            let cur = disk.effective_depth();
+            if delta.count() > 0 && delta.p95() >= SPANS_RAISE_P95_NS {
+                disk.set_effective_depth(cur + 1);
+                if disk.effective_depth() > cur {
+                    self.depth_raises.fetch_add(1, Ordering::Relaxed);
+                }
+            } else if (delta.count() == 0 || delta.p95() <= SPANS_DECAY_P95_NS) && cur > 1 {
+                disk.set_effective_depth(cur - 1);
+                self.depth_decays.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // Hint distance from task-duration skew: when one node's p95
+        // task is many times the median node's, its home worker is the
+        // straggler everyone waits on — deeper hints keep the stolen /
+        // following tasks' chunks warm. Balanced nodes keep the seed's
+        // next-task-only hint.
+        let mut p95s: Vec<u64> = Vec::with_capacity(last.len());
+        for (n, l) in last.iter_mut().enumerate() {
+            let cur_task = s.hist.snapshot(Domain::Task, n);
+            let delta = cur_task.delta(&l.task);
+            l.task = cur_task;
+            if delta.count() > 0 {
+                p95s.push(delta.p95());
+            }
+        }
+        let k = if p95s.len() < 2 {
+            1
+        } else {
+            p95s.sort_unstable();
+            let med = p95s[p95s.len() / 2].max(1);
+            match p95s[p95s.len() - 1] / med {
+                0..=1 => 1,
+                2..=3 => 2,
+                4..=7 => 3,
+                _ => MAX_HINT_AHEAD,
+            }
+        };
+        pool.set_hint_ahead(k);
+        self.hint_ahead.store(pool.hint_ahead(), Ordering::Relaxed);
     }
 
     /// Adaptation rounds run so far.
@@ -161,7 +281,8 @@ impl Autotune {
             .map(|d| d.effective_depth().to_string())
             .collect();
         format!(
-            "autotune: {} rounds, depth +{}/-{}, effective depths [{}], hint ahead {}",
+            "autotune[{}]: {} rounds, depth +{}/-{}, effective depths [{}], hint ahead {}",
+            self.mode(),
             self.rounds(),
             self.depth_raises(),
             self.depth_decays(),
@@ -242,5 +363,88 @@ mod tests {
         at.adapt(std::slice::from_ref(&d), &pool);
         assert_eq!(pool.hint_ahead(), MAX_HINT_AHEAD);
         assert!(at.report(std::slice::from_ref(&d)).contains("hint ahead"));
+        assert!(at.report(std::slice::from_ref(&d)).contains("autotune[on]"));
+    }
+
+    /// Spans mode: the depth decision follows the stall-duration p95 of
+    /// each round's histogram delta — long typical stalls raise, tiny
+    /// ones decay, and the counter sums are ignored entirely.
+    #[test]
+    fn spans_depth_follows_stall_p95() {
+        use std::time::Duration;
+        let t = tmpdir("autotune_spans_depth");
+        let d = disk(4, t.path());
+        let pool = WorkerPool::new(2);
+        let hist = Arc::new(Hist::new());
+        let at = Autotune::with_spans(1, Arc::clone(&hist));
+        assert_eq!(at.mode(), "spans");
+
+        // Quiet bank → decay toward 1 even though nothing was recorded.
+        for _ in 0..6 {
+            at.adapt(std::slice::from_ref(&d), &pool);
+        }
+        assert_eq!(d.effective_depth(), 1);
+
+        // Long typical stalls (p95 ≈ 1 ms ≥ SPANS_RAISE_P95_NS) → climb
+        // to the ceiling, then hold.
+        for _ in 0..6 {
+            for _ in 0..20 {
+                hist.record(Domain::ReaderStall, 0, Duration::from_millis(1));
+            }
+            at.adapt(std::slice::from_ref(&d), &pool);
+        }
+        assert_eq!(d.effective_depth(), 4, "must stop at io_pipeline_depth");
+
+        // Thousands of sub-decay-threshold waits per round: a counter
+        // sum would scream "stalled" (20 ms/round), the p95 says queue
+        // handoff → decay back down.
+        for _ in 0..6 {
+            for _ in 0..2000 {
+                hist.record(Domain::WriterStall, 0, Duration::from_micros(10));
+            }
+            at.adapt(std::slice::from_ref(&d), &pool);
+        }
+        assert_eq!(d.effective_depth(), 1, "tiny-stall storms must decay");
+        assert!(at.report(std::slice::from_ref(&d)).contains("autotune[spans]"));
+    }
+
+    /// Spans mode: hint distance follows per-node task-p95 skew, not
+    /// queue depth.
+    #[test]
+    fn spans_hint_follows_task_skew() {
+        use std::time::Duration;
+        let t = tmpdir("autotune_spans_hint");
+        let d0 = disk(2, t.path());
+        let pool = WorkerPool::new(2);
+        let hist = Arc::new(Hist::new());
+        let at = Autotune::with_spans(2, Arc::clone(&hist));
+
+        // Balanced nodes: both p95s ≈ 1 ms → ratio 1 → k = 1.
+        for _ in 0..10 {
+            hist.record(Domain::Task, 0, Duration::from_millis(1));
+            hist.record(Domain::Task, 1, Duration::from_millis(1));
+        }
+        at.adapt(std::slice::from_ref(&d0), &pool);
+        assert_eq!(pool.hint_ahead(), 1, "balanced tasks keep the seed hint");
+
+        // Node 1 becomes a straggler: its p95 ≈ 8× node 0's → deep hints.
+        for _ in 0..10 {
+            hist.record(Domain::Task, 0, Duration::from_millis(1));
+            hist.record(Domain::Task, 1, Duration::from_millis(20));
+        }
+        at.adapt(std::slice::from_ref(&d0), &pool);
+        assert!(
+            pool.hint_ahead() >= 3,
+            "skewed task p95s must widen the hint distance (got {})",
+            pool.hint_ahead()
+        );
+
+        // One node goes idle (no new tasks): fewer than two live nodes →
+        // fall back to the seed hint.
+        for _ in 0..10 {
+            hist.record(Domain::Task, 0, Duration::from_millis(1));
+        }
+        at.adapt(std::slice::from_ref(&d0), &pool);
+        assert_eq!(pool.hint_ahead(), 1);
     }
 }

@@ -85,6 +85,7 @@ use crate::cluster::Topology;
 use crate::config::StealPolicy;
 use crate::error::{Result, RoomyError};
 use crate::metrics::PoolStats;
+use crate::obs::hist;
 use crate::roomy::ops::StagedOps;
 use crate::storage::{NodeDisk, SpillBuffer};
 
@@ -672,7 +673,9 @@ impl WorkerPool {
                                 let ctx = TASK
                                     .with(|c| c.borrow_mut().take())
                                     .expect("pool task context vanished");
-                                stats.charge(wid, t0.elapsed());
+                                let dt = t0.elapsed();
+                                stats.charge(wid, dt);
+                                hist::record(hist::Domain::Task, topo.owner(t as u32), dt);
                                 stats.charge_capture(
                                     ctx.capture.bytes,
                                     ctx.capture.spilled_bytes(),

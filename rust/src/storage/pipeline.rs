@@ -73,7 +73,7 @@ use super::diskio::{
 use super::scratch;
 use crate::error::{Result, RoomyError};
 use crate::metrics::PipelineStats;
-use crate::obs::trace;
+use crate::obs::{hist, trace};
 
 /// Default chunk size a pipelined stream transfers per job. Large enough
 /// to amortize the cross-thread handoff, small enough that
@@ -661,8 +661,10 @@ impl ChunkFetcher {
             .data_rx
             .recv_timeout(DRAIN_TIMEOUT)
             .map_err(|_| pipeline_err("read-ahead lane stalled"))?;
-        self.disk.pipe_stats().add_reader_wait(t0.elapsed());
-        if t0.elapsed() >= STALL_TRACE_MIN {
+        let waited = t0.elapsed();
+        self.disk.pipe_stats().add_reader_wait(waited);
+        hist::record(hist::Domain::ReaderStall, self.disk.node(), waited);
+        if waited >= STALL_TRACE_MIN {
             trace::complete_since(
                 trace::Kind::ReaderStall,
                 "pipe.read_stall",
@@ -1052,8 +1054,10 @@ impl ChunkFlusher {
             .pool_rx
             .recv_timeout(DRAIN_TIMEOUT)
             .map_err(|_| pipeline_err("write-behind lane stalled"))?;
-        self.disk.pipe_stats().add_writer_wait(t0.elapsed());
-        if t0.elapsed() >= STALL_TRACE_MIN {
+        let waited = t0.elapsed();
+        self.disk.pipe_stats().add_writer_wait(waited);
+        hist::record(hist::Domain::WriterStall, self.disk.node(), waited);
+        if waited >= STALL_TRACE_MIN {
             trace::complete_since(
                 trace::Kind::WriterStall,
                 "pipe.write_stall",

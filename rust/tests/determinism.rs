@@ -555,6 +555,68 @@ fn det_trace_is_byte_transparent() {
     }
 }
 
+/// Latency histograms are byte-transparent: the same multi-structure
+/// workload digests identically with histograms off and armed, across
+/// num_workers {1, 4} — with (off, serial) as the reference cell. The
+/// recorder only ever increments in-memory atomic counters, never
+/// anything that lands on disk. (Arming is process-global and sticky, so
+/// the off cells run first; another armed test in this binary could make
+/// them record too, which is exactly the transparency pinned here.)
+#[test]
+fn det_hist_is_byte_transparent() {
+    let grid: [(bool, usize); 4] = [(false, 1), (false, 4), (true, 1), (true, 4)];
+    let workload = |r: &Roomy, rng: &mut Rng| -> u64 {
+        let ra = r.array::<u64>("a", 777, 0).unwrap();
+        let add = ra.register_update(|_i, v: &mut u64, p: &u64| *v = v.wrapping_add(*p));
+        let s = r.set::<u64>("s").unwrap();
+        for _round in 0..3 {
+            for _ in 0..500 {
+                ra.update(rng.below(777), &(rng.next_u64() >> 32), add).unwrap();
+                let v = rng.below(300);
+                if rng.chance(0.8) {
+                    s.add(&v).unwrap();
+                } else {
+                    s.remove(&v).unwrap();
+                }
+            }
+            ra.sync().unwrap();
+            s.sync().unwrap();
+        }
+        let h = ra
+            .reduce(|| 0u64, |acc, i, v| order_hash(acc, i ^ *v), order_hash)
+            .unwrap();
+        s.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap()
+    };
+    let mut outcomes = Vec::new();
+    for &(hist_on, nw) in &grid {
+        let t = tmpdir(&format!("det_hist_{hist_on}_w{nw}"));
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 3;
+        cfg.buckets_per_worker = 2;
+        cfg.num_workers = nw;
+        cfg.io_pipeline_depth = 4;
+        cfg.hist = hist_on;
+        let r = Roomy::open(cfg).unwrap();
+        let mut rng = Rng::new(0xD15EA5E);
+        let value = workload(&r, &mut rng);
+        if hist_on {
+            use roomy::obs::hist::{global, Domain};
+            assert!(
+                global().merged(Domain::Task).count() > 0,
+                "armed histograms recorded no pool tasks"
+            );
+            assert!(global().merged(Domain::Collective).count() > 0);
+        }
+        drop(r); // join io service threads before digesting
+        outcomes.push((hist_on, nw, value, dir_digest(t.path())));
+    }
+    let (_, _, v0, d0) = outcomes[0];
+    for (hist_on, nw, v, d) in &outcomes[1..] {
+        assert_eq!(*v, v0, "value diverged at hist={hist_on} num_workers={nw}");
+        assert_eq!(*d, d0, "on-disk bytes diverged at hist={hist_on} num_workers={nw}");
+    }
+}
+
 /// Full **batched** BFS drivers agree (level profile and totals) across
 /// worker counts and pipeline depths — both the list and the hash-table
 /// variant (the BFS frontier scans are the issue's canonical

@@ -1,0 +1,171 @@
+//! End-to-end run analysis: the committed synthetic fixture, a freshly
+//! recorded trace from a live instance, and the regression diff gate.
+//!
+//! The fixture (`tests/fixtures/synthetic_trace.json`) is a hand-built
+//! Chrome trace in the flusher's exact event shape — two `rl.sync
+//! [frontier]` instances with skewed per-node tasks and a stolen task, a
+//! `rl.dupelim [frontier]`, reader/writer stalls inside and outside the
+//! collective windows, plus the metadata and instant events a real flush
+//! carries (which the analyzer must skip). Every expected number below is
+//! computed by hand from that file, so the attribution rules are pinned
+//! against a document that never changes underneath them.
+
+use roomy::obs::analyze::{diff, flatten_metrics, render_diff, render_table, Analysis};
+use roomy::obs::json::{parse, Value};
+use roomy::testutil::tmpdir;
+use roomy::{Roomy, RoomyConfig};
+
+fn fixture() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/synthetic_trace.json");
+    std::fs::read_to_string(path).expect("committed fixture must exist")
+}
+
+#[test]
+fn committed_fixture_attributes_critical_path_skew_and_stalls() {
+    let v = parse(&fixture()).expect("fixture must parse");
+    let a = Analysis::from_value(&v).unwrap();
+    assert_eq!(a.source, "trace");
+    assert!(!a.truncated());
+
+    // Totals: 3 collective instances, 8 tasks (1 stolen), every stall
+    // counted whether or not a window claims it.
+    assert_eq!(a.totals.collectives, 3);
+    assert!((a.totals.wall_us - 4500.0).abs() < 1e-9);
+    assert_eq!(a.totals.tasks, 8);
+    assert_eq!(a.totals.stolen, 1);
+    assert!((a.totals.task_us - 3110.0).abs() < 1e-9);
+    assert_eq!(a.totals.reader_stalls, 2);
+    assert!((a.totals.reader_stall_us - 250.0).abs() < 1e-9);
+    assert_eq!(a.totals.writer_stalls, 1);
+    assert!((a.totals.writer_stall_us - 100.0).abs() < 1e-9);
+
+    // Heaviest group: both rl.sync instances fold into one row.
+    let sync = &a.groups[0];
+    assert_eq!(sync.name, "rl.sync [frontier]");
+    assert_eq!(sync.calls, 2);
+    assert!((sync.wall_us - 3000.0).abs() < 1e-9);
+    // First instance: worker0 ran 300+200+250 (one stolen), worker1 ran
+    // 1200 → critical path 1200. Second instance: 150 vs 160 → 160.
+    assert!((sync.critical_us - 1360.0).abs() < 1e-9);
+    assert_eq!(sync.tasks, 6);
+    assert_eq!(sync.stolen, 1);
+    assert!((sync.reader_stall_us - 200.0).abs() < 1e-9, "in-window stall attributes");
+    assert_eq!(sync.writer_stall_us, 0.0, "other groups' stalls stay out");
+    assert!(sync.stretch() > 2.0, "wall 3000 vs critical 1360");
+
+    // Per-node skew: node0 durs {300,200,150} → p95 300; node1 durs
+    // {1200,250,160} → p95 1200 (exact offline percentiles).
+    let n0 = sync.per_node.iter().find(|n| n.node == 0).unwrap();
+    let n1 = sync.per_node.iter().find(|n| n.node == 1).unwrap();
+    assert_eq!((n0.tasks, n1.tasks), (3, 3));
+    assert!((n0.p95_us - 300.0).abs() < 1e-9);
+    assert!((n1.p95_us - 1200.0).abs() < 1e-9);
+    assert!((n1.max_us - 1200.0).abs() < 1e-9);
+    assert!(sync.p95_skew() >= 1.0);
+
+    let dupe = &a.groups[1];
+    assert_eq!(dupe.name, "rl.dupelim [frontier]");
+    assert_eq!(dupe.calls, 1);
+    assert!((dupe.critical_us - 450.0).abs() < 1e-9);
+    assert!((dupe.writer_stall_us - 100.0).abs() < 1e-9);
+
+    // Table and JSON agree with the struct view.
+    let table = render_table(&a, 10);
+    assert!(table.contains("rl.sync [frontier]"), "{table}");
+    assert!(table.contains("per-node task p95"), "{table}");
+    assert!(!table.contains("WARNING"), "untruncated fixture must not warn:\n{table}");
+    let j = parse(&a.to_json()).expect("analysis JSON must reparse");
+    assert_eq!(j.get("analysis").and_then(Value::as_f64), Some(1.0));
+    let rows = j.get("collectives").and_then(Value::as_arr).unwrap();
+    assert_eq!(rows.len(), 2);
+}
+
+#[test]
+fn truncated_fixture_warns() {
+    let t = fixture().replace("\"droppedEvents\":0", "\"droppedEvents\":7");
+    assert_ne!(t, fixture());
+    let a = Analysis::from_value(&parse(&t).unwrap()).unwrap();
+    assert!(a.truncated());
+    assert_eq!(a.dropped_events, 7);
+    assert!(render_table(&a, 5).contains("WARNING"));
+}
+
+/// A live instance with tracing and histograms armed: the flushed trace
+/// must analyze to at least one collective with attributed tasks and a
+/// positive critical path, and the `report_json` snapshot must analyze
+/// through the same entry point.
+#[test]
+fn fresh_trace_from_live_run_attributes_collectives() {
+    let root = tmpdir("analyze_live");
+    let tdir = tmpdir("analyze_live_trace");
+    let mut cfg = RoomyConfig::for_testing(root.path());
+    cfg.workers = 3;
+    cfg.buckets_per_worker = 2;
+    cfg.num_workers = 2;
+    cfg.trace_path = Some(tdir.path().join("trace.json"));
+    cfg.hist = true;
+    let r = Roomy::open(cfg).unwrap();
+
+    let l = r.list::<u64>("l").unwrap();
+    for i in 0..2_000u64 {
+        l.add(&(i % 400)).unwrap();
+    }
+    l.sync().unwrap();
+    l.remove_dupes().unwrap();
+    l.map(|_v| {}).unwrap();
+
+    // The armed histograms saw the pool tasks those collectives ran.
+    use roomy::obs::hist::{global, Domain};
+    assert!(global().merged(Domain::Task).count() > 0, "armed hist recorded no tasks");
+    assert!(global().merged(Domain::Collective).count() > 0);
+
+    let flushed = r.flush_trace().unwrap().expect("tracing must be armed");
+    let text = std::fs::read_to_string(&flushed).unwrap();
+    let a = Analysis::from_value(&parse(&text).unwrap()).unwrap();
+    assert_eq!(a.source, "trace");
+    assert!(a.totals.collectives >= 2, "sync + dupelim + map must record");
+    let g = a
+        .groups
+        .iter()
+        .find(|g| g.tasks > 0)
+        .expect("at least one collective must have attributed tasks");
+    assert!(g.critical_us > 0.0, "attributed tasks imply a critical path");
+    assert!(!g.per_node.is_empty());
+
+    // The metrics report analyzes through the same front door.
+    let rep = r.report_json();
+    let ra = Analysis::from_value(&parse(&rep).unwrap()).unwrap();
+    assert_eq!(ra.source, "report");
+    assert!(ra.totals.collectives > 0);
+
+    // And the two documents diff against themselves cleanly.
+    let (rows, regressed) = diff(&parse(&text).unwrap(), &parse(&text).unwrap(), 25.0).unwrap();
+    assert!(!rows.is_empty());
+    assert!(!regressed, "a run diffed against itself must never regress");
+}
+
+#[test]
+fn diff_gate_fires_on_injected_regression_only() {
+    let v = parse(&fixture()).unwrap();
+    let m = flatten_metrics(&v).unwrap();
+    assert!(m.contains_key("total/wall_ms"));
+    assert!(m.contains_key("collective/rl.sync [frontier]/wall_ms"));
+
+    // Identical runs: zero deltas, no gate.
+    let (rows, regressed) = diff(&v, &v, 10.0).unwrap();
+    assert!(!regressed);
+    assert!(rows.iter().all(|r| r.delta_pct == 0.0));
+
+    // Inject a 10x slowdown into the heavy collective instance.
+    let slow = fixture().replace("\"dur\":2000,", "\"dur\":20000,");
+    assert_ne!(slow, fixture());
+    let vb = parse(&slow).unwrap();
+    let (rows, regressed) = diff(&v, &vb, 25.0).unwrap();
+    assert!(regressed, "10x wall growth past 25% must gate");
+    assert!(rows.iter().any(|r| r.regressed && r.key.contains("rl.sync")));
+    assert!(render_diff(&rows, 25.0, regressed).contains("REGRESSION"));
+
+    // The same pair in the improving direction never fires.
+    let (_, regressed) = diff(&vb, &v, 25.0).unwrap();
+    assert!(!regressed, "getting faster is never a regression");
+}
