@@ -1,5 +1,8 @@
 //! E7 "Fig R4" — layer ablation: AOT XLA kernels vs the pure-Rust
-//! fallbacks, per batch kernel.
+//! fallbacks, per batch kernel — plus E9, the raw-speed kernel table:
+//! scalar reference loops vs the batched/lane fingerprint kernels
+//! (`hashfn::fp_bytes_batch_*`), the word-wise bitset kernels
+//! (`roomy::bitkernels`), and the word-wise external-sort fast paths.
 //!
 //! Throughput of the four accel entry points on both backends. Context
 //! for the numbers: the Pallas kernels are lowered with `interpret=True`
@@ -8,6 +11,13 @@
 //! not TPU-class kernel speed — DESIGN.md §Hardware-Adaptation records
 //! the VMEM/roofline estimates for real hardware. The scalar Rust twins
 //! are the bit-exactness oracle and the practical CPU fast path.
+//!
+//! The E9 rows land in the machine-readable baseline
+//! (`write_baseline("kernels")`), so CI's `kernels` variant can gate
+//! kernel regressions with `roomy analyze-diff` against the committed
+//! `benches/baselines/BENCH_baseline.json` — the diff only compares
+//! groups present in both documents, so the one committed file carries
+//! the structure rows and the kernel rows side by side.
 
 #[path = "harness.rs"]
 mod harness;
@@ -124,11 +134,180 @@ fn capture_spill_overhead() {
     }
 }
 
+/// E9: the raw-speed kernel table. Every row times a scalar reference
+/// loop against its batched / word-wise replacement over identical data;
+/// the kernels are bit-exact (pinned by `tests/property_tests.rs` and
+/// the in-module props), so the ratio is pure speed. Acceptance bars:
+/// ≥ 2× on batched fingerprints, ≥ 4× on word-wise bitset counting.
+fn raw_speed_kernels() {
+    use roomy::hashfn;
+    use roomy::roomy::bitkernels::{self, CombineOp};
+
+    header(
+        &format!(
+            "E9 raw-speed kernels: scalar vs batched/word-wise (dispatch: {})",
+            hashfn::kernel_impl()
+        ),
+        &["kernel", "n", "scalar", "batched/word", "speedup ×"],
+    );
+    let mut rng = Rng::new(0xE9);
+
+    // --- batched fingerprints: whole-chunk hashing, GB/s ---------------
+    for rec_size in [8usize, 16] {
+        let n = scaled(1_000_000) as usize;
+        let batch = rng.bytes(n * rec_size);
+        let bytes = (n * rec_size) as f64;
+        let mut out: Vec<u64> = Vec::with_capacity(n);
+        let (ts, _) = time_best(3, || {
+            out.clear();
+            out.extend(batch.chunks_exact(rec_size).map(hashfn::fp_bytes));
+            *out.last().unwrap_or(&0)
+        });
+        let (tb, _) = time_best(3, || {
+            hashfn::fp_bytes_batch_into(&batch, rec_size, &mut out);
+            *out.last().unwrap_or(&0)
+        });
+        row(&[
+            format!("fp_bytes rec={rec_size}"),
+            n.to_string(),
+            format!("{:.2} GB/s", bytes / 1e9 / ts),
+            format!("{:.2} GB/s", bytes / 1e9 / tb),
+            format!("{:.2}", ts / tb),
+        ]);
+        record(&format!("kern_fp_scalar rec={rec_size}"), "secs", ts);
+        record(&format!("kern_fp_scalar rec={rec_size}"), "gb_per_s", bytes / 1e9 / ts);
+        record(&format!("kern_fp_batched rec={rec_size}"), "secs", tb);
+        record(&format!("kern_fp_batched rec={rec_size}"), "gb_per_s", bytes / 1e9 / tb);
+    }
+
+    // --- fused bucket routing: fingerprint + fast-range, M records/s ---
+    {
+        let rec_size = 8usize;
+        let n = scaled(1_000_000) as usize;
+        let batch = rng.bytes(n * rec_size);
+        let mut routes: Vec<u32> = Vec::with_capacity(n);
+        let (ts, _) = time_best(3, || {
+            routes.clear();
+            routes.extend(
+                batch.chunks_exact(rec_size).map(|r| hashfn::bucket_of_bytes(r, 64)),
+            );
+            *routes.last().unwrap_or(&0)
+        });
+        let (tb, _) = time_best(3, || {
+            hashfn::route_batch_into(&batch, rec_size, 64, &mut routes);
+            *routes.last().unwrap_or(&0)
+        });
+        row(&[
+            "route nb=64".into(),
+            n.to_string(),
+            format!("{:.1} M/s", n as f64 / 1e6 / ts),
+            format!("{:.1} M/s", n as f64 / 1e6 / tb),
+            format!("{:.2}", ts / tb),
+        ]);
+        record("kern_route_scalar nb=64", "secs", ts);
+        record("kern_route_batched nb=64", "secs", tb);
+    }
+
+    // --- word-wise bitset counting: SWAR sweep vs shift/mask, G elems/s
+    for bits in [1u8, 2] {
+        let nbytes = scaled(4_000_000) as usize;
+        let data = rng.bytes(nbytes);
+        let per = (8 / bits) as u64;
+        let nelems = nbytes as u64 * per;
+        let mask = bitkernels::field_mask(bits);
+        let (ts, cs) = time_best(3, || {
+            let mut c = 0u64;
+            for i in 0..nelems {
+                let byte = data[(i / per) as usize];
+                if (byte >> ((i % per) as u8 * bits)) & mask == 1 {
+                    c += 1;
+                }
+            }
+            c
+        });
+        let (tw, cw) = time_best(3, || bitkernels::count_value(&data, bits, nelems, 1));
+        assert_eq!(cs, cw, "kernels disagree — property tests should have caught this");
+        row(&[
+            format!("bit count bits={bits}"),
+            nelems.to_string(),
+            format!("{:.2} G/s", nelems as f64 / 1e9 / ts),
+            format!("{:.2} G/s", nelems as f64 / 1e9 / tw),
+            format!("{:.2}", ts / tw),
+        ]);
+        record(&format!("kern_bitcount_scalar bits={bits}"), "secs", ts);
+        record(&format!("kern_bitcount_word bits={bits}"), "secs", tw);
+    }
+
+    // --- set-algebra sweep: per-byte OR vs u64 OR over a 1-bit set -----
+    {
+        let nbytes = scaled(4_000_000) as usize;
+        let a = rng.bytes(nbytes);
+        let b = rng.bytes(nbytes);
+        let mut dst = a.clone();
+        let (ts, _) = time_best(3, || {
+            dst.copy_from_slice(&a);
+            for (d, s) in dst.iter_mut().zip(b.iter()) {
+                *d |= *s;
+            }
+            dst[nbytes - 1]
+        });
+        let (tw, _) = time_best(3, || {
+            dst.copy_from_slice(&a);
+            bitkernels::combine_into(&mut dst, &b, CombineOp::Or);
+            dst[nbytes - 1]
+        });
+        row(&[
+            "set union (1-bit)".into(),
+            (nbytes as u64 * 8).to_string(),
+            format!("{:.2} GB/s", nbytes as f64 / 1e9 / ts),
+            format!("{:.2} GB/s", nbytes as f64 / 1e9 / tw),
+            format!("{:.2}", ts / tw),
+        ]);
+        record("kern_combine_scalar op=or", "secs", ts);
+        record("kern_combine_word op=or", "secs", tw);
+    }
+
+    // --- word-wise external sort: dedup sort of u64 records, M recs/s --
+    // (no scalar twin here — the fast path engages by record size; the
+    // row gates absolute sort throughput in the baseline diff)
+    {
+        let n = scaled(400_000) as usize;
+        let t = roomy::testutil::tmpdir("bench-kern-sort");
+        let d = std::sync::Arc::new(
+            roomy::storage::NodeDisk::create(0, t.path(), roomy::DiskPolicy::unthrottled())
+                .unwrap(),
+        );
+        let mut w = roomy::storage::RecordWriter::create(&d, "in.dat", 8).unwrap();
+        for _ in 0..n {
+            w.push(&rng.below((n as u64 / 2).max(1)).to_be_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+        let (tsort, kept) = time_best(2, || {
+            roomy::storage::extsort::sort_file(&d, "in.dat", "out.dat", 8, 4 << 20, true)
+                .unwrap()
+        });
+        row(&[
+            "extsort dedup rec=8".into(),
+            format!("{n} ({kept} kept)"),
+            "-".into(),
+            format!("{:.2} M/s", n as f64 / 1e6 / tsort),
+            "-".into(),
+        ]);
+        record("kern_sort_dedup rec=8", "secs", tsort);
+        record("kern_sort_dedup rec=8", "mrecs_per_s", n as f64 / 1e6 / tsort);
+    }
+}
+
 fn main() {
-    println!("# E7: accel kernel ablation (XLA AOT vs Rust fallback) + pool scaling");
+    println!("# E7+E9: kernel ablation (XLA AOT vs Rust) + raw-speed kernel pass");
+    raw_speed_kernels();
     pool_scaling();
     capture_spill_overhead();
+    xla_ablation();
+    write_baseline("kernels");
+}
 
+fn xla_ablation() {
     let xla = {
         let dir = std::path::Path::new("artifacts");
         if dir.join("manifest.tsv").exists() {

@@ -123,13 +123,11 @@ impl Accel {
                 Ok((fps, buckets))
             }
             _ => {
+                // One batched lane sweep over the whole chunk (bit-exact
+                // with the per-record scalar loop in every kernel mode).
                 let mut fps = Vec::with_capacity(n);
-                let mut buckets = Vec::with_capacity(n);
-                for e in words.chunks_exact(k) {
-                    let fp = hashfn::fp_words(e);
-                    fps.push(fp);
-                    buckets.push(hashfn::bucket_of(fp, nbuckets));
-                }
+                hashfn::fp_words_batch_into(words, k, &mut fps);
+                let buckets = fps.iter().map(|&fp| hashfn::bucket_of(fp, nbuckets)).collect();
                 Ok((fps, buckets))
             }
         }
@@ -267,20 +265,21 @@ impl Accel {
             }
             _ => {
                 let out_per = n - 1;
+                let total = frontier.len() * out_per;
                 let mut exp = Expansion {
-                    packed: Vec::with_capacity(frontier.len() * out_per),
-                    fp: Vec::with_capacity(frontier.len() * out_per),
-                    bucket: Vec::with_capacity(frontier.len() * out_per),
+                    packed: Vec::with_capacity(total),
+                    fp: Vec::with_capacity(total),
+                    bucket: Vec::with_capacity(total),
                 };
+                // Generate all neighbor codes first, then fingerprint the
+                // whole expansion in one batched sweep.
                 for &code in frontier {
                     for k in 2..=n {
-                        let nbr = crate::apps::pancake::flip_packed(code, k as u32);
-                        let fp = hashfn::fp_words(&[nbr]);
-                        exp.packed.push(nbr);
-                        exp.fp.push(fp);
-                        exp.bucket.push(hashfn::bucket_of(fp, nbuckets));
+                        exp.packed.push(crate::apps::pancake::flip_packed(code, k as u32));
                     }
                 }
+                hashfn::fp_words_batch_into(&exp.packed, 1, &mut exp.fp);
+                exp.bucket.extend(exp.fp.iter().map(|&fp| hashfn::bucket_of(fp, nbuckets)));
                 Ok(exp)
             }
         }

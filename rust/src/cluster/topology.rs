@@ -74,6 +74,14 @@ impl Topology {
         hashfn::bucket_of_bytes(elt_bytes, self.nbuckets())
     }
 
+    /// Bulk form of [`route`](Self::route): one batched fingerprint sweep
+    /// over a chunk of `rec_size`-byte records, appending one bucket per
+    /// record to `out`. Bit-exact with a per-record `route` loop (the
+    /// kernel contract in [`crate::hashfn`]).
+    pub fn route_batch_into(&self, batch: &[u8], rec_size: usize, out: &mut Vec<u32>) {
+        hashfn::route_batch_into(batch, rec_size, self.nbuckets(), out);
+    }
+
     /// Whether a recorded geometry (checkpoint manifest, peer structure)
     /// matches this layout.
     pub fn matches(&self, nodes: usize, nbuckets: u32) -> bool {
@@ -127,6 +135,19 @@ mod tests {
                 crate::hashfn::bucket_of_bytes(&v.to_le_bytes(), 6)
             );
         }
+    }
+
+    #[test]
+    fn route_batch_matches_scalar_route() {
+        let t = Topology::new(3, 2);
+        let mut bytes = Vec::new();
+        for v in 0u64..200 {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut batch = Vec::new();
+        t.route_batch_into(&bytes, 8, &mut batch);
+        let scalar: Vec<u32> = bytes.chunks_exact(8).map(|r| t.route(r)).collect();
+        assert_eq!(batch, scalar);
     }
 
     #[test]

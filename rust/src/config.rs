@@ -176,6 +176,74 @@ impl std::fmt::Display for AutotuneMode {
     }
 }
 
+/// Which implementation backs the batched fingerprint / bitset kernels
+/// ([`crate::hashfn`], [`crate::roomy::bitkernels`]). Every choice is
+/// **bit-exact** — the kernels are pinned to produce fingerprints and
+/// bucket bytes identical to the scalar reference loops
+/// (`tests/determinism.rs`), so this knob trades speed only, never
+/// on-disk layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum KernelMode {
+    /// Runtime-detect the widest available lane implementation (AVX2 on
+    /// x86_64, otherwise the portable unrolled lanes). The default.
+    #[default]
+    Auto = 0,
+    /// Force the portable 4-lane unrolled kernels (no `std::arch`) — the
+    /// path non-x86 targets always take; CI pins it via
+    /// `ROOMY_KERNELS=portable`.
+    Portable = 1,
+    /// Force the per-record scalar reference loops (the pre-batch
+    /// behavior) — the A/B baseline for benches and the determinism
+    /// kernel matrix.
+    Scalar = 2,
+}
+
+impl KernelMode {
+    /// Parse the `auto` / `portable` / `scalar` spelling used by the
+    /// `ROOMY_KERNELS` env var.
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        Some(match s {
+            "auto" => KernelMode::Auto,
+            "portable" => KernelMode::Portable,
+            "scalar" => KernelMode::Scalar,
+            _ => return None,
+        })
+    }
+
+    /// The canonical spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Portable => "portable",
+            KernelMode::Scalar => "scalar",
+        }
+    }
+
+    /// Inverse of the `repr(u8)` discriminant (for the process-global
+    /// atomic in [`crate::hashfn`]); unknown values fall back to `Auto`.
+    pub(crate) fn from_u8(v: u8) -> KernelMode {
+        match v {
+            1 => KernelMode::Portable,
+            2 => KernelMode::Scalar,
+            _ => KernelMode::Auto,
+        }
+    }
+}
+
+impl std::str::FromStr for KernelMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        KernelMode::parse(s).ok_or_else(|| format!("bad kernel mode {s:?} (auto|portable|scalar)"))
+    }
+}
+
+impl std::fmt::Display for KernelMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Which implementation backs the numeric batch kernels in [`crate::accel`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AccelMode {
@@ -275,6 +343,13 @@ pub struct RoomyConfig {
     /// queue-depth counters. On-disk bytes identical in both modes. Env
     /// `ROOMY_AUTOTUNE` ∈ off|on overrides, CLI `--autotune`.
     pub autotune: AutotuneMode,
+    /// Fingerprint / bitset kernel implementation ([`crate::hashfn`]):
+    /// `Auto` (default) runtime-detects AVX2 and otherwise runs the
+    /// portable unrolled lanes; `Portable` forces the fallback; `Scalar`
+    /// forces the per-record reference loops. All bit-exact — on-disk
+    /// bytes never depend on this knob (`tests/determinism.rs`). Env
+    /// `ROOMY_KERNELS` ∈ auto|portable|scalar overrides.
+    pub kernels: KernelMode,
     /// In-RAM run size for external sort (bytes).
     pub sort_chunk_bytes: usize,
     /// RAM budget per worker for hash-set based `remove_all` before
@@ -326,6 +401,7 @@ impl RoomyConfig {
             bloom_bits_per_key: env_bloom().unwrap_or(0),
             bloom_approximate: env_bloom_approx(),
             autotune: env_autotune().unwrap_or_default(),
+            kernels: env_kernels().unwrap_or_default(),
             sort_chunk_bytes: 4 * 1024 * 1024,
             ram_budget_bytes: 64 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -429,6 +505,12 @@ fn env_autotune() -> Option<AutotuneMode> {
     std::env::var("ROOMY_AUTOTUNE").ok().as_deref().and_then(AutotuneMode::parse)
 }
 
+/// Kernel-mode override (`ROOMY_KERNELS` ∈ auto|portable|scalar), used by
+/// CI to run the whole suite on the portable fallback lanes.
+fn env_kernels() -> Option<KernelMode> {
+    std::env::var("ROOMY_KERNELS").ok().as_deref().and_then(KernelMode::parse)
+}
+
 /// Flight-recorder override (`ROOMY_TRACE=<path>`; empty = off), used by
 /// CI to run the whole suite with span recording armed.
 fn env_trace() -> Option<PathBuf> {
@@ -458,6 +540,7 @@ impl Default for RoomyConfig {
             bloom_bits_per_key: env_bloom().unwrap_or(0),
             bloom_approximate: env_bloom_approx(),
             autotune: env_autotune().unwrap_or_default(),
+            kernels: env_kernels().unwrap_or_default(),
             sort_chunk_bytes: 64 * 1024 * 1024,
             ram_budget_bytes: 256 * 1024 * 1024,
             disk: DiskPolicy::unthrottled(),
@@ -571,6 +654,23 @@ mod tests {
         let c = RoomyConfig::for_testing("/tmp/x");
         if std::env::var("ROOMY_AUTOTUNE").is_err() {
             assert_eq!(c.autotune, AutotuneMode::Off, "must default off (seed behavior)");
+        }
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn kernels_parse_and_default_auto() {
+        for m in [KernelMode::Auto, KernelMode::Portable, KernelMode::Scalar] {
+            assert_eq!(KernelMode::parse(m.as_str()), Some(m));
+            assert_eq!(m.as_str().parse::<KernelMode>().unwrap(), m);
+            assert_eq!(KernelMode::from_u8(m as u8), m);
+        }
+        assert_eq!(KernelMode::parse("avx2"), None);
+        assert!("".parse::<KernelMode>().is_err());
+        assert_eq!(KernelMode::default(), KernelMode::Auto);
+        let c = RoomyConfig::for_testing("/tmp/x");
+        if std::env::var("ROOMY_KERNELS").is_err() {
+            assert_eq!(c.kernels, KernelMode::Auto);
         }
         c.validate().unwrap();
     }

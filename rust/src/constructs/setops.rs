@@ -8,6 +8,15 @@
 //! union-minus-differences construction and also provide the obvious
 //! sorted-merge primitive as the "future work" extension, which E5
 //! benchmarks against it.
+//!
+//! These operators compose list primitives (`add_all` / `remove_all` /
+//! `remove_dupes`), so their inner loops are the external-sort merge
+//! loops in [`crate::storage::extsort`]: the word-wise compare/equality
+//! kernels and the batched fingerprint routing there are what these
+//! union/intersect/diff paths actually execute per record. Dense sets
+//! represented as 1-bit [`crate::roomy::RoomyBitArray`]s get the same
+//! algebra as wide word sweeps via
+//! [`combine_from`](crate::roomy::bitarray::RoomyBitArray::combine_from).
 
 use crate::error::Result;
 use crate::roomy::{Element, Roomy, RoomyList};

@@ -5,26 +5,65 @@
 //! (`python/compile/kernels/ref.py`). Roomy routes every delayed operation
 //! and list element by this fingerprint, and the XLA-accelerated paths
 //! compute it on-device — the two implementations are pinned to shared
-//! test vectors below; change them only in lockstep.
+//! test vectors below; change them only in lockstep. The batch entry
+//! points ([`fp_words_batch`], [`fp_bytes_batch`], [`route_batch_into`],
+//! [`fp_bytes_batch_strided_into`]) are part of the same contract: every
+//! kernel mode (scalar / portable lanes / AVX2) must produce fingerprints
+//! bit-identical to a per-record [`fp_words`] loop, so the on-disk layout
+//! never depends on which kernel ran.
+//!
+//! Dispatch: records are independent (the splitmix recurrence is
+//! per-record), so batching is plain lane parallelism — 4 records per
+//! iteration. `ROOMY_KERNELS` (see [`KernelMode`]) picks the
+//! implementation: `auto` (default) runtime-detects AVX2 and otherwise
+//! uses the portable unrolled lanes; `portable` forces the fallback;
+//! `scalar` forces the per-record reference loop.
+
+pub use crate::config::KernelMode;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
 
 const GOLDEN: u64 = 0x9E3779B97F4A7C15;
 const MIX1: u64 = 0xBF58476D1CE4E5B9;
 const MIX2: u64 = 0x94D049BB133111EB;
+
+/// One per-word avalanche step of the splitmix recurrence.
+#[inline(always)]
+fn mix_word(h: u64, w: u64) -> u64 {
+    let h = (h ^ w).wrapping_mul(MIX1);
+    h ^ (h >> 29)
+}
+
+/// The splitmix finalizer.
+#[inline(always)]
+fn finish(mut h: u64) -> u64 {
+    h ^= h >> 30;
+    h = h.wrapping_mul(MIX1);
+    h ^= h >> 27;
+    h = h.wrapping_mul(MIX2);
+    h ^ (h >> 31)
+}
 
 /// splitmix-style avalanche fingerprint of a K-word element.
 #[inline]
 pub fn fp_words(words: &[u64]) -> u64 {
     let mut h = GOLDEN ^ words.len() as u64;
     for &w in words {
-        h = (h ^ w).wrapping_mul(MIX1);
-        h ^= h >> 29;
+        h = mix_word(h, w);
     }
-    h ^= h >> 30;
-    h = h.wrapping_mul(MIX1);
-    h ^= h >> 27;
-    h = h.wrapping_mul(MIX2);
-    h ^= h >> 31;
-    h
+    finish(h)
+}
+
+/// Fold a byte string into 8-byte LE words, zero-padding the tail.
+/// `out` must hold exactly `bytes.len().div_ceil(8)` words.
+#[inline]
+fn fold_le_words(bytes: &[u8], out: &mut [u64]) {
+    debug_assert_eq!(out.len(), bytes.len().div_ceil(8));
+    for (w, chunk) in out.iter_mut().zip(bytes.chunks(8)) {
+        let mut b = [0u8; 8];
+        b[..chunk.len()].copy_from_slice(chunk);
+        *w = u64::from_le_bytes(b);
+    }
 }
 
 /// Fingerprint of an arbitrary byte string: fold into 8-byte LE words,
@@ -36,20 +75,12 @@ pub fn fp_bytes(bytes: &[u8]) -> u64 {
     let mut words = [0u64; 8];
     let nwords = bytes.len().div_ceil(8);
     if nwords <= words.len() {
-        for (i, chunk) in bytes.chunks(8).enumerate() {
-            let mut w = [0u8; 8];
-            w[..chunk.len()].copy_from_slice(chunk);
-            words[i] = u64::from_le_bytes(w);
-        }
+        fold_le_words(bytes, &mut words[..nwords]);
         fp_words(&words[..nwords])
     } else {
         // Rare large-element path: heap-allocate the word vector.
         let mut v = vec![0u64; nwords];
-        for (i, chunk) in bytes.chunks(8).enumerate() {
-            let mut w = [0u8; 8];
-            w[..chunk.len()].copy_from_slice(chunk);
-            v[i] = u64::from_le_bytes(w);
-        }
+        fold_le_words(bytes, &mut v);
         fp_words(&v)
     }
 }
@@ -69,9 +100,299 @@ pub fn bucket_of_bytes(bytes: &[u8], nbuckets: u32) -> u32 {
     bucket_of(fp_bytes(bytes), nbuckets)
 }
 
+// ---------------------------------------------------------------------------
+// Kernel mode dispatch
+// ---------------------------------------------------------------------------
+
+const MODE_UNSET: u8 = 0xFF;
+
+/// Process-global kernel mode. Every mode is bit-exact, so concurrent
+/// flips (tests, `Roomy::open` applying its config) can never change
+/// results — only which lane code computes them.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Cached AVX2 runtime detection: 0 unknown, 1 present, 2 absent.
+#[cfg(target_arch = "x86_64")]
+static AVX2_DETECT: AtomicU8 = AtomicU8::new(0);
+
+/// The active kernel mode, lazily initialized from `ROOMY_KERNELS`.
+pub fn kernel_mode() -> KernelMode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_UNSET => {
+            let m = std::env::var("ROOMY_KERNELS")
+                .ok()
+                .as_deref()
+                .and_then(KernelMode::parse)
+                .unwrap_or(KernelMode::Auto);
+            MODE.store(m as u8, Ordering::Relaxed);
+            m
+        }
+        v => KernelMode::from_u8(v),
+    }
+}
+
+/// Override the kernel mode (applied by `Roomy::open` from its config;
+/// also the hook the determinism matrix uses to pit kernels against each
+/// other in one process).
+pub fn set_kernel_mode(m: KernelMode) {
+    MODE.store(m as u8, Ordering::Relaxed);
+}
+
+/// Which lane implementation actually runs a batch call.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Lanes {
+    Scalar,
+    Portable,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    match AVX2_DETECT.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let yes = std::arch::is_x86_feature_detected!("avx2");
+            AVX2_DETECT.store(if yes { 1 } else { 2 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+fn resolve(mode: KernelMode) -> Lanes {
+    match mode {
+        KernelMode::Scalar => Lanes::Scalar,
+        KernelMode::Portable => Lanes::Portable,
+        KernelMode::Auto => {
+            #[cfg(target_arch = "x86_64")]
+            if avx2_available() {
+                return Lanes::Avx2;
+            }
+            Lanes::Portable
+        }
+    }
+}
+
+/// Name of the implementation the current mode resolves to — for
+/// reports/benches: `"avx2"`, `"portable"` or `"scalar"`.
+pub fn kernel_impl() -> &'static str {
+    match resolve(kernel_mode()) {
+        Lanes::Scalar => "scalar",
+        Lanes::Portable => "portable",
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => "avx2",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch entry points
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Per-thread word scratch for byte-record batches (no per-call alloc).
+    static WORD_SCRATCH: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread fingerprint scratch for fused route batches.
+    static FP_SCRATCH: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Fingerprint every `k`-word record of `words` (its length must be a
+/// whole number of records), appending one fingerprint per record to
+/// `out`. Bit-exact with a per-record [`fp_words`] loop in every mode.
+pub fn fp_words_batch_into(words: &[u64], k: usize, out: &mut Vec<u64>) {
+    fp_words_batch_with(kernel_mode(), words, k, out)
+}
+
+/// [`fp_words_batch_into`] returning a fresh vector.
+pub fn fp_words_batch(words: &[u64], k: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(if k == 0 { 0 } else { words.len() / k });
+    fp_words_batch_into(words, k, &mut out);
+    out
+}
+
+/// Mode-explicit batch fingerprint (benches and tests pit the
+/// implementations against each other through this).
+pub fn fp_words_batch_with(mode: KernelMode, words: &[u64], k: usize, out: &mut Vec<u64>) {
+    assert!(k > 0, "record width k must be nonzero");
+    assert_eq!(words.len() % k, 0, "words are not a whole number of records");
+    out.reserve(words.len() / k);
+    match resolve(mode) {
+        Lanes::Scalar => {
+            for rec in words.chunks_exact(k) {
+                out.push(fp_words(rec));
+            }
+        }
+        Lanes::Portable => batch_portable(words, k, out),
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { avx2::batch(words, k, out) },
+    }
+}
+
+/// Portable lane kernel: four independent splitmix recurrences per
+/// iteration (the lanes are whole records, so this is bit-exact by
+/// construction); remainder records go through the scalar loop.
+fn batch_portable(words: &[u64], k: usize, out: &mut Vec<u64>) {
+    let seed = GOLDEN ^ k as u64;
+    let quads = (words.len() / k) / 4;
+    for q in 0..quads {
+        let base = q * 4 * k;
+        let (mut h0, mut h1, mut h2, mut h3) = (seed, seed, seed, seed);
+        for w in 0..k {
+            h0 = mix_word(h0, words[base + w]);
+            h1 = mix_word(h1, words[base + k + w]);
+            h2 = mix_word(h2, words[base + 2 * k + w]);
+            h3 = mix_word(h3, words[base + 3 * k + w]);
+        }
+        out.extend_from_slice(&[finish(h0), finish(h1), finish(h2), finish(h3)]);
+    }
+    for rec in words[quads * 4 * k..].chunks_exact(k) {
+        out.push(fp_words(rec));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 lane kernel: 4 records per `__m256i`, same recurrence as the
+    //! scalar twin. AVX2 has no 64x64 multiply, so it is composed from
+    //! three 32-bit products (the carry-free schoolbook low half).
+    use super::{fp_words, GOLDEN, MIX1, MIX2};
+    use std::arch::x86_64::*;
+
+    /// Low 64 bits of a 64x64 multiply per lane:
+    /// `lo(a)·lo(b) + ((hi(a)·lo(b) + lo(a)·hi(b)) << 32)`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mul64(a: __m256i, b: __m256i) -> __m256i {
+        let lo = _mm256_mul_epu32(a, b);
+        let cross = _mm256_add_epi64(
+            _mm256_mul_epu32(_mm256_srli_epi64(a, 32), b),
+            _mm256_mul_epu32(a, _mm256_srli_epi64(b, 32)),
+        );
+        _mm256_add_epi64(lo, _mm256_slli_epi64(cross, 32))
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn xorshr(h: __m256i, s: i32) -> __m256i {
+        _mm256_xor_si256(h, _mm256_srl_epi64(h, _mm_cvtsi32_si128(s)))
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 via runtime detection.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn batch(words: &[u64], k: usize, out: &mut Vec<u64>) {
+        let seed = GOLDEN ^ k as u64;
+        let quads = (words.len() / k) / 4;
+        let mix1 = _mm256_set1_epi64x(MIX1 as i64);
+        let mix2 = _mm256_set1_epi64x(MIX2 as i64);
+        let mut lanes = [0u64; 4];
+        for q in 0..quads {
+            let base = q * 4 * k;
+            let mut h = _mm256_set1_epi64x(seed as i64);
+            for w in 0..k {
+                let v = _mm256_set_epi64x(
+                    words[base + 3 * k + w] as i64,
+                    words[base + 2 * k + w] as i64,
+                    words[base + k + w] as i64,
+                    words[base + w] as i64,
+                );
+                h = mul64(_mm256_xor_si256(h, v), mix1);
+                h = xorshr(h, 29);
+            }
+            h = xorshr(h, 30);
+            h = mul64(h, mix1);
+            h = xorshr(h, 27);
+            h = mul64(h, mix2);
+            h = xorshr(h, 31);
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, h);
+            out.extend_from_slice(&lanes);
+        }
+        for rec in words[quads * 4 * k..].chunks_exact(k) {
+            out.push(fp_words(rec));
+        }
+    }
+}
+
+/// Fingerprint every `rec_size`-byte record of `batch` — exactly
+/// [`fp_bytes`] per record (LE word fold, zero-padded tail) but one call
+/// per chunk instead of per record.
+pub fn fp_bytes_batch_into(batch: &[u8], rec_size: usize, out: &mut Vec<u64>) {
+    fp_bytes_batch_with(kernel_mode(), batch, rec_size, out)
+}
+
+/// [`fp_bytes_batch_into`] returning a fresh vector.
+pub fn fp_bytes_batch(batch: &[u8], rec_size: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(if rec_size == 0 { 0 } else { batch.len() / rec_size });
+    fp_bytes_batch_into(batch, rec_size, &mut out);
+    out
+}
+
+/// Mode-explicit byte-record batch fingerprint.
+pub fn fp_bytes_batch_with(mode: KernelMode, batch: &[u8], rec_size: usize, out: &mut Vec<u64>) {
+    assert!(rec_size > 0, "record size must be nonzero");
+    assert_eq!(batch.len() % rec_size, 0, "batch is not a whole number of records");
+    let nw = rec_size.div_ceil(8);
+    WORD_SCRATCH.with(|s| {
+        let mut scratch = s.borrow_mut();
+        scratch.clear();
+        scratch.resize(batch.len() / rec_size * nw, 0);
+        if rec_size % 8 == 0 {
+            // Whole-word records: one straight LE sweep over the chunk.
+            for (w, c) in scratch.iter_mut().zip(batch.chunks_exact(8)) {
+                *w = u64::from_le_bytes(c.try_into().expect("8-byte chunk"));
+            }
+        } else {
+            for (rec, ws) in batch.chunks_exact(rec_size).zip(scratch.chunks_mut(nw)) {
+                fold_le_words(rec, ws);
+            }
+        }
+        fp_words_batch_with(mode, &scratch, nw, out);
+    })
+}
+
+/// Fingerprint the first `key_len` bytes of every `stride`-byte record in
+/// `arena` (hash-table rehash: arena records are `key ++ value`). Exactly
+/// `fp_bytes(&rec[..key_len])` per record.
+pub fn fp_bytes_batch_strided_into(
+    arena: &[u8],
+    stride: usize,
+    key_len: usize,
+    out: &mut Vec<u64>,
+) {
+    assert!(key_len > 0 && key_len <= stride, "bad key span {key_len}/{stride}");
+    assert_eq!(arena.len() % stride, 0, "arena is not a whole number of records");
+    let nw = key_len.div_ceil(8);
+    WORD_SCRATCH.with(|s| {
+        let mut scratch = s.borrow_mut();
+        scratch.clear();
+        scratch.resize(arena.len() / stride * nw, 0);
+        for (rec, ws) in arena.chunks_exact(stride).zip(scratch.chunks_mut(nw)) {
+            fold_le_words(&rec[..key_len], ws);
+        }
+        fp_words_batch_into(&scratch, nw, out);
+    })
+}
+
+/// Fused fingerprint + fast-range bucket of every `rec_size`-byte record:
+/// one batched hash sweep, then [`bucket_of`] per fingerprint. This is the
+/// bulk form of [`bucket_of_bytes`] and the routing entry the structures'
+/// batch paths use.
+pub fn route_batch_into(batch: &[u8], rec_size: usize, nbuckets: u32, out: &mut Vec<u32>) {
+    FP_SCRATCH.with(|s| {
+        let mut fps = s.borrow_mut();
+        fps.clear();
+        fp_bytes_batch_into(batch, rec_size, &mut fps);
+        out.reserve(fps.len());
+        out.extend(fps.iter().map(|&fp| bucket_of(fp, nbuckets)));
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const ALL_MODES: &[KernelMode] =
+        &[KernelMode::Scalar, KernelMode::Portable, KernelMode::Auto];
 
     /// Cross-language pin vectors, generated from the numpy oracle
     /// (`python/tests/test_hashpart.py` keeps the same values). These
@@ -92,11 +413,37 @@ mod tests {
     }
 
     #[test]
+    fn pin_vectors_k1_batch_form() {
+        // The same oracle rows pushed through every batch kernel in one
+        // call — the batch layer is part of the cross-language contract.
+        let words: Vec<u64> = PIN_K1.iter().map(|&(w, _)| w).collect();
+        let expect: Vec<u64> = PIN_K1.iter().map(|&(_, fp)| fp).collect();
+        for &mode in ALL_MODES {
+            let mut out = Vec::new();
+            fp_words_batch_with(mode, &words, 1, &mut out);
+            assert_eq!(out, expect, "mode {mode:?}");
+        }
+    }
+
+    #[test]
     fn pin_vector_k2() {
         assert_eq!(
             fp_words(&[0x0123456789ABCDEF, 0xFEDCBA9876543210]),
             0x71B4AA2CD4369C1A
         );
+    }
+
+    #[test]
+    fn pin_vector_k2_batch_form() {
+        // Five copies of the k=2 oracle record so every lane of the 4-wide
+        // kernels (and the remainder path) sees it.
+        let rec = [0x0123456789ABCDEFu64, 0xFEDCBA9876543210];
+        let words: Vec<u64> = rec.iter().copied().cycle().take(10).collect();
+        for &mode in ALL_MODES {
+            let mut out = Vec::new();
+            fp_words_batch_with(mode, &words, 2, &mut out);
+            assert_eq!(out, vec![0x71B4AA2CD4369C1A; 5], "mode {mode:?}");
+        }
     }
 
     #[test]
@@ -113,6 +460,15 @@ mod tests {
             assert_eq!(fp_words(&[w]), fp);
             assert_eq!(bucket_of(fp, 7), b);
         }
+        // Batch form: the fused route sweep lands in the same buckets.
+        let mut bytes = Vec::new();
+        for &(w, _, _) in rows {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        let mut buckets = Vec::new();
+        route_batch_into(&bytes, 8, 7, &mut buckets);
+        let expect: Vec<u32> = rows.iter().map(|&(_, _, b)| b).collect();
+        assert_eq!(buckets, expect);
     }
 
     #[test]
@@ -144,6 +500,67 @@ mod tests {
             })
             .collect();
         assert_eq!(fp_bytes(&bytes), fp_words(&words));
+    }
+
+    /// Deterministic pseudo-random word (no RNG dep in unit tests).
+    fn tword(i: u64) -> u64 {
+        finish(GOLDEN.wrapping_mul(i).wrapping_add(0xD1B54A32D192ED03))
+    }
+
+    #[test]
+    fn words_batch_matches_scalar_every_mode() {
+        for &mode in ALL_MODES {
+            for k in [1usize, 2, 3, 7, 9] {
+                for n in [0usize, 1, 3, 4, 5, 8, 17] {
+                    let words: Vec<u64> = (0..(n * k) as u64).map(tword).collect();
+                    let expect: Vec<u64> =
+                        words.chunks_exact(k).map(fp_words).collect();
+                    let mut out = Vec::new();
+                    fp_words_batch_with(mode, &words, k, &mut out);
+                    assert_eq!(out, expect, "mode {mode:?} k={k} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_batch_matches_scalar_every_mode() {
+        for &mode in ALL_MODES {
+            for rec_size in [1usize, 3, 8, 12, 16, 24, 100] {
+                for n in [0usize, 1, 4, 5, 13] {
+                    let batch: Vec<u8> =
+                        (0..n * rec_size).map(|i| tword(i as u64) as u8).collect();
+                    let expect: Vec<u64> =
+                        batch.chunks_exact(rec_size).map(fp_bytes).collect();
+                    let mut out = Vec::new();
+                    fp_bytes_batch_with(mode, &batch, rec_size, &mut out);
+                    assert_eq!(out, expect, "mode {mode:?} rec={rec_size} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strided_batch_hashes_key_prefix() {
+        let (stride, key_len, n) = (12usize, 5usize, 9usize);
+        let arena: Vec<u8> = (0..n * stride).map(|i| tword(i as u64) as u8).collect();
+        let expect: Vec<u64> =
+            arena.chunks_exact(stride).map(|r| fp_bytes(&r[..key_len])).collect();
+        let mut out = Vec::new();
+        fp_bytes_batch_strided_into(&arena, stride, key_len, &mut out);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn kernel_mode_dispatch_names() {
+        let prev = kernel_mode();
+        set_kernel_mode(KernelMode::Scalar);
+        assert_eq!(kernel_impl(), "scalar");
+        set_kernel_mode(KernelMode::Portable);
+        assert_eq!(kernel_impl(), "portable");
+        set_kernel_mode(KernelMode::Auto);
+        assert!(matches!(kernel_impl(), "avx2" | "portable"));
+        set_kernel_mode(prev);
     }
 
     #[test]

@@ -80,7 +80,7 @@ pub mod storage;
 pub mod testutil;
 
 pub use cluster::Topology;
-pub use config::{AccelMode, AutotuneMode, DiskPolicy, RoomyConfig, StealPolicy};
+pub use config::{AccelMode, AutotuneMode, DiskPolicy, KernelMode, RoomyConfig, StealPolicy};
 pub use error::{Result, RoomyError};
 pub use roomy::{
     Element, Roomy, RoomyArray, RoomyBitArray, RoomyHashTable, RoomyList, RoomySet,

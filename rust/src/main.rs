@@ -80,10 +80,18 @@ USAGE:
                                        # effective io depth + hint-ahead
                                        # from stall/queue counters between
                                        # collectives; spans adapts them
-                                       # from histogram p95s instead
-                                       # (implies --hist; env
+                                       # from histogram p95s instead, plus
+                                       # skew-adaptive pool width / steal
+                                       # boost (implies --hist; env
                                        # ROOMY_AUTOTUNE); on-disk bytes
                                        # identical in every mode
+                [--kernels K]          # fingerprint/bitset kernel dispatch:
+                                       # auto (default) runtime-detects
+                                       # AVX2 else portable lanes; portable
+                                       # forces the 4-lane path; scalar
+                                       # forces the per-record reference
+                                       # loops (env ROOMY_KERNELS); every
+                                       # mode is bit-exact with every other
                 [--buckets-per-worker B] [--root DIR] [--accel rust|xla|auto]
                 [--throttle]           # simulate 2010-era disks
                 [--checkpoint-dir DIR] # durable checkpoint after every BFS
@@ -178,6 +186,7 @@ fn config_from_flags(f: &Flags) -> Result<RoomyConfig, String> {
         bloom_bits_per_key: f.get_parse("bloom", defaults.bloom_bits_per_key)?,
         bloom_approximate: f.has("bloom-approx") || defaults.bloom_approximate,
         autotune: f.get_parse("autotune", defaults.autotune)?,
+        kernels: f.get_parse("kernels", defaults.kernels)?,
         hist: f.has("hist") || defaults.hist,
         ..defaults
     };

@@ -13,6 +13,7 @@
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Arc;
 
+use super::bitkernels;
 use super::element::Element;
 use super::funcs::{AccessId, UpdateId};
 use super::ops::{OpKind, StagedOps};
@@ -356,10 +357,89 @@ impl RoomyBitArray {
             let data = read_all_pipelined(disk, this.bucket_file(b))?;
             let base = b as u64 * this.bsize;
             let count = this.bucket_len(b);
-            for local in 0..count {
-                f(base + local, this.get_packed(&data, local));
+            // Word-wise unpack: one u64 load per 64/bits elements instead
+            // of a byte load + shift per element.
+            bitkernels::for_each_unpacked(&data, this.bits, count, |local, v| {
+                f(base + local, v)
+            });
+            Ok(())
+        })
+    }
+
+    /// Recompute the per-value histogram from the on-disk buckets with
+    /// the word-wise counting kernel ([`bitkernels::histogram`]),
+    /// refresh the O(1) counters, and return it. Useful after a restore
+    /// or as an integrity cross-check of the incrementally maintained
+    /// counts; streams every bucket once.
+    pub fn recount(&self) -> Result<Vec<u64>> {
+        let inner = &self.inner;
+        let _write = inner.write_lock.lock().unwrap();
+        let nvals = 1usize << inner.bits;
+        let totals: Vec<AtomicI64> = (0..nvals).map(|_| AtomicI64::new(0)).collect();
+        inner.for_owned_buckets("rba.recount", |this, b, disk| {
+            let nbytes = this.bucket_bytes(b);
+            if nbytes == 0 {
+                return Ok(());
+            }
+            let data = read_all_pipelined(disk, this.bucket_file(b))?;
+            let h = bitkernels::histogram(&data, this.bits, this.bucket_len(b));
+            for (v, c) in h.iter().enumerate() {
+                totals[v].fetch_add(*c as i64, Ordering::Relaxed);
             }
             Ok(())
+        })?;
+        let out: Vec<u64> =
+            totals.iter().map(|c| c.load(Ordering::Relaxed).max(0) as u64).collect();
+        for (v, c) in out.iter().enumerate() {
+            inner.counts[v].store(*c as i64, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+
+    /// Combine `src` into this array element-wise with one wide word
+    /// sweep per bucket ([`bitkernels::combine_into`]): `Or` unions,
+    /// `And` intersects, `AndNot` subtracts (for 1-bit arrays these are
+    /// exactly set union / intersection / difference of the set bits).
+    /// Both arrays must share geometry (length, width, cluster) and be
+    /// fully synced; the histogram is updated from per-bucket deltas
+    /// computed with the word-wise counting kernel.
+    pub fn combine_from(
+        &self,
+        src: &RoomyBitArray,
+        op: bitkernels::CombineOp,
+    ) -> Result<()> {
+        let inner = &self.inner;
+        let s = &src.inner;
+        if inner.len != s.len || inner.bits != s.bits {
+            return Err(RoomyError::InvalidArg(format!(
+                "combine_from over mismatched geometry: {}×{}b vs {}×{}b",
+                inner.len, inner.bits, s.len, s.bits
+            )));
+        }
+        if !inner.staged.is_empty() || !s.staged.is_empty() {
+            return Err(RoomyError::InvalidArg(
+                "combine_from requires both bit arrays synced (delayed ops pending)".into(),
+            ));
+        }
+        let _write = inner.write_lock.lock().unwrap();
+        inner.for_owned_buckets("rba.combine", |this, b, disk| {
+            let nbytes = this.bucket_bytes(b);
+            if nbytes == 0 {
+                return Ok(());
+            }
+            let mut data = read_all_pipelined(disk, this.bucket_file(b))?;
+            let other = read_all_pipelined(disk, s.bucket_file(b))?;
+            let count = this.bucket_len(b);
+            let before = bitkernels::histogram(&data, this.bits, count);
+            bitkernels::combine_into(&mut data, &other, op);
+            let after = bitkernels::histogram(&data, this.bits, count);
+            for (v, (a, bef)) in after.iter().zip(before.iter()).enumerate() {
+                let d = *a as i64 - *bef as i64;
+                if d != 0 {
+                    this.counts[v].fetch_add(d, Ordering::Relaxed);
+                }
+            }
+            write_all_pipelined(disk, this.bucket_file(b), &data)
         })
     }
 
@@ -600,6 +680,89 @@ mod tests {
         for v in 0..4u8 {
             assert_eq!(ba.count_value(v), 75, "value {v}");
         }
+    }
+
+    #[test]
+    fn recount_matches_incremental_histogram() {
+        let t = tmpdir("rba_recount");
+        let r = mk(t.path());
+        let ba = r.bit_array("b", 777, 2).unwrap();
+        let set = ba.register_update(|i, _cur, _p: &()| ((i * 7) % 4) as u8);
+        for i in 0..777 {
+            ba.update(i, &(), set).unwrap();
+        }
+        ba.sync().unwrap();
+        let h = ba.recount().unwrap();
+        assert_eq!(h.len(), 4);
+        for v in 0..4u8 {
+            assert_eq!(h[v as usize], ba.count_value(v), "value {v}");
+            let expect = (0..777u64).filter(|i| ((i * 7) % 4) as u8 == v).count() as u64;
+            assert_eq!(h[v as usize], expect, "value {v}");
+        }
+    }
+
+    #[test]
+    fn combine_from_is_element_wise() {
+        use crate::roomy::bitkernels::CombineOp;
+        let t = tmpdir("rba_combine");
+        let r = mk(t.path());
+        let n = 500u64;
+        let a_bits: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+        let b_bits: Vec<bool> = (0..n).map(|i| i % 2 == 0).collect();
+        for (op, expect_fn) in [
+            (CombineOp::Or, (|a, b| a | b) as fn(bool, bool) -> bool),
+            (CombineOp::And, |a, b| a & b),
+            (CombineOp::AndNot, |a, b| a & !b),
+        ] {
+            let name = format!("dst_{op:?}");
+            let dst = r.bit_array(&name, n, 1).unwrap();
+            let src = r.bit_array(&format!("src_{op:?}"), n, 1).unwrap();
+            let av = a_bits.clone();
+            let seta = dst.register_update(move |i, _cur, _p: &()| av[i as usize] as u8);
+            let bv = b_bits.clone();
+            let setb = src.register_update(move |i, _cur, _p: &()| bv[i as usize] as u8);
+            for i in 0..n {
+                dst.update(i, &(), seta).unwrap();
+                src.update(i, &(), setb).unwrap();
+            }
+            dst.sync().unwrap();
+            src.sync().unwrap();
+            dst.combine_from(&src, op).unwrap();
+            let expect: Vec<bool> =
+                (0..n as usize).map(|i| expect_fn(a_bits[i], b_bits[i])).collect();
+            let ones = expect.iter().filter(|&&x| x).count() as u64;
+            assert_eq!(dst.count_value(1), ones, "{op:?} histogram");
+            assert_eq!(dst.count_value(0), n - ones, "{op:?} histogram");
+            assert_eq!(dst.recount().unwrap(), vec![n - ones, ones], "{op:?} recount");
+            let bad = std::sync::atomic::AtomicU64::new(0);
+            dst.map(|i, v| {
+                if (v != 0) != expect[i as usize] {
+                    bad.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .unwrap();
+            assert_eq!(bad.into_inner(), 0, "{op:?} element values");
+        }
+    }
+
+    #[test]
+    fn combine_from_rejects_mismatch_and_pending() {
+        use crate::roomy::bitkernels::CombineOp;
+        let t = tmpdir("rba_combine_bad");
+        let r = mk(t.path());
+        let a = r.bit_array("a", 64, 1).unwrap();
+        let b = r.bit_array("b", 32, 1).unwrap();
+        assert!(a.combine_from(&b, CombineOp::Or).is_err(), "length mismatch");
+        let c = r.bit_array("c", 64, 2).unwrap();
+        assert!(a.combine_from(&c, CombineOp::Or).is_err(), "width mismatch");
+        let d = r.bit_array("d", 64, 1).unwrap();
+        let set = d.register_update(|_i, _cur, _p: &()| 1);
+        d.update(3, &(), set).unwrap();
+        assert!(a.combine_from(&d, CombineOp::Or).is_err(), "pending src ops");
+        d.sync().unwrap();
+        a.combine_from(&d, CombineOp::Or).unwrap();
+        assert_eq!(a.count_value(1), 1);
+        assert_eq!(a.fetch(3).unwrap(), 1);
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Word-wise kernels over packed sub-byte element buffers — the
+//! raw-speed inner loops behind [`super::bitarray::RoomyBitArray`].
+//!
+//! A bit-array bucket is a byte buffer of `bits` ∈ {1, 2, 4, 8}-wide
+//! fields, lowest element at the least-significant bits of byte 0. A
+//! little-endian `u64` load therefore presents `64 / bits` consecutive
+//! elements in register, in index order, so counting and combining can
+//! run one word at a time with `count_ones` and SWAR field folds instead
+//! of a shift/mask per element:
+//!
+//! - **count**: XOR against a broadcast of the probe value zeroes the
+//!   matching fields; OR-folding each field onto its own LSB and masking
+//!   leaves one bit per *non*-matching field, so a single `count_ones`
+//!   yields the match count for the whole word.
+//! - **combine**: union / intersection / subtraction of two buffers are
+//!   wide `OR` / `AND` / `ANDNOT` sweeps — fields never straddle words,
+//!   so bitwise word ops are exactly the per-element ops.
+//!
+//! Every kernel is bit-exact with the obvious per-element loop (pinned
+//! by the property tests below and `tests/property_tests.rs`); callers
+//! choose them purely for speed. Tails that don't fill a word fall back
+//! to the scalar path, so no alignment or padding preconditions leak to
+//! callers.
+
+/// `0b…0001` repeated at every `bits`-wide field boundary (the LSB mask,
+/// and the broadcast multiplier).
+#[inline]
+fn rep(bits: u8) -> u64 {
+    u64::MAX / ((1u64 << bits) - 1)
+}
+
+/// The element mask for a field width.
+#[inline]
+pub fn field_mask(bits: u8) -> u8 {
+    if bits == 8 {
+        0xFF
+    } else {
+        (1u8 << bits) - 1
+    }
+}
+
+/// Matching fields in one word: fold each field's bits onto its LSB and
+/// popcount the non-matches.
+#[inline]
+fn count_word_eq(w: u64, v: u8, bits: u8) -> u64 {
+    let mut x = w ^ (v as u64).wrapping_mul(rep(bits));
+    let mut s = 1u8;
+    while s < bits {
+        x |= x >> s;
+        s <<= 1;
+    }
+    (64 / bits as u64) - (x & rep(bits)).count_ones() as u64
+}
+
+/// Count elements equal to `v` among the first `nelems` fields of
+/// `data`. Word-wise over whole `u64`s, scalar over the ragged tail;
+/// identical to testing every element with a shift/mask.
+pub fn count_value(data: &[u8], bits: u8, nelems: u64, v: u8) -> u64 {
+    assert!(matches!(bits, 1 | 2 | 4 | 8), "bad field width {bits}");
+    let mask = field_mask(bits);
+    assert!(v <= mask, "value {v} does not fit {bits} bits");
+    let epw = 64 / bits as u64; // elements per word
+    let nwords = (nelems / epw) as usize;
+    let mut count = 0u64;
+    for chunk in data[..nwords * 8].chunks_exact(8) {
+        let w = u64::from_le_bytes(chunk.try_into().expect("8-byte chunk"));
+        count += count_word_eq(w, v, bits);
+    }
+    let per_byte = (8 / bits) as u64;
+    for i in nwords as u64 * epw..nelems {
+        let byte = data[(i / per_byte) as usize];
+        let shift = ((i % per_byte) as u8) * bits;
+        if (byte >> shift) & mask == v {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// Per-value histogram of the first `nelems` fields: `out[v]` = elements
+/// equal to `v`. One SWAR sweep per value for sub-byte widths (≤ 16
+/// passes), one table-indexed scalar pass for byte-wide fields (256
+/// sweeps would thrash the cache for no win).
+pub fn histogram(data: &[u8], bits: u8, nelems: u64) -> Vec<u64> {
+    assert!(matches!(bits, 1 | 2 | 4 | 8), "bad field width {bits}");
+    if bits == 8 {
+        let mut h = vec![0u64; 256];
+        for &b in &data[..nelems as usize] {
+            h[b as usize] += 1;
+        }
+        return h;
+    }
+    (0..1u16 << bits).map(|v| count_value(data, bits, nelems, v as u8)).collect()
+}
+
+/// Set bits across the whole buffer (fields ignored — a raw popcount).
+pub fn popcount_bytes(data: &[u8]) -> u64 {
+    let n = data.len() / 8 * 8;
+    let mut c = 0u64;
+    for chunk in data[..n].chunks_exact(8) {
+        c += u64::from_le_bytes(chunk.try_into().expect("8-byte chunk")).count_ones() as u64;
+    }
+    c + data[n..].iter().map(|b| b.count_ones() as u64).sum::<u64>()
+}
+
+/// How two packed buffers combine in [`combine_into`]. Fields align
+/// across equal-geometry buffers, so each op is the per-element bitwise
+/// op applied to every element at once.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CombineOp {
+    /// `dst |= src` — set union for 1-bit fields.
+    Or,
+    /// `dst &= src` — set intersection for 1-bit fields.
+    And,
+    /// `dst &= !src` — set subtraction for 1-bit fields.
+    AndNot,
+}
+
+/// Combine `src` into `dst` with a wide word sweep (`u64` at a time,
+/// byte tail scalar). Buffers must be the same length.
+pub fn combine_into(dst: &mut [u8], src: &[u8], op: CombineOp) {
+    assert_eq!(dst.len(), src.len(), "combine over mismatched buffers");
+    let n = dst.len() / 8 * 8;
+    for (dc, sc) in dst[..n].chunks_exact_mut(8).zip(src[..n].chunks_exact(8)) {
+        let d = u64::from_le_bytes((&*dc).try_into().expect("8-byte chunk"));
+        let s = u64::from_le_bytes(sc.try_into().expect("8-byte chunk"));
+        let w = match op {
+            CombineOp::Or => d | s,
+            CombineOp::And => d & s,
+            CombineOp::AndNot => d & !s,
+        };
+        dc.copy_from_slice(&w.to_le_bytes());
+    }
+    for (d, s) in dst[n..].iter_mut().zip(src[n..].iter()) {
+        match op {
+            CombineOp::Or => *d |= *s,
+            CombineOp::And => *d &= *s,
+            CombineOp::AndNot => *d &= !*s,
+        }
+    }
+}
+
+/// Visit the first `count` fields of `data` in index order, unpacking a
+/// whole word of elements per load instead of a byte load + shift per
+/// element (the streaming-read kernel behind `RoomyBitArray::map`).
+pub fn for_each_unpacked(data: &[u8], bits: u8, count: u64, mut f: impl FnMut(u64, u8)) {
+    assert!(matches!(bits, 1 | 2 | 4 | 8), "bad field width {bits}");
+    let mask = field_mask(bits);
+    let epw = 64 / bits as u64;
+    let nwords = (count / epw) as usize;
+    let mut idx = 0u64;
+    for chunk in data[..nwords * 8].chunks_exact(8) {
+        let mut w = u64::from_le_bytes(chunk.try_into().expect("8-byte chunk"));
+        for _ in 0..epw {
+            f(idx, (w as u8) & mask);
+            w >>= bits;
+            idx += 1;
+        }
+    }
+    let per_byte = (8 / bits) as u64;
+    while idx < count {
+        let byte = data[(idx / per_byte) as usize];
+        let shift = ((idx % per_byte) as u8) * bits;
+        f(idx, (byte >> shift) & mask);
+        idx += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop_check;
+
+    /// Scalar reference: extract element `i` of a packed buffer.
+    fn get(data: &[u8], bits: u8, i: u64) -> u8 {
+        let per_byte = (8 / bits) as u64;
+        (data[(i / per_byte) as usize] >> (((i % per_byte) as u8) * bits)) & field_mask(bits)
+    }
+
+    fn packed(rng: &mut crate::testutil::Rng, nbytes: usize) -> Vec<u8> {
+        (0..nbytes).map(|_| rng.next_u64() as u8).collect()
+    }
+
+    #[test]
+    fn prop_count_and_histogram_match_scalar() {
+        prop_check("word-wise count == scalar count", 30, |rng| {
+            let bits = [1u8, 2, 4, 8][rng.range(0, 4)];
+            let per_byte = (8 / bits) as u64;
+            let nbytes = rng.range(0, 64);
+            let data = packed(rng, nbytes);
+            let max_elems = nbytes as u64 * per_byte;
+            let nelems = rng.range(0, max_elems as usize + 1) as u64;
+            let h = histogram(&data, bits, nelems);
+            assert_eq!(h.len(), 1 << bits);
+            for v in 0..(1u16 << bits) {
+                let expect =
+                    (0..nelems).filter(|&i| get(&data, bits, i) == v as u8).count() as u64;
+                assert_eq!(
+                    count_value(&data, bits, nelems, v as u8),
+                    expect,
+                    "bits={bits} n={nelems} v={v}"
+                );
+                assert_eq!(h[v as usize], expect);
+            }
+            assert_eq!(h.iter().sum::<u64>(), nelems, "histogram covers every element");
+        });
+    }
+
+    #[test]
+    fn prop_combine_matches_per_element() {
+        prop_check("word-wise combine == per-element", 30, |rng| {
+            let nbytes = rng.range(0, 100);
+            let a = packed(rng, nbytes);
+            let b = packed(rng, nbytes);
+            for op in [CombineOp::Or, CombineOp::And, CombineOp::AndNot] {
+                let mut dst = a.clone();
+                combine_into(&mut dst, &b, op);
+                for i in 0..nbytes {
+                    let expect = match op {
+                        CombineOp::Or => a[i] | b[i],
+                        CombineOp::And => a[i] & b[i],
+                        CombineOp::AndNot => a[i] & !b[i],
+                    };
+                    assert_eq!(dst[i], expect, "{op:?} byte {i}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_unpack_walk_matches_scalar() {
+        prop_check("word unpack walk == scalar gets", 30, |rng| {
+            let bits = [1u8, 2, 4, 8][rng.range(0, 4)];
+            let per_byte = (8 / bits) as u64;
+            let nbytes = rng.range(0, 48);
+            let data = packed(rng, nbytes);
+            let count = rng.range(0, (nbytes as u64 * per_byte) as usize + 1) as u64;
+            let mut seen = vec![];
+            for_each_unpacked(&data, bits, count, |i, v| seen.push((i, v)));
+            assert_eq!(seen.len() as u64, count);
+            for (k, (i, v)) in seen.iter().enumerate() {
+                assert_eq!(*i, k as u64, "visit order is index order");
+                assert_eq!(*v, get(&data, bits, *i));
+            }
+        });
+    }
+
+    #[test]
+    fn popcount_matches_scalar() {
+        prop_check("popcount_bytes == per-byte count_ones", 20, |rng| {
+            let data = packed(rng, rng.range(0, 80));
+            let expect: u64 = data.iter().map(|b| b.count_ones() as u64).sum();
+            assert_eq!(popcount_bytes(&data), expect);
+        });
+    }
+
+    #[test]
+    fn count_rejects_out_of_width_values() {
+        let r = std::panic::catch_unwind(|| count_value(&[0u8; 8], 2, 4, 7));
+        assert!(r.is_err(), "value wider than the field must panic");
+    }
+}

@@ -157,13 +157,18 @@ impl FlatTable {
         let mut arena = Vec::with_capacity(self.len * rs);
         let mut alive = Vec::with_capacity(self.len);
         let mask = new_cap - 1;
+        // One strided batched fingerprint sweep over the whole arena
+        // (dead records are hashed and skipped — cheaper than a scalar
+        // fp_bytes call per live record, and bit-exact with one).
+        let mut fps = Vec::new();
+        hashfn::fp_bytes_batch_strided_into(&self.arena, rs, self.ksize, &mut fps);
         for (i, a) in self.alive.iter().enumerate() {
             if !*a {
                 continue;
             }
             let rec = &self.arena[i * rs..(i + 1) * rs];
             let idx = alive.len() as u32;
-            let mut s = (hashfn::fp_bytes(&rec[..self.ksize]) as usize) & mask;
+            let mut s = (fps[i] as usize) & mask;
             while slots[s] != EMPTY {
                 s = (s + 1) & mask;
             }

@@ -17,6 +17,7 @@
 
 pub mod array;
 pub mod bitarray;
+pub mod bitkernels;
 pub mod element;
 pub mod flat;
 pub mod funcs;
@@ -107,6 +108,10 @@ impl Roomy {
         if cfg.hist || cfg.autotune == crate::config::AutotuneMode::Spans {
             crate::obs::hist::arm();
         }
+        // Pin the process-wide kernel dispatch (batched fingerprints,
+        // word kernels) to the configured mode. Every mode is bit-exact;
+        // this only selects which lane code runs.
+        crate::hashfn::set_kernel_mode(cfg.kernels);
         let cluster = Arc::new(Cluster::new(&cfg)?);
         Ok(Roomy {
             ctx: Arc::new(CtxInner {
@@ -407,6 +412,8 @@ impl Roomy {
         c.u64("bloom_bits_per_key", cfg.bloom_bits_per_key as u64);
         c.bool("bloom_approximate", cfg.bloom_approximate);
         c.str("autotune", &format!("{:?}", cfg.autotune));
+        c.str("kernels", cfg.kernels.as_str());
+        c.str("kernel_impl", crate::hashfn::kernel_impl());
         c.bool("hist", cfg.hist);
         match &cfg.trace_path {
             Some(p) => {
@@ -521,6 +528,10 @@ impl Roomy {
                 o.u64("depth_raises", at.depth_raises());
                 o.u64("depth_decays", at.depth_decays());
                 o.u64("hint_ahead", at.hint_ahead() as u64);
+                o.u64("width", at.width() as u64);
+                o.u64("width_shrinks", at.width_shrinks());
+                o.u64("width_grows", at.width_grows());
+                o.u64("steal_boosts", at.steal_boosts());
                 let eff: Vec<String> = self
                     .ctx
                     .cluster

@@ -8,7 +8,7 @@
 
 use std::sync::{Arc, Mutex, MutexGuard, Weak};
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, Topology};
 use crate::error::Result;
 use crate::storage::SpillBuffer;
 
@@ -97,6 +97,39 @@ pub fn encode_elt(out: &mut Vec<u8>, kind: OpKind, elt: &[u8]) {
     out.push(kind as u8);
     out.push(0);
     out.extend_from_slice(elt);
+}
+
+thread_local! {
+    /// Reusable bucket-route scratch for the batched staging path.
+    static ROUTE_BUF: std::cell::RefCell<Vec<u32>> =
+        std::cell::RefCell::new(Vec::with_capacity(1024));
+}
+
+/// Bulk delayed-op issue: route a whole chunk of fixed-size elements in
+/// **one batched fingerprint sweep** ([`Topology::route_batch_into`]) and
+/// stage one `[kind, 0, elt]` record per element into its bucket. Staging
+/// order within the chunk is element order, so the staged bytes — and
+/// therefore every downstream sync — are identical to a per-element
+/// `encode_elt` + `stage` loop; only the hash work is batched.
+pub fn stage_elt_batch(
+    staged: &StagedOps,
+    topo: &Topology,
+    kind: OpKind,
+    batch: &[u8],
+    rec_size: usize,
+) -> Result<()> {
+    ROUTE_BUF.with(|r| {
+        let mut routes = r.borrow_mut();
+        routes.clear();
+        topo.route_batch_into(batch, rec_size, &mut routes);
+        with_op_buf(|buf| {
+            for (elt, &b) in batch.chunks_exact(rec_size).zip(routes.iter()) {
+                encode_elt(buf, kind, elt);
+                staged.stage(b, buf)?;
+            }
+            Ok(())
+        })
+    })
 }
 
 /// Per-bucket spillable staging for one structure.
@@ -284,6 +317,43 @@ mod tests {
         let mut rec = [0u8; 4];
         assert!(r.read_exact_or_eof(&mut rec).unwrap());
         assert_eq!(rec, [2; 4]);
+    }
+
+    #[test]
+    fn stage_elt_batch_matches_scalar_loop() {
+        let t = tmpdir("staged_batch");
+        let c = mkcluster(t.path());
+        let topo = c.topology();
+        let batch: Vec<u8> = (0..40u64).flat_map(|v| v.to_le_bytes()).collect();
+
+        let bulk = StagedOps::new(&c, "bulk", 1 << 20);
+        stage_elt_batch(&bulk, &topo, OpKind::Add, &batch, 8).unwrap();
+
+        let scalar = StagedOps::new(&c, "scalar", 1 << 20);
+        with_op_buf(|buf| {
+            for elt in batch.chunks_exact(8) {
+                encode_elt(buf, OpKind::Add, elt);
+                scalar.stage(topo.route(elt), buf).unwrap();
+            }
+        });
+
+        for b in 0..topo.nbuckets() {
+            let mut take_bytes = |s: &StagedOps, dir: &str| {
+                let taken = s.take(b, &c, dir, 1 << 20);
+                let mut r = taken.reader().unwrap();
+                let mut out = Vec::new();
+                let mut rec = [0u8; 10]; // [kind, 0, 8-byte elt]
+                while r.read_exact_or_eof(&mut rec).unwrap() {
+                    out.extend_from_slice(&rec);
+                }
+                out
+            };
+            assert_eq!(
+                take_bytes(&bulk, "bulk"),
+                take_bytes(&scalar, "scalar"),
+                "bucket {b} staged bytes diverge"
+            );
+        }
     }
 
     #[test]

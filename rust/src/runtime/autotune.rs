@@ -41,6 +41,18 @@
 //!   drives the hint distance (skewed nodes mean idle workers that
 //!   profit from deeper cross-task warming). `Spans` implies arming the
 //!   histogram bank at `Roomy::open`.
+//!
+//! Spans mode additionally drives a **width policy**: the same per-node
+//! task-p95 deltas reveal how many nodes actually ran work and how
+//! skewed they were. When fewer nodes than workers are active under
+//! severe skew, the surplus worker slots are narrowed away
+//! ([`WorkerPool::set_effective_width`]) — they cannot drain the
+//! straggler's FIFO-owned queue and only churn steal attempts — and
+//! under extreme skew a `Bounded` steal policy is escalated to `Greedy`
+//! ([`WorkerPool::set_steal_boost`]; `Off` is never escalated). Width
+//! and steal aggressiveness, like depth and hints, change only *when*
+//! bytes move: every width trajectory is byte-identical, which
+//! `tests/determinism.rs` pins across kernels × workers × depths.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -102,6 +114,15 @@ pub struct Autotune {
     depth_decays: AtomicU64,
     /// Last hint distance applied (for reporting).
     hint_ahead: AtomicUsize,
+    /// Last effective pool width applied (for reporting; 0 until a
+    /// round has run).
+    width: AtomicUsize,
+    /// Rounds that narrowed the effective width below its previous value.
+    width_shrinks: AtomicU64,
+    /// Rounds that widened the effective width back toward the full pool.
+    width_grows: AtomicU64,
+    /// Rounds that requested the Bounded→Greedy steal escalation.
+    steal_boosts: AtomicU64,
 }
 
 impl Autotune {
@@ -114,6 +135,10 @@ impl Autotune {
             depth_raises: AtomicU64::new(0),
             depth_decays: AtomicU64::new(0),
             hint_ahead: AtomicUsize::new(1),
+            width: AtomicUsize::new(0),
+            width_shrinks: AtomicU64::new(0),
+            width_grows: AtomicU64::new(0),
+            steal_boosts: AtomicU64::new(0),
         }
     }
 
@@ -198,6 +223,10 @@ impl Autotune {
         };
         pool.set_hint_ahead(k);
         self.hint_ahead.store(pool.hint_ahead(), Ordering::Relaxed);
+        // Counter mode has no per-node task distributions to read skew
+        // from, so the width policy is spans-only; report the width in
+        // force without driving it.
+        self.width.store(pool.effective_width(), Ordering::Relaxed);
     }
 
     /// Spans mode: per-node stall-duration p95s (this round's histogram
@@ -238,20 +267,61 @@ impl Autotune {
                 p95s.push(delta.p95());
             }
         }
-        let k = if p95s.len() < 2 {
+        // `active` = nodes that ran tasks this round; `ratio` = straggler
+        // p95 over the median active node's p95 (1 = balanced).
+        let active = p95s.len();
+        let ratio = if active < 2 {
             1
         } else {
             p95s.sort_unstable();
-            let med = p95s[p95s.len() / 2].max(1);
-            match p95s[p95s.len() - 1] / med {
-                0..=1 => 1,
-                2..=3 => 2,
-                4..=7 => 3,
-                _ => MAX_HINT_AHEAD,
-            }
+            // Lower median: with the upper median, two active nodes
+            // would divide the max by itself and skew could never be
+            // detected.
+            let med = p95s[(active - 1) / 2].max(1);
+            p95s[active - 1] / med
+        };
+        let k = match ratio {
+            0..=1 => 1,
+            2..=3 => 2,
+            4..=7 => 3,
+            _ => MAX_HINT_AHEAD,
         };
         pool.set_hint_ahead(k);
         self.hint_ahead.store(pool.hint_ahead(), Ordering::Relaxed);
+
+        // Width policy: when fewer nodes than workers had any work *and*
+        // the skew is severe, the surplus slots can't drain the straggler
+        // (its queue is FIFO-owned by one home worker) — they only churn
+        // steal attempts. Narrow the pool to the active-node count;
+        // balanced or fully-active rounds grow back to the full pool.
+        // Width only changes how many threads a collective spawns, never
+        // task order or replay order, so every trajectory is
+        // byte-identical (pinned by `det_kernels_are_byte_transparent`).
+        let workers = pool.num_workers();
+        let prev = pool.effective_width();
+        let target = if active > 0 && active < workers && ratio >= 4 {
+            active
+        } else {
+            workers
+        };
+        pool.set_effective_width(target);
+        let now = pool.effective_width();
+        if now < prev {
+            self.width_shrinks.fetch_add(1, Ordering::Relaxed);
+        } else if now > prev {
+            self.width_grows.fetch_add(1, Ordering::Relaxed);
+        }
+        self.width.store(now, Ordering::Relaxed);
+
+        // Steal aggressiveness: under extreme skew the straggler's queue
+        // is worth draining from any slot — escalate Bounded→Greedy until
+        // the skew clears. (`Off` is never escalated; the pool enforces
+        // that.)
+        let boost = ratio >= 8;
+        if boost && !pool.steal_boost() {
+            self.steal_boosts.fetch_add(1, Ordering::Relaxed);
+        }
+        pool.set_steal_boost(boost);
     }
 
     /// Adaptation rounds run so far.
@@ -274,6 +344,26 @@ impl Autotune {
         self.hint_ahead.load(Ordering::Relaxed)
     }
 
+    /// Effective pool width last applied (0 before the first round).
+    pub fn width(&self) -> usize {
+        self.width.load(Ordering::Relaxed)
+    }
+
+    /// Rounds that narrowed the effective width (spans mode only).
+    pub fn width_shrinks(&self) -> u64 {
+        self.width_shrinks.load(Ordering::Relaxed)
+    }
+
+    /// Rounds that grew the effective width back toward the full pool.
+    pub fn width_grows(&self) -> u64 {
+        self.width_grows.load(Ordering::Relaxed)
+    }
+
+    /// Rounds that newly requested the Bounded→Greedy steal escalation.
+    pub fn steal_boosts(&self) -> u64 {
+        self.steal_boosts.load(Ordering::Relaxed)
+    }
+
     /// One human-readable summary line for [`crate::Roomy::report`].
     pub fn report(&self, disks: &[Arc<NodeDisk>]) -> String {
         let depths: Vec<String> = disks
@@ -281,13 +371,18 @@ impl Autotune {
             .map(|d| d.effective_depth().to_string())
             .collect();
         format!(
-            "autotune[{}]: {} rounds, depth +{}/-{}, effective depths [{}], hint ahead {}",
+            "autotune[{}]: {} rounds, depth +{}/-{}, effective depths [{}], hint ahead {}, \
+             width {} (+{}/-{}), steal boosts {}",
             self.mode(),
             self.rounds(),
             self.depth_raises(),
             self.depth_decays(),
             depths.join(" "),
             self.hint_ahead(),
+            self.width(),
+            self.width_grows(),
+            self.width_shrinks(),
+            self.steal_boosts(),
         )
     }
 }
@@ -446,5 +541,57 @@ mod tests {
         }
         at.adapt(std::slice::from_ref(&d0), &pool);
         assert_eq!(pool.hint_ahead(), 1);
+    }
+
+    /// Spans mode: the width policy narrows the pool when fewer nodes
+    /// than workers are active under severe skew, escalates stealing
+    /// under extreme skew, and grows back when the load rebalances.
+    #[test]
+    fn spans_width_follows_active_nodes_and_skew() {
+        use std::time::Duration;
+        let t = tmpdir("autotune_spans_width");
+        let d0 = disk(2, t.path());
+        let pool = WorkerPool::new(4);
+        let hist = Arc::new(Hist::new());
+        let at = Autotune::with_spans(4, Arc::clone(&hist));
+        assert_eq!(at.width(), 0, "no round yet");
+
+        // All four nodes active and balanced → full width, no boost.
+        for n in 0..4 {
+            for _ in 0..10 {
+                hist.record(Domain::Task, n, Duration::from_millis(1));
+            }
+        }
+        at.adapt(std::slice::from_ref(&d0), &pool);
+        assert_eq!(pool.effective_width(), 4);
+        assert_eq!(at.width(), 4);
+        assert!(!pool.steal_boost());
+        assert_eq!(at.width_shrinks(), 0);
+
+        // Only two nodes active, one a 20× straggler → narrow to the
+        // active count and escalate stealing.
+        for _ in 0..10 {
+            hist.record(Domain::Task, 0, Duration::from_millis(1));
+            hist.record(Domain::Task, 1, Duration::from_millis(20));
+        }
+        at.adapt(std::slice::from_ref(&d0), &pool);
+        assert_eq!(pool.effective_width(), 2, "narrow to the active nodes");
+        assert_eq!(at.width(), 2);
+        assert_eq!(at.width_shrinks(), 1);
+        assert!(pool.steal_boost(), "20× skew must escalate stealing");
+        assert_eq!(at.steal_boosts(), 1);
+
+        // Load rebalances across all nodes → grow back, boost clears.
+        for n in 0..4 {
+            for _ in 0..10 {
+                hist.record(Domain::Task, n, Duration::from_millis(1));
+            }
+        }
+        at.adapt(std::slice::from_ref(&d0), &pool);
+        assert_eq!(pool.effective_width(), 4);
+        assert_eq!(at.width_grows(), 1);
+        assert!(!pool.steal_boost());
+        let rep = at.report(std::slice::from_ref(&d0));
+        assert!(rep.contains("width 4 (+1/-1), steal boosts 1"), "report: {rep}");
     }
 }

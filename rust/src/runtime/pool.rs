@@ -484,6 +484,18 @@ pub struct WorkerPool {
     /// between collectives; hints never change what a task reads, only
     /// when bytes move, so any value is byte-identical.
     hint_ahead: AtomicUsize,
+    /// Effective worker width: threads actually spawned per collective
+    /// (`1..=workers`). The autotune width policy narrows this when few
+    /// nodes have work and task skew makes extra slots pure steal
+    /// contention. Like `hint_ahead`, it only moves *when* tasks run,
+    /// never what they compute — results and replay stay in task order,
+    /// so every width trajectory is byte-identical.
+    effective_width: AtomicUsize,
+    /// When set, a `Bounded` steal policy escalates to `Greedy` for the
+    /// next collectives (extreme-skew response: stragglers dominate, so
+    /// locality is worth trading for drain speed). `Off` is never
+    /// escalated — multi-node sharding relies on strict homing.
+    steal_boost: AtomicBool,
 }
 
 impl WorkerPool {
@@ -500,6 +512,8 @@ impl WorkerPool {
             capture: None,
             steal: StealPolicy::default(),
             hint_ahead: AtomicUsize::new(1),
+            effective_width: AtomicUsize::new(workers),
+            steal_boost: AtomicBool::new(false),
         }
     }
 
@@ -522,6 +536,40 @@ impl WorkerPool {
     /// The cross-task prefetch hint distance in force (default 1).
     pub fn hint_ahead(&self) -> usize {
         self.hint_ahead.load(Ordering::Relaxed)
+    }
+
+    /// Set the effective worker width, clamped to `1..=num_workers`.
+    /// Sampled once at the top of each collective, so a running
+    /// collective keeps the width it started with.
+    pub fn set_effective_width(&self, w: usize) {
+        self.effective_width.store(w.clamp(1, self.workers), Ordering::Relaxed);
+    }
+
+    /// The effective worker width in force (default: the full pool).
+    pub fn effective_width(&self) -> usize {
+        self.effective_width.load(Ordering::Relaxed)
+    }
+
+    /// Toggle the extreme-skew steal escalation (`Bounded` → `Greedy`
+    /// for subsequent collectives). A no-op under `Off` or `Greedy`.
+    pub fn set_steal_boost(&self, on: bool) {
+        self.steal_boost.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether the steal escalation is currently requested.
+    pub fn steal_boost(&self) -> bool {
+        self.steal_boost.load(Ordering::Relaxed)
+    }
+
+    /// The steal policy a collective starting now would run under:
+    /// the configured policy, escalated `Bounded` → `Greedy` while the
+    /// boost is set. `Off` is never escalated.
+    pub fn effective_steal_policy(&self) -> StealPolicy {
+        if self.steal == StealPolicy::Bounded && self.steal_boost() {
+            StealPolicy::Greedy
+        } else {
+            self.steal
+        }
     }
 
     /// Back op capture with scratch files on `disks` (task `t` scratches
@@ -601,9 +649,11 @@ impl WorkerPool {
         if ntasks == 0 {
             return Ok(Vec::new());
         }
-        let nthreads = self.workers.min(ntasks);
+        // Width and steal policy are sampled once per collective (like
+        // the hint distance) so every worker sees one consistent value.
+        let nthreads = self.effective_width().min(ntasks);
         let nodes = topo.nodes();
-        let source = TaskSource::build(ntasks, &topo, self.steal);
+        let source = TaskSource::build(ntasks, &topo, self.effective_steal_policy());
         self.stats.note_queue_depths(&source.depths);
         // Each task's hint fires at most once, whichever worker peeks it.
         let hinted: Vec<AtomicBool> = (0..ntasks).map(|_| AtomicBool::new(false)).collect();
@@ -1013,6 +1063,66 @@ mod tests {
         got.sort();
         // every task except the two queue fronts is hinted exactly once
         assert_eq!(got, vec![2, 3, 4, 5, 6, 7]);
+    }
+
+    /// The effective width clamps to `1..=workers` and bounds the
+    /// threads a collective actually spawns.
+    #[test]
+    fn effective_width_narrows_the_pool() {
+        let p = pool(4);
+        assert_eq!(p.effective_width(), 4);
+        p.set_effective_width(0); // clamps low
+        assert_eq!(p.effective_width(), 1);
+        p.set_effective_width(99); // clamps high
+        assert_eq!(p.effective_width(), 4);
+
+        // Width 1: tasks can never overlap, whatever the topology says.
+        p.set_effective_width(1);
+        let in_flight = AtomicUsize::new(0);
+        let results = p
+            .run_tagged("t", 8, Topology::new(4, 2), |_| {}, |t| {
+                assert_eq!(
+                    in_flight.fetch_add(1, Ordering::SeqCst),
+                    0,
+                    "width 1 must serialize tasks"
+                );
+                std::thread::sleep(std::time::Duration::from_micros(100));
+                in_flight.fetch_sub(1, Ordering::SeqCst);
+                Ok(t * 2)
+            })
+            .unwrap();
+        assert_eq!(results, (0..8).map(|t| t * 2).collect::<Vec<_>>());
+
+        // Restored width runs the full pool again.
+        p.set_effective_width(4);
+        let r = p.run_tasks("t", 6, |t| Ok(t)).unwrap();
+        assert_eq!(r, (0..6).collect::<Vec<_>>());
+    }
+
+    /// The steal boost escalates `Bounded` to `Greedy` and nothing else:
+    /// `Off` keeps the multi-node sharding contract, `Greedy` is already
+    /// maximal.
+    #[test]
+    fn steal_boost_escalates_bounded_only() {
+        let mut p = pool(2);
+        assert_eq!(p.effective_steal_policy(), StealPolicy::Bounded);
+        p.set_steal_boost(true);
+        assert_eq!(p.effective_steal_policy(), StealPolicy::Greedy);
+        p.set_steal_boost(false);
+        assert_eq!(p.effective_steal_policy(), StealPolicy::Bounded);
+
+        p.set_steal_policy(StealPolicy::Off);
+        p.set_steal_boost(true);
+        assert_eq!(p.effective_steal_policy(), StealPolicy::Off, "Off is never escalated");
+
+        p.set_steal_policy(StealPolicy::Greedy);
+        assert_eq!(p.effective_steal_policy(), StealPolicy::Greedy);
+
+        // A boosted collective still returns results in task order.
+        p.set_steal_policy(StealPolicy::Bounded);
+        p.set_steal_boost(true);
+        let r = p.run_tagged("t", 10, Topology::new(2, 5), |_| {}, |t| Ok(t)).unwrap();
+        assert_eq!(r, (0..10).collect::<Vec<_>>());
     }
 
     /// Captured ops must replay in (task, issue) order — the serial byte

@@ -48,6 +48,12 @@ use std::sync::Mutex;
 use crate::hashfn::fp_bytes;
 use crate::metrics::DedupStats;
 
+thread_local! {
+    /// Scratch fingerprints for [`DedupFilter::insert_batch`]'s batched
+    /// hash sweep (reused across calls; never observable to callers).
+    static BATCH_FPS: std::cell::RefCell<Vec<u64>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// A scalable bloom filter over raw record bytes.
 ///
 /// Grows as a sequence of sub-filters with doubling capacity (starting
@@ -99,7 +105,14 @@ impl ShardBloom {
     /// positions are `h1 + i·h2`, with `h2` forced odd so it is
     /// invertible mod any power-of-two bit count.
     fn hash_pair(rec: &[u8]) -> (u64, u64) {
-        let h1 = fp_bytes(rec);
+        Self::pair_from_fp(fp_bytes(rec))
+    }
+
+    /// The probe pair derived from an already-computed fingerprint.
+    /// Split out so batched insert paths can fingerprint a whole chunk
+    /// with [`crate::hashfn::fp_bytes_batch_into`] and still land on the
+    /// exact bit positions the scalar path sets.
+    fn pair_from_fp(h1: u64) -> (u64, u64) {
         // Independent-looking second hash from the same fingerprint:
         // one more splitmix-style avalanche round, forced odd.
         let mut h2 = h1 ^ 0x9E3779B97F4A7C15;
@@ -111,10 +124,17 @@ impl ShardBloom {
 
     /// Record `rec` as seen.
     pub fn insert(&mut self, rec: &[u8]) {
+        self.insert_fp(fp_bytes(rec));
+    }
+
+    /// Record a pre-fingerprinted record as seen — bit-identical to
+    /// [`insert`](Self::insert) fed the record whose fingerprint is
+    /// `h1` (the batch entry point's contract).
+    pub(crate) fn insert_fp(&mut self, h1: u64) {
         if self.newest_count >= self.newest_cap {
             self.grow();
         }
-        let (h1, h2) = Self::hash_pair(rec);
+        let (h1, h2) = Self::pair_from_fp(h1);
         let words = self.subs.last_mut().expect("at least one sub-filter");
         let nbits = (words.len() * 64) as u64;
         for i in 0..self.k as u64 {
@@ -247,16 +267,24 @@ impl DedupFilter {
     }
 
     /// Feed a batch of `rec_size`-byte records of bucket `b` under one
-    /// lock acquisition (streaming append paths).
+    /// lock acquisition (streaming append paths). Fingerprints the whole
+    /// chunk with the batched kernel before taking the lock, then sets
+    /// the same bits a per-record [`insert`](Self::insert) loop would.
     pub fn insert_batch(&self, b: usize, batch: &[u8], rec_size: usize) {
         let n = (batch.len() / rec_size) as u64;
         if n == 0 {
             return;
         }
-        self.with_shard(b, |s| {
-            for rec in batch.chunks_exact(rec_size) {
-                s.insert(rec);
-            }
+        BATCH_FPS.with(|f| {
+            let mut fps = f.borrow_mut();
+            fps.clear();
+            let whole = &batch[..n as usize * rec_size];
+            crate::hashfn::fp_bytes_batch_into(whole, rec_size, &mut fps);
+            self.with_shard(b, |s| {
+                for &h1 in fps.iter() {
+                    s.insert_fp(h1);
+                }
+            });
         });
         self.stats.inserts.fetch_add(n, Ordering::Relaxed);
     }
@@ -355,6 +383,26 @@ mod tests {
         for v in 0..1000u64 {
             assert!(!f.maybe_contains(&v.to_le_bytes()));
         }
+    }
+
+    #[test]
+    fn insert_batch_sets_identical_bits_to_scalar_inserts() {
+        let stats = std::sync::Arc::new(DedupStats::default());
+        let batched = DedupFilter::new(2, 10, false, stats.clone());
+        let scalar = DedupFilter::new(2, 10, false, stats);
+        let mut rng = Rng::new(0xB100F4);
+        let mut chunk = Vec::new();
+        for _ in 0..3000 {
+            chunk.extend_from_slice(&rng.next_u64().to_le_bytes());
+        }
+        batched.insert_batch(1, &chunk, 8);
+        for rec in chunk.chunks_exact(8) {
+            scalar.insert(1, rec);
+        }
+        let b = batched.shards[1].lock().unwrap();
+        let s = scalar.shards[1].lock().unwrap();
+        assert_eq!(b.subs, s.subs, "batched insert diverged from scalar bit positions");
+        assert_eq!(b.inserts(), s.inserts());
     }
 
     #[test]

@@ -6,7 +6,12 @@
 //!
 //! Records compare as raw byte strings (memcmp). Roomy only needs a total
 //! order consistent with equality; element encodings choose their byte
-//! layout accordingly.
+//! layout accordingly. For records that are a whole number of `u64`
+//! words, the hot compare/equality loops here take a word-wise fast path
+//! (big-endian word loads are order-identical to memcmp) instead of
+//! byte-at-a-time slice comparison — part of the raw-speed kernel pass,
+//! pinned bit-exact by `word_cmp_matches_memcmp` below and the kernel
+//! property suite.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -25,6 +30,45 @@ use crate::obs::trace;
 /// [`crate::cluster::Cluster::new`] purges them. Keyed on the *output*
 /// path, which is unique per concurrent sort (two collectives may sort
 /// the same input into different outputs, never into the same one).
+/// Compare two equal-length records, word-wise when they are a whole
+/// number of `u64` words. Big-endian word loads preserve memcmp order,
+/// so this is exactly `a.cmp(b)` — just without the per-byte tail logic
+/// for the fixed sizes Roomy's element codecs overwhelmingly produce.
+#[inline]
+pub(crate) fn cmp_records(a: &[u8], b: &[u8]) -> std::cmp::Ordering {
+    debug_assert_eq!(a.len(), b.len());
+    if a.len() % 8 != 0 {
+        return a.cmp(b);
+    }
+    for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+        let wa = u64::from_be_bytes(ca.try_into().expect("8-byte chunk"));
+        let wb = u64::from_be_bytes(cb.try_into().expect("8-byte chunk"));
+        if wa != wb {
+            return wa.cmp(&wb);
+        }
+    }
+    std::cmp::Ordering::Equal
+}
+
+/// Word-wise equality for equal-length records: whole `u64` loads with a
+/// fused-OR difference accumulator, byte tail folded into a final word.
+/// Exactly `a == b`.
+#[inline]
+pub(crate) fn records_equal(a: &[u8], b: &[u8]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut diff = 0u64;
+    let (wa, ta) = (a.chunks_exact(8), &a[a.len() - a.len() % 8..]);
+    let (wb, tb) = (b.chunks_exact(8), &b[b.len() - b.len() % 8..]);
+    for (ca, cb) in wa.zip(wb) {
+        diff |= u64::from_le_bytes(ca.try_into().expect("8-byte chunk"))
+            ^ u64::from_le_bytes(cb.try_into().expect("8-byte chunk"));
+    }
+    for (&x, &y) in ta.iter().zip(tb.iter()) {
+        diff |= (x ^ y) as u64;
+    }
+    diff == 0
+}
+
 fn run_prefix(output: &Path) -> PathBuf {
     let flat: String = output
         .to_string_lossy()
@@ -63,14 +107,34 @@ pub fn make_runs(
         if n == 0 {
             break;
         }
-        // Sort record *views* then write in order (avoids moving payloads
-        // twice for large records).
-        let mut views: Vec<&[u8]> = buf.chunks_exact(rec_size).collect();
-        views.sort_unstable();
         let run_rel = tmp_prefix.as_ref().with_extension(format!("run{}", runs.len()));
         let mut w = WriteBehindWriter::create(disk, &run_rel, rec_size)?;
-        for v in views {
-            w.push(v)?;
+        if rec_size == 8 {
+            // Word-wise fast path: a BE u64 load is order-identical to
+            // memcmp, so sort the decoded integers instead of paying a
+            // memcmp per comparison (the dominant element width).
+            let mut keys: Vec<u64> = buf
+                .chunks_exact(8)
+                .map(|c| u64::from_be_bytes(c.try_into().expect("8-byte record")))
+                .collect();
+            keys.sort_unstable();
+            for key in keys {
+                w.push(&key.to_be_bytes())?;
+            }
+        } else {
+            // Sort record *views* then write in order (avoids moving
+            // payloads twice for large records). Word-wise compare for
+            // whole-word records, memcmp otherwise (same order either
+            // way — see `cmp_records`).
+            let mut views: Vec<&[u8]> = buf.chunks_exact(rec_size).collect();
+            if rec_size % 8 == 0 {
+                views.sort_unstable_by(|a, b| cmp_records(a, b));
+            } else {
+                views.sort_unstable();
+            }
+            for v in views {
+                w.push(v)?;
+            }
         }
         w.finish()?;
         runs.push(run_rel);
@@ -112,7 +176,7 @@ pub fn merge_runs(
     let mut have_last = false;
     let mut written = 0u64;
     while let Some(Reverse((rec, i))) = heap.pop() {
-        let emit = !(dedup && have_last && last[..] == rec[..]);
+        let emit = !(dedup && have_last && records_equal(&last, &rec));
         if emit {
             writer.push(&rec)?;
             written += 1;
@@ -158,6 +222,54 @@ pub fn sort_file(
     Ok(n)
 }
 
+/// Hash-partition an unsorted record file into per-bucket run files:
+/// each chunk is fingerprinted with the batched routing kernel
+/// ([`crate::hashfn::route_batch_into`]) and its records scattered to
+/// `output_for(bucket)`. Record order within a bucket is input order, so
+/// the output files are a deterministic function of the input bytes and
+/// `nbuckets` regardless of kernel mode. Returns records per bucket.
+/// This is the shuffle primitive behind re-bucketing a structure onto a
+/// different bucket count (every output is created, empty buckets
+/// included, so downstream merges see a complete file set).
+pub fn partition_file(
+    disk: &Arc<NodeDisk>,
+    input: impl AsRef<Path>,
+    output_for: impl Fn(u32) -> PathBuf,
+    rec_size: usize,
+    nbuckets: u32,
+    chunk_bytes: usize,
+) -> Result<Vec<u64>> {
+    let mut sp = trace::span(trace::Kind::SortRuns, "sort.partition", Some(disk.node()));
+    let mut counts = vec![0u64; nbuckets as usize];
+    let mut writers = Vec::with_capacity(nbuckets as usize);
+    for b in 0..nbuckets {
+        writers.push(RecordWriter::create(disk, output_for(b), rec_size)?);
+    }
+    if disk.exists(&input) {
+        let mut reader = PrefetchReader::open(disk, &input, rec_size)?;
+        let recs_per_chunk = (chunk_bytes / rec_size).max(1);
+        let mut buf = scratch::record_buf();
+        let mut routes: Vec<u32> = Vec::new();
+        loop {
+            let n = reader.read_batch(&mut buf, recs_per_chunk)?;
+            if n == 0 {
+                break;
+            }
+            routes.clear();
+            crate::hashfn::route_batch_into(&buf, rec_size, nbuckets, &mut routes);
+            for (rec, &b) in buf.chunks_exact(rec_size).zip(routes.iter()) {
+                writers[b as usize].push(rec)?;
+                counts[b as usize] += 1;
+            }
+        }
+    }
+    for w in writers {
+        w.finish()?;
+    }
+    sp.set_args(counts.iter().sum(), nbuckets as u64);
+    Ok(counts)
+}
+
 /// Streaming sorted-merge difference: records of sorted `a` that do not
 /// appear in sorted `b` (every occurrence of a matching record is
 /// removed — RoomyList `removeAll` semantics). Returns records written.
@@ -189,7 +301,7 @@ pub fn merge_diff(
     let mut written = 0u64;
     while have_a {
         if have_b {
-            match rec_a.cmp(&rec_b) {
+            match cmp_records(&rec_a, &rec_b) {
                 std::cmp::Ordering::Less => {
                     out.push(&rec_a)?;
                     written += 1;
@@ -359,6 +471,135 @@ mod tests {
         let n = merge_diff(&d, "a.dat", "nope.dat", "c.dat", 4).unwrap();
         assert_eq!(n, 2);
         assert_eq!(read_u32s(&d, "c.dat"), vec![1, 2]);
+    }
+
+    #[test]
+    fn word_cmp_matches_memcmp() {
+        prop_check("cmp_records/records_equal == memcmp", 20, |rng| {
+            for size in [8usize, 16, 24, 5, 12] {
+                let a: Vec<u8> = (0..size).map(|_| rng.below(4) as u8).collect();
+                let b: Vec<u8> = (0..size).map(|_| rng.below(4) as u8).collect();
+                assert_eq!(cmp_records(&a, &b), a.cmp(&b), "size {size}");
+                assert_eq!(records_equal(&a, &b), a == b, "size {size}");
+                assert_eq!(cmp_records(&a, &a), std::cmp::Ordering::Equal);
+                assert!(records_equal(&b, &b));
+            }
+        });
+    }
+
+    fn write_u64s(d: &NodeDisk, rel: &str, vals: &[u64]) {
+        let mut w = RecordWriter::create(d, rel, 8).unwrap();
+        for v in vals {
+            w.push(&v.to_be_bytes()).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    fn read_u64s(d: &NodeDisk, rel: &str) -> Vec<u64> {
+        let mut out = vec![];
+        super::super::chunkfile::for_each_record(d, rel, 8, 256, |rec| {
+            out.push(u64::from_be_bytes(rec.try_into().unwrap()));
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn word_width_records_take_fast_paths() {
+        // 8-byte records exercise the integer-key run sort, the
+        // word-wise dedup equality, and the word-wise diff compare.
+        let t = tmpdir("extsort_u64");
+        let d = disk(t.path());
+        let vals: Vec<u64> = (0..2000).map(|i| (i * 0x9E3779B97F4A7C15u64) >> 13).collect();
+        let mut with_dups = vals.clone();
+        with_dups.extend(vals.iter().step_by(3));
+        write_u64s(&d, "in.dat", &with_dups);
+        let n = sort_file(&d, "in.dat", "out.dat", 8, 256, true).unwrap();
+        let mut expect: Vec<u64> =
+            std::collections::BTreeSet::from_iter(with_dups.iter().copied())
+                .into_iter()
+                .collect();
+        assert_eq!(n, expect.len() as u64);
+        assert_eq!(read_u64s(&d, "out.dat"), expect);
+
+        let mut bvals: Vec<u64> = vals.iter().copied().step_by(2).collect();
+        bvals.sort_unstable();
+        write_u64s(&d, "b.dat", &bvals);
+        let n = merge_diff(&d, "out.dat", "b.dat", "c.dat", 8).unwrap();
+        expect.retain(|v| !bvals.contains(v));
+        assert_eq!(n, expect.len() as u64);
+        assert_eq!(read_u64s(&d, "c.dat"), expect);
+    }
+
+    #[test]
+    fn multiword_records_sort_like_memcmp() {
+        // 16-byte records exercise the word-wise view comparator.
+        let t = tmpdir("extsort_w16");
+        let d = disk(t.path());
+        let mut recs: Vec<[u8; 16]> = vec![];
+        let mut w = RecordWriter::create(&d, "in.dat", 16).unwrap();
+        for i in 0..500u64 {
+            let mut r = [0u8; 16];
+            r[..8].copy_from_slice(&((i * 31) % 17).to_be_bytes());
+            r[8..].copy_from_slice(&(i ^ 0xABCD).to_be_bytes());
+            w.push(&r).unwrap();
+            recs.push(r);
+        }
+        w.finish().unwrap();
+        sort_file(&d, "in.dat", "out.dat", 16, 128, false).unwrap();
+        recs.sort();
+        let mut got = vec![];
+        super::super::chunkfile::for_each_record(&d, "out.dat", 16, 64, |rec| {
+            got.push(<[u8; 16]>::try_from(rec).unwrap());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, recs);
+    }
+
+    #[test]
+    fn partition_file_routes_every_record_to_its_bucket() {
+        let t = tmpdir("extsort_part");
+        let d = disk(t.path());
+        let vals: Vec<u64> = (0..1500).map(|i| i * 3 + 1).collect();
+        write_u64s(&d, "in.dat", &vals);
+        let nb = 7u32;
+        let counts =
+            partition_file(&d, "in.dat", |b| PathBuf::from(format!("part{b}.dat")), 8, nb, 256)
+                .unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), vals.len() as u64);
+        let mut seen = vec![];
+        for b in 0..nb {
+            let part = read_u64s(&d, &format!("part{b}.dat"));
+            assert_eq!(counts[b as usize], part.len() as u64);
+            for v in part {
+                assert_eq!(
+                    crate::hashfn::bucket_of_bytes(&v.to_be_bytes(), nb),
+                    b,
+                    "record {v} landed in wrong bucket"
+                );
+                seen.push(v);
+            }
+        }
+        seen.sort_unstable();
+        let mut expect = vals.clone();
+        expect.sort_unstable();
+        assert_eq!(seen, expect, "partition must be a permutation of the input");
+    }
+
+    #[test]
+    fn partition_missing_input_creates_empty_buckets() {
+        let t = tmpdir("extsort_part_empty");
+        let d = disk(t.path());
+        let counts =
+            partition_file(&d, "nope.dat", |b| PathBuf::from(format!("p{b}.dat")), 8, 3, 256)
+                .unwrap();
+        assert_eq!(counts, vec![0, 0, 0]);
+        for b in 0..3 {
+            assert!(d.exists(format!("p{b}.dat")));
+            assert_eq!(d.len(format!("p{b}.dat")), 0);
+        }
     }
 
     #[test]

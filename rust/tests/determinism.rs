@@ -458,6 +458,103 @@ fn det_autotune_is_byte_transparent() {
     }
 }
 
+/// The raw-speed kernels are byte-transparent: forcing the scalar
+/// reference kernels versus letting dispatch pick the widest available
+/// implementation (`Auto` → AVX2 or the portable 4-lane path) produces
+/// identical on-disk bytes and identical order-sensitive reduces, across
+/// num_workers {1, 4} × pipeline depth {0, 4} — with (scalar, depth 0,
+/// serial) as the reference cell. The workload routes through every
+/// batched-fingerprint consumer: list/set staging, hashtable bucket
+/// routing, dup elimination (word-wise extsort runs and merges), and
+/// bit-array update/count kernels.
+///
+/// (Kernel dispatch is process-global — `Roomy::open` pins it from
+/// `cfg.kernels` — but every mode is bit-exact by construction, so
+/// concurrent tests re-pinning it cannot perturb these digests; that
+/// indifference is exactly what this matrix demands.)
+#[test]
+fn det_kernels_are_byte_transparent() {
+    use roomy::KernelMode;
+    let grid: [(KernelMode, usize, usize); 8] = [
+        (KernelMode::Scalar, 0, 1),
+        (KernelMode::Scalar, 0, 4),
+        (KernelMode::Scalar, 4, 1),
+        (KernelMode::Scalar, 4, 4),
+        (KernelMode::Auto, 0, 1),
+        (KernelMode::Auto, 0, 4),
+        (KernelMode::Auto, 4, 1),
+        (KernelMode::Auto, 4, 4),
+    ];
+    let workload = |r: &Roomy, rng: &mut Rng| -> u64 {
+        let l = r.list::<u64>("l").unwrap();
+        let s = r.set::<u64>("s").unwrap();
+        let ht = r.hash_table::<u64, u64>("h").unwrap();
+        let ba = r.bit_array("b", 2_048, 2).unwrap();
+        let bump_ht = ht.register_update(|k, cur: Option<&u64>, p: &u64| {
+            Some(cur.copied().unwrap_or(*k).wrapping_add(*p))
+        });
+        let bump_ba = ba.register_update(|_i, cur, p: &u8| cur.wrapping_add(*p) & 3);
+        for _round in 0..3 {
+            for _ in 0..600 {
+                l.add(&rng.below(400)).unwrap();
+                let v = rng.below(350);
+                if rng.chance(0.8) {
+                    s.add(&v).unwrap();
+                } else {
+                    s.remove(&v).unwrap();
+                }
+                let k = rng.below(250);
+                match rng.range(0, 4) {
+                    0 => ht.insert(&k, &rng.next_u64()).unwrap(),
+                    1 => ht.remove(&k).unwrap(),
+                    _ => ht.update(&k, &(rng.next_u64() >> 40), bump_ht).unwrap(),
+                }
+                ba.update(rng.below(2_048), &((rng.below(3) + 1) as u8), bump_ba)
+                    .unwrap();
+            }
+            l.sync().unwrap();
+            s.sync().unwrap();
+            ht.sync().unwrap();
+            ba.sync().unwrap();
+        }
+        l.remove_dupes().unwrap(); // extsort: runs, word-wise merge, dedup
+        let h = l
+            .reduce(|| 0u64, |acc, v| order_hash(acc, *v), order_hash)
+            .unwrap();
+        let h = s.reduce(|| h, |acc, v| order_hash(acc, *v), order_hash).unwrap();
+        let h = ht
+            .reduce(|| h, |acc, k, v| order_hash(acc, k ^ v), order_hash)
+            .unwrap();
+        (0..4u8).fold(h, |acc, v| order_hash(acc, ba.count_value(v)))
+    };
+    let mut outcomes = Vec::new();
+    for &(kernels, depth, nw) in &grid {
+        let t = tmpdir(&format!("det_kern_{kernels}_d{depth}_w{nw}"));
+        let mut cfg = RoomyConfig::for_testing(t.path());
+        cfg.workers = 3;
+        cfg.buckets_per_worker = 2;
+        cfg.num_workers = nw;
+        cfg.io_pipeline_depth = depth;
+        cfg.kernels = kernels;
+        let r = Roomy::open(cfg).unwrap();
+        let mut rng = Rng::new(0xD15EA5E);
+        let value = workload(&r, &mut rng);
+        drop(r);
+        outcomes.push((kernels, depth, nw, value, dir_digest(t.path())));
+    }
+    let (_, _, _, v0, d0) = outcomes[0];
+    for (kernels, depth, nw, v, d) in &outcomes[1..] {
+        assert_eq!(
+            *v, v0,
+            "value diverged at kernels={kernels} depth={depth} num_workers={nw}"
+        );
+        assert_eq!(
+            *d, d0,
+            "on-disk bytes diverged at kernels={kernels} depth={depth} num_workers={nw}"
+        );
+    }
+}
+
 /// The flight recorder is byte-transparent: the same dup-heavy
 /// multi-structure workload digests identically with tracing off and
 /// with tracing armed — across num_workers {1, 4} × pipeline depth

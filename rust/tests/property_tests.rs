@@ -257,8 +257,10 @@ fn prop_extsort_sorted_and_lossless_across_chunk_boundaries() {
     prop_check("extsort sorted + lossless", 15, |rng| {
         let t = roomy::testutil::tmpdir("pt_extsort");
         let d = extsort_disk(t.path());
-        // variable record size stresses batch/boundary arithmetic
-        let rec_size = [2usize, 4, 7, 16][rng.range(0, 4)];
+        // variable record size stresses batch/boundary arithmetic; 8 and
+        // 16 take the word-wise integer/multiword sort fast paths, which
+        // must agree with the memcmp-ordered model below
+        let rec_size = [2usize, 4, 7, 8, 16][rng.range(0, 5)];
         let n = rng.range(0, 600);
         let recs: Vec<Vec<u8>> = (0..n).map(|_| rng.bytes(rec_size)).collect();
         write_records(&d, "in.dat", &recs, rec_size);
@@ -312,22 +314,139 @@ fn prop_merge_diff_removes_every_occurrence() {
     prop_check("merge_diff == multiset minus set", 12, |rng| {
         let t = roomy::testutil::tmpdir("pt_diff");
         let d = extsort_disk(t.path());
-        let mut a: Vec<Vec<u8>> = (0..rng.range(0, 300))
-            .map(|_| (rng.below(50) as u32).to_be_bytes().to_vec())
-            .collect();
-        let mut b: Vec<Vec<u8>> = (0..rng.range(0, 100))
-            .map(|_| (rng.below(50) as u32).to_be_bytes().to_vec())
-            .collect();
+        // 8/16 take the word-wise compare/equality kernels; 4 the byte path
+        let rec_size = [4usize, 8, 16][rng.range(0, 3)];
+        let mk = |rng: &mut Rng, n: usize| -> Vec<Vec<u8>> {
+            (0..n)
+                .map(|_| {
+                    let mut rec = vec![0u8; rec_size];
+                    // tiny value domain so diff actually removes records
+                    rec[rec_size - 1] = rng.below(50) as u8;
+                    rec[0] = rng.below(3) as u8;
+                    rec
+                })
+                .collect()
+        };
+        let na = rng.range(0, 300);
+        let nb = rng.range(0, 100);
+        let mut a = mk(rng, na);
+        let mut b = mk(rng, nb);
         a.sort();
         b.sort();
-        write_records(&d, "a.dat", &a, 4);
-        write_records(&d, "b.dat", &b, 4);
-        let n = roomy::storage::extsort::merge_diff(&d, "a.dat", "b.dat", "c.dat", 4).unwrap();
+        write_records(&d, "a.dat", &a, rec_size);
+        write_records(&d, "b.dat", &b, rec_size);
+        let n =
+            roomy::storage::extsort::merge_diff(&d, "a.dat", "b.dat", "c.dat", rec_size)
+                .unwrap();
         let bset: BTreeSet<&Vec<u8>> = b.iter().collect();
         let expect: Vec<Vec<u8>> =
             a.iter().filter(|r| !bset.contains(r)).cloned().collect();
         assert_eq!(n as usize, expect.len());
-        assert_eq!(read_records(&d, "c.dat", 4), expect);
+        assert_eq!(read_records(&d, "c.dat", rec_size), expect);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Raw-speed kernel equivalences: the batched/lane fingerprint kernels
+// and the word-wise bitset kernels are drop-in replacements for their
+// scalar/byte-wise twins — bit for bit, under every dispatch mode.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_batched_fingerprints_match_scalar_in_every_mode() {
+    use roomy::hashfn;
+    use roomy::KernelMode;
+    prop_check("batched fp == scalar fp, all modes", 12, |rng| {
+        let rec_size = rng.range(1, 33);
+        let n = rng.range(0, 200);
+        let mut batch = Vec::with_capacity(n * rec_size);
+        for _ in 0..n {
+            batch.extend_from_slice(&rng.bytes(rec_size));
+        }
+        let scalar: Vec<u64> =
+            batch.chunks_exact(rec_size).map(hashfn::fp_bytes).collect();
+        for mode in [KernelMode::Scalar, KernelMode::Portable, KernelMode::Auto] {
+            let mut got = Vec::new();
+            hashfn::fp_bytes_batch_with(mode, &batch, rec_size, &mut got);
+            assert_eq!(got, scalar, "fp_bytes_batch diverged in {mode}");
+        }
+        // the fused routing path agrees with per-record bucket_of_bytes
+        // under whatever mode the process is currently dispatching
+        let nbuckets = rng.range(1, 64) as u32;
+        let mut routes = Vec::new();
+        hashfn::route_batch_into(&batch, rec_size, nbuckets, &mut routes);
+        let expect: Vec<u32> = batch
+            .chunks_exact(rec_size)
+            .map(|rec| hashfn::bucket_of_bytes(rec, nbuckets))
+            .collect();
+        assert_eq!(routes, expect);
+        // word batches: k u64 words per record
+        let k = rng.range(1, 5);
+        let nw = rng.range(0, 80);
+        let words: Vec<u64> = (0..nw * k).map(|_| rng.next_u64()).collect();
+        let scalar_w: Vec<u64> = words.chunks_exact(k).map(hashfn::fp_words).collect();
+        for mode in [KernelMode::Scalar, KernelMode::Portable, KernelMode::Auto] {
+            let mut got = Vec::new();
+            hashfn::fp_words_batch_with(mode, &words, k, &mut got);
+            assert_eq!(got, scalar_w, "fp_words_batch diverged in {mode}");
+        }
+        // strided arena sweep: key prefix of each slot
+        let stride = rec_size + rng.range(0, 9);
+        let slots = rng.range(0, 60);
+        let arena = rng.bytes(slots * stride);
+        let mut got = Vec::new();
+        hashfn::fp_bytes_batch_strided_into(&arena, stride, rec_size, &mut got);
+        let expect: Vec<u64> = arena
+            .chunks_exact(stride)
+            .map(|slot| hashfn::fp_bytes(&slot[..rec_size]))
+            .collect();
+        assert_eq!(got, expect, "strided batch diverged");
+    });
+}
+
+#[test]
+fn prop_wordwise_bitset_kernels_match_bytewise() {
+    use roomy::roomy::bitkernels::{self, CombineOp};
+    prop_check("word-wise bitset kernels == scalar", 12, |rng| {
+        let bits = [1u8, 2, 4, 8][rng.range(0, 4)];
+        let per = (8 / bits) as usize;
+        let nbytes = rng.range(0, 200);
+        let data = rng.bytes(nbytes);
+        let nelems = rng.range(0, nbytes * per + 1) as u64;
+        let mask = bitkernels::field_mask(bits);
+        let get = |i: u64| {
+            let i = i as usize;
+            (data[i / per] >> ((i % per) as u8 * bits)) & mask
+        };
+        // count_value + histogram vs scalar extraction
+        let hist = bitkernels::histogram(&data, bits, nelems);
+        for v in 0..=mask {
+            let expect = (0..nelems).filter(|&i| get(i) == v).count() as u64;
+            assert_eq!(
+                bitkernels::count_value(&data, bits, nelems, v),
+                expect,
+                "count_value({v}) bits={bits} nelems={nelems}"
+            );
+            assert_eq!(hist[v as usize], expect);
+        }
+        // unpacked walk visits every field in order
+        let mut walked = Vec::new();
+        bitkernels::for_each_unpacked(&data, bits, nelems, |i, v| walked.push((i, v)));
+        let expect: Vec<(u64, u8)> = (0..nelems).map(|i| (i, get(i))).collect();
+        assert_eq!(walked, expect);
+        // combine sweeps vs per-byte boolean algebra
+        let other = rng.bytes(nbytes);
+        for (op, f) in [
+            (CombineOp::Or, (|a, b| a | b) as fn(u8, u8) -> u8),
+            (CombineOp::And, |a, b| a & b),
+            (CombineOp::AndNot, |a, b| a & !b),
+        ] {
+            let mut dst = data.clone();
+            let expect: Vec<u8> =
+                data.iter().zip(&other).map(|(&a, &b)| f(a, b)).collect();
+            bitkernels::combine_into(&mut dst, &other, op);
+            assert_eq!(dst, expect, "{op:?} sweep diverged");
+        }
     });
 }
 
